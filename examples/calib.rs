@@ -1,0 +1,62 @@
+//! Calibration probe: prints the simulator's outputs at exactly the
+//! operating points where the paper reports numbers, for tuning the
+//! constants in `collectives` (α, LINK_EFF, C_RING) and `hardware`
+//! (kernel_base_mfu, power coefficients). This is the tool that
+//! produced the calibration recorded in DESIGN.md / EXPERIMENTS.md.
+//!
+//! Run: cargo run --release --example calib
+
+use dtsim::*;
+fn main() {
+    // Weak scaling fig3: llama7b lbs=2 across scales
+    for nodes in [1usize, 4, 16, 32, 64, 128, 256] {
+        let cluster = topology::Cluster::new(hardware::Generation::H100, nodes);
+        let w = cluster.world_size();
+        let cfg = sim::SimConfig::fsdp(*model::by_name("7b").unwrap(), cluster,
+            parallelism::ParallelPlan::data_parallel(w), 2*w, 2, 4096);
+        let m = metrics::evaluate(&cfg);
+        println!("nodes {:4} gpus {:5}: wps/gpu {:7.0} mfu {:.3} exp {:6.1}ms comm {:6.1}ms comp {:6.1}ms iter {:6.1}ms P {:3.0}W wps/W {:.2}",
+            nodes, w, m.per_gpu_wps, m.mfu, m.exposed_comm*1e3, m.comm_time*1e3, m.compute_time*1e3, m.iter_time*1e3, m.power_w, m.wps_per_watt);
+    }
+    // headline: 128 -> 2048 GPUs drop (paper: -37.22%, power 658->620)
+    let eval = |nodes: usize| {
+        let cluster = topology::Cluster::new(hardware::Generation::H100, nodes);
+        let w = cluster.world_size();
+        metrics::evaluate(&sim::SimConfig::fsdp(*model::by_name("7b").unwrap(), cluster,
+            parallelism::ParallelPlan::data_parallel(w), 2*w, 2, 4096))
+    };
+    let a = eval(16); let b = eval(256);
+    println!("drop 128->2048: {:.2}% power {:.0} -> {:.0}", 100.0*(1.0-b.per_gpu_wps/a.per_gpu_wps), a.power_w, b.power_w);
+    // TP at 2048: paper +52.6% WPS
+    let cluster = topology::Cluster::new(hardware::Generation::H100, 256);
+    for tp in [1usize, 2, 4, 8] {
+        let w = cluster.world_size();
+        let cfg = sim::SimConfig::fsdp(*model::by_name("7b").unwrap(), cluster,
+            parallelism::ParallelPlan::new(w/tp, tp, 1, 1), 2*(w/tp), 2, 4096);
+        let m = metrics::evaluate(&cfg);
+        println!("2048 GPUs tp{tp}: global wps {:9.0} mfu {:.3} exposed {:5.1}ms P {:3.0}W", m.global_wps, m.mfu, m.exposed_comm*1e3, m.power_w);
+    }
+    // strong scaling fixed gbs 32, 2..32 nodes (fig5): best plan per scale rough probe tp in {1,2,4,8} pp in {1,2,4}
+    for nodes in [2usize, 4, 8, 16, 32] {
+        let cluster = topology::Cluster::new(hardware::Generation::H100, nodes);
+        let w = cluster.world_size();
+        let mut best: Option<(String, metrics::Metrics)> = None;
+        for &tp in &[1usize,2,4,8] { for &pp in &[1usize,2,4,8] {
+            let mp = tp*pp; if w % mp != 0 {continue;}
+            let dp = w/mp; if dp > 32 || 32 % dp != 0 {continue;}
+            let lbs = 32/dp; // microbatch 1..lbs
+            let mbs = 1usize;
+            if 32 % (dp*mbs) != 0 {continue;}
+            if 32 % pp != 0 {continue;}
+            let cfg = sim::SimConfig::fsdp(*model::by_name("7b").unwrap(), cluster,
+                parallelism::ParallelPlan::new(dp, tp, pp, 1), 32, mbs.min(lbs).max(1), 4096);
+            if cfg.validate().is_err() {continue;}
+            let m = metrics::evaluate(&cfg);
+            if best.as_ref().map(|(_,bm)| m.global_wps > bm.global_wps).unwrap_or(true) {
+                best = Some((format!("dp{dp}tp{tp}pp{pp}"), m));
+            }
+        }}
+        let (name, m) = best.unwrap();
+        println!("strong nodes {:3} best {:12} mfu {:.3} global wps {:8.0}", nodes, name, m.mfu, m.global_wps);
+    }
+}

@@ -1,0 +1,42 @@
+//! Memory-leak probe for the PJRT execute path (diagnostic).
+use dtsim::runtime::{tokens_literal, HostTensor, ModelBundle, Runtime};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "exec".into());
+    let rt = Runtime::cpu()?;
+    let b = ModelBundle::load(&rt, &dtsim::runtime::artifacts_root().join("e2e"))?;
+    let params = b.init_params(0)?;
+    let batch = b.manifest.batch; let seq = b.manifest.seq;
+    let toks: Vec<i32> = (0..batch*seq).map(|i| (i % 200) as i32).collect();
+    println!("start rss {:.0} MB", rss_mb());
+    for i in 0..10 {
+        match mode.as_str() {
+            "lit" => {
+                // literals only, no execute
+                let args: Vec<xla::Literal> = params.iter().map(|p| p.to_literal().unwrap()).collect();
+                drop(args);
+            }
+            "exec" => {
+                let mut args: Vec<xla::Literal> = params.iter().map(|p| p.to_literal().unwrap()).collect();
+                args.push(tokens_literal(&toks, &[batch, seq])?);
+                args.push(tokens_literal(&toks, &[batch, seq])?);
+                let outs = b.forward.run(&args)?;
+                drop(outs); drop(args);
+            }
+            "host" => {
+                let args: Vec<xla::Literal> = params.iter().map(|p| p.to_literal().unwrap()).collect();
+                let back: Vec<HostTensor> = args.iter().map(|l| HostTensor::from_literal(l).unwrap()).collect();
+                drop(back);
+            }
+            _ => {}
+        }
+        println!("iter {i}: rss {:.0} MB", rss_mb());
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the three things this library does, in one minute.
+//!
+//!   1. Simulate a paper-scale training configuration and read off the
+//!      paper's metrics (throughput, MFU, exposed comm, power).
+//!   2. Ask the planner for the best parallelization strategy.
+//!   3. Run REAL data-parallel training through the AOT-compiled
+//!      JAX/Pallas artifacts (requires `make artifacts`).
+//!
+//! Run: cargo run --release --example quickstart
+
+use dtsim::coordinator::{DistTrainer, TrainOptions};
+use dtsim::hardware::Generation;
+use dtsim::metrics;
+use dtsim::model::LLAMA_7B;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::planner::{self, SweepRequest};
+use dtsim::runtime::artifacts_root;
+use dtsim::sim::SimConfig;
+use dtsim::topology::Cluster;
+
+fn main() -> anyhow::Result<()> {
+    // ── 1. Simulate Llama-7B FSDP on 256 H100s ─────────────────────────
+    let cluster = Cluster::new(Generation::H100, 32);
+    let world = cluster.world_size();
+    let cfg = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::data_parallel(world),
+        512, 2, 4096);
+    let m = metrics::evaluate(&cfg);
+    println!("── simulate: 7B FSDP on {world} H100s ──");
+    println!("  {:.0} words/s global, MFU {:.1}%, exposed comm {:.0} ms, \
+              {:.0} W/GPU",
+             m.global_wps, m.mfu * 100.0, m.exposed_comm * 1e3,
+             m.power_w);
+
+    // ── 2. Planner: what should I actually run? ────────────────────────
+    let req = SweepRequest::fsdp(LLAMA_7B, cluster, 512, 4096);
+    let best = planner::best(&req).expect("no feasible plan");
+    println!("\n── planner: best strategy at 256 GPUs, gbs 512 ──");
+    println!("  {} (mbs {}) → {:.0} words/s ({:+.1}% vs pure FSDP)",
+             best.plan, best.micro_batch, best.metrics.global_wps,
+             100.0 * (best.metrics.global_wps / m.global_wps - 1.0));
+
+    // ── 3. Real training through PJRT ──────────────────────────────────
+    let dir = artifacts_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        println!("\n── train: skipped (run `make artifacts` first) ──");
+        return Ok(());
+    }
+    println!("\n── train: tiny config, 2 DP workers, 20 steps ──");
+    let mut opts = TrainOptions::new(dir);
+    opts.workers = 2;
+    opts.steps = 20;
+    opts.lr = 2e-3;
+    opts.log_every = 5;
+    let stats = DistTrainer::new(opts)?.train()?;
+    println!("  loss {:.3} → {:.3}, {:.0} tokens/s",
+             stats.first_loss(), stats.last_loss(), stats.wps());
+    assert!(stats.last_loss() < stats.first_loss());
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Weak + strong scaling study (paper §4.1–§4.2, Figures 3 & 5).
+//!
+//! Sweeps Llama-7B FSDP from 1 to 256 nodes under both scaling regimes
+//! and prints where communication crosses over compute — reproducing
+//! the paper's observation that exposed communication becomes
+//! unavoidable beyond ~128 GPUs and that strong scaling collapses MFU.
+//!
+//! Run: cargo run --release --example scaling_study -- [--arch 7b]
+
+use dtsim::hardware::Generation;
+use dtsim::metrics;
+use dtsim::model;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::planner::{self, SweepRequest};
+use dtsim::sim::SimConfig;
+use dtsim::topology::Cluster;
+use dtsim::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let arch = *model::by_name(&args.get_or("arch", "7b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --arch"))?;
+
+    println!("══ WEAK SCALING: {} FSDP, local batch 2, seq 4096 ══",
+             arch.name);
+    println!("{:>6} {:>6} {:>11} {:>8} {:>11} {:>10} {:>9}",
+             "nodes", "gpus", "wps/gpu", "mfu", "exposed_ms",
+             "comm_ms", "wps/W");
+    let mut crossover: Option<usize> = None;
+    for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let cluster = Cluster::new(Generation::H100, nodes);
+        let w = cluster.world_size();
+        let cfg = SimConfig::fsdp(
+            arch, cluster, ParallelPlan::data_parallel(w), 2 * w, 2,
+            4096);
+        let m = metrics::evaluate(&cfg);
+        if crossover.is_none() && m.exposed_comm > 0.10 * m.compute_time
+        {
+            crossover = Some(w);
+        }
+        println!("{:>6} {:>6} {:>11.0} {:>7.1}% {:>11.1} {:>10.1} \
+                  {:>9.2}",
+                 nodes, w, m.per_gpu_wps, m.mfu * 100.0,
+                 m.exposed_comm * 1e3, m.comm_time * 1e3,
+                 m.wps_per_watt);
+    }
+    match crossover {
+        Some(w) => println!(
+            "\n→ exposed communication exceeds 10% of compute from \
+             {w} GPUs (paper: unavoidable beyond 128 GPUs)"),
+        None => println!("\n→ never communication-bound in this range"),
+    }
+
+    println!("\n══ STRONG SCALING: fixed global batch 32, optimal plan \
+              per scale ══");
+    println!("{:>6} {:>6} {:>14} {:>12} {:>8} {:>9}",
+             "nodes", "gpus", "best_plan", "global_wps", "mfu",
+             "speedup");
+    let mut first_wps = None;
+    for nodes in [2usize, 4, 8, 16, 32] {
+        let req = SweepRequest::fsdp(
+            arch, Cluster::new(Generation::H100, nodes), 32, 4096);
+        let Some(best) = planner::best(&req) else {
+            println!("{nodes:>6}  (no feasible plan)");
+            continue;
+        };
+        let m = &best.metrics;
+        let base = *first_wps.get_or_insert(m.global_wps);
+        println!("{:>6} {:>6} {:>14} {:>12.0} {:>7.1}% {:>8.2}x",
+                 nodes, m.world, best.plan.to_string(), m.global_wps,
+                 m.mfu * 100.0, m.global_wps / base);
+    }
+    println!("\n→ speedup is sublinear in devices: allocating 16x the \
+              GPUs buys far less than 16x throughput (paper Fig. 5)");
+    Ok(())
+}

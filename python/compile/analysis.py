@@ -1,0 +1,176 @@
+"""Build-time performance analysis for L1 (Pallas) and L2 (JAX/HLO).
+
+interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so — per DESIGN.md §Perf — the kernel is profiled
+*structurally*: VMEM working-set per grid step against the 16 MB/core
+budget, tile alignment against the 128x128 MXU, and arithmetic
+intensity against the HBM roofline. The L2 graph is profiled by
+counting lowered HLO ops (fusion opportunities, rematerialization).
+
+Usage:
+    python -m compile.analysis [--config e2e] [--block-q 128]
+                               [--block-k 128]
+"""
+
+import argparse
+from dataclasses import dataclass
+
+from .configs import CONFIGS, ModelConfig
+
+MXU_DIM = 128  # systolic array edge
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM budget
+F32 = 4
+
+
+@dataclass
+class KernelReport:
+    """Structural estimate for one flash-attention grid step."""
+
+    block_q: int
+    block_k: int
+    seq: int
+    head_dim: int
+    vmem_bytes: int
+    vmem_frac: float
+    mxu_util_matmul: float
+    flops_per_step: float
+    hbm_bytes_per_step: float
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops_per_step / max(self.hbm_bytes_per_step, 1.0)
+
+    def ok(self) -> bool:
+        return self.vmem_frac <= 1.0
+
+
+def attention_kernel_report(seq: int, head_dim: int, block_q: int = 128,
+                            block_k: int = 128) -> KernelReport:
+    """VMEM/MXU analysis of `kernels/attention.py`'s forward kernel.
+
+    Resident per grid step (see the BlockSpecs): the Q block
+    [block_q, d], full K and V [seq, d] (streamed through in block_k
+    tiles by the inner loop — worst case resident is the full operand
+    under interpret; on real TPU the fori_loop tiles keep 2*block_k
+    rows hot, we report the *tiled* footprint), accumulators
+    [block_q, d] + 2x [block_q] stats, and the output block.
+    """
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    q_block = block_q * head_dim * F32
+    kv_tiles = 2 * (2 * block_k * head_dim * F32)  # double-buffered K+V
+    acc = block_q * head_dim * F32 + 2 * block_q * F32
+    out = block_q * head_dim * F32
+    scores = block_q * block_k * F32  # s-tile never materializes fully
+    vmem = q_block + kv_tiles + acc + out + scores
+
+    # MXU utilization of the two matmuls per tile: (bq x d) @ (d x bk)
+    # and (bq x bk) @ (bk x d). A dim underfills the 128-lane edge by
+    # dim/128 when smaller.
+    def mxu(m, k, n):
+        fill = lambda x: min(x, MXU_DIM) / MXU_DIM
+        return fill(m) * fill(k) * fill(n)
+
+    util = 0.5 * (mxu(block_q, head_dim, block_k)
+                  + mxu(block_q, block_k, head_dim))
+
+    n_kv = seq // block_k
+    flops = 2.0 * 2.0 * block_q * block_k * head_dim * n_kv
+    hbm = (q_block + 2 * seq * head_dim * F32 + out)
+
+    return KernelReport(
+        block_q=block_q,
+        block_k=block_k,
+        seq=seq,
+        head_dim=head_dim,
+        vmem_bytes=int(vmem),
+        vmem_frac=vmem / VMEM_BYTES,
+        mxu_util_matmul=util,
+        flops_per_step=flops,
+        hbm_bytes_per_step=hbm,
+    )
+
+
+def best_blocks(seq: int, head_dim: int) -> tuple[int, int, KernelReport]:
+    """Search block shapes: max MXU utilization subject to VMEM fit."""
+    best = None
+    for bq in (64, 128, 256, 512):
+        for bk in (64, 128, 256, 512):
+            if bq > seq or bk > seq:
+                continue
+            r = attention_kernel_report(seq, head_dim, bq, bk)
+            if not r.ok():
+                continue
+            key = (r.mxu_util_matmul, r.arithmetic_intensity)
+            if best is None or key > best[0]:
+                best = (key, bq, bk, r)
+    assert best is not None, "no feasible block shape"
+    return best[1], best[2], best[3]
+
+
+def hlo_op_stats(cfg: ModelConfig, batch: int, use_pallas: bool = True):
+    """Count lowered HLO ops per category for the train step (L2)."""
+    import jax
+    import jax.numpy as jnp
+    from . import model
+
+    p_avals = model.params_avals(cfg)
+    tok = jax.ShapeDtypeStruct((batch, cfg.max_seq_len), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    import functools
+    lowered = jax.jit(functools.partial(
+        model.train_step, cfg, use_pallas)).lower(
+            p_avals, p_avals, p_avals, tok, tok, f32, f32)
+    text = lowered.compiler_ir("stablehlo")
+    s = str(text)
+    cats = {
+        "dot_general": s.count("stablehlo.dot_general"),
+        "while": s.count("stablehlo.while"),
+        "convert": s.count("stablehlo.convert"),
+        "transpose": s.count("stablehlo.transpose"),
+        "reduce": s.count("stablehlo.reduce"),
+        "total_lines": s.count("\n"),
+    }
+    return cats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="e2e")
+    ap.add_argument("--block-q", type=int, default=128)
+    ap.add_argument("--block-k", type=int, default=128)
+    args = ap.parse_args()
+    cfg = CONFIGS[args.config]
+
+    print(f"== L1 flash-attention structural profile "
+          f"(config {cfg.name}: seq {cfg.max_seq_len}, "
+          f"head_dim {cfg.head_dim}) ==")
+    r = attention_kernel_report(cfg.max_seq_len, cfg.head_dim,
+                                args.block_q, args.block_k)
+    print(f"blocks ({r.block_q},{r.block_k}): "
+          f"VMEM {r.vmem_bytes/1024:.0f} KiB "
+          f"({100*r.vmem_frac:.1f}% of 16 MiB), "
+          f"MXU fill {100*r.mxu_util_matmul:.0f}%, "
+          f"intensity {r.arithmetic_intensity:.0f} FLOP/B")
+    bq, bk, best = best_blocks(cfg.max_seq_len, cfg.head_dim)
+    print(f"best blocks ({bq},{bk}): "
+          f"VMEM {best.vmem_bytes/1024:.0f} KiB, "
+          f"MXU fill {100*best.mxu_util_matmul:.0f}%")
+
+    print("\n== Llama-7B shape (the paper's workload) ==")
+    bq, bk, best = best_blocks(4096, 128)
+    print(f"best blocks ({bq},{bk}): "
+          f"VMEM {best.vmem_bytes/1024:.0f} KiB "
+          f"({100*best.vmem_frac:.1f}%), "
+          f"MXU fill {100*best.mxu_util_matmul:.0f}%, "
+          f"intensity {best.arithmetic_intensity:.0f} FLOP/B")
+
+    print("\n== L2 HLO op profile (train_step) ==")
+    from .aot import DEFAULT_BATCH
+    cats = hlo_op_stats(cfg, DEFAULT_BATCH[cfg.name])
+    for k, v in cats.items():
+        print(f"  {k:>12}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""AOT compile path: lower the L2 step functions to HLO *text* artifacts.
+
+HLO text (NOT `.serialize()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the Rust `xla` crate)
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/load_hlo/ and gen_hlo.py there.
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts [--configs tiny,small,e2e]
+
+Produces, per config:
+    artifacts/<config>/{init,forward,grad_step,apply_update,train_step}.hlo.txt
+    artifacts/<config>/manifest.json
+
+The manifest records the exact flattened input/output order of every
+executable so the Rust runtime can bind buffers without re-deriving JAX
+pytree semantics.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+
+# Default per-config local batch size baked into the lowered executables.
+DEFAULT_BATCH = {"tiny": 2, "small": 4, "e2e": 8, "m100": 4}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(prefix, tree):
+    """Flatten an aval pytree into [{name, shape, dtype}] in tree order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append({
+            "name": f"{prefix}{name}" if name else prefix.rstrip("/"),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return out
+
+
+def _scalar(dtype):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def export_config(cfg: ModelConfig, batch: int, out_dir: str,
+                  use_pallas: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    seq = cfg.max_seq_len
+    p_avals = model.params_avals(cfg)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    seed = _scalar(jnp.uint32)
+    f32 = _scalar(jnp.float32)
+
+    loss_spec = [{"name": "loss", "shape": [], "dtype": "float32"}]
+    p_in = _spec("params/", p_avals)
+    m_in = _spec("m/", p_avals)
+    v_in = _spec("v/", p_avals)
+    g_in = _spec("grads/", p_avals)
+    tok_spec = [{"name": "tokens", "shape": [batch, seq], "dtype": "int32"},
+                {"name": "targets", "shape": [batch, seq], "dtype": "int32"}]
+    lr_spec = [{"name": "lr", "shape": [], "dtype": "float32"},
+               {"name": "step", "shape": [], "dtype": "float32"}]
+
+    exports = {
+        "init": dict(
+            fn=jax.jit(functools.partial(model.init_params, cfg)),
+            args=(seed,),
+            inputs=[{"name": "seed", "shape": [], "dtype": "uint32"}],
+            outputs=p_in,
+        ),
+        "forward": dict(
+            fn=jax.jit(functools.partial(
+                model.forward_loss, cfg, use_pallas)),
+            args=(p_avals, tok, tok),
+            inputs=p_in + tok_spec,
+            outputs=loss_spec,
+        ),
+        "grad_step": dict(
+            fn=jax.jit(functools.partial(model.grad_step, cfg, use_pallas)),
+            args=(p_avals, tok, tok),
+            inputs=p_in + tok_spec,
+            outputs=loss_spec + g_in,
+        ),
+        "apply_update": dict(
+            fn=jax.jit(model.apply_update),
+            args=(p_avals, p_avals, p_avals, p_avals, f32, f32),
+            inputs=p_in + m_in + v_in + g_in + lr_spec,
+            outputs=p_in + m_in + v_in,
+        ),
+        "train_step": dict(
+            fn=jax.jit(functools.partial(model.train_step, cfg, use_pallas)),
+            args=(p_avals, p_avals, p_avals, tok, tok, f32, f32),
+            inputs=p_in + m_in + v_in + tok_spec + lr_spec,
+            outputs=p_in + m_in + v_in + loss_spec,
+        ),
+    }
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "batch": batch,
+        "seq": seq,
+        "use_pallas": use_pallas,
+        "param_leaves": p_in,
+        "executables": {},
+    }
+    for name, ex in exports.items():
+        lowered = ex["fn"].lower(*ex["args"])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": ex["inputs"],
+            "outputs": ex["outputs"],
+        }
+        print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,e2e")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="override the baked local batch size")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use the pure-jnp reference kernels instead")
+    args = ap.parse_args()
+
+    for name in args.configs.split(","):
+        name = name.strip()
+        cfg = CONFIGS[name]
+        batch = args.batch or DEFAULT_BATCH[name]
+        print(f"[aot] lowering config={name} batch={batch} "
+              f"params={cfg.param_count()/1e6:.1f}M")
+        export_config(cfg, batch, os.path.join(args.out, name),
+                      use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Model configurations for the L2 JAX transformer.
+
+These are the *real-runtime* model shapes (CPU-scale). The Llama
+1B/7B/13B/70B shapes used by the paper's experiments live on the Rust side
+(`rust/src/model/`) where they parameterize the cluster simulator; here we
+define the models that are actually trained end-to-end through the
+AOT->PJRT path.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Llama-style decoder-only transformer configuration."""
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int  # SwiGLU hidden dim
+    max_seq_len: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Exact parameter count for this architecture (untied embeddings)."""
+        d, f, v, n = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        per_layer = (
+            4 * d * d  # wq, wk, wv, wo
+            + 3 * d * f  # w_gate, w_up, w_down
+            + 2 * d  # attn_norm, mlp_norm
+        )
+        return v * d + n * per_layer + d + d * v  # embed + layers + final norm + head
+
+    def to_dict(self) -> dict:
+        out = asdict(self)
+        out["head_dim"] = self.head_dim
+        out["param_count"] = self.param_count()
+        return out
+
+
+# Tiny: unit tests and fast CI. Single pallas block.
+TINY = ModelConfig(
+    name="tiny", vocab_size=256, d_model=64, n_layers=2, n_heads=4,
+    d_ff=128, max_seq_len=64,
+)
+
+# Small: quickstart example (~2.5M params), sub-second CPU steps.
+SMALL = ModelConfig(
+    name="small", vocab_size=1024, d_model=128, n_layers=4, n_heads=4,
+    d_ff=352, max_seq_len=128,
+)
+
+# E2E: the end-to-end training driver (~27M params) — large enough to show
+# a real loss curve on a Zipf corpus, small enough for a few hundred CPU
+# steps.
+E2E = ModelConfig(
+    name="e2e", vocab_size=4096, d_model=384, n_layers=6, n_heads=6,
+    d_ff=1024, max_seq_len=256,
+)
+
+# 100M-class config (GPT2-base scale); exported for completeness, used for
+# short-run validation (CPU steps are seconds each).
+M100 = ModelConfig(
+    name="m100", vocab_size=16384, d_model=768, n_layers=12, n_heads=12,
+    d_ff=2048, max_seq_len=256,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, E2E, M100)}

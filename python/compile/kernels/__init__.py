@@ -1,0 +1,7 @@
+"""L1 Pallas kernels and their pure-jnp reference oracles."""
+
+from .attention import flash_attention
+from .rmsnorm import rmsnorm
+from . import ref
+
+__all__ = ["flash_attention", "rmsnorm", "ref"]

@@ -1,0 +1,278 @@
+"""Pallas flash attention (forward + backward) — the L1 compute hot-spot.
+
+The paper's training stack leans on FlashAttention-2 CUDA kernels
+(Appendix B). This module re-expresses the same insight for the TPU
+execution model (see DESIGN.md §Hardware-Adaptation): queries are tiled
+into VMEM-resident blocks via `BlockSpec`, K/V stream through the block in
+`block_k`-sized tiles with an online-softmax accumulator, and the s×s
+score matrix is never materialized. What CUDA expresses with threadblocks
+and shared memory is expressed here with the Pallas grid and BlockSpec
+index maps.
+
+All kernels run with `interpret=True`: on this image only the CPU PJRT
+plugin is available, and real TPU lowering emits a Mosaic custom-call the
+CPU client cannot execute. Numerics are identical; TPU performance is
+estimated from VMEM footprint + MXU tile shapes in DESIGN.md §Perf.
+
+Differentiation: `jax.grad` cannot see through `pallas_call`, so the
+backward pass is provided explicitly via `jax.custom_vjp` with dedicated
+dq and dk/dv kernels (the standard FlashAttention backward split).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() NaN-free
+
+
+def _pick_block(seq: int, requested: int) -> int:
+    """Largest power-of-two block <= requested that divides seq."""
+    b = min(requested, seq)
+    while seq % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_k,
+                seq, causal):
+    qi = pl.program_id(1)
+    q = q_ref[0]  # [block_q, d]
+    block_q, head_dim = q.shape
+    k_full = k_ref[0]  # [seq, d]
+    v_full = v_ref[0]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    if causal:
+        # Only KV blocks whose first column is <= the last query row.
+        num_kv = ((qi + 1) * block_q + block_k - 1) // block_k
+    else:
+        num_kv = seq // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k_full, j * block_k, block_k)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_full, j * block_k, block_k)
+        s = (q @ k_blk.T) * scale  # [block_q, block_k]
+        if causal:
+            col = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(q_pos >= col, s, _NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kv, body, (m0, l0, acc0))
+
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = m + jnp.log(l)
+
+
+def _flash_forward(q, k, v, causal, scale, block_q, block_k):
+    """q, k, v: [bh, seq, d] fp32. Returns (out [bh, seq, d], lse [bh, seq])."""
+    bh, seq, d = q.shape
+    grid = (bh, seq // block_q)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_k=block_k, seq=seq, causal=causal)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, seq), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels: dq over query blocks, dk/dv over KV blocks
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, scale, block_k, seq, causal):
+    qi = pl.program_id(1)
+    q = q_ref[0]
+    block_q, head_dim = q.shape
+    k_full, v_full = k_ref[0], v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    num_kv = (((qi + 1) * block_q + block_k - 1) // block_k
+              if causal else seq // block_k)
+
+    def body(j, dq_acc):
+        k_blk = jax.lax.dynamic_slice_in_dim(k_full, j * block_k, block_k)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_full, j * block_k, block_k)
+        s = (q @ k_blk.T) * scale
+        if causal:
+            col = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(q_pos >= col, s, _NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = do @ v_blk.T
+        ds = p * (dp - delta[:, None])
+        return dq_acc + (ds @ k_blk) * scale
+
+    dq0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    dq_ref[0] = jax.lax.fori_loop(0, num_kv, body, dq0).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, scale, block_q, seq, causal):
+    kj = pl.program_id(1)
+    k_blk = k_ref[0]  # [block_k, d]
+    v_blk = v_ref[0]
+    block_k, head_dim = k_blk.shape
+    q_full, do_full = q_ref[0], do_ref[0]
+    lse_full, delta_full = lse_ref[0], delta_ref[0]
+
+    col = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    num_q = seq // block_q
+    # Causal: query blocks strictly before this KV block contribute nothing.
+    lo = (kj * block_k) // block_q if causal else 0
+
+    def body(i, carry):
+        dk_acc, dv_acc = carry
+        q_i = jax.lax.dynamic_slice_in_dim(q_full, i * block_q, block_q)
+        do_i = jax.lax.dynamic_slice_in_dim(do_full, i * block_q, block_q)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse_full, i * block_q, block_q)
+        dlt_i = jax.lax.dynamic_slice_in_dim(delta_full, i * block_q, block_q)
+        s = (q_i @ k_blk.T) * scale  # [block_q, block_k]
+        if causal:
+            q_pos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, 1), 0)
+            s = jnp.where(q_pos >= col, s, _NEG_INF)
+        p = jnp.exp(s - lse_i[:, None])
+        dv_acc = dv_acc + p.T @ do_i
+        dp = do_i @ v_blk.T
+        ds = p * (dp - dlt_i[:, None])
+        dk_acc = dk_acc + (ds.T @ q_i) * scale
+        return dk_acc, dv_acc
+
+    dk0 = jnp.zeros((block_k, head_dim), jnp.float32)
+    dv0 = jnp.zeros((block_k, head_dim), jnp.float32)
+    dk, dv = jax.lax.fori_loop(lo, num_q, body, (dk0, dv0))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _flash_backward(q, k, v, out, lse, do, causal, scale, block_q, block_k):
+    bh, seq, d = q.shape
+    delta = jnp.sum(do * out, axis=-1)  # [bh, seq]
+
+    full = lambda b, i: (b, 0, 0)
+    full1 = lambda b, i: (b, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, block_k=block_k,
+                          seq=seq, causal=causal),
+        grid=(bh, seq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d), full),
+            pl.BlockSpec((1, seq, d), full),
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, block_q=block_q,
+                          seq=seq, causal=causal),
+        grid=(bh, seq // block_k),
+        in_specs=[
+            pl.BlockSpec((1, seq, d), full),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, seq, d), full),
+            pl.BlockSpec((1, seq), full1),
+            pl.BlockSpec((1, seq), full1),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing + public API
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash(causal, scale, block_q, block_k, q, k, v):
+    out, _ = _flash_forward(q, k, v, causal, scale, block_q, block_k)
+    return out
+
+
+def _flash_fwd(causal, scale, block_q, block_k, q, k, v):
+    out, lse = _flash_forward(q, k, v, causal, scale, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, scale, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    return _flash_backward(q, k, v, out, lse, do, causal, scale,
+                           block_q, block_k)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K):
+    """Flash attention over [batch, heads, seq, head_dim] arrays.
+
+    Differentiable (custom VJP with dedicated backward kernels). Block
+    sizes are clamped to powers of two dividing `seq`.
+    """
+    b, h, seq, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_q = _pick_block(seq, block_q)
+    block_k = _pick_block(seq, block_k)
+
+    merge = lambda x: x.reshape(b * h, seq, d)
+    out = _flash(causal, float(scale), block_q, block_k,
+                 merge(q), merge(k), merge(v))
+    return out.reshape(b, h, seq, d)

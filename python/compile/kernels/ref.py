@@ -1,0 +1,48 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Everything here is written in the most direct way possible — these are the
+ground truth the Pallas kernels are validated against in pytest, and the
+fallback implementation used by `model.py` when `use_pallas=False`.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """Multi-head scaled dot-product attention, O(s^2) memory.
+
+    Args:
+        q, k, v: [batch, heads, seq, head_dim]
+        causal: apply a lower-triangular mask.
+        scale: softmax temperature; defaults to 1/sqrt(head_dim).
+
+    Returns:
+        [batch, heads, seq, head_dim]
+    """
+    *_, seq, head_dim = q.shape
+    if scale is None:
+        scale = 1.0 / (head_dim ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """RMSNorm over the last axis: y = x / rms(x) * w.
+
+    Args:
+        x: [..., d]
+        w: [d]
+    """
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * w
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = x @ w_gate
+    return (g * (1.0 / (1.0 + jnp.exp(-g))) * (x @ w_up)) @ w_down

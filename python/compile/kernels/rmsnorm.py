@@ -1,0 +1,109 @@
+"""Pallas fused RMSNorm kernel (forward + backward dx).
+
+A second L1 kernel: RMSNorm is the other per-layer op the paper's stack
+fuses (Llama uses RMSNorm before attention and MLP). The forward kernel
+normalizes `block_rows` rows per grid step entirely in VMEM; the backward
+kernel recomputes the inverse RMS and produces dx. dw is a cheap full
+reduction over rows and is computed in plain jnp outside the kernel (a
+cross-block accumulation inside the kernel would need a serialized grid).
+
+interpret=True for the same reason as attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _pick_block(rows: int, requested: int) -> int:
+    b = min(requested, rows)
+    while rows % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _fwd_kernel(x_ref, w_ref, y_ref, *, eps):
+    x = x_ref[...]  # [block_rows, d]
+    w = w_ref[...]  # [d]
+    inv_rms = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    y_ref[...] = (x * inv_rms * w[None, :]).astype(y_ref.dtype)
+
+
+def _bwd_dx_kernel(x_ref, w_ref, g_ref, dx_ref, *, eps):
+    x = x_ref[...]
+    w = w_ref[...]
+    g = g_ref[...]
+    d = x.shape[-1]
+    inv_rms = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    gw = g * w[None, :]
+    # dx_k = gw_k * r - x_k * r^3 / d * sum_j(gw_j * x_j)
+    dot = jnp.sum(gw * x, axis=-1, keepdims=True)
+    dx_ref[...] = (gw * inv_rms - x * (inv_rms ** 3) * dot / d).astype(
+        dx_ref.dtype)
+
+
+def _rmsnorm_fwd_2d(x, w, eps, block_rows):
+    rows, d = x.shape
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _rmsnorm_dx_2d(x, w, g, eps, block_rows):
+    rows, d = x.shape
+    return pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, w, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _rmsnorm(eps, block_rows, x, w):
+    return _rmsnorm_fwd_2d(x, w, eps, block_rows)
+
+
+def _rmsnorm_fwd(eps, block_rows, x, w):
+    return _rmsnorm_fwd_2d(x, w, eps, block_rows), (x, w)
+
+
+def _rmsnorm_bwd(eps, block_rows, res, g):
+    x, w = res
+    dx = _rmsnorm_dx_2d(x, w, g, eps, block_rows)
+    inv_rms = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    dw = jnp.sum(g * x * inv_rms, axis=0)
+    return dx, dw
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(x, w, eps: float = 1e-5, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused RMSNorm over the last axis of x ([..., d]); w is [d]."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block = _pick_block(rows, block_rows)
+    return _rmsnorm(float(eps), block, x2, w).reshape(shape)

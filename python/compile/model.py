@@ -1,0 +1,189 @@
+"""L2: Llama-style decoder-only transformer in JAX, calling the L1 kernels.
+
+This is the build-time half of the three-layer stack. Everything here is
+traced once by `aot.py` and shipped to the Rust coordinator as HLO text;
+Python never runs on the training hot path.
+
+Exported step functions (see `aot.py` for the artifact set):
+  - init_params(seed)                          -> params
+  - forward(params, tokens, targets)           -> loss
+  - grad_step(params, tokens, targets)         -> (loss, grads)
+  - apply_update(params, m, v, grads, lr, step)-> (params', m', v')
+  - train_step(params, m, v, tokens, targets, lr, step)
+                                               -> (params', m', v', loss)
+
+The split grad_step/apply_update pair is what the Rust data-parallel
+coordinator uses: each worker runs grad_step on its shard, gradients are
+combined with the Rust ring all-reduce, and the leader applies the update.
+`train_step` is the fused single-worker fast path.
+
+The layer stack is a `lax.scan` over stacked per-layer weights so the HLO
+module size is O(1) in depth.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import flash_attention, rmsnorm, ref
+
+# AdamW hyperparameters baked at trace time (lr and step stay runtime
+# inputs so the Rust side owns the schedule).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed):
+    """Initialize parameters from a scalar uint32 seed (traceable)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 12)
+    d, f, v, n = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+
+    def dense(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5)
+
+    return {
+        "embed": dense(ks[0], (v, d), d),  # scaled like d so logits are sane
+        "layers": {
+            "attn_norm": jnp.ones((n, d), jnp.float32),
+            "wq": dense(ks[1], (n, d, d), d),
+            "wk": dense(ks[2], (n, d, d), d),
+            "wv": dense(ks[3], (n, d, d), d),
+            "wo": dense(ks[4], (n, d, d), d),
+            "mlp_norm": jnp.ones((n, d), jnp.float32),
+            "w_gate": dense(ks[5], (n, d, f), d),
+            "w_up": dense(ks[6], (n, d, f), d),
+            "w_down": dense(ks[7], (n, f, d), f),
+        },
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "head": dense(ks[8], (d, v), d),
+    }
+
+
+def params_avals(cfg: ModelConfig):
+    """Abstract pytree matching init_params, for AOT lowering."""
+    return jax.eval_shape(lambda s: init_params(cfg, s),
+                          jax.ShapeDtypeStruct((), jnp.uint32))
+
+
+def param_leaf_names(cfg: ModelConfig):
+    """Deterministic leaf names in tree-flatten order (manifest + Rust)."""
+    leaves = jax.tree_util.tree_flatten_with_path(params_avals(cfg))[0]
+    names = []
+    for path, _ in leaves:
+        names.append("/".join(p.key for p in path))
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rope(x, theta):
+    """Rotary position embedding. x: [b, h, s, hd]."""
+    b, h, s, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)  # [s, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer(cfg: ModelConfig, use_pallas: bool, x, w):
+    """One transformer block. x: [b, s, d]; w: per-layer weight dict."""
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    norm = rmsnorm if use_pallas else ref.rmsnorm_ref
+
+    h = norm(x, w["attn_norm"], cfg.norm_eps)
+    q = (h @ w["wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = (h @ w["wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    v = (h @ w["wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    q, k = _rope(q, cfg.rope_theta), _rope(k, cfg.rope_theta)
+    if use_pallas:
+        attn = flash_attention(q, k, v, causal=True)
+    else:
+        attn = ref.attention_ref(q, k, v, causal=True)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + attn @ w["wo"]
+
+    h = norm(x, w["mlp_norm"], cfg.norm_eps)
+    g = h @ w["w_gate"]
+    mlp = (g * jax.nn.sigmoid(g) * (h @ w["w_up"])) @ w["w_down"]
+    return x + mlp
+
+
+def forward_loss(cfg: ModelConfig, use_pallas: bool, params, tokens, targets):
+    """Mean next-token cross-entropy. tokens/targets: [b, s] int32."""
+    x = params["embed"][tokens]  # [b, s, d]
+
+    def scan_body(x, w):
+        return _layer(cfg, use_pallas, x, w), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    norm = rmsnorm if use_pallas else ref.rmsnorm_ref
+    x = norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"]  # [b, s, vocab]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Training steps
+# ---------------------------------------------------------------------------
+
+def grad_step(cfg: ModelConfig, use_pallas: bool, params, tokens, targets):
+    loss, grads = jax.value_and_grad(
+        lambda p: forward_loss(cfg, use_pallas, p, tokens, targets))(params)
+    return loss, grads
+
+
+def apply_update(params, m, v, grads, lr, step):
+    """Decoupled AdamW. lr: f32 scalar; step: f32 scalar (1-based)."""
+    b1c = 1.0 - ADAM_B1 ** step
+    b2c = 1.0 - ADAM_B2 ** step
+    tmap = jax.tree_util.tree_map
+    new_m = tmap(lambda mi, g: ADAM_B1 * mi + (1.0 - ADAM_B1) * g, m, grads)
+    new_v = tmap(lambda vi, g: ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g,
+                 v, grads)
+    new_p = tmap(
+        lambda p, mi, vi: p - lr * ((mi / b1c) / (jnp.sqrt(vi / b2c)
+                                                  + ADAM_EPS)
+                                    + WEIGHT_DECAY * p),
+        params, new_m, new_v)
+    return new_p, new_m, new_v
+
+
+def train_step(cfg: ModelConfig, use_pallas: bool, params, m, v, tokens,
+               targets, lr, step):
+    loss, grads = grad_step(cfg, use_pallas, params, tokens, targets)
+    new_p, new_m, new_v = apply_update(params, m, v, grads, lr, step)
+    return new_p, new_m, new_v, loss
+
+
+# jit-wrapped builders used by aot.py and the pytest suite -----------------
+
+def build_fns(cfg: ModelConfig, use_pallas: bool = True):
+    """Return the dict of jitted step functions for one config."""
+    return {
+        "init": jax.jit(functools.partial(init_params, cfg)),
+        "forward": jax.jit(
+            functools.partial(forward_loss, cfg, use_pallas)),
+        "grad_step": jax.jit(
+            functools.partial(grad_step, cfg, use_pallas)),
+        "apply_update": jax.jit(apply_update),
+        "train_step": jax.jit(
+            functools.partial(train_step, cfg, use_pallas)),
+    }

@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas flash attention vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: forward and all
+three input gradients must match `ref.attention_ref` to float32 tolerance
+across shapes, block sizes, masks and adversarial value ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention
+from compile.kernels.ref import attention_ref
+
+TOL = dict(atol=2e-5, rtol=2e-4)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                     jnp.float32)
+
+
+def _qkv(b, h, s, d, seed=0, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(scale * jax.random.normal(k, (b, h, s, d), jnp.float32)
+                 for k in ks)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,s,d", [
+    (1, 1, 8, 4), (2, 3, 64, 16), (1, 2, 128, 32), (2, 1, 256, 64),
+])
+def test_forward_matches_ref(b, h, s, d, causal):
+    q, k, v = _qkv(b, h, s, d, seed=b + s)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    assert jnp.allclose(out, ref, **TOL), float(jnp.max(jnp.abs(out - ref)))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_grads_match_ref(causal):
+    q, k, v = _qkv(2, 2, 64, 16, seed=7)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.tanh(flash_attention(q, k, v, causal=causal)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.tanh(attention_ref(q, k, v, causal=causal)))
+
+    g = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    r = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for gi, ri, name in zip(g, r, "qkv"):
+        assert jnp.allclose(gi, ri, **TOL), (
+            name, float(jnp.max(jnp.abs(gi - ri))))
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 8), (16, 32), (32, 16),
+                                             (64, 64), (128, 128)])
+def test_block_size_invariance(block_q, block_k):
+    """Output must not depend on the tiling schedule."""
+    q, k, v = _qkv(1, 2, 64, 16, seed=3)
+    base = flash_attention(q, k, v, block_q=64, block_k=64)
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    assert jnp.allclose(out, base, **TOL)
+
+
+def test_softmax_stability_large_logits():
+    """Online softmax must survive large score magnitudes without NaN."""
+    q, k, v = _qkv(1, 1, 64, 16, seed=1, scale=30.0)
+    out = flash_attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    ref = attention_ref(q, k, v)
+    assert jnp.allclose(out, ref, atol=1e-4, rtol=1e-3)
+
+
+def test_custom_scale():
+    q, k, v = _qkv(1, 2, 32, 8, seed=5)
+    out = flash_attention(q, k, v, scale=0.5)
+    ref = attention_ref(q, k, v, scale=0.5)
+    assert jnp.allclose(out, ref, **TOL)
+
+
+def test_causal_first_row_attends_self_only():
+    """Row 0 under a causal mask must equal v[0] exactly (single key)."""
+    q, k, v = _qkv(1, 1, 16, 8, seed=9)
+    out = flash_attention(q, k, v, causal=True)
+    assert jnp.allclose(out[0, 0, 0], v[0, 0, 0], **TOL)
+
+
+def test_permutation_equivariance_noncausal():
+    """Non-causal attention output is invariant to permuting K/V rows."""
+    q, k, v = _qkv(1, 1, 32, 8, seed=11)
+    perm = jax.random.permutation(jax.random.PRNGKey(0), 32)
+    out1 = flash_attention(q, k, v, causal=False)
+    out2 = flash_attention(q, k[:, :, perm], v[:, :, perm], causal=False)
+    assert jnp.allclose(out1, out2, **TOL)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    s=st.sampled_from([8, 16, 32, 64, 96]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    scale_exp=st.integers(-2, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(b, h, s, d, causal, scale_exp, seed):
+    """Property sweep: arbitrary shapes/magnitudes agree with the oracle."""
+    q, k, v = _qkv(b, h, s, d, seed=seed, scale=float(2.0 ** scale_exp))
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert jnp.allclose(out, ref, atol=5e-5, rtol=5e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(s=st.sampled_from([16, 32, 64]), seed=st.integers(0, 2**16))
+def test_hypothesis_grad_sweep(s, seed):
+    q, k, v = _qkv(1, 2, s, 8, seed=seed)
+    g = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v) ** 2))(q)
+    r = jax.grad(lambda q: jnp.sum(attention_ref(q, k, v) ** 2))(q)
+    assert jnp.allclose(g, r, atol=5e-5, rtol=5e-4)
+
+
+def test_odd_seq_rejected_gracefully():
+    """Non-power-of-two seq still works (block clamps to a divisor)."""
+    q, k, v = _qkv(1, 1, 48, 8, seed=2)
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert jnp.allclose(out, ref, **TOL)

@@ -1,0 +1,166 @@
+"""L2 correctness: model shapes, loss behaviour, optimizer semantics."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS, TINY
+
+TMAP = jax.tree_util.tree_map
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return model.build_fns(TINY, use_pallas=True)
+
+
+@pytest.fixture(scope="module")
+def params(fns):
+    return fns["init"](jnp.uint32(0))
+
+
+def _batch(cfg, b=2, seed=1):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    tok = jax.random.randint(k1, (b, cfg.max_seq_len), 0, cfg.vocab_size)
+    tgt = jax.random.randint(k2, (b, cfg.max_seq_len), 0, cfg.vocab_size)
+    return tok, tgt
+
+
+def test_param_count_matches_config(params):
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert n == TINY.param_count()
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_param_count_formula_all_configs(name):
+    cfg = CONFIGS[name]
+    p = jax.eval_shape(lambda s: model.init_params(cfg, s),
+                       jax.ShapeDtypeStruct((), jnp.uint32))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(p))
+    assert n == cfg.param_count()
+
+
+def test_initial_loss_near_uniform(fns, params):
+    """At init the model should be close to a uniform predictor."""
+    tok, tgt = _batch(TINY)
+    loss = float(fns["forward"](params, tok, tgt))
+    uniform = float(jnp.log(TINY.vocab_size))
+    assert abs(loss - uniform) < 1.5
+
+
+def test_loss_decreases_under_training(fns, params):
+    tok, tgt = _batch(TINY)
+    p = params
+    m = TMAP(jnp.zeros_like, p)
+    v = TMAP(jnp.zeros_like, p)
+    first = None
+    loss = None
+    for i in range(8):
+        p, m, v, loss = fns["train_step"](p, m, v, tok, tgt,
+                                          jnp.float32(1e-3),
+                                          jnp.float32(i + 1))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first - 0.5
+
+
+def test_train_step_equals_grad_plus_update(fns, params):
+    """The fused step must equal the two-phase path used by the DP
+    coordinator (same HLO semantics the Rust runtime relies on)."""
+    tok, tgt = _batch(TINY, seed=3)
+    m = TMAP(jnp.zeros_like, params)
+    v = TMAP(jnp.zeros_like, params)
+    lr, step = jnp.float32(2e-3), jnp.float32(1)
+
+    loss, grads = fns["grad_step"](params, tok, tgt)
+    p2, m2, v2 = fns["apply_update"](params, m, v, grads, lr, step)
+    p1, m1, v1, loss1 = fns["train_step"](params, m, v, tok, tgt, lr, step)
+
+    assert jnp.allclose(loss, loss1, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        assert jnp.allclose(a, b, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(m1) +
+                    jax.tree_util.tree_leaves(v1),
+                    jax.tree_util.tree_leaves(m2) +
+                    jax.tree_util.tree_leaves(v2)):
+        assert jnp.allclose(a, b, atol=1e-6)
+
+
+def test_adamw_first_step_closed_form(fns, params):
+    """After one step with zero init moments, update direction must be
+    -lr * (sign-ish(g) + wd*p): check against the closed form exactly."""
+    tok, tgt = _batch(TINY, seed=5)
+    _, grads = fns["grad_step"](params, tok, tgt)
+    m = TMAP(jnp.zeros_like, params)
+    v = TMAP(jnp.zeros_like, params)
+    lr = 1e-3
+    p2, m2, v2 = fns["apply_update"](params, m, v, grads,
+                                     jnp.float32(lr), jnp.float32(1))
+
+    g = grads["final_norm"]
+    p = params["final_norm"]
+    mhat = g  # m = (1-b1)g, bias corr (1-b1) cancels
+    vhat = g * g
+    expect = p - lr * (mhat / (jnp.sqrt(vhat) + model.ADAM_EPS)
+                       + model.WEIGHT_DECAY * p)
+    assert jnp.allclose(p2["final_norm"], expect, atol=1e-6)
+    assert jnp.allclose(m2["final_norm"], (1 - model.ADAM_B1) * g, atol=1e-7)
+    assert jnp.allclose(v2["final_norm"], (1 - model.ADAM_B2) * g * g,
+                        atol=1e-7)
+
+
+def test_pallas_and_ref_models_agree(params):
+    """The full model with Pallas kernels must match the ref-kernel model."""
+    tok, tgt = _batch(TINY, seed=7)
+    f_pal = model.build_fns(TINY, use_pallas=True)["forward"]
+    f_ref = model.build_fns(TINY, use_pallas=False)["forward"]
+    assert jnp.allclose(f_pal(params, tok, tgt), f_ref(params, tok, tgt),
+                        atol=1e-4, rtol=1e-4)
+
+
+def test_grads_match_between_pallas_and_ref(params):
+    tok, tgt = _batch(TINY, seed=8)
+    _, g_pal = model.build_fns(TINY, use_pallas=True)["grad_step"](
+        params, tok, tgt)
+    _, g_ref = model.build_fns(TINY, use_pallas=False)["grad_step"](
+        params, tok, tgt)
+    for a, b in zip(jax.tree_util.tree_leaves(g_pal),
+                    jax.tree_util.tree_leaves(g_ref)):
+        assert jnp.allclose(a, b, atol=1e-3, rtol=1e-2)
+
+
+def test_causality_future_tokens_do_not_affect_loss(fns, params):
+    """Perturbing tokens after position t must not change the per-token
+    losses before t: check via the mean loss over a prefix-equal batch."""
+    cfg = TINY
+    tok, tgt = _batch(cfg, b=1, seed=9)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % cfg.vocab_size)
+
+    # Build a loss that only looks at the first half of positions.
+    def half_loss(tokens):
+        x = params["embed"][tokens]
+
+        def scan_body(x, w):
+            return model._layer(cfg, False, x, w), None
+
+        x, _ = jax.lax.scan(scan_body, x, params["layers"])
+        from compile.kernels.ref import rmsnorm_ref
+        x = rmsnorm_ref(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["head"]
+        half = cfg.max_seq_len // 2
+        logz = jax.nn.logsumexp(logits[:, :half], axis=-1)
+        gold = jnp.take_along_axis(
+            logits[:, :half], tgt[:, :half, None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    assert jnp.allclose(half_loss(tok), half_loss(tok2), atol=1e-5)
+
+
+def test_leaf_names_deterministic():
+    n1 = model.param_leaf_names(TINY)
+    n2 = model.param_leaf_names(TINY)
+    assert n1 == n2
+    assert n1[0] == "embed"
+    assert len(n1) == len(set(n1))

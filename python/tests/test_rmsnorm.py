@@ -1,0 +1,70 @@
+"""L1 correctness: Pallas fused RMSNorm vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rmsnorm
+from compile.kernels.ref import rmsnorm_ref
+
+TOL = dict(atol=2e-5, rtol=2e-4)
+
+
+def _xw(shape, seed=0, scale=1.0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = scale * jax.random.normal(kx, shape, jnp.float32)
+    w = jax.random.normal(kw, (shape[-1],), jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("shape", [(4, 8), (2, 16, 32), (1, 3, 64, 128),
+                                   (128, 64), (7, 48)])
+def test_forward_matches_ref(shape):
+    x, w = _xw(shape, seed=sum(shape))
+    assert jnp.allclose(rmsnorm(x, w), rmsnorm_ref(x, w), **TOL)
+
+
+def test_grads_match_ref():
+    x, w = _xw((16, 64), seed=3)
+    f = lambda x, w: jnp.sum(jnp.sin(rmsnorm(x, w)))
+    g = lambda x, w: jnp.sum(jnp.sin(rmsnorm_ref(x, w)))
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(g, argnums=(0, 1))(x, w)
+    assert jnp.allclose(dx, rx, **TOL)
+    assert jnp.allclose(dw, rw, atol=1e-4, rtol=1e-3)
+
+
+def test_block_rows_invariance():
+    x, w = _xw((64, 32), seed=5)
+    base = rmsnorm(x, w, block_rows=64)
+    for br in (1, 2, 8, 16, 32):
+        assert jnp.allclose(rmsnorm(x, w, block_rows=br), base, **TOL)
+
+
+def test_unit_weight_is_pure_normalization():
+    x, _ = _xw((8, 16), seed=7)
+    y = rmsnorm(x, jnp.ones(16))
+    rms_out = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    assert jnp.allclose(rms_out, jnp.ones_like(rms_out), atol=1e-3)
+
+
+def test_scale_invariance():
+    """RMSNorm(c*x) == RMSNorm(x) for c > 0 (eps small relative to x)."""
+    x, w = _xw((8, 32), seed=9, scale=10.0)
+    assert jnp.allclose(rmsnorm(x, w), rmsnorm(4.0 * x, w), atol=1e-4,
+                        rtol=1e-3)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    rows=st.integers(1, 64),
+    d=st.sampled_from([4, 8, 32, 96, 128]),
+    scale_exp=st.integers(-3, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_sweep(rows, d, scale_exp, seed):
+    x, w = _xw((rows, d), seed=seed, scale=float(2.0 ** scale_exp))
+    out = rmsnorm(x, w)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert jnp.allclose(out, rmsnorm_ref(x, w), atol=5e-5, rtol=5e-4)

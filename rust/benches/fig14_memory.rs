@@ -1,0 +1,39 @@
+//! Bench: Fig. 14 — memory-model evaluation (the planner feasibility
+//! filter's hot path) plus Table 1 spec access.
+
+use dtsim::hardware::Generation;
+use dtsim::memory;
+use dtsim::model::{LLAMA_70B, LLAMA_7B};
+use dtsim::parallelism::ParallelPlan;
+use dtsim::util::bench::{bb, bench, group};
+
+fn main() {
+    group("fig14/table1: memory model");
+
+    bench("per_gpu_memory/7b_dp2048", || {
+        bb(memory::per_gpu_memory(
+            bb(&LLAMA_7B), &ParallelPlan::data_parallel(2048), 2, 4096,
+            1));
+    });
+    bench("per_gpu_memory/70b_tp8pp4", || {
+        bb(memory::per_gpu_memory(
+            bb(&LLAMA_70B), &ParallelPlan::new(8, 8, 4, 1), 1, 4096,
+            4));
+    });
+    bench("fits_check/70b", || {
+        bb(memory::fits(bb(&LLAMA_70B), &ParallelPlan::new(16, 4, 4, 1),
+                        1, 4096, 4, 80e9));
+    });
+    bench("regen_fig14_all_points", || {
+        for dp in [8usize, 16, 32, 64, 128, 256, 512, 1024, 2048] {
+            bb(memory::per_gpu_memory(
+                &LLAMA_7B, &ParallelPlan::data_parallel(dp), 2, 4096,
+                1));
+        }
+    });
+    bench("table1_spec_access", || {
+        for g in Generation::ALL {
+            bb(g.spec());
+        }
+    });
+}

@@ -1,0 +1,38 @@
+//! Bench: Figs. 1 & 3 — full weak-scaling iteration simulation at the
+//! paper's scales (this is the figure harness's dominant cost).
+
+use dtsim::hardware::Generation;
+use dtsim::metrics;
+use dtsim::model::LLAMA_7B;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::sim::{simulate, SimConfig};
+use dtsim::topology::Cluster;
+use dtsim::util::bench::{bb, bench, group};
+
+fn weak(nodes: usize) -> SimConfig {
+    let cluster = Cluster::new(Generation::H100, nodes);
+    let w = cluster.world_size();
+    SimConfig::fsdp(LLAMA_7B, cluster, ParallelPlan::data_parallel(w),
+                    2 * w, 2, 4096)
+}
+
+fn main() {
+    group("fig1/fig3: weak-scaling iteration simulation");
+    for nodes in [1usize, 16, 256] {
+        let cfg = weak(nodes);
+        bench(&format!("simulate_weak/{}gpus", nodes * 8), || {
+            bb(simulate(bb(&cfg)));
+        });
+    }
+    let cfg = weak(256);
+    bench("evaluate_metrics/2048gpus", || {
+        bb(metrics::evaluate(bb(&cfg)));
+    });
+
+    // Full figure regeneration end to end.
+    bench("regen_fig1_all_points", || {
+        for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            bb(metrics::evaluate(&weak(nodes)));
+        }
+    });
+}

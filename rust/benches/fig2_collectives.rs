@@ -1,0 +1,43 @@
+//! Bench: Fig. 2 — collective cost-model evaluation across world sizes
+//! and message sizes (also regenerates the figure's data points and
+//! prints them, so `cargo bench` doubles as a repro run).
+
+use dtsim::collectives::{busbw_gbps, collective_time, Collective};
+use dtsim::hardware::Generation;
+use dtsim::topology::{Cluster, GroupPlacement};
+use dtsim::util::bench::{bb, bench, group};
+
+fn main() {
+    group("fig2: NCCL collective model");
+
+    // Figure data (shape check printed for eyeballing).
+    println!("nodes | AllReduce busbw | AllGather busbw (GB/s, 1GB msg)");
+    for nodes in [4usize, 32, 128, 512] {
+        let c = Cluster::new(Generation::H100, nodes);
+        let p = GroupPlacement::strided(&c, c.world_size(), 1);
+        println!("{:>5} | {:>15.1} | {:>15.1}",
+                 nodes,
+                 busbw_gbps(Collective::AllReduce, 1e9, &c, &p),
+                 busbw_gbps(Collective::AllGather, 1e9, &c, &p));
+    }
+
+    // Cost-model evaluation throughput (planner hot path).
+    for nodes in [8usize, 256] {
+        let c = Cluster::new(Generation::H100, nodes);
+        let p = GroupPlacement::strided(&c, c.world_size(), 1);
+        bench(&format!("allgather_cost/{nodes}nodes"), || {
+            bb(collective_time(Collective::AllGather, bb(422e6), &c,
+                               &p));
+        });
+        bench(&format!("allreduce_cost/{nodes}nodes"), || {
+            bb(collective_time(Collective::AllReduce, bb(67e6), &c,
+                               &p));
+        });
+    }
+
+    // Placement computation (topology hot path).
+    let c = Cluster::new(Generation::H100, 256);
+    bench("group_placement/2048ranks", || {
+        bb(GroupPlacement::strided(&c, 2048, 1));
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 5 — strong-scaling planner search (sweep + simulate per
+//! candidate plan) at fixed global batch.
+
+use dtsim::hardware::Generation;
+use dtsim::model::LLAMA_7B;
+use dtsim::planner::{self, SweepRequest};
+use dtsim::topology::Cluster;
+use dtsim::util::bench::{bb, bench, bench_quick, group};
+
+fn main() {
+    group("fig5: strong-scaling planner");
+    for nodes in [2usize, 32] {
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, nodes), 32, 4096);
+        bench(&format!("planner_sweep/{nodes}nodes_gbs32"), || {
+            bb(planner::sweep(bb(&req)));
+        });
+    }
+    bench_quick("regen_fig5_all_points", || {
+        for nodes in [2usize, 4, 8, 16, 32] {
+            let req = SweepRequest::fsdp(
+                LLAMA_7B, Cluster::new(Generation::H100, nodes), 32,
+                4096);
+            bb(planner::best(&req));
+        }
+    });
+}

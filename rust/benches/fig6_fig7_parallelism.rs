@@ -1,0 +1,41 @@
+//! Bench: Figs. 6, 7 & 10 — parallelization-strategy sweeps at 256
+//! GPUs (and the A100/H100 generation comparison).
+
+use dtsim::hardware::Generation;
+use dtsim::model::LLAMA_7B;
+use dtsim::parallelism::{enumerate_plans, ParallelPlan};
+use dtsim::planner::{self, SweepRequest};
+use dtsim::sim::{simulate, SimConfig};
+use dtsim::topology::Cluster;
+use dtsim::util::bench::{bb, bench, bench_quick, group};
+
+fn main() {
+    group("fig6/fig7/fig10: parallelism sweeps");
+
+    let cluster = Cluster::new(Generation::H100, 32);
+    bench("enumerate_plans/256gpus", || {
+        bb(enumerate_plans(bb(&cluster), 32, true));
+    });
+
+    // Single candidate evaluation — the sweep's unit of work.
+    let tp2 = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::new(128, 2, 1, 1), 512, 2,
+        4096);
+    bench("simulate_tp2/256gpus", || {
+        bb(simulate(bb(&tp2)));
+    });
+    let pp4 = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::new(64, 1, 4, 1), 512, 2,
+        4096);
+    bench("simulate_pp4_1f1b/256gpus", || {
+        bb(simulate(bb(&pp4)));
+    });
+
+    for gen in [Generation::A100, Generation::H100] {
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(gen, 32), 512, 4096);
+        bench_quick(&format!("full_sweep_{gen}/256gpus_gbs512"), || {
+            bb(planner::sweep(bb(&req)));
+        });
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench: Figs. 8, 9, 11 & 12 — model-size scaling, context-length
+//! scaling, pretraining-scale search, and context parallelism.
+
+use dtsim::hardware::Generation;
+use dtsim::model::{self, LLAMA_7B};
+use dtsim::parallelism::ParallelPlan;
+use dtsim::planner::{self, SweepRequest};
+use dtsim::sim::{simulate, SimConfig};
+use dtsim::topology::Cluster;
+use dtsim::util::bench::{bb, bench, bench_quick, group};
+
+fn main() {
+    group("fig8/fig9/fig11/fig12: model & context scaling");
+
+    // Fig. 8: per-size simulation (70B is the deepest event graph).
+    for name in ["1b", "7b", "70b"] {
+        let arch = *model::by_name(name).unwrap();
+        let cluster = Cluster::new(Generation::H100, 32);
+        let w = cluster.world_size();
+        let cfg = SimConfig::fsdp(
+            arch, cluster, ParallelPlan::data_parallel(w), 256, 1,
+            4096);
+        bench(&format!("simulate_{name}/256gpus"), || {
+            bb(simulate(bb(&cfg)));
+        });
+    }
+
+    // Fig. 9: long-context simulation.
+    let cluster = Cluster::new(Generation::H100, 32);
+    let w = cluster.world_size();
+    let long = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::data_parallel(w), w, 1,
+        32768);
+    bench("simulate_seq32k/256gpus", || {
+        bb(simulate(bb(&long)));
+    });
+
+    // Fig. 12: context-parallel iteration.
+    let cp4 = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::new(w / 4, 1, 1, 4), 256, 1,
+        4096);
+    bench("simulate_cp4/256gpus", || {
+        bb(simulate(bb(&cp4)));
+    });
+
+    // Fig. 11: pretraining-scale planner point (70B @ 2048 GPUs).
+    bench_quick("fig11_best_70b_2048gpus", || {
+        let req = SweepRequest::fsdp(
+            *model::by_name("70b").unwrap(),
+            Cluster::new(Generation::H100, 256), 1024, 4096);
+        bb(planner::best(&req));
+    });
+}

@@ -1,0 +1,93 @@
+//! Bench: L3 hot paths outside the figure harness — the event engine,
+//! the real ring all-reduce, data pipeline, JSON/manifest parsing, and
+//! (when artifacts exist) the PJRT execute path itself.
+
+use dtsim::coordinator::data::{Corpus, CorpusConfig};
+use dtsim::coordinator::{ring_allreduce, ring_allreduce_threaded};
+use dtsim::hardware::Generation;
+use dtsim::model::LLAMA_70B;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::runtime::{tokens_literal, ModelBundle, Runtime};
+use dtsim::sim::{build_engine, SimConfig};
+use dtsim::topology::Cluster;
+use dtsim::util::bench::{bb, bench, bench_quick, group};
+use dtsim::util::json::Json;
+use dtsim::util::rng::Rng;
+
+fn main() {
+    group("hotpath: event engine");
+    // Deepest graph in the figure set: 70B, pp8, m=16.
+    let cluster = Cluster::new(Generation::H100, 32);
+    let cfg = SimConfig::fsdp(
+        LLAMA_70B, cluster, ParallelPlan::new(4, 8, 8, 1), 64, 1, 4096);
+    let eng = build_engine(&cfg);
+    println!("event graph: {} events", eng.events.len());
+    bench("engine_build/70b_pp8_m16", || {
+        bb(build_engine(bb(&cfg)));
+    });
+    bench("engine_run/70b_pp8_m16", || {
+        bb(eng.run());
+    });
+    let tl = eng.run();
+    bench("device_stats/70b_pp8_m16", || {
+        bb(tl.device_stats(&eng));
+    });
+
+    group("hotpath: ring all-reduce (real, 27M params)");
+    let mut rng = Rng::new(1);
+    let n = 27_000_000usize / 4; // bench-sized buffers, 4 ranks
+    let bufs: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..n).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    bench_quick("ring_allreduce_seq/4x6.75M", || {
+        let mut b = bufs.clone();
+        ring_allreduce(&mut b);
+        bb(b);
+    });
+    bench_quick("ring_allreduce_threaded/4x6.75M", || {
+        bb(ring_allreduce_threaded(bufs.clone()));
+    });
+
+    group("hotpath: data pipeline + manifest");
+    let corpus = Corpus::new(CorpusConfig::for_model(4096, 256, 0));
+    bench("corpus_batch/8x256", || {
+        bb(corpus.batch(bb(0), bb(0), 8));
+    });
+    if let Ok(text) =
+        std::fs::read_to_string("artifacts/tiny/manifest.json")
+    {
+        bench("manifest_json_parse/tiny", || {
+            bb(Json::parse(bb(&text)).unwrap());
+        });
+    }
+
+    group("hotpath: PJRT execute (requires artifacts)");
+    let dir = dtsim::runtime::artifacts_root().join("tiny");
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let b = ModelBundle::load(&rt, &dir).unwrap();
+        let params = b.init_params(0).unwrap();
+        let batch = b.manifest.batch;
+        let seq = b.manifest.seq;
+        let toks: Vec<i32> =
+            (0..batch * seq).map(|i| (i % 200) as i32).collect();
+        bench_quick("pjrt_grad_step/tiny", || {
+            let mut args: Vec<xla::Literal> = params
+                .iter()
+                .map(|p| p.to_literal().unwrap())
+                .collect();
+            args.push(tokens_literal(&toks, &[batch, seq]).unwrap());
+            args.push(tokens_literal(&toks, &[batch, seq]).unwrap());
+            bb(b.grad_step.run(&args).unwrap());
+        });
+        bench_quick("literal_roundtrip/tiny_params", || {
+            for p in &params {
+                let lit = p.to_literal().unwrap();
+                bb(dtsim::runtime::HostTensor::from_literal(&lit)
+                    .unwrap());
+            }
+        });
+    } else {
+        println!("(skipped — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,220 @@
+//! Run configuration: a TOML-subset file format + CLI overrides +
+//! named scenario presets for every experiment in the paper.
+//!
+//! The TOML subset supports `[sections]`, `key = value` with string,
+//! integer, float and boolean values, and `#` comments — enough for a
+//! launcher config a user would actually write, parsed from scratch
+//! (no toml crate on this image).
+
+pub mod toml;
+
+use crate::hardware::Generation;
+use crate::model::{self, TransformerArch};
+use crate::parallelism::ParallelPlan;
+use crate::sim::{Sharding, SimConfig};
+use crate::topology::Cluster;
+
+/// A fully-specified simulated training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub arch: TransformerArch,
+    pub gen: Generation,
+    pub nodes: usize,
+    pub plan: ParallelPlan,
+    pub global_batch: usize,
+    pub micro_batch: usize,
+    pub seq_len: usize,
+    pub sharding: Sharding,
+}
+
+impl RunConfig {
+    pub fn cluster(&self) -> Cluster {
+        Cluster::new(self.gen, self.nodes)
+    }
+
+    pub fn sim(&self) -> SimConfig {
+        SimConfig {
+            arch: self.arch,
+            cluster: self.cluster(),
+            plan: self.plan,
+            global_batch: self.global_batch,
+            micro_batch: self.micro_batch,
+            seq_len: self.seq_len,
+            sharding: self.sharding,
+            prefetch: true,
+        }
+    }
+
+    /// Parse from a TOML-subset file.
+    ///
+    /// ```toml
+    /// [model]
+    /// arch = "llama-7b"
+    /// seq_len = 4096
+    ///
+    /// [cluster]
+    /// generation = "h100"
+    /// nodes = 32
+    ///
+    /// [parallelism]
+    /// tp = 2
+    /// pp = 1
+    /// cp = 1
+    ///
+    /// [batch]
+    /// global = 512
+    /// micro = 2
+    /// ```
+    pub fn from_toml_str(text: &str) -> Result<RunConfig, String> {
+        let doc = toml::parse(text)?;
+        let arch_name = doc.get_str("model", "arch")
+            .ok_or("missing model.arch")?;
+        let arch = *model::by_name(&arch_name)
+            .ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
+        let gen_name = doc.get_str("cluster", "generation")
+            .unwrap_or_else(|| "h100".into());
+        let gen = Generation::parse(&gen_name)
+            .ok_or_else(|| format!("unknown generation '{gen_name}'"))?;
+        let nodes = doc.get_int("cluster", "nodes").unwrap_or(1) as usize;
+        let cluster = Cluster::new(gen, nodes);
+        let tp = doc.get_int("parallelism", "tp").unwrap_or(1) as usize;
+        let pp = doc.get_int("parallelism", "pp").unwrap_or(1) as usize;
+        let cp = doc.get_int("parallelism", "cp").unwrap_or(1) as usize;
+        let mp = tp * pp * cp;
+        if cluster.world_size() % mp != 0 {
+            return Err(format!(
+                "tp*pp*cp = {mp} does not divide world {}",
+                cluster.world_size()));
+        }
+        let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp);
+        let global_batch =
+            doc.get_int("batch", "global").unwrap_or(64) as usize;
+        let micro_batch =
+            doc.get_int("batch", "micro").unwrap_or(1) as usize;
+        let seq_len =
+            doc.get_int("model", "seq_len").unwrap_or(4096) as usize;
+        let sharding = match doc
+            .get_str("parallelism", "sharding")
+            .unwrap_or_else(|| "fsdp".into())
+            .as_str()
+        {
+            "fsdp" => Sharding::Fsdp,
+            "ddp" => Sharding::Ddp,
+            other => return Err(format!("unknown sharding '{other}'")),
+        };
+        let rc = RunConfig { arch, gen, nodes, plan, global_batch,
+                             micro_batch, seq_len, sharding };
+        rc.sim().validate()?;
+        Ok(rc)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<RunConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_toml_str(&text)
+    }
+}
+
+/// Named scenarios matching the paper's experiments.
+pub fn scenario(name: &str) -> Option<RunConfig> {
+    let mk = |arch: &TransformerArch, gen, nodes: usize, tp, pp,
+              gbs: usize, mbs: usize| {
+        let cluster = Cluster::new(gen, nodes);
+        let mp = tp * pp;
+        RunConfig {
+            arch: *arch,
+            gen,
+            nodes,
+            plan: ParallelPlan::new(cluster.world_size() / mp, tp, pp, 1),
+            global_batch: gbs,
+            micro_batch: mbs,
+            seq_len: 4096,
+            sharding: Sharding::Fsdp,
+        }
+    };
+    use Generation::*;
+    let arch7 = &model::LLAMA_7B;
+    Some(match name {
+        // §4.1 weak scaling endpoints.
+        "weak-small" => mk(arch7, H100, 1, 1, 1, 16, 2),
+        "weak-large" => mk(arch7, H100, 256, 1, 1, 4096, 2),
+        // §4.2 strong scaling (fixed gbs 32).
+        "strong-2n" => mk(arch7, H100, 2, 1, 1, 32, 1),
+        "strong-32n" => mk(arch7, H100, 32, 8, 1, 32, 1),
+        // §4.3 Fig. 6 winner at 256 GPUs.
+        "fig6-best" => mk(arch7, H100, 32, 2, 1, 512, 2),
+        // §4.4 generation comparison.
+        "a100-32n" => mk(arch7, A100, 32, 2, 1, 512, 2),
+        // Appendix F.
+        "v100-32n" => mk(arch7, V100, 32, 2, 1, 256, 1),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# paper fig6-style run
+[model]
+arch = "llama-7b"
+seq_len = 4096
+
+[cluster]
+generation = "h100"
+nodes = 32
+
+[parallelism]
+tp = 2
+pp = 1
+cp = 1
+sharding = "fsdp"
+
+[batch]
+global = 512
+micro = 2
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let rc = RunConfig::from_toml_str(EXAMPLE).unwrap();
+        assert_eq!(rc.arch.name, "llama-7b");
+        assert_eq!(rc.nodes, 32);
+        assert_eq!(rc.plan.tp, 2);
+        assert_eq!(rc.plan.dp, 128);
+        assert_eq!(rc.global_batch, 512);
+        assert!(rc.sim().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_arch_and_bad_divisibility() {
+        let bad_arch = EXAMPLE.replace("llama-7b", "gpt-9000");
+        assert!(RunConfig::from_toml_str(&bad_arch).is_err());
+        let bad_tp = EXAMPLE.replace("tp = 2", "tp = 3");
+        assert!(RunConfig::from_toml_str(&bad_tp).is_err());
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let rc = RunConfig::from_toml_str(
+            "[model]\narch = \"llama-7b\"\n[cluster]\nnodes = 4\n\
+             [batch]\nglobal = 64\nmicro = 2")
+            .unwrap();
+        assert_eq!(rc.gen, Generation::H100);
+        assert_eq!(rc.plan.tp, 1);
+        assert_eq!(rc.seq_len, 4096);
+    }
+
+    #[test]
+    fn scenarios_are_valid() {
+        for name in ["weak-small", "weak-large", "strong-2n",
+                     "strong-32n", "fig6-best", "a100-32n", "v100-32n"] {
+            let rc = scenario(name).unwrap_or_else(
+                || panic!("missing scenario {name}"));
+            rc.sim().validate().unwrap_or_else(
+                |e| panic!("scenario {name} invalid: {e}"));
+        }
+        assert!(scenario("nope").is_none());
+    }
+}

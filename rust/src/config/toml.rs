@@ -1,0 +1,174 @@
+//! TOML-subset parser: `[sections]`, `key = value` (string / int /
+//! float / bool), `#` comments. Written from scratch (no toml crate on
+//! this image); the subset is validated against the configs this repo
+//! actually ships.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+#[derive(Debug, Default)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+pub fn parse(text: &str) -> Result<Document, String> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unclosed section",
+                                       lineno + 1))?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(
+            || format!("line {}: expected key = value", lineno + 1))?;
+        let value = parse_value(v.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value, String> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_types() {
+        let doc = parse(
+            "[a]\ns = \"hi\"\ni = 42\nbig = 1_000_000\nf = 2.5\n\
+             b = true\n\n[b]\nx = -1",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("a", "s").unwrap(), "hi");
+        assert_eq!(doc.get_int("a", "i").unwrap(), 42);
+        assert_eq!(doc.get_int("a", "big").unwrap(), 1_000_000);
+        assert_eq!(doc.get_float("a", "f").unwrap(), 2.5);
+        assert_eq!(doc.get_bool("a", "b").unwrap(), true);
+        assert_eq!(doc.get_int("b", "x").unwrap(), -1);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse(
+            "# header\n[s]\nk = 1 # trailing\nq = \"a # not comment\"",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("s", "k").unwrap(), 1);
+        assert_eq!(doc.get_str("s", "q").unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        let err = parse("[s]\nnonsense").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse("[open\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = parse("[s]\nk = 1").unwrap();
+        assert!(doc.get("s", "missing").is_none());
+        assert!(doc.get("t", "k").is_none());
+        assert!(doc.get_str("s", "k").is_none()); // wrong type
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_vice_versa() {
+        let doc = parse("[s]\ni = 3\nf = 3.5").unwrap();
+        assert_eq!(doc.get_float("s", "i").unwrap(), 3.0);
+        assert!(doc.get_int("s", "f").is_none());
+    }
+}

@@ -1,0 +1,168 @@
+//! Binary checkpointing of training state (params + AdamW moments +
+//! step counter). Format: magic, version, step, leaf count, then per
+//! leaf: name, shape, f32 data. Little-endian, self-describing, no
+//! external dependencies.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 8] = b"DTSIMCK1";
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+}
+
+fn write_tensors<W: Write>(w: &mut W, ts: &[HostTensor]) -> Result<()> {
+    w.write_all(&(ts.len() as u32).to_le_bytes())?;
+    for t in ts {
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w.write_all(&(t.data.len() as u64).to_le_bytes())?;
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_tensors<R: Read>(r: &mut R) -> Result<Vec<HostTensor>> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("implausible tensor count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rank = read_u32(r)? as usize;
+        if rank > 16 {
+            bail!("implausible rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(r)? as usize);
+        }
+        let len = read_u64(r)? as usize;
+        if len != shape.iter().product::<usize>().max(1) {
+            bail!("shape/len mismatch");
+        }
+        let mut bytes = vec![0u8; len * 4];
+        r.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(HostTensor { shape, data });
+    }
+    Ok(out)
+}
+
+pub fn save<P: AsRef<Path>>(path: P, ck: &Checkpoint) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(
+        std::fs::File::create(&path)
+            .with_context(|| format!("create {:?}", path.as_ref()))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&ck.step.to_le_bytes())?;
+    write_tensors(&mut w, &ck.params)?;
+    write_tensors(&mut w, &ck.m)?;
+    write_tensors(&mut w, &ck.v)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+    let mut r = BufReader::new(
+        std::fs::File::open(&path)
+            .with_context(|| format!("open {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a dtsim checkpoint (bad magic)");
+    }
+    let step = read_u64(&mut r)?;
+    let params = read_tensors(&mut r)?;
+    let m = read_tensors(&mut r)?;
+    let v = read_tensors(&mut r)?;
+    if m.len() != params.len() || v.len() != params.len() {
+        bail!("moment/param leaf count mismatch");
+    }
+    Ok(Checkpoint { step, params, m, v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(shape: &[usize], fill: f32) -> HostTensor {
+        let mut t = HostTensor::zeros(shape);
+        t.data.iter_mut().enumerate().for_each(|(i, x)| {
+            *x = fill + i as f32;
+        });
+        t
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("dtsim_ckpt_test");
+        let path = dir.join("t.ckpt");
+        let ck = Checkpoint {
+            step: 123,
+            params: vec![tensor(&[2, 3], 0.5), tensor(&[4], -1.0)],
+            m: vec![tensor(&[2, 3], 0.0), tensor(&[4], 0.0)],
+            v: vec![tensor(&[2, 3], 1.0), tensor(&[4], 2.0)],
+        };
+        save(&path, &ck).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.step, 123);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.m, ck.m);
+        assert_eq!(back.v, ck.v);
+    }
+
+    #[test]
+    fn scalar_tensors_roundtrip() {
+        let dir = std::env::temp_dir().join("dtsim_ckpt_test2");
+        let path = dir.join("s.ckpt");
+        let ck = Checkpoint {
+            step: 0,
+            params: vec![HostTensor::scalar(3.5)],
+            m: vec![HostTensor::scalar(0.0)],
+            v: vec![HostTensor::scalar(0.0)],
+        };
+        save(&path, &ck).unwrap();
+        assert_eq!(load(&path).unwrap().params[0].data, vec![3.5]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("dtsim_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"notmagic_and_more_bytes").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator: real data-parallel training over the AOT-compiled
+//! JAX/Pallas artifacts.
+//!
+//! The paper's substrate is a Megatron-style trainer; ours is this
+//! module. Worker threads each own a PJRT CPU client executing the
+//! `grad_step` executable on their shard of a synthetic corpus;
+//! gradients are combined with the same **ring all-reduce algorithm**
+//! the simulator models (`allreduce`), and the leader applies AdamW via
+//! the `apply_update` executable. Python never runs here.
+
+pub mod allreduce;
+pub mod checkpoint;
+pub mod data;
+pub mod trainer;
+
+pub use allreduce::{ring_allreduce, ring_allreduce_threaded};
+pub use data::{Corpus, CorpusConfig};
+pub use trainer::{DistTrainer, TrainOptions, TrainStats};

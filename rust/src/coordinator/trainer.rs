@@ -1,0 +1,458 @@
+//! Data-parallel trainer: the leader/worker training loop over the AOT
+//! executables.
+//!
+//! Topology: `workers` data-parallel ranks. In threaded mode each rank
+//! is an OS thread owning its *own* PJRT CPU client and `grad_step`
+//! executable (device isolation, as separate GPUs would be); the leader
+//! broadcasts parameters, ranks compute gradients on disjoint corpus
+//! shards, gradients are combined with the Rust ring all-reduce, and
+//! the leader applies AdamW through `apply_update`. Sequential mode
+//! runs the same schedule on one client (bit-identical numerics, used
+//! by tests).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::allreduce::ring_allreduce_threaded;
+use super::checkpoint::{self, Checkpoint};
+use super::data::{Corpus, CorpusConfig};
+use crate::metrics::PROTOCOL_WARMUP_ITERS;
+use crate::runtime::{
+    f32_scalar, tokens_literal, HostTensor, ModelBundle, Runtime,
+};
+use crate::util::stats::mean;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// artifacts/<config> directory.
+    pub artifact_dir: PathBuf,
+    /// Data-parallel degree.
+    pub workers: usize,
+    pub steps: usize,
+    pub lr: f32,
+    /// Linear LR warmup steps (then cosine decay to 10%).
+    pub warmup_steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Spawn one PJRT client per worker thread (true distributed mode);
+    /// sequential mode reuses the leader's client.
+    pub threaded: bool,
+    /// Save a checkpoint here every `checkpoint_every` steps (0 = off).
+    pub checkpoint_path: Option<PathBuf>,
+    pub checkpoint_every: usize,
+}
+
+impl TrainOptions {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> TrainOptions {
+        TrainOptions {
+            artifact_dir: artifact_dir.into(),
+            workers: 2,
+            steps: 20,
+            lr: 1e-3,
+            warmup_steps: 10,
+            seed: 0,
+            log_every: 10,
+            threaded: false,
+            checkpoint_path: None,
+            checkpoint_every: 0,
+        }
+    }
+
+    /// Cosine schedule with linear warmup.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let t = (step - self.warmup_steps) as f32
+            / (self.steps.max(self.warmup_steps + 1) - self.warmup_steps)
+                as f32;
+        let t = t.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        self.lr * (0.1 + 0.9 * cos)
+    }
+}
+
+/// Per-run statistics (the real-runtime analogue of `metrics::Metrics`).
+#[derive(Debug, Clone)]
+pub struct TrainStats {
+    pub losses: Vec<f32>,
+    pub step_times: Vec<f64>,
+    pub grad_times: Vec<f64>,
+    pub allreduce_times: Vec<f64>,
+    pub update_times: Vec<f64>,
+    pub tokens_per_step: usize,
+    pub final_step: u64,
+}
+
+impl TrainStats {
+    /// Mean post-warmup tokens/second (paper's WPS, measured).
+    pub fn wps(&self) -> f64 {
+        let times: Vec<f64> = self
+            .step_times
+            .iter()
+            .copied()
+            .skip(PROTOCOL_WARMUP_ITERS.min(
+                self.step_times.len().saturating_sub(1)))
+            .collect();
+        if times.is_empty() {
+            return 0.0;
+        }
+        self.tokens_per_step as f64 / mean(&times)
+    }
+
+    pub fn first_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+}
+
+/// Flatten per-leaf tensors into one contiguous gradient vector.
+pub fn flatten(tensors: &[HostTensor]) -> Vec<f32> {
+    let total: usize = tensors.iter().map(|t| t.data.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for t in tensors {
+        out.extend_from_slice(&t.data);
+    }
+    out
+}
+
+/// Inverse of `flatten` given the leaf shapes.
+pub fn unflatten(flat: &[f32], like: &[HostTensor]) -> Vec<HostTensor> {
+    let total: usize = like.iter().map(|t| t.data.len()).sum();
+    assert_eq!(total, flat.len(), "flat gradient length mismatch");
+    let mut out = Vec::with_capacity(like.len());
+    let mut off = 0;
+    for t in like {
+        let n = t.data.len();
+        out.push(HostTensor {
+            shape: t.shape.clone(),
+            data: flat[off..off + n].to_vec(),
+        });
+        off += n;
+    }
+    assert_eq!(off, flat.len(), "flat gradient length mismatch");
+    out
+}
+
+enum WorkerMsg {
+    Work { step: u64, params: Vec<HostTensor> },
+    Stop,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<WorkerMsg>,
+    rx: mpsc::Receiver<Result<(f32, Vec<f32>, f64)>>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// The distributed trainer.
+pub struct DistTrainer {
+    pub bundle: ModelBundle,
+    opts: TrainOptions,
+    corpus_cfg: CorpusConfig,
+}
+
+impl DistTrainer {
+    pub fn new(opts: TrainOptions) -> Result<DistTrainer> {
+        let rt = Runtime::cpu()?;
+        let bundle = ModelBundle::load(&rt, &opts.artifact_dir)
+            .with_context(|| {
+                format!("loading artifacts from {:?} — run `make \
+                         artifacts` first", opts.artifact_dir)
+            })?;
+        let corpus_cfg = CorpusConfig::for_model(
+            bundle.manifest.model.vocab_size,
+            bundle.manifest.seq,
+            opts.seed,
+        );
+        Ok(DistTrainer { bundle, opts, corpus_cfg })
+    }
+
+    /// Gradient step for one worker on one (shared or private) bundle.
+    fn grad_step_on(
+        bundle: &ModelBundle,
+        corpus: &Corpus,
+        worker: u64,
+        step: u64,
+        params: &[HostTensor],
+    ) -> Result<(f32, Vec<f32>)> {
+        let batch = bundle.manifest.batch;
+        let seq = bundle.manifest.seq;
+        let (toks, tgts) = corpus.batch(worker, step, batch);
+        let mut args = Vec::with_capacity(params.len() + 2);
+        for p in params {
+            args.push(p.to_literal()?);
+        }
+        args.push(tokens_literal(&toks, &[batch, seq])?);
+        args.push(tokens_literal(&tgts, &[batch, seq])?);
+        let outs = bundle.grad_step.run(&args)?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let mut grads = Vec::new();
+        for lit in &outs[1..] {
+            grads.extend(lit.to_vec::<f32>()?);
+        }
+        Ok((loss, grads))
+    }
+
+    fn spawn_worker(&self, worker: u64) -> WorkerHandle {
+        let (tx, work_rx) = mpsc::channel::<WorkerMsg>();
+        let (res_tx, rx) = mpsc::channel();
+        let dir = self.opts.artifact_dir.clone();
+        let corpus_cfg = self.corpus_cfg.clone();
+        let join = std::thread::spawn(move || {
+            let setup = || -> Result<(Runtime, ModelBundle, Corpus)> {
+                let rt = Runtime::cpu()?;
+                let bundle = ModelBundle::load(&rt, &dir)?;
+                Ok((rt, bundle, Corpus::new(corpus_cfg.clone())))
+            };
+            let (_rt, bundle, corpus) = match setup() {
+                Ok(x) => x,
+                Err(e) => {
+                    let _ = res_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(WorkerMsg::Work { step, params }) =
+                work_rx.recv()
+            {
+                let t0 = Instant::now();
+                let res = Self::grad_step_on(
+                    &bundle, &corpus, worker, step, &params)
+                    .map(|(loss, grads)| {
+                        (loss, grads, t0.elapsed().as_secs_f64())
+                    });
+                if res_tx.send(res).is_err() {
+                    break;
+                }
+            }
+        });
+        WorkerHandle { tx, rx, join }
+    }
+
+    /// Run the data-parallel training loop; returns the loss curve and
+    /// timing statistics.
+    pub fn train(&mut self) -> Result<TrainStats> {
+        let n = self.opts.workers.max(1);
+        let mut params = self.bundle.init_params(self.opts.seed as u32)?;
+        let mut m = self.bundle.zeros_like_params();
+        let mut v = self.bundle.zeros_like_params();
+        let corpus = Corpus::new(self.corpus_cfg.clone());
+
+        let workers: Vec<WorkerHandle> = if self.opts.threaded && n > 1 {
+            (0..n as u64).map(|w| self.spawn_worker(w)).collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut stats = TrainStats {
+            losses: Vec::with_capacity(self.opts.steps),
+            step_times: Vec::with_capacity(self.opts.steps),
+            grad_times: Vec::new(),
+            allreduce_times: Vec::new(),
+            update_times: Vec::new(),
+            tokens_per_step: n
+                * self.bundle.manifest.batch
+                * self.bundle.manifest.seq,
+            final_step: 0,
+        };
+
+        for step in 0..self.opts.steps as u64 {
+            let t_step = Instant::now();
+
+            // 1. Gradient computation on every DP rank.
+            let t_grad = Instant::now();
+            let mut grad_bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut losses = Vec::with_capacity(n);
+            if !workers.is_empty() {
+                for w in &workers {
+                    w.tx.send(WorkerMsg::Work {
+                        step,
+                        params: params.clone(),
+                    })
+                    .map_err(|_| anyhow!("worker channel closed"))?;
+                }
+                for w in &workers {
+                    let (loss, grads, _t) = w
+                        .rx
+                        .recv()
+                        .map_err(|_| anyhow!("worker died"))??;
+                    losses.push(loss);
+                    grad_bufs.push(grads);
+                }
+            } else {
+                for wid in 0..n as u64 {
+                    let (loss, grads) = Self::grad_step_on(
+                        &self.bundle, &corpus, wid, step, &params)?;
+                    losses.push(loss);
+                    grad_bufs.push(grads);
+                }
+            }
+            stats.grad_times.push(t_grad.elapsed().as_secs_f64());
+
+            // 2. Ring all-reduce (mean) of gradients across ranks.
+            // Threaded mode mirrors a synchronous NCCL ring with one
+            // thread per rank; sequential mode runs the identical
+            // schedule in-place (faster on few cores, same numerics).
+            let t_ar = Instant::now();
+            let reduced = if n > 1 && self.opts.threaded {
+                let bufs = ring_allreduce_threaded(grad_bufs);
+                bufs.into_iter().next().unwrap()
+            } else if n > 1 {
+                super::allreduce::ring_allreduce(&mut grad_bufs);
+                grad_bufs.into_iter().next().unwrap()
+            } else {
+                grad_bufs.pop().unwrap()
+            };
+            stats.allreduce_times.push(t_ar.elapsed().as_secs_f64());
+
+            // 3. AdamW update on the leader.
+            let t_upd = Instant::now();
+            let grads = unflatten(&reduced, &params);
+            let lr = self.opts.lr_at(step as usize);
+            let mut args =
+                Vec::with_capacity(4 * params.len() + 2);
+            for group in [&params, &m, &v, &grads] {
+                for t in group.iter() {
+                    args.push(t.to_literal()?);
+                }
+            }
+            args.push(f32_scalar(lr));
+            args.push(f32_scalar(step as f32 + 1.0));
+            let outs = self.bundle.apply_update.run(&args)?;
+            let k = params.len();
+            for (i, lit) in outs.iter().enumerate() {
+                let t = HostTensor::from_literal(lit)?;
+                match i / k {
+                    0 => params[i % k] = t,
+                    1 => m[i % k] = t,
+                    _ => v[i % k] = t,
+                }
+            }
+            stats.update_times.push(t_upd.elapsed().as_secs_f64());
+
+            let loss = losses.iter().sum::<f32>() / n as f32;
+            stats.losses.push(loss);
+            stats.step_times.push(t_step.elapsed().as_secs_f64());
+            stats.final_step = step + 1;
+
+            if self.opts.log_every > 0
+                && (step as usize % self.opts.log_every == 0
+                    || step as usize + 1 == self.opts.steps)
+            {
+                eprintln!(
+                    "step {:>5}  loss {:.4}  lr {:.2e}  {:.0} tok/s",
+                    step,
+                    loss,
+                    lr,
+                    stats.tokens_per_step as f64
+                        / stats.step_times.last().unwrap(),
+                );
+            }
+
+            if self.opts.checkpoint_every > 0
+                && (step + 1) % self.opts.checkpoint_every as u64 == 0
+            {
+                if let Some(path) = &self.opts.checkpoint_path {
+                    checkpoint::save(path, &Checkpoint {
+                        step: step + 1,
+                        params: params.clone(),
+                        m: m.clone(),
+                        v: v.clone(),
+                    })?;
+                }
+            }
+        }
+
+        for w in workers {
+            let _ = w.tx.send(WorkerMsg::Stop);
+            let _ = w.join.join();
+        }
+
+        // Final checkpoint if requested.
+        if let Some(path) = &self.opts.checkpoint_path {
+            checkpoint::save(path, &Checkpoint {
+                step: stats.final_step,
+                params,
+                m,
+                v,
+            })?;
+        }
+        Ok(stats)
+    }
+
+    /// Evaluate mean loss of `params` over `batches` held-out batches
+    /// (worker id u64::MAX marks the eval shard).
+    pub fn evaluate(
+        &self,
+        params: &[HostTensor],
+        batches: usize,
+    ) -> Result<f32> {
+        let corpus = Corpus::new(self.corpus_cfg.clone());
+        let batch = self.bundle.manifest.batch;
+        let seq = self.bundle.manifest.seq;
+        let mut total = 0.0f32;
+        for b in 0..batches as u64 {
+            let (toks, tgts) = corpus.batch(u64::MAX, b, batch);
+            let mut args = Vec::with_capacity(params.len() + 2);
+            for p in params {
+                args.push(p.to_literal()?);
+            }
+            args.push(tokens_literal(&toks, &[batch, seq])?);
+            args.push(tokens_literal(&tgts, &[batch, seq])?);
+            let outs = self.bundle.forward.run(&args)?;
+            total += outs[0].to_vec::<f32>()?[0];
+        }
+        Ok(total / batches as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensors() -> Vec<HostTensor> {
+        vec![
+            HostTensor { shape: vec![2, 2], data: vec![1., 2., 3., 4.] },
+            HostTensor { shape: vec![3], data: vec![5., 6., 7.] },
+        ]
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let ts = tensors();
+        let flat = flatten(&ts);
+        assert_eq!(flat, vec![1., 2., 3., 4., 5., 6., 7.]);
+        let back = unflatten(&flat, &ts);
+        assert_eq!(back, ts);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn unflatten_checks_length() {
+        let ts = tensors();
+        let _ = unflatten(&[0.0; 3], &ts);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let mut o = TrainOptions::new("x");
+        o.lr = 1.0;
+        o.steps = 100;
+        o.warmup_steps = 10;
+        assert!(o.lr_at(0) < 0.2);
+        assert!((o.lr_at(9) - 1.0).abs() < 1e-6);
+        assert!(o.lr_at(50) < 1.0);
+        assert!(o.lr_at(99) >= 0.1 * 0.99);
+        // monotone decay after warmup
+        assert!(o.lr_at(30) > o.lr_at(60));
+    }
+
+    // Full training-loop tests (need artifacts) are in
+    // rust/tests/runtime_integration.rs.
+}

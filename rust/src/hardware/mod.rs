@@ -1,0 +1,8 @@
+//! Hardware generation specifications — Table 1 of the paper, verbatim,
+//! plus the power/efficiency characteristics calibrated from the paper's
+//! measurements (§4.1: 658 W busy → 620 W communication-bound; §4.4:
+//! A100→H100 compute grows 3.2× while fabric grows 1.5–2×).
+
+pub mod specs;
+
+pub use specs::{Generation, GpuSpec, NodeSpec};

@@ -1,0 +1,32 @@
+//! `dtsim` — reproduction of *Hardware Scaling Trends and Diminishing
+//! Returns in Large-Scale Distributed Training* (Fernandez et al., 2024).
+//!
+//! The crate has two halves (see DESIGN.md):
+//!
+//! * A **cluster/collective/training simulator** (`hardware`, `topology`,
+//!   `collectives`, `model`, `parallelism`, `memory`, `power`, `sim`,
+//!   `metrics`, `planner`) that regenerates every table and figure of the
+//!   paper via `report`.
+//! * A **real three-layer training stack** (`runtime`, `coordinator`)
+//!   that loads AOT-compiled JAX/Pallas HLO artifacts through PJRT and
+//!   runs actual data-parallel training with a Rust ring all-reduce.
+//!
+//! Python is build-time only; the binary is self-contained once
+//! `make artifacts` has run.
+
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod hardware;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod parallelism;
+pub mod planner;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod trace;
+pub mod util;

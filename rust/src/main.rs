@@ -1,0 +1,258 @@
+//! `dtsim` — CLI for the distributed-training scaling study.
+//!
+//! Subcommands:
+//!   simulate   simulate one training configuration
+//!   sweep      planner sweep over parallelization strategies
+//!   repro      regenerate paper tables/figures (reports/*.csv)
+//!   collectives  collective cost model exploration
+//!   train      real data-parallel training over AOT artifacts
+//!   scenario   run a named paper scenario
+//!   trace      export a chrome://tracing timeline for a config
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use dtsim::collectives::{collective_time, Collective};
+use dtsim::config::{scenario, RunConfig};
+use dtsim::coordinator::{DistTrainer, TrainOptions};
+use dtsim::hardware::Generation;
+use dtsim::metrics;
+use dtsim::model;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::planner::{self, SweepRequest};
+use dtsim::report;
+use dtsim::runtime::artifacts_root;
+use dtsim::sim::{build_engine, SimConfig};
+use dtsim::topology::{Cluster, GroupPlacement};
+use dtsim::trace::write_chrome_trace;
+use dtsim::util::args::Args;
+
+const USAGE: &str = "\
+dtsim — Hardware Scaling Trends & Diminishing Returns reproduction
+
+USAGE:
+  dtsim simulate   [--arch 7b] [--gen h100] [--nodes 32] [--tp 1]
+                   [--pp 1] [--cp 1] [--gbs 512] [--mbs 2] [--seq 4096]
+                   [--ddp] [--config run.toml]
+  dtsim sweep      [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512]
+                   [--seq 4096] [--cp] [--top 15]
+  dtsim repro      [fig1|fig2|...|fig14|table1|headline|all]
+                   [--out reports]
+  dtsim collectives [--gen h100] [--op allgather] [--mb 1024]
+  dtsim train      [--config tiny] [--workers 2] [--steps 30]
+                   [--lr 1e-3] [--threaded] [--ckpt path] [--seed 0]
+  dtsim scenario   <weak-small|weak-large|strong-2n|strong-32n|
+                    fig6-best|a100-32n|v100-32n>
+  dtsim trace      --out trace.json [simulate flags]
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "repro" => cmd_repro(&args),
+        "collectives" => cmd_collectives(&args),
+        "train" => cmd_train(&args),
+        "scenario" => cmd_scenario(&args),
+        "trace" => cmd_trace(&args),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn sim_config_from(args: &Args) -> Result<SimConfig> {
+    if let Some(path) = args.get("config") {
+        if path.ends_with(".toml") {
+            return RunConfig::from_toml_file(path)
+                .map(|rc| rc.sim())
+                .map_err(|e| anyhow!(e));
+        }
+    }
+    let arch = *model::by_name(&args.get_or("arch", "7b"))
+        .ok_or_else(|| anyhow!("unknown --arch"))?;
+    let gen = Generation::parse(&args.get_or("gen", "h100"))
+        .ok_or_else(|| anyhow!("unknown --gen"))?;
+    let cluster = Cluster::new(gen, args.usize_or("nodes", 32));
+    let tp = args.usize_or("tp", 1);
+    let pp = args.usize_or("pp", 1);
+    let cp = args.usize_or("cp", 1);
+    let mp = tp * pp * cp;
+    if cluster.world_size() % mp != 0 {
+        bail!("tp*pp*cp={} must divide world={}", mp,
+              cluster.world_size());
+    }
+    let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp);
+    let mut cfg = SimConfig::fsdp(
+        arch,
+        cluster,
+        plan,
+        args.usize_or("gbs", 2 * plan.dp),
+        args.usize_or("mbs", 2),
+        args.usize_or("seq", 4096),
+    );
+    if args.has("ddp") {
+        cfg.sharding = dtsim::sim::Sharding::Ddp;
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn print_metrics(m: &metrics::Metrics) {
+    println!("world size        : {} GPUs", m.world);
+    println!("iteration time    : {:.1} ms", m.iter_time * 1e3);
+    println!("global throughput : {:.0} words/s", m.global_wps);
+    println!("per-GPU throughput: {:.0} words/s", m.per_gpu_wps);
+    println!("achieved TFLOPS   : {:.1} /GPU", m.tflops_per_gpu);
+    println!("MFU               : {:.2}%", m.mfu * 100.0);
+    println!("compute time      : {:.1} ms", m.compute_time * 1e3);
+    println!("comm kernel time  : {:.1} ms", m.comm_time * 1e3);
+    println!("exposed comm      : {:.1} ms ({:.1}% of comm)",
+             m.exposed_comm * 1e3, m.exposed_frac * 100.0);
+    println!("power             : {:.0} W/GPU, {:.1} kW total",
+             m.power_w, m.total_power_w / 1e3);
+    println!("power efficiency  : {:.2} words/s/W", m.wps_per_watt);
+    println!("energy            : {:.2} J/token", m.energy_per_token_j);
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = sim_config_from(args)?;
+    println!("config: {} on {}x{} {} | plan {} | gbs {} mbs {} seq {}",
+             cfg.arch.name, cfg.cluster.nodes,
+             cfg.cluster.gpus_per_node(), cfg.cluster.node.gpu,
+             cfg.plan, cfg.global_batch, cfg.micro_batch, cfg.seq_len);
+    print_metrics(&metrics::evaluate(&cfg));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let arch = *model::by_name(&args.get_or("arch", "7b"))
+        .ok_or_else(|| anyhow!("unknown --arch"))?;
+    let gen = Generation::parse(&args.get_or("gen", "h100"))
+        .ok_or_else(|| anyhow!("unknown --gen"))?;
+    let cluster = Cluster::new(gen, args.usize_or("nodes", 32));
+    let req = SweepRequest {
+        arch,
+        cluster,
+        global_batch: args.usize_or("gbs", 512),
+        seq_len: args.usize_or("seq", 4096),
+        with_cp: args.has("cp"),
+        sharding: dtsim::sim::Sharding::Fsdp,
+    };
+    let top = args.usize_or("top", 15);
+    println!("{:<18} {:>4} {:>12} {:>7} {:>11} {:>10} {:>8}",
+             "plan", "mbs", "global_wps", "mfu", "exposed_ms",
+             "wps_per_W", "mem_GB");
+    for o in planner::sweep(&req).into_iter().take(top) {
+        println!("{:<18} {:>4} {:>12.0} {:>6.1}% {:>11.1} {:>10.2} \
+                  {:>8.1}",
+                 o.plan.to_string(), o.micro_batch,
+                 o.metrics.global_wps, o.metrics.mfu * 100.0,
+                 o.metrics.exposed_comm * 1e3, o.metrics.wps_per_watt,
+                 o.mem_per_gpu / 1e9);
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "reports"));
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".into());
+    if which == "all" {
+        report::run_all(&out)?;
+    } else {
+        report::run(&which, &out)?;
+    }
+    println!("\nCSV output in {}", out.display());
+    Ok(())
+}
+
+fn cmd_collectives(args: &Args) -> Result<()> {
+    let gen = Generation::parse(&args.get_or("gen", "h100"))
+        .ok_or_else(|| anyhow!("unknown --gen"))?;
+    let op = match args.get_or("op", "allgather").as_str() {
+        "allreduce" => Collective::AllReduce,
+        "allgather" => Collective::AllGather,
+        "reducescatter" => Collective::ReduceScatter,
+        "broadcast" => Collective::Broadcast,
+        "alltoall" => Collective::AllToAll,
+        other => bail!("unknown --op {other}"),
+    };
+    let bytes = args.f64_or("mb", 1024.0) * 1e6;
+    println!("{op} of {:.0} MB on {gen} DGX cluster:", bytes / 1e6);
+    println!("{:>6} {:>7} {:>12} {:>12} {:>8}",
+             "nodes", "gpus", "time_ms", "busbw_GB/s", "algo");
+    for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+        let c = Cluster::new(gen, nodes);
+        let place = GroupPlacement::strided(&c, c.world_size(), 1);
+        let cost = collective_time(op, bytes, &c, &place);
+        println!("{:>6} {:>7} {:>12.2} {:>12.1} {:>8?}",
+                 nodes, c.world_size(), cost.time_s * 1e3,
+                 cost.busbw / 1e9, cost.algo);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "tiny");
+    let mut opts =
+        TrainOptions::new(artifacts_root().join(&config));
+    opts.workers = args.usize_or("workers", 2);
+    opts.steps = args.usize_or("steps", 30);
+    opts.lr = args.f64_or("lr", 1e-3) as f32;
+    opts.warmup_steps = args.usize_or("warmup", opts.steps / 10 + 1);
+    opts.seed = args.usize_or("seed", 0) as u64;
+    opts.threaded = args.has("threaded");
+    opts.log_every = args.usize_or("log-every", 10);
+    if let Some(p) = args.get("ckpt") {
+        opts.checkpoint_path = Some(PathBuf::from(p));
+        opts.checkpoint_every = args.usize_or("ckpt-every", 0);
+    }
+    println!("training '{config}' with {} DP workers ({}) for {} steps",
+             opts.workers,
+             if opts.threaded { "threaded, one PJRT client each" }
+             else { "sequential" },
+             opts.steps);
+    let mut trainer = DistTrainer::new(opts)?;
+    let stats = trainer.train()?;
+    println!("\nloss: {:.4} → {:.4} over {} steps",
+             stats.first_loss(), stats.last_loss(), stats.final_step);
+    println!("throughput: {:.0} tokens/s ({} tokens/step)",
+             stats.wps(), stats.tokens_per_step);
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("scenario name required"))?;
+    let rc = scenario(name)
+        .ok_or_else(|| anyhow!("unknown scenario '{name}'"))?;
+    println!("scenario {name}: {} on {} {} nodes, plan {}",
+             rc.arch.name, rc.nodes, rc.gen, rc.plan);
+    print_metrics(&metrics::evaluate(&rc.sim()));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cfg = sim_config_from(args)?;
+    let out = args.get_or("out", "reports/trace.json");
+    let eng = build_engine(&cfg);
+    let tl = eng.run();
+    write_chrome_trace(Path::new(&out), &eng, &tl)?;
+    println!("wrote {} events to {out} (open in chrome://tracing)",
+             eng.events.len());
+    Ok(())
+}

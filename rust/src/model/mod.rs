@@ -1,0 +1,152 @@
+//! Transformer architecture descriptions: parameter counts, FLOPs, and
+//! activation footprints — the workload side of the simulator.
+//!
+//! The paper trains Llama-2 decoder models (§3); presets below use the
+//! published Llama shapes. All sizes are *per replica* — parallelism
+//! sharding is applied by `parallelism`/`sim`.
+
+pub mod presets;
+
+pub use presets::{by_name, LLAMA_13B, LLAMA_1B, LLAMA_70B, LLAMA_7B};
+
+/// Decoder-only transformer architecture.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransformerArch {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (grouped-query attention; == n_heads for MHA).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl TransformerArch {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameters in one transformer layer.
+    pub fn params_per_layer(&self) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let kv_frac = self.n_kv_heads as f64 / self.n_heads as f64;
+        // q, o projections + GQA-sized k, v + SwiGLU (3 mats) + 2 norms
+        d * d * (2.0 + 2.0 * kv_frac) + 3.0 * d * f + 2.0 * d
+    }
+
+    /// Total parameters (untied embedding + output head, as Llama-2).
+    pub fn params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let v = self.vocab as f64;
+        2.0 * v * d + self.n_layers as f64 * self.params_per_layer() + d
+    }
+
+    /// Forward FLOPs for one layer over `tokens` tokens of context `seq`.
+    /// 2·N·T for the matmuls plus the attention score/value terms
+    /// (4·T·s·d accounting for causal halving is NOT applied — matches
+    /// the dense-FLOPs convention used for MFU in the paper/PaLM).
+    pub fn fwd_flops_per_layer(&self, tokens: f64, seq: f64) -> f64 {
+        let d = self.d_model as f64;
+        let matmuls = 2.0 * tokens
+            * (self.params_per_layer() - 2.0 * self.d_model as f64);
+        let attention = 4.0 * tokens * seq * d;
+        matmuls + attention
+    }
+
+    /// Forward FLOPs for embedding + LM head over `tokens`.
+    pub fn fwd_flops_head(&self, tokens: f64) -> f64 {
+        2.0 * tokens * self.d_model as f64 * self.vocab as f64
+    }
+
+    /// Whole-model forward FLOPs.
+    pub fn fwd_flops(&self, tokens: f64, seq: f64) -> f64 {
+        self.n_layers as f64 * self.fwd_flops_per_layer(tokens, seq)
+            + self.fwd_flops_head(tokens)
+    }
+
+    /// Model FLOPs per token for MFU accounting (fwd + bwd ≈ 3× fwd).
+    pub fn train_flops(&self, tokens: f64, seq: f64) -> f64 {
+        3.0 * self.fwd_flops(tokens, seq)
+    }
+
+    /// Activation bytes that must be stored for backward, per layer, for
+    /// a microbatch of `batch` sequences of length `seq`, in bf16.
+    /// Follows Korthikanti et al. (2023) eq. for no-recompute training
+    /// with flash attention (the s·s probability matrix is never stored).
+    pub fn activation_bytes_per_layer(&self, batch: f64, seq: f64) -> f64 {
+        let d = self.d_model as f64;
+        // ≈34 bytes/token/hidden-dim in bf16 (inputs to every matmul,
+        // norms, activations); flash attention drops the 5·h·s² term.
+        34.0 * batch * seq * d
+    }
+
+    /// Bytes of parameters in one layer (bf16 working copy).
+    pub fn layer_param_bytes(&self) -> f64 {
+        2.0 * self.params_per_layer()
+    }
+
+    /// Bytes of the full parameter set (bf16).
+    pub fn param_bytes(&self) -> f64 {
+        2.0 * self.params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_param_counts_match_published_sizes() {
+        // Published sizes: 6.74B, 13.0B, 68.98B (Llama-2 paper).
+        let within = |arch: &TransformerArch, published: f64| {
+            let rel = (arch.params() - published).abs() / published;
+            assert!(rel < 0.05, "{}: {} vs {published}", arch.name,
+                    arch.params());
+        };
+        within(&LLAMA_7B, 6.74e9);
+        within(&LLAMA_13B, 13.0e9);
+        within(&LLAMA_70B, 69.0e9);
+        within(&LLAMA_1B, 1.1e9);
+    }
+
+    #[test]
+    fn six_nd_rule_of_thumb() {
+        // train_flops ≈ 6·N·T within ~20% (attention adds the rest).
+        let t = 4096.0 * 4.0;
+        let f = LLAMA_7B.train_flops(t, 4096.0);
+        let approx = 6.0 * LLAMA_7B.params() * t;
+        let rel = (f - approx).abs() / approx;
+        assert!(rel < 0.25, "rel={rel}");
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_tokens() {
+        let f1 = LLAMA_7B.fwd_flops(4096.0, 4096.0);
+        let f2 = LLAMA_7B.fwd_flops(8192.0, 4096.0);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attention_grows_quadratically_with_seq() {
+        // Fixing batch=1 and doubling seq more than doubles layer FLOPs.
+        let f1 = LLAMA_7B.fwd_flops_per_layer(4096.0, 4096.0) / 4096.0;
+        let f2 = LLAMA_7B.fwd_flops_per_layer(8192.0, 8192.0) / 8192.0;
+        assert!(f2 > f1);
+    }
+
+    #[test]
+    fn gqa_reduces_params() {
+        // 70B uses 8 KV heads of 64 — params/layer less than full MHA.
+        let mha = TransformerArch { n_kv_heads: 64, ..LLAMA_70B };
+        assert!(LLAMA_70B.params_per_layer() < mha.params_per_layer());
+    }
+
+    #[test]
+    fn activation_bytes_sane_for_7b() {
+        // b=2, s=4096 on 7B: ≈ 34·2·4096·4096 ≈ 1.1 GB per layer.
+        let b = LLAMA_7B.activation_bytes_per_layer(2.0, 4096.0);
+        assert!(b > 1.0e9 && b < 1.3e9, "{b}");
+    }
+}

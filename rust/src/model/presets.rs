@@ -1,0 +1,80 @@
+//! Llama-family architecture presets used throughout the paper's
+//! experiments (§3, §4.5): 1B, 7B, 13B, 70B.
+
+use super::TransformerArch;
+
+/// TinyLlama-1.1B shape (the paper's "1B"); GQA with 4 KV heads.
+pub static LLAMA_1B: TransformerArch = TransformerArch {
+    name: "llama-1b",
+    n_layers: 22,
+    d_model: 2048,
+    n_heads: 32,
+    n_kv_heads: 4,
+    d_ff: 5632,
+    vocab: 32000,
+};
+
+/// Llama-2 7B.
+pub static LLAMA_7B: TransformerArch = TransformerArch {
+    name: "llama-7b",
+    n_layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 32,
+    d_ff: 11008,
+    vocab: 32000,
+};
+
+/// Llama-2 13B.
+pub static LLAMA_13B: TransformerArch = TransformerArch {
+    name: "llama-13b",
+    n_layers: 40,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 40,
+    d_ff: 13824,
+    vocab: 32000,
+};
+
+/// Llama-2 70B (GQA with 8 KV heads).
+pub static LLAMA_70B: TransformerArch = TransformerArch {
+    name: "llama-70b",
+    n_layers: 80,
+    d_model: 8192,
+    n_heads: 64,
+    n_kv_heads: 8,
+    d_ff: 28672,
+    vocab: 32000,
+};
+
+pub fn by_name(name: &str) -> Option<&'static TransformerArch> {
+    match name.to_ascii_lowercase().as_str() {
+        "llama-1b" | "1b" => Some(&LLAMA_1B),
+        "llama-7b" | "7b" => Some(&LLAMA_7B),
+        "llama-13b" | "13b" => Some(&LLAMA_13B),
+        "llama-70b" | "70b" => Some(&LLAMA_70B),
+        _ => None,
+    }
+}
+
+pub static ALL: [&TransformerArch; 4] =
+    [&LLAMA_1B, &LLAMA_7B, &LLAMA_13B, &LLAMA_70B];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        assert_eq!(by_name("7b").unwrap().name, "llama-7b");
+        assert_eq!(by_name("LLAMA-70B").unwrap().name, "llama-70b");
+        assert!(by_name("8b").is_none());
+    }
+
+    #[test]
+    fn sizes_monotone() {
+        assert!(LLAMA_1B.params() < LLAMA_7B.params());
+        assert!(LLAMA_7B.params() < LLAMA_13B.params());
+        assert!(LLAMA_13B.params() < LLAMA_70B.params());
+    }
+}

@@ -1,0 +1,211 @@
+//! Parallelization plans: FSDP data parallelism composed with tensor,
+//! pipeline, and context model parallelism (§2.1 of the paper).
+//!
+//! Rank layout follows the Megatron convention — tensor parallel
+//! innermost (consecutive ranks, NVLink-adjacent), then context parallel,
+//! then pipeline stages, then data parallel outermost:
+//!
+//!   rank = dp·(pp·cp·tp) + pp_idx·(cp·tp) + cp_idx·tp + tp_idx
+//!
+//! A key consequence the paper exploits (§4.3): FSDP collectives run over
+//! the *data-parallel group only*, of size world/(tp·pp·cp), so model
+//! parallelism shrinks the AllGather/ReduceScatter world size.
+
+use crate::topology::{Cluster, GroupPlacement};
+
+/// Degrees of each parallelism dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelPlan {
+    /// Data parallel (FSDP) degree.
+    pub dp: usize,
+    /// Tensor parallel degree.
+    pub tp: usize,
+    /// Pipeline parallel degree.
+    pub pp: usize,
+    /// Context (sequence) parallel degree.
+    pub cp: usize,
+}
+
+impl ParallelPlan {
+    pub fn data_parallel(dp: usize) -> ParallelPlan {
+        ParallelPlan { dp, tp: 1, pp: 1, cp: 1 }
+    }
+
+    pub fn new(dp: usize, tp: usize, pp: usize, cp: usize) -> ParallelPlan {
+        ParallelPlan { dp, tp, pp, cp }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.dp * self.tp * self.pp * self.cp
+    }
+
+    /// Total degree of model parallelism (paper's term: tp·pp·cp).
+    pub fn model_parallel(&self) -> usize {
+        self.tp * self.pp * self.cp
+    }
+
+    /// Check the plan against a cluster and model depth.
+    pub fn validate(&self, cluster: &Cluster, n_layers: usize)
+        -> Result<(), String>
+    {
+        if self.dp == 0 || self.tp == 0 || self.pp == 0 || self.cp == 0 {
+            return Err("all degrees must be >= 1".into());
+        }
+        if self.world_size() != cluster.world_size() {
+            return Err(format!(
+                "plan world {} != cluster world {}",
+                self.world_size(), cluster.world_size()));
+        }
+        if n_layers % self.pp != 0 {
+            return Err(format!(
+                "{} layers not divisible by pp={}", n_layers, self.pp));
+        }
+        Ok(())
+    }
+
+    /// Placement of the tensor-parallel group (innermost, stride 1).
+    pub fn tp_placement(&self, cluster: &Cluster) -> GroupPlacement {
+        GroupPlacement::strided(cluster, self.tp, 1)
+    }
+
+    /// Placement of the context-parallel group (stride tp).
+    pub fn cp_placement(&self, cluster: &Cluster) -> GroupPlacement {
+        GroupPlacement::strided(cluster, self.cp, self.tp)
+    }
+
+    /// Placement of the pipeline group (stride tp·cp): consecutive
+    /// stages are tp·cp ranks apart.
+    pub fn pp_placement(&self, cluster: &Cluster) -> GroupPlacement {
+        GroupPlacement::strided(cluster, self.pp, self.tp * self.cp)
+    }
+
+    /// Placement of the data-parallel (FSDP) group, stride tp·cp·pp.
+    pub fn dp_placement(&self, cluster: &Cluster) -> GroupPlacement {
+        GroupPlacement::strided(cluster, self.dp, self.model_parallel())
+    }
+
+    /// Do adjacent pipeline stages sit on different nodes?
+    pub fn pp_crosses_nodes(&self, cluster: &Cluster) -> bool {
+        self.pp > 1
+            && self.tp * self.cp * self.pp > cluster.gpus_per_node()
+    }
+}
+
+impl std::fmt::Display for ParallelPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dp{}tp{}pp{}cp{}", self.dp, self.tp, self.pp, self.cp)
+    }
+}
+
+/// Enumerate all plans filling `cluster` with tp/pp degrees from the
+/// paper's sweep set {1,2,4,8,16} (§3) and optional cp degrees.
+pub fn enumerate_plans(
+    cluster: &Cluster,
+    n_layers: usize,
+    with_cp: bool,
+) -> Vec<ParallelPlan> {
+    let world = cluster.world_size();
+    let degrees = [1usize, 2, 4, 8, 16];
+    let cp_degrees: &[usize] =
+        if with_cp { &[1, 2, 4, 8] } else { &[1] };
+    let mut plans = Vec::new();
+    for &tp in &degrees {
+        for &pp in &degrees {
+            for &cp in cp_degrees {
+                let mp = tp * pp * cp;
+                if mp > world || world % mp != 0 {
+                    continue;
+                }
+                let plan = ParallelPlan::new(world / mp, tp, pp, cp);
+                if plan.validate(cluster, n_layers).is_ok() {
+                    plans.push(plan);
+                }
+            }
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Generation;
+
+    fn h100(nodes: usize) -> Cluster {
+        Cluster::new(Generation::H100, nodes)
+    }
+
+    #[test]
+    fn world_size_composes() {
+        let p = ParallelPlan::new(16, 4, 2, 2);
+        assert_eq!(p.world_size(), 256);
+        assert_eq!(p.model_parallel(), 16);
+    }
+
+    #[test]
+    fn validate_checks_world_and_layers() {
+        let c = h100(4); // 32 GPUs
+        assert!(ParallelPlan::new(8, 4, 1, 1).validate(&c, 32).is_ok());
+        assert!(ParallelPlan::new(8, 2, 1, 1).validate(&c, 32).is_err());
+        // 32 layers not divisible by pp=6
+        let c2 = h100(6);
+        assert!(ParallelPlan::new(8, 1, 6, 1).validate(&c2, 32).is_err());
+    }
+
+    #[test]
+    fn tp8_stays_intra_node_tp16_crosses() {
+        let c = h100(32);
+        let p8 = ParallelPlan::new(32, 8, 1, 1);
+        assert!(!p8.tp_placement(&c).crosses_nodes);
+        let p16 = ParallelPlan::new(16, 16, 1, 1);
+        assert!(p16.tp_placement(&c).crosses_nodes);
+    }
+
+    #[test]
+    fn dp_group_shrinks_with_model_parallelism() {
+        // §4.3: FSDP collectives run over world/(tp·pp).
+        let c = h100(32); // 256 GPUs
+        let baseline = ParallelPlan::data_parallel(256);
+        let mp = ParallelPlan::new(32, 4, 2, 1);
+        assert_eq!(baseline.dp_placement(&c).size, 256);
+        assert_eq!(mp.dp_placement(&c).size, 32);
+        // Fewer group members share each node's InfiniBand.
+        assert!(mp.dp_placement(&c).ranks_per_node
+                < baseline.dp_placement(&c).ranks_per_node);
+    }
+
+    #[test]
+    fn dp_group_one_rank_per_node_when_mp_fills_node() {
+        let c = h100(4);
+        let p = ParallelPlan::new(4, 8, 1, 1);
+        let place = p.dp_placement(&c);
+        assert_eq!(place.ranks_per_node, 1);
+        assert_eq!(place.nodes, 4);
+    }
+
+    #[test]
+    fn enumerate_covers_paper_sweep() {
+        let c = h100(32); // 256 GPUs, 7B has 32 layers
+        let plans = enumerate_plans(&c, 32, false);
+        // Must include the pure-DP baseline and tp2/tp4 (Fig. 6 winners).
+        assert!(plans.contains(&ParallelPlan::data_parallel(256)));
+        assert!(plans.contains(&ParallelPlan::new(128, 2, 1, 1)));
+        assert!(plans.contains(&ParallelPlan::new(64, 4, 1, 1)));
+        assert!(plans.contains(&ParallelPlan::new(16, 1, 16, 1)));
+        // All valid and unique.
+        let mut seen = std::collections::HashSet::new();
+        for p in &plans {
+            assert!(p.validate(&c, 32).is_ok());
+            assert!(seen.insert(*p));
+        }
+    }
+
+    #[test]
+    fn pp_cross_node_detection() {
+        let c = h100(4);
+        // tp=8 fills the node; pp stages land on different nodes.
+        assert!(ParallelPlan::new(1, 8, 4, 1).pp_crosses_nodes(&c));
+        // tp=2, pp=2: both stages inside one node.
+        assert!(!ParallelPlan::new(8, 2, 2, 1).pp_crosses_nodes(&c));
+    }
+}

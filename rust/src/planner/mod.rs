@@ -1,0 +1,182 @@
+//! Parallelization-strategy planner: sweeps viable (tp, pp, cp,
+//! microbatch) configurations for a workload, filters by device memory,
+//! simulates each, and ranks by global throughput — the procedure the
+//! paper performs manually in §4.3/Figure 6 and argues should become
+//! standard practice (§5).
+
+use crate::memory;
+use crate::metrics::{self, Metrics};
+use crate::model::TransformerArch;
+use crate::parallelism::{enumerate_plans, ParallelPlan};
+use crate::sim::{Sharding, SimConfig};
+use crate::topology::Cluster;
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub plan: ParallelPlan,
+    pub micro_batch: usize,
+    pub metrics: Metrics,
+    pub mem_per_gpu: f64,
+}
+
+/// Sweep request.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRequest {
+    pub arch: TransformerArch,
+    pub cluster: Cluster,
+    pub global_batch: usize,
+    pub seq_len: usize,
+    pub with_cp: bool,
+    pub sharding: Sharding,
+}
+
+impl SweepRequest {
+    pub fn fsdp(
+        arch: TransformerArch,
+        cluster: Cluster,
+        global_batch: usize,
+        seq_len: usize,
+    ) -> SweepRequest {
+        SweepRequest { arch, cluster, global_batch, seq_len,
+                       with_cp: false, sharding: Sharding::Fsdp }
+    }
+}
+
+/// All feasible (plan, microbatch) outcomes, best global WPS first.
+pub fn sweep(req: &SweepRequest) -> Vec<PlanOutcome> {
+    let mut out = Vec::new();
+    let mem_cap = req.cluster.node.spec().mem_bytes;
+    for plan in enumerate_plans(&req.cluster, req.arch.n_layers,
+                                req.with_cp) {
+        if req.global_batch % plan.dp != 0 {
+            continue;
+        }
+        let local_batch = req.global_batch / plan.dp;
+        for micro_batch in [1usize, 2, 4, 8] {
+            if micro_batch > local_batch
+                || local_batch % micro_batch != 0
+            {
+                continue;
+            }
+            let cfg = SimConfig {
+                arch: req.arch,
+                cluster: req.cluster,
+                plan,
+                global_batch: req.global_batch,
+                micro_batch,
+                seq_len: req.seq_len,
+                sharding: req.sharding,
+                prefetch: true,
+            };
+            if cfg.validate().is_err() {
+                continue;
+            }
+            let in_flight = cfg.microbatches().min(plan.pp);
+            let mem = memory::per_gpu_memory(
+                &req.arch, &plan, micro_batch, req.seq_len, in_flight);
+            if mem.total() > mem_cap * 0.94 {
+                continue;
+            }
+            out.push(PlanOutcome {
+                plan,
+                micro_batch,
+                metrics: metrics::evaluate(&cfg),
+                mem_per_gpu: mem.total(),
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        b.metrics.global_wps.partial_cmp(&a.metrics.global_wps).unwrap()
+    });
+    out
+}
+
+/// The best feasible configuration, if any.
+pub fn best(req: &SweepRequest) -> Option<PlanOutcome> {
+    sweep(req).into_iter().next()
+}
+
+/// Best outcome restricted to a fixed plan shape (used by the figure
+/// harness to compare specific strategies).
+pub fn best_for_plan(
+    req: &SweepRequest,
+    plan: ParallelPlan,
+) -> Option<PlanOutcome> {
+    sweep(req).into_iter().find(|o| o.plan == plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Generation;
+    use crate::model::{LLAMA_70B, LLAMA_7B};
+
+    #[test]
+    fn sweep_finds_feasible_plans_and_sorts() {
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 4), 64, 4096);
+        let outcomes = sweep(&req);
+        assert!(!outcomes.is_empty());
+        for w in outcomes.windows(2) {
+            assert!(w[0].metrics.global_wps >= w[1].metrics.global_wps);
+        }
+        for o in &outcomes {
+            assert!(o.mem_per_gpu <= 80e9 * 0.94);
+            assert_eq!(o.plan.world_size(), 32);
+        }
+    }
+
+    #[test]
+    fn fig6_model_parallelism_wins_at_256_gpus() {
+        // Paper Fig. 6: at 256 GPUs / gbs 512, small MP degrees beat
+        // pure FSDP.
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 32), 512, 4096);
+        let outcomes = sweep(&req);
+        let best = &outcomes[0];
+        assert!(best.plan.model_parallel() > 1,
+                "expected MP to win at 256 GPUs, got {}", best.plan);
+        // And the baseline must still be feasible (for comparison).
+        assert!(outcomes.iter().any(|o| o.plan.model_parallel() == 1));
+    }
+
+    #[test]
+    fn small_scale_prefers_pure_dp() {
+        // On one node, FSDP collectives ride NVLink: model parallelism
+        // has nothing to fix (paper: MP helps only once FSDP is
+        // comm-bound).
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 1), 16, 4096);
+        let top = best(&req).unwrap();
+        assert_eq!(top.plan.model_parallel(), 1, "got {}", top.plan);
+    }
+
+    #[test]
+    fn seventy_b_filtered_by_memory() {
+        let req = SweepRequest::fsdp(
+            LLAMA_70B, Cluster::new(Generation::H100, 2), 16, 4096);
+        for o in sweep(&req) {
+            assert!(o.mem_per_gpu <= 80e9 * 0.94);
+        }
+    }
+
+    #[test]
+    fn best_for_plan_matches_plan() {
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 4), 64, 4096);
+        let plan = ParallelPlan::new(8, 4, 1, 1);
+        let o = best_for_plan(&req, plan).unwrap();
+        assert_eq!(o.plan, plan);
+    }
+
+    #[test]
+    fn microbatch_choices_respect_divisibility() {
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 4), 48, 4096);
+        for o in sweep(&req) {
+            let local = 48 / o.plan.dp;
+            assert_eq!(local % o.micro_batch, 0);
+        }
+    }
+}

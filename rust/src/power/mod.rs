@@ -1,0 +1,98 @@
+//! GPU power model (paper §4.1, Figure 1, Figure 3).
+//!
+//! The paper's key empirical observation is that per-GPU power draw is
+//! only weakly coupled to utilization: scaling Llama-7B FSDP from 128 to
+//! 2048 GPUs drops throughput 37.22% but power only 5.87% (658 W →
+//! 620 W). We model draw as an affine function of compute-stream and
+//! comm-stream utilization with coefficients calibrated per generation
+//! (see `hardware::specs`), and derive the paper's efficiency metrics.
+
+use crate::hardware::GpuSpec;
+
+/// Utilization of one device over an iteration, as busy-time fractions.
+#[derive(Debug, Clone, Copy)]
+pub struct Utilization {
+    /// Fraction of wall time the compute stream is busy.
+    pub compute: f64,
+    /// Fraction of wall time the comm stream is busy.
+    pub comm: f64,
+}
+
+impl Utilization {
+    pub fn clamped(self) -> Utilization {
+        Utilization {
+            compute: self.compute.clamp(0.0, 1.0),
+            comm: self.comm.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// Average per-GPU power draw in watts.
+pub fn gpu_power(spec: &GpuSpec, u: Utilization) -> f64 {
+    let u = u.clamped();
+    spec.p_base + spec.p_comp * u.compute + spec.p_comm * u.comm
+}
+
+/// Whole-cluster power in watts (homogeneous utilization).
+pub fn cluster_power(spec: &GpuSpec, u: Utilization, world: usize) -> f64 {
+    gpu_power(spec, u) * world as f64
+}
+
+/// Paper Figure 1/3 metric: words-per-second per watt.
+pub fn power_efficiency(global_wps: f64, total_watts: f64) -> f64 {
+    if total_watts <= 0.0 { 0.0 } else { global_wps / total_watts }
+}
+
+/// Energy per trained token, joules.
+pub fn energy_per_token(total_watts: f64, global_wps: f64) -> f64 {
+    if global_wps <= 0.0 { f64::INFINITY } else { total_watts / global_wps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::specs::H100;
+
+    #[test]
+    fn busy_vs_bound_matches_paper_measurements() {
+        // §4.1: compute-bound 658 W, communication-bound 620 W (-5.87%).
+        let busy = gpu_power(&H100, Utilization { compute: 0.95, comm: 0.30 });
+        let bound = gpu_power(&H100, Utilization { compute: 0.30, comm: 0.80 });
+        assert!((busy - 658.0).abs() < 5.0, "{busy}");
+        assert!((bound - 620.0).abs() < 5.0, "{bound}");
+        let drop = (busy - bound) / busy;
+        assert!((drop - 0.0587).abs() < 0.02, "{drop}");
+    }
+
+    #[test]
+    fn power_monotone_in_utilization() {
+        let lo = gpu_power(&H100, Utilization { compute: 0.2, comm: 0.2 });
+        let hi = gpu_power(&H100, Utilization { compute: 0.9, comm: 0.9 });
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        let p = gpu_power(&H100, Utilization { compute: 1.7, comm: -0.3 });
+        let q = gpu_power(&H100, Utilization { compute: 1.0, comm: 0.0 });
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn cluster_power_scales_linearly_with_world() {
+        // Paper: "total GPU power draw ... scale[s] linearly with the
+        // number of devices".
+        let u = Utilization { compute: 0.5, comm: 0.5 };
+        let p1 = cluster_power(&H100, u, 128);
+        let p2 = cluster_power(&H100, u, 2048);
+        assert!((p2 / p1 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_metrics() {
+        assert_eq!(power_efficiency(1000.0, 500.0), 2.0);
+        assert_eq!(energy_per_token(500.0, 1000.0), 0.5);
+        assert_eq!(power_efficiency(1000.0, 0.0), 0.0);
+        assert!(energy_per_token(500.0, 0.0).is_infinite());
+    }
+}

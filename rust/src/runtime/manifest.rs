@@ -1,0 +1,238 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime. The manifest records, for every lowered
+//! executable, the exact flattened input/output tensor order so buffers
+//! can be bound without re-deriving JAX pytree semantics.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor in the artifact interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "float32" => Dtype::F32,
+            "int32" => Dtype::I32,
+            "uint32" => Dtype::U32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One tensor in an executable's interface.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            v.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+        )?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered executable.
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The model-level configuration the artifacts were lowered with.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq_len: usize,
+    pub param_count: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub batch: usize,
+    pub seq: usize,
+    pub use_pallas: bool,
+    pub param_leaves: Vec<TensorSpec>,
+    pub executables: std::collections::BTreeMap<String, ExecutableSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow!("no config"))?;
+        let geti = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let model = ModelInfo {
+            name: cfg
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab_size: geti("vocab_size")?,
+            d_model: geti("d_model")?,
+            n_layers: geti("n_layers")?,
+            n_heads: geti("n_heads")?,
+            max_seq_len: geti("max_seq_len")?,
+            param_count: geti("param_count")?,
+        };
+        let param_leaves = v
+            .get("param_leaves")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("no param_leaves"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut executables = std::collections::BTreeMap::new();
+        for (name, ex) in v
+            .get("executables")
+            .and_then(Json::as_object)
+            .ok_or_else(|| anyhow!("no executables"))?
+        {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                ex.get(key)
+                    .and_then(Json::as_array)
+                    .ok_or_else(|| anyhow!("{name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            executables.insert(
+                name.clone(),
+                ExecutableSpec {
+                    file: dir.join(
+                        ex.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name} no file"))?,
+                    ),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            model,
+            batch: v
+                .get("batch")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("no batch"))?,
+            seq: v
+                .get("seq")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("no seq"))?,
+            use_pallas: v
+                .get("use_pallas")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+            param_leaves,
+            executables,
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no executable '{name}'"))
+    }
+
+    /// Total parameter element count (must match model.param_count).
+    pub fn total_params(&self) -> usize {
+        self.param_leaves.iter().map(TensorSpec::elements).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"name": "tiny", "vocab_size": 256, "d_model": 64,
+                 "n_layers": 2, "n_heads": 4, "d_ff": 128,
+                 "max_seq_len": 64, "param_count": 115008},
+      "batch": 2, "seq": 64, "use_pallas": true,
+      "param_leaves": [
+        {"name": "params/embed", "shape": [256, 64], "dtype": "float32"},
+        {"name": "params/final_norm", "shape": [64], "dtype": "float32"}
+      ],
+      "executables": {
+        "init": {"file": "init.hlo.txt",
+          "inputs": [{"name": "seed", "shape": [], "dtype": "uint32"}],
+          "outputs": [
+            {"name": "params/embed", "shape": [256, 64], "dtype": "float32"},
+            {"name": "params/final_norm", "shape": [64], "dtype": "float32"}
+          ]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.model.name, "tiny");
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.param_leaves.len(), 2);
+        assert_eq!(m.total_params(), 256 * 64 + 64);
+        let init = m.executable("init").unwrap();
+        assert_eq!(init.file, Path::new("/tmp/a/init.hlo.txt"));
+        assert_eq!(init.inputs[0].dtype, Dtype::U32);
+        assert_eq!(init.inputs[0].elements(), 1);
+        assert!(m.executable("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        let bad = SAMPLE.replace("float32", "float64");
+        assert!(Manifest::parse(&bad, Path::new(".")).is_err());
+    }
+}

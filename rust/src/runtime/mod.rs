@@ -1,0 +1,231 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate. This is the only place the Rust side touches XLA —
+//! the coordinator works in terms of `Executable` and `HostTensor`.
+//!
+//! HLO *text* is the interchange format (not serialized HloModuleProto):
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see DESIGN.md and
+//! /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{Dtype, ExecutableSpec, Manifest, TensorSpec};
+
+/// Host-side tensor (f32) with shape — the coordinator's currency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        let n = shape.iter().product::<usize>().max(1);
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(x: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.data).reshape(&self.dims_i64())?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor { shape: dims, data })
+    }
+}
+
+/// Integer tensor (token ids).
+pub fn tokens_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(tokens).reshape(&dims)?)
+}
+
+pub fn u32_scalar(x: u32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// A compiled executable plus its interface spec.
+pub struct Executable {
+    pub name: String,
+    pub spec: ExecutableSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    ///
+    /// Inputs are transferred through `buffer_from_host_literal` +
+    /// `execute_b` rather than the crate's `execute`: the latter's C++
+    /// shim `release()`s the input device buffers without ever freeing
+    /// them, leaking one full input set per call (§Perf #7 — ~55 MB
+    /// per step at 13.8M params, OOM within ~130 steps). With
+    /// `execute_b` the buffers stay owned by Rust and drop here.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        let buffers: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<Result<_, _>>()?;
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outputs = tuple.to_tuple()?;
+        if outputs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                outputs.len()
+            );
+        }
+        Ok(outputs)
+    }
+}
+
+/// PJRT client wrapper; owns compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, name: &str, spec: &ExecutableSpec)
+        -> Result<Executable>
+    {
+        let path = &spec.file;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            name: name.to_string(),
+            spec: spec.clone(),
+            exe,
+            client: self.client.clone(),
+        })
+    }
+}
+
+/// The full set of training-step executables for one model config.
+pub struct ModelBundle {
+    pub manifest: Manifest,
+    pub init: Executable,
+    pub forward: Executable,
+    pub grad_step: Executable,
+    pub apply_update: Executable,
+    pub train_step: Executable,
+}
+
+impl ModelBundle {
+    /// Load every executable in `dir` (an `artifacts/<config>/` folder).
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<ModelBundle> {
+        let manifest = Manifest::load(dir)?;
+        let get = |name: &str| -> Result<Executable> {
+            rt.load(name, manifest.executable(name)?)
+        };
+        Ok(ModelBundle {
+            init: get("init")?,
+            forward: get("forward")?,
+            grad_step: get("grad_step")?,
+            apply_update: get("apply_update")?,
+            train_step: get("train_step")?,
+            manifest,
+        })
+    }
+
+    /// Run `init` and return the parameter leaves as host tensors.
+    pub fn init_params(&self, seed: u32) -> Result<Vec<HostTensor>> {
+        let outs = self.init.run(&[u32_scalar(seed)])?;
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Zero moment buffers shaped like the parameters.
+    pub fn zeros_like_params(&self) -> Vec<HostTensor> {
+        self.manifest
+            .param_leaves
+            .iter()
+            .map(|leaf| HostTensor::zeros(&leaf.shape))
+            .collect()
+    }
+}
+
+/// Default artifact root (overridable with DTSIM_ARTIFACTS).
+pub fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("DTSIM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip() {
+        let t = HostTensor {
+            shape: vec![2, 3],
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        let z = HostTensor::zeros(&[4, 2]);
+        assert_eq!(z.elements(), 8);
+        assert!(z.data.iter().all(|&x| x == 0.0));
+        let s = HostTensor::scalar(7.5);
+        assert_eq!(s.elements(), 1);
+        assert_eq!(s.shape.len(), 0);
+    }
+
+    // Execution-path tests (requiring built artifacts) live in
+    // rust/tests/runtime_integration.rs.
+}

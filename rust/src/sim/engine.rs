@@ -1,0 +1,405 @@
+//! Discrete-event engine with per-device execution streams.
+//!
+//! Mirrors the CUDA execution model the paper measures: each device has
+//! a **compute stream** (CUDA kernels) and two **communication streams**
+//! (NCCL kernels on separate communicators — one for the data-parallel
+//! FSDP collectives, one for model-parallel collectives and pipeline
+//! P2P; distinct communicators run concurrently on real GPUs, and copy
+//! engines let comm overlap compute).
+//!
+//! Events issue in FIFO order per stream; an event starts when its
+//! stream is free AND all dependencies have finished — precisely the
+//! CUDA-stream + event-wait semantics. Exposed communication is then a
+//! *derived* quantity: comm-stream busy time not covered by compute
+//! (matching the paper's Kineto-trace PerfettoSQL query).
+
+use std::collections::HashMap;
+
+pub type EventId = usize;
+
+pub const STREAM_COMPUTE: usize = 0;
+pub const STREAM_COMM_DP: usize = 1;
+pub const STREAM_COMM_MP: usize = 2;
+pub const N_STREAMS: usize = 3;
+
+/// What an event represents (for accounting and trace export).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tag {
+    FwdCompute,
+    BwdCompute,
+    Optimizer,
+    AllGatherParams,
+    ReduceScatterGrads,
+    GradAllReduce,
+    TpAllReduce,
+    CpRingExchange,
+    P2pActivations,
+}
+
+impl Tag {
+    pub fn is_comm(self) -> bool {
+        !matches!(self, Tag::FwdCompute | Tag::BwdCompute | Tag::Optimizer)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tag::FwdCompute => "fwd_compute",
+            Tag::BwdCompute => "bwd_compute",
+            Tag::Optimizer => "optimizer",
+            Tag::AllGatherParams => "fsdp_allgather",
+            Tag::ReduceScatterGrads => "fsdp_reducescatter",
+            Tag::GradAllReduce => "ddp_allreduce",
+            Tag::TpAllReduce => "tp_allreduce",
+            Tag::CpRingExchange => "cp_ring",
+            Tag::P2pActivations => "pp_p2p",
+        }
+    }
+}
+
+/// Dependency list, inline for the common 0/1/2-dep cases (§Perf: the
+/// event graph is allocation-free except for optimizer fan-in events).
+#[derive(Debug, Clone)]
+pub enum Deps {
+    None,
+    One(EventId),
+    Two(EventId, EventId),
+    Many(Vec<EventId>),
+}
+
+impl Deps {
+    fn from_slice(deps: &[EventId]) -> Deps {
+        match deps {
+            [] => Deps::None,
+            [a] => Deps::One(*a),
+            [a, b] => Deps::Two(*a, *b),
+            many => Deps::Many(many.to_vec()),
+        }
+    }
+
+    pub fn for_each(&self, mut f: impl FnMut(EventId)) {
+        match self {
+            Deps::None => {}
+            Deps::One(a) => f(*a),
+            Deps::Two(a, b) => {
+                f(*a);
+                f(*b);
+            }
+            Deps::Many(v) => v.iter().copied().for_each(f),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub device: usize,
+    pub stream: usize,
+    pub dur: f64,
+    pub deps: Deps,
+    pub tag: Tag,
+}
+
+/// Event graph under construction. Events must be pushed in an order
+/// where all dependencies precede the dependent (enforced).
+#[derive(Debug, Default)]
+pub struct Engine {
+    pub events: Vec<Event>,
+    n_devices: usize,
+}
+
+impl Engine {
+    pub fn new(n_devices: usize) -> Engine {
+        Engine { events: Vec::new(), n_devices }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn push(
+        &mut self,
+        device: usize,
+        stream: usize,
+        dur: f64,
+        deps: &[EventId],
+        tag: Tag,
+    ) -> EventId {
+        let id = self.events.len();
+        debug_assert!(device < self.n_devices);
+        debug_assert!(stream < N_STREAMS);
+        debug_assert!(dur >= 0.0, "negative duration");
+        for &d in deps {
+            assert!(d < id, "dependency {d} must precede event {id}");
+        }
+        self.events.push(Event {
+            device,
+            stream,
+            dur,
+            deps: Deps::from_slice(deps),
+            tag,
+        });
+        id
+    }
+
+    /// Execute the event graph; single pass (construction order is a
+    /// valid topological order by the push() invariant).
+    pub fn run(&self) -> Timeline {
+        let mut start = vec![0.0f64; self.events.len()];
+        let mut end = vec![0.0f64; self.events.len()];
+        let mut cursor = vec![[0.0f64; N_STREAMS]; self.n_devices];
+        let mut makespan = 0.0f64;
+        for (id, ev) in self.events.iter().enumerate() {
+            let mut t = cursor[ev.device][ev.stream];
+            ev.deps.for_each(|d| t = t.max(end[d]));
+            start[id] = t;
+            end[id] = t + ev.dur;
+            cursor[ev.device][ev.stream] = end[id];
+            makespan = makespan.max(end[id]);
+        }
+        Timeline { start, end, makespan }
+    }
+}
+
+/// Resolved schedule.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub start: Vec<f64>,
+    pub end: Vec<f64>,
+    pub makespan: f64,
+}
+
+/// Busy/exposed accounting for one device.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    pub compute_busy: f64,
+    /// Wall-clock with at least one comm stream busy (interval union) —
+    /// drives the power model's comm utilization.
+    pub comm_busy: f64,
+    /// Total NCCL kernel execution time (sum over kernels; the paper's
+    /// "communication load" — can exceed comm_busy when the DP and MP
+    /// communicators run concurrently).
+    pub comm_kernel_time: f64,
+    /// Comm time not overlapped by concurrent compute on this device —
+    /// the paper's "exposed communication".
+    pub exposed_comm: f64,
+    /// Time with nothing running anywhere (pipeline bubble / stalls).
+    pub idle: f64,
+    pub span: f64,
+    pub by_tag: HashMap<Tag, f64>,
+}
+
+/// Merge a sorted interval list in place.
+fn merge(mut v: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        if let Some(last) = out.last_mut() {
+            if s <= last.1 + 1e-15 {
+                last.1 = last.1.max(e);
+                continue;
+            }
+        }
+        out.push((s, e));
+    }
+    out
+}
+
+fn total(v: &[(f64, f64)]) -> f64 {
+    v.iter().map(|(s, e)| e - s).sum()
+}
+
+/// Length of `a \ b` (time in a not covered by b). Both merged+sorted.
+fn subtract_len(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let mut len = 0.0;
+    let mut j = 0;
+    for &(s, e) in a {
+        let mut cur = s;
+        while j < b.len() && b[j].1 <= cur {
+            j += 1;
+        }
+        let mut k = j;
+        while cur < e {
+            if k >= b.len() || b[k].0 >= e {
+                len += e - cur;
+                break;
+            }
+            if b[k].0 > cur {
+                len += b[k].0 - cur;
+            }
+            cur = b[k].1.min(e).max(cur);
+            if b[k].1 <= e {
+                k += 1;
+            } else {
+                break;
+            }
+        }
+    }
+    len
+}
+
+impl Timeline {
+    /// Per-device busy/exposed stats over the whole timeline.
+    pub fn device_stats(&self, eng: &Engine) -> Vec<DeviceStats> {
+        let mut comp: Vec<Vec<(f64, f64)>> =
+            vec![Vec::new(); eng.n_devices()];
+        let mut comm: Vec<Vec<(f64, f64)>> =
+            vec![Vec::new(); eng.n_devices()];
+        let mut by_tag: Vec<HashMap<Tag, f64>> =
+            vec![HashMap::new(); eng.n_devices()];
+        for (id, ev) in eng.events.iter().enumerate() {
+            if ev.dur <= 0.0 {
+                continue;
+            }
+            let iv = (self.start[id], self.end[id]);
+            if ev.tag.is_comm() {
+                comm[ev.device].push(iv);
+            } else {
+                comp[ev.device].push(iv);
+            }
+            *by_tag[ev.device].entry(ev.tag).or_insert(0.0) += ev.dur;
+        }
+        (0..eng.n_devices())
+            .map(|d| {
+                let comm_kernel_time: f64 =
+                    comm[d].iter().map(|(s, e)| e - s).sum();
+                let c = merge(std::mem::take(&mut comp[d]));
+                let m = merge(std::mem::take(&mut comm[d]));
+                let compute_busy = total(&c);
+                let comm_busy = total(&m);
+                let exposed = subtract_len(&m, &c);
+                // union = compute + (comm \ compute)
+                let busy_union = compute_busy + exposed;
+                DeviceStats {
+                    compute_busy,
+                    comm_busy,
+                    comm_kernel_time,
+                    exposed_comm: exposed,
+                    idle: (self.makespan - busy_union).max(0.0),
+                    span: self.makespan,
+                    by_tag: std::mem::take(&mut by_tag[d]),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_per_stream() {
+        let mut e = Engine::new(1);
+        let a = e.push(0, STREAM_COMPUTE, 1.0, &[], Tag::FwdCompute);
+        let b = e.push(0, STREAM_COMPUTE, 2.0, &[], Tag::FwdCompute);
+        let t = e.run();
+        assert_eq!(t.start[a], 0.0);
+        assert_eq!(t.start[b], 1.0);
+        assert_eq!(t.makespan, 3.0);
+    }
+
+    #[test]
+    fn streams_run_concurrently() {
+        let mut e = Engine::new(1);
+        e.push(0, STREAM_COMPUTE, 3.0, &[], Tag::FwdCompute);
+        e.push(0, STREAM_COMM_DP, 2.0, &[], Tag::AllGatherParams);
+        let t = e.run();
+        assert_eq!(t.makespan, 3.0);
+    }
+
+    #[test]
+    fn dependencies_respected_across_devices() {
+        let mut e = Engine::new(2);
+        let a = e.push(0, STREAM_COMPUTE, 1.5, &[], Tag::FwdCompute);
+        let p = e.push(0, STREAM_COMM_MP, 0.5, &[a], Tag::P2pActivations);
+        let b = e.push(1, STREAM_COMPUTE, 1.0, &[p], Tag::FwdCompute);
+        let t = e.run();
+        assert_eq!(t.start[b], 2.0);
+        assert_eq!(t.makespan, 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede")]
+    fn forward_dependency_rejected() {
+        let mut e = Engine::new(1);
+        e.push(0, STREAM_COMPUTE, 1.0, &[5], Tag::FwdCompute);
+    }
+
+    #[test]
+    fn fully_overlapped_comm_has_zero_exposure() {
+        let mut e = Engine::new(1);
+        e.push(0, STREAM_COMPUTE, 4.0, &[], Tag::FwdCompute);
+        e.push(0, STREAM_COMM_DP, 2.0, &[], Tag::AllGatherParams);
+        let t = e.run();
+        let s = &t.device_stats(&e)[0];
+        assert_eq!(s.exposed_comm, 0.0);
+        assert_eq!(s.compute_busy, 4.0);
+        assert_eq!(s.comm_busy, 2.0);
+        assert_eq!(s.idle, 0.0);
+    }
+
+    #[test]
+    fn unoverlapped_comm_fully_exposed() {
+        let mut e = Engine::new(1);
+        let c = e.push(0, STREAM_COMM_DP, 2.0, &[], Tag::AllGatherParams);
+        e.push(0, STREAM_COMPUTE, 4.0, &[c], Tag::FwdCompute);
+        let t = e.run();
+        let s = &t.device_stats(&e)[0];
+        assert!((s.exposed_comm - 2.0).abs() < 1e-12);
+        assert_eq!(s.idle, 0.0);
+        assert_eq!(t.makespan, 6.0);
+    }
+
+    #[test]
+    fn partial_overlap_counts_partially() {
+        let mut e = Engine::new(1);
+        // compute [0,2); comm [0,5) -> exposed = 3
+        e.push(0, STREAM_COMPUTE, 2.0, &[], Tag::FwdCompute);
+        e.push(0, STREAM_COMM_DP, 5.0, &[], Tag::AllGatherParams);
+        let t = e.run();
+        let s = &t.device_stats(&e)[0];
+        assert!((s.exposed_comm - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_comm_streams_both_counted() {
+        let mut e = Engine::new(1);
+        e.push(0, STREAM_COMM_DP, 2.0, &[], Tag::AllGatherParams);
+        e.push(0, STREAM_COMM_MP, 3.0, &[], Tag::TpAllReduce);
+        let t = e.run();
+        let s = &t.device_stats(&e)[0];
+        // Kernel-time sums over both communicators; busy time is the
+        // interval union.
+        assert_eq!(s.comm_kernel_time, 5.0);
+        assert_eq!(s.comm_busy, 3.0);
+        // overlapping [0,2) counted once in exposure (union is [0,3)).
+        assert!((s.exposed_comm - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_tag_accounting() {
+        let mut e = Engine::new(1);
+        e.push(0, STREAM_COMM_DP, 2.0, &[], Tag::AllGatherParams);
+        e.push(0, STREAM_COMM_DP, 1.0, &[], Tag::ReduceScatterGrads);
+        e.push(0, STREAM_COMPUTE, 1.5, &[], Tag::FwdCompute);
+        let t = e.run();
+        let s = &t.device_stats(&e)[0];
+        assert_eq!(s.by_tag[&Tag::AllGatherParams], 2.0);
+        assert_eq!(s.by_tag[&Tag::ReduceScatterGrads], 1.0);
+        assert_eq!(s.by_tag[&Tag::FwdCompute], 1.5);
+    }
+
+    #[test]
+    fn subtract_len_edge_cases() {
+        // a fully inside b
+        assert_eq!(subtract_len(&[(1.0, 2.0)], &[(0.0, 3.0)]), 0.0);
+        // b fully inside a
+        assert!((subtract_len(&[(0.0, 3.0)], &[(1.0, 2.0)]) - 2.0).abs()
+                < 1e-12);
+        // disjoint
+        assert_eq!(subtract_len(&[(0.0, 1.0)], &[(2.0, 3.0)]), 1.0);
+        // multiple b spans
+        let a = [(0.0, 10.0)];
+        let b = [(1.0, 2.0), (4.0, 6.0)];
+        assert!((subtract_len(&a, &b) - 7.0).abs() < 1e-12);
+    }
+}

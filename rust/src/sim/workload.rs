@@ -1,0 +1,163 @@
+//! Compute-kernel timing model: translates per-layer FLOPs into kernel
+//! execution time on a GPU generation, including the occupancy loss on
+//! small workloads and the per-kernel launch/framework overhead that
+//! dominate strong scaling (§4.2: "insufficient computation allocated
+//! to each accelerator").
+
+use crate::hardware::GpuSpec;
+use crate::model::TransformerArch;
+use crate::parallelism::ParallelPlan;
+
+/// Approximate CUDA kernels launched per transformer layer (fwd).
+pub const KERNELS_PER_LAYER_FWD: f64 = 12.0;
+/// Backward launches roughly 1.5x the forward count.
+pub const KERNELS_PER_LAYER_BWD: f64 = 18.0;
+
+/// FLOPs at which a kernel reaches half of its asymptotic efficiency —
+/// expressed as seconds-of-peak (so it scales across generations: faster
+/// chips need bigger kernels to stay busy).
+const HALF_EFF_SECONDS: f64 = 2.5e-5;
+
+/// Achievable fraction of peak for a batch of kernels totalling `flops`
+/// spread over `n_kernels` launches.
+pub fn kernel_efficiency(spec: &GpuSpec, flops: f64, n_kernels: f64) -> f64 {
+    let per_kernel = flops / n_kernels.max(1.0);
+    let half = spec.peak_flops * HALF_EFF_SECONDS;
+    spec.kernel_base_mfu * per_kernel / (per_kernel + half)
+}
+
+/// Seconds of compute for `flops` over `n_kernels` launches.
+pub fn compute_time(spec: &GpuSpec, flops: f64, n_kernels: f64) -> f64 {
+    if flops <= 0.0 {
+        return 0.0;
+    }
+    let eff = kernel_efficiency(spec, flops, n_kernels);
+    flops / (spec.peak_flops * eff) + n_kernels * spec.launch_overhead_s
+}
+
+/// Per-microbatch, per-layer forward compute time under `plan`.
+/// TP divides the matmul work; CP divides the tokens.
+pub fn fwd_layer_time(
+    arch: &TransformerArch,
+    spec: &GpuSpec,
+    plan: &ParallelPlan,
+    micro_batch: usize,
+    seq_len: usize,
+) -> f64 {
+    let tokens = micro_batch as f64 * seq_len as f64 / plan.cp as f64;
+    let flops = arch.fwd_flops_per_layer(tokens, seq_len as f64)
+        / plan.tp as f64;
+    compute_time(spec, flops, KERNELS_PER_LAYER_FWD)
+}
+
+/// Per-microbatch, per-layer backward compute time (2x forward FLOPs).
+pub fn bwd_layer_time(
+    arch: &TransformerArch,
+    spec: &GpuSpec,
+    plan: &ParallelPlan,
+    micro_batch: usize,
+    seq_len: usize,
+) -> f64 {
+    let tokens = micro_batch as f64 * seq_len as f64 / plan.cp as f64;
+    let flops = 2.0 * arch.fwd_flops_per_layer(tokens, seq_len as f64)
+        / plan.tp as f64;
+    compute_time(spec, flops, KERNELS_PER_LAYER_BWD)
+}
+
+/// Embedding + LM head forward time (first/last pipeline stage).
+pub fn head_time(
+    arch: &TransformerArch,
+    spec: &GpuSpec,
+    plan: &ParallelPlan,
+    micro_batch: usize,
+    seq_len: usize,
+    backward: bool,
+) -> f64 {
+    let tokens = micro_batch as f64 * seq_len as f64 / plan.cp as f64;
+    let mult = if backward { 2.0 } else { 1.0 };
+    let flops = mult * arch.fwd_flops_head(tokens) / plan.tp as f64;
+    compute_time(spec, flops, 3.0)
+}
+
+/// Optimizer step over this rank's FSDP shard — HBM-bandwidth-bound
+/// (reads p, g, m, v; writes p, m, v; fp32 state + bf16 copies).
+pub fn optimizer_time(
+    arch: &TransformerArch,
+    spec: &GpuSpec,
+    plan: &ParallelPlan,
+) -> f64 {
+    let shard = arch.params() / plan.world_size() as f64;
+    let bytes = shard * 34.0; // 12B state r/w + grads + master/working copies
+    bytes / spec.hbm_bw + 10.0 * spec.launch_overhead_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::specs::{A100, H100};
+    use crate::model::LLAMA_7B;
+
+    fn dp_plan() -> ParallelPlan {
+        ParallelPlan::data_parallel(8)
+    }
+
+    #[test]
+    fn big_kernels_reach_base_mfu() {
+        // 7B layer at b=2, s=4096 is ~3.3 TFLOP — deep in the efficient
+        // regime on H100.
+        let tokens = 2.0 * 4096.0;
+        let flops = LLAMA_7B.fwd_flops_per_layer(tokens, 4096.0);
+        let eff = kernel_efficiency(&H100, flops, KERNELS_PER_LAYER_FWD);
+        assert!(eff > 0.9 * H100.kernel_base_mfu, "{eff}");
+    }
+
+    #[test]
+    fn small_kernels_lose_efficiency() {
+        let big = kernel_efficiency(&H100, 1e13, 12.0);
+        let small = kernel_efficiency(&H100, 1e10, 12.0);
+        assert!(small < 0.4 * big, "{small} vs {big}");
+    }
+
+    #[test]
+    fn efficiency_threshold_scales_with_peak() {
+        // The same small kernel wastes MORE of an H100 than an A100 —
+        // the paper's §4.4 asymmetric-improvement effect.
+        let f = 5e10;
+        let h = kernel_efficiency(&H100, f, 12.0) / H100.kernel_base_mfu;
+        let a = kernel_efficiency(&A100, f, 12.0) / A100.kernel_base_mfu;
+        assert!(h < a, "h100 rel eff {h} should be < a100 {a}");
+    }
+
+    #[test]
+    fn tp_divides_layer_time_sublinearly() {
+        let t1 = fwd_layer_time(&LLAMA_7B, &H100, &dp_plan(), 2, 4096);
+        let plan_tp8 = ParallelPlan::new(1, 8, 1, 1);
+        let t8 = fwd_layer_time(&LLAMA_7B, &H100, &plan_tp8, 2, 4096);
+        assert!(t8 < t1);
+        assert!(t8 > t1 / 8.0, "efficiency loss must make tp sublinear");
+    }
+
+    #[test]
+    fn bwd_roughly_twice_fwd() {
+        let f = fwd_layer_time(&LLAMA_7B, &H100, &dp_plan(), 2, 4096);
+        let b = bwd_layer_time(&LLAMA_7B, &H100, &dp_plan(), 2, 4096);
+        let ratio = b / f;
+        assert!(ratio > 1.7 && ratio < 2.3, "{ratio}");
+    }
+
+    #[test]
+    fn compute_time_monotone_in_flops() {
+        let mut prev = 0.0;
+        for e in 8..14 {
+            let t = compute_time(&H100, 10f64.powi(e), 12.0);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn optimizer_time_small_but_nonzero() {
+        let t = optimizer_time(&LLAMA_7B, &H100, &dp_plan());
+        assert!(t > 0.0 && t < 0.05, "{t}");
+    }
+}

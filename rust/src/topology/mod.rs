@@ -1,0 +1,176 @@
+//! Cluster topology: DGX nodes on an InfiniBand fabric, GPUs fully
+//! connected intra-node via NVLink/NVSwitch (second/third generation for
+//! A100/H100 — paper Appendix B).
+//!
+//! Ranks map to devices contiguously: rank r lives on node r / G, local
+//! slot r % G (G = GPUs per node). Parallelism groups are regular strided
+//! sets over this mapping (`RankGroup`), which is exactly how
+//! Megatron-style launchers assign tensor/pipeline/data groups.
+
+use crate::hardware::{Generation, NodeSpec};
+
+/// A homogeneous cluster of DGX nodes.
+#[derive(Debug, Clone, Copy)]
+pub struct Cluster {
+    pub nodes: usize,
+    pub node: NodeSpec,
+}
+
+impl Cluster {
+    pub fn new(gen: Generation, nodes: usize) -> Cluster {
+        assert!(nodes >= 1, "cluster needs at least one node");
+        Cluster { nodes, node: gen.node() }
+    }
+
+    /// Convenience: cluster sized to hold exactly `gpus` accelerators.
+    pub fn with_gpus(gen: Generation, gpus: usize) -> Cluster {
+        let g = gen.node().gpus_per_node;
+        assert!(gpus % g == 0 && gpus > 0,
+                "gpu count {gpus} must be a positive multiple of {g}");
+        Cluster::new(gen, gpus / g)
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.node.gpus_per_node
+    }
+
+    pub fn gpus_per_node(&self) -> usize {
+        self.node.gpus_per_node
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.node.gpus_per_node
+    }
+}
+
+/// A regular strided communication group: ranks
+/// {base + i·stride | 0 ≤ i < size}. All parallelism groups produced by
+/// `parallelism::ParallelPlan` have this shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankGroup {
+    pub base: usize,
+    pub size: usize,
+    pub stride: usize,
+}
+
+impl RankGroup {
+    pub fn ranks(&self) -> Vec<usize> {
+        (0..self.size).map(|i| self.base + i * self.stride).collect()
+    }
+
+    pub fn contains(&self, rank: usize) -> bool {
+        rank >= self.base
+            && (rank - self.base) % self.stride == 0
+            && (rank - self.base) / self.stride < self.size
+    }
+
+    /// Topology placement of the group on `cluster`.
+    pub fn placement(&self, cluster: &Cluster) -> GroupPlacement {
+        let g = cluster.gpus_per_node();
+        let mut nodes = std::collections::BTreeMap::new();
+        for r in self.ranks() {
+            *nodes.entry(r / g).or_insert(0usize) += 1;
+        }
+        let node_count = nodes.len();
+        let max_ranks_per_node =
+            nodes.values().copied().max().unwrap_or(1);
+        GroupPlacement {
+            size: self.size,
+            nodes: node_count,
+            ranks_per_node: max_ranks_per_node,
+            crosses_nodes: node_count > 1,
+        }
+    }
+}
+
+/// How a communication group maps onto the physical cluster — the inputs
+/// to the collective cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupPlacement {
+    /// Number of ranks in the group.
+    pub size: usize,
+    /// Number of distinct nodes the group touches.
+    pub nodes: usize,
+    /// Max group members sharing one node (they share that node's IB).
+    pub ranks_per_node: usize,
+    pub crosses_nodes: bool,
+}
+
+impl GroupPlacement {
+    /// Placement for a group of `size` ranks laid out with `stride`,
+    /// without materializing rank lists (hot path in the planner).
+    pub fn strided(cluster: &Cluster, size: usize, stride: usize) -> Self {
+        RankGroup { base: 0, size, stride }.placement(cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h100(nodes: usize) -> Cluster {
+        Cluster::new(Generation::H100, nodes)
+    }
+
+    #[test]
+    fn world_size_and_node_of() {
+        let c = h100(4);
+        assert_eq!(c.world_size(), 32);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(7), 0);
+        assert_eq!(c.node_of(8), 1);
+        assert_eq!(c.node_of(31), 3);
+    }
+
+    #[test]
+    fn with_gpus_roundtrip() {
+        let c = Cluster::with_gpus(Generation::H100, 2048);
+        assert_eq!(c.nodes, 256);
+        assert_eq!(c.world_size(), 2048);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_gpus_rejects_partial_nodes() {
+        let _ = Cluster::with_gpus(Generation::H100, 12);
+    }
+
+    #[test]
+    fn contiguous_group_stays_on_node() {
+        let c = h100(4);
+        // TP group of 8, stride 1 — one full node.
+        let p = GroupPlacement::strided(&c, 8, 1);
+        assert!(!p.crosses_nodes);
+        assert_eq!(p.nodes, 1);
+        assert_eq!(p.ranks_per_node, 8);
+    }
+
+    #[test]
+    fn wide_tp_group_crosses_nodes() {
+        let c = h100(4);
+        // TP of 16 with stride 1 spans 2 nodes (paper §4.3: "substantial
+        // increases in exposed communication for ... larger than 8").
+        let p = GroupPlacement::strided(&c, 16, 1);
+        assert!(p.crosses_nodes);
+        assert_eq!(p.nodes, 2);
+        assert_eq!(p.ranks_per_node, 8);
+    }
+
+    #[test]
+    fn strided_dp_group_spreads_across_nodes() {
+        let c = h100(4);
+        // DP group with stride 8 (tp*pp=8): one rank per node.
+        let p = GroupPlacement::strided(&c, 4, 8);
+        assert_eq!(p.nodes, 4);
+        assert_eq!(p.ranks_per_node, 1);
+    }
+
+    #[test]
+    fn group_membership() {
+        let g = RankGroup { base: 2, size: 3, stride: 4 };
+        assert_eq!(g.ranks(), vec![2, 6, 10]);
+        assert!(g.contains(6));
+        assert!(!g.contains(4));
+        assert!(!g.contains(14));
+    }
+}

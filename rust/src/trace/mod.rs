@@ -1,0 +1,87 @@
+//! Chrome-trace (chrome://tracing / Perfetto) export of simulated
+//! timelines — the analogue of the Kineto traces the paper queries with
+//! PerfettoSQL (Appendix B).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::sim::{Engine, Timeline};
+use crate::util::json::escape;
+
+/// Serialize an executed event graph as a Chrome trace JSON file.
+/// Devices map to `pid`s, streams to `tid`s; durations are microseconds.
+pub fn write_chrome_trace<P: AsRef<Path>>(
+    path: P,
+    eng: &Engine,
+    tl: &Timeline,
+) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{\"traceEvents\":[")?;
+    let mut first = true;
+    for (id, ev) in eng.events.iter().enumerate() {
+        if ev.dur <= 0.0 {
+            continue;
+        }
+        if !first {
+            writeln!(f, ",")?;
+        }
+        first = false;
+        write!(
+            f,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\
+             \"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{}}}",
+            escape(ev.tag.name()),
+            if ev.tag.is_comm() { "comm" } else { "compute" },
+            tl.start[id] * 1e6,
+            ev.dur * 1e6,
+            ev.device,
+            ev.stream,
+        )?;
+    }
+    writeln!(f, "\n],\"displayTimeUnit\":\"ms\"}}")?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Generation;
+    use crate::model::LLAMA_7B;
+    use crate::parallelism::ParallelPlan;
+    use crate::sim::{build_engine, SimConfig};
+    use crate::topology::Cluster;
+    use crate::util::json::Json;
+
+    #[test]
+    fn trace_is_valid_json_with_events() {
+        let cluster = Cluster::new(Generation::H100, 4);
+        let cfg = SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::new(8, 1, 4, 1), 32, 1, 4096);
+        let eng = build_engine(&cfg);
+        let tl = eng.run();
+        let dir = std::env::temp_dir().join("dtsim_trace_test");
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &eng, &tl).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).expect("trace must be valid JSON");
+        let events = v.get("traceEvents").unwrap().as_array().unwrap();
+        assert!(events.len() > 100);
+        // All four pipeline stages appear as pids.
+        let pids: std::collections::BTreeSet<usize> = events
+            .iter()
+            .map(|e| e.get("pid").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(pids.len(), 4);
+        // Events carry both categories.
+        let cats: std::collections::BTreeSet<String> = events
+            .iter()
+            .map(|e| e.get("cat").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(cats.contains("compute"));
+        assert!(cats.contains("comm"));
+    }
+}

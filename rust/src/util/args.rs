@@ -1,0 +1,115 @@
+//! Minimal CLI argument parser (no clap on this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".into());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects an integer, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects a number, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = parse("sim pos1 pos2 --nodes 32 --gen=h100 --trace");
+        assert_eq!(a.positional, vec!["sim", "pos1", "pos2"]);
+        assert_eq!(a.usize_or("nodes", 0), 32);
+        assert_eq!(a.get("gen"), Some("h100"));
+        assert!(a.has("trace"));
+        assert!(a.bool_or("trace", false));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("nodes", 4), 4);
+        assert_eq!(a.f64_or("lr", 0.1), 0.1);
+        assert_eq!(a.get_or("gen", "h100"), "h100");
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("--flag cmd");
+        // "--flag cmd" binds cmd as the value (documented behaviour).
+        assert_eq!(a.get("flag"), Some("cmd"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("--delta=-1.5");
+        assert_eq!(a.f64_or("delta", 0.0), -1.5);
+    }
+}

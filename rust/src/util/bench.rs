@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (criterion is not vendored on this image).
+//!
+//! Provides warmup, calibrated iteration counts, outlier-robust summary
+//! statistics, and a stable text output format consumed by
+//! `bench_output.txt`. Used by every target in `rust/benches/`.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats::{percentile, Summary};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>12}  ± {:>10}  p50 {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the batch size so each sample takes
+/// ~10ms, collecting ~30 samples (bounded by `max_total_s`).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, 30, 3.0, &mut f)
+}
+
+/// Quick variant for expensive end-to-end benches.
+pub fn bench_quick<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, 10, 5.0, &mut f)
+}
+
+fn bench_with<F: FnMut()>(
+    name: &str,
+    target_samples: usize,
+    max_total_s: f64,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup + calibration: find batch so one sample ~5-10ms.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let batch = ((5e-3 / once).ceil() as u64).clamp(1, 1_000_000);
+
+    let mut samples = Vec::with_capacity(target_samples);
+    let started = Instant::now();
+    while samples.len() < target_samples
+        && started.elapsed().as_secs_f64() < max_total_s
+    {
+        let t = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+    }
+    if samples.is_empty() {
+        samples.push(once * 1e9);
+    }
+
+    let mut s = Summary::new();
+    samples.iter().for_each(|&x| s.push(x));
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: batch * samples.len() as u64,
+        mean_ns: s.mean(),
+        stddev_ns: s.stddev(),
+        p50_ns: percentile(&samples, 50.0),
+        p95_ns: percentile(&samples, 95.0),
+    };
+    result.report();
+    result
+}
+
+/// Bench group header (mirrors criterion's output grouping).
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let r = bench("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(bb(i));
+            }
+            bb(x);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.p50_ns <= r.p95_ns * 1.001);
+    }
+}

@@ -1,0 +1,87 @@
+//! Tiny CSV writer used by the figure-reproduction harness (`report`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(
+        path: P,
+        header: &[&str],
+    ) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.cols,
+            "csv row width mismatch (expected {})",
+            self.cols
+        );
+        let escaped: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        writeln!(self.w, "{}", escaped.join(","))
+    }
+
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Format an f64 with enough precision for plotting.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e6 || x.abs() < 1e-3 {
+        format!("{x:.6e}")
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("dtsim_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        w.row(&["2".into(), "q\"z".into()]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2,\"q\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_enforced() {
+        let dir = std::env::temp_dir().join("dtsim_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w =
+            CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Self-contained utility substrates.
+//!
+//! This image has no network access and only the `xla` crate's dependency
+//! closure vendored, so the usual ecosystem crates (clap, serde_json,
+//! criterion, proptest, rand) are unavailable. Per the reproduction
+//! ground rules ("build every substrate"), the pieces we need are
+//! implemented here from scratch: a deterministic RNG, summary
+//! statistics, a JSON parser (for the AOT manifests), a CLI argument
+//! parser, a micro-benchmark harness, and a property-testing helper.
+
+pub mod args;
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

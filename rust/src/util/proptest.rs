@@ -1,0 +1,60 @@
+//! Property-testing harness (proptest is not vendored on this image).
+//!
+//! `check` runs a property over `cases` seeded random inputs; on failure
+//! it reports the failing seed so the case can be replayed exactly. Used
+//! by `rust/tests/proptest_invariants.rs` and module-level invariants.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`. Panics with the
+/// failing seed and debug representation on first counterexample.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: u64, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check_seeded(name, 0xD15C0, cases, gen, prop)
+}
+
+pub fn check_seeded<T: std::fmt::Debug, G, P>(
+    name: &str,
+    seed: u64,
+    cases: u64,
+    gen: G,
+    prop: P,
+) where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case.wrapping_mul(0x9E3779B9));
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay seed {case_seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 200, |r| {
+            (r.next_below(1000) as i64, r.next_below(1000) as i64)
+        }, |&(a, b)| {
+            if a + b == b + a { Ok(()) } else { Err("no".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false'")]
+    fn failing_property_reports_seed() {
+        check("always-false", 10, |r| r.next_u64(), |_| Err("bad".into()));
+    }
+}

@@ -1,0 +1,309 @@
+//! Directional reproduction of every quantitative claim in the paper.
+//!
+//! The simulator substitutes for the authors' 2048-H100 testbed, so we
+//! assert the *shape* of each result — who wins, by roughly what
+//! factor, where crossovers fall — with tolerance bands around the
+//! paper's reported numbers (see EXPERIMENTS.md for exact deltas).
+
+use dtsim::hardware::Generation;
+use dtsim::metrics::{self, Metrics};
+use dtsim::model::{self, LLAMA_7B};
+use dtsim::parallelism::ParallelPlan;
+use dtsim::planner::{self, SweepRequest};
+use dtsim::sim::SimConfig;
+use dtsim::topology::Cluster;
+
+fn weak(gen: Generation, nodes: usize) -> Metrics {
+    let cluster = Cluster::new(gen, nodes);
+    let w = cluster.world_size();
+    metrics::evaluate(&SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::data_parallel(w), 2 * w, 2,
+        4096))
+}
+
+/// §4.1: scaling 128 → 2048 GPUs drops TFLOPS/WPS by 37.22%.
+#[test]
+fn weak_scaling_drop_128_to_2048() {
+    let m128 = weak(Generation::H100, 16);
+    let m2048 = weak(Generation::H100, 256);
+    let drop = 1.0 - m2048.per_gpu_wps / m128.per_gpu_wps;
+    assert!(drop > 0.25 && drop < 0.60,
+            "drop {:.3} should be near the paper's 0.3722", drop);
+}
+
+/// §4.1: power falls only 5.87% (658 W → 620 W) despite the idle GPUs.
+#[test]
+fn power_nearly_constant_under_comm_boundedness() {
+    let m128 = weak(Generation::H100, 16);
+    let m2048 = weak(Generation::H100, 256);
+    assert!(m128.power_w > 640.0 && m128.power_w < 680.0,
+            "busy power {:.0} should be ~658", m128.power_w);
+    let drop = 1.0 - m2048.power_w / m128.power_w;
+    assert!(drop > 0.0 && drop < 0.10,
+            "power drop {:.3} should be small like the paper's 0.0587",
+            drop);
+}
+
+/// §4.1 + Fig. 1: >30% power-efficiency loss at scale.
+#[test]
+fn fig1_power_efficiency_reduction_over_30_pct() {
+    let small = weak(Generation::H100, 4);
+    let big = weak(Generation::H100, 256);
+    let loss = 1.0 - big.wps_per_watt / small.wps_per_watt;
+    assert!(loss > 0.30, "power-efficiency loss {loss:.3} must exceed \
+                          the paper's 30%");
+}
+
+/// §4.1: global throughput still rises with scale (Gustafson) even as
+/// per-GPU throughput falls.
+#[test]
+fn weak_scaling_global_up_local_down() {
+    let mut prev_global = 0.0;
+    let mut prev_local = f64::INFINITY;
+    for nodes in [1usize, 8, 64, 256] {
+        let m = weak(Generation::H100, nodes);
+        assert!(m.global_wps > prev_global);
+        assert!(m.per_gpu_wps < prev_local || nodes == 1);
+        prev_global = m.global_wps;
+        prev_local = m.per_gpu_wps;
+    }
+}
+
+/// §5: exposed communication becomes unavoidable beyond ~128 GPUs; it
+/// is minimal at small scale.
+#[test]
+fn exposure_crossover_near_128_gpus() {
+    let small = weak(Generation::H100, 2); // 16 GPUs
+    assert!(small.exposed_comm < 0.10 * small.compute_time,
+            "16 GPUs should hide comm: exposed {:.1} ms vs compute \
+             {:.1} ms", small.exposed_comm * 1e3,
+            small.compute_time * 1e3);
+    let big = weak(Generation::H100, 256); // 2048 GPUs
+    assert!(big.exposed_comm > 0.30 * big.compute_time,
+            "2048 GPUs must be heavily exposed");
+}
+
+/// §5 headline: at 2048 GPUs, TP 2-4 yields a large WPS gain for ~30 W
+/// more per GPU (paper: +52.60%, +30 W).
+#[test]
+fn tp_wins_at_2048_gpus() {
+    let cluster = Cluster::new(Generation::H100, 256);
+    let w = cluster.world_size();
+    let baseline = weak(Generation::H100, 256);
+    let best_tp: Metrics = [2usize, 4]
+        .iter()
+        .map(|&tp| {
+            metrics::evaluate(&SimConfig::fsdp(
+                LLAMA_7B, cluster, ParallelPlan::new(w / tp, tp, 1, 1),
+                2 * (w / tp), 2, 4096))
+        })
+        .max_by(|a, b| a.global_wps.partial_cmp(&b.global_wps).unwrap())
+        .unwrap();
+    let gain = best_tp.global_wps / baseline.global_wps - 1.0;
+    assert!(gain > 0.20 && gain < 0.90,
+            "TP gain {:.3} should be near the paper's +0.526", gain);
+    let extra_w = best_tp.power_w - baseline.power_w;
+    assert!(extra_w > 5.0 && extra_w < 60.0,
+            "extra power {extra_w:.0} W should be near the paper's +30");
+}
+
+/// §4.2 / Fig. 5: strong scaling collapses MFU from ~40% to <25%, and
+/// speedup is strongly sublinear.
+#[test]
+fn strong_scaling_mfu_collapse() {
+    let best = |nodes| {
+        planner::best(&SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, nodes), 32, 4096))
+            .unwrap()
+            .metrics
+    };
+    let s2 = best(2);
+    let s32 = best(32);
+    assert!(s2.mfu > 0.35 && s2.mfu < 0.55,
+            "2-node MFU {:.3} should be near the paper's ~0.40", s2.mfu);
+    assert!(s32.mfu < 0.25,
+            "32-node MFU {:.3} should collapse like the paper's <0.15",
+            s32.mfu);
+    let speedup = s32.global_wps / s2.global_wps;
+    assert!(speedup < 10.0, "16x GPUs must yield <10x speedup, got \
+                             {speedup:.1}x");
+}
+
+/// §4.3 / Fig. 6: at 256 GPUs with gbs 512, some model-parallel plan
+/// beats pure FSDP on throughput AND power efficiency.
+#[test]
+fn fig6_model_parallelism_beats_pure_fsdp() {
+    let req = SweepRequest::fsdp(
+        LLAMA_7B, Cluster::new(Generation::H100, 32), 512, 4096);
+    let outcomes = planner::sweep(&req);
+    let best = &outcomes[0];
+    let baseline = outcomes
+        .iter()
+        .find(|o| o.plan.model_parallel() == 1)
+        .unwrap();
+    assert!(best.plan.model_parallel() > 1);
+    assert!(best.plan.tp <= 4 || best.plan.pp <= 4,
+            "winner should be a SMALL degree of MP, got {}", best.plan);
+    assert!(best.metrics.global_wps > baseline.metrics.global_wps);
+    assert!(best.metrics.wps_per_watt > baseline.metrics.wps_per_watt);
+    assert!(best.metrics.exposed_comm < baseline.metrics.exposed_comm);
+}
+
+/// §4.3: model parallelism has a limit — very large MP degrees
+/// (crossing nodes) perform worse than small ones.
+#[test]
+fn excess_model_parallelism_hurts() {
+    let req = SweepRequest::fsdp(
+        LLAMA_7B, Cluster::new(Generation::H100, 32), 512, 4096);
+    let outcomes = planner::sweep(&req);
+    let small_mp = outcomes.iter()
+        .filter(|o| o.plan.model_parallel() <= 4)
+        .map(|o| o.metrics.global_wps)
+        .fold(0.0f64, f64::max);
+    let big_mp = outcomes.iter()
+        .filter(|o| o.plan.model_parallel() >= 16)
+        .map(|o| o.metrics.global_wps)
+        .fold(0.0f64, f64::max);
+    assert!(small_mp > big_mp,
+            "tp/pp beyond the node must lose: {small_mp} vs {big_mp}");
+}
+
+/// §4.4: identical workload has substantially lower MFU on H100 than
+/// A100, and H100's optimum still beats A100's absolute throughput.
+#[test]
+fn generation_comparison_a100_vs_h100() {
+    let opt = |gen| {
+        planner::best(&SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(gen, 32), 512, 4096))
+            .unwrap()
+            .metrics
+    };
+    let a = opt(Generation::A100);
+    let h = opt(Generation::H100);
+    let mfu_drop = a.mfu - h.mfu;
+    assert!(mfu_drop > 0.08 && mfu_drop < 0.35,
+            "MFU drop {mfu_drop:.3} should be near the paper's ~0.19 \
+             (59.67% → 40.77%)");
+    assert!(h.global_wps > a.global_wps,
+            "H100 must still win in absolute terms");
+}
+
+/// §4.5 / Fig. 8: communication grows with model size; TP reduces
+/// exposure at every size.
+#[test]
+fn model_size_scaling() {
+    let mut prev_comm = 0.0;
+    for name in ["1b", "7b", "13b"] {
+        let arch = *model::by_name(name).unwrap();
+        let cluster = Cluster::new(Generation::H100, 32);
+        let w = cluster.world_size();
+        let base = metrics::evaluate(&SimConfig::fsdp(
+            arch, cluster, ParallelPlan::data_parallel(w), 256, 1,
+            4096));
+        assert!(base.comm_time > prev_comm,
+                "{name}: comm must grow with model size");
+        prev_comm = base.comm_time;
+        let tp2 = metrics::evaluate(&SimConfig::fsdp(
+            arch, cluster, ParallelPlan::new(w / 2, 2, 1, 1), 256, 1,
+            4096));
+        assert!(tp2.exposed_comm < base.exposed_comm + 1e-9,
+                "{name}: tp2 must not increase exposure");
+    }
+}
+
+/// §4.6 / Fig. 9: longer context = better overlap, higher MFU and
+/// power efficiency.
+#[test]
+fn context_length_improves_overlap() {
+    let run = |seq: usize| {
+        let cluster = Cluster::new(Generation::H100, 32);
+        let w = cluster.world_size();
+        metrics::evaluate(&SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::data_parallel(w), w, 1,
+            seq))
+    };
+    let short = run(2048);
+    let long = run(16384);
+    assert!(long.mfu > short.mfu);
+    assert!(long.wps_per_watt > short.wps_per_watt);
+    assert!(long.exposed_comm / long.compute_time
+            < short.exposed_comm / short.compute_time);
+}
+
+/// Appendix E / Fig. 12: at 4k sequence length, context parallelism is
+/// sub-optimal versus tensor parallelism.
+#[test]
+fn fig12_cp_suboptimal_at_4k() {
+    let cluster = Cluster::new(Generation::H100, 32);
+    let w = cluster.world_size();
+    let run = |tp: usize, cp: usize| {
+        let mp = tp * cp;
+        metrics::evaluate(&SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::new(w / mp, tp, 1, cp),
+            256, 1, 4096))
+    };
+    let tp2 = run(2, 1);
+    let cp2 = run(1, 2);
+    assert!(tp2.global_wps > cp2.global_wps,
+            "tp2 {} must beat cp2 {}", tp2.global_wps, cp2.global_wps);
+}
+
+/// Appendix F / Fig. 13: on V100 model parallelism still helps, and
+/// A100 improves utilization over V100.
+#[test]
+fn fig13_v100() {
+    let req = SweepRequest::fsdp(
+        LLAMA_7B, Cluster::new(Generation::V100, 32), 256, 4096);
+    let outcomes = planner::sweep(&req);
+    let best = &outcomes[0];
+    assert!(best.plan.model_parallel() > 1,
+            "MP should win on V100 at 32 nodes, got {}", best.plan);
+
+    let v = outcomes[0].metrics.mfu;
+    let a = planner::best(&SweepRequest::fsdp(
+        LLAMA_7B, Cluster::new(Generation::A100, 32), 256, 4096))
+        .unwrap()
+        .metrics
+        .mfu;
+    assert!(a > v, "A100 MFU {a:.3} must beat V100 {v:.3} (App. F)");
+}
+
+/// §5: DDP's AllReduce scales better than FSDP's AllGather — vanilla
+/// DDP (where it fits) spends less total time in NCCL at scale.
+#[test]
+fn ddp_collectives_scale_better() {
+    use dtsim::sim::{simulate, Sharding};
+    let cluster = Cluster::new(Generation::H100, 64);
+    let w = cluster.world_size();
+    let fsdp = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::data_parallel(w), 2 * w, 2,
+        4096);
+    let mut ddp = fsdp;
+    ddp.sharding = Sharding::Ddp;
+    let rf = simulate(&fsdp);
+    let rd = simulate(&ddp);
+    assert!(rd.comm_kernel_time < rf.comm_kernel_time,
+            "DDP comm {:.3} should undercut FSDP {:.3} at scale",
+            rd.comm_kernel_time, rf.comm_kernel_time);
+}
+
+/// Appendix D / Fig. 11: pretraining-scale strong scaling shows
+/// declining per-GPU throughput for both 7B and 70B.
+#[test]
+fn fig11_pretraining_scale_diminishing_returns() {
+    for arch_name in ["7b", "70b"] {
+        let arch = *model::by_name(arch_name).unwrap();
+        let best = |nodes| {
+            planner::best(&SweepRequest::fsdp(
+                arch, Cluster::new(Generation::H100, nodes), 1024,
+                4096))
+                .unwrap()
+                .metrics
+        };
+        let s64 = best(64);
+        let s256 = best(256);
+        assert!(s256.per_gpu_wps < s64.per_gpu_wps,
+                "{arch_name}: per-GPU WPS must fall 512→2048 GPUs");
+        assert!(s256.mfu < s64.mfu);
+    }
+}

@@ -1,0 +1,300 @@
+//! Property-based invariants over randomly generated configurations,
+//! using the in-repo property-test harness (`util::proptest`).
+//!
+//! Invariants covered:
+//!   * parallelism plans partition the world exactly (routing);
+//!   * the ring all-reduce equals the arithmetic mean (state);
+//!   * simulated timelines never violate accounting identities
+//!     (batching/schedule);
+//!   * collective costs are monotone in size and respect busbw bounds;
+//!   * memory accounting is monotone in sharding degree;
+//!   * checkpoint serialization round-trips arbitrary tensors.
+
+use dtsim::collectives::{collective_time, Collective};
+use dtsim::coordinator::checkpoint::{self, Checkpoint};
+use dtsim::coordinator::{ring_allreduce, ring_allreduce_threaded};
+use dtsim::hardware::Generation;
+use dtsim::memory;
+use dtsim::model::LLAMA_7B;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::runtime::HostTensor;
+use dtsim::sim::{simulate, SimConfig};
+use dtsim::topology::{Cluster, GroupPlacement, RankGroup};
+use dtsim::util::proptest::check;
+use dtsim::util::rng::Rng;
+
+/// Random power-of-two in [1, max] (inclusive).
+fn pow2(rng: &mut Rng, max: usize) -> usize {
+    let bits = (max as f64).log2() as u64;
+    1usize << rng.next_below(bits + 1)
+}
+
+#[test]
+fn prop_plan_groups_partition_world() {
+    check("plan-partition", 200, |rng| {
+        let tp = pow2(rng, 8);
+        let pp = pow2(rng, 8);
+        let cp = pow2(rng, 4);
+        let dp = pow2(rng, 32);
+        ParallelPlan::new(dp, tp, pp, cp)
+    }, |plan| {
+        let world = plan.world_size();
+        // Reconstruct every rank from (dp, pp, cp, tp) coordinates:
+        // each rank must appear exactly once.
+        let mut seen = vec![false; world];
+        for d in 0..plan.dp {
+            for p in 0..plan.pp {
+                for c in 0..plan.cp {
+                    for t in 0..plan.tp {
+                        let r = d * (plan.pp * plan.cp * plan.tp)
+                            + p * (plan.cp * plan.tp)
+                            + c * plan.tp
+                            + t;
+                        if seen[r] {
+                            return Err(format!("rank {r} duplicated"));
+                        }
+                        seen[r] = true;
+                    }
+                }
+            }
+        }
+        if seen.iter().all(|&x| x) {
+            Ok(())
+        } else {
+            Err("world not covered".into())
+        }
+    });
+}
+
+#[test]
+fn prop_rank_group_strided_membership() {
+    check("rankgroup-membership", 300, |rng| {
+        let base = rng.next_below(64) as usize;
+        let size = 1 + rng.next_below(16) as usize;
+        let stride = 1 + rng.next_below(8) as usize;
+        (base, size, stride)
+    }, |&(base, size, stride)| {
+        let g = RankGroup { base, size, stride };
+        let ranks = g.ranks();
+        if ranks.len() != size {
+            return Err("wrong size".into());
+        }
+        for r in &ranks {
+            if !g.contains(*r) {
+                return Err(format!("{r} not contained"));
+            }
+        }
+        // Non-members between strides are rejected.
+        if stride > 1 && !g.contains(base + 1) {
+            Ok(())
+        } else if stride == 1 {
+            Ok(())
+        } else {
+            Err("stride-1 offset wrongly contained".into())
+        }
+    });
+}
+
+#[test]
+fn prop_ring_allreduce_is_mean() {
+    check("ring-allreduce-mean", 60, |rng| {
+        let n = 2 + rng.next_below(7) as usize;
+        let len = 1 + rng.next_below(512) as usize;
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len)
+                 .map(|_| rng.next_gaussian() as f32 * 10.0)
+                 .collect())
+            .collect();
+        bufs
+    }, |bufs| {
+        let n = bufs.len() as f32;
+        let len = bufs[0].len();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / n)
+            .collect();
+        let mut seq = bufs.clone();
+        ring_allreduce(&mut seq);
+        for b in &seq {
+            for (x, e) in b.iter().zip(&expect) {
+                if (x - e).abs() > 1e-3 {
+                    return Err(format!("seq {x} != {e}"));
+                }
+            }
+        }
+        let thr = ring_allreduce_threaded(bufs.clone());
+        for (a, b) in seq.iter().zip(&thr) {
+            for (x, y) in a.iter().zip(b) {
+                if (x - y).abs() > 1e-6 {
+                    return Err("threaded != sequential".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_accounting_identities() {
+    check("sim-accounting", 40, |rng| {
+        let nodes = pow2(rng, 64);
+        let cluster = Cluster::new(Generation::H100, nodes);
+        let world = cluster.world_size();
+        let tp = pow2(rng, 8);
+        let pp = pow2(rng, 4);
+        let mp = tp * pp;
+        if world % mp != 0 || 32 % pp != 0 {
+            return None;
+        }
+        let plan = ParallelPlan::new(world / mp, tp, pp, 1);
+        let mbs = pow2(rng, 2);
+        let m = 1 + rng.next_below(4) as usize;
+        Some(SimConfig::fsdp(LLAMA_7B, cluster, plan,
+                             plan.dp * mbs * m, mbs, 4096))
+    }, |cfg| {
+        let Some(cfg) = cfg else { return Ok(()) };
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+        let r = simulate(cfg);
+        if r.iter_time <= 0.0 {
+            return Err("non-positive iter".into());
+        }
+        if r.compute_busy > r.iter_time * (1.0 + 1e-9) {
+            return Err("compute exceeds wall".into());
+        }
+        if r.exposed_comm > r.comm_busy + 1e-9 {
+            return Err("exposed exceeds comm busy".into());
+        }
+        let recomposed = r.compute_busy + r.exposed_comm + r.idle;
+        if (recomposed - r.iter_time).abs() > 1e-6 * r.iter_time {
+            return Err(format!(
+                "identity broken: {recomposed} vs {}", r.iter_time));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_collective_monotone_in_bytes_and_bounded_busbw() {
+    check("collective-monotone", 100, |rng| {
+        let nodes = pow2(rng, 256);
+        let bytes = 10f64.powf(3.0 + rng.next_f64() * 6.0);
+        let coll = match rng.next_below(4) {
+            0 => Collective::AllReduce,
+            1 => Collective::AllGather,
+            2 => Collective::ReduceScatter,
+            _ => Collective::Broadcast,
+        };
+        (nodes, bytes, coll)
+    }, |&(nodes, bytes, coll)| {
+        let c = Cluster::new(Generation::H100, nodes);
+        let place = GroupPlacement::strided(&c, c.world_size(), 1);
+        let a = collective_time(coll, bytes, &c, &place);
+        let b = collective_time(coll, bytes * 2.0, &c, &place);
+        if b.time_s < a.time_s {
+            return Err("not monotone in bytes".into());
+        }
+        // busbw can never exceed the fastest link's datasheet rate
+        // (x2 for allreduce's busbw convention).
+        let cap = c.node.spec().nvlink_bw
+            * if coll == Collective::AllReduce { 2.0 } else { 1.0 };
+        if a.busbw > cap * (1.0 + 1e-9) {
+            return Err(format!("busbw {} above cap {cap}", a.busbw));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_monotone_in_dp() {
+    check("memory-monotone", 100, |rng| {
+        let dp = pow2(rng, 512).max(2);
+        let mbs = pow2(rng, 4);
+        (dp, mbs)
+    }, |&(dp, mbs)| {
+        let a = memory::per_gpu_memory(
+            &LLAMA_7B, &ParallelPlan::data_parallel(dp), mbs, 4096, 1);
+        let b = memory::per_gpu_memory(
+            &LLAMA_7B, &ParallelPlan::data_parallel(dp * 2), mbs, 4096,
+            1);
+        if b.total() < a.total() {
+            Ok(())
+        } else {
+            Err(format!("memory not decreasing: {} -> {}",
+                        a.total(), b.total()))
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_tensors() {
+    let dir = std::env::temp_dir().join("dtsim_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    check("checkpoint-roundtrip", 25, |rng| {
+        let leaves = 1 + rng.next_below(6) as usize;
+        let tensors: Vec<HostTensor> = (0..leaves)
+            .map(|_| {
+                let rank = rng.next_below(3) as usize + 1;
+                let shape: Vec<usize> = (0..rank)
+                    .map(|_| 1 + rng.next_below(8) as usize)
+                    .collect();
+                let n: usize = shape.iter().product();
+                HostTensor {
+                    shape,
+                    data: (0..n)
+                        .map(|_| rng.next_gaussian() as f32)
+                        .collect(),
+                }
+            })
+            .collect();
+        (rng.next_u64(), tensors)
+    }, |(seed, tensors)| {
+        let path = dir.join(format!("{seed}.ckpt"));
+        let ck = Checkpoint {
+            step: *seed,
+            params: tensors.clone(),
+            m: tensors.clone(),
+            v: tensors.clone(),
+        };
+        checkpoint::save(&path, &ck).map_err(|e| e.to_string())?;
+        let back = checkpoint::load(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        if back.step != *seed || back.params != *tensors {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_1f1b_no_negative_idle_and_bubble_bound() {
+    check("1f1b-bubble", 30, |rng| {
+        let pp = [2usize, 4, 8][rng.next_below(3) as usize];
+        let m = 1 + rng.next_below(8) as usize;
+        (pp, m)
+    }, |&(pp, m)| {
+        let nodes = pp; // one stage per node for clarity
+        let cluster = Cluster::new(Generation::H100, nodes);
+        let world = cluster.world_size();
+        let plan = ParallelPlan::new(world / pp, 1, pp, 1);
+        if 32 % pp != 0 {
+            return Ok(());
+        }
+        let cfg = SimConfig::fsdp(LLAMA_7B, cluster, plan,
+                                  plan.dp * m, 1, 4096);
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+        let r = simulate(&cfg);
+        if r.idle < -1e-9 {
+            return Err("negative idle".into());
+        }
+        // 1F1B bubble fraction is bounded by (p-1)/(m+p-1) plus comm
+        // slack; sanity: idle can't exceed 95% of the iteration.
+        if r.idle > 0.95 * r.iter_time {
+            return Err(format!("absurd bubble: {} of {}", r.idle,
+                               r.iter_time));
+        }
+        Ok(())
+    });
+}
