@@ -1,0 +1,54 @@
+//! Bench: StudyRunner parallel speedup and cache effectiveness on the
+//! Fig. 6 parallelization sweep (the figure harness's dominant cost).
+
+use dtsim::hardware::Generation;
+use dtsim::model::LLAMA_7B;
+use dtsim::study::{PlanAxis, Study, StudyRunner};
+use dtsim::util::bench::{bb, bench, bench_quick, group};
+
+fn fig6_study() -> Study {
+    Study::builder("bench-fig6")
+        .arch(LLAMA_7B)
+        .generation(Generation::H100)
+        .nodes([32])
+        .plans(PlanAxis::Sweep { with_cp: false })
+        .global_batches([512])
+        .micro_batch_divisors()
+        .memory_cap(0.94)
+        .build()
+}
+
+fn main() {
+    group("study runner: fig6 sweep (256 GPUs, gbs 512)");
+
+    let study = fig6_study();
+    let points = study.expand();
+    println!("grid points after constraints: {}", points.len());
+
+    bench("expand/fig6_grid", || {
+        bb(fig6_study().expand());
+    });
+
+    bench_quick("run/sequential", || {
+        let mut runner = StudyRunner::sequential();
+        bb(runner.run(bb(&study)));
+    });
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    for threads in [2usize, 4, cores] {
+        bench_quick(&format!("run/threads{threads}"), || {
+            let mut runner = StudyRunner::new(threads);
+            bb(runner.run(bb(&study)));
+        });
+    }
+
+    // Fully-warmed cache: the cost of re-rendering a figure once every
+    // configuration has been simulated.
+    let mut warmed = StudyRunner::auto();
+    warmed.run(&study);
+    bench("run/cache_hit", || {
+        bb(warmed.run(bb(&study)));
+    });
+}

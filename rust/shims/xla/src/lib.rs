@@ -1,0 +1,264 @@
+//! Type-level stand-in for the `xla` crate (xla-rs bindings to
+//! xla_extension / PJRT).
+//!
+//! The simulator half of `dtsim` has no XLA dependency at all; only the
+//! real-training runtime (`dtsim::runtime` / `dtsim::coordinator`)
+//! touches PJRT. This shim mirrors the exact API surface those modules
+//! use, so the whole crate (and its tests, examples, and benches)
+//! builds and runs on machines without the XLA toolchain:
+//!
+//! * Host-side [`Literal`] values are fully functional (they are just
+//!   shaped vectors), so tensor round-trip tests pass.
+//! * Compilation/execution entry points ([`PjRtClient::compile`],
+//!   [`PjRtLoadedExecutable::execute_b`], buffer transfer) return a
+//!   clean "PJRT unavailable in this build" error at runtime.
+//!
+//! Pointing the `xla` path dependency in `rust/Cargo.toml` at the real
+//! crate restores actual execution; no `dtsim` source changes needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT/XLA is not available in this build (dtsim was \
+         linked against the in-tree `xla` shim; point the `xla` path \
+         dependency at the real xla-rs crate to enable execution)"
+    )))
+}
+
+/// Element storage for [`Literal`]; one variant per supported dtype.
+/// Public only because [`NativeType`] mentions it; not part of the
+/// mirrored xla-rs API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Rust scalar types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(v: Vec<Self>) -> Data {
+                Data::$variant(v)
+            }
+            fn unwrap(d: &Data) -> Option<Vec<Self>> {
+                match d {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, I32);
+native!(i64, I64);
+native!(u32, U32);
+
+/// A host-side shaped tensor (xla-rs `Literal`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![v]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({n} elements) from {} elements",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error("literal dtype mismatch in to_vec".into()))
+    }
+
+    /// Decompose a tuple literal. The shim never produces tuples (they
+    /// only come back from execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Dimensions of an array-shaped literal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT client handle. Construction succeeds (it is just a handle) so
+/// artifact-path errors surface with their proper context; any device
+/// interaction errors out.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        let _ = (device, literal);
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let _ = computation;
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = args;
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Parsed HLO module handle.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        // Surface missing-file errors faithfully; parsing itself needs XLA.
+        std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("{path}: {e}")))?;
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation handle.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        let _ = proto;
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let s = Literal::scalar(7u32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.to_vec::<u32>().unwrap(), vec![7]);
+        assert!(s.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn execution_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub");
+        let err = client.compile(&XlaComputation).unwrap_err();
+        assert!(err.to_string().contains("PJRT/XLA is not available"));
+        let err = HloModuleProto::from_text_file("/nonexistent/x.hlo").unwrap_err();
+        assert!(err.to_string().contains("/nonexistent/x.hlo"));
+    }
+}

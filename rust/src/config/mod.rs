@@ -67,6 +67,7 @@ impl RunConfig {
     /// ```
     pub fn from_toml_str(text: &str) -> Result<RunConfig, String> {
         let doc = toml::parse(text)?;
+        validate_keys(&doc)?;
         let arch_name = doc.get_str("model", "arch")
             .ok_or("missing model.arch")?;
         let arch = *model::by_name(&arch_name)
@@ -93,15 +94,9 @@ impl RunConfig {
             doc.get_int("batch", "micro").unwrap_or(1) as usize;
         let seq_len =
             doc.get_int("model", "seq_len").unwrap_or(4096) as usize;
-        let sharding = match doc
-            .get_str("parallelism", "sharding")
-            .unwrap_or_else(|| "fsdp".into())
-            .as_str()
-        {
-            "fsdp" => Sharding::Fsdp,
-            "ddp" => Sharding::Ddp,
-            other => return Err(format!("unknown sharding '{other}'")),
-        };
+        let sharding = parse_sharding(
+            &doc.get_str("parallelism", "sharding")
+                .unwrap_or_else(|| "fsdp".into()))?;
         let rc = RunConfig { arch, gen, nodes, plan, global_batch,
                              micro_batch, seq_len, sharding };
         rc.sim().validate()?;
@@ -112,6 +107,79 @@ impl RunConfig {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read {path}: {e}"))?;
         Self::from_toml_str(&text)
+    }
+
+    /// Serialize back to the TOML subset `from_toml_str` accepts; the
+    /// round trip reproduces the same `SimConfig`.
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[model]\narch = \"{}\"\nseq_len = {}\n\n\
+             [cluster]\ngeneration = \"{}\"\nnodes = {}\n\n\
+             [parallelism]\ntp = {}\npp = {}\ncp = {}\n\
+             sharding = \"{}\"\n\n\
+             [batch]\nglobal = {}\nmicro = {}\n",
+            self.arch.name,
+            self.seq_len,
+            self.gen.to_string().to_lowercase(),
+            self.nodes,
+            self.plan.tp,
+            self.plan.pp,
+            self.plan.cp,
+            self.sharding,
+            self.global_batch,
+            self.micro_batch,
+        )
+    }
+}
+
+/// Recognized sections and keys — anything else is a config typo and
+/// rejected rather than silently ignored.
+const KNOWN_KEYS: &[(&str, &[&str])] = &[
+    ("model", &["arch", "seq_len"]),
+    ("cluster", &["generation", "nodes"]),
+    ("parallelism", &["tp", "pp", "cp", "sharding"]),
+    ("batch", &["global", "micro"]),
+];
+
+fn validate_keys(doc: &toml::Document) -> Result<(), String> {
+    for section in doc.sections() {
+        if section.is_empty() {
+            let stray = doc.keys("").join(", ");
+            return Err(format!("keys outside any section: {stray}"));
+        }
+        let Some((_, known)) = KNOWN_KEYS
+            .iter()
+            .find(|(name, _)| *name == section.as_str())
+        else {
+            return Err(format!("unknown section [{section}]"));
+        };
+        for key in doc.keys(section) {
+            if !known.contains(&key) {
+                return Err(format!(
+                    "unknown key '{key}' in [{section}] (known: {})",
+                    known.join(", ")));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse a sharding spec ("fsdp", "ddp", "hsdp:G") — the single
+/// parser behind TOML configs and the CLI; the inverse is
+/// `Sharding`'s `Display` impl.
+pub fn parse_sharding(s: &str) -> Result<Sharding, String> {
+    match s {
+        "fsdp" => Ok(Sharding::Fsdp),
+        "ddp" => Ok(Sharding::Ddp),
+        other => {
+            if let Some(group) = other.strip_prefix("hsdp:") {
+                return group
+                    .parse()
+                    .map(|group| Sharding::Hsdp { group })
+                    .map_err(|_| format!("bad hsdp group '{group}'"));
+            }
+            Err(format!("unknown sharding '{other}'"))
+        }
     }
 }
 
@@ -216,5 +284,57 @@ micro = 2
                 |e| panic!("scenario {name} invalid: {e}"));
         }
         assert!(scenario("nope").is_none());
+    }
+
+    #[test]
+    fn unknown_sections_and_keys_rejected() {
+        let bad_section = format!("{EXAMPLE}\n[modell]\ntypo = 1\n");
+        let err = RunConfig::from_toml_str(&bad_section).unwrap_err();
+        assert!(err.contains("unknown section"), "{err}");
+
+        let bad_key = EXAMPLE.replace("nodes = 32", "node_count = 32");
+        let err = RunConfig::from_toml_str(&bad_key).unwrap_err();
+        assert!(err.contains("unknown key 'node_count'"), "{err}");
+        assert!(err.contains("generation, nodes"), "{err}");
+
+        let stray = format!("arch = \"llama-7b\"\n{EXAMPLE}");
+        let err = RunConfig::from_toml_str(&stray).unwrap_err();
+        assert!(err.contains("outside any section"), "{err}");
+    }
+
+    #[test]
+    fn malformed_toml_surfaces_parser_errors() {
+        assert!(RunConfig::from_toml_str("[model\narch = \"x\"").is_err());
+        assert!(RunConfig::from_toml_str("[model]\narch llama").is_err());
+        assert!(RunConfig::from_toml_str("[model]\narch = \"open").is_err());
+    }
+
+    #[test]
+    fn hsdp_sharding_roundtrips() {
+        let text = EXAMPLE.replace(
+            "sharding = \"fsdp\"", "sharding = \"hsdp:8\"");
+        let rc = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(rc.sharding, Sharding::Hsdp { group: 8 });
+        let back = RunConfig::from_toml_str(&rc.to_toml()).unwrap();
+        assert_eq!(back.sharding, Sharding::Hsdp { group: 8 });
+        assert!(RunConfig::from_toml_str(
+            &EXAMPLE.replace("\"fsdp\"", "\"hsdp:zero\"")).is_err());
+        assert!(RunConfig::from_toml_str(
+            &EXAMPLE.replace("\"fsdp\"", "\"zero3\"")).is_err());
+    }
+
+    #[test]
+    fn every_preset_roundtrips_through_toml() {
+        for name in ["weak-small", "weak-large", "strong-2n",
+                     "strong-32n", "fig6-best", "a100-32n", "v100-32n"] {
+            let rc = scenario(name).unwrap();
+            let text = rc.to_toml();
+            let back = RunConfig::from_toml_str(&text).unwrap_or_else(
+                |e| panic!("{name}: reparse failed: {e}\n{text}"));
+            // The reparsed config must describe the identical workload.
+            assert_eq!(format!("{:?}", back.sim()),
+                       format!("{:?}", rc.sim()),
+                       "{name} drifted through TOML round-trip");
+        }
     }
 }

@@ -55,6 +55,14 @@ impl Document {
     pub fn sections(&self) -> impl Iterator<Item = &String> {
         self.sections.keys()
     }
+
+    /// Keys present in one section (empty if the section is absent).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
 }
 
 pub fn parse(text: &str) -> Result<Document, String> {
@@ -170,5 +178,33 @@ mod tests {
         let doc = parse("[s]\ni = 3\nf = 3.5").unwrap();
         assert_eq!(doc.get_float("s", "i").unwrap(), 3.0);
         assert!(doc.get_int("s", "f").is_none());
+    }
+
+    #[test]
+    fn keys_enumerate_section_contents() {
+        let doc = parse("[a]\nx = 1\ny = 2\n[b]").unwrap();
+        let mut keys = doc.keys("a");
+        keys.sort_unstable();
+        assert_eq!(keys, vec!["x", "y"]);
+        assert!(doc.keys("b").is_empty());
+        assert!(doc.keys("missing").is_empty());
+    }
+
+    #[test]
+    fn malformed_sections_rejected() {
+        assert!(parse("[]").is_ok()); // empty name parses; semantic
+                                      // validation is the caller's job
+        assert!(parse("[half").is_err());
+        assert!(parse("[s]\nkey").is_err());
+        assert!(parse("[s]\nkey = ").is_err());
+        assert!(parse("[s]\nkey = \"open").is_err());
+        assert!(parse("[s]\nkey = 1.2.3").is_err());
+    }
+
+    #[test]
+    fn top_level_keys_land_in_anonymous_section() {
+        let doc = parse("stray = 1\n[s]\nk = 2").unwrap();
+        assert_eq!(doc.get_int("", "stray"), Some(1));
+        assert_eq!(doc.keys(""), vec!["stray"]);
     }
 }

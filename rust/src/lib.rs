@@ -1,15 +1,62 @@
 //! `dtsim` — reproduction of *Hardware Scaling Trends and Diminishing
 //! Returns in Large-Scale Distributed Training* (Fernandez et al., 2024).
 //!
-//! The crate has two halves (see DESIGN.md):
+//! The crate has three layers (see DESIGN.md):
 //!
 //! * A **cluster/collective/training simulator** (`hardware`, `topology`,
 //!   `collectives`, `model`, `parallelism`, `memory`, `power`, `sim`,
-//!   `metrics`, `planner`) that regenerates every table and figure of the
-//!   paper via `report`.
+//!   `metrics`, `planner`) that models one optimizer step of FSDP +
+//!   tensor/pipeline/context-parallel training on DGX clusters and
+//!   derives the paper's metrics (throughput, MFU, exposed
+//!   communication, power).
+//! * The **Study experiment API** (`study`, `report`) — the crate's
+//!   primary experiment surface. A [`study::Study`] declares a sweep
+//!   grid (arch × generation × nodes × plan × sharding × batch shape ×
+//!   seq len) plus feasibility constraints; a [`study::StudyRunner`]
+//!   expands it, deduplicates repeated configurations by config hash,
+//!   and simulates the rest across scoped worker threads; registered
+//!   [`study::Scenario`]s (every paper figure, plus user-defined ones)
+//!   render results into tables emitted through CSV/JSON/console
+//!   [`study::Sink`]s. `dtsim repro` and `dtsim study` both run on it.
 //! * A **real three-layer training stack** (`runtime`, `coordinator`)
 //!   that loads AOT-compiled JAX/Pallas HLO artifacts through PJRT and
 //!   runs actual data-parallel training with a Rust ring all-reduce.
+//!   (Built against the in-tree `xla` shim by default; point the path
+//!   dependency at the real xla-rs crate to execute artifacts.)
+//!
+//! # Study quickstart
+//!
+//! Declare a sweep, run it in parallel, rank it, and emit the result:
+//!
+//! ```ignore
+//! use dtsim::hardware::Generation;
+//! use dtsim::model::LLAMA_7B;
+//! use dtsim::study::{Column, CsvSink, PlanAxis, Sink, Study, StudyRunner};
+//!
+//! let study = Study::builder("my-sweep")
+//!     .title("7B parallelization sweep at 256 GPUs")
+//!     .arch(LLAMA_7B)
+//!     .generation(Generation::H100)
+//!     .nodes([32])
+//!     .plans(PlanAxis::Sweep { with_cp: false })
+//!     .global_batches([512])
+//!     .micro_batch_divisors()     // every divisor of the local batch
+//!     .memory_cap(0.94)           // drop plans that overflow HBM
+//!     .build();
+//!
+//! let mut runner = StudyRunner::auto();   // one worker per core
+//! let mut result = runner.run(&study);
+//! result.sort_by_wps();
+//! let table = result
+//!     .table(&[Column::Plan, Column::Mbs, Column::GlobalWps, Column::Mfu])
+//!     .with_chart(2);
+//! CsvSink::new("reports").emit(&table)?;
+//! ```
+//!
+//! Named experiments implement [`study::Scenario`] and register in a
+//! [`study::Registry`] (the paper's figures live in `report::figures`);
+//! `cargo run -- study <name>` runs one end-to-end. See
+//! `examples/study_api.rs` for a custom scenario.
 //!
 //! Python is build-time only; the binary is self-contained once
 //! `make artifacts` has run.
@@ -27,6 +74,7 @@ pub mod power;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod study;
 pub mod topology;
 pub mod trace;
 pub mod util;

@@ -3,10 +3,11 @@
 //! Subcommands:
 //!   simulate   simulate one training configuration
 //!   sweep      planner sweep over parallelization strategies
+//!   study      run a registered scenario or an ad-hoc declarative grid
 //!   repro      regenerate paper tables/figures (reports/*.csv)
 //!   collectives  collective cost model exploration
 //!   train      real data-parallel training over AOT artifacts
-//!   scenario   run a named paper scenario
+//!   scenario   print metrics for a named config preset
 //!   trace      export a chrome://tracing timeline for a config
 
 use std::path::{Path, PathBuf};
@@ -23,7 +24,11 @@ use dtsim::parallelism::ParallelPlan;
 use dtsim::planner::{self, SweepRequest};
 use dtsim::report;
 use dtsim::runtime::artifacts_root;
-use dtsim::sim::{build_engine, SimConfig};
+use dtsim::sim::{build_engine, Sharding, SimConfig};
+use dtsim::study::{
+    Column, ConsoleSink, CsvSink, JsonSink, PlanAxis, Sink, Study,
+    StudyRunner,
+};
 use dtsim::topology::{Cluster, GroupPlacement};
 use dtsim::trace::write_chrome_trace;
 use dtsim::util::args::Args;
@@ -37,6 +42,14 @@ USAGE:
                    [--ddp] [--config run.toml]
   dtsim sweep      [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512]
                    [--seq 4096] [--cp] [--top 15]
+  dtsim study      <name> [--out reports] [--threads N] [--json]
+  dtsim study      --list
+  dtsim study      --grid [--arch 7b,13b] [--gen h100,a100]
+                   [--nodes 4,32] [--plans sweep|sweep-cp|dp|tp2,tp4pp2]
+                   [--gbs 512,1024 | --lbs 2] [--mbs divisors|1,2,4]
+                   [--seq 4096] [--sharding fsdp,ddp,hsdp:8]
+                   [--cap 0.94] [--top N] [--name my-grid]
+                   [--out DIR] [--json] [--threads N]
   dtsim repro      [fig1|fig2|...|fig14|table1|headline|all]
                    [--out reports]
   dtsim collectives [--gen h100] [--op allgather] [--mb 1024]
@@ -53,6 +66,7 @@ fn main() {
     let result = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "study" => cmd_study(&args),
         "repro" => cmd_repro(&args),
         "collectives" => cmd_collectives(&args),
         "train" => cmd_train(&args),
@@ -162,6 +176,177 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dtsim study` — registered scenarios and ad-hoc declarative grids.
+fn cmd_study(args: &Args) -> Result<()> {
+    let reg = report::registry();
+    if args.has("list") {
+        println!("registered scenarios:");
+        for s in reg.iter() {
+            println!("  {:<10} {}", s.name(), s.title());
+        }
+        return Ok(());
+    }
+
+    let mut runner = match args.get("threads") {
+        Some(_) => StudyRunner::new(args.usize_or("threads", 1)),
+        None => StudyRunner::auto(),
+    };
+    let out = PathBuf::from(args.get_or("out", "reports"));
+
+    if args.has("grid") {
+        let study = study_from_args(args)?;
+        let mut res = runner.run(&study);
+        res.sort_by_wps();
+        if let Some(top) = args.get("top") {
+            res.truncate(top.parse().map_err(|_| anyhow!("bad --top"))?);
+        }
+        let table = res.table(&[
+            Column::Arch, Column::Gen, Column::Nodes, Column::Plan,
+            Column::ShardingKind, Column::Mbs, Column::Gbs,
+            Column::SeqLen, Column::GlobalWps, Column::PerGpuWps,
+            Column::Mfu, Column::ExposedMs, Column::WpsPerWatt,
+            Column::MemGb,
+        ]);
+        ConsoleSink.emit(&table)?;
+        CsvSink::new(&out).emit(&table)?;
+        if args.has("json") {
+            JsonSink::new(&out).emit(&table)?;
+        }
+        let (evaluated, requested) = runner.stats();
+        println!(
+            "\n{} grid points, {} simulated ({} deduplicated) on {} \
+             threads; output in {}",
+            requested, evaluated, requested - evaluated,
+            runner.threads(), out.display());
+        return Ok(());
+    }
+
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!(
+            "study name required (or --grid / --list)"))?;
+    let tables = report::run_in(&reg, &mut runner, name, &out)?;
+    if args.has("json") {
+        let mut json = JsonSink::new(&out);
+        for t in &tables {
+            json.emit(t)?;
+        }
+    }
+    let (evaluated, requested) = runner.stats();
+    println!(
+        "\n{requested} grid points, {evaluated} simulated on {} \
+         threads; output in {}",
+        runner.threads(), out.display());
+    Ok(())
+}
+
+/// Build a Study from `--grid` axis flags.
+fn study_from_args(args: &Args) -> Result<Study> {
+    let list = |key: &str, default: &str| -> Vec<String> {
+        args.get_or(key, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    let usizes = |key: &str, default: &str| -> Result<Vec<usize>> {
+        list(key, default)
+            .iter()
+            .map(|s| s.parse::<usize>()
+                .map_err(|_| anyhow!("--{key}: '{s}' is not an integer")))
+            .collect()
+    };
+
+    let mut archs = Vec::new();
+    for name in list("arch", "7b") {
+        archs.push(*model::by_name(&name)
+            .ok_or_else(|| anyhow!("unknown --arch '{name}'"))?);
+    }
+    let mut gens = Vec::new();
+    for name in list("gen", "h100") {
+        gens.push(Generation::parse(&name)
+            .ok_or_else(|| anyhow!("unknown --gen '{name}'"))?);
+    }
+    let mut shardings = Vec::new();
+    for name in list("sharding", "fsdp") {
+        shardings.push(parse_sharding(&name)?);
+    }
+
+    let plans = match args.get_or("plans", "sweep").as_str() {
+        "sweep" => PlanAxis::Sweep { with_cp: false },
+        "sweep-cp" => PlanAxis::Sweep { with_cp: true },
+        "dp" => PlanAxis::DataParallel,
+        spec => PlanAxis::Shapes(
+            spec.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| parse_plan_shape(s)
+                    .ok_or_else(|| anyhow!(
+                        "--plans: '{s}' is not sweep|sweep-cp|dp or a \
+                         tpXppYcpZ shape")))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+    };
+
+    let mut b = Study::builder(&args.get_or("name", "grid"))
+        .title("ad-hoc study grid")
+        .archs(archs)
+        .generations(gens)
+        .nodes(usizes("nodes", "32")?)
+        .plans(plans)
+        .seq_lens(usizes("seq", "4096")?)
+        .shardings(shardings);
+
+    b = if args.has("lbs") {
+        b.batch_per_replica(args.usize_or("lbs", 2))
+    } else {
+        b.global_batches(usizes("gbs", "512")?)
+    };
+    b = match args.get_or("mbs", "divisors").as_str() {
+        "divisors" => b.micro_batch_divisors(),
+        _ => b.micro_batches(usizes("mbs", "2")?),
+    };
+    let cap = args.f64_or("cap", 0.94);
+    if cap > 0.0 {
+        b = b.memory_cap(cap);
+    }
+    b.try_build().map_err(anyhow::Error::msg)
+}
+
+fn parse_sharding(s: &str) -> Result<Sharding> {
+    dtsim::config::parse_sharding(s)
+        .map_err(|e| anyhow!("--sharding: {e}"))
+}
+
+/// Parse a "tp2pp4cp1"-style plan shape (missing degrees default to 1).
+fn parse_plan_shape(s: &str) -> Option<(usize, usize, usize)> {
+    if s.is_empty() {
+        return None;
+    }
+    let (mut tp, mut pp, mut cp) = (1usize, 1usize, 1usize);
+    let mut rest = s;
+    while !rest.is_empty() {
+        let (target, tail) = if let Some(t) = rest.strip_prefix("tp") {
+            (&mut tp, t)
+        } else if let Some(t) = rest.strip_prefix("pp") {
+            (&mut pp, t)
+        } else if let Some(t) = rest.strip_prefix("cp") {
+            (&mut cp, t)
+        } else {
+            return None;
+        };
+        let end = tail
+            .char_indices()
+            .find(|(_, c)| !c.is_ascii_digit())
+            .map(|(i, _)| i)
+            .unwrap_or(tail.len());
+        *target = tail[..end].parse().ok()?;
+        rest = &tail[end..];
+    }
+    Some((tp, pp, cp))
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get_or("out", "reports"));
     let which = args
@@ -255,4 +440,47 @@ fn cmd_trace(args: &Args) -> Result<()> {
     println!("wrote {} events to {out} (open in chrome://tracing)",
              eng.events.len());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shapes_parse() {
+        assert_eq!(parse_plan_shape("tp2"), Some((2, 1, 1)));
+        assert_eq!(parse_plan_shape("tp2pp4"), Some((2, 4, 1)));
+        assert_eq!(parse_plan_shape("tp2pp4cp2"), Some((2, 4, 2)));
+        assert_eq!(parse_plan_shape("cp8"), Some((1, 1, 8)));
+        assert_eq!(parse_plan_shape("dp8"), None);
+        assert_eq!(parse_plan_shape("tp"), None);
+        assert_eq!(parse_plan_shape(""), None);
+        // Multi-byte input must be rejected, not panic on a byte split.
+        assert_eq!(parse_plan_shape("tp2€pp2"), None);
+    }
+
+    #[test]
+    fn shardings_parse() {
+        assert_eq!(parse_sharding("fsdp").unwrap(), Sharding::Fsdp);
+        assert_eq!(parse_sharding("ddp").unwrap(), Sharding::Ddp);
+        assert_eq!(parse_sharding("hsdp:8").unwrap(),
+                   Sharding::Hsdp { group: 8 });
+        assert!(parse_sharding("zero3").is_err());
+        assert!(parse_sharding("hsdp:x").is_err());
+    }
+
+    #[test]
+    fn grid_args_build_a_study() {
+        let args = Args::parse(
+            "study --grid --arch 7b --gen h100 --nodes 2 --gbs 48 \
+             --plans sweep --mbs divisors"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let study = study_from_args(&args).unwrap();
+        let points = study.expand();
+        assert!(!points.is_empty());
+        assert!(points.iter().any(|p| p.cfg.micro_batch == 3),
+                "divisor grid must include odd microbatches for gbs 48");
+    }
 }

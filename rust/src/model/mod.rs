@@ -10,7 +10,7 @@ pub mod presets;
 pub use presets::{by_name, LLAMA_13B, LLAMA_1B, LLAMA_70B, LLAMA_7B};
 
 /// Decoder-only transformer architecture.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TransformerArch {
     pub name: &'static str,
     pub n_layers: usize,

@@ -3,13 +3,23 @@
 //! simulates each, and ranks by global throughput — the procedure the
 //! paper performs manually in §4.3/Figure 6 and argues should become
 //! standard practice (§5).
+//!
+//! The sweep is expressed as a [`Study`] and executed by a
+//! [`StudyRunner`], which parallelizes the candidate simulations and
+//! deduplicates repeats; microbatch candidates are *all divisors* of
+//! the per-replica batch (the old hardcoded {1,2,4,8} set silently
+//! skipped odd batch shapes such as gbs 48 at dp 16).
 
-use crate::memory;
-use crate::metrics::{self, Metrics};
+use crate::metrics::Metrics;
 use crate::model::TransformerArch;
-use crate::parallelism::{enumerate_plans, ParallelPlan};
-use crate::sim::{Sharding, SimConfig};
+use crate::parallelism::ParallelPlan;
+use crate::sim::Sharding;
+use crate::study::{PlanAxis, Study, StudyRunner};
 use crate::topology::Cluster;
+
+/// Fraction of device HBM a feasible plan may use (headroom for
+/// fragmentation).
+pub const MEM_CAP_FRAC: f64 = 0.94;
 
 /// One evaluated configuration.
 #[derive(Debug, Clone)]
@@ -41,55 +51,48 @@ impl SweepRequest {
         SweepRequest { arch, cluster, global_batch, seq_len,
                        with_cp: false, sharding: Sharding::Fsdp }
     }
+
+    /// The sweep grid as a Study, restricted to `plans`.
+    fn study(&self, plans: PlanAxis) -> Study {
+        Study::builder("planner-sweep")
+            .arch(self.arch)
+            .generation(self.cluster.node.gpu)
+            .nodes([self.cluster.nodes])
+            .plans(plans)
+            .global_batches([self.global_batch])
+            .micro_batch_divisors()
+            .seq_len(self.seq_len)
+            .sharding(self.sharding)
+            .memory_cap(MEM_CAP_FRAC)
+            .build()
+    }
+}
+
+fn outcomes(req: &SweepRequest, plans: PlanAxis,
+            runner: &mut StudyRunner) -> Vec<PlanOutcome> {
+    let mut res = runner.run(&req.study(plans));
+    res.sort_by_wps();
+    res.cases
+        .into_iter()
+        .map(|c| PlanOutcome {
+            plan: c.plan,
+            micro_batch: c.micro_batch,
+            metrics: c.metrics,
+            mem_per_gpu: c.mem_per_gpu,
+        })
+        .collect()
 }
 
 /// All feasible (plan, microbatch) outcomes, best global WPS first.
 pub fn sweep(req: &SweepRequest) -> Vec<PlanOutcome> {
-    let mut out = Vec::new();
-    let mem_cap = req.cluster.node.spec().mem_bytes;
-    for plan in enumerate_plans(&req.cluster, req.arch.n_layers,
-                                req.with_cp) {
-        if req.global_batch % plan.dp != 0 {
-            continue;
-        }
-        let local_batch = req.global_batch / plan.dp;
-        for micro_batch in [1usize, 2, 4, 8] {
-            if micro_batch > local_batch
-                || local_batch % micro_batch != 0
-            {
-                continue;
-            }
-            let cfg = SimConfig {
-                arch: req.arch,
-                cluster: req.cluster,
-                plan,
-                global_batch: req.global_batch,
-                micro_batch,
-                seq_len: req.seq_len,
-                sharding: req.sharding,
-                prefetch: true,
-            };
-            if cfg.validate().is_err() {
-                continue;
-            }
-            let in_flight = cfg.microbatches().min(plan.pp);
-            let mem = memory::per_gpu_memory(
-                &req.arch, &plan, micro_batch, req.seq_len, in_flight);
-            if mem.total() > mem_cap * 0.94 {
-                continue;
-            }
-            out.push(PlanOutcome {
-                plan,
-                micro_batch,
-                metrics: metrics::evaluate(&cfg),
-                mem_per_gpu: mem.total(),
-            });
-        }
-    }
-    out.sort_by(|a, b| {
-        b.metrics.global_wps.partial_cmp(&a.metrics.global_wps).unwrap()
-    });
-    out
+    sweep_in(req, &mut StudyRunner::auto())
+}
+
+/// `sweep` through a caller-provided runner (shared cache/threads).
+pub fn sweep_in(req: &SweepRequest, runner: &mut StudyRunner)
+    -> Vec<PlanOutcome>
+{
+    outcomes(req, PlanAxis::Sweep { with_cp: req.with_cp }, runner)
 }
 
 /// The best feasible configuration, if any.
@@ -97,13 +100,32 @@ pub fn best(req: &SweepRequest) -> Option<PlanOutcome> {
     sweep(req).into_iter().next()
 }
 
+/// `best` through a caller-provided runner.
+pub fn best_in(req: &SweepRequest, runner: &mut StudyRunner)
+    -> Option<PlanOutcome>
+{
+    sweep_in(req, runner).into_iter().next()
+}
+
 /// Best outcome restricted to a fixed plan shape (used by the figure
-/// harness to compare specific strategies).
+/// harness to compare specific strategies). Only that plan's
+/// microbatch candidates are simulated — not the whole sweep.
 pub fn best_for_plan(
     req: &SweepRequest,
     plan: ParallelPlan,
 ) -> Option<PlanOutcome> {
-    sweep(req).into_iter().find(|o| o.plan == plan)
+    best_for_plan_in(req, plan, &mut StudyRunner::auto())
+}
+
+/// `best_for_plan` through a caller-provided runner (shared cache).
+pub fn best_for_plan_in(
+    req: &SweepRequest,
+    plan: ParallelPlan,
+    runner: &mut StudyRunner,
+) -> Option<PlanOutcome> {
+    outcomes(req, PlanAxis::Fixed(vec![plan]), runner)
+        .into_iter()
+        .next()
 }
 
 #[cfg(test)]
@@ -171,6 +193,22 @@ mod tests {
     }
 
     #[test]
+    fn best_for_plan_agrees_with_full_sweep() {
+        // The restricted study must reach the same answer the full
+        // sweep's filter did, without simulating everything else.
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 4), 64, 4096);
+        let plan = ParallelPlan::new(16, 2, 1, 1);
+        let direct = best_for_plan(&req, plan).unwrap();
+        let via_sweep = sweep(&req)
+            .into_iter()
+            .find(|o| o.plan == plan)
+            .unwrap();
+        assert_eq!(direct.micro_batch, via_sweep.micro_batch);
+        assert_eq!(direct.metrics.global_wps, via_sweep.metrics.global_wps);
+    }
+
+    #[test]
     fn microbatch_choices_respect_divisibility() {
         let req = SweepRequest::fsdp(
             LLAMA_7B, Cluster::new(Generation::H100, 4), 48, 4096);
@@ -178,5 +216,17 @@ mod tests {
             let local = 48 / o.plan.dp;
             assert_eq!(local % o.micro_batch, 0);
         }
+    }
+
+    #[test]
+    fn odd_batch_shapes_are_not_skipped() {
+        // gbs 48 at 16 GPUs: dp 16 has a local batch of 3. The old
+        // hardcoded {1,2,4,8} microbatch candidates never tried it.
+        let req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 2), 48, 4096);
+        let outcomes = sweep(&req);
+        assert!(outcomes.iter()
+                    .any(|o| o.plan.dp == 16 && o.micro_batch == 3),
+                "divisor enumeration must cover mbs=3 at dp=16");
     }
 }

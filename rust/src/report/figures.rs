@@ -1,176 +1,289 @@
-//! One function per paper table/figure. Workloads and parameters match
-//! the paper's §3/§4 setups; see DESIGN.md §3 for the index and
-//! EXPERIMENTS.md for paper-vs-measured comparisons.
+//! One scenario per paper table/figure, registered in the study
+//! registry. Workloads and parameters match the paper's §3/§4 setups;
+//! see DESIGN.md §3 for the index and EXPERIMENTS.md for paper-vs-
+//! measured comparisons.
+//!
+//! Each simulation-driven figure is a declarative [`Study`] — axes +
+//! constraints + a column list — executed through the shared
+//! [`StudyRunner`], so `repro all` simulates every distinct
+//! configuration exactly once, across all cores. Analytic figures
+//! (collective bandwidth, memory model, spec tables) build their rows
+//! directly.
 
-use super::Table;
+use anyhow::Result;
+
 use crate::collectives::{busbw_gbps, collective_time, Collective};
 use crate::hardware::Generation;
 use crate::memory;
-use crate::metrics::{self, Metrics};
 use crate::model::{self, LLAMA_70B, LLAMA_7B};
 use crate::parallelism::ParallelPlan;
 use crate::planner::{self, SweepRequest};
 use crate::sim::SimConfig;
+use crate::study::table::{f0, f2, f3, ms};
+use crate::study::{
+    Column, PlanAxis, Registry, Scenario, Study, StudyRunner, Table,
+};
 use crate::topology::{Cluster, GroupPlacement};
 
-fn f2(x: f64) -> String { format!("{x:.2}") }
-fn f3(x: f64) -> String { format!("{x:.3}") }
-fn f0(x: f64) -> String { format!("{x:.0}") }
-fn ms(x: f64) -> String { format!("{:.1}", x * 1e3) }
+use Column::*;
 
-/// Weak-scaling config: Llama-7B FSDP, local batch 2, seq 4096 (§4.1).
-fn weak(gen: Generation, nodes: usize) -> SimConfig {
-    let cluster = Cluster::new(gen, nodes);
-    let w = cluster.world_size();
-    SimConfig::fsdp(LLAMA_7B, cluster, ParallelPlan::data_parallel(w),
-                    2 * w, 2, 4096)
+/// Register every paper experiment, in paper order.
+pub fn register_all(reg: &mut Registry) {
+    reg.register(Box::new(Table1));
+    reg.register(Box::new(Fig1));
+    reg.register(Box::new(Fig2));
+    reg.register(Box::new(Fig3));
+    reg.register(Box::new(Fig4));
+    reg.register(Box::new(Fig5));
+    reg.register(Box::new(Fig6));
+    reg.register(Box::new(Fig7));
+    reg.register(Box::new(Fig8));
+    reg.register(Box::new(Fig9));
+    reg.register(Box::new(Fig10));
+    reg.register(Box::new(Fig11));
+    reg.register(Box::new(Fig12));
+    reg.register(Box::new(Fig13));
+    reg.register(Box::new(Fig14));
+    reg.register(Box::new(Headline));
+    reg.register(Box::new(Ablation));
 }
 
-fn eval_weak(gen: Generation, nodes: usize) -> Metrics {
-    metrics::evaluate(&weak(gen, nodes))
+/// Weak-scaling study: Llama-7B pure FSDP, local batch 2, seq 4096
+/// (§4.1). Shared by Fig. 1, Fig. 3, and the headline table — the
+/// runner's cache simulates each scale once.
+fn weak_scaling(name: &str, title: &str) -> Study {
+    Study::builder(name)
+        .title(title)
+        .arch(LLAMA_7B)
+        .generation(Generation::H100)
+        .nodes([1, 2, 4, 8, 16, 32, 64, 128, 256])
+        .plans(PlanAxis::DataParallel)
+        .batch_per_replica(2)
+        .micro_batches([2])
+        .seq_len(4096)
+        .build()
+}
+
+/// The §4.3 parallelization-strategy sweep (the planner's grid).
+/// `mbs: None` sweeps every divisor of the local batch; `Some(m)`
+/// pins the microbatch (for figures that only present one value, so
+/// the unused candidates are never simulated).
+fn strategy_sweep(name: &str, title: &str, gen: Generation, nodes: usize,
+                  gbs: usize, mbs: Option<usize>) -> Study {
+    let b = Study::builder(name)
+        .title(title)
+        .arch(LLAMA_7B)
+        .generation(gen)
+        .nodes([nodes])
+        .plans(PlanAxis::Sweep { with_cp: false })
+        .global_batches([gbs])
+        .seq_len(4096)
+        .memory_cap(planner::MEM_CAP_FRAC);
+    match mbs {
+        None => b.micro_batch_divisors(),
+        Some(m) => b.micro_batches([m]),
+    }
+    .build()
 }
 
 /// Table 1 — hardware specifications by generation.
-pub fn table1() -> Table {
-    let mut t = Table::new(
-        "table1",
-        "NVIDIA reported DGX-node specifications by generation",
-        &["spec", "V100", "A100", "H100"]);
-    let specs: Vec<_> = Generation::PAPER.iter()
-        .map(|g| g.spec()).collect();
-    let row = |name: &str, f: &dyn Fn(&crate::hardware::GpuSpec) -> String|
-        -> Vec<String>
-    {
-        let mut r = vec![name.to_string()];
-        r.extend(specs.iter().map(|s| f(s)));
-        r
-    };
-    t.row(row("tensor-core FLOPS (TFLOPS)",
-              &|s| f0(s.peak_flops / 1e12)));
-    t.row(row("GPU HBM (GB/s)", &|s| f0(s.hbm_bw / 1e9)));
-    t.row(row("NVLink (GB/s)", &|s| f0(s.nvlink_bw / 1e9)));
-    t.row(row("internode InfiniBand (GB/s)", &|s| f0(s.ib_bw / 1e9)));
-    t
+struct Table1;
+
+impl Scenario for Table1 {
+    fn name(&self) -> &'static str { "table1" }
+    fn title(&self) -> &'static str {
+        "NVIDIA reported DGX-node specifications by generation"
+    }
+
+    fn tables(&self, _runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "table1", self.title(), &["spec", "V100", "A100", "H100"]);
+        let specs: Vec<_> = Generation::PAPER.iter()
+            .map(|g| g.spec()).collect();
+        let row = |name: &str,
+                   f: &dyn Fn(&crate::hardware::GpuSpec) -> String|
+            -> Vec<String>
+        {
+            let mut r = vec![name.to_string()];
+            r.extend(specs.iter().map(|s| f(s)));
+            r
+        };
+        t.row(row("tensor-core FLOPS (TFLOPS)",
+                  &|s| f0(s.peak_flops / 1e12)));
+        t.row(row("GPU HBM (GB/s)", &|s| f0(s.hbm_bw / 1e9)));
+        t.row(row("NVLink (GB/s)", &|s| f0(s.nvlink_bw / 1e9)));
+        t.row(row("internode InfiniBand (GB/s)", &|s| f0(s.ib_bw / 1e9)));
+        Ok(vec![t])
+    }
 }
 
 /// Fig. 1 — FSDP power efficiency vs scale (headline figure).
-pub fn fig1() -> Table {
-    let mut t = Table::new(
-        "fig1",
+struct Fig1;
+
+impl Scenario for Fig1 {
+    fn name(&self) -> &'static str { "fig1" }
+    fn title(&self) -> &'static str {
         "FSDP weak scaling: power efficiency collapses at scale \
-         (Llama-7B, H100, local batch 2)",
-        &["nodes", "gpus", "wps_per_watt", "rel_to_1node",
-          "exposed_ms"]);
-    let base = eval_weak(Generation::H100, 1).wps_per_watt;
-    for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
-        let m = eval_weak(Generation::H100, nodes);
-        t.row(vec![
-            nodes.to_string(),
-            (nodes * 8).to_string(),
-            f2(m.wps_per_watt),
-            f3(m.wps_per_watt / base),
-            ms(m.exposed_comm),
-        ]);
+         (Llama-7B, H100, local batch 2)"
     }
-    t.with_chart(2)
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let res = runner.run(&weak_scaling("fig1", self.title()));
+        let base = res.cases[0].metrics.wps_per_watt;
+        let mut t = Table::new(
+            "fig1", self.title(),
+            &["nodes", "gpus", "wps_per_watt", "rel_to_1node",
+              "exposed_ms"]);
+        for c in &res.cases {
+            t.row(vec![
+                c.nodes.to_string(),
+                c.metrics.world.to_string(),
+                f2(c.metrics.wps_per_watt),
+                f3(c.metrics.wps_per_watt / base),
+                ms(c.metrics.exposed_comm),
+            ]);
+        }
+        Ok(vec![t.with_chart(2)])
+    }
 }
 
 /// Fig. 2 — NCCL collective bus bandwidth vs world size.
-pub fn fig2() -> Vec<Table> {
-    let msg = 1e9; // 1 GB payload, nccl-tests style
-    let mut a = Table::new(
-        "fig2a",
-        "AllReduce busbw (GB/s) vs nodes — tree algorithm scales well",
-        &["nodes", "gpus", "busbw_gbps"]);
-    let mut b = Table::new(
-        "fig2b",
-        "AllGather busbw (GB/s) vs nodes — ring algorithm decays",
-        &["nodes", "gpus", "busbw_gbps"]);
-    for nodes in [4usize, 8, 16, 32, 64, 128, 256, 512] {
-        let c = Cluster::new(Generation::H100, nodes);
-        let place = GroupPlacement::strided(&c, c.world_size(), 1);
-        a.row(vec![
-            nodes.to_string(),
-            c.world_size().to_string(),
-            f2(busbw_gbps(Collective::AllReduce, msg, &c, &place)),
-        ]);
-        b.row(vec![
-            nodes.to_string(),
-            c.world_size().to_string(),
-            f2(busbw_gbps(Collective::AllGather, msg, &c, &place)),
-        ]);
+struct Fig2;
+
+impl Scenario for Fig2 {
+    fn name(&self) -> &'static str { "fig2" }
+    fn title(&self) -> &'static str {
+        "NCCL collective bus bandwidth vs world size"
     }
-    vec![a.with_chart(2), b.with_chart(2)]
+
+    fn tables(&self, _runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let msg = 1e9; // 1 GB payload, nccl-tests style
+        let mut a = Table::new(
+            "fig2a",
+            "AllReduce busbw (GB/s) vs nodes — tree algorithm scales well",
+            &["nodes", "gpus", "busbw_gbps"]);
+        let mut b = Table::new(
+            "fig2b",
+            "AllGather busbw (GB/s) vs nodes — ring algorithm decays",
+            &["nodes", "gpus", "busbw_gbps"]);
+        for nodes in [4usize, 8, 16, 32, 64, 128, 256, 512] {
+            let c = Cluster::new(Generation::H100, nodes);
+            let place = GroupPlacement::strided(&c, c.world_size(), 1);
+            a.row(vec![
+                nodes.to_string(),
+                c.world_size().to_string(),
+                f2(busbw_gbps(Collective::AllReduce, msg, &c, &place)),
+            ]);
+            b.row(vec![
+                nodes.to_string(),
+                c.world_size().to_string(),
+                f2(busbw_gbps(Collective::AllGather, msg, &c, &place)),
+            ]);
+        }
+        Ok(vec![a.with_chart(2), b.with_chart(2)])
+    }
 }
 
 /// Fig. 3 — weak scaling: throughput/utilization/power vs GPUs.
-pub fn fig3() -> Table {
-    let mut t = Table::new(
-        "fig3",
+struct Fig3;
+
+impl Scenario for Fig3 {
+    fn name(&self) -> &'static str { "fig3" }
+    fn title(&self) -> &'static str {
         "FSDP weak scaling of Llama-7B (H100, local batch 2): \
-         throughput, utilization, power",
-        &["gpus", "global_wps", "wps_per_gpu", "ideal_wps_per_gpu",
-          "mfu", "exposed_ms", "comm_ms", "compute_ms", "power_w",
-          "total_power_kw"]);
-    let ideal = eval_weak(Generation::H100, 1).per_gpu_wps;
-    for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
-        let m = eval_weak(Generation::H100, nodes);
-        t.row(vec![
-            m.world.to_string(),
-            f0(m.global_wps),
-            f0(m.per_gpu_wps),
-            f0(ideal),
-            f3(m.mfu),
-            ms(m.exposed_comm),
-            ms(m.comm_time),
-            ms(m.compute_time),
-            f0(m.power_w),
-            f2(m.total_power_w / 1e3),
-        ]);
+         throughput, utilization, power"
     }
-    t.with_chart(2)
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let res = runner.run(&weak_scaling("fig3", self.title()));
+        let ideal = res.cases[0].metrics.per_gpu_wps;
+        let mut t = Table::new(
+            "fig3", self.title(),
+            &["gpus", "global_wps", "wps_per_gpu", "ideal_wps_per_gpu",
+              "mfu", "exposed_ms", "comm_ms", "compute_ms", "power_w",
+              "total_power_kw"]);
+        for c in &res.cases {
+            let m = &c.metrics;
+            t.row(vec![
+                m.world.to_string(),
+                f0(m.global_wps),
+                f0(m.per_gpu_wps),
+                f0(ideal),
+                f3(m.mfu),
+                ms(m.exposed_comm),
+                ms(m.comm_time),
+                ms(m.compute_time),
+                f0(m.power_w),
+                f2(m.total_power_w / 1e3),
+            ]);
+        }
+        Ok(vec![t.with_chart(2)])
+    }
 }
 
 /// Fig. 4 — AllGather/ReduceScatter execution time vs world size.
-pub fn fig4() -> Table {
-    let mut t = Table::new(
-        "fig4",
+struct Fig4;
+
+impl Scenario for Fig4 {
+    fn name(&self) -> &'static str { "fig4" }
+    fn title(&self) -> &'static str {
         "FSDP collective execution time scales with world size \
-         (Llama-7B full parameter set, bf16)",
-        &["gpus", "allgather_ms", "reducescatter_ms"]);
-    let bytes = LLAMA_7B.param_bytes();
-    for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
-        let c = Cluster::new(Generation::H100, nodes);
-        let place = GroupPlacement::strided(&c, c.world_size(), 1);
-        let ag = collective_time(Collective::AllGather, bytes, &c,
-                                 &place);
-        let rs = collective_time(Collective::ReduceScatter, bytes, &c,
-                                 &place);
-        t.row(vec![
-            c.world_size().to_string(),
-            ms(ag.time_s),
-            ms(rs.time_s),
-        ]);
+         (Llama-7B full parameter set, bf16)"
     }
-    t.with_chart(1)
+
+    fn tables(&self, _runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "fig4", self.title(),
+            &["gpus", "allgather_ms", "reducescatter_ms"]);
+        let bytes = LLAMA_7B.param_bytes();
+        for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let c = Cluster::new(Generation::H100, nodes);
+            let place = GroupPlacement::strided(&c, c.world_size(), 1);
+            let ag = collective_time(Collective::AllGather, bytes, &c,
+                                     &place);
+            let rs = collective_time(Collective::ReduceScatter, bytes, &c,
+                                     &place);
+            t.row(vec![
+                c.world_size().to_string(),
+                ms(ag.time_s),
+                ms(rs.time_s),
+            ]);
+        }
+        Ok(vec![t.with_chart(1)])
+    }
 }
 
 /// Fig. 5 — strong scaling at fixed global batch 32 with per-scale
 /// optimal plans.
-pub fn fig5() -> Table {
-    let mut t = Table::new(
-        "fig5",
+struct Fig5;
+
+impl Scenario for Fig5 {
+    fn name(&self) -> &'static str { "fig5" }
+    fn title(&self) -> &'static str {
         "Strong scaling, fixed global batch 32 (Llama-7B, H100): \
-         optimal plan per scale",
-        &["nodes", "gpus", "best_plan", "mbs", "global_wps",
-          "wps_per_gpu", "mfu", "wps_per_watt"]);
-    for nodes in [2usize, 4, 8, 16, 32] {
-        let req = SweepRequest::fsdp(
-            LLAMA_7B, Cluster::new(Generation::H100, nodes), 32, 4096);
-        if let Some(best) = planner::best(&req) {
+         optimal plan per scale"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let study = Study::builder("fig5")
+            .title(self.title())
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([2, 4, 8, 16, 32])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([32])
+            .micro_batch_divisors()
+            .memory_cap(planner::MEM_CAP_FRAC)
+            .build();
+        let res = runner.run(&study);
+        let mut t = Table::new(
+            "fig5", self.title(),
+            &["nodes", "gpus", "best_plan", "mbs", "global_wps",
+              "wps_per_gpu", "mfu", "wps_per_watt"]);
+        for best in res.best_per(|c| c.nodes) {
             let m = &best.metrics;
             t.row(vec![
-                nodes.to_string(),
+                best.nodes.to_string(),
                 m.world.to_string(),
                 best.plan.to_string(),
                 best.micro_batch.to_string(),
@@ -180,398 +293,493 @@ pub fn fig5() -> Table {
                 f2(m.wps_per_watt),
             ]);
         }
+        Ok(vec![t.with_chart(6)])
     }
-    t.with_chart(6)
 }
 
 /// Fig. 6 — parallelism sweep at 256 GPUs, global batch 512.
-pub fn fig6() -> Table {
-    let mut t = Table::new(
-        "fig6",
+struct Fig6;
+
+impl Scenario for Fig6 {
+    fn name(&self) -> &'static str { "fig6" }
+    fn title(&self) -> &'static str {
         "Model parallelism increases FSDP throughput \
-         (Llama-7B, 256 GPUs H100, gbs 512)",
-        &["plan", "mbs", "global_wps", "mfu", "exposed_ms",
-          "wps_per_watt", "mem_gb"]);
-    let req = SweepRequest::fsdp(
-        LLAMA_7B, Cluster::new(Generation::H100, 32), 512, 4096);
-    for o in planner::sweep(&req) {
-        t.row(vec![
-            o.plan.to_string(),
-            o.micro_batch.to_string(),
-            f0(o.metrics.global_wps),
-            f3(o.metrics.mfu),
-            ms(o.metrics.exposed_comm),
-            f2(o.metrics.wps_per_watt),
-            f2(o.mem_per_gpu / 1e9),
-        ]);
+         (Llama-7B, 256 GPUs H100, gbs 512)"
     }
-    t.with_chart(2)
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut res = runner.run(&strategy_sweep(
+            "fig6", self.title(), Generation::H100, 32, 512, None));
+        res.sort_by_wps();
+        Ok(vec![res
+            .table(&[Plan, Mbs, GlobalWps, Mfu, ExposedMs, WpsPerWatt,
+                     MemGb])
+            .with_chart(2)])
+    }
 }
 
 /// Fig. 7 — hardware generations: A100 vs H100 across TP/PP degrees.
-pub fn fig7() -> Vec<Table> {
-    let mut out = Vec::new();
-    for gen in [Generation::A100, Generation::H100] {
-        let mut t = Table::new(
-            &format!("fig7_{}", gen.to_string().to_lowercase()),
-            &format!("TP/PP sweep on {gen} (Llama-7B, 32 nodes, \
-                      gbs 512): model parallelism vs exposed comm"),
-            &["plan", "global_wps", "mfu", "exposed_ms", "comm_ms"]);
-        let req = SweepRequest::fsdp(
-            LLAMA_7B, Cluster::new(gen, 32), 512, 4096);
-        for o in planner::sweep(&req)
-            .into_iter()
-            .filter(|o| o.micro_batch == 2 && o.plan.cp == 1
-                        && (o.plan.tp == 1 || o.plan.pp == 1))
-        {
-            t.row(vec![
-                o.plan.to_string(),
-                f0(o.metrics.global_wps),
-                f3(o.metrics.mfu),
-                ms(o.metrics.exposed_comm),
-                ms(o.metrics.comm_time),
-            ]);
-        }
-        out.push(t.with_chart(1));
+struct Fig7;
+
+impl Scenario for Fig7 {
+    fn name(&self) -> &'static str { "fig7" }
+    fn title(&self) -> &'static str {
+        "TP/PP sweep by hardware generation (A100 vs H100)"
     }
-    out
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut out = Vec::new();
+        for gen in [Generation::A100, Generation::H100] {
+            let name = format!("fig7_{}", gen.to_string().to_lowercase());
+            let title = format!(
+                "TP/PP sweep on {gen} (Llama-7B, 32 nodes, gbs 512): \
+                 model parallelism vs exposed comm");
+            let mut res = runner.run(&strategy_sweep(
+                &name, &title, gen, 32, 512, Some(2)));
+            res.sort_by_wps();
+            res.retain(|o| o.plan.cp == 1
+                           && (o.plan.tp == 1 || o.plan.pp == 1));
+            out.push(res
+                .table(&[Plan, GlobalWps, Mfu, ExposedMs, CommMs])
+                .with_chart(1));
+        }
+        Ok(out)
+    }
 }
 
 /// Fig. 8 — model-size scaling: 1B/7B/13B/70B.
-pub fn fig8() -> Table {
-    let mut t = Table::new(
-        "fig8",
+struct Fig8;
+
+impl Scenario for Fig8 {
+    fn name(&self) -> &'static str { "fig8" }
+    fn title(&self) -> &'static str {
         "Communication & computation both scale with model size \
-         (32 nodes H100, optimal plan per size)",
-        &["model", "best_plan", "global_wps", "mfu", "compute_ms",
-          "comm_ms", "exposed_ms", "baseline_exposed_ms"]);
-    for name in ["1b", "7b", "13b", "70b"] {
-        let arch = *model::by_name(name).unwrap();
-        let cluster = Cluster::new(Generation::H100, 32);
-        let req = SweepRequest::fsdp(arch, cluster, 256, 4096);
-        let Some(best) = planner::best(&req) else { continue };
-        // Baseline: least model parallelism that fits.
-        let baseline = planner::sweep(&req)
-            .into_iter()
-            .min_by_key(|o| o.plan.model_parallel())
-            .unwrap();
-        t.row(vec![
-            arch.name.to_string(),
-            best.plan.to_string(),
-            f0(best.metrics.global_wps),
-            f3(best.metrics.mfu),
-            ms(best.metrics.compute_time),
-            ms(best.metrics.comm_time),
-            ms(best.metrics.exposed_comm),
-            ms(baseline.metrics.exposed_comm),
-        ]);
+         (32 nodes H100, optimal plan per size)"
     }
-    t
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "fig8", self.title(),
+            &["model", "best_plan", "global_wps", "mfu", "compute_ms",
+              "comm_ms", "exposed_ms", "baseline_exposed_ms"]);
+        for name in ["1b", "7b", "13b", "70b"] {
+            let arch = *model::by_name(name).unwrap();
+            let study = Study::builder("fig8")
+                .title(self.title())
+                .arch(arch)
+                .generation(Generation::H100)
+                .nodes([32])
+                .plans(PlanAxis::Sweep { with_cp: false })
+                .global_batches([256])
+                .micro_batch_divisors()
+                .memory_cap(planner::MEM_CAP_FRAC)
+                .build();
+            let mut res = runner.run(&study);
+            res.sort_by_wps();
+            let Some(best) = res.cases.first() else { continue };
+            // Baseline: least model parallelism that fits (best mbs
+            // among those, since the list is throughput-sorted).
+            let min_mp = res.cases.iter()
+                .map(|c| c.plan.model_parallel())
+                .min()
+                .unwrap();
+            let baseline = res.cases.iter()
+                .find(|c| c.plan.model_parallel() == min_mp)
+                .unwrap();
+            t.row(vec![
+                arch.name.to_string(),
+                best.plan.to_string(),
+                f0(best.metrics.global_wps),
+                f3(best.metrics.mfu),
+                ms(best.metrics.compute_time),
+                ms(best.metrics.comm_time),
+                ms(best.metrics.exposed_comm),
+                ms(baseline.metrics.exposed_comm),
+            ]);
+        }
+        Ok(vec![t])
+    }
 }
 
 /// Fig. 9 — context-length scaling.
-pub fn fig9() -> Table {
-    let mut t = Table::new(
-        "fig9",
+struct Fig9;
+
+impl Scenario for Fig9 {
+    fn name(&self) -> &'static str { "fig9" }
+    fn title(&self) -> &'static str {
         "Longer sequences improve overlap (Llama-7B, 32 nodes H100, \
-         FSDP, 1 sequence per device)",
-        &["seq_len", "global_tokens_per_s", "mfu", "exposed_ms",
-          "wps_per_watt"]);
-    for seq in [2048usize, 4096, 8192, 16384, 32768] {
-        let cluster = Cluster::new(Generation::H100, 32);
-        let w = cluster.world_size();
-        let cfg = SimConfig::fsdp(
-            LLAMA_7B, cluster, ParallelPlan::data_parallel(w), w, 1,
-            seq);
-        let m = metrics::evaluate(&cfg);
-        t.row(vec![
-            seq.to_string(),
-            f0(m.global_wps),
-            f3(m.mfu),
-            ms(m.exposed_comm),
-            f2(m.wps_per_watt),
-        ]);
+         FSDP, 1 sequence per device)"
     }
-    t.with_chart(2)
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let study = Study::builder("fig9")
+            .title(self.title())
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([32])
+            .plans(PlanAxis::DataParallel)
+            .batch_per_replica(1)
+            .micro_batches([1])
+            .seq_lens([2048, 4096, 8192, 16384, 32768])
+            .build();
+        let res = runner.run(&study);
+        Ok(vec![res
+            .table_renamed(
+                &["seq_len", "global_tokens_per_s", "mfu", "exposed_ms",
+                  "wps_per_watt"],
+                &[SeqLen, GlobalWps, Mfu, ExposedMs, WpsPerWatt])
+            .with_chart(2)])
+    }
 }
 
 /// Fig. 10 — model parallelism in low-intensity / highly-distributed
 /// regimes (Appendix C).
-pub fn fig10() -> Vec<Table> {
-    let mut a = Table::new(
-        "fig10a",
-        "MP sweep with small local batch (Llama-7B, 32 nodes, lbs 1)",
-        &["plan", "global_wps", "mfu", "exposed_ms"]);
-    let req_a = SweepRequest::fsdp(
-        LLAMA_7B, Cluster::new(Generation::H100, 32), 256, 4096);
-    for o in planner::sweep(&req_a).into_iter()
-        .filter(|o| o.micro_batch == 1)
-    {
-        a.row(vec![
-            o.plan.to_string(),
-            f0(o.metrics.global_wps),
-            f3(o.metrics.mfu),
-            ms(o.metrics.exposed_comm),
-        ]);
+struct Fig10;
+
+impl Scenario for Fig10 {
+    fn name(&self) -> &'static str { "fig10" }
+    fn title(&self) -> &'static str {
+        "Model parallelism in low-intensity / highly-distributed regimes"
     }
-    let mut b = Table::new(
-        "fig10b",
-        "MP sweep at 256 nodes (Llama-7B, lbs 2): many viable \
-         strategies when comm-bound",
-        &["plan", "global_wps", "mfu", "exposed_ms", "wps_per_watt"]);
-    let req_b = SweepRequest::fsdp(
-        LLAMA_7B, Cluster::new(Generation::H100, 256), 4096, 4096);
-    for o in planner::sweep(&req_b).into_iter()
-        .filter(|o| o.micro_batch == 2)
-        .take(12)
-    {
-        b.row(vec![
-            o.plan.to_string(),
-            f0(o.metrics.global_wps),
-            f3(o.metrics.mfu),
-            ms(o.metrics.exposed_comm),
-            f2(o.metrics.wps_per_watt),
-        ]);
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut a = runner.run(&strategy_sweep(
+            "fig10a",
+            "MP sweep with small local batch (Llama-7B, 32 nodes, lbs 1)",
+            Generation::H100, 32, 256, Some(1)));
+        a.sort_by_wps();
+        let ta = a.table(&[Plan, GlobalWps, Mfu, ExposedMs]).with_chart(1);
+
+        let mut b = runner.run(&strategy_sweep(
+            "fig10b",
+            "MP sweep at 256 nodes (Llama-7B, lbs 2): many viable \
+             strategies when comm-bound",
+            Generation::H100, 256, 4096, Some(2)));
+        b.sort_by_wps();
+        b.truncate(12);
+        let tb = b
+            .table(&[Plan, GlobalWps, Mfu, ExposedMs, WpsPerWatt])
+            .with_chart(1);
+        Ok(vec![ta, tb])
     }
-    vec![a.with_chart(1), b.with_chart(1)]
 }
 
 /// Fig. 11 — strong scaling at pretraining scale (Appendix D).
-pub fn fig11() -> Table {
-    let mut t = Table::new(
-        "fig11",
+struct Fig11;
+
+impl Scenario for Fig11 {
+    fn name(&self) -> &'static str { "fig11" }
+    fn title(&self) -> &'static str {
         "Pretraining-scale strong scaling (fixed gbs 1024, H100): \
-         7B and 70B",
-        &["model", "nodes", "gpus", "best_plan", "wps_per_gpu", "mfu"]);
-    for (name, arch) in [("7b", LLAMA_7B), ("70b", LLAMA_70B)] {
-        for nodes in [64usize, 128, 256] {
-            let req = SweepRequest::fsdp(
-                arch, Cluster::new(Generation::H100, nodes), 1024,
-                4096);
-            if let Some(best) = planner::best(&req) {
+         7B and 70B"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "fig11", self.title(),
+            &["model", "nodes", "gpus", "best_plan", "wps_per_gpu",
+              "mfu"]);
+        for (name, arch) in [("7b", LLAMA_7B), ("70b", LLAMA_70B)] {
+            let study = Study::builder("fig11")
+                .title(self.title())
+                .arch(arch)
+                .generation(Generation::H100)
+                .nodes([64, 128, 256])
+                .plans(PlanAxis::Sweep { with_cp: false })
+                .global_batches([1024])
+                .micro_batch_divisors()
+                .memory_cap(planner::MEM_CAP_FRAC)
+                .build();
+            let res = runner.run(&study);
+            for best in res.best_per(|c| c.nodes) {
                 t.row(vec![
                     name.to_string(),
-                    nodes.to_string(),
-                    (nodes * 8).to_string(),
+                    best.nodes.to_string(),
+                    best.metrics.world.to_string(),
                     best.plan.to_string(),
                     f0(best.metrics.per_gpu_wps),
                     f3(best.metrics.mfu),
                 ]);
             }
         }
+        Ok(vec![t])
     }
-    t
 }
 
 /// Fig. 12 — context parallelism at 4k sequence length (Appendix E).
-pub fn fig12() -> Table {
-    let mut t = Table::new(
-        "fig12",
+struct Fig12;
+
+impl Scenario for Fig12 {
+    fn name(&self) -> &'static str { "fig12" }
+    fn title(&self) -> &'static str {
         "Context parallelism is sub-optimal at 4k seq \
-         (Llama-7B, 32 nodes H100, gbs 256)",
-        &["strategy", "plan", "global_wps", "mfu", "exposed_ms"]);
-    let cluster = Cluster::new(Generation::H100, 32);
-    let w = cluster.world_size();
-    for (label, tp, cp) in [("baseline", 1usize, 1usize),
-                            ("tp2", 2, 1), ("tp4", 4, 1),
-                            ("cp2", 1, 2), ("cp4", 1, 4)] {
-        let mp = tp * cp;
-        let cfg = SimConfig::fsdp(
-            LLAMA_7B, cluster, ParallelPlan::new(w / mp, tp, 1, cp),
-            256, 1, 4096);
-        if cfg.validate().is_err() {
-            continue;
-        }
-        let m = metrics::evaluate(&cfg);
-        t.row(vec![
-            label.to_string(),
-            cfg.plan.to_string(),
-            f0(m.global_wps),
-            f3(m.mfu),
-            ms(m.exposed_comm),
-        ]);
+         (Llama-7B, 32 nodes H100, gbs 256)"
     }
-    t.with_chart(2)
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let study = Study::builder("fig12")
+            .title(self.title())
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([32])
+            .plan_shapes(&[(1, 1, 1), (2, 1, 1), (4, 1, 1),
+                           (1, 1, 2), (1, 1, 4)])
+            .global_batches([256])
+            .micro_batches([1])
+            .build();
+        let res = runner.run(&study);
+        let mut t = Table::new(
+            "fig12", self.title(),
+            &["strategy", "plan", "global_wps", "mfu", "exposed_ms"]);
+        for c in &res.cases {
+            let label = match (c.plan.tp, c.plan.cp) {
+                (1, 1) => "baseline",
+                (2, 1) => "tp2",
+                (4, 1) => "tp4",
+                (1, 2) => "cp2",
+                (1, 4) => "cp4",
+                _ => "other",
+            };
+            t.row(vec![
+                label.to_string(),
+                c.plan.to_string(),
+                f0(c.metrics.global_wps),
+                f3(c.metrics.mfu),
+                ms(c.metrics.exposed_comm),
+            ]);
+        }
+        Ok(vec![t.with_chart(2)])
+    }
 }
 
 /// Fig. 13 — V100 generation (Appendix F).
-pub fn fig13() -> Table {
-    let mut t = Table::new(
-        "fig13",
+struct Fig13;
+
+impl Scenario for Fig13 {
+    fn name(&self) -> &'static str { "fig13" }
+    fn title(&self) -> &'static str {
         "V100: model parallelism still wins at scale; A100 improves \
-         utilization (Llama-7B, 32 nodes, lbs 1, fp16)",
-        &["gen", "plan", "global_wps", "mfu", "exposed_ms"]);
-    for gen in [Generation::V100, Generation::A100] {
-        let req = SweepRequest::fsdp(
-            LLAMA_7B, Cluster::new(gen, 32), 256, 4096);
-        for o in planner::sweep(&req)
-            .into_iter()
-            .filter(|o| o.micro_batch == 1 && o.plan.pp == 1
-                        && o.plan.cp == 1 && o.plan.tp <= 4)
-        {
-            t.row(vec![
-                gen.to_string(),
-                o.plan.to_string(),
-                f0(o.metrics.global_wps),
-                f3(o.metrics.mfu),
-                ms(o.metrics.exposed_comm),
-            ]);
-        }
+         utilization (Llama-7B, 32 nodes, lbs 1, fp16)"
     }
-    t
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "fig13", self.title(),
+            &["gen", "plan", "global_wps", "mfu", "exposed_ms"]);
+        for gen in [Generation::V100, Generation::A100] {
+            let mut res = runner.run(&strategy_sweep(
+                "fig13", self.title(), gen, 32, 256, Some(1)));
+            res.sort_by_wps();
+            res.retain(|o| o.plan.pp == 1
+                           && o.plan.cp == 1 && o.plan.tp <= 4);
+            for c in &res.cases {
+                t.row(vec![
+                    gen.to_string(),
+                    c.plan.to_string(),
+                    f0(c.metrics.global_wps),
+                    f3(c.metrics.mfu),
+                    ms(c.metrics.exposed_comm),
+                ]);
+            }
+        }
+        Ok(vec![t])
+    }
 }
 
 /// Fig. 14 — per-GPU memory vs data-parallel world size (Appendix G).
-pub fn fig14() -> Table {
-    let mut t = Table::new(
-        "fig14",
-        "FSDP memory savings diminish with scale (Llama-7B, lbs 2)",
-        &["dp", "total_gb", "param_shard_gb", "optimizer_gb",
-          "activations_gb", "unsharded_gb", "overhead_gb"]);
-    for dp in [8usize, 16, 32, 64, 128, 256, 512, 1024, 2048] {
-        let plan = ParallelPlan::data_parallel(dp);
-        let m = memory::per_gpu_memory(&LLAMA_7B, &plan, 2, 4096, 1);
-        t.row(vec![
-            dp.to_string(),
-            f2(m.total() / 1e9),
-            f2(m.params_shard / 1e9),
-            f2(m.optimizer_shard / 1e9),
-            f2(m.activations / 1e9),
-            f2(m.unsharded_working / 1e9),
-            f2((m.overhead + m.logits + m.grads_shard) / 1e9),
-        ]);
+struct Fig14;
+
+impl Scenario for Fig14 {
+    fn name(&self) -> &'static str { "fig14" }
+    fn title(&self) -> &'static str {
+        "FSDP memory savings diminish with scale (Llama-7B, lbs 2)"
     }
-    t.with_chart(1)
+
+    fn tables(&self, _runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "fig14", self.title(),
+            &["dp", "total_gb", "param_shard_gb", "optimizer_gb",
+              "activations_gb", "unsharded_gb", "overhead_gb"]);
+        for dp in [8usize, 16, 32, 64, 128, 256, 512, 1024, 2048] {
+            let plan = ParallelPlan::data_parallel(dp);
+            let m = memory::per_gpu_memory(&LLAMA_7B, &plan, 2, 4096, 1);
+            t.row(vec![
+                dp.to_string(),
+                f2(m.total() / 1e9),
+                f2(m.params_shard / 1e9),
+                f2(m.optimizer_shard / 1e9),
+                f2(m.activations / 1e9),
+                f2(m.unsharded_working / 1e9),
+                f2((m.overhead + m.logits + m.grads_shard) / 1e9),
+            ]);
+        }
+        Ok(vec![t.with_chart(1)])
+    }
 }
 
 /// Ablations of the design choices DESIGN.md calls out: explicit FSDP
 /// prefetch (§3), FSDP vs vanilla DDP collectives (§2/§5), and the §5
 /// "bigger NVLink domain" extrapolation (GB200).
-pub fn ablation() -> Table {
-    use crate::sim::Sharding;
-    let mut t = Table::new(
-        "ablation",
-        "Design ablations (Llama-7B, 64 nodes H100 unless noted)",
-        &["variant", "global_wps", "mfu", "exposed_ms", "wps_per_watt"]);
-    let cluster = Cluster::new(Generation::H100, 64);
-    let w = cluster.world_size();
-    let base = SimConfig::fsdp(
-        LLAMA_7B, cluster, ParallelPlan::data_parallel(w), 2 * w, 2,
-        4096);
-    let mut no_prefetch = base;
-    no_prefetch.prefetch = false;
-    let mut ddp = base;
-    ddp.sharding = Sharding::Ddp;
-    let mut hsdp = base;
-    hsdp.sharding = Sharding::Hsdp { group: 8 }; // shard within a node
-    let gb_cluster = Cluster::new(Generation::GB200, 8); // 576 GPUs
-    let gb = SimConfig::fsdp(
-        LLAMA_7B, gb_cluster,
-        ParallelPlan::data_parallel(gb_cluster.world_size()),
-        2 * gb_cluster.world_size(), 2, 4096);
-    for (name, cfg) in [
-        ("fsdp+prefetch (paper)", base),
-        ("fsdp no-prefetch", no_prefetch),
-        ("ddp allreduce", ddp),
-        ("hsdp group=8 (§6)", hsdp),
-        ("gb200 nvl72 (≈576 gpus)", gb),
-    ] {
-        let m = metrics::evaluate(&cfg);
-        t.row(vec![
-            name.to_string(),
-            f0(m.global_wps),
-            f3(m.mfu),
-            ms(m.exposed_comm),
-            f2(m.wps_per_watt),
-        ]);
+struct Ablation;
+
+impl Scenario for Ablation {
+    fn name(&self) -> &'static str { "ablation" }
+    fn title(&self) -> &'static str {
+        "Design ablations (Llama-7B, 64 nodes H100 unless noted)"
     }
-    t
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        use crate::sim::Sharding;
+        let mut t = Table::new(
+            "ablation", self.title(),
+            &["variant", "global_wps", "mfu", "exposed_ms",
+              "wps_per_watt"]);
+        let cluster = Cluster::new(Generation::H100, 64);
+        let w = cluster.world_size();
+        let base = SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::data_parallel(w), 2 * w, 2,
+            4096);
+        let mut no_prefetch = base;
+        no_prefetch.prefetch = false;
+        let mut ddp = base;
+        ddp.sharding = Sharding::Ddp;
+        let mut hsdp = base;
+        hsdp.sharding = Sharding::Hsdp { group: 8 }; // shard within a node
+        let gb_cluster = Cluster::new(Generation::GB200, 8); // 576 GPUs
+        let gb = SimConfig::fsdp(
+            LLAMA_7B, gb_cluster,
+            ParallelPlan::data_parallel(gb_cluster.world_size()),
+            2 * gb_cluster.world_size(), 2, 4096);
+        for (name, cfg) in [
+            ("fsdp+prefetch (paper)", base),
+            ("fsdp no-prefetch", no_prefetch),
+            ("ddp allreduce", ddp),
+            ("hsdp group=8 (§6)", hsdp),
+            ("gb200 nvl72 (≈576 gpus)", gb),
+        ] {
+            let m = runner.eval(&cfg).metrics;
+            t.row(vec![
+                name.to_string(),
+                f0(m.global_wps),
+                f3(m.mfu),
+                ms(m.exposed_comm),
+                f2(m.wps_per_watt),
+            ]);
+        }
+        Ok(vec![t])
+    }
 }
 
 /// The paper's §4.1/§4.4/§5 headline numbers, paper vs simulated.
-pub fn headline() -> Table {
-    let mut t = Table::new(
-        "headline",
-        "Headline claims: paper measurement vs this reproduction",
-        &["claim", "paper", "reproduced"]);
+struct Headline;
 
-    // §4.1: 128→2048 GPUs weak-scaling throughput drop + power.
-    let m128 = eval_weak(Generation::H100, 16);
-    let m2048 = eval_weak(Generation::H100, 256);
-    let drop = 100.0 * (1.0 - m2048.per_gpu_wps / m128.per_gpu_wps);
-    t.row(vec![
-        "WPS/TFLOPS drop, 128→2048 GPUs (weak)".into(),
-        "-37.22%".into(),
-        format!("-{drop:.2}%"),
-    ]);
-    t.row(vec![
-        "per-GPU power, compute- vs comm-bound".into(),
-        "658 W → 620 W (-5.87%)".into(),
-        format!("{:.0} W → {:.0} W ({:+.2}%)", m128.power_w,
-                m2048.power_w,
-                100.0 * (m2048.power_w / m128.power_w - 1.0)),
-    ]);
+impl Scenario for Headline {
+    fn name(&self) -> &'static str { "headline" }
+    fn title(&self) -> &'static str {
+        "Headline claims: paper measurement vs this reproduction"
+    }
 
-    // §5: TP at 2048 GPUs vs FSDP baseline.
-    let cluster = Cluster::new(Generation::H100, 256);
-    let w = cluster.world_size();
-    let best_tp = [2usize, 4]
-        .iter()
-        .map(|&tp| {
-            metrics::evaluate(&SimConfig::fsdp(
-                LLAMA_7B, cluster, ParallelPlan::new(w / tp, tp, 1, 1),
-                2 * (w / tp), 2, 4096))
-        })
-        .max_by(|a, b| a.global_wps.partial_cmp(&b.global_wps).unwrap())
-        .unwrap();
-    t.row(vec![
-        "TP(2-4) WPS gain at 2048 GPUs".into(),
-        "+52.60%".into(),
-        format!("{:+.2}%",
-                100.0 * (best_tp.global_wps / m2048.global_wps - 1.0)),
-    ]);
-    t.row(vec![
-        "TP(2-4) extra power per GPU at 2048".into(),
-        "+30 W".into(),
-        format!("{:+.0} W", best_tp.power_w - m2048.power_w),
-    ]);
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "headline", self.title(),
+            &["claim", "paper", "reproduced"]);
 
-    // §4.4: generation comparison at the per-gen optimum.
-    let opt = |gen| {
-        planner::best(&SweepRequest::fsdp(
-            LLAMA_7B, Cluster::new(gen, 32), 512, 4096))
-            .unwrap()
-            .metrics
-    };
-    let a100 = opt(Generation::A100);
-    let h100 = opt(Generation::H100);
-    t.row(vec![
-        "optimal MFU, A100 vs H100 (32 nodes)".into(),
-        "59.67% → 40.77%".into(),
-        format!("{:.2}% → {:.2}%", 100.0 * a100.mfu, 100.0 * h100.mfu),
-    ]);
-    t.row(vec![
-        "exposed-comm increase A100→H100".into(),
-        "+12.83%".into(),
-        format!("{:+.2}%", 100.0 * (h100.exposed_comm
-                                    / h100.iter_time
-                                    - a100.exposed_comm
-                                    / a100.iter_time)),
-    ]);
+        let weak = |runner: &mut StudyRunner, nodes: usize| {
+            let cluster = Cluster::new(Generation::H100, nodes);
+            let w = cluster.world_size();
+            runner.eval(&SimConfig::fsdp(
+                LLAMA_7B, cluster, ParallelPlan::data_parallel(w),
+                2 * w, 2, 4096)).metrics
+        };
 
-    // §4.2: strong-scaling MFU collapse 2→32 nodes.
-    let strong = |nodes| {
-        planner::best(&SweepRequest::fsdp(
-            LLAMA_7B, Cluster::new(Generation::H100, nodes), 32, 4096))
-            .unwrap()
-            .metrics
-    };
-    let s2 = strong(2);
-    let s32 = strong(32);
-    t.row(vec![
-        "strong-scaling MFU, 2 → 32 nodes (gbs 32)".into(),
-        "40% → <15%".into(),
-        format!("{:.1}% → {:.1}%", 100.0 * s2.mfu, 100.0 * s32.mfu),
-    ]);
-    t
+        // §4.1: 128→2048 GPUs weak-scaling throughput drop + power.
+        let m128 = weak(runner, 16);
+        let m2048 = weak(runner, 256);
+        let drop = 100.0 * (1.0 - m2048.per_gpu_wps / m128.per_gpu_wps);
+        t.row(vec![
+            "WPS/TFLOPS drop, 128→2048 GPUs (weak)".into(),
+            "-37.22%".into(),
+            format!("-{drop:.2}%"),
+        ]);
+        t.row(vec![
+            "per-GPU power, compute- vs comm-bound".into(),
+            "658 W → 620 W (-5.87%)".into(),
+            format!("{:.0} W → {:.0} W ({:+.2}%)", m128.power_w,
+                    m2048.power_w,
+                    100.0 * (m2048.power_w / m128.power_w - 1.0)),
+        ]);
+
+        // §5: TP at 2048 GPUs vs FSDP baseline.
+        let cluster = Cluster::new(Generation::H100, 256);
+        let w = cluster.world_size();
+        let best_tp = [2usize, 4]
+            .iter()
+            .map(|&tp| {
+                runner.eval(&SimConfig::fsdp(
+                    LLAMA_7B, cluster,
+                    ParallelPlan::new(w / tp, tp, 1, 1),
+                    2 * (w / tp), 2, 4096)).metrics
+            })
+            .max_by(|a, b| {
+                a.global_wps.partial_cmp(&b.global_wps).unwrap()
+            })
+            .unwrap();
+        t.row(vec![
+            "TP(2-4) WPS gain at 2048 GPUs".into(),
+            "+52.60%".into(),
+            format!("{:+.2}%",
+                    100.0 * (best_tp.global_wps / m2048.global_wps
+                             - 1.0)),
+        ]);
+        t.row(vec![
+            "TP(2-4) extra power per GPU at 2048".into(),
+            "+30 W".into(),
+            format!("{:+.0} W", best_tp.power_w - m2048.power_w),
+        ]);
+
+        // §4.4: generation comparison at the per-gen optimum.
+        let opt = |runner: &mut StudyRunner, gen| {
+            planner::best_in(
+                &SweepRequest::fsdp(
+                    LLAMA_7B, Cluster::new(gen, 32), 512, 4096),
+                runner)
+                .unwrap()
+                .metrics
+        };
+        let a100 = opt(runner, Generation::A100);
+        let h100 = opt(runner, Generation::H100);
+        t.row(vec![
+            "optimal MFU, A100 vs H100 (32 nodes)".into(),
+            "59.67% → 40.77%".into(),
+            format!("{:.2}% → {:.2}%", 100.0 * a100.mfu,
+                    100.0 * h100.mfu),
+        ]);
+        t.row(vec![
+            "exposed-comm increase A100→H100".into(),
+            "+12.83%".into(),
+            format!("{:+.2}%", 100.0 * (h100.exposed_comm
+                                        / h100.iter_time
+                                        - a100.exposed_comm
+                                        / a100.iter_time)),
+        ]);
+
+        // §4.2: strong-scaling MFU collapse 2→32 nodes.
+        let strong = |runner: &mut StudyRunner, nodes| {
+            planner::best_in(
+                &SweepRequest::fsdp(
+                    LLAMA_7B, Cluster::new(Generation::H100, nodes), 32,
+                    4096),
+                runner)
+                .unwrap()
+                .metrics
+        };
+        let s2 = strong(runner, 2);
+        let s32 = strong(runner, 32);
+        t.row(vec![
+            "strong-scaling MFU, 2 → 32 nodes (gbs 32)".into(),
+            "40% → <15%".into(),
+            format!("{:.1}% → {:.1}%", 100.0 * s2.mfu, 100.0 * s32.mfu),
+        ]);
+        Ok(vec![t])
+    }
 }

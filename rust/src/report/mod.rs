@@ -1,10 +1,17 @@
 //! Figure/table reproduction harness: regenerates every table and
-//! figure of the paper's evaluation from the simulator, writing CSVs to
-//! `reports/` and printing aligned tables + ASCII bar charts.
+//! figure of the paper's evaluation, writing CSVs to `reports/` and
+//! printing aligned tables + ASCII bar charts.
 //!
-//! See DESIGN.md §3 for the experiment index. Each `figN()` returns a
-//! `Table`; `run()` dispatches by name; `run_all()` regenerates the
-//! whole evaluation.
+//! Since the Study API refactor this module is a thin dispatcher: each
+//! experiment is a [`Scenario`](crate::study::Scenario) registered by
+//! `figures::register_all`, executed through a shared
+//! [`StudyRunner`](crate::study::StudyRunner) (parallel simulation +
+//! cross-figure deduplication), and emitted through CSV/console
+//! [`Sink`](crate::study::Sink)s. CSV schemas and cell formatting are
+//! unchanged from the old per-figure loops, and output is identical
+//! across runner thread counts; sweep-driven figures may carry extra
+//! rows vs. the pre-refactor harness because microbatch candidates
+//! now cover every divisor of the local batch (planner fix).
 
 pub mod figures;
 
@@ -12,142 +19,58 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::util::csv::CsvWriter;
+pub use crate::study::table::Table;
+use crate::study::{ConsoleSink, CsvSink, Registry, Sink, StudyRunner};
 
-/// A rendered experiment result.
-#[derive(Debug, Clone)]
-pub struct Table {
-    pub name: String,
-    pub title: String,
-    pub header: Vec<String>,
-    pub rows: Vec<Vec<String>>,
-    /// Optional column index to visualize as an ASCII bar chart.
-    pub chart_col: Option<usize>,
+/// All experiment names, in paper order (registration order).
+pub fn all_figures() -> Vec<&'static str> {
+    registry().names()
 }
 
-impl Table {
-    pub fn new(name: &str, title: &str, header: &[&str]) -> Table {
-        Table {
-            name: name.to_string(),
-            title: title.to_string(),
-            header: header.iter().map(|s| s.to_string()).collect(),
-            rows: Vec::new(),
-            chart_col: None,
-        }
-    }
-
-    pub fn row(&mut self, fields: Vec<String>) {
-        assert_eq!(fields.len(), self.header.len(),
-                   "row width mismatch in {}", self.name);
-        self.rows.push(fields);
-    }
-
-    pub fn with_chart(mut self, col: usize) -> Table {
-        self.chart_col = Some(col);
-        self
-    }
-
-    /// Write `reports/<name>.csv`.
-    pub fn write_csv(&self, out_dir: &Path) -> Result<()> {
-        let header: Vec<&str> =
-            self.header.iter().map(|s| s.as_str()).collect();
-        let mut w = CsvWriter::create(
-            out_dir.join(format!("{}.csv", self.name)), &header)?;
-        for r in &self.rows {
-            w.row(r)?;
-        }
-        w.finish()?;
-        Ok(())
-    }
-
-    /// Print an aligned text table (+ optional bar chart).
-    pub fn print(&self) {
-        println!("\n── {} ─ {}", self.name, self.title);
-        let mut widths: Vec<usize> =
-            self.header.iter().map(|h| h.len()).collect();
-        for r in &self.rows {
-            for (i, f) in r.iter().enumerate() {
-                widths[i] = widths[i].max(f.len());
-            }
-        }
-        let fmt_row = |r: &[String]| {
-            r.iter()
-                .enumerate()
-                .map(|(i, f)| format!("{:>w$}", f, w = widths[i]))
-                .collect::<Vec<_>>()
-                .join("  ")
-        };
-        println!("{}", fmt_row(&self.header));
-        for r in &self.rows {
-            println!("{}", fmt_row(r));
-        }
-        if let Some(col) = self.chart_col {
-            let vals: Vec<f64> = self
-                .rows
-                .iter()
-                .filter_map(|r| r[col].parse::<f64>().ok())
-                .collect();
-            if !vals.is_empty() {
-                let max = vals.iter().cloned().fold(f64::MIN, f64::max);
-                println!("\n  {} (bar chart)", self.header[col]);
-                for (r, v) in self.rows.iter().zip(&vals) {
-                    let bars =
-                        ((v / max) * 48.0).round().max(0.0) as usize;
-                    println!(
-                        "  {:>12} | {}{}",
-                        r[0],
-                        "█".repeat(bars),
-                        format_args!(" {:.4}", v)
-                    );
-                }
-            }
-        }
-    }
+/// The registry of every paper experiment.
+pub fn registry() -> Registry {
+    let mut reg = Registry::new();
+    figures::register_all(&mut reg);
+    reg
 }
 
-/// All experiment names in paper order.
-pub const ALL_FIGURES: &[&str] = &[
-    "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
-    "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "headline", "ablation",
-];
-
-/// Run one experiment by name; writes CSVs into `out_dir` and prints.
-pub fn run(name: &str, out_dir: &Path) -> Result<Vec<Table>> {
-    let tables = match name {
-        "table1" => vec![figures::table1()],
-        "fig1" => vec![figures::fig1()],
-        "fig2" => figures::fig2(),
-        "fig3" => vec![figures::fig3()],
-        "fig4" => vec![figures::fig4()],
-        "fig5" => vec![figures::fig5()],
-        "fig6" => vec![figures::fig6()],
-        "fig7" => figures::fig7(),
-        "fig8" => vec![figures::fig8()],
-        "fig9" => vec![figures::fig9()],
-        "fig10" => figures::fig10(),
-        "fig11" => vec![figures::fig11()],
-        "fig12" => vec![figures::fig12()],
-        "fig13" => vec![figures::fig13()],
-        "fig14" => vec![figures::fig14()],
-        "headline" => vec![figures::headline()],
-        "ablation" => vec![figures::ablation()],
-        other => anyhow::bail!(
-            "unknown experiment '{other}' (try: {})",
-            ALL_FIGURES.join(", ")),
+/// Run one experiment from `reg` through `runner`; writes CSVs into
+/// `out_dir` and prints each table.
+pub fn run_in(
+    reg: &Registry,
+    runner: &mut StudyRunner,
+    name: &str,
+    out_dir: &Path,
+) -> Result<Vec<Table>> {
+    let Some(scenario) = reg.get(name) else {
+        anyhow::bail!(
+            "unknown experiment '{name}' (try: {})",
+            reg.names().join(", "));
     };
+    let tables = scenario.tables(runner)?;
     std::fs::create_dir_all(out_dir)?;
+    let mut csv = CsvSink::new(out_dir);
+    let mut console = ConsoleSink;
     for t in &tables {
-        t.write_csv(out_dir)?;
-        t.print();
+        csv.emit(t)?;
+        console.emit(t)?;
     }
     Ok(tables)
 }
 
-/// Regenerate the entire evaluation section.
+/// Run one experiment by name; writes CSVs into `out_dir` and prints.
+pub fn run(name: &str, out_dir: &Path) -> Result<Vec<Table>> {
+    run_in(&registry(), &mut StudyRunner::auto(), name, out_dir)
+}
+
+/// Regenerate the entire evaluation section. One runner serves every
+/// figure, so configurations shared across figures (the weak-scaling
+/// ladder, the 256-GPU sweeps) simulate exactly once.
 pub fn run_all(out_dir: &Path) -> Result<()> {
-    for name in ALL_FIGURES {
-        run(name, out_dir)?;
+    let reg = registry();
+    let mut runner = StudyRunner::auto();
+    for name in reg.names() {
+        run_in(&reg, &mut runner, name, out_dir)?;
     }
     Ok(())
 }
@@ -179,5 +102,18 @@ mod tests {
     fn unknown_figure_rejected() {
         let dir = std::env::temp_dir().join("dtsim_report_test2");
         assert!(run("fig99", &dir).is_err());
+    }
+
+    #[test]
+    fn registry_holds_every_figure_in_paper_order() {
+        // The paper's experiment index; registration order is the
+        // single source of truth for dispatch, guarded here.
+        let expected = [
+            "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
+            "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+            "fig14", "headline", "ablation",
+        ];
+        assert_eq!(registry().names(), expected);
+        assert_eq!(all_figures(), expected);
     }
 }

@@ -30,7 +30,7 @@ use crate::parallelism::ParallelPlan;
 use crate::topology::Cluster;
 
 /// Data-parallel gradient/parameter sharding strategy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Sharding {
     /// Fully-sharded data parallelism (the paper's default).
     Fsdp,
@@ -42,6 +42,19 @@ pub enum Sharding {
     /// node), with a gradient AllReduce across the replica groups —
     /// keeping the latency-bound ring collectives small at scale.
     Hsdp { group: usize },
+}
+
+impl std::fmt::Display for Sharding {
+    /// Canonical spec string ("fsdp", "ddp", "hsdp:G") — the inverse
+    /// of `config::parse_sharding`; used by TOML serialization and
+    /// study table rendering.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Sharding::Fsdp => write!(f, "fsdp"),
+            Sharding::Ddp => write!(f, "ddp"),
+            Sharding::Hsdp { group } => write!(f, "hsdp:{group}"),
+        }
+    }
 }
 
 /// One simulated workload configuration.

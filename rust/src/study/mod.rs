@@ -1,0 +1,605 @@
+//! The Study experiment API: declarative sweep definitions, parallel
+//! execution, and a pluggable scenario registry.
+//!
+//! The paper's core argument (§4.3/§5) is that the optimal
+//! parallelization strategy must be *searched*, not assumed. This
+//! module makes that search a first-class object:
+//!
+//! * [`Study`] / [`StudyBuilder`] — declare a grid over architecture ×
+//!   hardware generation × cluster size × parallel plan × sharding ×
+//!   batch shape × sequence length, with feasibility constraints
+//!   (divisibility, device-memory cap) applied during expansion.
+//! * [`StudyRunner`] — expands the grid, deduplicates repeated
+//!   configurations via a config-key cache, and simulates the remainder
+//!   across `std::thread::scope` workers (the simulator is
+//!   embarrassingly parallel). Results come back in deterministic grid
+//!   order regardless of thread count.
+//! * [`Scenario`] + [`Registry`] — a named experiment (each paper
+//!   figure, or a user-defined study) that renders one or more
+//!   [`Table`]s; `dtsim study <name>` and `dtsim repro` both dispatch
+//!   through the registry.
+//! * [`Sink`] — one interface for emitting tables to the console, CSV,
+//!   or JSON.
+//!
+//! A figure definition reads like this (see `report::figures` for the
+//! full set):
+//!
+//! ```ignore
+//! let study = Study::builder("fig6")
+//!     .title("Model parallelism increases FSDP throughput")
+//!     .arch(LLAMA_7B)
+//!     .generation(Generation::H100)
+//!     .nodes([32])
+//!     .plans(PlanAxis::Sweep { with_cp: false })
+//!     .global_batches([512])
+//!     .micro_batch_divisors()
+//!     .memory_cap(0.94)
+//!     .build();
+//! let mut result = runner.run(&study);
+//! result.sort_by_wps();
+//! let table = result.table(&[Column::Plan, Column::Mbs, Column::GlobalWps]);
+//! ```
+
+pub mod runner;
+pub mod scenario;
+pub mod sink;
+pub mod table;
+
+pub use runner::{CaseResult, StudyResult, StudyRunner};
+pub use scenario::{Registry, Scenario};
+pub use sink::{ConsoleSink, CsvSink, JsonSink, Sink};
+pub use table::{Column, Table};
+
+use crate::hardware::Generation;
+use crate::memory;
+use crate::model::TransformerArch;
+use crate::parallelism::{enumerate_plans, ParallelPlan};
+use crate::sim::{Sharding, SimConfig};
+use crate::topology::Cluster;
+
+/// How the parallel-plan axis expands for each (generation, nodes)
+/// cluster in the grid.
+#[derive(Debug, Clone)]
+pub enum PlanAxis {
+    /// Pure FSDP: dp = world size.
+    DataParallel,
+    /// The paper's §3 sweep over tp/pp degrees {1,2,4,8,16} (and
+    /// optionally cp) that fill the cluster.
+    Sweep { with_cp: bool },
+    /// Explicit plans; ones not matching the cluster world are skipped.
+    Fixed(Vec<ParallelPlan>),
+    /// (tp, pp, cp) shapes with dp derived from the world size.
+    Shapes(Vec<(usize, usize, usize)>),
+}
+
+impl PlanAxis {
+    fn expand(&self, cluster: &Cluster, n_layers: usize) -> Vec<ParallelPlan> {
+        let world = cluster.world_size();
+        match self {
+            PlanAxis::DataParallel => {
+                vec![ParallelPlan::data_parallel(world)]
+            }
+            PlanAxis::Sweep { with_cp } => {
+                enumerate_plans(cluster, n_layers, *with_cp)
+            }
+            PlanAxis::Fixed(plans) => plans
+                .iter()
+                .copied()
+                .filter(|p| p.world_size() == world)
+                .collect(),
+            PlanAxis::Shapes(shapes) => shapes
+                .iter()
+                .filter_map(|&(tp, pp, cp)| {
+                    let mp = tp * pp * cp;
+                    if mp == 0 || world % mp != 0 {
+                        return None;
+                    }
+                    Some(ParallelPlan::new(world / mp, tp, pp, cp))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// How the global batch is derived for each plan.
+#[derive(Debug, Clone)]
+pub enum BatchAxis {
+    /// Explicit global batch sizes (strong scaling).
+    Fixed(Vec<usize>),
+    /// gbs = factor × dp — a fixed per-replica batch (weak scaling).
+    PerReplica(usize),
+}
+
+/// Which microbatch sizes to try for a per-replica batch.
+#[derive(Debug, Clone)]
+pub enum MicroBatchAxis {
+    Fixed(Vec<usize>),
+    /// Every divisor of the per-replica batch gbs/dp — no batch shape
+    /// is silently skipped (gbs 48 at dp 16 tries mbs 1 and 3).
+    Divisors,
+}
+
+/// All divisors of `n` in ascending order (empty for n = 0).
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d.saturating_mul(d) <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// One expanded, validated grid point plus its memory footprint.
+#[derive(Debug, Clone, Copy)]
+pub struct StudyPoint {
+    pub cfg: SimConfig,
+    pub mem_per_gpu: f64,
+}
+
+/// Cache/dedup key: the complete value identity of a `SimConfig` —
+/// the full architecture (not just its name, so a customized arch
+/// never aliases a preset's cache entry), the cluster shape, and
+/// every workload axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConfigKey {
+    arch: TransformerArch,
+    gen: Generation,
+    nodes: usize,
+    gpus_per_node: usize,
+    plan: ParallelPlan,
+    global_batch: usize,
+    micro_batch: usize,
+    seq_len: usize,
+    sharding: Sharding,
+    prefetch: bool,
+}
+
+impl ConfigKey {
+    pub fn of(cfg: &SimConfig) -> ConfigKey {
+        ConfigKey {
+            arch: cfg.arch,
+            gen: cfg.cluster.node.gpu,
+            nodes: cfg.cluster.nodes,
+            gpus_per_node: cfg.cluster.gpus_per_node(),
+            plan: cfg.plan,
+            global_batch: cfg.global_batch,
+            micro_batch: cfg.micro_batch,
+            seq_len: cfg.seq_len,
+            sharding: cfg.sharding,
+            prefetch: cfg.prefetch,
+        }
+    }
+}
+
+/// A declarative experiment grid. Build with [`Study::builder`].
+#[derive(Debug, Clone)]
+pub struct Study {
+    pub name: String,
+    pub title: String,
+    archs: Vec<TransformerArch>,
+    gens: Vec<Generation>,
+    nodes: Vec<usize>,
+    plans: PlanAxis,
+    batches: BatchAxis,
+    micro: MicroBatchAxis,
+    seqs: Vec<usize>,
+    shardings: Vec<Sharding>,
+    prefetch: Vec<bool>,
+    mem_cap_frac: Option<f64>,
+}
+
+impl Study {
+    pub fn builder(name: &str) -> StudyBuilder {
+        StudyBuilder {
+            name: name.to_string(),
+            title: String::new(),
+            archs: Vec::new(),
+            gens: vec![Generation::H100],
+            nodes: vec![1],
+            plans: PlanAxis::DataParallel,
+            batches: BatchAxis::PerReplica(2),
+            micro: MicroBatchAxis::Fixed(vec![2]),
+            seqs: vec![4096],
+            shardings: vec![Sharding::Fsdp],
+            prefetch: vec![true],
+            mem_cap_frac: None,
+        }
+    }
+
+    /// Expand the grid into validated, memory-feasible simulation
+    /// configurations. Expansion order is deterministic: axes nest
+    /// arch → generation → nodes → seq → sharding → prefetch → plan →
+    /// gbs → mbs, with plans in `enumerate_plans` order and microbatch
+    /// candidates ascending — the same candidate order the planner's
+    /// sweep has always used, so stable sorts preserve its tie-breaks.
+    pub fn expand(&self) -> Vec<StudyPoint> {
+        let mut points = Vec::new();
+        for arch in &self.archs {
+            for &gen in &self.gens {
+                for &nodes in &self.nodes {
+                    let cluster = Cluster::new(gen, nodes);
+                    for &seq in &self.seqs {
+                        for &sharding in &self.shardings {
+                            for &prefetch in &self.prefetch {
+                                self.expand_cluster(
+                                    arch, cluster, seq, sharding,
+                                    prefetch, &mut points);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        points
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn expand_cluster(
+        &self,
+        arch: &TransformerArch,
+        cluster: Cluster,
+        seq_len: usize,
+        sharding: Sharding,
+        prefetch: bool,
+        points: &mut Vec<StudyPoint>,
+    ) {
+        let mem_bytes = cluster.node.spec().mem_bytes;
+        for plan in self.plans.expand(&cluster, arch.n_layers) {
+            let gbs_list: Vec<usize> = match &self.batches {
+                BatchAxis::Fixed(v) => v.clone(),
+                BatchAxis::PerReplica(factor) => vec![factor * plan.dp],
+            };
+            for gbs in gbs_list {
+                if plan.dp == 0 || gbs % plan.dp != 0 {
+                    continue;
+                }
+                let local = gbs / plan.dp;
+                let mbs_list: Vec<usize> = match &self.micro {
+                    MicroBatchAxis::Fixed(v) => v.clone(),
+                    MicroBatchAxis::Divisors => divisors(local),
+                };
+                for mbs in mbs_list {
+                    if mbs == 0 || mbs > local || local % mbs != 0 {
+                        continue;
+                    }
+                    let cfg = SimConfig {
+                        arch: *arch,
+                        cluster,
+                        plan,
+                        global_batch: gbs,
+                        micro_batch: mbs,
+                        seq_len,
+                        sharding,
+                        prefetch,
+                    };
+                    if cfg.validate().is_err() {
+                        continue;
+                    }
+                    let in_flight = cfg.microbatches().min(plan.pp);
+                    let mem = memory::per_gpu_memory(
+                        arch, &plan, mbs, seq_len, in_flight);
+                    if let Some(frac) = self.mem_cap_frac {
+                        if mem.total() > mem_bytes * frac {
+                            continue;
+                        }
+                    }
+                    points.push(StudyPoint {
+                        cfg,
+                        mem_per_gpu: mem.total(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Fluent builder for [`Study`]. Every setter *replaces* its axis.
+#[derive(Debug, Clone)]
+pub struct StudyBuilder {
+    name: String,
+    title: String,
+    archs: Vec<TransformerArch>,
+    gens: Vec<Generation>,
+    nodes: Vec<usize>,
+    plans: PlanAxis,
+    batches: BatchAxis,
+    micro: MicroBatchAxis,
+    seqs: Vec<usize>,
+    shardings: Vec<Sharding>,
+    prefetch: Vec<bool>,
+    mem_cap_frac: Option<f64>,
+}
+
+impl StudyBuilder {
+    pub fn title(mut self, title: &str) -> Self {
+        self.title = title.to_string();
+        self
+    }
+
+    pub fn arch(self, arch: TransformerArch) -> Self {
+        self.archs([arch])
+    }
+
+    pub fn archs(mut self, archs: impl IntoIterator<Item = TransformerArch>) -> Self {
+        self.archs = archs.into_iter().collect();
+        self
+    }
+
+    pub fn generation(self, gen: Generation) -> Self {
+        self.generations([gen])
+    }
+
+    pub fn generations(mut self, gens: impl IntoIterator<Item = Generation>) -> Self {
+        self.gens = gens.into_iter().collect();
+        self
+    }
+
+    /// Cluster sizes in nodes (8 GPUs per DGX node; 72 for GB200).
+    pub fn nodes(mut self, nodes: impl IntoIterator<Item = usize>) -> Self {
+        self.nodes = nodes.into_iter().collect();
+        self
+    }
+
+    pub fn plans(mut self, plans: PlanAxis) -> Self {
+        self.plans = plans;
+        self
+    }
+
+    pub fn plan(self, plan: ParallelPlan) -> Self {
+        self.plans(PlanAxis::Fixed(vec![plan]))
+    }
+
+    pub fn plan_shapes(self, shapes: &[(usize, usize, usize)]) -> Self {
+        self.plans(PlanAxis::Shapes(shapes.to_vec()))
+    }
+
+    pub fn global_batches(mut self, gbs: impl IntoIterator<Item = usize>) -> Self {
+        self.batches = BatchAxis::Fixed(gbs.into_iter().collect());
+        self
+    }
+
+    /// Weak scaling: global batch = `per_replica` × dp.
+    pub fn batch_per_replica(mut self, per_replica: usize) -> Self {
+        self.batches = BatchAxis::PerReplica(per_replica);
+        self
+    }
+
+    pub fn micro_batches(mut self, mbs: impl IntoIterator<Item = usize>) -> Self {
+        self.micro = MicroBatchAxis::Fixed(mbs.into_iter().collect());
+        self
+    }
+
+    /// Try every divisor of the per-replica batch.
+    pub fn micro_batch_divisors(mut self) -> Self {
+        self.micro = MicroBatchAxis::Divisors;
+        self
+    }
+
+    pub fn seq_len(self, seq: usize) -> Self {
+        self.seq_lens([seq])
+    }
+
+    pub fn seq_lens(mut self, seqs: impl IntoIterator<Item = usize>) -> Self {
+        self.seqs = seqs.into_iter().collect();
+        self
+    }
+
+    pub fn sharding(self, sharding: Sharding) -> Self {
+        self.shardings([sharding])
+    }
+
+    pub fn shardings(mut self, shardings: impl IntoIterator<Item = Sharding>) -> Self {
+        self.shardings = shardings.into_iter().collect();
+        self
+    }
+
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = vec![on];
+        self
+    }
+
+    /// Evaluate both with and without explicit FSDP prefetch (§3).
+    pub fn prefetch_ablation(mut self) -> Self {
+        self.prefetch = vec![true, false];
+        self
+    }
+
+    /// Drop grid points whose per-GPU memory exceeds `frac` of device
+    /// HBM (the planner's feasibility filter uses 0.94).
+    pub fn memory_cap(mut self, frac: f64) -> Self {
+        self.mem_cap_frac = Some(frac);
+        self
+    }
+
+    /// Build, panicking on a malformed axis declaration (programmer
+    /// error — figure definitions are static). Use [`Self::try_build`]
+    /// for user-supplied grids.
+    pub fn build(self) -> Study {
+        match self.try_build() {
+            Ok(s) => s,
+            Err(e) => panic!("invalid study: {e}"),
+        }
+    }
+
+    pub fn try_build(self) -> Result<Study, String> {
+        if self.archs.is_empty() {
+            return Err(format!("study '{}' declares no architecture", self.name));
+        }
+        if self.gens.is_empty() || self.nodes.is_empty()
+            || self.seqs.is_empty() || self.shardings.is_empty()
+            || self.prefetch.is_empty()
+        {
+            return Err(format!("study '{}' has an empty axis", self.name));
+        }
+        if self.nodes.iter().any(|&n| n == 0) {
+            return Err("node counts must be >= 1".into());
+        }
+        if let Some(frac) = self.mem_cap_frac {
+            if !(frac > 0.0 && frac <= 1.0) {
+                return Err(format!("memory cap {frac} outside (0, 1]"));
+            }
+        }
+        Ok(Study {
+            name: self.name,
+            title: self.title,
+            archs: self.archs,
+            gens: self.gens,
+            nodes: self.nodes,
+            plans: self.plans,
+            batches: self.batches,
+            micro: self.micro,
+            seqs: self.seqs,
+            shardings: self.shardings,
+            prefetch: self.prefetch,
+            mem_cap_frac: self.mem_cap_frac,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LLAMA_7B;
+
+    #[test]
+    fn divisors_enumerates_all() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(48), vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 48]);
+        assert_eq!(divisors(7), vec![1, 7]);
+        assert!(divisors(0).is_empty());
+    }
+
+    #[test]
+    fn weak_scaling_study_expands_one_point_per_scale() {
+        let s = Study::builder("weak")
+            .arch(LLAMA_7B)
+            .nodes([1, 2, 4])
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .build();
+        let pts = s.expand();
+        assert_eq!(pts.len(), 3);
+        for (p, nodes) in pts.iter().zip([1usize, 2, 4]) {
+            assert_eq!(p.cfg.cluster.nodes, nodes);
+            assert_eq!(p.cfg.plan.dp, nodes * 8);
+            assert_eq!(p.cfg.global_batch, 2 * nodes * 8);
+            assert!(p.mem_per_gpu > 0.0);
+        }
+    }
+
+    #[test]
+    fn sweep_with_divisors_covers_odd_batch_shapes() {
+        // gbs 48 on 16 GPUs: dp 16 leaves a local batch of 3, which the
+        // old hardcoded {1,2,4,8} candidate set silently skipped.
+        let s = Study::builder("odd")
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([48])
+            .micro_batch_divisors()
+            .memory_cap(0.94)
+            .build();
+        let pts = s.expand();
+        assert!(pts.iter().any(|p| p.cfg.plan.dp == 16 && p.cfg.micro_batch == 3),
+                "divisor enumeration must try mbs=3 at dp=16");
+        for p in &pts {
+            let local = p.cfg.global_batch / p.cfg.plan.dp;
+            assert_eq!(local % p.cfg.micro_batch, 0);
+        }
+    }
+
+    #[test]
+    fn memory_cap_filters_points() {
+        let uncapped = Study::builder("u")
+            .arch(LLAMA_7B)
+            .nodes([1])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([64])
+            .micro_batch_divisors()
+            .build()
+            .expand();
+        let capped = Study::builder("c")
+            .arch(LLAMA_7B)
+            .nodes([1])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([64])
+            .micro_batch_divisors()
+            .memory_cap(0.94)
+            .build()
+            .expand();
+        assert!(capped.len() < uncapped.len(),
+                "{} !< {}", capped.len(), uncapped.len());
+        let cap = 80e9 * 0.94;
+        for p in &capped {
+            assert!(p.mem_per_gpu <= cap);
+        }
+    }
+
+    #[test]
+    fn shapes_axis_derives_dp() {
+        let s = Study::builder("shapes")
+            .arch(LLAMA_7B)
+            .nodes([4])
+            .plan_shapes(&[(1, 1, 1), (2, 1, 1), (1, 4, 1)])
+            .global_batches([64])
+            .micro_batches([1])
+            .build();
+        let plans: Vec<ParallelPlan> =
+            s.expand().iter().map(|p| p.cfg.plan).collect();
+        assert_eq!(plans, vec![
+            ParallelPlan::new(32, 1, 1, 1),
+            ParallelPlan::new(16, 2, 1, 1),
+            ParallelPlan::new(8, 1, 4, 1),
+        ]);
+    }
+
+    #[test]
+    fn config_key_distinguishes_custom_archs_sharing_a_name() {
+        let custom = TransformerArch { d_ff: 8192, ..LLAMA_7B };
+        let cluster = Cluster::new(Generation::H100, 1);
+        let mk = |arch| SimConfig::fsdp(
+            arch, cluster, ParallelPlan::data_parallel(8), 16, 2, 4096);
+        assert_ne!(ConfigKey::of(&mk(LLAMA_7B)), ConfigKey::of(&mk(custom)),
+                   "same-name archs with different shapes must not alias");
+        assert_eq!(ConfigKey::of(&mk(custom)), ConfigKey::of(&mk(custom)));
+    }
+
+    #[test]
+    fn config_key_distinguishes_every_axis() {
+        let s = Study::builder("k")
+            .arch(LLAMA_7B)
+            .nodes([1, 2])
+            .batch_per_replica(2)
+            .micro_batches([1, 2])
+            .build();
+        let pts = s.expand();
+        let keys: std::collections::HashSet<ConfigKey> =
+            pts.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
+        assert_eq!(keys.len(), pts.len());
+    }
+
+    #[test]
+    fn builder_rejects_bad_input() {
+        assert!(Study::builder("no-arch").try_build().is_err());
+        assert!(Study::builder("bad-cap")
+            .arch(LLAMA_7B)
+            .memory_cap(1.5)
+            .try_build()
+            .is_err());
+        assert!(Study::builder("zero-nodes")
+            .arch(LLAMA_7B)
+            .nodes([0])
+            .try_build()
+            .is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Study execution: expands a grid, skips configurations already
+//! simulated (keyed by [`ConfigKey`]), and evaluates the remainder
+//! across scoped worker threads.
+//!
+//! Determinism: results are assembled in grid-expansion order and every
+//! sort downstream is stable, so a run with 1 thread and a run with N
+//! threads produce byte-identical tables. The cache makes figure
+//! regeneration cheap too — the weak-scaling configs, for example, are
+//! shared by Fig. 1, Fig. 3, and the headline table, and are simulated
+//! exactly once per `StudyRunner`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::hardware::Generation;
+use crate::memory;
+use crate::metrics::{self, Metrics};
+use crate::parallelism::ParallelPlan;
+use crate::sim::{Sharding, SimConfig};
+
+use super::table::{Column, Table};
+use super::{ConfigKey, Study, StudyPoint};
+
+/// One simulated grid point with its full metric set.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub arch: &'static str,
+    pub gen: Generation,
+    pub nodes: usize,
+    pub plan: ParallelPlan,
+    pub global_batch: usize,
+    pub micro_batch: usize,
+    pub seq_len: usize,
+    pub sharding: Sharding,
+    pub metrics: Metrics,
+    pub mem_per_gpu: f64,
+}
+
+fn evaluate_point(p: &StudyPoint) -> CaseResult {
+    CaseResult {
+        arch: p.cfg.arch.name,
+        gen: p.cfg.cluster.node.gpu,
+        nodes: p.cfg.cluster.nodes,
+        plan: p.cfg.plan,
+        global_batch: p.cfg.global_batch,
+        micro_batch: p.cfg.micro_batch,
+        seq_len: p.cfg.seq_len,
+        sharding: p.cfg.sharding,
+        metrics: metrics::evaluate(&p.cfg),
+        mem_per_gpu: p.mem_per_gpu,
+    }
+}
+
+/// Executes studies with a shared simulation cache.
+pub struct StudyRunner {
+    threads: usize,
+    cache: HashMap<ConfigKey, CaseResult>,
+    evaluated: usize,
+    requested: usize,
+}
+
+impl StudyRunner {
+    /// Runner with an explicit worker-thread count (min 1).
+    pub fn new(threads: usize) -> StudyRunner {
+        StudyRunner {
+            threads: threads.max(1),
+            cache: HashMap::new(),
+            evaluated: 0,
+            requested: 0,
+        }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> StudyRunner {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        StudyRunner::new(n)
+    }
+
+    /// Single-threaded runner (reference ordering / benchmarks).
+    pub fn sequential() -> StudyRunner {
+        StudyRunner::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// (simulations actually run, grid points requested) so far —
+    /// the difference is what the cache deduplicated.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.evaluated, self.requested)
+    }
+
+    /// Expand and execute a study.
+    pub fn run(&mut self, study: &Study) -> StudyResult {
+        let points = study.expand();
+        self.run_points(&study.name, &study.title, &points)
+    }
+
+    /// Evaluate a single ad-hoc configuration through the cache. The
+    /// memory footprint uses the planner's in-flight-microbatch
+    /// convention.
+    pub fn eval(&mut self, cfg: &SimConfig) -> CaseResult {
+        let in_flight = cfg.microbatches().min(cfg.plan.pp);
+        let mem = memory::per_gpu_memory(
+            &cfg.arch, &cfg.plan, cfg.micro_batch, cfg.seq_len, in_flight);
+        let point = StudyPoint { cfg: *cfg, mem_per_gpu: mem.total() };
+        self.run_points("adhoc", "", &[point])
+            .cases
+            .pop()
+            .expect("single point evaluates to single case")
+    }
+
+    fn run_points(
+        &mut self,
+        name: &str,
+        title: &str,
+        points: &[StudyPoint],
+    ) -> StudyResult {
+        self.requested += points.len();
+
+        // Unique cache misses, preserving first-occurrence order.
+        let mut seen: HashSet<ConfigKey> = HashSet::new();
+        let mut todo: Vec<&StudyPoint> = Vec::new();
+        for p in points {
+            let key = ConfigKey::of(&p.cfg);
+            if !self.cache.contains_key(&key) && seen.insert(key) {
+                todo.push(p);
+            }
+        }
+        self.evaluated += todo.len();
+
+        let keys: Vec<ConfigKey> =
+            todo.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
+        let fresh = evaluate_all(&todo, self.threads);
+        for (key, case) in keys.into_iter().zip(fresh) {
+            self.cache.insert(key, case);
+        }
+
+        let cases = points
+            .iter()
+            .map(|p| {
+                self.cache
+                    .get(&ConfigKey::of(&p.cfg))
+                    .expect("every requested point evaluated")
+                    .clone()
+            })
+            .collect();
+        StudyResult {
+            name: name.to_string(),
+            title: title.to_string(),
+            cases,
+        }
+    }
+}
+
+/// Evaluate all points, in parallel when `threads > 1`. Output order
+/// matches input order.
+fn evaluate_all(points: &[&StudyPoint], threads: usize) -> Vec<CaseResult> {
+    if threads <= 1 || points.len() <= 1 {
+        return points.iter().map(|p| evaluate_point(p)).collect();
+    }
+    let slots: Vec<Mutex<Option<CaseResult>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(points.len());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let case = evaluate_point(points[i]);
+                *slots[i].lock().unwrap() = Some(case);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("worker thread poisoned a result slot")
+                .expect("every slot filled by the work loop")
+        })
+        .collect()
+}
+
+/// Results of one study run, in grid-expansion order until sorted.
+#[derive(Debug, Clone)]
+pub struct StudyResult {
+    pub name: String,
+    pub title: String,
+    pub cases: Vec<CaseResult>,
+}
+
+impl StudyResult {
+    /// Stable sort by global throughput, best first (the planner's
+    /// ranking; ties keep grid order).
+    pub fn sort_by_wps(&mut self) {
+        self.cases.sort_by(|a, b| {
+            b.metrics
+                .global_wps
+                .partial_cmp(&a.metrics.global_wps)
+                .expect("throughput is never NaN")
+        });
+    }
+
+    /// Highest-throughput case (first on ties, matching a stable sort).
+    pub fn best(&self) -> Option<&CaseResult> {
+        let mut best: Option<&CaseResult> = None;
+        for c in &self.cases {
+            let better = match best {
+                None => true,
+                Some(b) => c.metrics.global_wps > b.metrics.global_wps,
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+        best
+    }
+
+    /// Best case per key, keys in first-occurrence order (e.g. the
+    /// optimal plan per cluster size: `best_per(|c| c.nodes)`).
+    pub fn best_per<K: PartialEq>(
+        &self,
+        key: impl Fn(&CaseResult) -> K,
+    ) -> Vec<&CaseResult> {
+        let mut keys: Vec<K> = Vec::new();
+        let mut best: Vec<&CaseResult> = Vec::new();
+        for c in &self.cases {
+            let k = key(c);
+            match keys.iter().position(|existing| *existing == k) {
+                Some(i) => {
+                    if c.metrics.global_wps > best[i].metrics.global_wps {
+                        best[i] = c;
+                    }
+                }
+                None => {
+                    keys.push(k);
+                    best.push(c);
+                }
+            }
+        }
+        best
+    }
+
+    pub fn retain(&mut self, f: impl FnMut(&CaseResult) -> bool) {
+        self.cases.retain(f);
+    }
+
+    pub fn truncate(&mut self, n: usize) {
+        self.cases.truncate(n);
+    }
+
+    /// Render with default column headers.
+    pub fn table(&self, columns: &[Column]) -> Table {
+        let headers: Vec<&str> =
+            columns.iter().map(|c| c.header()).collect();
+        self.table_renamed(&headers, columns)
+    }
+
+    /// Render with explicit headers (lengths must match).
+    pub fn table_renamed(&self, headers: &[&str], columns: &[Column]) -> Table {
+        assert_eq!(headers.len(), columns.len(),
+                   "header/column count mismatch in {}", self.name);
+        let mut t = Table::new(&self.name, &self.title, headers);
+        for c in &self.cases {
+            t.row(columns.iter().map(|col| col.cell(c)).collect());
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LLAMA_7B;
+    use crate::study::{PlanAxis, Study};
+
+    fn small_sweep(name: &str) -> Study {
+        Study::builder(name)
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([64])
+            .micro_batch_divisors()
+            .memory_cap(0.94)
+            .build()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_order() {
+        let study = small_sweep("order");
+        let seq = StudyRunner::sequential().run(&study);
+        let par = StudyRunner::new(8).run(&study);
+        assert!(!seq.cases.is_empty());
+        assert_eq!(seq.cases.len(), par.cases.len());
+        for (a, b) in seq.cases.iter().zip(&par.cases) {
+            assert_eq!(a.plan, b.plan);
+            assert_eq!(a.micro_batch, b.micro_batch);
+            assert_eq!(a.metrics.global_wps, b.metrics.global_wps);
+        }
+    }
+
+    #[test]
+    fn cache_deduplicates_repeat_runs() {
+        let study = small_sweep("cache");
+        let mut runner = StudyRunner::sequential();
+        let first = runner.run(&study);
+        let (evaluated, requested) = runner.stats();
+        assert_eq!(evaluated, requested);
+        assert_eq!(evaluated, first.cases.len());
+        let second = runner.run(&study);
+        let (evaluated2, requested2) = runner.stats();
+        assert_eq!(evaluated2, evaluated, "second run must be all cache hits");
+        assert_eq!(requested2, 2 * requested);
+        assert_eq!(second.cases.len(), first.cases.len());
+    }
+
+    #[test]
+    fn sort_and_best_agree() {
+        let mut res = StudyRunner::sequential().run(&small_sweep("best"));
+        let best_wps = res.best().unwrap().metrics.global_wps;
+        res.sort_by_wps();
+        assert_eq!(res.cases[0].metrics.global_wps, best_wps);
+        for w in res.cases.windows(2) {
+            assert!(w[0].metrics.global_wps >= w[1].metrics.global_wps);
+        }
+    }
+
+    #[test]
+    fn best_per_groups_in_first_occurrence_order() {
+        let study = Study::builder("per-scale")
+            .arch(LLAMA_7B)
+            .nodes([1, 2, 4])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([32])
+            .micro_batch_divisors()
+            .memory_cap(0.94)
+            .build();
+        let res = StudyRunner::sequential().run(&study);
+        let winners = res.best_per(|c| c.nodes);
+        let node_order: Vec<usize> = winners.iter().map(|c| c.nodes).collect();
+        assert_eq!(node_order, vec![1, 2, 4]);
+        for w in &winners {
+            for c in res.cases.iter().filter(|c| c.nodes == w.nodes) {
+                assert!(w.metrics.global_wps >= c.metrics.global_wps);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_caches_adhoc_configs() {
+        let cfg = crate::sim::SimConfig::fsdp(
+            LLAMA_7B,
+            crate::topology::Cluster::new(crate::hardware::Generation::H100, 2),
+            ParallelPlan::data_parallel(16),
+            32, 2, 4096);
+        let mut runner = StudyRunner::sequential();
+        let a = runner.eval(&cfg);
+        let b = runner.eval(&cfg);
+        assert_eq!(runner.stats().0, 1);
+        assert_eq!(a.metrics.global_wps, b.metrics.global_wps);
+        assert!(a.mem_per_gpu > 0.0);
+    }
+}

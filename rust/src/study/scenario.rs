@@ -1,0 +1,119 @@
+//! Named experiments and the registry that dispatches them.
+//!
+//! A [`Scenario`] is a self-contained experiment definition: it
+//! declares one or more studies, runs them through a caller-provided
+//! [`StudyRunner`] (so simulations are cached across scenarios), and
+//! renders [`Table`]s. Every paper figure is a registered scenario
+//! (`report::figures`), and downstream users register their own — see
+//! `examples/study_api.rs`.
+
+use anyhow::Result;
+
+use super::runner::StudyRunner;
+use super::table::Table;
+
+/// A named, registrable experiment.
+pub trait Scenario: Send + Sync {
+    /// Registry key (`dtsim study <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `dtsim study --list`.
+    fn title(&self) -> &'static str;
+
+    /// Execute and render. The runner is shared so repeated
+    /// configurations across scenarios simulate once.
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>>;
+}
+
+/// An ordered collection of scenarios, looked up by name.
+#[derive(Default)]
+pub struct Registry {
+    items: Vec<Box<dyn Scenario>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { items: Vec::new() }
+    }
+
+    /// Add a scenario. Panics on a duplicate name — registration is
+    /// static wiring, and a silent shadow would be a footgun.
+    pub fn register(&mut self, scenario: Box<dyn Scenario>) {
+        assert!(
+            self.get(scenario.name()).is_none(),
+            "duplicate scenario '{}'",
+            scenario.name()
+        );
+        self.items.push(scenario);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&dyn Scenario> {
+        self.items
+            .iter()
+            .find(|s| s.name() == name)
+            .map(|b| b.as_ref())
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.items.iter().map(|s| s.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Scenario> {
+        self.items.iter().map(|b| b.as_ref())
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy(&'static str);
+
+    impl Scenario for Dummy {
+        fn name(&self) -> &'static str {
+            self.0
+        }
+        fn title(&self) -> &'static str {
+            "dummy"
+        }
+        fn tables(&self, _runner: &mut StudyRunner) -> Result<Vec<Table>> {
+            Ok(vec![Table::new(self.0, "dummy", &["a"])])
+        }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let mut reg = Registry::new();
+        assert!(reg.is_empty());
+        reg.register(Box::new(Dummy("one")));
+        reg.register(Box::new(Dummy("two")));
+        assert_eq!(reg.names(), vec!["one", "two"]);
+        assert_eq!(reg.get("two").unwrap().title(), "dummy");
+        assert!(reg.get("three").is_none());
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate scenario")]
+    fn duplicate_names_rejected() {
+        let mut reg = Registry::new();
+        reg.register(Box::new(Dummy("one")));
+        reg.register(Box::new(Dummy("one")));
+    }
+
+    #[test]
+    fn scenario_renders_through_runner() {
+        let mut runner = StudyRunner::sequential();
+        let tables = Dummy("d").tables(&mut runner).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].name, "d");
+    }
+}

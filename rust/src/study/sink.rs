@@ -1,0 +1,127 @@
+//! Result sinks: one interface for emitting rendered tables to the
+//! console, CSV files, or JSON files. The figure harness and the
+//! `dtsim study` CLI compose these instead of hardcoding output paths.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::escape;
+
+use super::table::Table;
+
+/// Something a rendered table can be written to.
+pub trait Sink {
+    fn emit(&mut self, table: &Table) -> std::io::Result<()>;
+}
+
+/// Writes `<dir>/<table name>.csv` (the harness's historical format —
+/// bytes are identical to the pre-Study writer).
+pub struct CsvSink {
+    dir: PathBuf,
+}
+
+impl CsvSink {
+    pub fn new(dir: impl Into<PathBuf>) -> CsvSink {
+        CsvSink { dir: dir.into() }
+    }
+}
+
+impl Sink for CsvSink {
+    fn emit(&mut self, table: &Table) -> std::io::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        table.write_csv(&self.dir)
+    }
+}
+
+/// Writes `<dir>/<table name>.json`:
+/// `{"name", "title", "header": [...], "rows": [[...], ...]}`.
+pub struct JsonSink {
+    dir: PathBuf,
+}
+
+impl JsonSink {
+    pub fn new(dir: impl Into<PathBuf>) -> JsonSink {
+        JsonSink { dir: dir.into() }
+    }
+
+    fn render(table: &Table) -> String {
+        let strings = |fields: &[String]| {
+            fields
+                .iter()
+                .map(|f| format!("\"{}\"", escape(f)))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let rows = table
+            .rows
+            .iter()
+            .map(|r| format!("[{}]", strings(r)))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"name\":\"{}\",\"title\":\"{}\",\"header\":[{}],\"rows\":[{}]}}\n",
+            escape(&table.name),
+            escape(&table.title),
+            strings(&table.header),
+            rows
+        )
+    }
+}
+
+impl Sink for JsonSink {
+    fn emit(&mut self, table: &Table) -> std::io::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path: &Path = &self.dir.join(format!("{}.json", table.name));
+        std::fs::write(path, Self::render(table))
+    }
+}
+
+/// Prints the aligned text table (+ optional ASCII chart) to stdout.
+pub struct ConsoleSink;
+
+impl Sink for ConsoleSink {
+    fn emit(&mut self, table: &Table) -> std::io::Result<()> {
+        table.print();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample() -> Table {
+        let mut t = Table::new("sink_test", "a \"title\"", &["plan", "wps"]);
+        t.row(vec!["dp8".into(), "1234".into()]);
+        t.row(vec!["tp2,x".into(), "5678".into()]);
+        t
+    }
+
+    #[test]
+    fn csv_sink_matches_table_writer() {
+        let dir = std::env::temp_dir().join("dtsim_sink_csv");
+        CsvSink::new(&dir).emit(&sample()).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("sink_test.csv")).unwrap();
+        assert_eq!(text, "plan,wps\ndp8,1234\n\"tp2,x\",5678\n");
+    }
+
+    #[test]
+    fn json_sink_emits_parseable_json() {
+        let dir = std::env::temp_dir().join("dtsim_sink_json");
+        JsonSink::new(&dir).emit(&sample()).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("sink_test.json")).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "sink_test");
+        assert_eq!(v.get("title").unwrap().as_str().unwrap(), "a \"title\"");
+        let rows = v.get("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].as_array().unwrap()[0].as_str().unwrap(), "tp2,x");
+    }
+
+    #[test]
+    fn console_sink_is_infallible() {
+        ConsoleSink.emit(&sample()).unwrap();
+    }
+}

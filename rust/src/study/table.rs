@@ -1,0 +1,217 @@
+//! Rendered experiment results: the `Table` type every scenario and
+//! sink works in terms of, plus the declarative `Column` vocabulary
+//! that turns a `CaseResult` row into formatted cells.
+//!
+//! `Table` moved here from `report` when the Study API became the
+//! crate's experiment surface; `report` re-exports it for
+//! compatibility. CSV output is byte-identical to the old writer.
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+
+use super::runner::CaseResult;
+
+/// A rendered experiment result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    pub name: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Optional column index to visualize as an ASCII bar chart.
+    pub chart_col: Option<usize>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, header: &[&str]) -> Table {
+        Table {
+            name: name.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            chart_col: None,
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) {
+        assert_eq!(fields.len(), self.header.len(),
+                   "row width mismatch in {}", self.name);
+        self.rows.push(fields);
+    }
+
+    pub fn with_chart(mut self, col: usize) -> Table {
+        self.chart_col = Some(col);
+        self
+    }
+
+    /// Write `<out_dir>/<name>.csv`.
+    pub fn write_csv(&self, out_dir: &Path) -> std::io::Result<()> {
+        let header: Vec<&str> =
+            self.header.iter().map(|s| s.as_str()).collect();
+        let mut w = CsvWriter::create(
+            out_dir.join(format!("{}.csv", self.name)), &header)?;
+        for r in &self.rows {
+            w.row(r)?;
+        }
+        w.finish()?;
+        Ok(())
+    }
+
+    /// Print an aligned text table (+ optional bar chart).
+    pub fn print(&self) {
+        println!("\n── {} ─ {}", self.name, self.title);
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, f) in r.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let fmt_row = |r: &[String]| {
+            r.iter()
+                .enumerate()
+                .map(|(i, f)| format!("{:>w$}", f, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+        if let Some(col) = self.chart_col {
+            let vals: Vec<f64> = self
+                .rows
+                .iter()
+                .filter_map(|r| r[col].parse::<f64>().ok())
+                .collect();
+            if !vals.is_empty() {
+                let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+                println!("\n  {} (bar chart)", self.header[col]);
+                for (r, v) in self.rows.iter().zip(&vals) {
+                    let bars =
+                        ((v / max) * 48.0).round().max(0.0) as usize;
+                    println!(
+                        "  {:>12} | {}{}",
+                        r[0],
+                        "█".repeat(bars),
+                        format_args!(" {:.4}", v)
+                    );
+                }
+            }
+        }
+    }
+}
+
+// Shared numeric formatters (the figure harness's house style).
+pub fn f0(x: f64) -> String { format!("{x:.0}") }
+pub fn f2(x: f64) -> String { format!("{x:.2}") }
+pub fn f3(x: f64) -> String { format!("{x:.3}") }
+/// Seconds rendered as milliseconds with one decimal.
+pub fn ms(x: f64) -> String { format!("{:.1}", x * 1e3) }
+
+/// One declaratively-rendered column of a study result table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Column {
+    Arch,
+    Gen,
+    Nodes,
+    Gpus,
+    Plan,
+    ShardingKind,
+    Mbs,
+    Gbs,
+    SeqLen,
+    GlobalWps,
+    PerGpuWps,
+    Mfu,
+    ExposedMs,
+    CommMs,
+    ComputeMs,
+    PowerW,
+    TotalPowerKw,
+    WpsPerWatt,
+    EnergyPerTokenJ,
+    MemGb,
+}
+
+impl Column {
+    pub fn header(self) -> &'static str {
+        match self {
+            Column::Arch => "arch",
+            Column::Gen => "gen",
+            Column::Nodes => "nodes",
+            Column::Gpus => "gpus",
+            Column::Plan => "plan",
+            Column::ShardingKind => "sharding",
+            Column::Mbs => "mbs",
+            Column::Gbs => "gbs",
+            Column::SeqLen => "seq_len",
+            Column::GlobalWps => "global_wps",
+            Column::PerGpuWps => "wps_per_gpu",
+            Column::Mfu => "mfu",
+            Column::ExposedMs => "exposed_ms",
+            Column::CommMs => "comm_ms",
+            Column::ComputeMs => "compute_ms",
+            Column::PowerW => "power_w",
+            Column::TotalPowerKw => "total_power_kw",
+            Column::WpsPerWatt => "wps_per_watt",
+            Column::EnergyPerTokenJ => "j_per_token",
+            Column::MemGb => "mem_gb",
+        }
+    }
+
+    pub fn cell(self, c: &CaseResult) -> String {
+        let m = &c.metrics;
+        match self {
+            Column::Arch => c.arch.to_string(),
+            Column::Gen => c.gen.to_string(),
+            Column::Nodes => c.nodes.to_string(),
+            Column::Gpus => m.world.to_string(),
+            Column::Plan => c.plan.to_string(),
+            Column::ShardingKind => c.sharding.to_string(),
+            Column::Mbs => c.micro_batch.to_string(),
+            Column::Gbs => c.global_batch.to_string(),
+            Column::SeqLen => c.seq_len.to_string(),
+            Column::GlobalWps => f0(m.global_wps),
+            Column::PerGpuWps => f0(m.per_gpu_wps),
+            Column::Mfu => f3(m.mfu),
+            Column::ExposedMs => ms(m.exposed_comm),
+            Column::CommMs => ms(m.comm_time),
+            Column::ComputeMs => ms(m.compute_time),
+            Column::PowerW => f0(m.power_w),
+            Column::TotalPowerKw => f2(m.total_power_w / 1e3),
+            Column::WpsPerWatt => f2(m.wps_per_watt),
+            Column::EnergyPerTokenJ => f2(m.energy_per_token_j),
+            Column::MemGb => f2(c.mem_per_gpu / 1e9),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Sharding;
+
+    #[test]
+    fn column_headers_are_stable() {
+        assert_eq!(Column::GlobalWps.header(), "global_wps");
+        assert_eq!(Column::PerGpuWps.header(), "wps_per_gpu");
+        assert_eq!(Column::MemGb.header(), "mem_gb");
+    }
+
+    #[test]
+    fn sharding_labels() {
+        assert_eq!(Sharding::Fsdp.to_string(), "fsdp");
+        assert_eq!(Sharding::Ddp.to_string(), "ddp");
+        assert_eq!(Sharding::Hsdp { group: 8 }.to_string(), "hsdp:8");
+    }
+
+    #[test]
+    fn formatters_match_house_style() {
+        assert_eq!(f0(123.6), "124");
+        assert_eq!(f2(1.005), "1.00");
+        assert_eq!(f3(0.12345), "0.123");
+        assert_eq!(ms(0.0123), "12.3");
+    }
+}

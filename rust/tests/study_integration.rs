@@ -1,0 +1,203 @@
+//! Integration tests for the Study experiment API: registry coverage,
+//! parallel-vs-sequential determinism (byte-identical CSVs), cache
+//! behaviour across scenarios, sink output, and planner equivalence —
+//! exercised through the same public surface the CLI uses.
+
+use std::path::PathBuf;
+
+use dtsim::hardware::Generation;
+use dtsim::model::LLAMA_7B;
+use dtsim::planner::{self, SweepRequest};
+use dtsim::report;
+use dtsim::study::{
+    Column, CsvSink, JsonSink, PlanAxis, Registry, Scenario, Sink,
+    Study, StudyRunner, Table,
+};
+use dtsim::topology::Cluster;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dtsim_study_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn every_figure_is_a_registered_scenario() {
+    let reg = report::registry();
+    let names = report::all_figures();
+    assert_eq!(names.len(), 17);
+    for name in names {
+        let sc = reg.get(name)
+            .unwrap_or_else(|| panic!("no scenario for {name}"));
+        assert_eq!(sc.name(), name);
+        assert!(!sc.title().is_empty());
+    }
+}
+
+#[test]
+fn parallel_figure_generation_is_byte_identical_to_sequential() {
+    // The acceptance bar for the runner: regenerating figures through
+    // N worker threads must produce byte-identical CSVs to a
+    // single-threaded pass.
+    let reg = report::registry();
+    for fig in ["fig1", "fig6", "fig9"] {
+        let sc = reg.get(fig).unwrap();
+        let seq = sc.tables(&mut StudyRunner::sequential()).unwrap();
+        let par = sc.tables(&mut StudyRunner::new(8)).unwrap();
+        assert_eq!(seq, par, "{fig} tables diverge across thread counts");
+
+        let dir_seq = tmp_dir(&format!("{fig}_seq"));
+        let dir_par = tmp_dir(&format!("{fig}_par"));
+        for t in &seq {
+            CsvSink::new(&dir_seq).emit(t).unwrap();
+        }
+        for t in &par {
+            CsvSink::new(&dir_par).emit(t).unwrap();
+        }
+        for t in &seq {
+            let name = format!("{}.csv", t.name);
+            let a = std::fs::read(dir_seq.join(&name)).unwrap();
+            let b = std::fs::read(dir_par.join(&name)).unwrap();
+            assert_eq!(a, b, "{name} bytes diverge across thread counts");
+        }
+    }
+}
+
+#[test]
+fn runner_cache_spans_scenarios() {
+    // Fig. 1 and Fig. 3 render different columns of the SAME
+    // weak-scaling configurations; a shared runner must simulate each
+    // scale once.
+    let reg = report::registry();
+    let mut runner = StudyRunner::sequential();
+    reg.get("fig1").unwrap().tables(&mut runner).unwrap();
+    let (evaluated_after_fig1, _) = runner.stats();
+    reg.get("fig3").unwrap().tables(&mut runner).unwrap();
+    let (evaluated_after_fig3, requested) = runner.stats();
+    assert_eq!(evaluated_after_fig1, evaluated_after_fig3,
+               "fig3 must be served entirely from fig1's cache");
+    assert!(requested > evaluated_after_fig3);
+}
+
+#[test]
+fn study_cli_scenario_matches_repro_output() {
+    // `dtsim study fig6` and `dtsim repro fig6` run the same
+    // registered scenario; their CSVs must agree.
+    let dir_a = tmp_dir("repro_fig6");
+    let dir_b = tmp_dir("study_fig6");
+    let via_repro = report::run("fig6", &dir_a).unwrap();
+    let reg = report::registry();
+    let via_study = report::run_in(
+        &reg, &mut StudyRunner::auto(), "fig6", &dir_b).unwrap();
+    assert_eq!(via_repro, via_study);
+    let a = std::fs::read(dir_a.join("fig6.csv")).unwrap();
+    let b = std::fs::read(dir_b.join("fig6.csv")).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn planner_sweep_equals_study_sweep() {
+    // The planner is now a thin wrapper over the study machinery;
+    // spot-check that its contract held.
+    let req = SweepRequest::fsdp(
+        LLAMA_7B, Cluster::new(Generation::H100, 4), 64, 4096);
+    let outcomes = planner::sweep(&req);
+    assert!(!outcomes.is_empty());
+
+    let study = Study::builder("mirror")
+        .arch(LLAMA_7B)
+        .generation(Generation::H100)
+        .nodes([4])
+        .plans(PlanAxis::Sweep { with_cp: false })
+        .global_batches([64])
+        .micro_batch_divisors()
+        .memory_cap(planner::MEM_CAP_FRAC)
+        .build();
+    let mut res = StudyRunner::sequential().run(&study);
+    res.sort_by_wps();
+    assert_eq!(outcomes.len(), res.cases.len());
+    for (o, c) in outcomes.iter().zip(&res.cases) {
+        assert_eq!(o.plan, c.plan);
+        assert_eq!(o.micro_batch, c.micro_batch);
+        assert_eq!(o.metrics.global_wps, c.metrics.global_wps);
+        assert_eq!(o.mem_per_gpu, c.mem_per_gpu);
+    }
+}
+
+#[test]
+fn custom_scenarios_register_alongside_builtins() {
+    struct Tiny;
+    impl Scenario for Tiny {
+        fn name(&self) -> &'static str { "tiny-study" }
+        fn title(&self) -> &'static str { "one-node smoke study" }
+        fn tables(&self, runner: &mut StudyRunner)
+            -> anyhow::Result<Vec<Table>>
+        {
+            let res = runner.run(
+                &Study::builder("tiny-study")
+                    .title(self.title())
+                    .arch(LLAMA_7B)
+                    .nodes([1])
+                    .batch_per_replica(2)
+                    .micro_batches([2])
+                    .build());
+            Ok(vec![res.table(&[
+                Column::Nodes, Column::GlobalWps, Column::Mfu,
+            ])])
+        }
+    }
+
+    let mut reg = Registry::new();
+    dtsim::report::figures::register_all(&mut reg);
+    reg.register(Box::new(Tiny));
+    let mut runner = StudyRunner::sequential();
+    let tables = reg.get("tiny-study").unwrap()
+        .tables(&mut runner).unwrap();
+    assert_eq!(tables.len(), 1);
+    assert_eq!(tables[0].header, vec!["nodes", "global_wps", "mfu"]);
+    assert_eq!(tables[0].rows.len(), 1);
+}
+
+#[test]
+fn json_sink_round_trips_a_figure() {
+    let reg = report::registry();
+    let tables = reg.get("fig9").unwrap()
+        .tables(&mut StudyRunner::sequential()).unwrap();
+    let dir = tmp_dir("json_fig9");
+    for t in &tables {
+        JsonSink::new(&dir).emit(t).unwrap();
+    }
+    let text = std::fs::read_to_string(dir.join("fig9.json")).unwrap();
+    let v = dtsim::util::json::Json::parse(&text).unwrap();
+    assert_eq!(v.get("name").unwrap().as_str().unwrap(), "fig9");
+    let header = v.get("header").unwrap().as_array().unwrap();
+    assert_eq!(header[0].as_str().unwrap(), "seq_len");
+    let rows = v.get("rows").unwrap().as_array().unwrap();
+    assert_eq!(rows.len(), 5); // seq lens 2k..32k
+}
+
+#[test]
+fn study_grid_respects_constraints_end_to_end() {
+    // A multi-axis grid: every expanded case satisfies divisibility and
+    // the memory cap, and both generations appear.
+    let study = Study::builder("multi")
+        .arch(LLAMA_7B)
+        .generations([Generation::A100, Generation::H100])
+        .nodes([2, 4])
+        .plans(PlanAxis::Sweep { with_cp: false })
+        .global_batches([64])
+        .micro_batch_divisors()
+        .memory_cap(0.94)
+        .build();
+    let mut runner = StudyRunner::new(4);
+    let res = runner.run(&study);
+    assert!(!res.cases.is_empty());
+    assert!(res.cases.iter().any(|c| c.gen == Generation::A100));
+    assert!(res.cases.iter().any(|c| c.gen == Generation::H100));
+    for c in &res.cases {
+        assert_eq!(c.global_batch % (c.plan.dp * c.micro_batch), 0);
+        assert!(c.mem_per_gpu <= 80e9 * 0.94);
+        assert_eq!(c.plan.world_size(), c.nodes * 8);
+    }
+}
