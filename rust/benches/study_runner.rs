@@ -1,32 +1,26 @@
 //! Bench: StudyRunner parallel speedup and cache effectiveness on the
-//! Fig. 6 parallelization sweep (the figure harness's dominant cost).
+//! Fig. 6 parallelization sweep (the figure harness's dominant cost),
+//! plus the fused-fast-path vs event-engine single-evaluation split.
+//! The grid is pinned (`study::bench_pinned_study`) so numbers are
+//! comparable across PRs; `dtsim bench` runs the same grid in CI.
 
 use dtsim::hardware::Generation;
 use dtsim::model::LLAMA_7B;
-use dtsim::study::{PlanAxis, Study, StudyRunner};
+use dtsim::parallelism::ParallelPlan;
+use dtsim::sim::{simulate_engine, simulate_in, SimArena, SimConfig};
+use dtsim::study::{bench_pinned_study, StudyRunner};
+use dtsim::topology::Cluster;
 use dtsim::util::bench::{bb, bench, bench_quick, group};
-
-fn fig6_study() -> Study {
-    Study::builder("bench-fig6")
-        .arch(LLAMA_7B)
-        .generation(Generation::H100)
-        .nodes([32])
-        .plans(PlanAxis::Sweep { with_cp: false })
-        .global_batches([512])
-        .micro_batch_divisors()
-        .memory_cap(0.94)
-        .build()
-}
 
 fn main() {
     group("study runner: fig6 sweep (256 GPUs, gbs 512)");
 
-    let study = fig6_study();
+    let study = bench_pinned_study();
     let points = study.expand();
     println!("grid points after constraints: {}", points.len());
 
     bench("expand/fig6_grid", || {
-        bb(fig6_study().expand());
+        bb(bench_pinned_study().expand());
     });
 
     bench_quick("run/sequential", || {
@@ -50,5 +44,34 @@ fn main() {
     warmed.run(&study);
     bench("run/cache_hit", || {
         bb(warmed.run(bb(&study)));
+    });
+    let (hits, misses) = warmed.cost_cache_stats();
+    println!("collective cost memo: {hits} hits / {misses} misses");
+
+    group("simulate: fused fast path vs event-graph engine");
+    let cluster = Cluster::new(Generation::H100, 32);
+    let world = cluster.world_size();
+    let cfgs = [
+        ("dp256_m2", SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::data_parallel(world),
+            2 * world, 2, 4096)),
+        ("tp2pp2_m8", SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::new(64, 2, 2, 1),
+            512, 1, 4096)),
+    ];
+    for (name, cfg) in &cfgs {
+        let mut arena = SimArena::new();
+        bench(&format!("simulate_fused/{name}"), || {
+            bb(simulate_in(bb(cfg), &mut arena));
+        });
+        bench(&format!("simulate_engine/{name}"), || {
+            bb(simulate_engine(bb(cfg)));
+        });
+    }
+
+    group("planner: pruned best vs exhaustive sweep");
+    bench_quick("best_of/fig6_grid", || {
+        let mut runner = StudyRunner::sequential();
+        bb(runner.best_of(bb(&study)));
     });
 }

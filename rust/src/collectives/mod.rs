@@ -16,6 +16,9 @@
 //! decay) constants are calibrated against the paper's Figure 2 shapes
 //! and the NCCL-tests numbers the figure reports; see CALIBRATION below.
 
+use std::collections::HashMap;
+
+use crate::hardware::Generation;
 use crate::topology::{Cluster, GroupPlacement};
 
 /// Collective operations used by the training stack.
@@ -210,6 +213,84 @@ pub fn collective_time(
     }
 }
 
+/// Memoization key for [`collective_time`]. The model depends on the
+/// cluster only through the GPU generation (which fixes NVLink/IB
+/// bandwidths and the node shape) and on the group only through its
+/// [`GroupPlacement`]; the payload is keyed by its exact f64 bits so a
+/// hit is guaranteed to be the result of an identical call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct CostKey {
+    coll: Collective,
+    bytes_bits: u64,
+    gen: Generation,
+    place: GroupPlacement,
+}
+
+/// Memo cache for [`collective_time`], shared per worker by the study
+/// runner: neighboring grid points (same plan, different microbatch or
+/// global batch; same placement across figures) re-derive identical
+/// ring/tree costs thousands of times in a sweep. Results are stored
+/// verbatim, so a cached [`CommCost`] is bit-identical to the uncached
+/// call — simulation output cannot change by enabling the cache.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: HashMap<CostKey, CommCost>,
+    hits: u64,
+    misses: u64,
+}
+
+impl CostCache {
+    pub fn new() -> CostCache {
+        CostCache::default()
+    }
+
+    /// `collective_time` through the memo.
+    pub fn get(
+        &mut self,
+        coll: Collective,
+        bytes: f64,
+        cluster: &Cluster,
+        place: &GroupPlacement,
+    ) -> CommCost {
+        // Keying by generation is sound only while every NodeSpec is
+        // the canonical one for its generation (true for all Clusters
+        // built via `Cluster::new`); a hand-built NodeSpec would
+        // silently alias cache entries otherwise.
+        debug_assert_eq!(
+            cluster.node.gpus_per_node,
+            cluster.node.gpu.node().gpus_per_node,
+            "CostCache assumes the canonical NodeSpec per generation");
+        let key = CostKey {
+            coll,
+            bytes_bits: bytes.to_bits(),
+            gen: cluster.node.gpu,
+            place: *place,
+        };
+        if let Some(cost) = self.map.get(&key) {
+            self.hits += 1;
+            return *cost;
+        }
+        let cost = collective_time(coll, bytes, cluster, place);
+        self.map.insert(key, cost);
+        self.misses += 1;
+        cost
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Distinct (collective, bytes, generation, placement) entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 /// Convenience: busbw in GB/s for the Fig. 2 reproduction.
 pub fn busbw_gbps(
     coll: Collective,
@@ -365,6 +446,28 @@ mod tests {
         let th = collective_time(Collective::AllGather, GB, &ch,
                                  &full_cluster_group(&ch)).time_s;
         assert!(ta > th);
+    }
+
+    #[test]
+    fn cost_cache_hits_are_bit_identical() {
+        let mut cache = CostCache::new();
+        let c = h100(16);
+        let p = full_cluster_group(&c);
+        let direct = collective_time(Collective::AllGather, GB, &c, &p);
+        for _ in 0..3 {
+            let cached = cache.get(Collective::AllGather, GB, &c, &p);
+            assert_eq!(cached.time_s.to_bits(), direct.time_s.to_bits());
+            assert_eq!(cached.busbw.to_bits(), direct.busbw.to_bits());
+            assert_eq!(cached.algo, direct.algo);
+        }
+        assert_eq!(cache.stats(), (2, 1));
+        assert_eq!(cache.len(), 1);
+        // Distinct payloads, ops, and generations are distinct entries.
+        cache.get(Collective::AllGather, 2.0 * GB, &c, &p);
+        cache.get(Collective::ReduceScatter, GB, &c, &p);
+        let ca = Cluster::new(Generation::A100, 16);
+        cache.get(Collective::AllGather, GB, &ca, &p);
+        assert_eq!(cache.len(), 4);
     }
 
     #[test]

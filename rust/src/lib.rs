@@ -58,6 +58,41 @@
 //! `cargo run -- study <name>` runs one end-to-end. See
 //! `examples/study_api.rs` for a custom scenario.
 //!
+//! # Performance: the sweep-scale hot path
+//!
+//! One grid-point evaluation is built from three reused layers, so
+//! production-size sweeps run at memory speed instead of allocator
+//! speed:
+//!
+//! * **Fused fast path** — [`sim::simulate`] does not materialize an
+//!   event graph: the shared 1F1B emitter resolves every event's
+//!   schedule directly against per-stream cursors
+//!   (`start = max(stream cursor, dep ends)`, `end = start + dur` —
+//!   the exact operations [`sim::Engine::run`] performs, in the same
+//!   per-device order), making its reports **bit-identical** to the
+//!   graph engine's. Force the graph engine with
+//!   [`sim::simulate_engine`], `SimArena::force_engine` /
+//!   `StudyRunner::force_event_engine`, or `DTSIM_FORCE_ENGINE=1` when
+//!   debugging or exporting traces.
+//! * **Arena reuse** — each study worker owns a [`sim::SimArena`]
+//!   (event/interval/tag buffers, emission scratch, and the collective
+//!   cost memo) recycled across every configuration it evaluates; use
+//!   [`sim::simulate_in`] / [`metrics::evaluate_in`] to share it.
+//!   Results land in pre-sized lock-free slots, not per-point mutexes.
+//! * **Collective cost memo** — [`collectives::CostCache`] memoizes
+//!   `collective_time` keyed by (op, payload bits, GPU generation,
+//!   group placement), so neighboring grid points stop re-deriving
+//!   identical ring/tree costs. Cached entries are stored verbatim:
+//!   bit-identical to the uncached call.
+//!
+//! [`planner::best`] additionally bound-and-prunes: candidates whose
+//! compute-only throughput bound ([`sim::iter_time_lower_bound`])
+//! cannot beat the incumbent are skipped before simulation, with the
+//! winner (including tie-breaks) provably identical to the exhaustive
+//! sweep's. `dtsim bench` runs the pinned fig6 grid and writes
+//! `BENCH_study.json` (configs/s, cache hit rate, peak RSS) so the
+//! perf trajectory is tracked across PRs; CI emits it on every push.
+//!
 //! Python is build-time only; the binary is self-contained once
 //! `make artifacts` has run.
 

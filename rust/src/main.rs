@@ -5,6 +5,7 @@
 //!   sweep      planner sweep over parallelization strategies
 //!   study      run a registered scenario or an ad-hoc declarative grid
 //!   repro      regenerate paper tables/figures (reports/*.csv)
+//!   bench      perf smoke on the pinned grid -> BENCH_study.json
 //!   collectives  collective cost model exploration
 //!   train      real data-parallel training over AOT artifacts
 //!   scenario   print metrics for a named config preset
@@ -52,6 +53,7 @@ USAGE:
                    [--out DIR] [--json] [--threads N]
   dtsim repro      [fig1|fig2|...|fig14|table1|headline|all]
                    [--out reports]
+  dtsim bench      [--out BENCH_study.json] [--threads N] [--quick]
   dtsim collectives [--gen h100] [--op allgather] [--mb 1024]
   dtsim train      [--config tiny] [--workers 2] [--steps 30]
                    [--lr 1e-3] [--threaded] [--ckpt path] [--seed 0]
@@ -68,6 +70,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "study" => cmd_study(&args),
         "repro" => cmd_repro(&args),
+        "bench" => cmd_bench(&args),
         "collectives" => cmd_collectives(&args),
         "train" => cmd_train(&args),
         "scenario" => cmd_scenario(&args),
@@ -361,6 +364,93 @@ fn cmd_repro(args: &Args) -> Result<()> {
     }
     println!("\nCSV output in {}", out.display());
     Ok(())
+}
+
+/// `dtsim bench` — throughput smoke on the pinned benchmark grid
+/// (`study::bench_pinned_study`, the Fig. 6 sweep at 256 GPUs), written
+/// to a JSON file so CI tracks the perf trajectory across PRs:
+/// configs/s on a cold runner, warm-cache rerun latency, the
+/// collective cost-memo hit rate, and peak RSS.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use std::time::Instant;
+
+    let out = PathBuf::from(args.get_or("out", "BENCH_study.json"));
+    let threads = match args.get("threads") {
+        Some(_) => args.usize_or("threads", 1),
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
+    };
+    let reps = if args.has("quick") { 2 } else { 5 };
+    let study = dtsim::study::bench_pinned_study();
+    let points = study.expand();
+
+    // Cold full-grid throughput: fresh runner per rep, best rep wins
+    // (min-noise convention, like the in-repo bench harness's p50).
+    let mut best_cps = 0.0f64;
+    let mut evaluated = 0usize;
+    let mut cost_hits = 0u64;
+    let mut cost_misses = 0u64;
+    for _ in 0..reps {
+        let mut runner = StudyRunner::new(threads);
+        let t0 = Instant::now();
+        runner.run(&study);
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let (ev, _requested) = runner.stats();
+        let cps = ev as f64 / dt;
+        // Report a coherent snapshot: all stats come from the rep that
+        // set the headline configs/s number.
+        if cps > best_cps {
+            best_cps = cps;
+            evaluated = ev;
+            (cost_hits, cost_misses) = runner.cost_cache_stats();
+        }
+    }
+
+    // Warm rerun: every configuration served from the config cache.
+    let mut warmed = StudyRunner::new(threads);
+    warmed.run(&study);
+    let t0 = Instant::now();
+    warmed.run(&study);
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let queries = cost_hits + cost_misses;
+    let hit_rate = if queries > 0 {
+        cost_hits as f64 / queries as f64
+    } else {
+        0.0
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"study_runner/{}\",\n  \"grid_points\": {},\n  \
+         \"simulated\": {},\n  \"configs_per_s\": {:.1},\n  \
+         \"warm_rerun_ms\": {:.3},\n  \
+         \"collective_cache_hit_rate\": {:.4},\n  \
+         \"peak_rss_bytes\": {},\n  \"threads\": {},\n  \"reps\": {}\n}}\n",
+        study.name, points.len(), evaluated, best_cps, warm_ms, hit_rate,
+        peak_rss_bytes(), threads, reps);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out, &json)?;
+    print!("{json}");
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Peak resident set (VmHWM) in bytes; 0 where /proc is unavailable.
+fn peak_rss_bytes() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse::<u64>().ok())
+        })
+        .map(|kb| kb * 1024)
+        .unwrap_or(0)
 }
 
 fn cmd_collectives(args: &Args) -> Result<()> {

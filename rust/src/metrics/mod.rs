@@ -77,9 +77,21 @@ pub fn from_report(cfg: &SimConfig, rep: &IterationReport) -> Metrics {
     }
 }
 
-/// Simulate a config and compute metrics in one call.
+/// Simulate a config and compute metrics in one call (pays a fresh
+/// [`SimArena`](crate::sim::SimArena) — sweeps should use
+/// [`evaluate_in`]).
 pub fn evaluate(cfg: &SimConfig) -> Metrics {
     let rep = crate::sim::simulate(cfg);
+    from_report(cfg, &rep)
+}
+
+/// `evaluate` through a reusable per-worker simulation arena (memoized
+/// collective costs + recycled event/interval buffers) — the study
+/// runner's hot path.
+pub fn evaluate_in(cfg: &SimConfig, arena: &mut crate::sim::SimArena)
+    -> Metrics
+{
+    let rep = crate::sim::simulate_in(cfg, arena);
     from_report(cfg, &rep)
 }
 

@@ -9,6 +9,15 @@
 //! deduplicates repeats; microbatch candidates are *all divisors* of
 //! the per-replica batch (the old hardcoded {1,2,4,8} set silently
 //! skipped odd batch shapes such as gbs 48 at dp 16).
+//!
+//! [`best`]/[`best_for_plan`] (and their `_in` variants) run the
+//! runner's **bound-and-prune** search instead of the exhaustive
+//! sweep: candidates whose analytic compute-only throughput upper
+//! bound ([`crate::sim::iter_time_lower_bound`]) cannot beat the
+//! incumbent are skipped before simulation. The winner — including
+//! grid-order tie-breaks — is identical to `sweep(...)[0]`; only the
+//! work is smaller. [`sweep`] itself stays exhaustive, since its
+//! callers render every feasible outcome.
 
 use crate::metrics::Metrics;
 use crate::model::TransformerArch;
@@ -68,19 +77,20 @@ impl SweepRequest {
     }
 }
 
+fn outcome_of(c: crate::study::CaseResult) -> PlanOutcome {
+    PlanOutcome {
+        plan: c.plan,
+        micro_batch: c.micro_batch,
+        metrics: c.metrics,
+        mem_per_gpu: c.mem_per_gpu,
+    }
+}
+
 fn outcomes(req: &SweepRequest, plans: PlanAxis,
             runner: &mut StudyRunner) -> Vec<PlanOutcome> {
     let mut res = runner.run(&req.study(plans));
     res.sort_by_wps();
-    res.cases
-        .into_iter()
-        .map(|c| PlanOutcome {
-            plan: c.plan,
-            micro_batch: c.micro_batch,
-            metrics: c.metrics,
-            mem_per_gpu: c.mem_per_gpu,
-        })
-        .collect()
+    res.cases.into_iter().map(outcome_of).collect()
 }
 
 /// All feasible (plan, microbatch) outcomes, best global WPS first.
@@ -95,16 +105,19 @@ pub fn sweep_in(req: &SweepRequest, runner: &mut StudyRunner)
     outcomes(req, PlanAxis::Sweep { with_cp: req.with_cp }, runner)
 }
 
-/// The best feasible configuration, if any.
+/// The best feasible configuration, if any — found by bound-and-prune
+/// (identical winner to `sweep(req)[0]`, fewer simulations).
 pub fn best(req: &SweepRequest) -> Option<PlanOutcome> {
-    sweep(req).into_iter().next()
+    best_in(req, &mut StudyRunner::auto())
 }
 
 /// `best` through a caller-provided runner.
 pub fn best_in(req: &SweepRequest, runner: &mut StudyRunner)
     -> Option<PlanOutcome>
 {
-    sweep_in(req, runner).into_iter().next()
+    runner
+        .best_of(&req.study(PlanAxis::Sweep { with_cp: req.with_cp }))
+        .map(outcome_of)
 }
 
 /// Best outcome restricted to a fixed plan shape (used by the figure
@@ -123,9 +136,9 @@ pub fn best_for_plan_in(
     plan: ParallelPlan,
     runner: &mut StudyRunner,
 ) -> Option<PlanOutcome> {
-    outcomes(req, PlanAxis::Fixed(vec![plan]), runner)
-        .into_iter()
-        .next()
+    runner
+        .best_of(&req.study(PlanAxis::Fixed(vec![plan])))
+        .map(outcome_of)
 }
 
 #[cfg(test)]
@@ -206,6 +219,24 @@ mod tests {
             .unwrap();
         assert_eq!(direct.micro_batch, via_sweep.micro_batch);
         assert_eq!(direct.metrics.global_wps, via_sweep.metrics.global_wps);
+    }
+
+    #[test]
+    fn pruned_best_equals_exhaustive_sweep_head() {
+        // `best` now bound-and-prunes; its winner (incl. tie-breaks)
+        // must stay exactly the exhaustive sweep's head.
+        for (nodes, gbs) in [(1usize, 32usize), (4, 64)] {
+            let req = SweepRequest::fsdp(
+                LLAMA_7B, Cluster::new(Generation::H100, nodes), gbs,
+                4096);
+            let full = sweep(&req);
+            let head = full.first().unwrap();
+            let pruned = best(&req).unwrap();
+            assert_eq!(pruned.plan, head.plan);
+            assert_eq!(pruned.micro_batch, head.micro_batch);
+            assert_eq!(pruned.metrics.global_wps.to_bits(),
+                       head.metrics.global_wps.to_bits());
+        }
     }
 
     #[test]

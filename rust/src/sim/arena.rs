@@ -1,0 +1,71 @@
+//! Reusable per-worker simulation scratch: the collective cost memo,
+//! the fused executor's event/interval buffers, the 1F1B emission
+//! scratch, and the graph-engine buffers for the debug path. A study
+//! worker owns one `SimArena` and recycles it across every grid point
+//! it evaluates, so the steady-state hot path allocates nothing.
+
+use crate::collectives::CostCache;
+
+use super::engine::{Engine, Timeline};
+use super::fastpath::FusedEngine;
+use super::BuildScratch;
+
+/// Per-worker simulation context. Create once (per thread), pass to
+/// [`simulate_in`](super::simulate_in) /
+/// [`metrics::evaluate_in`](crate::metrics::evaluate_in) for every
+/// evaluation. `SimArena::new()` honors the `DTSIM_FORCE_ENGINE`
+/// environment variable (any value but `0`) to route all simulations
+/// through the materialized event-graph engine for debugging.
+#[derive(Debug)]
+pub struct SimArena {
+    pub(crate) costs: CostCache,
+    pub(crate) fused: FusedEngine,
+    pub(crate) scratch: BuildScratch,
+    /// Graph engine + timeline, used only when the engine is forced.
+    pub(crate) engine: Engine,
+    pub(crate) timeline: Timeline,
+    force_engine: bool,
+}
+
+impl SimArena {
+    /// Is `DTSIM_FORCE_ENGINE` set to anything but `0`? The single
+    /// parser for the debug switch, shared with `StudyRunner`.
+    pub fn env_force_engine() -> bool {
+        std::env::var_os("DTSIM_FORCE_ENGINE").is_some_and(|v| v != "0")
+    }
+
+    pub fn new() -> SimArena {
+        let force = SimArena::env_force_engine();
+        SimArena {
+            costs: CostCache::new(),
+            fused: FusedEngine::default(),
+            scratch: BuildScratch::default(),
+            engine: Engine::default(),
+            timeline: Timeline::default(),
+            force_engine: force,
+        }
+    }
+
+    /// Route subsequent simulations through the event-graph engine
+    /// (slow path) instead of the fused executor. Both produce
+    /// bit-identical reports; the graph path exists for tracing and
+    /// cross-validation.
+    pub fn force_engine(&mut self, on: bool) {
+        self.force_engine = on;
+    }
+
+    pub fn engine_forced(&self) -> bool {
+        self.force_engine
+    }
+
+    /// Collective-cost memo (hits, misses) accumulated by this arena.
+    pub fn cost_stats(&self) -> (u64, u64) {
+        self.costs.stats()
+    }
+}
+
+impl Default for SimArena {
+    fn default() -> Self {
+        SimArena::new()
+    }
+}

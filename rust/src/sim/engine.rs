@@ -13,8 +13,6 @@
 //! *derived* quantity: comm-stream busy time not covered by compute
 //! (matching the paper's Kineto-trace PerfettoSQL query).
 
-use std::collections::HashMap;
-
 pub type EventId = usize;
 
 pub const STREAM_COMPUTE: usize = 0;
@@ -36,7 +34,42 @@ pub enum Tag {
     P2pActivations,
 }
 
+/// Number of distinct [`Tag`] variants (the fixed width of
+/// [`TagTotals`]).
+pub const N_TAGS: usize = 9;
+
 impl Tag {
+    /// Every tag, in declaration order (== [`Tag::index`] order).
+    pub const ALL: [Tag; N_TAGS] = [
+        Tag::FwdCompute,
+        Tag::BwdCompute,
+        Tag::Optimizer,
+        Tag::AllGatherParams,
+        Tag::ReduceScatterGrads,
+        Tag::GradAllReduce,
+        Tag::TpAllReduce,
+        Tag::CpRingExchange,
+        Tag::P2pActivations,
+    ];
+
+    /// Dense index into [`TagTotals`]. Exhaustive on purpose: adding a
+    /// `Tag` variant fails to compile here (pick its index, then grow
+    /// `N_TAGS` and `Tag::ALL` to match) instead of panicking at
+    /// runtime on an out-of-bounds tally slot.
+    pub fn index(self) -> usize {
+        match self {
+            Tag::FwdCompute => 0,
+            Tag::BwdCompute => 1,
+            Tag::Optimizer => 2,
+            Tag::AllGatherParams => 3,
+            Tag::ReduceScatterGrads => 4,
+            Tag::GradAllReduce => 5,
+            Tag::TpAllReduce => 6,
+            Tag::CpRingExchange => 7,
+            Tag::P2pActivations => 8,
+        }
+    }
+
     pub fn is_comm(self) -> bool {
         !matches!(self, Tag::FwdCompute | Tag::BwdCompute | Tag::Optimizer)
     }
@@ -53,6 +86,79 @@ impl Tag {
             Tag::CpRingExchange => "cp_ring",
             Tag::P2pActivations => "pp_p2p",
         }
+    }
+}
+
+/// Fixed-width per-tag time accounting — a dense `[f64; N_TAGS]` that
+/// replaced the per-device `HashMap<Tag, f64>` in the hot path. It
+/// behaves like a map keyed by [`Tag`]: a tag is *present* iff nonzero
+/// time was recorded against it (zero-duration events are never
+/// recorded, matching the old map's insert-on-event semantics).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TagTotals([f64; N_TAGS]);
+
+impl TagTotals {
+    pub fn new() -> TagTotals {
+        TagTotals([0.0; N_TAGS])
+    }
+
+    pub fn add(&mut self, tag: Tag, t: f64) {
+        self.0[tag.index()] += t;
+    }
+
+    /// Accumulated time for `tag` (0.0 when absent).
+    pub fn get(&self, tag: Tag) -> f64 {
+        self.0[tag.index()]
+    }
+
+    /// Map-compatible presence test (`&Tag` to keep old call sites).
+    pub fn contains_key(&self, tag: &Tag) -> bool {
+        self.0[tag.index()] != 0.0
+    }
+
+    /// Present (tag, total) pairs in declaration order.
+    pub fn iter(&self) -> impl Iterator<Item = (Tag, f64)> + '_ {
+        Tag::ALL
+            .iter()
+            .copied()
+            .zip(self.0.iter().copied())
+            .filter(|&(_, t)| t != 0.0)
+    }
+}
+
+impl std::ops::Index<&Tag> for TagTotals {
+    type Output = f64;
+
+    fn index(&self, tag: &Tag) -> &f64 {
+        &self.0[tag.index()]
+    }
+}
+
+/// Destination for emitted simulation events. Implemented by the
+/// materialized graph ([`Engine`], for tracing/debugging) and by the
+/// fused direct executor (`sim::fastpath`), so the 1F1B emission logic
+/// exists exactly once and both paths see identical event streams.
+pub(crate) trait EventSink {
+    fn push_event(
+        &mut self,
+        device: usize,
+        stream: usize,
+        dur: f64,
+        deps: &[EventId],
+        tag: Tag,
+    ) -> EventId;
+}
+
+impl EventSink for Engine {
+    fn push_event(
+        &mut self,
+        device: usize,
+        stream: usize,
+        dur: f64,
+        deps: &[EventId],
+        tag: Tag,
+    ) -> EventId {
+        self.push(device, stream, dur, deps, tag)
     }
 }
 
@@ -115,6 +221,13 @@ impl Engine {
         self.n_devices
     }
 
+    /// Clear for reuse, keeping the event vector's capacity (arena
+    /// recycling across study evaluations).
+    pub fn reset(&mut self, n_devices: usize) {
+        self.events.clear();
+        self.n_devices = n_devices;
+    }
+
     pub fn push(
         &mut self,
         device: usize,
@@ -127,9 +240,8 @@ impl Engine {
         debug_assert!(device < self.n_devices);
         debug_assert!(stream < N_STREAMS);
         debug_assert!(dur >= 0.0, "negative duration");
-        for &d in deps {
-            assert!(d < id, "dependency {d} must precede event {id}");
-        }
+        debug_assert!(deps.iter().all(|&d| d < id),
+                      "dependency must precede event {id}");
         self.events.push(Event {
             device,
             stream,
@@ -143,24 +255,34 @@ impl Engine {
     /// Execute the event graph; single pass (construction order is a
     /// valid topological order by the push() invariant).
     pub fn run(&self) -> Timeline {
-        let mut start = vec![0.0f64; self.events.len()];
-        let mut end = vec![0.0f64; self.events.len()];
+        let mut tl = Timeline::default();
+        self.run_into(&mut tl);
+        tl
+    }
+
+    /// `run` into a caller-owned timeline, reusing its start/end
+    /// buffers (arena recycling across study evaluations).
+    pub fn run_into(&self, tl: &mut Timeline) {
+        tl.start.clear();
+        tl.end.clear();
+        tl.start.resize(self.events.len(), 0.0);
+        tl.end.resize(self.events.len(), 0.0);
         let mut cursor = vec![[0.0f64; N_STREAMS]; self.n_devices];
         let mut makespan = 0.0f64;
         for (id, ev) in self.events.iter().enumerate() {
             let mut t = cursor[ev.device][ev.stream];
-            ev.deps.for_each(|d| t = t.max(end[d]));
-            start[id] = t;
-            end[id] = t + ev.dur;
-            cursor[ev.device][ev.stream] = end[id];
-            makespan = makespan.max(end[id]);
+            ev.deps.for_each(|d| t = t.max(tl.end[d]));
+            tl.start[id] = t;
+            tl.end[id] = t + ev.dur;
+            cursor[ev.device][ev.stream] = tl.end[id];
+            makespan = makespan.max(tl.end[id]);
         }
-        Timeline { start, end, makespan }
+        tl.makespan = makespan;
     }
 }
 
 /// Resolved schedule.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Timeline {
     pub start: Vec<f64>,
     pub end: Vec<f64>,
@@ -184,14 +306,16 @@ pub struct DeviceStats {
     /// Time with nothing running anywhere (pipeline bubble / stalls).
     pub idle: f64,
     pub span: f64,
-    pub by_tag: HashMap<Tag, f64>,
+    pub by_tag: TagTotals,
 }
 
-/// Merge a sorted interval list in place.
-fn merge(mut v: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+/// Sort `v` by interval start and write its union into `out`
+/// (buffer-reusing core shared by `device_stats` and the fused fast
+/// path — both must produce identical unions).
+pub(crate) fn merge_into(v: &mut [(f64, f64)], out: &mut Vec<(f64, f64)>) {
     v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let mut out: Vec<(f64, f64)> = Vec::with_capacity(v.len());
-    for (s, e) in v {
+    out.clear();
+    for &(s, e) in v.iter() {
         if let Some(last) = out.last_mut() {
             if s <= last.1 + 1e-15 {
                 last.1 = last.1.max(e);
@@ -200,15 +324,21 @@ fn merge(mut v: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
         }
         out.push((s, e));
     }
+}
+
+/// Merge a sorted interval list in place.
+fn merge(mut v: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(v.len());
+    merge_into(&mut v, &mut out);
     out
 }
 
-fn total(v: &[(f64, f64)]) -> f64 {
+pub(crate) fn total(v: &[(f64, f64)]) -> f64 {
     v.iter().map(|(s, e)| e - s).sum()
 }
 
 /// Length of `a \ b` (time in a not covered by b). Both merged+sorted.
-fn subtract_len(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+pub(crate) fn subtract_len(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
     let mut len = 0.0;
     let mut j = 0;
     for &(s, e) in a {
@@ -243,8 +373,8 @@ impl Timeline {
             vec![Vec::new(); eng.n_devices()];
         let mut comm: Vec<Vec<(f64, f64)>> =
             vec![Vec::new(); eng.n_devices()];
-        let mut by_tag: Vec<HashMap<Tag, f64>> =
-            vec![HashMap::new(); eng.n_devices()];
+        let mut by_tag: Vec<TagTotals> =
+            vec![TagTotals::new(); eng.n_devices()];
         for (id, ev) in eng.events.iter().enumerate() {
             if ev.dur <= 0.0 {
                 continue;
@@ -255,7 +385,7 @@ impl Timeline {
             } else {
                 comp[ev.device].push(iv);
             }
-            *by_tag[ev.device].entry(ev.tag).or_insert(0.0) += ev.dur;
+            by_tag[ev.device].add(ev.tag, ev.dur);
         }
         (0..eng.n_devices())
             .map(|d| {
@@ -275,7 +405,7 @@ impl Timeline {
                     exposed_comm: exposed,
                     idle: (self.makespan - busy_union).max(0.0),
                     span: self.makespan,
-                    by_tag: std::mem::take(&mut by_tag[d]),
+                    by_tag: by_tag[d],
                 }
             })
             .collect()
@@ -317,11 +447,51 @@ mod tests {
         assert_eq!(t.makespan, 3.0);
     }
 
+    // Dependency-order checking is a debug_assert now (demoted out of
+    // the release hot loop), so the guard only fires in debug builds.
     #[test]
+    #[cfg(debug_assertions)]
     #[should_panic(expected = "must precede")]
     fn forward_dependency_rejected() {
         let mut e = Engine::new(1);
         e.push(0, STREAM_COMPUTE, 1.0, &[5], Tag::FwdCompute);
+    }
+
+    #[test]
+    fn tag_totals_behave_like_the_old_map() {
+        let mut t = TagTotals::new();
+        assert!(!t.contains_key(&Tag::FwdCompute));
+        t.add(Tag::FwdCompute, 1.5);
+        t.add(Tag::FwdCompute, 0.5);
+        t.add(Tag::TpAllReduce, 0.25);
+        assert_eq!(t[&Tag::FwdCompute], 2.0);
+        assert_eq!(t.get(Tag::TpAllReduce), 0.25);
+        assert!(t.contains_key(&Tag::TpAllReduce));
+        assert!(!t.contains_key(&Tag::Optimizer));
+        let pairs: Vec<(Tag, f64)> = t.iter().collect();
+        assert_eq!(pairs, vec![(Tag::FwdCompute, 2.0),
+                               (Tag::TpAllReduce, 0.25)]);
+        // Every tag has a distinct dense index within bounds.
+        let idx: std::collections::BTreeSet<usize> =
+            Tag::ALL.iter().map(|t| t.index()).collect();
+        assert_eq!(idx.len(), N_TAGS);
+        assert!(idx.iter().all(|&i| i < N_TAGS));
+    }
+
+    #[test]
+    fn engine_reset_reuses_storage() {
+        let mut e = Engine::new(1);
+        e.push(0, STREAM_COMPUTE, 1.0, &[], Tag::FwdCompute);
+        e.push(0, STREAM_COMPUTE, 2.0, &[], Tag::FwdCompute);
+        assert_eq!(e.run().makespan, 3.0);
+        e.reset(2);
+        assert_eq!(e.n_devices(), 2);
+        assert!(e.events.is_empty());
+        e.push(1, STREAM_COMPUTE, 4.0, &[], Tag::FwdCompute);
+        let mut tl = Timeline::default();
+        e.run_into(&mut tl);
+        assert_eq!(tl.makespan, 4.0);
+        assert_eq!(tl.start.len(), 1);
     }
 
     #[test]

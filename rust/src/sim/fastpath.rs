@@ -1,0 +1,186 @@
+//! Fused emit+execute fast path: runs the 1F1B emission logic directly
+//! against per-stream time cursors instead of materializing an event
+//! graph, then derives device stats from arena-reused interval buffers.
+//!
+//! Exactness: the emitter (`sim::emit_iteration`) is shared with the
+//! graph engine, and [`FusedEngine::push_event`] performs the *same*
+//! f64 operations in the *same* per-device order as
+//! [`Engine::run`](super::Engine::run) — `start = max(stream cursor,
+//! dep ends)`, `end = start + dur` — so iteration reports are
+//! bit-identical to the event engine, not approximations. The property
+//! test `tests/fastpath_vs_engine.rs` cross-validates the two paths
+//! over randomized configurations; set `DTSIM_FORCE_ENGINE=1` (or
+//! `SimArena::force_engine`) to route everything through the graph
+//! engine for debugging/tracing.
+
+use super::engine::{
+    merge_into, subtract_len, total, DeviceStats, EventId, EventSink,
+    Tag, TagTotals, N_STREAMS,
+};
+
+/// Direct executor: computes each event's schedule at push time (all
+/// dependencies precede their dependents by construction) and keeps
+/// only what downstream consumers need — per-event end times for
+/// dependency resolution, and per-device busy intervals + tag totals
+/// for the iteration report. All buffers recycle across evaluations.
+#[derive(Debug, Default)]
+pub(crate) struct FusedEngine {
+    n_devices: usize,
+    /// End time per emitted event (dependency lookups).
+    end: Vec<f64>,
+    cursor: Vec<[f64; N_STREAMS]>,
+    makespan: f64,
+    /// Per-device compute-stream busy intervals, in emission order.
+    comp: Vec<Vec<(f64, f64)>>,
+    /// Per-device comm-stream busy intervals (both communicators).
+    comm: Vec<Vec<(f64, f64)>>,
+    by_tag: Vec<TagTotals>,
+    merged_comp: Vec<(f64, f64)>,
+    merged_comm: Vec<(f64, f64)>,
+}
+
+impl FusedEngine {
+    pub fn reset(&mut self, n_devices: usize) {
+        self.n_devices = n_devices;
+        self.end.clear();
+        self.makespan = 0.0;
+        self.cursor.clear();
+        self.cursor.resize(n_devices, [0.0; N_STREAMS]);
+        for v in &mut self.comp {
+            v.clear();
+        }
+        for v in &mut self.comm {
+            v.clear();
+        }
+        if self.comp.len() < n_devices {
+            self.comp.resize_with(n_devices, Vec::new);
+        }
+        if self.comm.len() < n_devices {
+            self.comm.resize_with(n_devices, Vec::new);
+        }
+        self.by_tag.clear();
+        self.by_tag.resize(n_devices, TagTotals::new());
+    }
+
+    /// Device stats after emission — same interval-union/subtraction
+    /// algebra as [`Timeline::device_stats`](super::Timeline), over the
+    /// identical per-device interval sequences.
+    pub fn finish(&mut self) -> (f64, Vec<DeviceStats>) {
+        let mut stages = Vec::with_capacity(self.n_devices);
+        for d in 0..self.n_devices {
+            let comm_kernel_time: f64 =
+                self.comm[d].iter().map(|(s, e)| e - s).sum();
+            merge_into(&mut self.comp[d], &mut self.merged_comp);
+            merge_into(&mut self.comm[d], &mut self.merged_comm);
+            let compute_busy = total(&self.merged_comp);
+            let comm_busy = total(&self.merged_comm);
+            let exposed =
+                subtract_len(&self.merged_comm, &self.merged_comp);
+            // union = compute + (comm \ compute)
+            let busy_union = compute_busy + exposed;
+            stages.push(DeviceStats {
+                compute_busy,
+                comm_busy,
+                comm_kernel_time,
+                exposed_comm: exposed,
+                idle: (self.makespan - busy_union).max(0.0),
+                span: self.makespan,
+                by_tag: self.by_tag[d],
+            });
+        }
+        (self.makespan, stages)
+    }
+}
+
+impl EventSink for FusedEngine {
+    fn push_event(
+        &mut self,
+        device: usize,
+        stream: usize,
+        dur: f64,
+        deps: &[EventId],
+        tag: Tag,
+    ) -> EventId {
+        let id = self.end.len();
+        let mut t = self.cursor[device][stream];
+        for &d in deps {
+            t = t.max(self.end[d]);
+        }
+        let e = t + dur;
+        self.end.push(e);
+        self.cursor[device][stream] = e;
+        self.makespan = self.makespan.max(e);
+        // Zero-duration events still advance dependency chains above,
+        // but are never recorded — matching `device_stats`' filter.
+        if dur > 0.0 {
+            if tag.is_comm() {
+                self.comm[device].push((t, e));
+            } else {
+                self.comp[device].push((t, e));
+            }
+            self.by_tag[device].add(tag, dur);
+        }
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::{
+        STREAM_COMM_DP, STREAM_COMM_MP, STREAM_COMPUTE,
+    };
+    use super::*;
+
+    #[test]
+    fn fused_matches_engine_semantics_on_a_small_graph() {
+        // Mirror of the engine unit tests: FIFO per stream, cross-device
+        // deps, partial overlap — all through the fused executor.
+        let mut f = FusedEngine::default();
+        f.reset(2);
+        let a = f.push_event(0, STREAM_COMPUTE, 1.5, &[], Tag::FwdCompute);
+        let p = f.push_event(0, STREAM_COMM_MP, 0.5, &[a],
+                             Tag::P2pActivations);
+        f.push_event(1, STREAM_COMPUTE, 1.0, &[p], Tag::FwdCompute);
+        f.push_event(0, STREAM_COMM_DP, 2.0, &[], Tag::AllGatherParams);
+        let (makespan, stats) = f.finish();
+        assert_eq!(makespan, 3.0);
+        assert_eq!(stats[0].compute_busy, 1.5);
+        assert_eq!(stats[0].comm_kernel_time, 2.5);
+        // comm union [0,2) is the DP stream; MP [1.5,2) inside it.
+        assert_eq!(stats[0].comm_busy, 2.0);
+        // comm [0,2) minus compute [0,1.5) exposes 0.5.
+        assert!((stats[0].exposed_comm - 0.5).abs() < 1e-12);
+        assert_eq!(stats[1].compute_busy, 1.0);
+        assert_eq!(stats[1].idle, 2.0);
+    }
+
+    #[test]
+    fn zero_duration_events_chain_but_do_not_count() {
+        let mut f = FusedEngine::default();
+        f.reset(1);
+        let c = f.push_event(0, STREAM_COMM_DP, 0.0, &[],
+                             Tag::AllGatherParams);
+        let w = f.push_event(0, STREAM_COMPUTE, 1.0, &[c],
+                             Tag::FwdCompute);
+        let _ = w;
+        let (makespan, stats) = f.finish();
+        assert_eq!(makespan, 1.0);
+        assert_eq!(stats[0].comm_busy, 0.0);
+        assert!(!stats[0].by_tag.contains_key(&Tag::AllGatherParams));
+    }
+
+    #[test]
+    fn reset_recycles_buffers() {
+        let mut f = FusedEngine::default();
+        f.reset(1);
+        f.push_event(0, STREAM_COMPUTE, 2.0, &[], Tag::FwdCompute);
+        let (m1, _) = f.finish();
+        assert_eq!(m1, 2.0);
+        f.reset(1);
+        f.push_event(0, STREAM_COMPUTE, 0.5, &[], Tag::BwdCompute);
+        let (m2, s2) = f.finish();
+        assert_eq!(m2, 0.5);
+        assert_eq!(s2[0].compute_busy, 0.5);
+        assert!(!s2[0].by_tag.contains_key(&Tag::FwdCompute));
+    }
+}

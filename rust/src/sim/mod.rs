@@ -15,16 +15,37 @@
 //! Only one representative rank per pipeline stage is simulated — under
 //! a symmetric plan all DP/TP peers execute identical schedules, so the
 //! timeline is exact while staying O(layers · microbatches) in size.
+//!
+//! # Performance (sweep-scale hot path)
+//!
+//! [`simulate`] dispatches to a **fused emit+execute fast path**
+//! (`fastpath`): the 1F1B emission logic — shared, via an event-sink
+//! trait, with the materialized graph engine — resolves each event's
+//! schedule directly against per-stream time cursors, recycling every
+//! buffer through a per-worker [`SimArena`]. Collective costs are
+//! memoized in a [`CostCache`](crate::collectives::CostCache) keyed by
+//! (op, payload bits, generation, placement). Because the fused path
+//! performs the same f64 operations in the same per-device order as
+//! [`Engine::run`], its reports are **bit-identical** to the event
+//! engine's — enforced by `tests/fastpath_vs_engine.rs`. Use
+//! [`simulate_engine`] (or `DTSIM_FORCE_ENGINE=1`) to force the graph
+//! engine for debugging/tracing, and [`iter_time_lower_bound`] for the
+//! planner's analytic pruning bound.
 
+pub mod arena;
 pub mod engine;
+mod fastpath;
 pub mod workload;
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 
-pub use engine::{DeviceStats, Engine, EventId, Tag, Timeline};
+pub use arena::SimArena;
+pub use engine::{DeviceStats, Engine, EventId, Tag, TagTotals, Timeline};
 pub use engine::{STREAM_COMM_DP, STREAM_COMM_MP, STREAM_COMPUTE};
 
-use crate::collectives::{collective_time, Collective};
+use engine::EventSink;
+
+use crate::collectives::{Collective, CostCache};
 use crate::model::TransformerArch;
 use crate::parallelism::ParallelPlan;
 use crate::topology::Cluster;
@@ -134,7 +155,7 @@ pub struct IterationReport {
     pub comm_kernel_time: f64,
     pub exposed_comm: f64,
     pub idle: f64,
-    pub comm_by_tag: HashMap<Tag, f64>,
+    pub comm_by_tag: TagTotals,
 }
 
 impl IterationReport {
@@ -156,7 +177,7 @@ impl IterationReport {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
-enum Op {
+pub(crate) enum Op {
     F(usize),
     B(usize),
 }
@@ -179,7 +200,7 @@ struct Durations {
     optimizer: f64,
 }
 
-fn durations(cfg: &SimConfig) -> Durations {
+fn durations(cfg: &SimConfig, costs: &mut CostCache) -> Durations {
     let spec = cfg.cluster.node.spec();
     let plan = &cfg.plan;
     let arch = &cfg.arch;
@@ -205,25 +226,25 @@ fn durations(cfg: &SimConfig) -> Durations {
             let ar = if replicas > 1 {
                 let rep_place = crate::topology::GroupPlacement::strided(
                     cluster, replicas, mp * group);
-                collective_time(Collective::AllReduce,
-                                layer_bytes / group as f64, cluster,
-                                &rep_place).time_s
+                costs.get(Collective::AllReduce,
+                          layer_bytes / group as f64, cluster,
+                          &rep_place).time_s
             } else { 0.0 };
             (shard, ar)
         }
         _ => (dp_place, 0.0),
     };
     let ag_layer = if plan.dp > 1 && shard_place.size > 1 {
-        collective_time(Collective::AllGather, layer_bytes, cluster,
-                        &shard_place).time_s
+        costs.get(Collective::AllGather, layer_bytes, cluster,
+                  &shard_place).time_s
     } else { 0.0 };
     let rs_layer = if plan.dp > 1 && shard_place.size > 1 {
-        collective_time(Collective::ReduceScatter, layer_bytes, cluster,
-                        &shard_place).time_s
+        costs.get(Collective::ReduceScatter, layer_bytes, cluster,
+                  &shard_place).time_s
     } else { 0.0 };
     let ddp_ar_layer = if plan.dp > 1 {
-        collective_time(Collective::AllReduce, layer_bytes, cluster,
-                        &dp_place).time_s
+        costs.get(Collective::AllReduce, layer_bytes, cluster,
+                  &dp_place).time_s
     } else { 0.0 };
 
     // Megatron TP: 2 AllReduces of the activation tensor per layer in
@@ -231,8 +252,8 @@ fn durations(cfg: &SimConfig) -> Durations {
     let act_bytes = 2.0 * cfg.micro_batch as f64 * cfg.seq_len as f64
         * arch.d_model as f64 / plan.cp as f64;
     let tp_ar = if plan.tp > 1 {
-        2.0 * collective_time(Collective::AllReduce, act_bytes, cluster,
-                              &tp_place).time_s
+        2.0 * costs.get(Collective::AllReduce, act_bytes, cluster,
+                        &tp_place).time_s
     } else { 0.0 };
 
     // Ring context parallelism: (cp-1) KV-block exchanges per layer.
@@ -242,16 +263,16 @@ fn durations(cfg: &SimConfig) -> Durations {
             * (cfg.seq_len as f64 / plan.cp as f64)
             * arch.d_model as f64 * kv_frac;
         (plan.cp as f64 - 1.0)
-            * collective_time(Collective::PointToPoint, kv_bytes,
-                              cluster, &cp_place).time_s
+            * costs.get(Collective::PointToPoint, kv_bytes, cluster,
+                        &cp_place).time_s
     } else { 0.0 };
 
     // Pipeline P2P: microbatch activations, scatter-gathered over TP.
     let p2p_bytes = 2.0 * cfg.micro_batch as f64 * cfg.seq_len as f64
         * arch.d_model as f64 / (plan.tp as f64 * plan.cp as f64);
     let p2p = if plan.pp > 1 {
-        collective_time(Collective::PointToPoint, p2p_bytes, cluster,
-                        &pp_place).time_s
+        costs.get(Collective::PointToPoint, p2p_bytes, cluster,
+                  &pp_place).time_s
     } else { 0.0 };
 
     Durations {
@@ -275,27 +296,143 @@ fn durations(cfg: &SimConfig) -> Durations {
     }
 }
 
-/// 1F1B (non-interleaved) op order for one stage.
-fn one_f_one_b(stage: usize, pp: usize, m: usize) -> Vec<Op> {
+/// Analytic lower bound on [`IterationReport::iter_time`], from compute
+/// alone: the last pipeline stage's compute stream must serially run
+/// every microbatch's layers and heads plus the optimizer, and the
+/// makespan can never undercut a single stream's busy time. Needs no
+/// collective costs, so it is orders of magnitude cheaper than a
+/// simulation — the planner's bound-and-prune search uses the implied
+/// throughput *upper* bound to skip provably-dominated grid points.
+pub fn iter_time_lower_bound(cfg: &SimConfig) -> f64 {
+    let spec = cfg.cluster.node.spec();
+    let plan = &cfg.plan;
+    let m = cfg.microbatches() as f64;
+    let lps = (cfg.arch.n_layers / plan.pp) as f64;
+    let fwd = workload::fwd_layer_time(
+        &cfg.arch, spec, plan, cfg.micro_batch, cfg.seq_len);
+    let bwd = workload::bwd_layer_time(
+        &cfg.arch, spec, plan, cfg.micro_batch, cfg.seq_len);
+    let head_fwd = workload::head_time(
+        &cfg.arch, spec, plan, cfg.micro_batch, cfg.seq_len, false);
+    let head_bwd = workload::head_time(
+        &cfg.arch, spec, plan, cfg.micro_batch, cfg.seq_len, true);
+    let opt = workload::optimizer_time(&cfg.arch, spec, plan);
+    m * lps * (fwd + bwd) + m * (head_fwd + head_bwd) + opt
+}
+
+/// 1F1B (non-interleaved) op order for one stage, written into a
+/// `2·m`-slot slice.
+fn fill_one_f_one_b(ops: &mut [Op], stage: usize, pp: usize, m: usize) {
     let warmup = (pp - stage - 1).min(m);
-    let mut ops = Vec::with_capacity(2 * m);
+    let mut k = 0;
     for i in 0..warmup {
-        ops.push(Op::F(i));
+        ops[k] = Op::F(i);
+        k += 1;
     }
     for j in 0..m - warmup {
-        ops.push(Op::F(warmup + j));
-        ops.push(Op::B(j));
+        ops[k] = Op::F(warmup + j);
+        k += 1;
+        ops[k] = Op::B(j);
+        k += 1;
     }
     for j in m - warmup..m {
-        ops.push(Op::B(j));
+        ops[k] = Op::B(j);
+        k += 1;
     }
+    debug_assert_eq!(k, ops.len());
+}
+
+/// 1F1B op order for one stage (allocating convenience for tests).
+#[cfg(test)]
+fn one_f_one_b(stage: usize, pp: usize, m: usize) -> Vec<Op> {
+    let mut ops = vec![Op::F(0); 2 * m];
+    fill_one_f_one_b(&mut ops, stage, pp, m);
     ops
 }
 
-/// Build the full event graph for one iteration.
-pub fn build_engine(cfg: &SimConfig) -> Engine {
-    cfg.validate().expect("invalid sim config");
-    let d = durations(cfg);
+/// Reusable emission scratch: flattened per-stage op lists and event
+/// bookkeeping for [`emit_iteration`]. Owned by [`SimArena`]; all
+/// vectors keep their capacity across evaluations.
+#[derive(Debug, Default)]
+pub(crate) struct BuildScratch {
+    /// `p × 2m` op schedule, stage-major.
+    ops: Vec<Op>,
+    /// Next unemitted op index per stage.
+    next: Vec<usize>,
+    /// `p × m`: last forward-chain event per (stage, microbatch).
+    last_fwd: Vec<Option<EventId>>,
+    /// `p × m`: forward activation send per (stage, microbatch).
+    p2p_fwd: Vec<Option<EventId>>,
+    /// `p × m`: backward activation send per (stage, microbatch).
+    p2p_bwd: Vec<Option<EventId>>,
+    /// `p × lps`: parameter AllGather per (stage, layer).
+    ag: Vec<EventId>,
+    /// `p × lps`: gradient-final events feeding the optimizer.
+    grad: Vec<EventId>,
+    grad_len: Vec<usize>,
+    queue: VecDeque<usize>,
+    queued: Vec<bool>,
+}
+
+impl BuildScratch {
+    fn prepare(&mut self, p: usize, m: usize, lps: usize) {
+        self.ops.clear();
+        self.ops.resize(p * 2 * m, Op::F(0));
+        self.next.clear();
+        self.next.resize(p, 0);
+        self.last_fwd.clear();
+        self.last_fwd.resize(p * m, None);
+        self.p2p_fwd.clear();
+        self.p2p_fwd.resize(p * m, None);
+        self.p2p_bwd.clear();
+        self.p2p_bwd.resize(p * m, None);
+        self.ag.clear();
+        self.ag.resize(p * lps, 0);
+        self.grad.clear();
+        self.grad.resize(p * lps, 0);
+        self.grad_len.clear();
+        self.grad_len.resize(p, 0);
+        self.queue.clear();
+        self.queued.clear();
+        self.queued.resize(p, false);
+    }
+}
+
+/// Is `op` at `stage` ready to emit? F(i) needs the upstream forward
+/// activation send, B(i) the downstream backward one; edge stages have
+/// no cross-stage input on that side. The single readiness rule shared
+/// by the drain loop and both producer-side wake checks.
+fn op_ready(
+    op: Op,
+    stage: usize,
+    p: usize,
+    m: usize,
+    p2p_fwd: &[Option<EventId>],
+    p2p_bwd: &[Option<EventId>],
+) -> bool {
+    match op {
+        Op::F(i) => stage == 0 || p2p_fwd[(stage - 1) * m + i].is_some(),
+        Op::B(i) => {
+            stage == p - 1 || p2p_bwd[(stage + 1) * m + i].is_some()
+        }
+    }
+}
+
+/// Emit one training iteration's events into `eng` — the single 1F1B
+/// emitter behind both the graph engine and the fused fast path.
+///
+/// Scheduling is a ready-queue over stages (replacing the old repeated
+/// stage-polling loop): a stage drains every consecutively-ready op
+/// when dequeued, and re-enters the queue exactly when the cross-stage
+/// P2P event its next op waits on is emitted. Per-stage op order is
+/// identical to the polling scheduler's, so per-device stream order —
+/// the only order that affects the timeline — is unchanged.
+fn emit_iteration<S: EventSink>(
+    cfg: &SimConfig,
+    d: &Durations,
+    eng: &mut S,
+    scratch: &mut BuildScratch,
+) {
     let p = cfg.plan.pp;
     let m = cfg.microbatches();
     let lps = cfg.arch.n_layers / p;
@@ -308,197 +445,235 @@ pub fn build_engine(cfg: &SimConfig) -> Engine {
     let tp = cfg.plan.tp > 1;
     let cp = cfg.plan.cp > 1;
 
-    let mut eng = Engine::new(p);
+    scratch.prepare(p, m, lps);
+    let BuildScratch {
+        ops, next, last_fwd, p2p_fwd, p2p_bwd, ag, grad, grad_len,
+        queue, queued,
+    } = scratch;
+
+    for s in 0..p {
+        fill_one_f_one_b(&mut ops[s * 2 * m..(s + 1) * 2 * m], s, p, m);
+    }
 
     // FSDP with explicit prefetch: all parameter AllGathers issued
     // eagerly at iteration start; the DP comm stream serializes them,
     // compute waits per layer. Without prefetch they are issued lazily
     // inside the first forward microbatch (see the F arm below).
-    let mut ag: Vec<Vec<EventId>> = vec![Vec::new(); p];
     if fsdp && cfg.prefetch {
-        for (s, ag_s) in ag.iter_mut().enumerate() {
-            for _ in 0..lps {
-                ag_s.push(eng.push(s, STREAM_COMM_DP, d.ag_layer, &[],
-                                   Tag::AllGatherParams));
-            }
-        }
-    }
-
-    let ops: Vec<Vec<Op>> =
-        (0..p).map(|s| one_f_one_b(s, p, m)).collect();
-    let mut next = vec![0usize; p];
-    let mut last_fwd: Vec<Vec<Option<EventId>>> = vec![vec![None; m]; p];
-    let mut p2p_fwd: Vec<Vec<Option<EventId>>> = vec![vec![None; m]; p];
-    let mut p2p_bwd: Vec<Vec<Option<EventId>>> = vec![vec![None; m]; p];
-    let mut grad_ready: Vec<Vec<EventId>> = vec![Vec::new(); p];
-
-    // Emission scheduler: repeatedly emit any stage's next ready op.
-    // 1F1B is deadlock-free, so this always terminates.
-    loop {
-        let mut progressed = false;
-        let mut done = true;
         for s in 0..p {
-            while next[s] < ops[s].len() {
-                let op = ops[s][next[s]];
-                let ready = match op {
-                    Op::F(i) => s == 0 || p2p_fwd[s - 1][i].is_some(),
-                    Op::B(i) => s == p - 1 || p2p_bwd[s + 1][i].is_some(),
-                };
-                if !ready {
-                    break;
-                }
-                match op {
-                    Op::F(i) => {
-                        let mut prev: Option<EventId> =
-                            if s > 0 { p2p_fwd[s - 1][i] } else { None };
-                        for l in 0..lps {
-                            // No-prefetch ablation: AG(l) issues only
-                            // after layer l-1's forward chain.
-                            if fsdp && !cfg.prefetch && i == 0 {
-                                let ag_deps: Vec<EventId> =
-                                    prev.into_iter().collect();
-                                let id = eng.push(
-                                    s, STREAM_COMM_DP, d.ag_layer,
-                                    &ag_deps, Tag::AllGatherParams);
-                                ag[s].push(id);
-                            }
-                            let mut deps = Vec::with_capacity(2);
-                            if let Some(pv) = prev {
-                                deps.push(pv);
-                            }
-                            if fsdp {
-                                deps.push(ag[s][l]);
-                            }
-                            let c = eng.push(s, STREAM_COMPUTE,
-                                             d.fwd_layer, &deps,
-                                             Tag::FwdCompute);
-                            prev = Some(c);
-                            if tp {
-                                prev = Some(eng.push(
-                                    s, STREAM_COMM_MP, d.tp_ar_fwd,
-                                    &[c], Tag::TpAllReduce));
-                            }
-                            if cp {
-                                prev = Some(eng.push(
-                                    s, STREAM_COMM_MP, d.cp_ring,
-                                    &[prev.unwrap()],
-                                    Tag::CpRingExchange));
-                            }
-                        }
-                        if s == p - 1 {
-                            prev = Some(eng.push(
-                                s, STREAM_COMPUTE, d.head_fwd,
-                                &[prev.unwrap()], Tag::FwdCompute));
-                        }
-                        last_fwd[s][i] = prev;
-                        if s < p - 1 {
-                            p2p_fwd[s][i] = Some(eng.push(
-                                s, STREAM_COMM_MP, d.p2p,
-                                &[prev.unwrap()], Tag::P2pActivations));
-                        }
-                    }
-                    Op::B(i) => {
-                        let mut deps: Vec<EventId> =
-                            vec![last_fwd[s][i].expect("fwd before bwd")];
-                        if s < p - 1 {
-                            deps.push(p2p_bwd[s + 1][i].unwrap());
-                        }
-                        let mut prev: Option<EventId> = None;
-                        if s == p - 1 {
-                            prev = Some(eng.push(s, STREAM_COMPUTE,
-                                                 d.head_bwd, &deps,
-                                                 Tag::BwdCompute));
-                        }
-                        for _l in (0..lps).rev() {
-                            let layer_deps: Vec<EventId> = match prev {
-                                Some(pv) => vec![pv],
-                                None => deps.clone(),
-                            };
-                            let c = eng.push(s, STREAM_COMPUTE,
-                                             d.bwd_layer, &layer_deps,
-                                             Tag::BwdCompute);
-                            prev = Some(c);
-                            if tp {
-                                prev = Some(eng.push(
-                                    s, STREAM_COMM_MP, d.tp_ar_bwd,
-                                    &[c], Tag::TpAllReduce));
-                            }
-                            if cp {
-                                prev = Some(eng.push(
-                                    s, STREAM_COMM_MP, d.cp_ring,
-                                    &[prev.unwrap()],
-                                    Tag::CpRingExchange));
-                            }
-                            // Gradients final after the last microbatch:
-                            // overlap ReduceScatter with remaining bwd.
-                            if i == m - 1 {
-                                if fsdp {
-                                    let mut last = eng.push(
-                                        s, STREAM_COMM_DP, d.rs_layer,
-                                        &[c], Tag::ReduceScatterGrads);
-                                    if hsdp && d.hsdp_ar_layer > 0.0 {
-                                        // Cross-replica gradient sync.
-                                        last = eng.push(
-                                            s, STREAM_COMM_DP,
-                                            d.hsdp_ar_layer, &[last],
-                                            Tag::GradAllReduce);
-                                    }
-                                    grad_ready[s].push(last);
-                                } else if ddp {
-                                    grad_ready[s].push(eng.push(
-                                        s, STREAM_COMM_DP,
-                                        d.ddp_ar_layer, &[c],
-                                        Tag::GradAllReduce));
-                                } else {
-                                    grad_ready[s].push(c);
-                                }
-                            }
-                        }
-                        if s > 0 {
-                            p2p_bwd[s][i] = Some(eng.push(
-                                s, STREAM_COMM_MP, d.p2p,
-                                &[prev.unwrap()], Tag::P2pActivations));
-                        }
-                    }
-                }
-                next[s] += 1;
-                progressed = true;
-            }
-            if next[s] < ops[s].len() {
-                done = false;
+            for l in 0..lps {
+                ag[s * lps + l] = eng.push_event(
+                    s, STREAM_COMM_DP, d.ag_layer, &[],
+                    Tag::AllGatherParams);
             }
         }
-        if done {
-            break;
-        }
-        assert!(progressed, "pipeline emission deadlocked");
     }
+
+    // Seed every stage; stages whose first op isn't ready drain zero
+    // ops and re-enter when their producer emits (1F1B is
+    // deadlock-free, so every op is eventually emitted).
+    for s in 0..p {
+        queue.push_back(s);
+        queued[s] = true;
+    }
+    let mut emitted = 0usize;
+    while let Some(s) = queue.pop_front() {
+        queued[s] = false;
+        while next[s] < 2 * m {
+            let op = ops[s * 2 * m + next[s]];
+            if !op_ready(op, s, p, m, p2p_fwd, p2p_bwd) {
+                break;
+            }
+            match op {
+                Op::F(i) => {
+                    let mut prev: Option<EventId> = if s > 0 {
+                        p2p_fwd[(s - 1) * m + i]
+                    } else {
+                        None
+                    };
+                    for l in 0..lps {
+                        // No-prefetch ablation: AG(l) issues only
+                        // after layer l-1's forward chain.
+                        if fsdp && !cfg.prefetch && i == 0 {
+                            ag[s * lps + l] = match prev {
+                                Some(pv) => eng.push_event(
+                                    s, STREAM_COMM_DP, d.ag_layer,
+                                    &[pv], Tag::AllGatherParams),
+                                None => eng.push_event(
+                                    s, STREAM_COMM_DP, d.ag_layer,
+                                    &[], Tag::AllGatherParams),
+                            };
+                        }
+                        let c = match (prev, fsdp) {
+                            (Some(pv), true) => eng.push_event(
+                                s, STREAM_COMPUTE, d.fwd_layer,
+                                &[pv, ag[s * lps + l]], Tag::FwdCompute),
+                            (Some(pv), false) => eng.push_event(
+                                s, STREAM_COMPUTE, d.fwd_layer, &[pv],
+                                Tag::FwdCompute),
+                            (None, true) => eng.push_event(
+                                s, STREAM_COMPUTE, d.fwd_layer,
+                                &[ag[s * lps + l]], Tag::FwdCompute),
+                            (None, false) => eng.push_event(
+                                s, STREAM_COMPUTE, d.fwd_layer, &[],
+                                Tag::FwdCompute),
+                        };
+                        prev = Some(c);
+                        if tp {
+                            prev = Some(eng.push_event(
+                                s, STREAM_COMM_MP, d.tp_ar_fwd, &[c],
+                                Tag::TpAllReduce));
+                        }
+                        if cp {
+                            prev = Some(eng.push_event(
+                                s, STREAM_COMM_MP, d.cp_ring,
+                                &[prev.unwrap()], Tag::CpRingExchange));
+                        }
+                    }
+                    if s == p - 1 {
+                        prev = Some(eng.push_event(
+                            s, STREAM_COMPUTE, d.head_fwd,
+                            &[prev.unwrap()], Tag::FwdCompute));
+                    }
+                    last_fwd[s * m + i] = prev;
+                    if s < p - 1 {
+                        p2p_fwd[s * m + i] = Some(eng.push_event(
+                            s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
+                            Tag::P2pActivations));
+                        // Wake the downstream stage if this send made
+                        // its next op ready.
+                        let t = s + 1;
+                        if !queued[t]
+                            && next[t] < 2 * m
+                            && op_ready(ops[t * 2 * m + next[t]], t, p, m,
+                                        p2p_fwd, p2p_bwd)
+                        {
+                            queue.push_back(t);
+                            queued[t] = true;
+                        }
+                    }
+                }
+                Op::B(i) => {
+                    let fwd_dep =
+                        last_fwd[s * m + i].expect("fwd before bwd");
+                    let bwd_in: Option<EventId> = if s < p - 1 {
+                        p2p_bwd[(s + 1) * m + i]
+                    } else {
+                        None
+                    };
+                    let mut prev: Option<EventId> = None;
+                    if s == p - 1 {
+                        prev = Some(eng.push_event(
+                            s, STREAM_COMPUTE, d.head_bwd, &[fwd_dep],
+                            Tag::BwdCompute));
+                    }
+                    for _l in (0..lps).rev() {
+                        let c = match (prev, bwd_in) {
+                            (Some(pv), _) => eng.push_event(
+                                s, STREAM_COMPUTE, d.bwd_layer, &[pv],
+                                Tag::BwdCompute),
+                            (None, Some(bi)) => eng.push_event(
+                                s, STREAM_COMPUTE, d.bwd_layer,
+                                &[fwd_dep, bi], Tag::BwdCompute),
+                            (None, None) => eng.push_event(
+                                s, STREAM_COMPUTE, d.bwd_layer,
+                                &[fwd_dep], Tag::BwdCompute),
+                        };
+                        prev = Some(c);
+                        if tp {
+                            prev = Some(eng.push_event(
+                                s, STREAM_COMM_MP, d.tp_ar_bwd, &[c],
+                                Tag::TpAllReduce));
+                        }
+                        if cp {
+                            prev = Some(eng.push_event(
+                                s, STREAM_COMM_MP, d.cp_ring,
+                                &[prev.unwrap()], Tag::CpRingExchange));
+                        }
+                        // Gradients final after the last microbatch:
+                        // overlap ReduceScatter with remaining bwd.
+                        if i == m - 1 {
+                            let g = if fsdp {
+                                let mut last = eng.push_event(
+                                    s, STREAM_COMM_DP, d.rs_layer, &[c],
+                                    Tag::ReduceScatterGrads);
+                                if hsdp && d.hsdp_ar_layer > 0.0 {
+                                    // Cross-replica gradient sync.
+                                    last = eng.push_event(
+                                        s, STREAM_COMM_DP,
+                                        d.hsdp_ar_layer, &[last],
+                                        Tag::GradAllReduce);
+                                }
+                                last
+                            } else if ddp {
+                                eng.push_event(
+                                    s, STREAM_COMM_DP, d.ddp_ar_layer,
+                                    &[c], Tag::GradAllReduce)
+                            } else {
+                                c
+                            };
+                            grad[s * lps + grad_len[s]] = g;
+                            grad_len[s] += 1;
+                        }
+                    }
+                    if s > 0 {
+                        p2p_bwd[s * m + i] = Some(eng.push_event(
+                            s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
+                            Tag::P2pActivations));
+                        // Wake the upstream stage if this send made
+                        // its next op ready.
+                        let t = s - 1;
+                        if !queued[t]
+                            && next[t] < 2 * m
+                            && op_ready(ops[t * 2 * m + next[t]], t, p, m,
+                                        p2p_fwd, p2p_bwd)
+                        {
+                            queue.push_back(t);
+                            queued[t] = true;
+                        }
+                    }
+                }
+            }
+            next[s] += 1;
+            emitted += 1;
+        }
+    }
+    assert_eq!(emitted, p * 2 * m, "pipeline emission deadlocked");
 
     // Optimizer step per stage once its gradients are fully reduced.
     for s in 0..p {
-        let deps = grad_ready[s].clone();
-        eng.push(s, STREAM_COMPUTE, d.optimizer, &deps, Tag::Optimizer);
+        let deps = &grad[s * lps..s * lps + grad_len[s]];
+        eng.push_event(s, STREAM_COMPUTE, d.optimizer, deps,
+                       Tag::Optimizer);
     }
+}
 
+/// Build the full event graph for one iteration (tracing / debugging /
+/// cross-validation; [`simulate`] uses the fused fast path instead).
+pub fn build_engine(cfg: &SimConfig) -> Engine {
+    cfg.validate().expect("invalid sim config");
+    let mut costs = CostCache::new();
+    let d = durations(cfg, &mut costs);
+    let mut eng = Engine::new(cfg.plan.pp);
+    let mut scratch = BuildScratch::default();
+    emit_iteration(cfg, &d, &mut eng, &mut scratch);
     eng
 }
 
-/// Simulate one iteration and aggregate.
-pub fn simulate(cfg: &SimConfig) -> IterationReport {
-    let eng = build_engine(cfg);
-    let tl = eng.run();
-    let stages = tl.device_stats(&eng);
+/// Assemble an [`IterationReport`] from per-stage stats (shared by the
+/// fused and engine paths so both aggregate identically).
+fn report_from(makespan: f64, stages: Vec<DeviceStats>) -> IterationReport {
     let n = stages.len() as f64;
-    let mut comm_by_tag: HashMap<Tag, f64> = HashMap::new();
+    let mut comm_by_tag = TagTotals::new();
     for st in &stages {
-        for (tag, t) in &st.by_tag {
+        for (tag, t) in st.by_tag.iter() {
             if tag.is_comm() {
-                *comm_by_tag.entry(*tag).or_insert(0.0) += t / n;
+                comm_by_tag.add(tag, t / n);
             }
         }
     }
     IterationReport {
-        iter_time: tl.makespan,
+        iter_time: makespan,
         compute_busy: stages.iter().map(|s| s.compute_busy).sum::<f64>()
             / n,
         comm_busy: stages.iter().map(|s| s.comm_busy).sum::<f64>() / n,
@@ -510,6 +685,48 @@ pub fn simulate(cfg: &SimConfig) -> IterationReport {
         stages,
         comm_by_tag,
     }
+}
+
+/// Simulate one iteration and aggregate (convenience wrapper that pays
+/// a fresh [`SimArena`] per call — sweeps should hold an arena and use
+/// [`simulate_in`]).
+pub fn simulate(cfg: &SimConfig) -> IterationReport {
+    simulate_in(cfg, &mut SimArena::new())
+}
+
+/// Simulate one iteration through a reusable per-worker arena:
+/// memoized collective costs, recycled event/interval buffers, and the
+/// fused fast path (unless the arena forces the graph engine).
+pub fn simulate_in(cfg: &SimConfig, arena: &mut SimArena)
+    -> IterationReport
+{
+    cfg.validate().expect("invalid sim config");
+    if arena.engine_forced() {
+        return simulate_engine_in(cfg, arena);
+    }
+    let d = durations(cfg, &mut arena.costs);
+    arena.fused.reset(cfg.plan.pp);
+    emit_iteration(cfg, &d, &mut arena.fused, &mut arena.scratch);
+    let (makespan, stages) = arena.fused.finish();
+    report_from(makespan, stages)
+}
+
+/// Simulate through the materialized event-graph engine (debug /
+/// cross-validation reference; bit-identical to [`simulate`]).
+pub fn simulate_engine(cfg: &SimConfig) -> IterationReport {
+    cfg.validate().expect("invalid sim config");
+    simulate_engine_in(cfg, &mut SimArena::new())
+}
+
+fn simulate_engine_in(cfg: &SimConfig, arena: &mut SimArena)
+    -> IterationReport
+{
+    let d = durations(cfg, &mut arena.costs);
+    arena.engine.reset(cfg.plan.pp);
+    emit_iteration(cfg, &d, &mut arena.engine, &mut arena.scratch);
+    arena.engine.run_into(&mut arena.timeline);
+    let stages = arena.timeline.device_stats(&arena.engine);
+    report_from(arena.timeline.makespan, stages)
 }
 
 #[cfg(test)]
@@ -680,5 +897,83 @@ mod tests {
         let f1 = r1.comm_busy / r1.compute_busy;
         let f4 = r4.comm_busy / r4.compute_busy;
         assert!(f4 < f1, "comm:compute must shrink with accumulation");
+    }
+
+    /// Representative configs spanning every emission arm: pure dp,
+    /// tp+cp, deep pipeline, pipeline+tp, ddp, hsdp, no-prefetch.
+    fn cross_validation_cfgs() -> Vec<SimConfig> {
+        let c4 = Cluster::new(Generation::H100, 4);
+        let c8 = Cluster::new(Generation::H100, 8);
+        let mut no_pf = weak_cfg(8);
+        no_pf.prefetch = false;
+        let mut ddp = weak_cfg(4);
+        ddp.sharding = Sharding::Ddp;
+        let mut hsdp = weak_cfg(16);
+        hsdp.sharding = Sharding::Hsdp { group: 8 };
+        vec![
+            weak_cfg(1),
+            weak_cfg(16),
+            no_pf,
+            ddp,
+            hsdp,
+            SimConfig::fsdp(LLAMA_7B, c4, ParallelPlan::new(4, 4, 2, 1),
+                            16, 2, 4096),
+            SimConfig::fsdp(LLAMA_7B, c4, ParallelPlan::new(8, 1, 4, 1),
+                            32, 1, 4096),
+            SimConfig::fsdp(LLAMA_7B, c8, ParallelPlan::new(8, 2, 2, 2),
+                            32, 1, 4096),
+        ]
+    }
+
+    #[test]
+    fn fused_fast_path_is_bit_identical_to_engine() {
+        for cfg in cross_validation_cfgs() {
+            let fast = simulate(&cfg);
+            let slow = simulate_engine(&cfg);
+            assert_eq!(fast.iter_time.to_bits(), slow.iter_time.to_bits(),
+                       "iter_time diverged for {}", cfg.plan);
+            assert_eq!(fast.compute_busy.to_bits(),
+                       slow.compute_busy.to_bits());
+            assert_eq!(fast.comm_busy.to_bits(), slow.comm_busy.to_bits());
+            assert_eq!(fast.comm_kernel_time.to_bits(),
+                       slow.comm_kernel_time.to_bits());
+            assert_eq!(fast.exposed_comm.to_bits(),
+                       slow.exposed_comm.to_bits());
+            assert_eq!(fast.idle.to_bits(), slow.idle.to_bits());
+            assert_eq!(fast.stages.len(), slow.stages.len());
+            for tag in Tag::ALL {
+                assert_eq!(fast.comm_by_tag.get(tag).to_bits(),
+                           slow.comm_by_tag.get(tag).to_bits(),
+                           "{tag:?} diverged for {}", cfg.plan);
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuse_is_deterministic() {
+        // One arena across heterogeneous configs must match fresh-arena
+        // results exactly (buffer recycling leaks no state).
+        let mut arena = SimArena::new();
+        for cfg in cross_validation_cfgs() {
+            let reused = simulate_in(&cfg, &mut arena);
+            let fresh = simulate(&cfg);
+            assert_eq!(reused.iter_time.to_bits(),
+                       fresh.iter_time.to_bits());
+            assert_eq!(reused.exposed_comm.to_bits(),
+                       fresh.exposed_comm.to_bits());
+        }
+        let (hits, misses) = arena.cost_stats();
+        assert!(hits + misses > 0, "cost cache unused");
+    }
+
+    #[test]
+    fn lower_bound_is_sound() {
+        for cfg in cross_validation_cfgs() {
+            let lb = iter_time_lower_bound(&cfg);
+            let sim = simulate(&cfg).iter_time;
+            assert!(lb <= sim * (1.0 + 1e-12),
+                    "bound {lb} above simulated {sim} for {}", cfg.plan);
+            assert!(lb > 0.0);
+        }
     }
 }

@@ -138,6 +138,24 @@ pub fn divisors(n: usize) -> Vec<usize> {
     small
 }
 
+/// The pinned benchmark grid shared by `benches/study_runner.rs`, the
+/// `dtsim bench` smoke mode, and CI's `BENCH_study.json`: the Fig. 6
+/// parallelization sweep (Llama-7B, 256 H100 GPUs, gbs 512, divisor
+/// microbatches, 0.94 memory cap). Pinned so configs/s is comparable
+/// across PRs.
+pub fn bench_pinned_study() -> Study {
+    Study::builder("bench-fig6")
+        .title("pinned benchmark grid: fig6 parallelization sweep")
+        .arch(crate::model::LLAMA_7B)
+        .generation(Generation::H100)
+        .nodes([32])
+        .plans(PlanAxis::Sweep { with_cp: false })
+        .global_batches([512])
+        .micro_batch_divisors()
+        .memory_cap(0.94)
+        .build()
+}
+
 /// One expanded, validated grid point plus its memory footprint.
 #[derive(Debug, Clone, Copy)]
 pub struct StudyPoint {

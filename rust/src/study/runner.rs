@@ -8,16 +8,25 @@
 //! regeneration cheap too — the weak-scaling configs, for example, are
 //! shared by Fig. 1, Fig. 3, and the headline table, and are simulated
 //! exactly once per `StudyRunner`.
+//!
+//! Hot path: each worker owns a [`SimArena`] (fused simulation fast
+//! path, memoized collective costs, recycled buffers) for its whole
+//! slice of the grid, and results land in pre-sized lock-free
+//! `OnceLock` slots — no per-point mutex. [`StudyRunner::best_of`]
+//! additionally runs a bound-and-prune search that skips grid points
+//! whose analytic throughput upper bound cannot beat the incumbent.
 
+use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
+use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::OnceLock;
 
 use crate::hardware::Generation;
 use crate::memory;
 use crate::metrics::{self, Metrics};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Sharding, SimConfig};
+use crate::sim::{self, Sharding, SimArena, SimConfig};
 
 use super::table::{Column, Table};
 use super::{ConfigKey, Study, StudyPoint};
@@ -37,7 +46,7 @@ pub struct CaseResult {
     pub mem_per_gpu: f64,
 }
 
-fn evaluate_point(p: &StudyPoint) -> CaseResult {
+fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
     CaseResult {
         arch: p.cfg.arch.name,
         gen: p.cfg.cluster.node.gpu,
@@ -47,7 +56,7 @@ fn evaluate_point(p: &StudyPoint) -> CaseResult {
         micro_batch: p.cfg.micro_batch,
         seq_len: p.cfg.seq_len,
         sharding: p.cfg.sharding,
-        metrics: metrics::evaluate(&p.cfg),
+        metrics: metrics::evaluate_in(&p.cfg, arena),
         mem_per_gpu: p.mem_per_gpu,
     }
 }
@@ -58,6 +67,12 @@ pub struct StudyRunner {
     cache: HashMap<ConfigKey, CaseResult>,
     evaluated: usize,
     requested: usize,
+    pruned: usize,
+    /// One long-lived arena per worker slot: the collective cost memo
+    /// and all recycled buffers persist across waves, runs, and
+    /// scenarios served by this runner.
+    arenas: Vec<SimArena>,
+    force_engine: bool,
 }
 
 impl StudyRunner {
@@ -68,6 +83,10 @@ impl StudyRunner {
             cache: HashMap::new(),
             evaluated: 0,
             requested: 0,
+            pruned: 0,
+            arenas: Vec::new(),
+            // Honor the debug env switch for runner-driven paths too.
+            force_engine: SimArena::env_force_engine(),
         }
     }
 
@@ -88,10 +107,33 @@ impl StudyRunner {
         self.threads
     }
 
+    /// Route every simulation through the materialized event-graph
+    /// engine instead of the fused fast path. Results are bit-identical
+    /// either way (enforced by tests); this exists for debugging and
+    /// for benchmarking the fast path against its reference.
+    pub fn force_event_engine(&mut self, on: bool) {
+        self.force_engine = on;
+    }
+
     /// (simulations actually run, grid points requested) so far —
-    /// the difference is what the cache deduplicated.
+    /// the difference is what the cache deduplicated and, for
+    /// [`Self::best_of`], what the bound pruned.
     pub fn stats(&self) -> (usize, usize) {
         (self.evaluated, self.requested)
+    }
+
+    /// Grid points skipped by [`Self::best_of`]'s analytic bound.
+    pub fn pruned_points(&self) -> usize {
+        self.pruned
+    }
+
+    /// Collective cost-memo (hits, misses), summed over the runner's
+    /// persistent worker arenas.
+    pub fn cost_cache_stats(&self) -> (u64, u64) {
+        self.arenas.iter().fold((0, 0), |(h, m), a| {
+            let (ah, am) = a.cost_stats();
+            (h + ah, m + am)
+        })
     }
 
     /// Expand and execute a study.
@@ -135,7 +177,7 @@ impl StudyRunner {
 
         let keys: Vec<ConfigKey> =
             todo.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
-        let fresh = evaluate_all(&todo, self.threads);
+        let fresh = self.evaluate_points(&todo);
         for (key, case) in keys.into_iter().zip(fresh) {
             self.cache.insert(key, case);
         }
@@ -155,38 +197,152 @@ impl StudyRunner {
             cases,
         }
     }
-}
 
-/// Evaluate all points, in parallel when `threads > 1`. Output order
-/// matches input order.
-fn evaluate_all(points: &[&StudyPoint], threads: usize) -> Vec<CaseResult> {
-    if threads <= 1 || points.len() <= 1 {
-        return points.iter().map(|p| evaluate_point(p)).collect();
-    }
-    let slots: Vec<Mutex<Option<CaseResult>>> =
-        points.iter().map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
-    let workers = threads.min(points.len());
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= points.len() {
+    /// The case `run(study)` + [`StudyResult::best`] would select,
+    /// found by bound-and-prune instead of exhaustive simulation:
+    /// candidates are evaluated in order of an optimistic analytic
+    /// throughput bound ([`sim::iter_time_lower_bound`], ignoring all
+    /// communication), and once the incumbent's *achieved* throughput
+    /// exceeds a candidate's bound, that candidate — and every one
+    /// after it in bound order — is provably dominated and skipped.
+    ///
+    /// Winner identity is exact, including `best`'s first-in-grid-order
+    /// tie-break: the bound is safety-inflated so f64 rounding cannot
+    /// disqualify a true winner, pruning requires the *strict* failure
+    /// `bound <= incumbent`, and ties are resolved by original grid
+    /// index. Skipped points are reported via [`Self::pruned_points`].
+    pub fn best_of(&mut self, study: &Study) -> Option<CaseResult> {
+        let points = study.expand();
+        self.requested += points.len();
+        if points.is_empty() {
+            return None;
+        }
+        let keys: Vec<ConfigKey> =
+            points.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
+
+        // Incumbent: (achieved wps, grid index), grid-order tie-break.
+        let mut best: Option<(f64, usize)> = None;
+        let raise = |wps: f64, idx: usize,
+                     best: &mut Option<(f64, usize)>| {
+            let replace = match *best {
+                None => true,
+                Some((bw, bi)) => wps > bw || (wps == bw && idx < bi),
+            };
+            if replace {
+                *best = Some((wps, idx));
+            }
+        };
+
+        // Cached points are free: fold them into the incumbent first.
+        // The remainder is deduplicated by key (first occurrence keeps
+        // its grid index, matching `best`'s tie-break).
+        let mut seen: HashSet<ConfigKey> = HashSet::new();
+        let mut todo: Vec<(usize, f64)> = Vec::new(); // (grid idx, ub)
+        for (idx, p) in points.iter().enumerate() {
+            if let Some(case) = self.cache.get(&keys[idx]) {
+                raise(case.metrics.global_wps, idx, &mut best);
+            } else if seen.insert(keys[idx]) {
+                // Deflating the time bound inflates the throughput
+                // bound, so rounding in the closed-form product can
+                // never undercut the engine's chained-addition result.
+                let lb = sim::iter_time_lower_bound(&p.cfg) * (1.0 - 1e-9);
+                todo.push((idx, p.cfg.global_tokens() / lb));
+            }
+        }
+        // Most promising first; index-ascending on equal bounds keeps
+        // the evaluation order deterministic.
+        todo.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+
+        let wave = self.threads.max(1);
+        let mut i = 0;
+        while i < todo.len() {
+            if let Some((bw, _)) = best {
+                // Bounds are sorted: once the head is dominated, the
+                // whole tail is.
+                if todo[i].1 <= bw {
+                    self.pruned += todo.len() - i;
                     break;
                 }
-                let case = evaluate_point(points[i]);
-                *slots[i].lock().unwrap() = Some(case);
-            });
+            }
+            let end = (i + wave).min(todo.len());
+            let mut grid_idxs: Vec<usize> = Vec::with_capacity(end - i);
+            for &(idx, ub) in &todo[i..end] {
+                match best {
+                    Some((bw, _)) if ub <= bw => self.pruned += 1,
+                    _ => grid_idxs.push(idx),
+                }
+            }
+            let wave_points: Vec<&StudyPoint> =
+                grid_idxs.iter().map(|&ix| &points[ix]).collect();
+            let fresh = self.evaluate_points(&wave_points);
+            self.evaluated += fresh.len();
+            for (&ix, case) in grid_idxs.iter().zip(fresh) {
+                raise(case.metrics.global_wps, ix, &mut best);
+                self.cache.insert(keys[ix], case);
+            }
+            i = end;
         }
-    });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("worker thread poisoned a result slot")
-                .expect("every slot filled by the work loop")
+
+        best.map(|(_, idx)| {
+            self.cache
+                .get(&keys[idx])
+                .expect("winning point is always cached")
+                .clone()
         })
-        .collect()
+    }
+
+    /// Evaluate all points, in parallel when `threads > 1`. Output
+    /// order matches input order; results land in pre-sized lock-free
+    /// `OnceLock` slots, and each worker drives one of the runner's
+    /// *persistent* `SimArena`s — so the collective cost memo and
+    /// recycled buffers span waves, runs, and scenarios.
+    fn evaluate_points(&mut self, points: &[&StudyPoint])
+        -> Vec<CaseResult>
+    {
+        let workers = if self.threads <= 1 || points.len() <= 1 {
+            1
+        } else {
+            self.threads.min(points.len())
+        };
+        while self.arenas.len() < workers {
+            self.arenas.push(SimArena::new());
+        }
+        for arena in &mut self.arenas {
+            arena.force_engine(self.force_engine);
+        }
+        if workers == 1 {
+            let arena = &mut self.arenas[0];
+            return points
+                .iter()
+                .map(|p| evaluate_point(p, arena))
+                .collect();
+        }
+        let slots: Vec<OnceLock<CaseResult>> =
+            points.iter().map(|_| OnceLock::new()).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let slots = &slots;
+            let next = &next;
+            for arena in self.arenas.iter_mut().take(workers) {
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let _ = slots[i].set(evaluate_point(points[i], arena));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .expect("every slot filled by the work loop")
+            })
+            .collect()
+    }
 }
 
 /// Results of one study run, in grid-expansion order until sorted.
@@ -225,23 +381,25 @@ impl StudyResult {
     }
 
     /// Best case per key, keys in first-occurrence order (e.g. the
-    /// optimal plan per cluster size: `best_per(|c| c.nodes)`).
-    pub fn best_per<K: PartialEq>(
+    /// optimal plan per cluster size: `best_per(|c| c.nodes)`). Keys
+    /// are resolved through an order-preserving hash index — linear in
+    /// the case count, not quadratic in distinct keys.
+    pub fn best_per<K: Eq + Hash>(
         &self,
         key: impl Fn(&CaseResult) -> K,
     ) -> Vec<&CaseResult> {
-        let mut keys: Vec<K> = Vec::new();
+        let mut index: HashMap<K, usize> = HashMap::new();
         let mut best: Vec<&CaseResult> = Vec::new();
         for c in &self.cases {
-            let k = key(c);
-            match keys.iter().position(|existing| *existing == k) {
-                Some(i) => {
+            match index.entry(key(c)) {
+                Entry::Occupied(e) => {
+                    let i = *e.get();
                     if c.metrics.global_wps > best[i].metrics.global_wps {
                         best[i] = c;
                     }
                 }
-                None => {
-                    keys.push(k);
+                Entry::Vacant(e) => {
+                    e.insert(best.len());
                     best.push(c);
                 }
             }
@@ -367,5 +525,123 @@ mod tests {
         assert_eq!(runner.stats().0, 1);
         assert_eq!(a.metrics.global_wps, b.metrics.global_wps);
         assert!(a.mem_per_gpu > 0.0);
+    }
+
+    fn fake_case(nodes: usize, wps: f64) -> CaseResult {
+        CaseResult {
+            arch: "7b",
+            gen: Generation::H100,
+            nodes,
+            plan: ParallelPlan::data_parallel(8),
+            global_batch: 16,
+            micro_batch: 2,
+            seq_len: 4096,
+            sharding: Sharding::Fsdp,
+            metrics: Metrics {
+                iter_time: 1.0,
+                global_wps: wps,
+                per_gpu_wps: wps / 8.0,
+                tflops_per_gpu: 1.0,
+                mfu: 0.4,
+                compute_time: 0.5,
+                comm_time: 0.2,
+                exposed_comm: 0.1,
+                exposed_frac: 0.5,
+                power_w: 600.0,
+                total_power_w: 4800.0,
+                wps_per_watt: wps / 4800.0,
+                energy_per_token_j: 1.0,
+                world: 8,
+            },
+            mem_per_gpu: 1e9,
+        }
+    }
+
+    #[test]
+    fn best_per_scales_to_many_distinct_keys() {
+        // 500 distinct keys × 3 rounds: the hash index must keep
+        // first-occurrence order and pick each key's max.
+        let n = 500usize;
+        let mut cases = Vec::new();
+        for round in 0..3usize {
+            for k in 0..n {
+                cases.push(fake_case(k, (round * n + k) as f64));
+            }
+        }
+        let res = StudyResult {
+            name: "many-keys".into(),
+            title: String::new(),
+            cases,
+        };
+        let winners = res.best_per(|c| c.nodes);
+        assert_eq!(winners.len(), n);
+        for (k, w) in winners.iter().enumerate() {
+            assert_eq!(w.nodes, k, "first-occurrence order broken");
+            assert_eq!(w.metrics.global_wps, (2 * n + k) as f64);
+        }
+    }
+
+    #[test]
+    fn best_of_matches_full_sweep_winner() {
+        for nodes in [1usize, 2] {
+            let study = Study::builder("prune")
+                .arch(LLAMA_7B)
+                .nodes([nodes])
+                .plans(PlanAxis::Sweep { with_cp: false })
+                .global_batches([64])
+                .micro_batch_divisors()
+                .memory_cap(0.94)
+                .build();
+            let full = StudyRunner::sequential().run(&study);
+            let expect = full.best().unwrap();
+            let mut runner = StudyRunner::sequential();
+            let got = runner.best_of(&study).unwrap();
+            assert_eq!(got.plan, expect.plan);
+            assert_eq!(got.micro_batch, expect.micro_batch);
+            assert_eq!(got.metrics.global_wps.to_bits(),
+                       expect.metrics.global_wps.to_bits());
+            let (evaluated, requested) = runner.stats();
+            assert_eq!(evaluated + runner.pruned_points(), requested);
+        }
+    }
+
+    #[test]
+    fn best_of_reuses_the_cache() {
+        let study = small_sweep("prune-cache");
+        let mut runner = StudyRunner::sequential();
+        let full = runner.run(&study);
+        let (evaluated, _) = runner.stats();
+        let best = runner.best_of(&study).unwrap();
+        let (evaluated2, _) = runner.stats();
+        assert_eq!(evaluated2, evaluated,
+                   "best_of after run must be all cache hits");
+        assert_eq!(best.plan, full.best().unwrap().plan);
+    }
+
+    #[test]
+    fn forced_engine_matches_fast_path_bitwise() {
+        let study = small_sweep("engine-vs-fused");
+        let fast = StudyRunner::sequential().run(&study);
+        let mut engine_runner = StudyRunner::sequential();
+        engine_runner.force_event_engine(true);
+        let slow = engine_runner.run(&study);
+        assert_eq!(fast.cases.len(), slow.cases.len());
+        for (a, b) in fast.cases.iter().zip(&slow.cases) {
+            assert_eq!(a.metrics.global_wps.to_bits(),
+                       b.metrics.global_wps.to_bits());
+            assert_eq!(a.metrics.exposed_comm.to_bits(),
+                       b.metrics.exposed_comm.to_bits());
+            assert_eq!(a.metrics.iter_time.to_bits(),
+                       b.metrics.iter_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn cost_cache_stats_accumulate() {
+        let mut runner = StudyRunner::sequential();
+        runner.run(&small_sweep("cost-stats"));
+        let (hits, misses) = runner.cost_cache_stats();
+        assert!(misses > 0, "sweep must query the collective memo");
+        assert!(hits > 0, "neighboring grid points must share costs");
     }
 }

@@ -64,28 +64,41 @@ impl RankGroup {
             && (rank - self.base) / self.stride < self.size
     }
 
-    /// Topology placement of the group on `cluster`.
+    /// Topology placement of the group on `cluster`. Allocation-free
+    /// (this sits under every `collectives` cost query in the planner's
+    /// hot path): ranks are visited in index order, and since
+    /// `base + i·stride` is strictly increasing, each node's members
+    /// form one contiguous run — so distinct-node and max-occupancy
+    /// counts are a single run-length scan.
     pub fn placement(&self, cluster: &Cluster) -> GroupPlacement {
         let g = cluster.gpus_per_node();
-        let mut nodes = std::collections::BTreeMap::new();
-        for r in self.ranks() {
-            *nodes.entry(r / g).or_insert(0usize) += 1;
+        let mut node_count = 0usize;
+        let mut max_run = 0usize;
+        let mut run = 0usize;
+        let mut prev_node = usize::MAX;
+        for i in 0..self.size {
+            let node = (self.base + i * self.stride) / g;
+            if node != prev_node {
+                node_count += 1;
+                prev_node = node;
+                run = 0;
+            }
+            run += 1;
+            max_run = max_run.max(run);
         }
-        let node_count = nodes.len();
-        let max_ranks_per_node =
-            nodes.values().copied().max().unwrap_or(1);
         GroupPlacement {
             size: self.size,
             nodes: node_count,
-            ranks_per_node: max_ranks_per_node,
+            ranks_per_node: max_run.max(1),
             crosses_nodes: node_count > 1,
         }
     }
 }
 
 /// How a communication group maps onto the physical cluster — the inputs
-/// to the collective cost model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// to the collective cost model. `Hash`/`Eq` so it can key the
+/// [`collectives::CostCache`](crate::collectives::CostCache) memo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GroupPlacement {
     /// Number of ranks in the group.
     pub size: usize,
@@ -163,6 +176,29 @@ mod tests {
         let p = GroupPlacement::strided(&c, 4, 8);
         assert_eq!(p.nodes, 4);
         assert_eq!(p.ranks_per_node, 1);
+    }
+
+    #[test]
+    fn placement_matches_reference_counting() {
+        // The run-length scan must agree with explicit per-node
+        // occupancy counting for regular and irregular groups.
+        let c = h100(6);
+        for &(base, size, stride) in &[
+            (0usize, 48usize, 1usize), (0, 6, 8), (2, 5, 3),
+            (0, 12, 4), (1, 7, 7), (0, 1, 1), (40, 8, 1),
+        ] {
+            let g = RankGroup { base, size, stride };
+            let got = g.placement(&c);
+            let mut nodes = std::collections::BTreeMap::new();
+            for r in g.ranks() {
+                *nodes.entry(r / 8).or_insert(0usize) += 1;
+            }
+            assert_eq!(got.size, size);
+            assert_eq!(got.nodes, nodes.len(), "{base}+{size}x{stride}");
+            assert_eq!(got.ranks_per_node,
+                       nodes.values().copied().max().unwrap_or(1));
+            assert_eq!(got.crosses_nodes, nodes.len() > 1);
+        }
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Randomized cross-validation of the fused simulation fast path
+//! against the materialized event-graph engine: across sampled valid
+//! configurations covering every sharding, tp/cp/pp on and off, and
+//! the prefetch ablation, `iter_time`, `exposed_comm`, and per-tag
+//! totals must agree to 1e-9 (they are in fact bit-identical — the two
+//! paths share the emitter and perform the same f64 operations — but
+//! the contract tested here is the documented 1e-9 tolerance).
+
+use std::cell::Cell;
+
+use dtsim::hardware::Generation;
+use dtsim::model::LLAMA_7B;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::sim::{
+    simulate_engine, simulate_in, Sharding, SimArena, SimConfig, Tag,
+};
+use dtsim::util::proptest::check;
+use dtsim::util::rng::Rng;
+
+/// Random power-of-two in [1, 2^max_log2].
+fn pow2(rng: &mut Rng, max_log2: u64) -> usize {
+    1usize << rng.next_below(max_log2 + 1)
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn prop_fused_fast_path_matches_event_engine() {
+    let valid = Cell::new(0u32);
+    // One arena reused across every sampled config — doubles as a
+    // buffer-recycling soak test.
+    let arena = std::cell::RefCell::new(SimArena::new());
+    check("fastpath-vs-engine", 400, |rng| {
+        let nodes = pow2(rng, 4); // 1..16 nodes, 8..128 GPUs
+        let cluster = dtsim::topology::Cluster::new(
+            Generation::H100, nodes);
+        let world = cluster.world_size();
+        let tp = pow2(rng, 3);
+        let pp = pow2(rng, 2);
+        let cp = pow2(rng, 1);
+        let mp = tp * pp * cp;
+        if world % mp != 0 || 32 % pp != 0 {
+            return None;
+        }
+        let dp = world / mp;
+        let plan = ParallelPlan::new(dp, tp, pp, cp);
+        let mbs = pow2(rng, 1);
+        let accum = 1 + rng.next_below(3) as usize;
+        let sharding = match rng.next_below(4) {
+            0 => Sharding::Fsdp,
+            1 => Sharding::Ddp,
+            2 => Sharding::Hsdp { group: 2.min(dp) },
+            _ => Sharding::Hsdp { group: dp },
+        };
+        let cfg = SimConfig {
+            arch: LLAMA_7B,
+            cluster,
+            plan,
+            global_batch: dp * mbs * accum,
+            micro_batch: mbs,
+            seq_len: 4096,
+            sharding,
+            prefetch: rng.next_below(2) == 0,
+        };
+        if cfg.validate().is_err() {
+            return None;
+        }
+        Some(cfg)
+    }, |cfg| {
+        let Some(cfg) = cfg else { return Ok(()) };
+        valid.set(valid.get() + 1);
+        let fast = simulate_in(cfg, &mut arena.borrow_mut());
+        let slow = simulate_engine(cfg);
+        if !close(fast.iter_time, slow.iter_time) {
+            return Err(format!("iter_time {} vs {}",
+                               fast.iter_time, slow.iter_time));
+        }
+        if !close(fast.exposed_comm, slow.exposed_comm) {
+            return Err(format!("exposed_comm {} vs {}",
+                               fast.exposed_comm, slow.exposed_comm));
+        }
+        if !close(fast.comm_busy, slow.comm_busy)
+            || !close(fast.compute_busy, slow.compute_busy)
+            || !close(fast.comm_kernel_time, slow.comm_kernel_time)
+            || !close(fast.idle, slow.idle)
+        {
+            return Err("busy/idle accounting diverged".into());
+        }
+        if fast.stages.len() != slow.stages.len() {
+            return Err("stage count diverged".into());
+        }
+        for tag in Tag::ALL {
+            if !close(fast.comm_by_tag.get(tag), slow.comm_by_tag.get(tag)) {
+                return Err(format!(
+                    "comm_by_tag[{tag:?}] {} vs {}",
+                    fast.comm_by_tag.get(tag), slow.comm_by_tag.get(tag)));
+            }
+            for (fs, ss) in fast.stages.iter().zip(&slow.stages) {
+                if !close(fs.by_tag.get(tag), ss.by_tag.get(tag)) {
+                    return Err(format!("stage by_tag[{tag:?}] diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(valid.get() >= 200,
+            "only {} valid configs sampled; need >= 200 for coverage",
+            valid.get());
+}
+
+#[test]
+fn public_entry_points_agree_bitwise() {
+    // The two public entry points (`simulate` fast path,
+    // `simulate_engine` reference) agree bit-for-bit on a config
+    // exercising pipeline + tensor parallel + FSDP simultaneously.
+    let cluster = dtsim::topology::Cluster::new(Generation::H100, 4);
+    let cfg = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::new(4, 2, 4, 1), 16, 1, 4096);
+    let fast = dtsim::sim::simulate(&cfg);
+    let slow = simulate_engine(&cfg);
+    assert_eq!(fast.iter_time.to_bits(), slow.iter_time.to_bits());
+    assert_eq!(fast.exposed_comm.to_bits(), slow.exposed_comm.to_bits());
+    assert_eq!(fast.idle.to_bits(), slow.idle.to_bits());
+}

@@ -5,6 +5,7 @@
 
 use std::path::PathBuf;
 
+use dtsim::collectives::{collective_time, Collective, CostCache};
 use dtsim::hardware::Generation;
 use dtsim::model::LLAMA_7B;
 use dtsim::planner::{self, SweepRequest};
@@ -13,7 +14,7 @@ use dtsim::study::{
     Column, CsvSink, JsonSink, PlanAxis, Registry, Scenario, Sink,
     Study, StudyRunner, Table,
 };
-use dtsim::topology::Cluster;
+use dtsim::topology::{Cluster, GroupPlacement};
 
 fn tmp_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("dtsim_study_it").join(name);
@@ -175,6 +176,110 @@ fn json_sink_round_trips_a_figure() {
     assert_eq!(header[0].as_str().unwrap(), "seq_len");
     let rows = v.get("rows").unwrap().as_array().unwrap();
     assert_eq!(rows.len(), 5); // seq lens 2k..32k
+}
+
+#[test]
+fn figures_unchanged_with_cache_and_arena_enabled() {
+    // The perf machinery (collective cost memo, arena-recycled fused
+    // fast path, lock-free result slots) must not move a single CSV
+    // byte: a default runner and one forced through the uncached
+    // event-graph reference must emit identical files.
+    let reg = report::registry();
+    for fig in ["fig1", "fig6", "fig9"] {
+        let sc = reg.get(fig).unwrap();
+        let fast = sc.tables(&mut StudyRunner::sequential()).unwrap();
+        let mut engine_runner = StudyRunner::new(4);
+        engine_runner.force_event_engine(true);
+        let reference = sc.tables(&mut engine_runner).unwrap();
+        assert_eq!(fast, reference,
+                   "{fig} tables diverge with the fast path enabled");
+
+        let dir_a = tmp_dir(&format!("{fig}_fast"));
+        let dir_b = tmp_dir(&format!("{fig}_engine"));
+        for t in &fast {
+            CsvSink::new(&dir_a).emit(t).unwrap();
+        }
+        for t in &reference {
+            CsvSink::new(&dir_b).emit(t).unwrap();
+        }
+        for t in &fast {
+            let name = format!("{}.csv", t.name);
+            let a = std::fs::read(dir_a.join(&name)).unwrap();
+            let b = std::fs::read(dir_b.join(&name)).unwrap();
+            assert_eq!(a, b, "{name} bytes diverge with fast path");
+        }
+    }
+}
+
+#[test]
+fn cost_cache_is_bit_identical_to_uncached_collective_time() {
+    let mut cache = CostCache::new();
+    let colls = [
+        Collective::AllReduce, Collective::AllGather,
+        Collective::ReduceScatter, Collective::Broadcast,
+        Collective::AllToAll, Collective::PointToPoint,
+    ];
+    for gen in [Generation::A100, Generation::H100] {
+        for nodes in [1usize, 2, 32] {
+            let c = Cluster::new(gen, nodes);
+            let world = c.world_size();
+            let places = [
+                GroupPlacement::strided(&c, world, 1),
+                GroupPlacement::strided(&c, 8.min(world), 1),
+                GroupPlacement::strided(&c, nodes, 8),
+            ];
+            for coll in colls {
+                for place in &places {
+                    for bytes in [1e3, 4e6, 13e9] {
+                        let direct =
+                            collective_time(coll, bytes, &c, place);
+                        // First call misses, second hits — both must
+                        // be bitwise equal to the direct computation.
+                        for _ in 0..2 {
+                            let cached = cache.get(coll, bytes, &c, place);
+                            assert_eq!(cached.time_s.to_bits(),
+                                       direct.time_s.to_bits());
+                            assert_eq!(cached.busbw.to_bits(),
+                                       direct.busbw.to_bits());
+                            assert_eq!(cached.algo, direct.algo);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let (hits, misses) = cache.stats();
+    // Every unique key is queried at least twice (some placements
+    // coincide on small clusters, adding extra hits).
+    assert!(hits >= misses, "{hits} hits < {misses} misses");
+    assert!(misses > 0 && !cache.is_empty());
+}
+
+#[test]
+fn pruned_planner_best_is_exact_through_shared_runner() {
+    // The headline scenario drives planner::best_in through a shared
+    // runner; the pruned search must return the exhaustive winner
+    // whether or not earlier figures warmed the cache.
+    let req = SweepRequest::fsdp(
+        LLAMA_7B, Cluster::new(Generation::H100, 4), 64, 4096);
+    let exhaustive = planner::sweep(&req);
+    let head = exhaustive.first().unwrap();
+
+    let mut cold = StudyRunner::sequential();
+    let from_cold = planner::best_in(&req, &mut cold).unwrap();
+    assert_eq!(from_cold.plan, head.plan);
+    assert_eq!(from_cold.micro_batch, head.micro_batch);
+    let (evaluated_cold, requested_cold) = cold.stats();
+    assert_eq!(evaluated_cold + cold.pruned_points(), requested_cold);
+
+    let mut warm = StudyRunner::sequential();
+    planner::sweep_in(&req, &mut warm); // warm every config
+    let before = warm.stats().0;
+    let from_warm = planner::best_in(&req, &mut warm).unwrap();
+    assert_eq!(warm.stats().0, before, "warm best_in must not simulate");
+    assert_eq!(from_warm.plan, head.plan);
+    assert_eq!(from_warm.metrics.global_wps.to_bits(),
+               head.metrics.global_wps.to_bits());
 }
 
 #[test]
