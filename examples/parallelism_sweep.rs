@@ -7,12 +7,14 @@
 //! pre-FSDP conventional wisdom.
 //!
 //! Run: cargo run --release --example parallelism_sweep -- \
-//!     [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512] [--cp]
+//!     [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512] [--cp] \
+//!     [--sharding fsdp|ddp|hsdp:G|zero3] \
+//!     [--schedule 1f1b|interleaved:V]
 
+use dtsim::config::{parse_schedule, parse_sharding};
 use dtsim::hardware::Generation;
 use dtsim::model;
 use dtsim::planner::{self, SweepRequest};
-use dtsim::sim::Sharding;
 use dtsim::topology::Cluster;
 use dtsim::util::args::Args;
 
@@ -32,7 +34,10 @@ fn main() -> anyhow::Result<()> {
         global_batch: gbs,
         seq_len: args.usize_or("seq", 4096),
         with_cp: args.has("cp"),
-        sharding: Sharding::Fsdp,
+        sharding: parse_sharding(&args.get_or("sharding", "fsdp"))
+            .map_err(anyhow::Error::msg)?,
+        schedule: parse_schedule(&args.get_or("schedule", "1f1b"))
+            .map_err(anyhow::Error::msg)?,
     };
     let outcomes = planner::sweep(&req);
     anyhow::ensure!(!outcomes.is_empty(), "no feasible plan fits memory");

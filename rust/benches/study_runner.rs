@@ -8,7 +8,8 @@ use dtsim::hardware::Generation;
 use dtsim::model::LLAMA_7B;
 use dtsim::parallelism::ParallelPlan;
 use dtsim::sim::{simulate_engine, simulate_in, SimArena, SimConfig};
-use dtsim::study::{bench_pinned_study, StudyRunner};
+use dtsim::study::{bench_pinned_sched_study, bench_pinned_study,
+                   StudyRunner};
 use dtsim::topology::Cluster;
 use dtsim::util::bench::{bb, bench, bench_quick, group};
 
@@ -73,5 +74,18 @@ fn main() {
     bench_quick("best_of/fig6_grid", || {
         let mut runner = StudyRunner::sequential();
         bb(runner.best_of(bb(&study)));
+    });
+
+    group("study runner: schedule variants (interleaved/zero3)");
+    let sched = bench_pinned_sched_study();
+    println!("sched grid points after constraints: {}",
+             sched.expand().len());
+    bench_quick("run/sched_sequential", || {
+        let mut runner = StudyRunner::sequential();
+        bb(runner.run(bb(&sched)));
+    });
+    bench_quick("best_of/sched_grid", || {
+        let mut runner = StudyRunner::sequential();
+        bb(runner.best_of(bb(&sched)));
     });
 }

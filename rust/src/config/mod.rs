@@ -11,7 +11,7 @@ pub mod toml;
 use crate::hardware::Generation;
 use crate::model::{self, TransformerArch};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Sharding, SimConfig};
+use crate::sim::{Schedule, Sharding, SimConfig};
 use crate::topology::Cluster;
 
 /// A fully-specified simulated training run.
@@ -25,6 +25,7 @@ pub struct RunConfig {
     pub micro_batch: usize,
     pub seq_len: usize,
     pub sharding: Sharding,
+    pub schedule: Schedule,
 }
 
 impl RunConfig {
@@ -41,6 +42,7 @@ impl RunConfig {
             micro_batch: self.micro_batch,
             seq_len: self.seq_len,
             sharding: self.sharding,
+            schedule: self.schedule,
             prefetch: true,
         }
     }
@@ -97,8 +99,11 @@ impl RunConfig {
         let sharding = parse_sharding(
             &doc.get_str("parallelism", "sharding")
                 .unwrap_or_else(|| "fsdp".into()))?;
+        let schedule = parse_schedule(
+            &doc.get_str("parallelism", "schedule")
+                .unwrap_or_else(|| "1f1b".into()))?;
         let rc = RunConfig { arch, gen, nodes, plan, global_batch,
-                             micro_batch, seq_len, sharding };
+                             micro_batch, seq_len, sharding, schedule };
         rc.sim().validate()?;
         Ok(rc)
     }
@@ -116,7 +121,7 @@ impl RunConfig {
             "[model]\narch = \"{}\"\nseq_len = {}\n\n\
              [cluster]\ngeneration = \"{}\"\nnodes = {}\n\n\
              [parallelism]\ntp = {}\npp = {}\ncp = {}\n\
-             sharding = \"{}\"\n\n\
+             sharding = \"{}\"\nschedule = \"{}\"\n\n\
              [batch]\nglobal = {}\nmicro = {}\n",
             self.arch.name,
             self.seq_len,
@@ -126,6 +131,7 @@ impl RunConfig {
             self.plan.pp,
             self.plan.cp,
             self.sharding,
+            self.schedule,
             self.global_batch,
             self.micro_batch,
         )
@@ -137,7 +143,7 @@ impl RunConfig {
 const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ("model", &["arch", "seq_len"]),
     ("cluster", &["generation", "nodes"]),
-    ("parallelism", &["tp", "pp", "cp", "sharding"]),
+    ("parallelism", &["tp", "pp", "cp", "sharding", "schedule"]),
     ("batch", &["global", "micro"]),
 ];
 
@@ -164,21 +170,51 @@ fn validate_keys(doc: &toml::Document) -> Result<(), String> {
     Ok(())
 }
 
-/// Parse a sharding spec ("fsdp", "ddp", "hsdp:G") — the single
-/// parser behind TOML configs and the CLI; the inverse is
+/// Parse a sharding spec ("fsdp", "ddp", "hsdp:G", "zero3") — the
+/// single parser behind TOML configs and the CLI; the inverse is
 /// `Sharding`'s `Display` impl.
 pub fn parse_sharding(s: &str) -> Result<Sharding, String> {
     match s {
         "fsdp" => Ok(Sharding::Fsdp),
         "ddp" => Ok(Sharding::Ddp),
+        "zero3" => Ok(Sharding::Zero3),
         other => {
             if let Some(group) = other.strip_prefix("hsdp:") {
                 return group
                     .parse()
                     .map(|group| Sharding::Hsdp { group })
-                    .map_err(|_| format!("bad hsdp group '{group}'"));
+                    .map_err(|_| format!(
+                        "bad hsdp group '{group}' (expected hsdp:G \
+                         with an integer group size)"));
             }
-            Err(format!("unknown sharding '{other}'"))
+            Err(format!(
+                "unknown sharding '{other}' (expected one of: fsdp, \
+                 ddp, hsdp:G, zero3)"))
+        }
+    }
+}
+
+/// Parse a schedule spec ("1f1b", "interleaved:V" with V >= 2) — the
+/// single parser behind TOML configs and the CLI; the inverse is
+/// `Schedule`'s `Display` impl.
+pub fn parse_schedule(s: &str) -> Result<Schedule, String> {
+    match s {
+        "1f1b" => Ok(Schedule::OneFOneB),
+        other => {
+            if let Some(v) = other.strip_prefix("interleaved:") {
+                let v: usize = v.parse().map_err(|_| format!(
+                    "bad interleave depth '{v}' (expected \
+                     interleaved:V with an integer V >= 2)"))?;
+                if v < 2 {
+                    return Err(format!(
+                        "interleave depth must be >= 2, got {v} \
+                         (1f1b is the single-chunk schedule)"));
+                }
+                return Ok(Schedule::Interleaved { v });
+            }
+            Err(format!(
+                "unknown schedule '{other}' (expected one of: 1f1b, \
+                 interleaved:V)"))
         }
     }
 }
@@ -198,6 +234,7 @@ pub fn scenario(name: &str) -> Option<RunConfig> {
             micro_batch: mbs,
             seq_len: 4096,
             sharding: Sharding::Fsdp,
+            schedule: Schedule::OneFOneB,
         }
     };
     use Generation::*;
@@ -319,8 +356,49 @@ micro = 2
         assert_eq!(back.sharding, Sharding::Hsdp { group: 8 });
         assert!(RunConfig::from_toml_str(
             &EXAMPLE.replace("\"fsdp\"", "\"hsdp:zero\"")).is_err());
-        assert!(RunConfig::from_toml_str(
-            &EXAMPLE.replace("\"fsdp\"", "\"zero3\"")).is_err());
+    }
+
+    #[test]
+    fn zero3_sharding_roundtrips() {
+        let text = EXAMPLE.replace(
+            "sharding = \"fsdp\"", "sharding = \"zero3\"");
+        let rc = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(rc.sharding, Sharding::Zero3);
+        let back = RunConfig::from_toml_str(&rc.to_toml()).unwrap();
+        assert_eq!(back.sharding, Sharding::Zero3);
+    }
+
+    #[test]
+    fn schedule_key_parses_and_roundtrips() {
+        // Default: plain 1f1b.
+        let rc = RunConfig::from_toml_str(EXAMPLE).unwrap();
+        assert_eq!(rc.schedule, Schedule::OneFOneB);
+        // Interleaved needs a pipelined plan and m % pp == 0.
+        let text = EXAMPLE
+            .replace("tp = 2", "tp = 2\nschedule = \"interleaved:2\"")
+            .replace("pp = 1", "pp = 4")
+            .replace("micro = 2", "micro = 1");
+        let rc = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(rc.schedule, Schedule::Interleaved { v: 2 });
+        assert_eq!(rc.plan.pp, 4);
+        let back = RunConfig::from_toml_str(&rc.to_toml()).unwrap();
+        assert_eq!(back.schedule, Schedule::Interleaved { v: 2 });
+        // Interleaving without pipelining fails sim validation.
+        let bad = EXAMPLE.replace(
+            "tp = 2", "tp = 2\nschedule = \"interleaved:2\"");
+        assert!(RunConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn sharding_and_schedule_errors_enumerate_accepted_forms() {
+        let err = parse_sharding("zero2").unwrap_err();
+        assert!(err.contains("fsdp, ddp, hsdp:G, zero3"), "{err}");
+        let err = parse_schedule("gpipe").unwrap_err();
+        assert!(err.contains("1f1b, interleaved:V"), "{err}");
+        assert!(parse_schedule("interleaved:1").is_err());
+        assert!(parse_schedule("interleaved:x").is_err());
+        assert_eq!(parse_schedule("interleaved:4").unwrap(),
+                   Schedule::Interleaved { v: 4 });
     }
 
     #[test]

@@ -8,7 +8,12 @@
 //!   `metrics`, `planner`) that models one optimizer step of FSDP +
 //!   tensor/pipeline/context-parallel training on DGX clusters and
 //!   derives the paper's metrics (throughput, MFU, exposed
-//!   communication, power).
+//!   communication, power). The pipeline **schedule** is a first-class
+//!   axis ([`sim::Schedule`]): plain 1F1B or interleaved-1F1B with `v`
+//!   virtual chunks per device, and the sharding axis
+//!   ([`sim::Sharding`]) spans FSDP, DDP, HSDP, and full ZeRO-3 with
+//!   forward resharding — the cost model behind each variant is
+//!   derived in `docs/scheduling.md`.
 //! * The **Study experiment API** (`study`, `report`) — the crate's
 //!   primary experiment surface. A [`study::Study`] declares a sweep
 //!   grid (arch × generation × nodes × plan × sharding × batch shape ×
@@ -31,16 +36,20 @@
 //! ```ignore
 //! use dtsim::hardware::Generation;
 //! use dtsim::model::LLAMA_7B;
+//! use dtsim::sim::{Schedule, Sharding};
 //! use dtsim::study::{Column, CsvSink, PlanAxis, Sink, Study, StudyRunner};
 //!
 //! let study = Study::builder("my-sweep")
-//!     .title("7B parallelization sweep at 256 GPUs")
+//!     .title("7B schedule/parallelization sweep at 256 GPUs")
 //!     .arch(LLAMA_7B)
 //!     .generation(Generation::H100)
 //!     .nodes([32])
 //!     .plans(PlanAxis::Sweep { with_cp: false })
 //!     .global_batches([512])
 //!     .micro_batch_divisors()     // every divisor of the local batch
+//!     .schedules([Schedule::OneFOneB,
+//!                 Schedule::Interleaved { v: 2 }])
+//!     .shardings([Sharding::Fsdp, Sharding::Zero3])
 //!     .memory_cap(0.94)           // drop plans that overflow HBM
 //!     .build();
 //!
@@ -48,15 +57,26 @@
 //! let mut result = runner.run(&study);
 //! result.sort_by_wps();
 //! let table = result
-//!     .table(&[Column::Plan, Column::Mbs, Column::GlobalWps, Column::Mfu])
-//!     .with_chart(2);
+//!     .table(&[Column::Plan, Column::ScheduleKind, Column::Mbs,
+//!              Column::GlobalWps, Column::Mfu])
+//!     .with_chart(3);
 //! CsvSink::new("reports").emit(&table)?;
 //! ```
 //!
+//! Schedule/plan combinations an axis cannot satisfy (interleaving on
+//! a pp=1 plan, microbatch counts not divisible by pp) are skipped at
+//! expansion, not errors — a grid can mix them freely. From the CLI:
+//! `dtsim study sched` runs the registered schedule comparison,
+//! `dtsim study --grid --schedule 1f1b,interleaved:2 --sharding
+//! fsdp,zero3 ...` an ad-hoc one, and TOML configs take
+//! `schedule = "interleaved:2"` under `[parallelism]`.
+//!
 //! Named experiments implement [`study::Scenario`] and register in a
 //! [`study::Registry`] (the paper's figures live in `report::figures`);
-//! `cargo run -- study <name>` runs one end-to-end. See
-//! `examples/study_api.rs` for a custom scenario.
+//! `cargo run -- study <name>` runs one end-to-end, and `dtsim study
+//! --list` prints each scenario's one-line
+//! [`describe`](study::Scenario::describe). See `examples/study_api.rs`
+//! for a custom scenario.
 //!
 //! # Performance: the sweep-scale hot path
 //!

@@ -25,7 +25,7 @@ use dtsim::parallelism::ParallelPlan;
 use dtsim::planner::{self, SweepRequest};
 use dtsim::report;
 use dtsim::runtime::artifacts_root;
-use dtsim::sim::{build_engine, Sharding, SimConfig};
+use dtsim::sim::{build_engine, Schedule, Sharding, SimConfig};
 use dtsim::study::{
     Column, ConsoleSink, CsvSink, JsonSink, PlanAxis, Sink, Study,
     StudyRunner,
@@ -40,15 +40,18 @@ dtsim — Hardware Scaling Trends & Diminishing Returns reproduction
 USAGE:
   dtsim simulate   [--arch 7b] [--gen h100] [--nodes 32] [--tp 1]
                    [--pp 1] [--cp 1] [--gbs 512] [--mbs 2] [--seq 4096]
-                   [--ddp] [--config run.toml]
+                   [--sharding fsdp|ddp|hsdp:G|zero3] [--ddp]
+                   [--schedule 1f1b|interleaved:V] [--config run.toml]
   dtsim sweep      [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512]
                    [--seq 4096] [--cp] [--top 15]
+                   [--sharding fsdp] [--schedule 1f1b]
   dtsim study      <name> [--out reports] [--threads N] [--json]
   dtsim study      --list
   dtsim study      --grid [--arch 7b,13b] [--gen h100,a100]
                    [--nodes 4,32] [--plans sweep|sweep-cp|dp|tp2,tp4pp2]
                    [--gbs 512,1024 | --lbs 2] [--mbs divisors|1,2,4]
-                   [--seq 4096] [--sharding fsdp,ddp,hsdp:8]
+                   [--seq 4096] [--sharding fsdp,ddp,hsdp:8,zero3]
+                   [--schedule 1f1b,interleaved:2]
                    [--cap 0.94] [--top N] [--name my-grid]
                    [--out DIR] [--json] [--threads N]
   dtsim repro      [fig1|fig2|...|fig14|table1|headline|all]
@@ -116,8 +119,17 @@ fn sim_config_from(args: &Args) -> Result<SimConfig> {
         args.usize_or("mbs", 2),
         args.usize_or("seq", 4096),
     );
-    if args.has("ddp") {
-        cfg.sharding = dtsim::sim::Sharding::Ddp;
+    if let Some(s) = args.get("sharding") {
+        cfg.sharding = parse_sharding(s)?;
+        if args.has("ddp") && cfg.sharding != Sharding::Ddp {
+            bail!("--ddp conflicts with --sharding {}; drop one",
+                  cfg.sharding);
+        }
+    } else if args.has("ddp") {
+        cfg.sharding = Sharding::Ddp;
+    }
+    if let Some(s) = args.get("schedule") {
+        cfg.schedule = parse_schedule(s)?;
     }
     cfg.validate().map_err(|e| anyhow!(e))?;
     Ok(cfg)
@@ -162,7 +174,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         global_batch: args.usize_or("gbs", 512),
         seq_len: args.usize_or("seq", 4096),
         with_cp: args.has("cp"),
-        sharding: dtsim::sim::Sharding::Fsdp,
+        sharding: match args.get("sharding") {
+            Some(s) => parse_sharding(s)?,
+            None => Sharding::Fsdp,
+        },
+        schedule: match args.get("schedule") {
+            Some(s) => parse_schedule(s)?,
+            None => Schedule::OneFOneB,
+        },
     };
     let top = args.usize_or("top", 15);
     println!("{:<18} {:>4} {:>12} {:>7} {:>11} {:>10} {:>8}",
@@ -185,7 +204,7 @@ fn cmd_study(args: &Args) -> Result<()> {
     if args.has("list") {
         println!("registered scenarios:");
         for s in reg.iter() {
-            println!("  {:<10} {}", s.name(), s.title());
+            println!("  {:<10} {}", s.name(), s.describe());
         }
         return Ok(());
     }
@@ -205,10 +224,10 @@ fn cmd_study(args: &Args) -> Result<()> {
         }
         let table = res.table(&[
             Column::Arch, Column::Gen, Column::Nodes, Column::Plan,
-            Column::ShardingKind, Column::Mbs, Column::Gbs,
-            Column::SeqLen, Column::GlobalWps, Column::PerGpuWps,
-            Column::Mfu, Column::ExposedMs, Column::WpsPerWatt,
-            Column::MemGb,
+            Column::ShardingKind, Column::ScheduleKind, Column::Mbs,
+            Column::Gbs, Column::SeqLen, Column::GlobalWps,
+            Column::PerGpuWps, Column::Mfu, Column::ExposedMs,
+            Column::WpsPerWatt, Column::MemGb,
         ]);
         ConsoleSink.emit(&table)?;
         CsvSink::new(&out).emit(&table)?;
@@ -275,6 +294,10 @@ fn study_from_args(args: &Args) -> Result<Study> {
     for name in list("sharding", "fsdp") {
         shardings.push(parse_sharding(&name)?);
     }
+    let mut schedules = Vec::new();
+    for name in list("schedule", "1f1b") {
+        schedules.push(parse_schedule(&name)?);
+    }
 
     let plans = match args.get_or("plans", "sweep").as_str() {
         "sweep" => PlanAxis::Sweep { with_cp: false },
@@ -299,7 +322,8 @@ fn study_from_args(args: &Args) -> Result<Study> {
         .nodes(usizes("nodes", "32")?)
         .plans(plans)
         .seq_lens(usizes("seq", "4096")?)
-        .shardings(shardings);
+        .shardings(shardings)
+        .schedules(schedules);
 
     b = if args.has("lbs") {
         b.batch_per_replica(args.usize_or("lbs", 2))
@@ -320,6 +344,11 @@ fn study_from_args(args: &Args) -> Result<Study> {
 fn parse_sharding(s: &str) -> Result<Sharding> {
     dtsim::config::parse_sharding(s)
         .map_err(|e| anyhow!("--sharding: {e}"))
+}
+
+fn parse_schedule(s: &str) -> Result<Schedule> {
+    dtsim::config::parse_schedule(s)
+        .map_err(|e| anyhow!("--schedule: {e}"))
 }
 
 /// Parse a "tp2pp4cp1"-style plan shape (missing degrees default to 1).
@@ -414,6 +443,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     warmed.run(&study);
     let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
 
+    // Schedule-variant companion grid (interleaved-1F1B + ZeRO-3 on
+    // pipeline-heavy plans) so the new emitter arms are tracked in the
+    // same artifact — included in --quick too.
+    let sched_study = dtsim::study::bench_pinned_sched_study();
+    let sched_points = sched_study.expand();
+    let mut sched_runner = StudyRunner::new(threads);
+    let t0 = Instant::now();
+    sched_runner.run(&sched_study);
+    let sched_dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let (sched_evaluated, _) = sched_runner.stats();
+    let sched_cps = sched_evaluated as f64 / sched_dt;
+
     let queries = cost_hits + cost_misses;
     let hit_rate = if queries > 0 {
         cost_hits as f64 / queries as f64
@@ -425,8 +466,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"simulated\": {},\n  \"configs_per_s\": {:.1},\n  \
          \"warm_rerun_ms\": {:.3},\n  \
          \"collective_cache_hit_rate\": {:.4},\n  \
+         \"sched_grid_points\": {},\n  \"sched_simulated\": {},\n  \
+         \"sched_configs_per_s\": {:.1},\n  \
          \"peak_rss_bytes\": {},\n  \"threads\": {},\n  \"reps\": {}\n}}\n",
         study.name, points.len(), evaluated, best_cps, warm_ms, hit_rate,
+        sched_points.len(), sched_evaluated, sched_cps,
         peak_rss_bytes(), threads, reps);
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
@@ -555,8 +599,40 @@ mod tests {
         assert_eq!(parse_sharding("ddp").unwrap(), Sharding::Ddp);
         assert_eq!(parse_sharding("hsdp:8").unwrap(),
                    Sharding::Hsdp { group: 8 });
-        assert!(parse_sharding("zero3").is_err());
+        assert_eq!(parse_sharding("zero3").unwrap(), Sharding::Zero3);
         assert!(parse_sharding("hsdp:x").is_err());
+        // The error names every accepted form (CLI discoverability).
+        let err = parse_sharding("zero2").unwrap_err().to_string();
+        assert!(err.contains("fsdp, ddp, hsdp:G, zero3"), "{err}");
+    }
+
+    #[test]
+    fn schedules_parse() {
+        assert_eq!(parse_schedule("1f1b").unwrap(), Schedule::OneFOneB);
+        assert_eq!(parse_schedule("interleaved:2").unwrap(),
+                   Schedule::Interleaved { v: 2 });
+        assert!(parse_schedule("interleaved:1").is_err());
+        assert!(parse_schedule("gpipe").is_err());
+    }
+
+    #[test]
+    fn ddp_flag_conflicts_with_explicit_sharding() {
+        let parse = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        // Legacy shorthand alone still works.
+        let cfg = sim_config_from(&parse("simulate --nodes 2 --ddp"))
+            .unwrap();
+        assert_eq!(cfg.sharding, Sharding::Ddp);
+        // Explicit --sharding wins the namespace; a contradicting
+        // --ddp is an error rather than a silent override.
+        assert!(sim_config_from(
+            &parse("simulate --nodes 2 --sharding zero3 --ddp"))
+            .is_err());
+        // ...but an agreeing pair is accepted.
+        let cfg = sim_config_from(
+            &parse("simulate --nodes 2 --sharding ddp --ddp")).unwrap();
+        assert_eq!(cfg.sharding, Sharding::Ddp);
     }
 
     #[test]
@@ -572,5 +648,27 @@ mod tests {
         assert!(!points.is_empty());
         assert!(points.iter().any(|p| p.cfg.micro_batch == 3),
                 "divisor grid must include odd microbatches for gbs 48");
+    }
+
+    #[test]
+    fn grid_args_cover_the_schedule_axis() {
+        let args = Args::parse(
+            "study --grid --arch 7b --nodes 2 --gbs 64 \
+             --plans tp1pp4 --mbs divisors \
+             --schedule 1f1b,interleaved:2 --sharding fsdp,zero3"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let study = study_from_args(&args).unwrap();
+        let points = study.expand();
+        assert!(points.iter().any(
+            |p| matches!(p.cfg.schedule, Schedule::Interleaved { v: 2 })));
+        assert!(points.iter().any(
+            |p| p.cfg.sharding == Sharding::Zero3));
+        for p in &points {
+            if let Schedule::Interleaved { .. } = p.cfg.schedule {
+                assert_eq!(p.cfg.microbatches() % p.cfg.plan.pp, 0);
+            }
+        }
     }
 }

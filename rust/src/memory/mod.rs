@@ -5,9 +5,17 @@
 //! AdamW state (m, v, master weights = 12 bytes/param), the paper's
 //! training configuration (Appendix B: bf16, AdamW, no activation
 //! checkpointing, FSDP without forward resharding).
+//!
+//! [`per_gpu_memory_for`] / [`per_gpu_memory_cfg`] extend the model to
+//! the schedule and sharding axes: persistent state shards over the
+//! sharding mode's actual shard group (full DP for FSDP/ZeRO-3, the
+//! intra-group slice for HSDP, nothing for DDP), and activation
+//! residency follows the pipeline schedule's in-flight chunk count
+//! (`docs/scheduling.md` §Memory).
 
 use crate::model::TransformerArch;
 use crate::parallelism::ParallelPlan;
+use crate::sim::{Schedule, Sharding, SimConfig};
 
 /// Bytes per parameter of optimizer + master state in mixed precision:
 /// fp32 master (4) + fp32 m (4) + fp32 v (4).
@@ -50,7 +58,8 @@ impl MemoryBreakdown {
 
 /// Memory use for one GPU under `plan`, with `micro_batch` sequences per
 /// microbatch and `in_flight` microbatches resident (1 without pipeline;
-/// up to `pp` with 1F1B).
+/// up to `pp` with 1F1B). The historical FSDP/1F1B entry point; the
+/// schedule- and sharding-aware model is [`per_gpu_memory_for`].
 pub fn per_gpu_memory(
     arch: &TransformerArch,
     plan: &ParallelPlan,
@@ -58,21 +67,97 @@ pub fn per_gpu_memory(
     seq_len: usize,
     in_flight: usize,
 ) -> MemoryBreakdown {
+    breakdown(arch, plan, micro_batch, seq_len, plan.dp as f64, true,
+              1.0, in_flight.max(1) as f64)
+}
+
+/// In-flight activation *chunks* resident on the worst-case (first)
+/// pipeline device:
+///
+/// * 1F1B: `min(m, pp)` full per-stage activations;
+/// * interleaved-1F1B: warmup `2(pp-1) + (v-1)·pp` chunk-activations
+///   plus the one entering steady state, capped at `m·v` — each chunk
+///   `1/v` of a stage's layers (`docs/scheduling.md` §Memory).
+pub fn in_flight_chunks(
+    schedule: Schedule,
+    pp: usize,
+    microbatches: usize,
+) -> usize {
+    match schedule {
+        Schedule::OneFOneB => microbatches.min(pp).max(1),
+        Schedule::Interleaved { v } => {
+            (2 * pp.saturating_sub(1) + (v - 1) * pp + 1)
+                .min(microbatches * v)
+                .max(1)
+        }
+    }
+}
+
+/// Schedule- and sharding-aware per-GPU memory: persistent state
+/// shards over the mode's actual shard group (DDP replicates, HSDP
+/// shards within `group` ranks, FSDP/ZeRO-3 over the full DP group),
+/// and activation residency follows the schedule's in-flight chunks.
+pub fn per_gpu_memory_for(
+    arch: &TransformerArch,
+    plan: &ParallelPlan,
+    micro_batch: usize,
+    seq_len: usize,
+    sharding: Sharding,
+    schedule: Schedule,
+    microbatches: usize,
+) -> MemoryBreakdown {
+    let shard_deg = match sharding {
+        Sharding::Fsdp | Sharding::Zero3 => plan.dp,
+        Sharding::Hsdp { group } => group.clamp(1, plan.dp),
+        Sharding::Ddp => 1,
+    } as f64;
+    // DDP keeps parameters fully resident (no gathered working set);
+    // the sharded modes gather two layers (current + prefetched next).
+    let gathers = !matches!(sharding, Sharding::Ddp);
+    let chunks = in_flight_chunks(schedule, plan.pp, microbatches);
+    breakdown(arch, plan, micro_batch, seq_len, shard_deg, gathers,
+              schedule.chunks() as f64, chunks as f64)
+}
+
+/// [`per_gpu_memory_for`] on a full simulation config.
+pub fn per_gpu_memory_cfg(cfg: &SimConfig) -> MemoryBreakdown {
+    per_gpu_memory_for(&cfg.arch, &cfg.plan, cfg.micro_batch,
+                       cfg.seq_len, cfg.sharding, cfg.schedule,
+                       cfg.microbatches())
+}
+
+/// Shared accounting core. `chunk_div` is the virtual-chunk divisor of
+/// a stage's layer count (1 for plain 1F1B) and `in_flight_chunks` the
+/// resident chunk-activation count.
+#[allow(clippy::too_many_arguments)]
+fn breakdown(
+    arch: &TransformerArch,
+    plan: &ParallelPlan,
+    micro_batch: usize,
+    seq_len: usize,
+    shard_deg: f64,
+    gathers: bool,
+    chunk_div: f64,
+    in_flight_chunks: f64,
+) -> MemoryBreakdown {
     let mp = (plan.tp * plan.pp) as f64;
-    let dp = plan.dp as f64;
     let params_partition = arch.params() / mp; // this rank's tp/pp slice
-    let shard = params_partition / dp; // FSDP shards over dp
+    let shard = params_partition / shard_deg;
 
     let layers_per_stage = (arch.n_layers as f64 / plan.pp as f64).ceil();
     // Gathered working set: two layers' worth of full (tp-sliced) params
     // (explicit prefetch keeps the next layer's AllGather in flight).
-    let unsharded = 2.0 * arch.layer_param_bytes() / plan.tp as f64;
+    let unsharded = if gathers {
+        2.0 * arch.layer_param_bytes() / plan.tp as f64
+    } else {
+        0.0
+    };
 
     let act_layer = arch.activation_bytes_per_layer(
         micro_batch as f64, seq_len as f64)
         / (plan.tp as f64 * plan.cp as f64);
     let activations =
-        act_layer * layers_per_stage * in_flight.max(1) as f64;
+        act_layer * (layers_per_stage / chunk_div) * in_flight_chunks;
 
     // Last pipeline stage holds logits in fp32 for the loss.
     let logits = if plan.pp == 1 {
@@ -176,6 +261,67 @@ mod tests {
         let one = per_gpu_memory(&LLAMA_7B, &plan, 2, 4096, 1);
         let four = per_gpu_memory(&LLAMA_7B, &plan, 2, 4096, 4);
         assert!((four.activations / one.activations - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_aware_memory_matches_legacy_for_fsdp_1f1b() {
+        // The sharding/schedule-aware model must be bit-identical to
+        // the historical FSDP path on the historical axes (study CSV
+        // bytes depend on it).
+        for (plan, mbs, m) in [
+            (ParallelPlan::data_parallel(64), 2usize, 1usize),
+            (ParallelPlan::new(8, 2, 2, 1), 2, 4),
+            (ParallelPlan::new(8, 1, 4, 1), 1, 8),
+        ] {
+            let legacy = per_gpu_memory(
+                &LLAMA_7B, &plan, mbs, 4096, m.min(plan.pp));
+            let aware = per_gpu_memory_for(
+                &LLAMA_7B, &plan, mbs, 4096, Sharding::Fsdp,
+                Schedule::OneFOneB, m);
+            assert_eq!(legacy.total().to_bits(), aware.total().to_bits());
+            assert_eq!(legacy.activations.to_bits(),
+                       aware.activations.to_bits());
+        }
+    }
+
+    #[test]
+    fn interleaved_activation_residency() {
+        assert_eq!(in_flight_chunks(Schedule::OneFOneB, 4, 8), 4);
+        // warmup 2(pp-1) + (v-1)·pp, plus the chunk entering steady
+        // state: 6 + 4 + 1 = 11, under the m·v = 16 cap.
+        assert_eq!(in_flight_chunks(Schedule::Interleaved { v: 2 }, 4, 8),
+                   11);
+        // capped by total chunk count when m is small.
+        assert_eq!(in_flight_chunks(Schedule::Interleaved { v: 2 }, 4, 4),
+                   8);
+        let plan = ParallelPlan::new(8, 1, 4, 1);
+        let base = per_gpu_memory_for(
+            &LLAMA_7B, &plan, 1, 4096, Sharding::Fsdp,
+            Schedule::OneFOneB, 8);
+        let il = per_gpu_memory_for(
+            &LLAMA_7B, &plan, 1, 4096, Sharding::Fsdp,
+            Schedule::Interleaved { v: 2 }, 8);
+        // 11 half-stage chunks (5.5 stage-equivalents) vs 4 stages.
+        assert!(il.activations > base.activations);
+        assert!((il.activations / base.activations - 5.5 / 4.0).abs()
+                < 1e-9);
+    }
+
+    #[test]
+    fn sharding_modes_shard_persistent_state_differently() {
+        let plan = ParallelPlan::data_parallel(64);
+        let mk = |s| per_gpu_memory_for(
+            &LLAMA_7B, &plan, 2, 4096, s, Schedule::OneFOneB, 1);
+        let fsdp = mk(Sharding::Fsdp);
+        let hsdp = mk(Sharding::Hsdp { group: 8 });
+        let ddp = mk(Sharding::Ddp);
+        let zero3 = mk(Sharding::Zero3);
+        // DDP replicates optimizer state; HSDP shards only within the
+        // group; FSDP/ZeRO-3 shard over the full DP world.
+        assert!(fsdp.optimizer_shard < hsdp.optimizer_shard);
+        assert!(hsdp.optimizer_shard < ddp.optimizer_shard);
+        assert_eq!(ddp.unsharded_working, 0.0);
+        assert_eq!(zero3.total().to_bits(), fsdp.total().to_bits());
     }
 
     #[test]

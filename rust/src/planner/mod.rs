@@ -22,7 +22,7 @@
 use crate::metrics::Metrics;
 use crate::model::TransformerArch;
 use crate::parallelism::ParallelPlan;
-use crate::sim::Sharding;
+use crate::sim::{Schedule, Sharding};
 use crate::study::{PlanAxis, Study, StudyRunner};
 use crate::topology::Cluster;
 
@@ -48,6 +48,10 @@ pub struct SweepRequest {
     pub seq_len: usize,
     pub with_cp: bool,
     pub sharding: Sharding,
+    /// Pipeline schedule for every candidate plan; plans that cannot
+    /// satisfy it (pp = 1, or microbatch counts not divisible by pp
+    /// for interleaving) are skipped at grid expansion.
+    pub schedule: Schedule,
 }
 
 impl SweepRequest {
@@ -58,7 +62,8 @@ impl SweepRequest {
         seq_len: usize,
     ) -> SweepRequest {
         SweepRequest { arch, cluster, global_batch, seq_len,
-                       with_cp: false, sharding: Sharding::Fsdp }
+                       with_cp: false, sharding: Sharding::Fsdp,
+                       schedule: Schedule::OneFOneB }
     }
 
     /// The sweep grid as a Study, restricted to `plans`.
@@ -72,6 +77,7 @@ impl SweepRequest {
             .micro_batch_divisors()
             .seq_len(self.seq_len)
             .sharding(self.sharding)
+            .schedule(self.schedule)
             .memory_cap(MEM_CAP_FRAC)
             .build()
     }
@@ -237,6 +243,30 @@ mod tests {
             assert_eq!(pruned.metrics.global_wps.to_bits(),
                        head.metrics.global_wps.to_bits());
         }
+    }
+
+    #[test]
+    fn interleaved_schedule_threads_through_the_sweep() {
+        // An interleaved request sweeps only plans that can satisfy it
+        // (pp >= 2, m % pp == 0), and the pruned best — driven by the
+        // schedule-aware lower bound — is still the exhaustive head.
+        let mut req = SweepRequest::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 4), 64, 4096);
+        req.schedule = Schedule::Interleaved { v: 2 };
+        let outcomes = sweep(&req);
+        assert!(!outcomes.is_empty(),
+                "interleaved sweep must find pipelined plans");
+        for o in &outcomes {
+            assert!(o.plan.pp >= 2, "got non-pipelined {}", o.plan);
+            let m = 64 / (o.plan.dp * o.micro_batch);
+            assert_eq!(m % o.plan.pp, 0);
+        }
+        let head = &outcomes[0];
+        let pruned = best(&req).unwrap();
+        assert_eq!(pruned.plan, head.plan);
+        assert_eq!(pruned.micro_batch, head.micro_batch);
+        assert_eq!(pruned.metrics.global_wps.to_bits(),
+                   head.metrics.global_wps.to_bits());
     }
 
     #[test]

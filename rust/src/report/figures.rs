@@ -18,7 +18,7 @@ use crate::memory;
 use crate::model::{self, LLAMA_70B, LLAMA_7B};
 use crate::parallelism::ParallelPlan;
 use crate::planner::{self, SweepRequest};
-use crate::sim::SimConfig;
+use crate::sim::{Schedule, Sharding, SimConfig};
 use crate::study::table::{f0, f2, f3, ms};
 use crate::study::{
     Column, PlanAxis, Registry, Scenario, Study, StudyRunner, Table,
@@ -46,6 +46,7 @@ pub fn register_all(reg: &mut Registry) {
     reg.register(Box::new(Fig14));
     reg.register(Box::new(Headline));
     reg.register(Box::new(Ablation));
+    reg.register(Box::new(Sched));
 }
 
 /// Weak-scaling study: Llama-7B pure FSDP, local batch 2, seq 4096
@@ -629,7 +630,6 @@ impl Scenario for Ablation {
     }
 
     fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
-        use crate::sim::Sharding;
         let mut t = Table::new(
             "ablation", self.title(),
             &["variant", "global_wps", "mfu", "exposed_ms",
@@ -667,6 +667,84 @@ impl Scenario for Ablation {
             ]);
         }
         Ok(vec![t])
+    }
+}
+
+/// `sched` — the schedule-axis shootout: plain 1F1B vs interleaved-1F1B
+/// (v = 2, 4) × FSDP vs ZeRO-3, across node counts — the paper's Fig. 6
+/// methodology ("the best strategy flips at scale") applied to the
+/// pipeline schedule. Two tables: the per-(nodes, schedule, sharding)
+/// winners, and the full throughput-sorted grid for the largest scale.
+struct Sched;
+
+impl Sched {
+    fn study(title: &str) -> Study {
+        Study::builder("sched")
+            .title(title)
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([4, 16, 32])
+            .plan_shapes(&[(1, 1, 1), (1, 4, 1), (2, 4, 1), (1, 8, 1)])
+            .global_batches([512])
+            .micro_batch_divisors()
+            .schedules([
+                Schedule::OneFOneB,
+                Schedule::Interleaved { v: 2 },
+                Schedule::Interleaved { v: 4 },
+            ])
+            .shardings([Sharding::Fsdp, Sharding::Zero3])
+            .memory_cap(planner::MEM_CAP_FRAC)
+            .build()
+    }
+}
+
+impl Scenario for Sched {
+    fn name(&self) -> &'static str { "sched" }
+    fn title(&self) -> &'static str {
+        "Schedule variants: interleaved-1F1B & ZeRO-3 vs plain \
+         1F1B/FSDP across node counts (Llama-7B, H100, gbs 512)"
+    }
+    fn describe(&self) -> &'static str {
+        "sweep schedules (1f1b, interleaved:2/4) x sharding (fsdp, \
+         zero3) x pipeline shapes over 4/16/32 nodes; best per combo"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let res = runner.run(&Sched::study(self.title()));
+        // Best (plan, mbs) per (nodes, schedule, sharding) — how each
+        // schedule variant's optimum moves with scale.
+        let mut t = Table::new(
+            "sched", self.title(),
+            &["nodes", "gpus", "schedule", "sharding", "best_plan",
+              "mbs", "global_wps", "mfu", "exposed_ms", "mem_gb"]);
+        for best in res.best_per(|c| (c.nodes, c.schedule, c.sharding)) {
+            let m = &best.metrics;
+            t.row(vec![
+                best.nodes.to_string(),
+                m.world.to_string(),
+                best.schedule.to_string(),
+                best.sharding.to_string(),
+                best.plan.to_string(),
+                best.micro_batch.to_string(),
+                f0(m.global_wps),
+                f3(m.mfu),
+                ms(m.exposed_comm),
+                f2(best.mem_per_gpu / 1e9),
+            ]);
+        }
+        // Full ranking at the largest scale (à la Fig. 6's sweep).
+        let mut big = res.clone();
+        big.retain(|c| c.nodes == 32);
+        big.sort_by_wps();
+        big.truncate(16);
+        big.name = "sched_32n".into();
+        big.title = "Schedule-variant ranking at 32 nodes (top 16)"
+            .into();
+        let tb = big
+            .table(&[Plan, ScheduleKind, ShardingKind, Mbs, GlobalWps,
+                     Mfu, ExposedMs, MemGb])
+            .with_chart(4);
+        Ok(vec![t.with_chart(6), tb])
     }
 }
 

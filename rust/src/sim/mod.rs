@@ -6,15 +6,23 @@
 //! * FSDP with explicit prefetch and no forward resharding (ZeRO-2-like):
 //!   per-layer parameter AllGather overlapping forward compute, gradient
 //!   ReduceScatter overlapping backward, both over the *data-parallel
-//!   group only*.
+//!   group only*. [`Sharding::Zero3`] adds forward resharding: params are
+//!   re-gathered per layer for every microbatch's forward *and* backward
+//!   and gradients reduce-scatter every microbatch.
 //! * Megatron tensor parallelism: 2 blocking AllReduces per layer in
 //!   forward and backward over the TP group.
-//! * Non-interleaved 1F1B pipeline schedule with P2P activation sends.
+//! * Pipeline parallelism with P2P activation sends, under a selectable
+//!   [`Schedule`]: non-interleaved 1F1B, or interleaved-1F1B with `v`
+//!   virtual model chunks per device (Megatron-style: `v·pp` virtual
+//!   stages, warmup `2(pp-s-1) + (v-1)·pp` chunk-forwards on stage `s`,
+//!   a `1/v` bubble at `v×` the P2P volume). The exact per-stage op
+//!   order and cost formulas are derived in `docs/scheduling.md`.
 //! * Ring context parallelism for attention KV exchange.
 //!
 //! Only one representative rank per pipeline stage is simulated — under
 //! a symmetric plan all DP/TP peers execute identical schedules, so the
-//! timeline is exact while staying O(layers · microbatches) in size.
+//! timeline is exact while staying O(layers · microbatches · chunks) in
+//! size.
 //!
 //! # Performance (sweep-scale hot path)
 //!
@@ -63,17 +71,63 @@ pub enum Sharding {
     /// node), with a gradient AllReduce across the replica groups —
     /// keeping the latency-bound ring collectives small at scale.
     Hsdp { group: usize },
+    /// Full ZeRO-3 sharding *with* forward resharding: parameters are
+    /// freed after each use and re-gathered per layer for every
+    /// microbatch's forward and backward, and gradient shards
+    /// reduce-scatter after every microbatch. Persistent state and the
+    /// two-layer gathered working set are modeled identically to
+    /// [`Sharding::Fsdp`]; what the variant changes is the collective
+    /// volume, which scales with the microbatch count
+    /// (`docs/scheduling.md` §ZeRO-3).
+    Zero3,
 }
 
 impl std::fmt::Display for Sharding {
-    /// Canonical spec string ("fsdp", "ddp", "hsdp:G") — the inverse
-    /// of `config::parse_sharding`; used by TOML serialization and
-    /// study table rendering.
+    /// Canonical spec string ("fsdp", "ddp", "hsdp:G", "zero3") — the
+    /// inverse of `config::parse_sharding`; used by TOML serialization
+    /// and study table rendering.
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Sharding::Fsdp => write!(f, "fsdp"),
             Sharding::Ddp => write!(f, "ddp"),
             Sharding::Hsdp { group } => write!(f, "hsdp:{group}"),
+            Sharding::Zero3 => write!(f, "zero3"),
+        }
+    }
+}
+
+/// Pipeline execution schedule — a first-class study axis alongside
+/// [`Sharding`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    /// Non-interleaved 1F1B (the paper's setting): one contiguous
+    /// block of layers per device, warmup `pp - s - 1` on stage `s`.
+    OneFOneB,
+    /// Interleaved-1F1B (Narayanan et al. 2021 / Megatron): each device
+    /// hosts `v ≥ 2` model chunks, forming `v·pp` virtual pipeline
+    /// stages. The bubble shrinks by `v`; P2P activation traffic grows
+    /// by `v`. Requires `pp ≥ 2`, `n_layers % (pp·v) == 0`, and a
+    /// microbatch count divisible by `pp`.
+    Interleaved { v: usize },
+}
+
+impl Schedule {
+    /// Model chunks per pipeline device (1 for plain 1F1B).
+    pub fn chunks(&self) -> usize {
+        match self {
+            Schedule::OneFOneB => 1,
+            Schedule::Interleaved { v } => *v,
+        }
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    /// Canonical spec string ("1f1b", "interleaved:V") — the inverse
+    /// of `config::parse_schedule`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Schedule::OneFOneB => write!(f, "1f1b"),
+            Schedule::Interleaved { v } => write!(f, "interleaved:{v}"),
         }
     }
 }
@@ -90,6 +144,8 @@ pub struct SimConfig {
     pub micro_batch: usize,
     pub seq_len: usize,
     pub sharding: Sharding,
+    /// Pipeline execution schedule (plain or interleaved 1F1B).
+    pub schedule: Schedule,
     /// Explicit FSDP prefetch (the paper's setting). When false, each
     /// layer's AllGather is only issued once the previous layer's
     /// forward completes — the ablation for §3's "explicit prefetching".
@@ -107,7 +163,8 @@ impl SimConfig {
         seq_len: usize,
     ) -> SimConfig {
         SimConfig { arch, cluster, plan, global_batch, micro_batch,
-                    seq_len, sharding: Sharding::Fsdp, prefetch: true }
+                    seq_len, sharding: Sharding::Fsdp,
+                    schedule: Schedule::OneFOneB, prefetch: true }
     }
 
     pub fn microbatches(&self) -> usize {
@@ -132,6 +189,31 @@ impl SimConfig {
         }
         if self.seq_len % self.plan.cp != 0 {
             return Err("seq_len must divide by cp".into());
+        }
+        if let Schedule::Interleaved { v } = self.schedule {
+            if v < 2 {
+                return Err(format!(
+                    "interleaved schedule needs v >= 2 chunks, got {v} \
+                     (use 1f1b for a single chunk)"));
+            }
+            if self.plan.pp < 2 {
+                return Err(format!(
+                    "interleaved:{v} requires pipeline parallelism \
+                     (pp >= 2), got pp {}", self.plan.pp));
+            }
+            if self.arch.n_layers % (self.plan.pp * v) != 0 {
+                return Err(format!(
+                    "{} layers not divisible into {} virtual stages \
+                     (pp {} x v {})",
+                    self.arch.n_layers, self.plan.pp * v, self.plan.pp,
+                    v));
+            }
+            if self.microbatches() % self.plan.pp != 0 {
+                return Err(format!(
+                    "interleaved:{v} requires microbatches ({}) \
+                     divisible by pp {}",
+                    self.microbatches(), self.plan.pp));
+            }
         }
         Ok(())
     }
@@ -176,10 +258,12 @@ impl IterationReport {
     }
 }
 
+/// One chunk-op in a device's schedule: forward/backward of
+/// `(chunk, microbatch)`. Plain 1F1B always uses chunk 0.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub(crate) enum Op {
-    F(usize),
-    B(usize),
+    F(usize, usize),
+    B(usize, usize),
 }
 
 /// Per-layer/per-collective durations precomputed for the builder.
@@ -297,12 +381,20 @@ fn durations(cfg: &SimConfig, costs: &mut CostCache) -> Durations {
 }
 
 /// Analytic lower bound on [`IterationReport::iter_time`], from compute
-/// alone: the last pipeline stage's compute stream must serially run
-/// every microbatch's layers and heads plus the optimizer, and the
-/// makespan can never undercut a single stream's busy time. Needs no
-/// collective costs, so it is orders of magnitude cheaper than a
-/// simulation — the planner's bound-and-prune search uses the implied
-/// throughput *upper* bound to skip provably-dominated grid points.
+/// alone. Two certificates, both schedule-aware and comm-free:
+///
+/// * **serial** — the last pipeline device's compute stream must run
+///   every microbatch's layers and heads plus the optimizer, and the
+///   makespan can never undercut a single stream's busy time;
+/// * **fill** — that device's first op waits on `pp - 1` upstream
+///   chunk-forwards (each `layers_per_chunk · fwd`), chained by P2P
+///   dependencies: the pipeline-fill term of the bubble formula, which
+///   shrinks by `v` under interleaving (`docs/scheduling.md`).
+///
+/// Needs no collective costs, so it is orders of magnitude cheaper
+/// than a simulation — the planner's bound-and-prune search uses the
+/// implied throughput *upper* bound to skip provably-dominated grid
+/// points, with the winner still exactly the exhaustive sweep's.
 pub fn iter_time_lower_bound(cfg: &SimConfig) -> f64 {
     let spec = cfg.cluster.node.spec();
     let plan = &cfg.plan;
@@ -317,55 +409,89 @@ pub fn iter_time_lower_bound(cfg: &SimConfig) -> f64 {
     let head_bwd = workload::head_time(
         &cfg.arch, spec, plan, cfg.micro_batch, cfg.seq_len, true);
     let opt = workload::optimizer_time(&cfg.arch, spec, plan);
-    m * lps * (fwd + bwd) + m * (head_fwd + head_bwd) + opt
+    let serial = m * lps * (fwd + bwd) + m * (head_fwd + head_bwd) + opt;
+    let fill = if plan.pp > 1 {
+        let lpc = lps / cfg.schedule.chunks() as f64;
+        (plan.pp - 1) as f64 * lpc * fwd
+    } else {
+        0.0
+    };
+    fill + serial
 }
 
-/// 1F1B (non-interleaved) op order for one stage, written into a
-/// `2·m`-slot slice.
-fn fill_one_f_one_b(ops: &mut [Op], stage: usize, pp: usize, m: usize) {
-    let warmup = (pp - stage - 1).min(m);
-    let mut k = 0;
-    for i in 0..warmup {
-        ops[k] = Op::F(i);
-        k += 1;
+/// Op order for one device under a (possibly interleaved) 1F1B
+/// schedule, written into a `2·m·v`-slot slice.
+///
+/// Both schedules share the warmup / steady-1F1B / cooldown skeleton
+/// over `t = m·v` chunk-forwards and `t` chunk-backwards; they differ
+/// only in the warmup depth and the (chunk, microbatch) sequencing:
+///
+/// * `v == 1` (plain 1F1B): warmup `min(m, pp - s - 1)`, microbatches
+///   in order, chunk always 0.
+/// * `v >= 2` (interleaved): warmup `min(t, 2(pp - s - 1) + (v-1)·pp)`
+///   and the Megatron index mapping — the k-th chunk-forward runs
+///   chunk `(k mod pp·v) / pp` on microbatch
+///   `(k div pp·v)·pp + (k mod pp)`; backwards walk chunks in reverse.
+///   Requires `m % pp == 0` (enforced by `SimConfig::validate`).
+fn fill_schedule(ops: &mut [Op], stage: usize, pp: usize, v: usize,
+                 m: usize) {
+    let t = m * v;
+    let fwd = |k: usize| {
+        let g = k % (pp * v);
+        Op::F(g / pp, (k / (pp * v)) * pp + (k % pp))
+    };
+    let bwd = |k: usize| {
+        let g = k % (pp * v);
+        Op::B(v - 1 - g / pp, (k / (pp * v)) * pp + (k % pp))
+    };
+    let warmup = if v == 1 {
+        (pp - stage - 1).min(m)
+    } else {
+        (2 * (pp - stage - 1) + (v - 1) * pp).min(t)
+    };
+    let mut kk = 0;
+    for k in 0..warmup {
+        ops[kk] = fwd(k);
+        kk += 1;
     }
-    for j in 0..m - warmup {
-        ops[k] = Op::F(warmup + j);
-        k += 1;
-        ops[k] = Op::B(j);
-        k += 1;
+    for j in 0..t - warmup {
+        ops[kk] = fwd(warmup + j);
+        kk += 1;
+        ops[kk] = bwd(j);
+        kk += 1;
     }
-    for j in m - warmup..m {
-        ops[k] = Op::B(j);
-        k += 1;
+    for j in t - warmup..t {
+        ops[kk] = bwd(j);
+        kk += 1;
     }
-    debug_assert_eq!(k, ops.len());
+    debug_assert_eq!(kk, ops.len());
 }
 
-/// 1F1B op order for one stage (allocating convenience for tests).
+/// Schedule op order for one device (allocating convenience for tests).
 #[cfg(test)]
-fn one_f_one_b(stage: usize, pp: usize, m: usize) -> Vec<Op> {
-    let mut ops = vec![Op::F(0); 2 * m];
-    fill_one_f_one_b(&mut ops, stage, pp, m);
+fn schedule_ops(stage: usize, pp: usize, v: usize, m: usize) -> Vec<Op> {
+    let mut ops = vec![Op::F(0, 0); 2 * m * v];
+    fill_schedule(&mut ops, stage, pp, v, m);
     ops
 }
 
-/// Reusable emission scratch: flattened per-stage op lists and event
-/// bookkeeping for [`emit_iteration`]. Owned by [`SimArena`]; all
-/// vectors keep their capacity across evaluations.
+/// Reusable emission scratch: flattened per-device op lists and event
+/// bookkeeping for [`emit_iteration`], sized over `V = p·v` virtual
+/// stages and `t = m·v` chunk-ops per direction. Owned by
+/// [`SimArena`]; all vectors keep their capacity across evaluations.
 #[derive(Debug, Default)]
 pub(crate) struct BuildScratch {
-    /// `p × 2m` op schedule, stage-major.
+    /// `p × 2t` op schedule, device-major.
     ops: Vec<Op>,
-    /// Next unemitted op index per stage.
+    /// Next unemitted op index per device.
     next: Vec<usize>,
-    /// `p × m`: last forward-chain event per (stage, microbatch).
+    /// `V × m`: last forward-chain event per (virtual stage, microbatch).
     last_fwd: Vec<Option<EventId>>,
-    /// `p × m`: forward activation send per (stage, microbatch).
+    /// `V × m`: forward activation send per (virtual stage, microbatch).
     p2p_fwd: Vec<Option<EventId>>,
-    /// `p × m`: backward activation send per (stage, microbatch).
+    /// `V × m`: backward activation send per (virtual stage, microbatch).
     p2p_bwd: Vec<Option<EventId>>,
-    /// `p × lps`: parameter AllGather per (stage, layer).
+    /// `p × lps`: persistent parameter AllGather per (device, layer).
     ag: Vec<EventId>,
     /// `p × lps`: gradient-final events feeding the optimizer.
     grad: Vec<EventId>,
@@ -375,17 +501,18 @@ pub(crate) struct BuildScratch {
 }
 
 impl BuildScratch {
-    fn prepare(&mut self, p: usize, m: usize, lps: usize) {
+    fn prepare(&mut self, p: usize, v: usize, m: usize, lps: usize) {
+        let vs = p * v;
         self.ops.clear();
-        self.ops.resize(p * 2 * m, Op::F(0));
+        self.ops.resize(p * 2 * m * v, Op::F(0, 0));
         self.next.clear();
         self.next.resize(p, 0);
         self.last_fwd.clear();
-        self.last_fwd.resize(p * m, None);
+        self.last_fwd.resize(vs * m, None);
         self.p2p_fwd.clear();
-        self.p2p_fwd.resize(p * m, None);
+        self.p2p_fwd.resize(vs * m, None);
         self.p2p_bwd.clear();
-        self.p2p_bwd.resize(p * m, None);
+        self.p2p_bwd.resize(vs * m, None);
         self.ag.clear();
         self.ag.resize(p * lps, 0);
         self.grad.clear();
@@ -398,35 +525,44 @@ impl BuildScratch {
     }
 }
 
-/// Is `op` at `stage` ready to emit? F(i) needs the upstream forward
-/// activation send, B(i) the downstream backward one; edge stages have
-/// no cross-stage input on that side. The single readiness rule shared
-/// by the drain loop and both producer-side wake checks.
+/// Is `op` at device `stage` ready to emit? F(c, i) needs the upstream
+/// virtual stage's forward activation send, B(c, i) the downstream
+/// one; the first/last *virtual* stage has no cross-stage input on
+/// that side. Virtual stage `c·pp + s` wiring makes device `pp - 1`
+/// feed device 0's next chunk (the interleaved wrap-around send). The
+/// single readiness rule shared by the drain loop and both
+/// producer-side wake checks.
 fn op_ready(
     op: Op,
     stage: usize,
     p: usize,
+    v: usize,
     m: usize,
     p2p_fwd: &[Option<EventId>],
     p2p_bwd: &[Option<EventId>],
 ) -> bool {
     match op {
-        Op::F(i) => stage == 0 || p2p_fwd[(stage - 1) * m + i].is_some(),
-        Op::B(i) => {
-            stage == p - 1 || p2p_bwd[(stage + 1) * m + i].is_some()
+        Op::F(c, i) => {
+            let vs = c * p + stage;
+            vs == 0 || p2p_fwd[(vs - 1) * m + i].is_some()
+        }
+        Op::B(c, i) => {
+            let vs = c * p + stage;
+            vs == p * v - 1 || p2p_bwd[(vs + 1) * m + i].is_some()
         }
     }
 }
 
-/// Emit one training iteration's events into `eng` — the single 1F1B
-/// emitter behind both the graph engine and the fused fast path.
+/// Emit one training iteration's events into `eng` — the single
+/// schedule emitter (plain and interleaved 1F1B, every sharding mode)
+/// behind both the graph engine and the fused fast path.
 ///
-/// Scheduling is a ready-queue over stages (replacing the old repeated
-/// stage-polling loop): a stage drains every consecutively-ready op
-/// when dequeued, and re-enters the queue exactly when the cross-stage
-/// P2P event its next op waits on is emitted. Per-stage op order is
-/// identical to the polling scheduler's, so per-device stream order —
-/// the only order that affects the timeline — is unchanged.
+/// Scheduling is a ready-queue over devices: a device drains every
+/// consecutively-ready op when dequeued, and re-enters the queue
+/// exactly when the cross-stage P2P event its next op waits on is
+/// emitted. Per-device op order follows [`fill_schedule`], so
+/// per-device stream order — the only order that affects the timeline
+/// — is deterministic and shared by both execution paths.
 fn emit_iteration<S: EventSink>(
     cfg: &SimConfig,
     d: &Durations,
@@ -434,25 +570,30 @@ fn emit_iteration<S: EventSink>(
     scratch: &mut BuildScratch,
 ) {
     let p = cfg.plan.pp;
+    let v = cfg.schedule.chunks();
+    let vstages = p * v;
     let m = cfg.microbatches();
+    let t = m * v;
     let lps = cfg.arch.n_layers / p;
+    let lpc = lps / v;
     let fsdp = matches!(cfg.sharding,
                         Sharding::Fsdp | Sharding::Hsdp { .. })
         && cfg.plan.dp > 1;
     let hsdp = matches!(cfg.sharding, Sharding::Hsdp { .. })
         && cfg.plan.dp > 1;
     let ddp = cfg.sharding == Sharding::Ddp && cfg.plan.dp > 1;
+    let zero3 = cfg.sharding == Sharding::Zero3 && cfg.plan.dp > 1;
     let tp = cfg.plan.tp > 1;
     let cp = cfg.plan.cp > 1;
 
-    scratch.prepare(p, m, lps);
+    scratch.prepare(p, v, m, lps);
     let BuildScratch {
         ops, next, last_fwd, p2p_fwd, p2p_bwd, ag, grad, grad_len,
         queue, queued,
     } = scratch;
 
     for s in 0..p {
-        fill_one_f_one_b(&mut ops[s * 2 * m..(s + 1) * 2 * m], s, p, m);
+        fill_schedule(&mut ops[s * 2 * t..(s + 1) * 2 * t], s, p, v, m);
     }
 
     // FSDP with explicit prefetch: all parameter AllGathers issued
@@ -469,8 +610,8 @@ fn emit_iteration<S: EventSink>(
         }
     }
 
-    // Seed every stage; stages whose first op isn't ready drain zero
-    // ops and re-enter when their producer emits (1F1B is
+    // Seed every device; devices whose first op isn't ready drain zero
+    // ops and re-enter when their producer emits (both schedules are
     // deadlock-free, so every op is eventually emitted).
     for s in 0..p {
         queue.push_back(s);
@@ -479,23 +620,26 @@ fn emit_iteration<S: EventSink>(
     let mut emitted = 0usize;
     while let Some(s) = queue.pop_front() {
         queued[s] = false;
-        while next[s] < 2 * m {
-            let op = ops[s * 2 * m + next[s]];
-            if !op_ready(op, s, p, m, p2p_fwd, p2p_bwd) {
+        while next[s] < 2 * t {
+            let op = ops[s * 2 * t + next[s]];
+            if !op_ready(op, s, p, v, m, p2p_fwd, p2p_bwd) {
                 break;
             }
             match op {
-                Op::F(i) => {
-                    let mut prev: Option<EventId> = if s > 0 {
-                        p2p_fwd[(s - 1) * m + i]
+                Op::F(ch, i) => {
+                    let vs = ch * p + s;
+                    let mut prev: Option<EventId> = if vs > 0 {
+                        p2p_fwd[(vs - 1) * m + i]
                     } else {
                         None
                     };
-                    for l in 0..lps {
+                    for l in 0..lpc {
+                        let li = ch * lpc + l;
                         // No-prefetch ablation: AG(l) issues only
-                        // after layer l-1's forward chain.
+                        // after the previous chunk-layer's forward
+                        // chain, on the chunk's first microbatch.
                         if fsdp && !cfg.prefetch && i == 0 {
-                            ag[s * lps + l] = match prev {
+                            ag[s * lps + li] = match prev {
                                 Some(pv) => eng.push_event(
                                     s, STREAM_COMM_DP, d.ag_layer,
                                     &[pv], Tag::AllGatherParams),
@@ -504,20 +648,38 @@ fn emit_iteration<S: EventSink>(
                                     &[], Tag::AllGatherParams),
                             };
                         }
-                        let c = match (prev, fsdp) {
-                            (Some(pv), true) => eng.push_event(
-                                s, STREAM_COMPUTE, d.fwd_layer,
-                                &[pv, ag[s * lps + l]], Tag::FwdCompute),
-                            (Some(pv), false) => eng.push_event(
-                                s, STREAM_COMPUTE, d.fwd_layer, &[pv],
-                                Tag::FwdCompute),
-                            (None, true) => eng.push_event(
-                                s, STREAM_COMPUTE, d.fwd_layer,
-                                &[ag[s * lps + l]], Tag::FwdCompute),
-                            (None, false) => eng.push_event(
-                                s, STREAM_COMPUTE, d.fwd_layer, &[],
-                                Tag::FwdCompute),
+                        // ZeRO-3 forward resharding: params re-gathered
+                        // for every microbatch's pass over the layer.
+                        // With prefetch the gather streams ahead
+                        // (serialized only by the DP comm stream);
+                        // without, it chains behind the compute.
+                        let gather = if zero3 {
+                            Some(match (prev, cfg.prefetch) {
+                                (Some(pv), false) => eng.push_event(
+                                    s, STREAM_COMM_DP, d.ag_layer,
+                                    &[pv], Tag::AllGatherParams),
+                                _ => eng.push_event(
+                                    s, STREAM_COMM_DP, d.ag_layer,
+                                    &[], Tag::AllGatherParams),
+                            })
+                        } else if fsdp {
+                            Some(ag[s * lps + li])
+                        } else {
+                            None
                         };
+                        let mut deps: [EventId; 2] = [0; 2];
+                        let mut nd = 0;
+                        if let Some(pv) = prev {
+                            deps[nd] = pv;
+                            nd += 1;
+                        }
+                        if let Some(g) = gather {
+                            deps[nd] = g;
+                            nd += 1;
+                        }
+                        let c = eng.push_event(
+                            s, STREAM_COMPUTE, d.fwd_layer, &deps[..nd],
+                            Tag::FwdCompute);
                         prev = Some(c);
                         if tp {
                             prev = Some(eng.push_event(
@@ -530,55 +692,88 @@ fn emit_iteration<S: EventSink>(
                                 &[prev.unwrap()], Tag::CpRingExchange));
                         }
                     }
-                    if s == p - 1 {
+                    if vs == vstages - 1 {
                         prev = Some(eng.push_event(
                             s, STREAM_COMPUTE, d.head_fwd,
                             &[prev.unwrap()], Tag::FwdCompute));
                     }
-                    last_fwd[s * m + i] = prev;
-                    if s < p - 1 {
-                        p2p_fwd[s * m + i] = Some(eng.push_event(
+                    last_fwd[vs * m + i] = prev;
+                    if vs < vstages - 1 {
+                        p2p_fwd[vs * m + i] = Some(eng.push_event(
                             s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
                             Tag::P2pActivations));
-                        // Wake the downstream stage if this send made
-                        // its next op ready.
-                        let t = s + 1;
-                        if !queued[t]
-                            && next[t] < 2 * m
-                            && op_ready(ops[t * 2 * m + next[t]], t, p, m,
-                                        p2p_fwd, p2p_bwd)
+                        // Wake the consuming device (downstream stage,
+                        // or device 0's next chunk on the interleaved
+                        // wrap-around) if this send made its next op
+                        // ready.
+                        let td = (s + 1) % p;
+                        if !queued[td]
+                            && next[td] < 2 * t
+                            && op_ready(ops[td * 2 * t + next[td]], td,
+                                        p, v, m, p2p_fwd, p2p_bwd)
                         {
-                            queue.push_back(t);
-                            queued[t] = true;
+                            queue.push_back(td);
+                            queued[td] = true;
                         }
                     }
                 }
-                Op::B(i) => {
+                Op::B(ch, i) => {
+                    let vs = ch * p + s;
                     let fwd_dep =
-                        last_fwd[s * m + i].expect("fwd before bwd");
-                    let bwd_in: Option<EventId> = if s < p - 1 {
-                        p2p_bwd[(s + 1) * m + i]
+                        last_fwd[vs * m + i].expect("fwd before bwd");
+                    let bwd_in: Option<EventId> = if vs < vstages - 1 {
+                        p2p_bwd[(vs + 1) * m + i]
                     } else {
                         None
                     };
                     let mut prev: Option<EventId> = None;
-                    if s == p - 1 {
+                    if vs == vstages - 1 {
                         prev = Some(eng.push_event(
                             s, STREAM_COMPUTE, d.head_bwd, &[fwd_dep],
                             Tag::BwdCompute));
                     }
-                    for _l in (0..lps).rev() {
-                        let c = match (prev, bwd_in) {
-                            (Some(pv), _) => eng.push_event(
-                                s, STREAM_COMPUTE, d.bwd_layer, &[pv],
-                                Tag::BwdCompute),
-                            (None, Some(bi)) => eng.push_event(
-                                s, STREAM_COMPUTE, d.bwd_layer,
-                                &[fwd_dep, bi], Tag::BwdCompute),
-                            (None, None) => eng.push_event(
-                                s, STREAM_COMPUTE, d.bwd_layer,
-                                &[fwd_dep], Tag::BwdCompute),
+                    for _l in (0..lpc).rev() {
+                        // ZeRO-3: params were resharded after forward —
+                        // re-gather them for this layer's backward.
+                        let gather = if zero3 {
+                            Some(if cfg.prefetch {
+                                eng.push_event(
+                                    s, STREAM_COMM_DP, d.ag_layer, &[],
+                                    Tag::AllGatherParams)
+                            } else {
+                                eng.push_event(
+                                    s, STREAM_COMM_DP, d.ag_layer,
+                                    &[prev.unwrap_or(fwd_dep)],
+                                    Tag::AllGatherParams)
+                            })
+                        } else {
+                            None
                         };
+                        let mut deps: [EventId; 3] = [0; 3];
+                        let mut nd = 0;
+                        match (prev, bwd_in) {
+                            (Some(pv), _) => {
+                                deps[nd] = pv;
+                                nd += 1;
+                            }
+                            (None, Some(bi)) => {
+                                deps[nd] = fwd_dep;
+                                nd += 1;
+                                deps[nd] = bi;
+                                nd += 1;
+                            }
+                            (None, None) => {
+                                deps[nd] = fwd_dep;
+                                nd += 1;
+                            }
+                        }
+                        if let Some(g) = gather {
+                            deps[nd] = g;
+                            nd += 1;
+                        }
+                        let c = eng.push_event(
+                            s, STREAM_COMPUTE, d.bwd_layer, &deps[..nd],
+                            Tag::BwdCompute);
                         prev = Some(c);
                         if tp {
                             prev = Some(eng.push_event(
@@ -590,9 +785,20 @@ fn emit_iteration<S: EventSink>(
                                 s, STREAM_COMM_MP, d.cp_ring,
                                 &[prev.unwrap()], Tag::CpRingExchange));
                         }
-                        // Gradients final after the last microbatch:
-                        // overlap ReduceScatter with remaining bwd.
-                        if i == m - 1 {
+                        if zero3 {
+                            // ZeRO-3 reduce-scatters gradient shards
+                            // after *every* microbatch; the last one
+                            // feeds the optimizer.
+                            let g = eng.push_event(
+                                s, STREAM_COMM_DP, d.rs_layer, &[c],
+                                Tag::ReduceScatterGrads);
+                            if i == m - 1 {
+                                grad[s * lps + grad_len[s]] = g;
+                                grad_len[s] += 1;
+                            }
+                        } else if i == m - 1 {
+                            // Gradients final after the last microbatch:
+                            // overlap ReduceScatter with remaining bwd.
                             let g = if fsdp {
                                 let mut last = eng.push_event(
                                     s, STREAM_COMM_DP, d.rs_layer, &[c],
@@ -616,20 +822,22 @@ fn emit_iteration<S: EventSink>(
                             grad_len[s] += 1;
                         }
                     }
-                    if s > 0 {
-                        p2p_bwd[s * m + i] = Some(eng.push_event(
+                    if vs > 0 {
+                        p2p_bwd[vs * m + i] = Some(eng.push_event(
                             s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
                             Tag::P2pActivations));
-                        // Wake the upstream stage if this send made
-                        // its next op ready.
-                        let t = s - 1;
-                        if !queued[t]
-                            && next[t] < 2 * m
-                            && op_ready(ops[t * 2 * m + next[t]], t, p, m,
-                                        p2p_fwd, p2p_bwd)
+                        // Wake the consuming device (upstream stage, or
+                        // device pp-1's previous chunk on the
+                        // wrap-around) if this send made its next op
+                        // ready.
+                        let td = (s + p - 1) % p;
+                        if !queued[td]
+                            && next[td] < 2 * t
+                            && op_ready(ops[td * 2 * t + next[td]], td,
+                                        p, v, m, p2p_fwd, p2p_bwd)
                         {
-                            queue.push_back(t);
-                            queued[t] = true;
+                            queue.push_back(td);
+                            queued[td] = true;
                         }
                     }
                 }
@@ -638,7 +846,7 @@ fn emit_iteration<S: EventSink>(
             emitted += 1;
         }
     }
-    assert_eq!(emitted, p * 2 * m, "pipeline emission deadlocked");
+    assert_eq!(emitted, p * 2 * t, "pipeline emission deadlocked");
 
     // Optimizer step per stage once its gradients are fully reduced.
     for s in 0..p {
@@ -753,21 +961,23 @@ mod tests {
 
     #[test]
     fn one_f_one_b_structure() {
-        // 4 stages, 8 microbatches.
-        let ops0 = one_f_one_b(0, 4, 8);
-        let ops3 = one_f_one_b(3, 4, 8);
+        // 4 stages, 8 microbatches, plain schedule (v = 1).
+        let ops0 = schedule_ops(0, 4, 1, 8);
+        let ops3 = schedule_ops(3, 4, 1, 8);
         assert_eq!(ops0.len(), 16);
         // stage 0 warms up with 3 forwards.
-        assert_eq!(&ops0[..4], &[Op::F(0), Op::F(1), Op::F(2), Op::F(3)]);
-        assert_eq!(ops0[4], Op::B(0));
+        assert_eq!(&ops0[..4],
+                   &[Op::F(0, 0), Op::F(0, 1), Op::F(0, 2), Op::F(0, 3)]);
+        assert_eq!(ops0[4], Op::B(0, 0));
         // last stage alternates from the start.
-        assert_eq!(&ops3[..4], &[Op::F(0), Op::B(0), Op::F(1), Op::B(1)]);
+        assert_eq!(&ops3[..4],
+                   &[Op::F(0, 0), Op::B(0, 0), Op::F(0, 1), Op::B(0, 1)]);
         // every microbatch appears exactly once as F and once as B.
         for ops in [&ops0, &ops3] {
             let fs: Vec<usize> = ops.iter().filter_map(|o| match o {
-                Op::F(i) => Some(*i), _ => None }).collect();
+                Op::F(_, i) => Some(*i), _ => None }).collect();
             let bs: Vec<usize> = ops.iter().filter_map(|o| match o {
-                Op::B(i) => Some(*i), _ => None }).collect();
+                Op::B(_, i) => Some(*i), _ => None }).collect();
             assert_eq!(fs, (0..8).collect::<Vec<_>>());
             assert_eq!(bs, (0..8).collect::<Vec<_>>());
         }
@@ -775,9 +985,53 @@ mod tests {
 
     #[test]
     fn warmup_capped_by_microbatches() {
-        let ops = one_f_one_b(0, 8, 2); // deep pipeline, few microbatches
+        // deep pipeline, few microbatches
+        let ops = schedule_ops(0, 8, 1, 2);
         assert_eq!(ops.len(), 4);
-        assert_eq!(&ops[..2], &[Op::F(0), Op::F(1)]);
+        assert_eq!(&ops[..2], &[Op::F(0, 0), Op::F(0, 1)]);
+    }
+
+    #[test]
+    fn interleaved_schedule_structure() {
+        // 4 devices, 2 chunks, 8 microbatches: Megatron interleaving.
+        let (p, v, m) = (4usize, 2usize, 8usize);
+        for s in 0..p {
+            let ops = schedule_ops(s, p, v, m);
+            assert_eq!(ops.len(), 2 * m * v);
+            // Warmup depth: 2(p-s-1) + (v-1)p chunk-forwards.
+            let warmup = 2 * (p - s - 1) + (v - 1) * p;
+            for op in &ops[..warmup] {
+                assert!(matches!(op, Op::F(..)), "warmup must be fwd-only");
+            }
+            // Every (chunk, mb) appears exactly once per direction, and
+            // each backward follows its own forward.
+            let mut fpos = std::collections::HashMap::new();
+            for (k, op) in ops.iter().enumerate() {
+                match *op {
+                    Op::F(c, i) => {
+                        assert!(c < v && i < m);
+                        assert!(fpos.insert((c, i), k).is_none());
+                    }
+                    Op::B(c, i) => {
+                        let fk = fpos.get(&(c, i)).unwrap_or_else(
+                            || panic!("B({c},{i}) before F at stage {s}"));
+                        assert!(*fk < k);
+                    }
+                }
+            }
+            assert_eq!(fpos.len(), m * v);
+        }
+        // Device 0 starts with chunk 0 of the first p microbatches,
+        // then chunk 1 of the same group (Megatron round-robin).
+        let ops0 = schedule_ops(0, p, v, m);
+        assert_eq!(&ops0[..4],
+                   &[Op::F(0, 0), Op::F(0, 1), Op::F(0, 2), Op::F(0, 3)]);
+        assert_eq!(ops0[4], Op::F(1, 0));
+        // Last device's first backward is the final chunk, microbatch 0.
+        let ops3 = schedule_ops(p - 1, p, v, m);
+        let first_b = ops3.iter().find_map(|o| match o {
+            Op::B(c, i) => Some((*c, *i)), _ => None }).unwrap();
+        assert_eq!(first_b, (v - 1, 0));
     }
 
     #[test]
@@ -849,6 +1103,95 @@ mod tests {
     }
 
     #[test]
+    fn interleaving_shrinks_the_pipeline_bubble() {
+        // Same workload, pp=4, m=8: interleaved-1F1B's fill/drain is
+        // 1/v of plain 1F1B's, so idle fraction must drop.
+        let cluster = Cluster::new(Generation::H100, 4);
+        let base = SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::new(8, 1, 4, 1),
+            64, 1, 4096);
+        let il = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 }, ..base };
+        let rb = simulate(&base);
+        let ri = simulate(&il);
+        assert!(ri.idle / ri.iter_time < rb.idle / rb.iter_time,
+                "interleaved idle frac {} !< 1f1b idle frac {}",
+                ri.idle / ri.iter_time, rb.idle / rb.iter_time);
+        // ...at the cost of v× the P2P activation traffic.
+        let p2p_b = rb.comm_by_tag[&Tag::P2pActivations];
+        let p2p_i = ri.comm_by_tag[&Tag::P2pActivations];
+        assert!(p2p_i > p2p_b * 1.5, "{p2p_i} !> 1.5×{p2p_b}");
+    }
+
+    #[test]
+    fn zero3_collectives_scale_with_microbatches() {
+        // ZeRO-3 re-gathers params per microbatch (fwd + bwd) and
+        // reduce-scatters grads per microbatch; the ZeRO-2-ish FSDP
+        // baseline pays one AG + one RS per layer per iteration.
+        let mut z = weak_cfg(8);
+        z.sharding = Sharding::Zero3;
+        let f = weak_cfg(8); // m = 1 per replica? gbs 2*64, mbs 2 → m=1
+        let rz = simulate(&z);
+        let rf = simulate(&f);
+        // With m = 1 microbatch, zero3 pays 2× the gather volume (fwd
+        // + bwd regather) and the same RS volume.
+        let ag_z = rz.comm_by_tag[&Tag::AllGatherParams];
+        let ag_f = rf.comm_by_tag[&Tag::AllGatherParams];
+        assert!((ag_z / ag_f - 2.0).abs() < 1e-6, "{ag_z} vs {ag_f}");
+        // With gradient accumulation (m = 4), volume scales with m.
+        let mut z4 = z;
+        z4.global_batch = 4 * z.global_batch;
+        let rz4 = simulate(&z4);
+        let ag_z4 = rz4.comm_by_tag[&Tag::AllGatherParams];
+        assert!((ag_z4 / ag_z - 4.0).abs() < 1e-6, "{ag_z4} vs {ag_z}");
+        let rs4 = rz4.comm_by_tag[&Tag::ReduceScatterGrads];
+        let rs1 = rz.comm_by_tag[&Tag::ReduceScatterGrads];
+        assert!((rs4 / rs1 - 4.0).abs() < 1e-6, "{rs4} vs {rs1}");
+    }
+
+    #[test]
+    fn interleaved_validation_rules() {
+        let cluster = Cluster::new(Generation::H100, 4);
+        let base = SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::new(8, 1, 4, 1),
+            32, 1, 4096);
+        let ok = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 }, ..base };
+        assert!(ok.validate().is_ok());
+        // v must be >= 2.
+        let v1 = SimConfig {
+            schedule: Schedule::Interleaved { v: 1 }, ..base };
+        assert!(v1.validate().is_err());
+        // layers must divide into pp·v virtual stages (32 % 24 != 0).
+        let v6 = SimConfig {
+            schedule: Schedule::Interleaved { v: 6 }, ..base };
+        assert!(v6.validate().is_err());
+        // microbatches must divide by pp (m = 2 here, pp = 4).
+        let few = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 },
+            global_batch: 16,
+            ..base
+        };
+        assert!(few.validate().is_err());
+        // interleaving without pipelining is rejected.
+        let no_pp = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 },
+            plan: ParallelPlan::new(32, 1, 1, 1),
+            ..base
+        };
+        assert!(no_pp.validate().is_err());
+    }
+
+    #[test]
+    fn schedule_specs_roundtrip_display() {
+        assert_eq!(Schedule::OneFOneB.to_string(), "1f1b");
+        assert_eq!(Schedule::Interleaved { v: 2 }.to_string(),
+                   "interleaved:2");
+        assert_eq!(Schedule::OneFOneB.chunks(), 1);
+        assert_eq!(Schedule::Interleaved { v: 4 }.chunks(), 4);
+    }
+
+    #[test]
     fn ddp_uses_allreduce_not_ag_rs() {
         let cluster = Cluster::new(Generation::H100, 2);
         let mut cfg = weak_cfg(2);
@@ -900,7 +1243,9 @@ mod tests {
     }
 
     /// Representative configs spanning every emission arm: pure dp,
-    /// tp+cp, deep pipeline, pipeline+tp, ddp, hsdp, no-prefetch.
+    /// tp+cp, deep pipeline, pipeline+tp, ddp, hsdp, zero3,
+    /// no-prefetch, and the interleaved schedule (with and without
+    /// ZeRO-3 / prefetch).
     fn cross_validation_cfgs() -> Vec<SimConfig> {
         let c4 = Cluster::new(Generation::H100, 4);
         let c8 = Cluster::new(Generation::H100, 8);
@@ -910,18 +1255,44 @@ mod tests {
         ddp.sharding = Sharding::Ddp;
         let mut hsdp = weak_cfg(16);
         hsdp.sharding = Sharding::Hsdp { group: 8 };
+        let mut zero3 = weak_cfg(8);
+        zero3.sharding = Sharding::Zero3;
+        let mut zero3_no_pf = weak_cfg(4);
+        zero3_no_pf.sharding = Sharding::Zero3;
+        zero3_no_pf.prefetch = false;
+        let pp4 = SimConfig::fsdp(
+            LLAMA_7B, c4, ParallelPlan::new(8, 1, 4, 1), 32, 1, 4096);
+        let il2 = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 }, ..pp4 };
+        let il4 = SimConfig {
+            schedule: Schedule::Interleaved { v: 4 }, ..pp4 };
+        let mut il2_zero3 = il2;
+        il2_zero3.sharding = Sharding::Zero3;
+        let mut il2_no_pf = il2;
+        il2_no_pf.prefetch = false;
+        let il2_mixed = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 },
+            ..SimConfig::fsdp(LLAMA_7B, c8,
+                              ParallelPlan::new(8, 2, 2, 2), 32, 1, 4096)
+        };
         vec![
             weak_cfg(1),
             weak_cfg(16),
             no_pf,
             ddp,
             hsdp,
+            zero3,
+            zero3_no_pf,
             SimConfig::fsdp(LLAMA_7B, c4, ParallelPlan::new(4, 4, 2, 1),
                             16, 2, 4096),
-            SimConfig::fsdp(LLAMA_7B, c4, ParallelPlan::new(8, 1, 4, 1),
-                            32, 1, 4096),
+            pp4,
+            il2,
+            il4,
+            il2_zero3,
+            il2_no_pf,
             SimConfig::fsdp(LLAMA_7B, c8, ParallelPlan::new(8, 2, 2, 2),
                             32, 1, 4096),
+            il2_mixed,
         ]
     }
 

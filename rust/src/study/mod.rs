@@ -7,8 +7,9 @@
 //!
 //! * [`Study`] / [`StudyBuilder`] — declare a grid over architecture ×
 //!   hardware generation × cluster size × parallel plan × sharding ×
-//!   batch shape × sequence length, with feasibility constraints
-//!   (divisibility, device-memory cap) applied during expansion.
+//!   pipeline schedule × batch shape × sequence length, with
+//!   feasibility constraints (divisibility, schedule validity,
+//!   device-memory cap) applied during expansion.
 //! * [`StudyRunner`] — expands the grid, deduplicates repeated
 //!   configurations via a config-key cache, and simulates the remainder
 //!   across `std::thread::scope` workers (the simulator is
@@ -54,7 +55,7 @@ use crate::hardware::Generation;
 use crate::memory;
 use crate::model::TransformerArch;
 use crate::parallelism::{enumerate_plans, ParallelPlan};
-use crate::sim::{Sharding, SimConfig};
+use crate::sim::{Schedule, Sharding, SimConfig};
 use crate::topology::Cluster;
 
 /// How the parallel-plan axis expands for each (generation, nodes)
@@ -156,6 +157,29 @@ pub fn bench_pinned_study() -> Study {
         .build()
 }
 
+/// Pinned companion grid covering the schedule axis (interleaved-1F1B
+/// × ZeRO-3 on pipeline-heavy plans), so `dtsim bench` and CI's
+/// `BENCH_study.json` track the schedule-variant hot path alongside
+/// the fig6 sweep. Pinned for cross-PR comparability.
+pub fn bench_pinned_sched_study() -> Study {
+    Study::builder("bench-sched")
+        .title("pinned benchmark grid: schedule variants (interleaved/zero3)")
+        .arch(crate::model::LLAMA_7B)
+        .generation(Generation::H100)
+        .nodes([16])
+        .plans(PlanAxis::Shapes(vec![(1, 4, 1), (2, 4, 1), (1, 8, 1)]))
+        .global_batches([256])
+        .micro_batches([1, 2])
+        .schedules([
+            Schedule::OneFOneB,
+            Schedule::Interleaved { v: 2 },
+            Schedule::Interleaved { v: 4 },
+        ])
+        .shardings([Sharding::Fsdp, Sharding::Zero3])
+        .memory_cap(0.94)
+        .build()
+}
+
 /// One expanded, validated grid point plus its memory footprint.
 #[derive(Debug, Clone, Copy)]
 pub struct StudyPoint {
@@ -178,6 +202,7 @@ pub struct ConfigKey {
     micro_batch: usize,
     seq_len: usize,
     sharding: Sharding,
+    schedule: Schedule,
     prefetch: bool,
 }
 
@@ -193,6 +218,7 @@ impl ConfigKey {
             micro_batch: cfg.micro_batch,
             seq_len: cfg.seq_len,
             sharding: cfg.sharding,
+            schedule: cfg.schedule,
             prefetch: cfg.prefetch,
         }
     }
@@ -211,6 +237,7 @@ pub struct Study {
     micro: MicroBatchAxis,
     seqs: Vec<usize>,
     shardings: Vec<Sharding>,
+    schedules: Vec<Schedule>,
     prefetch: Vec<bool>,
     mem_cap_frac: Option<f64>,
 }
@@ -228,6 +255,7 @@ impl Study {
             micro: MicroBatchAxis::Fixed(vec![2]),
             seqs: vec![4096],
             shardings: vec![Sharding::Fsdp],
+            schedules: vec![Schedule::OneFOneB],
             prefetch: vec![true],
             mem_cap_frac: None,
         }
@@ -235,10 +263,14 @@ impl Study {
 
     /// Expand the grid into validated, memory-feasible simulation
     /// configurations. Expansion order is deterministic: axes nest
-    /// arch → generation → nodes → seq → sharding → prefetch → plan →
-    /// gbs → mbs, with plans in `enumerate_plans` order and microbatch
-    /// candidates ascending — the same candidate order the planner's
-    /// sweep has always used, so stable sorts preserve its tie-breaks.
+    /// arch → generation → nodes → seq → sharding → schedule →
+    /// prefetch → plan → gbs → mbs, with plans in `enumerate_plans`
+    /// order and microbatch candidates ascending — the same candidate
+    /// order the planner's sweep has always used, so stable sorts
+    /// preserve its tie-breaks. Schedule/plan combinations an axis
+    /// cannot satisfy (e.g. interleaved on a pp=1 plan, or a microbatch
+    /// count not divisible by pp) fail validation and are skipped, not
+    /// errors.
     pub fn expand(&self) -> Vec<StudyPoint> {
         let mut points = Vec::new();
         for arch in &self.archs {
@@ -247,10 +279,12 @@ impl Study {
                     let cluster = Cluster::new(gen, nodes);
                     for &seq in &self.seqs {
                         for &sharding in &self.shardings {
-                            for &prefetch in &self.prefetch {
-                                self.expand_cluster(
-                                    arch, cluster, seq, sharding,
-                                    prefetch, &mut points);
+                            for &schedule in &self.schedules {
+                                for &prefetch in &self.prefetch {
+                                    self.expand_cluster(
+                                        arch, cluster, seq, sharding,
+                                        schedule, prefetch, &mut points);
+                                }
                             }
                         }
                     }
@@ -267,6 +301,7 @@ impl Study {
         cluster: Cluster,
         seq_len: usize,
         sharding: Sharding,
+        schedule: Schedule,
         prefetch: bool,
         points: &mut Vec<StudyPoint>,
     ) {
@@ -297,14 +332,13 @@ impl Study {
                         micro_batch: mbs,
                         seq_len,
                         sharding,
+                        schedule,
                         prefetch,
                     };
                     if cfg.validate().is_err() {
                         continue;
                     }
-                    let in_flight = cfg.microbatches().min(plan.pp);
-                    let mem = memory::per_gpu_memory(
-                        arch, &plan, mbs, seq_len, in_flight);
+                    let mem = memory::per_gpu_memory_cfg(&cfg);
                     if let Some(frac) = self.mem_cap_frac {
                         if mem.total() > mem_bytes * frac {
                             continue;
@@ -333,6 +367,7 @@ pub struct StudyBuilder {
     micro: MicroBatchAxis,
     seqs: Vec<usize>,
     shardings: Vec<Sharding>,
+    schedules: Vec<Schedule>,
     prefetch: Vec<bool>,
     mem_cap_frac: Option<f64>,
 }
@@ -420,6 +455,18 @@ impl StudyBuilder {
         self
     }
 
+    /// Pin the pipeline schedule axis to one schedule.
+    pub fn schedule(self, schedule: Schedule) -> Self {
+        self.schedules([schedule])
+    }
+
+    /// Sweep pipeline schedules (e.g. plain vs interleaved-1F1B).
+    /// Combinations a plan cannot satisfy are skipped at expansion.
+    pub fn schedules(mut self, schedules: impl IntoIterator<Item = Schedule>) -> Self {
+        self.schedules = schedules.into_iter().collect();
+        self
+    }
+
     pub fn prefetch(mut self, on: bool) -> Self {
         self.prefetch = vec![on];
         self
@@ -454,9 +501,18 @@ impl StudyBuilder {
         }
         if self.gens.is_empty() || self.nodes.is_empty()
             || self.seqs.is_empty() || self.shardings.is_empty()
-            || self.prefetch.is_empty()
+            || self.schedules.is_empty() || self.prefetch.is_empty()
         {
             return Err(format!("study '{}' has an empty axis", self.name));
+        }
+        for s in &self.schedules {
+            if let Schedule::Interleaved { v } = s {
+                if *v < 2 {
+                    return Err(format!(
+                        "study '{}': interleaved schedule needs v >= 2, \
+                         got {v}", self.name));
+                }
+            }
         }
         if self.nodes.iter().any(|&n| n == 0) {
             return Err("node counts must be >= 1".into());
@@ -477,6 +533,7 @@ impl StudyBuilder {
             micro: self.micro,
             seqs: self.seqs,
             shardings: self.shardings,
+            schedules: self.schedules,
             prefetch: self.prefetch,
             mem_cap_frac: self.mem_cap_frac,
         })
@@ -590,6 +647,64 @@ mod tests {
         assert_ne!(ConfigKey::of(&mk(LLAMA_7B)), ConfigKey::of(&mk(custom)),
                    "same-name archs with different shapes must not alias");
         assert_eq!(ConfigKey::of(&mk(custom)), ConfigKey::of(&mk(custom)));
+    }
+
+    #[test]
+    fn schedule_axis_expands_and_filters() {
+        // schedules × plans: interleaved points survive only where
+        // pp >= 2, layers divide into pp·v chunks, and m % pp == 0.
+        let s = Study::builder("sched")
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plan_shapes(&[(1, 1, 1), (1, 4, 1)])
+            .global_batches([32])
+            .micro_batches([1, 2])
+            .schedules([Schedule::OneFOneB,
+                        Schedule::Interleaved { v: 2 }])
+            .build();
+        let pts = s.expand();
+        // pp=1 plan: 1f1b only. pp=4 plan (dp=4, local 8): m = 8 or 4,
+        // both divisible by 4 → both schedules.
+        assert!(pts.iter().all(|p| match p.cfg.schedule {
+            Schedule::Interleaved { .. } => p.cfg.plan.pp > 1,
+            Schedule::OneFOneB => true,
+        }));
+        let il: Vec<_> = pts.iter()
+            .filter(|p| p.cfg.schedule != Schedule::OneFOneB)
+            .collect();
+        assert_eq!(il.len(), 2, "pp=4 × mbs {{1,2}} interleaved points");
+        for p in &il {
+            assert_eq!(p.cfg.microbatches() % p.cfg.plan.pp, 0);
+        }
+        // Interleaved points carry deeper activation residency.
+        let plain = pts.iter().find(|p| {
+            p.cfg.plan.pp == 4 && p.cfg.micro_batch == 1
+                && p.cfg.schedule == Schedule::OneFOneB
+        }).unwrap();
+        let inter = pts.iter().find(|p| {
+            p.cfg.plan.pp == 4 && p.cfg.micro_batch == 1
+                && p.cfg.schedule != Schedule::OneFOneB
+        }).unwrap();
+        assert!(inter.mem_per_gpu > plain.mem_per_gpu);
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_interleaving() {
+        assert!(Study::builder("bad-v")
+            .arch(LLAMA_7B)
+            .schedules([Schedule::Interleaved { v: 1 }])
+            .try_build()
+            .is_err());
+    }
+
+    #[test]
+    fn pinned_sched_bench_grid_covers_the_new_axes() {
+        let pts = bench_pinned_sched_study().expand();
+        assert!(!pts.is_empty());
+        assert!(pts.iter().any(
+            |p| matches!(p.cfg.schedule, Schedule::Interleaved { .. })));
+        assert!(pts.iter().any(
+            |p| p.cfg.sharding == Sharding::Zero3));
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::hardware::Generation;
 use crate::memory;
 use crate::metrics::{self, Metrics};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{self, Sharding, SimArena, SimConfig};
+use crate::sim::{self, Schedule, Sharding, SimArena, SimConfig};
 
 use super::table::{Column, Table};
 use super::{ConfigKey, Study, StudyPoint};
@@ -42,6 +42,7 @@ pub struct CaseResult {
     pub micro_batch: usize,
     pub seq_len: usize,
     pub sharding: Sharding,
+    pub schedule: Schedule,
     pub metrics: Metrics,
     pub mem_per_gpu: f64,
 }
@@ -56,6 +57,7 @@ fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
         micro_batch: p.cfg.micro_batch,
         seq_len: p.cfg.seq_len,
         sharding: p.cfg.sharding,
+        schedule: p.cfg.schedule,
         metrics: metrics::evaluate_in(&p.cfg, arena),
         mem_per_gpu: p.mem_per_gpu,
     }
@@ -143,12 +145,10 @@ impl StudyRunner {
     }
 
     /// Evaluate a single ad-hoc configuration through the cache. The
-    /// memory footprint uses the planner's in-flight-microbatch
-    /// convention.
+    /// memory footprint uses the planner's sharding/schedule-aware
+    /// residency convention.
     pub fn eval(&mut self, cfg: &SimConfig) -> CaseResult {
-        let in_flight = cfg.microbatches().min(cfg.plan.pp);
-        let mem = memory::per_gpu_memory(
-            &cfg.arch, &cfg.plan, cfg.micro_batch, cfg.seq_len, in_flight);
+        let mem = memory::per_gpu_memory_cfg(cfg);
         let point = StudyPoint { cfg: *cfg, mem_per_gpu: mem.total() };
         self.run_points("adhoc", "", &[point])
             .cases
@@ -537,6 +537,7 @@ mod tests {
             micro_batch: 2,
             seq_len: 4096,
             sharding: Sharding::Fsdp,
+            schedule: Schedule::OneFOneB,
             metrics: Metrics {
                 iter_time: 1.0,
                 global_wps: wps,
@@ -603,6 +604,43 @@ mod tests {
             let (evaluated, requested) = runner.stats();
             assert_eq!(evaluated + runner.pruned_points(), requested);
         }
+    }
+
+    #[test]
+    fn best_of_matches_full_sweep_winner_on_interleaved_grid() {
+        // Pruned-best exactness over a grid that includes interleaved
+        // schedules and ZeRO-3: the schedule-aware lower bound must
+        // stay sound, so the bound-and-prune winner (incl. tie-breaks)
+        // is the exhaustive head bit-for-bit.
+        let study = Study::builder("sched-prune")
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plan_shapes(&[(1, 1, 1), (1, 2, 1), (1, 4, 1)])
+            .global_batches([32])
+            .micro_batch_divisors()
+            .schedules([
+                Schedule::OneFOneB,
+                Schedule::Interleaved { v: 2 },
+                Schedule::Interleaved { v: 4 },
+            ])
+            .shardings([Sharding::Fsdp, Sharding::Zero3])
+            .memory_cap(0.94)
+            .build();
+        let full = StudyRunner::sequential().run(&study);
+        assert!(full.cases.iter().any(
+            |c| matches!(c.schedule, Schedule::Interleaved { .. })),
+            "grid must actually contain interleaved points");
+        let expect = full.best().unwrap();
+        let mut runner = StudyRunner::sequential();
+        let got = runner.best_of(&study).unwrap();
+        assert_eq!(got.plan, expect.plan);
+        assert_eq!(got.micro_batch, expect.micro_batch);
+        assert_eq!(got.schedule, expect.schedule);
+        assert_eq!(got.sharding, expect.sharding);
+        assert_eq!(got.metrics.global_wps.to_bits(),
+                   expect.metrics.global_wps.to_bits());
+        let (evaluated, requested) = runner.stats();
+        assert_eq!(evaluated + runner.pruned_points(), requested);
     }
 
     #[test]

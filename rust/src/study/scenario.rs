@@ -17,8 +17,16 @@ pub trait Scenario: Send + Sync {
     /// Registry key (`dtsim study <name>`).
     fn name(&self) -> &'static str;
 
-    /// One-line description for `dtsim study --list`.
+    /// Table/figure title (rendered above the scenario's tables).
     fn title(&self) -> &'static str;
+
+    /// One-line description for `dtsim study --list`. Defaults to the
+    /// title; override to tell CLI users what the scenario *does*
+    /// (axes swept, flags worth knowing) rather than what its figure
+    /// is captioned.
+    fn describe(&self) -> &'static str {
+        self.title()
+    }
 
     /// Execute and render. The runner is shared so repeated
     /// configurations across scenarios simulate once.
@@ -97,6 +105,8 @@ mod tests {
         reg.register(Box::new(Dummy("two")));
         assert_eq!(reg.names(), vec!["one", "two"]);
         assert_eq!(reg.get("two").unwrap().title(), "dummy");
+        // describe() defaults to the title unless overridden.
+        assert_eq!(reg.get("two").unwrap().describe(), "dummy");
         assert!(reg.get("three").is_none());
         assert_eq!(reg.len(), 2);
     }

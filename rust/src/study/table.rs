@@ -119,6 +119,7 @@ pub enum Column {
     Gpus,
     Plan,
     ShardingKind,
+    ScheduleKind,
     Mbs,
     Gbs,
     SeqLen,
@@ -144,6 +145,7 @@ impl Column {
             Column::Gpus => "gpus",
             Column::Plan => "plan",
             Column::ShardingKind => "sharding",
+            Column::ScheduleKind => "schedule",
             Column::Mbs => "mbs",
             Column::Gbs => "gbs",
             Column::SeqLen => "seq_len",
@@ -170,6 +172,7 @@ impl Column {
             Column::Gpus => m.world.to_string(),
             Column::Plan => c.plan.to_string(),
             Column::ShardingKind => c.sharding.to_string(),
+            Column::ScheduleKind => c.schedule.to_string(),
             Column::Mbs => c.micro_batch.to_string(),
             Column::Gbs => c.global_batch.to_string(),
             Column::SeqLen => c.seq_len.to_string(),
@@ -205,6 +208,15 @@ mod tests {
         assert_eq!(Sharding::Fsdp.to_string(), "fsdp");
         assert_eq!(Sharding::Ddp.to_string(), "ddp");
         assert_eq!(Sharding::Hsdp { group: 8 }.to_string(), "hsdp:8");
+        assert_eq!(Sharding::Zero3.to_string(), "zero3");
+    }
+
+    #[test]
+    fn schedule_column_renders_spec_strings() {
+        use crate::sim::Schedule;
+        assert_eq!(Column::ScheduleKind.header(), "schedule");
+        assert_eq!(Schedule::Interleaved { v: 2 }.to_string(),
+                   "interleaved:2");
     }
 
     #[test]

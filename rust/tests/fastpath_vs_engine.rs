@@ -1,10 +1,12 @@
 //! Randomized cross-validation of the fused simulation fast path
 //! against the materialized event-graph engine: across sampled valid
-//! configurations covering every sharding, tp/cp/pp on and off, and
-//! the prefetch ablation, `iter_time`, `exposed_comm`, and per-tag
-//! totals must agree to 1e-9 (they are in fact bit-identical — the two
-//! paths share the emitter and perform the same f64 operations — but
-//! the contract tested here is the documented 1e-9 tolerance).
+//! configurations covering every sharding (FSDP/DDP/HSDP/ZeRO-3),
+//! both pipeline schedules (plain and interleaved 1F1B), tp/cp/pp on
+//! and off, and the prefetch ablation, `iter_time`, `exposed_comm`,
+//! and per-tag totals must agree to 1e-9 (they are in fact
+//! bit-identical — the two paths share the emitter and perform the
+//! same f64 operations — but the contract tested here is the
+//! documented 1e-9 tolerance).
 
 use std::cell::Cell;
 
@@ -12,7 +14,8 @@ use dtsim::hardware::Generation;
 use dtsim::model::LLAMA_7B;
 use dtsim::parallelism::ParallelPlan;
 use dtsim::sim::{
-    simulate_engine, simulate_in, Sharding, SimArena, SimConfig, Tag,
+    simulate_engine, simulate_in, Schedule, Sharding, SimArena,
+    SimConfig, Tag,
 };
 use dtsim::util::proptest::check;
 use dtsim::util::rng::Rng;
@@ -47,12 +50,22 @@ fn prop_fused_fast_path_matches_event_engine() {
         let dp = world / mp;
         let plan = ParallelPlan::new(dp, tp, pp, cp);
         let mbs = pow2(rng, 1);
-        let accum = 1 + rng.next_below(3) as usize;
-        let sharding = match rng.next_below(4) {
+        let mut accum = 1 + rng.next_below(3) as usize;
+        let sharding = match rng.next_below(5) {
             0 => Sharding::Fsdp,
             1 => Sharding::Ddp,
             2 => Sharding::Hsdp { group: 2.min(dp) },
+            3 => Sharding::Zero3,
             _ => Sharding::Hsdp { group: dp },
+        };
+        // Interleave half the pipelined configs; the microbatch count
+        // must then divide by pp (scale accumulation up to match).
+        let schedule = if pp > 1 && rng.next_below(2) == 0 {
+            accum *= pp;
+            let v = if rng.next_below(2) == 0 { 2 } else { 4 };
+            Schedule::Interleaved { v }
+        } else {
+            Schedule::OneFOneB
         };
         let cfg = SimConfig {
             arch: LLAMA_7B,
@@ -62,6 +75,7 @@ fn prop_fused_fast_path_matches_event_engine() {
             micro_batch: mbs,
             seq_len: 4096,
             sharding,
+            schedule,
             prefetch: rng.next_below(2) == 0,
         };
         if cfg.validate().is_err() {
@@ -108,6 +122,26 @@ fn prop_fused_fast_path_matches_event_engine() {
     assert!(valid.get() >= 200,
             "only {} valid configs sampled; need >= 200 for coverage",
             valid.get());
+}
+
+#[test]
+fn interleaved_zero3_entry_points_agree_bitwise() {
+    // The new emitter arms (virtual-stage interleaving + per-microbatch
+    // ZeRO-3 collectives) through both public entry points.
+    let cluster = dtsim::topology::Cluster::new(Generation::H100, 4);
+    let mut cfg = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::new(4, 2, 4, 1), 16, 1, 4096);
+    cfg.schedule = Schedule::Interleaved { v: 2 };
+    cfg.sharding = Sharding::Zero3;
+    let fast = dtsim::sim::simulate(&cfg);
+    let slow = simulate_engine(&cfg);
+    assert_eq!(fast.iter_time.to_bits(), slow.iter_time.to_bits());
+    assert_eq!(fast.exposed_comm.to_bits(), slow.exposed_comm.to_bits());
+    assert_eq!(fast.idle.to_bits(), slow.idle.to_bits());
+    for tag in Tag::ALL {
+        assert_eq!(fast.comm_by_tag.get(tag).to_bits(),
+                   slow.comm_by_tag.get(tag).to_bits(), "{tag:?}");
+    }
 }
 
 #[test]

@@ -27,12 +27,13 @@ fn tmp_dir(name: &str) -> PathBuf {
 fn every_figure_is_a_registered_scenario() {
     let reg = report::registry();
     let names = report::all_figures();
-    assert_eq!(names.len(), 17);
+    assert_eq!(names.len(), 18);
     for name in names {
         let sc = reg.get(name)
             .unwrap_or_else(|| panic!("no scenario for {name}"));
         assert_eq!(sc.name(), name);
         assert!(!sc.title().is_empty());
+        assert!(!sc.describe().is_empty());
     }
 }
 
@@ -42,7 +43,7 @@ fn parallel_figure_generation_is_byte_identical_to_sequential() {
     // N worker threads must produce byte-identical CSVs to a
     // single-threaded pass.
     let reg = report::registry();
-    for fig in ["fig1", "fig6", "fig9"] {
+    for fig in ["fig1", "fig6", "fig9", "sched"] {
         let sc = reg.get(fig).unwrap();
         let seq = sc.tables(&mut StudyRunner::sequential()).unwrap();
         let par = sc.tables(&mut StudyRunner::new(8)).unwrap();
@@ -95,6 +96,31 @@ fn study_cli_scenario_matches_repro_output() {
     let a = std::fs::read(dir_a.join("fig6.csv")).unwrap();
     let b = std::fs::read(dir_b.join("fig6.csv")).unwrap();
     assert_eq!(a, b);
+}
+
+#[test]
+fn sched_scenario_compares_schedules_end_to_end() {
+    // `dtsim study sched` — the schedule-axis comparison grid must
+    // surface both plain and interleaved 1F1B, and both sharding
+    // modes, in its winners table.
+    let dir = tmp_dir("sched");
+    let reg = report::registry();
+    let tables = report::run_in(
+        &reg, &mut StudyRunner::auto(), "sched", &dir).unwrap();
+    assert_eq!(tables.len(), 2);
+    let winners = &tables[0];
+    let sched_col = winners.header.iter()
+        .position(|h| h == "schedule").unwrap();
+    let shard_col = winners.header.iter()
+        .position(|h| h == "sharding").unwrap();
+    let scheds: std::collections::HashSet<&str> = winners.rows.iter()
+        .map(|r| r[sched_col].as_str()).collect();
+    assert!(scheds.contains("1f1b"), "{scheds:?}");
+    assert!(scheds.iter().any(|s| s.starts_with("interleaved:")),
+            "{scheds:?}");
+    assert!(winners.rows.iter().any(|r| r[shard_col] == "zero3"));
+    assert!(dir.join("sched.csv").exists());
+    assert!(dir.join("sched_32n.csv").exists());
 }
 
 #[test]
@@ -183,9 +209,10 @@ fn figures_unchanged_with_cache_and_arena_enabled() {
     // The perf machinery (collective cost memo, arena-recycled fused
     // fast path, lock-free result slots) must not move a single CSV
     // byte: a default runner and one forced through the uncached
-    // event-graph reference must emit identical files.
+    // event-graph reference must emit identical files. `sched` pins
+    // the new interleaved/ZeRO-3 emitter arms to the same contract.
     let reg = report::registry();
-    for fig in ["fig1", "fig6", "fig9"] {
+    for fig in ["fig1", "fig6", "fig9", "sched"] {
         let sc = reg.get(fig).unwrap();
         let fast = sc.tables(&mut StudyRunner::sequential()).unwrap();
         let mut engine_runner = StudyRunner::new(4);
