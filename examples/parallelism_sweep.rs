@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let arch = *model::by_name(&args.get_or("arch", "7b"))
         .ok_or_else(|| anyhow::anyhow!("unknown --arch"))?;
     let gen = Generation::parse(&args.get_or("gen", "h100"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --gen"))?;
+        .map_err(anyhow::Error::msg)?;
     let nodes = args.usize_or("nodes", 32);
     let gbs = args.usize_or("gbs", 512);
     let cluster = Cluster::new(gen, nodes);

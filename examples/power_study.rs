@@ -16,7 +16,8 @@ use dtsim::sim::SimConfig;
 use dtsim::topology::Cluster;
 
 fn weak(gen: Generation, gpus: usize) -> metrics::Metrics {
-    let cluster = Cluster::with_gpus(gen, gpus);
+    let cluster = Cluster::with_gpus(gen, gpus)
+        .expect("gpu counts here tile the NVLink domain");
     let w = cluster.world_size();
     metrics::evaluate(&SimConfig::fsdp(
         LLAMA_7B, cluster, ParallelPlan::data_parallel(w), 2 * w, 2,

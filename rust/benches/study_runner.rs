@@ -8,8 +8,8 @@ use dtsim::hardware::Generation;
 use dtsim::model::LLAMA_7B;
 use dtsim::parallelism::ParallelPlan;
 use dtsim::sim::{simulate_engine, simulate_in, SimArena, SimConfig};
-use dtsim::study::{bench_pinned_sched_study, bench_pinned_study,
-                   StudyRunner};
+use dtsim::study::{bench_pinned_hw_study, bench_pinned_sched_study,
+                   bench_pinned_study, StudyRunner};
 use dtsim::topology::Cluster;
 use dtsim::util::bench::{bb, bench, bench_quick, group};
 
@@ -88,4 +88,19 @@ fn main() {
         let mut runner = StudyRunner::sequential();
         bb(runner.best_of(bb(&sched)));
     });
+
+    group("study runner: hardware axis (catalog built-ins)");
+    let hw = bench_pinned_hw_study();
+    println!("hw grid points after constraints: {}", hw.expand().len());
+    bench_quick("run/hw_sequential", || {
+        let mut runner = StudyRunner::sequential();
+        bb(runner.run(bb(&hw)));
+    });
+    let mut hw_warm = StudyRunner::sequential();
+    hw_warm.run(&hw);
+    bench("run/hw_cache_hit", || {
+        bb(hw_warm.run(bb(&hw)));
+    });
+    let (hits, misses) = hw_warm.cost_cache_stats();
+    println!("hw collective cost memo: {hits} hits / {misses} misses");
 }

@@ -18,7 +18,7 @@
 
 use std::collections::HashMap;
 
-use crate::hardware::Generation;
+use crate::hardware::HwId;
 use crate::topology::{Cluster, GroupPlacement};
 
 /// Collective operations used by the training stack.
@@ -214,15 +214,17 @@ pub fn collective_time(
 }
 
 /// Memoization key for [`collective_time`]. The model depends on the
-/// cluster only through the GPU generation (which fixes NVLink/IB
-/// bandwidths and the node shape) and on the group only through its
-/// [`GroupPlacement`]; the payload is keyed by its exact f64 bits so a
-/// hit is guaranteed to be the result of an identical call.
+/// cluster only through the interned hardware id (whose immutable
+/// catalog spec fixes NVLink/IB bandwidths and the node shape) and on
+/// the group only through its [`GroupPlacement`]; the payload is keyed
+/// by its exact f64 bits so a hit is guaranteed to be the result of an
+/// identical call. `HwId` is `Copy + Hash`, so custom catalog entries
+/// key exactly as cheaply as the old `Generation` enum did.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct CostKey {
     coll: Collective,
     bytes_bits: u64,
-    gen: Generation,
+    hw: HwId,
     place: GroupPlacement,
 }
 
@@ -252,18 +254,19 @@ impl CostCache {
         cluster: &Cluster,
         place: &GroupPlacement,
     ) -> CommCost {
-        // Keying by generation is sound only while every NodeSpec is
-        // the canonical one for its generation (true for all Clusters
-        // built via `Cluster::new`); a hand-built NodeSpec would
+        // Keying by hardware id is sound only while every NodeSpec is
+        // the canonical one for its catalog entry (true for all
+        // Clusters built via `Cluster::new`; catalog specs are
+        // immutable once registered); a hand-built NodeSpec would
         // silently alias cache entries otherwise.
         debug_assert_eq!(
             cluster.node.gpus_per_node,
             cluster.node.gpu.node().gpus_per_node,
-            "CostCache assumes the canonical NodeSpec per generation");
+            "CostCache assumes the canonical NodeSpec per hardware id");
         let key = CostKey {
             coll,
             bytes_bits: bytes.to_bits(),
-            gen: cluster.node.gpu,
+            hw: cluster.node.gpu,
             place: *place,
         };
         if let Some(cost) = self.map.get(&key) {

@@ -8,7 +8,7 @@
 
 pub mod toml;
 
-use crate::hardware::Generation;
+use crate::hardware::HwId;
 use crate::model::{self, TransformerArch};
 use crate::parallelism::ParallelPlan;
 use crate::sim::{Schedule, Sharding, SimConfig};
@@ -18,7 +18,9 @@ use crate::topology::Cluster;
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub arch: TransformerArch,
-    pub gen: Generation,
+    /// Catalog hardware entry — a built-in generation or any spec
+    /// loaded via `--catalog` / `Catalog::load_file`.
+    pub gen: HwId,
     pub nodes: usize,
     pub plan: ParallelPlan,
     pub global_batch: usize,
@@ -76,9 +78,24 @@ impl RunConfig {
             .ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
         let gen_name = doc.get_str("cluster", "generation")
             .unwrap_or_else(|| "h100".into());
-        let gen = Generation::parse(&gen_name)
-            .ok_or_else(|| format!("unknown generation '{gen_name}'"))?;
-        let nodes = doc.get_int("cluster", "nodes").unwrap_or(1) as usize;
+        // Accepts built-ins and loaded catalog entries; the error
+        // enumerates every accepted name.
+        let gen = HwId::parse(&gen_name)?;
+        // Cluster size: `nodes`, or `gpus` (which must be a multiple of
+        // the hardware's NVLink-domain size) — not both.
+        let nodes = match (doc.get_int("cluster", "nodes"),
+                           doc.get_int("cluster", "gpus")) {
+            (Some(_), Some(_)) => {
+                return Err("give cluster.nodes or cluster.gpus, \
+                            not both".into());
+            }
+            (None, Some(gpus)) => {
+                Cluster::with_gpus(gen, gpus.max(0) as usize)
+                    .map_err(|e| format!("cluster.gpus: {e}"))?
+                    .nodes
+            }
+            (nodes, None) => nodes.unwrap_or(1) as usize,
+        };
         let cluster = Cluster::new(gen, nodes);
         let tp = doc.get_int("parallelism", "tp").unwrap_or(1) as usize;
         let pp = doc.get_int("parallelism", "pp").unwrap_or(1) as usize;
@@ -142,7 +159,7 @@ impl RunConfig {
 /// rejected rather than silently ignored.
 const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ("model", &["arch", "seq_len"]),
-    ("cluster", &["generation", "nodes"]),
+    ("cluster", &["generation", "nodes", "gpus"]),
     ("parallelism", &["tp", "pp", "cp", "sharding", "schedule"]),
     ("batch", &["global", "micro"]),
 ];
@@ -237,21 +254,20 @@ pub fn scenario(name: &str) -> Option<RunConfig> {
             schedule: Schedule::OneFOneB,
         }
     };
-    use Generation::*;
     let arch7 = &model::LLAMA_7B;
     Some(match name {
         // §4.1 weak scaling endpoints.
-        "weak-small" => mk(arch7, H100, 1, 1, 1, 16, 2),
-        "weak-large" => mk(arch7, H100, 256, 1, 1, 4096, 2),
+        "weak-small" => mk(arch7, HwId::H100, 1, 1, 1, 16, 2),
+        "weak-large" => mk(arch7, HwId::H100, 256, 1, 1, 4096, 2),
         // §4.2 strong scaling (fixed gbs 32).
-        "strong-2n" => mk(arch7, H100, 2, 1, 1, 32, 1),
-        "strong-32n" => mk(arch7, H100, 32, 8, 1, 32, 1),
+        "strong-2n" => mk(arch7, HwId::H100, 2, 1, 1, 32, 1),
+        "strong-32n" => mk(arch7, HwId::H100, 32, 8, 1, 32, 1),
         // §4.3 Fig. 6 winner at 256 GPUs.
-        "fig6-best" => mk(arch7, H100, 32, 2, 1, 512, 2),
+        "fig6-best" => mk(arch7, HwId::H100, 32, 2, 1, 512, 2),
         // §4.4 generation comparison.
-        "a100-32n" => mk(arch7, A100, 32, 2, 1, 512, 2),
+        "a100-32n" => mk(arch7, HwId::A100, 32, 2, 1, 512, 2),
         // Appendix F.
-        "v100-32n" => mk(arch7, V100, 32, 2, 1, 256, 1),
+        "v100-32n" => mk(arch7, HwId::V100, 32, 2, 1, 256, 1),
         _ => return None,
     })
 }
@@ -306,9 +322,33 @@ micro = 2
             "[model]\narch = \"llama-7b\"\n[cluster]\nnodes = 4\n\
              [batch]\nglobal = 64\nmicro = 2")
             .unwrap();
-        assert_eq!(rc.gen, Generation::H100);
+        assert_eq!(rc.gen, HwId::H100);
         assert_eq!(rc.plan.tp, 1);
         assert_eq!(rc.seq_len, 4096);
+    }
+
+    #[test]
+    fn cluster_gpus_key_sizes_the_cluster_or_errors() {
+        let by_gpus = EXAMPLE.replace("nodes = 32", "gpus = 256");
+        let rc = RunConfig::from_toml_str(&by_gpus).unwrap();
+        assert_eq!(rc.nodes, 32);
+        // Partial nodes: the error names the offending count.
+        let bad = EXAMPLE.replace("nodes = 32", "gpus = 100");
+        let err = RunConfig::from_toml_str(&bad).unwrap_err();
+        assert!(err.contains("100"), "{err}");
+        assert!(err.contains("cluster.gpus"), "{err}");
+        // nodes and gpus together are ambiguous.
+        let both = EXAMPLE.replace("nodes = 32", "nodes = 32\ngpus = 256");
+        let err = RunConfig::from_toml_str(&both).unwrap_err();
+        assert!(err.contains("not both"), "{err}");
+    }
+
+    #[test]
+    fn unknown_generation_error_enumerates_hardware_names() {
+        let bad = EXAMPLE.replace("h100", "h900");
+        let err = RunConfig::from_toml_str(&bad).unwrap_err();
+        assert!(err.contains("unknown hardware 'h900'"), "{err}");
+        assert!(err.contains("v100") && err.contains("gb200"), "{err}");
     }
 
     #[test]

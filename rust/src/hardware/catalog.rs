@@ -1,0 +1,867 @@
+//! The pluggable hardware catalog: an interned registry of [`HwSpec`]s
+//! behind every cluster, collective-cost, power, and study query.
+//!
+//! The paper's Table 1 machines (V100/A100/H100 DGX nodes, plus the §5
+//! GB200 NVL72 extrapolation) ship as built-ins; arbitrary machines
+//! load from TOML (`dtsim --catalog hw.toml`, [`Catalog::load_file`])
+//! and behave exactly like built-ins everywhere: `--gen h200`, study
+//! hardware axes, planner sweeps, TOML run configs.
+//!
+//! Entries are **interned**: registering a spec yields a tiny
+//! `Copy + Hash` [`HwId`] handle that keys the collective cost memo
+//! ([`collectives::CostCache`](crate::collectives::CostCache)) and the
+//! study dedup cache by value, and resolves to a leaked
+//! `&'static HwSpec`. Specs are immutable once registered, so an id's
+//! meaning can never change mid-run: re-registering an identical spec
+//! returns the existing id, a conflicting one is an error.
+//!
+//! The catalog also derives specs: [`Catalog::with_freq_cap`] registers
+//! a frequency-capped variant of any entry (compute rate scaled by the
+//! cap, clock-sensitive power coefficients scaled by the spec's
+//! [`HwSpec::power_scale`] curve) — the mechanism behind the
+//! `powersweep` scenario (Go et al. 2025 style throughput-per-watt vs
+//! frequency studies). See `docs/hardware.md` for the TOML schema and
+//! the power-curve semantics.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+use crate::config::toml;
+
+use super::specs::{self, GpuSpec, NodeSpec};
+
+/// Interned handle to a catalog [`HwSpec`]. `Copy + Hash + Eq`, so it
+/// keys caches by value exactly like the old `Generation` enum did;
+/// unlike the enum, the set of valid ids grows at runtime as catalogs
+/// load. The four built-ins have fixed ids ([`HwId::V100`] …).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct HwId(u16);
+
+impl HwId {
+    pub const V100: HwId = HwId(0);
+    pub const A100: HwId = HwId(1);
+    pub const H100: HwId = HwId(2);
+    pub const GB200: HwId = HwId(3);
+
+    /// The built-in hardware set (paper Table 1 + the §5 GB200
+    /// extrapolation). Loaded catalog entries are *not* included — use
+    /// [`Catalog::primary_ids`] for everything registered.
+    pub const ALL: [HwId; 4] =
+        [HwId::V100, HwId::A100, HwId::H100, HwId::GB200];
+
+    /// Generations evaluated in the paper.
+    pub const PAPER: [HwId; 3] = [HwId::V100, HwId::A100, HwId::H100];
+
+    /// Resolve the interned spec (leaked: lives for the process).
+    pub fn spec(self) -> &'static HwSpec {
+        Catalog::get(self)
+    }
+
+    /// The per-GPU datasheet numbers + simulator coefficients.
+    pub fn gpu(self) -> &'static GpuSpec {
+        &self.spec().gpu
+    }
+
+    /// Node shape: the NVLink-domain size comes from the spec (8 for
+    /// DGX V100/A100/H100, 72 for GB200 NVL72 — data, not a special
+    /// case).
+    pub fn node(self) -> NodeSpec {
+        NodeSpec {
+            gpus_per_node: self.spec().gpus_per_node,
+            gpu: self,
+        }
+    }
+
+    /// Parse a hardware name — a built-in or any loaded catalog entry,
+    /// case-insensitive. The error enumerates every accepted form
+    /// (matching the `parse_sharding` convention).
+    pub fn parse(s: &str) -> Result<HwId, String> {
+        Catalog::parse(s)
+    }
+}
+
+impl fmt::Display for HwId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.spec().name)
+    }
+}
+
+impl fmt::Debug for HwId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "HwId({})", self.spec().name)
+    }
+}
+
+/// A complete hardware description — the unit of the catalog: node
+/// shape, per-GPU compute/memory/fabric rates and power coefficients,
+/// and an optional frequency-throttle curve.
+///
+/// Equality compares the spec's *value* (name, shape, rates, curve)
+/// and deliberately ignores the [`derived`](HwSpec::derived)
+/// classification flag, so reloading a derived spec's
+/// [`to_toml`](HwSpec::to_toml) output interns to the existing entry
+/// instead of conflicting with it.
+#[derive(Debug, Clone)]
+pub struct HwSpec {
+    /// Catalog name (the TOML section header). Lookup is
+    /// case-insensitive; display preserves this spelling.
+    pub name: String,
+    /// GPUs per NVLink domain ("node"): the fully-connected fast-fabric
+    /// island the topology and collective layers schedule around.
+    pub gpus_per_node: usize,
+    /// Datasheet rates + simulator/power coefficients.
+    pub gpu: GpuSpec,
+    /// Optional frequency-throttle curve: `(freq_frac, power_frac)`
+    /// knots, strictly ascending in frequency, ending at `(1.0, 1.0)`.
+    /// `power_frac` scales the clock-sensitive power coefficients
+    /// (`p_base`, `p_comp`) when the clock is capped at `freq_frac` of
+    /// nominal. `None` uses the default DVFS curve
+    /// `pw(f) = 0.3 + 0.7·f³` (leakage floor + cubic dynamic power).
+    pub freq_curve: Option<Vec<(f64, f64)>>,
+    /// True for specs derived by [`Catalog::with_freq_cap`]; derived
+    /// entries are excluded from [`Catalog::primary_ids`] so design
+    /// -space scenarios don't re-enumerate their own byproducts.
+    /// Classification metadata, not value identity: excluded from
+    /// `PartialEq` and not serialized by [`Self::to_toml`] (a derived
+    /// spec written to a catalog file and loaded in a fresh process
+    /// registers as a primary entry — it was explicitly exported).
+    pub derived: bool,
+}
+
+impl PartialEq for HwSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.gpus_per_node == other.gpus_per_node
+            && self.gpu == other.gpu
+            && self.freq_curve == other.freq_curve
+    }
+}
+
+impl HwSpec {
+    /// Power scale `pw(f)` for a clock capped at fraction `f` of
+    /// nominal: the default DVFS curve `0.3 + 0.7·f³` when no curve is
+    /// given, otherwise piecewise-linear interpolation through the
+    /// knots (flat below the first knot). `pw(1) = 1` always.
+    pub fn power_scale(&self, f: f64) -> f64 {
+        let f = f.clamp(0.0, 1.0);
+        // An absent (or hand-built empty) curve falls back to the
+        // default shape — registration rejects empty curves, but a
+        // never-registered HwSpec must not panic here.
+        let knots = match &self.freq_curve {
+            Some(knots) if !knots.is_empty() => knots,
+            _ => return 0.3 + 0.7 * f * f * f,
+        };
+        let (f0, p0) = knots[0];
+        if f <= f0 {
+            return p0;
+        }
+        for w in knots.windows(2) {
+            let (fa, pa) = w[0];
+            let (fb, pb) = w[1];
+            if f <= fb {
+                return pa + (pb - pa) * (f - fa) / (fb - fa);
+            }
+        }
+        1.0
+    }
+
+    /// Serialize to the catalog TOML subset [`Catalog::load_str`]
+    /// accepts. Floats use Rust's shortest round-trip formatting, so
+    /// load-back reproduces every field bit-for-bit (tested).
+    pub fn to_toml(&self) -> String {
+        let mut s = format!(
+            "[{}]\ngpus_per_node = {}\n", self.name, self.gpus_per_node);
+        for (k, v) in [
+            ("peak_flops", self.gpu.peak_flops),
+            ("hbm_bw", self.gpu.hbm_bw),
+            ("nvlink_bw", self.gpu.nvlink_bw),
+            ("ib_bw", self.gpu.ib_bw),
+            ("mem_bytes", self.gpu.mem_bytes),
+            ("kernel_base_mfu", self.gpu.kernel_base_mfu),
+            ("launch_overhead_s", self.gpu.launch_overhead_s),
+            ("p_base", self.gpu.p_base),
+            ("p_comp", self.gpu.p_comp),
+            ("p_comm", self.gpu.p_comm),
+            ("tdp", self.gpu.tdp),
+        ] {
+            s.push_str(&format!("{k} = {v:?}\n"));
+        }
+        if let Some(knots) = &self.freq_curve {
+            let joined: Vec<String> = knots
+                .iter()
+                .map(|(f, p)| format!("{f:?}:{p:?}"))
+                .collect();
+            s.push_str(&format!(
+                "freq_curve = \"{}\"\n", joined.join(",")));
+        }
+        s
+    }
+}
+
+/// Every recognized key of a catalog TOML section; anything else is a
+/// typo and rejected (same convention as `RunConfig`).
+const KNOWN_KEYS: &[&str] = &[
+    "gpus_per_node", "peak_flops", "hbm_bw", "nvlink_bw", "ib_bw",
+    "mem_bytes", "kernel_base_mfu", "launch_overhead_s", "p_base",
+    "p_comp", "p_comm", "tdp", "freq_curve",
+];
+
+struct State {
+    /// Append-only; index == `HwId.0`.
+    specs: Vec<&'static HwSpec>,
+    /// Lowercased name → id.
+    by_name: HashMap<String, u16>,
+}
+
+static STATE: OnceLock<RwLock<State>> = OnceLock::new();
+
+fn state() -> &'static RwLock<State> {
+    STATE.get_or_init(|| {
+        let mut st = State {
+            specs: Vec::new(),
+            by_name: HashMap::new(),
+        };
+        // Built-ins in HwId const order: Table 1 + GB200.
+        for (name, gpus_per_node, gpu) in [
+            ("V100", 8usize, &specs::V100),
+            ("A100", 8, &specs::A100),
+            ("H100", 8, &specs::H100),
+            ("GB200", 72, &specs::GB200),
+        ] {
+            let id = st.specs.len() as u16;
+            st.by_name.insert(name.to_ascii_lowercase(), id);
+            st.specs.push(Box::leak(Box::new(HwSpec {
+                name: name.to_string(),
+                gpus_per_node,
+                gpu: gpu.clone(),
+                freq_curve: None,
+                derived: false,
+            })));
+        }
+        RwLock::new(st)
+    })
+}
+
+/// The process-wide interned hardware registry. All methods are
+/// associated functions — there is exactly one catalog, because
+/// [`HwId`]s are meaningless outside it.
+pub struct Catalog;
+
+impl Catalog {
+    /// Resolve an id to its (immutable, leaked) spec.
+    pub fn get(id: HwId) -> &'static HwSpec {
+        state().read().unwrap().specs[id.0 as usize]
+    }
+
+    /// Case-insensitive name lookup; the error enumerates every
+    /// accepted name, built-ins first then loaded entries in
+    /// registration order.
+    pub fn parse(name: &str) -> Result<HwId, String> {
+        let st = state().read().unwrap();
+        if let Some(&i) = st.by_name.get(&name.to_ascii_lowercase()) {
+            return Ok(HwId(i));
+        }
+        let accepted: Vec<String> = st
+            .specs
+            .iter()
+            .filter(|s| !s.derived)
+            .map(|s| s.name.to_ascii_lowercase())
+            .collect();
+        Err(format!(
+            "unknown hardware '{name}' (expected one of: {})",
+            accepted.join(", ")))
+    }
+
+    /// Intern a spec. Identical re-registration (same name, same
+    /// values) returns the existing id; a name collision with
+    /// different values is an error — ids are forever.
+    pub fn register(spec: HwSpec) -> Result<HwId, String> {
+        validate(&spec)?;
+        let mut st = state().write().unwrap();
+        let key = spec.name.to_ascii_lowercase();
+        if let Some(&i) = st.by_name.get(&key) {
+            if *st.specs[i as usize] == spec {
+                return Ok(HwId(i));
+            }
+            return Err(format!(
+                "hardware '{}' is already registered with a different \
+                 spec; catalog entries are immutable — pick another name",
+                spec.name));
+        }
+        if st.specs.len() > u16::MAX as usize {
+            return Err("hardware catalog is full".into());
+        }
+        let id = st.specs.len() as u16;
+        st.by_name.insert(key, id);
+        st.specs.push(Box::leak(Box::new(spec)));
+        Ok(HwId(id))
+    }
+
+    /// Every registered id, in registration order (built-ins first).
+    pub fn ids() -> Vec<HwId> {
+        let n = state().read().unwrap().specs.len();
+        (0..n as u16).map(HwId).collect()
+    }
+
+    /// Registered ids excluding derived (frequency-capped) variants —
+    /// what design-space scenarios like `madmax` enumerate.
+    pub fn primary_ids() -> Vec<HwId> {
+        let st = state().read().unwrap();
+        st.specs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.derived)
+            .map(|(i, _)| HwId(i as u16))
+            .collect()
+    }
+
+    /// Display names in registration order.
+    pub fn names() -> Vec<String> {
+        let st = state().read().unwrap();
+        st.specs.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// Number of registered entries (≥ 4: the built-ins).
+    pub fn len() -> usize {
+        state().read().unwrap().specs.len()
+    }
+
+    /// Load a catalog TOML document: one `[section]` per hardware
+    /// entry, the section name is the catalog name. Returns the ids in
+    /// section order (the TOML subset sorts sections by name). Unknown
+    /// keys are rejected like `RunConfig` does.
+    pub fn load_str(text: &str) -> Result<Vec<HwId>, String> {
+        // The TOML-subset parser merges repeated [section] blocks
+        // (later keys win) — fine for layered run configs, but a
+        // duplicated hardware name in one catalog file is a
+        // copy-paste error that would register a chimera spec.
+        // Reject it by scanning the raw headers.
+        let mut seen = std::collections::HashSet::new();
+        for line in text.lines() {
+            // Same comment handling as the parser: a section header
+            // never contains a quoted string, so '#' always starts a
+            // comment on these lines.
+            let line =
+                line.split('#').next().unwrap_or_default().trim();
+            if let Some(name) =
+                line.strip_prefix('[').and_then(|l| l.strip_suffix(']'))
+            {
+                if !seen.insert(name.trim().to_ascii_lowercase()) {
+                    return Err(format!(
+                        "duplicate hardware section [{}] in catalog",
+                        name.trim()));
+                }
+            }
+        }
+        let doc = toml::parse(text)?;
+        let mut ids = Vec::new();
+        for section in doc.sections() {
+            if section.is_empty() {
+                return Err(format!(
+                    "keys outside any hardware section: {}",
+                    doc.keys("").join(", ")));
+            }
+            ids.push(Self::register(spec_from_doc(&doc, section)?)?);
+        }
+        if ids.is_empty() {
+            return Err(
+                "catalog defines no hardware sections (expected \
+                 [name] blocks — see docs/hardware.md)".into());
+        }
+        Ok(ids)
+    }
+
+    /// [`Self::load_str`] on a file path.
+    pub fn load_file(path: &str) -> Result<Vec<HwId>, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read catalog {path}: {e}"))?;
+        Self::load_str(&text)
+            .map_err(|e| format!("catalog {path}: {e}"))
+    }
+
+    /// Derive and intern a frequency-capped variant of `base`, named
+    /// `"<base>@<cap>"` (cap in shortest round-trip form — "0.8",
+    /// "0.805" — so distinct caps never collide): compute rate scales
+    /// by `cap` (the clock slows), fabric/HBM rates stay, and the
+    /// clock-sensitive power coefficients (`p_base`, `p_comp`) scale
+    /// by the base spec's [`HwSpec::power_scale`] at `cap`. A cap of
+    /// 1.0 returns `base` itself. Re-deriving the same cap interns to
+    /// the same id.
+    pub fn with_freq_cap(base: HwId, cap: f64) -> Result<HwId, String> {
+        if !(cap > 0.0 && cap <= 1.0) {
+            return Err(format!(
+                "frequency cap {cap} outside (0, 1]"));
+        }
+        if cap == 1.0 {
+            return Ok(base);
+        }
+        let b = base.spec();
+        if b.derived {
+            // The curve's knots are relative to the *nominal* clock;
+            // compounding caps would mis-scale power (pw(a)·pw(b) ≠
+            // pw(a·b) in general). Derive from the primary entry.
+            return Err(format!(
+                "'{}' is already frequency-capped; derive the combined \
+                 cap from its primary spec instead", b.name));
+        }
+        let pw = b.power_scale(cap);
+        let name = format!("{}@{:?}", b.name, cap);
+        let gpu = GpuSpec {
+            name: leaked_name(&name),
+            peak_flops: b.gpu.peak_flops * cap,
+            hbm_bw: b.gpu.hbm_bw,
+            nvlink_bw: b.gpu.nvlink_bw,
+            ib_bw: b.gpu.ib_bw,
+            mem_bytes: b.gpu.mem_bytes,
+            kernel_base_mfu: b.gpu.kernel_base_mfu,
+            launch_overhead_s: b.gpu.launch_overhead_s,
+            p_base: b.gpu.p_base * pw,
+            p_comp: b.gpu.p_comp * pw,
+            p_comm: b.gpu.p_comm,
+            tdp: b.gpu.tdp,
+        };
+        Self::register(HwSpec {
+            name,
+            gpus_per_node: b.gpus_per_node,
+            gpu,
+            freq_curve: b.freq_curve.clone(),
+            derived: true,
+        })
+    }
+}
+
+fn spec_from_doc(doc: &toml::Document, section: &str)
+    -> Result<HwSpec, String>
+{
+    for key in doc.keys(section) {
+        if !KNOWN_KEYS.contains(&key) {
+            return Err(format!(
+                "unknown key '{key}' in [{section}] (known: {})",
+                KNOWN_KEYS.join(", ")));
+        }
+    }
+    let num = |key: &str| -> Result<f64, String> {
+        doc.get_float(section, key).ok_or_else(|| format!(
+            "[{section}] missing numeric key '{key}'"))
+    };
+    let gpus_per_node = doc
+        .get_int(section, "gpus_per_node")
+        .ok_or_else(|| format!(
+            "[{section}] missing integer key 'gpus_per_node'"))?;
+    if gpus_per_node < 1 {
+        return Err(format!(
+            "[{section}] gpus_per_node must be >= 1, \
+             got {gpus_per_node}"));
+    }
+    let freq_curve = match doc.get(section, "freq_curve") {
+        None => None,
+        Some(toml::Value::Str(s)) => Some(parse_freq_curve(s)
+            .map_err(|e| format!("[{section}] freq_curve: {e}"))?),
+        Some(_) => {
+            return Err(format!(
+                "[{section}] freq_curve must be a \"f:p,f:p,…\" string"));
+        }
+    };
+    let gpu = GpuSpec {
+        name: leaked_name(section),
+        peak_flops: num("peak_flops")?,
+        hbm_bw: num("hbm_bw")?,
+        nvlink_bw: num("nvlink_bw")?,
+        ib_bw: num("ib_bw")?,
+        mem_bytes: num("mem_bytes")?,
+        kernel_base_mfu: num("kernel_base_mfu")?,
+        launch_overhead_s: num("launch_overhead_s")?,
+        p_base: num("p_base")?,
+        p_comp: num("p_comp")?,
+        p_comm: num("p_comm")?,
+        tdp: num("tdp")?,
+    };
+    Ok(HwSpec {
+        name: section.to_string(),
+        gpus_per_node: gpus_per_node as usize,
+        gpu,
+        freq_curve,
+        derived: false,
+    })
+}
+
+/// `&'static` name for a candidate spec: reuse the already-leaked
+/// name of an existing same-name entry so repeated catalog loads and
+/// cap derivations intern without leaking a string per call; a leak
+/// happens only for genuinely new names (whose spec is then leaked
+/// alongside it anyway).
+fn leaked_name(candidate: &str) -> &'static str {
+    {
+        let st = state().read().unwrap();
+        if let Some(&i) =
+            st.by_name.get(&candidate.to_ascii_lowercase())
+        {
+            let existing = st.specs[i as usize];
+            if existing.gpu.name == candidate {
+                return existing.gpu.name;
+            }
+        }
+    }
+    Box::leak(candidate.to_string().into_boxed_str())
+}
+
+/// Parse a `"0.5:0.42,0.8:0.75,1.0:1.0"` knot list (the inverse of the
+/// `freq_curve` field in [`HwSpec::to_toml`]).
+fn parse_freq_curve(s: &str) -> Result<Vec<(f64, f64)>, String> {
+    let mut knots = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let Some((f, p)) = part.split_once(':') else {
+            return Err(format!(
+                "bad knot '{part}' (expected freq:power)"));
+        };
+        let f: f64 = f.trim().parse().map_err(|_| format!(
+            "bad frequency fraction '{}'", f.trim()))?;
+        let p: f64 = p.trim().parse().map_err(|_| format!(
+            "bad power fraction '{}'", p.trim()))?;
+        knots.push((f, p));
+    }
+    if knots.is_empty() {
+        return Err("empty curve".into());
+    }
+    Ok(knots)
+}
+
+fn validate(spec: &HwSpec) -> Result<(), String> {
+    let name = &spec.name;
+    if name.is_empty()
+        || name.chars().any(|c| {
+            c.is_whitespace()
+                || matches!(c, ',' | '[' | ']' | '"' | '=' | '#')
+        })
+    {
+        return Err(format!(
+            "bad hardware name '{name}' (must be non-empty, no \
+             whitespace, and none of , [ ] \" = #)"));
+    }
+    if spec.gpus_per_node == 0 {
+        return Err(format!("{name}: gpus_per_node must be >= 1"));
+    }
+    for (key, v) in [
+        ("peak_flops", spec.gpu.peak_flops),
+        ("hbm_bw", spec.gpu.hbm_bw),
+        ("nvlink_bw", spec.gpu.nvlink_bw),
+        ("ib_bw", spec.gpu.ib_bw),
+        ("mem_bytes", spec.gpu.mem_bytes),
+        ("kernel_base_mfu", spec.gpu.kernel_base_mfu),
+        ("launch_overhead_s", spec.gpu.launch_overhead_s),
+        ("p_base", spec.gpu.p_base),
+        ("tdp", spec.gpu.tdp),
+    ] {
+        if !(v.is_finite() && v > 0.0) {
+            return Err(format!(
+                "{name}: {key} must be a positive finite number, \
+                 got {v}"));
+        }
+    }
+    for (key, v) in [("p_comp", spec.gpu.p_comp),
+                     ("p_comm", spec.gpu.p_comm)] {
+        if !(v.is_finite() && v >= 0.0) {
+            return Err(format!(
+                "{name}: {key} must be a non-negative finite number, \
+                 got {v}"));
+        }
+    }
+    if spec.gpu.kernel_base_mfu > 1.0 {
+        return Err(format!(
+            "{name}: kernel_base_mfu must be in (0, 1], got {}",
+            spec.gpu.kernel_base_mfu));
+    }
+    if let Some(knots) = &spec.freq_curve {
+        if knots.is_empty() {
+            return Err(format!("{name}: freq_curve has no knots"));
+        }
+        let mut prev = 0.0;
+        for &(f, p) in knots {
+            if !(f > prev && f <= 1.0) {
+                return Err(format!(
+                    "{name}: freq_curve frequencies must be strictly \
+                     ascending in (0, 1], got {f} after {prev}"));
+            }
+            if !(p.is_finite() && p > 0.0) {
+                return Err(format!(
+                    "{name}: freq_curve power fraction must be \
+                     positive, got {p}"));
+            }
+            prev = f;
+        }
+        let &(last_f, last_p) = knots.last().unwrap();
+        if last_f != 1.0 || last_p != 1.0 {
+            return Err(format!(
+                "{name}: freq_curve must end at the 1.0:1.0 knot \
+                 (nominal clock, nominal power), ends at \
+                 {last_f}:{last_p}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_have_fixed_ids_and_names() {
+        assert_eq!(HwId::H100.spec().name, "H100");
+        assert_eq!(HwId::H100.to_string(), "H100");
+        assert_eq!(HwId::GB200.spec().gpus_per_node, 72);
+        assert_eq!(HwId::V100.spec().gpus_per_node, 8);
+        assert_eq!(HwId::H100.gpu().peak_flops, 990e12);
+        for id in HwId::ALL {
+            assert_eq!(Catalog::parse(&id.to_string()).unwrap(), id);
+            assert_eq!(
+                Catalog::parse(&id.to_string().to_lowercase()).unwrap(),
+                id);
+        }
+        assert!(Catalog::len() >= 4);
+    }
+
+    #[test]
+    fn parse_errors_enumerate_accepted_forms() {
+        let err = HwId::parse("tpu-v5").unwrap_err();
+        assert!(err.contains("unknown hardware 'tpu-v5'"), "{err}");
+        for name in ["v100", "a100", "h100", "gb200"] {
+            assert!(err.contains(name), "{err} missing {name}");
+        }
+    }
+
+    #[test]
+    fn register_interns_and_rejects_conflicts() {
+        let mk = |ib: f64| HwSpec {
+            name: "unit-intern".into(),
+            gpus_per_node: 8,
+            gpu: GpuSpec { name: "unit-intern", ib_bw: ib,
+                           ..specs::H100.clone() },
+            freq_curve: None,
+            derived: false,
+        };
+        let a = Catalog::register(mk(400e9)).unwrap();
+        let b = Catalog::register(mk(400e9)).unwrap();
+        assert_eq!(a, b, "identical re-registration must intern");
+        let err = Catalog::register(mk(800e9)).unwrap_err();
+        assert!(err.contains("already registered"), "{err}");
+        // Once registered, the name parses like a built-in.
+        assert_eq!(Catalog::parse("UNIT-INTERN").unwrap(), a);
+        assert_eq!(a.spec().gpu.ib_bw, 400e9);
+    }
+
+    #[test]
+    fn load_str_registers_sections_and_rejects_typos() {
+        let text = "\
+[unit-h200]
+gpus_per_node = 8
+peak_flops = 990e12
+hbm_bw = 4.8e12
+nvlink_bw = 900e9
+ib_bw = 400e9
+mem_bytes = 141e9
+kernel_base_mfu = 0.54
+launch_overhead_s = 5e-6
+p_base = 561.0
+p_comp = 89.0
+p_comm = 40.0
+tdp = 700.0
+";
+        let ids = Catalog::load_str(text).unwrap();
+        assert_eq!(ids.len(), 1);
+        let spec = ids[0].spec();
+        assert_eq!(spec.name, "unit-h200");
+        assert_eq!(spec.gpu.hbm_bw, 4.8e12);
+        assert_eq!(HwId::parse("unit-h200").unwrap(), ids[0]);
+
+        let typo = text.replace("tdp", "tpd");
+        let err = Catalog::load_str(&typo).unwrap_err();
+        assert!(err.contains("unknown key 'tpd'"), "{err}");
+
+        let missing = text.replace("hbm_bw = 4.8e12\n", "");
+        let err = Catalog::load_str(&missing).unwrap_err();
+        assert!(err.contains("missing numeric key 'hbm_bw'"), "{err}");
+
+        let stray = format!("loose = 1\n{text}");
+        let err = Catalog::load_str(&stray).unwrap_err();
+        assert!(err.contains("outside any hardware section"), "{err}");
+
+        assert!(Catalog::load_str("# empty\n").is_err());
+    }
+
+    #[test]
+    fn builtin_toml_roundtrip_is_bitwise() {
+        for id in HwId::ALL {
+            let spec = id.spec();
+            let reloaded = Catalog::load_str(&spec.to_toml()).unwrap();
+            assert_eq!(reloaded, vec![id],
+                       "round-trip must intern to the same id");
+        }
+    }
+
+    #[test]
+    fn freq_curve_parses_validates_and_interpolates() {
+        let knots =
+            parse_freq_curve("0.5:0.42, 0.8:0.75, 1.0:1.0").unwrap();
+        assert_eq!(knots, vec![(0.5, 0.42), (0.8, 0.75), (1.0, 1.0)]);
+        assert!(parse_freq_curve("0.5-0.42").is_err());
+        assert!(parse_freq_curve("").is_err());
+
+        let spec = HwSpec {
+            name: "unit-curve".into(),
+            gpus_per_node: 8,
+            gpu: GpuSpec { name: "unit-curve", ..specs::H100.clone() },
+            freq_curve: Some(knots),
+            derived: false,
+        };
+        assert_eq!(spec.power_scale(1.0), 1.0);
+        assert_eq!(spec.power_scale(0.8), 0.75);
+        // Linear between knots, flat below the first.
+        let mid = spec.power_scale(0.65);
+        assert!((mid - 0.585).abs() < 1e-12, "{mid}");
+        assert_eq!(spec.power_scale(0.3), 0.42);
+
+        // Default curve: 0.3 + 0.7 f³, pinned at the endpoints.
+        let dflt = HwSpec { freq_curve: None, ..spec.clone() };
+        assert_eq!(dflt.power_scale(1.0), 1.0);
+        assert!((dflt.power_scale(0.5) - (0.3 + 0.7 * 0.125)).abs()
+                < 1e-12);
+
+        // Validation: must end at 1.0:1.0, ascending frequencies.
+        let bad_end = HwSpec {
+            freq_curve: Some(vec![(0.5, 0.4), (0.9, 0.9)]),
+            ..spec.clone()
+        };
+        assert!(Catalog::register(bad_end).is_err());
+        let not_ascending = HwSpec {
+            freq_curve: Some(vec![(0.8, 0.7), (0.5, 0.4), (1.0, 1.0)]),
+            ..spec.clone()
+        };
+        assert!(Catalog::register(not_ascending).is_err());
+    }
+
+    #[test]
+    fn with_freq_cap_derives_scaled_interned_specs() {
+        let capped = Catalog::with_freq_cap(HwId::H100, 0.8).unwrap();
+        assert_ne!(capped, HwId::H100);
+        let b = HwId::H100.spec();
+        let c = capped.spec();
+        assert_eq!(c.name, "H100@0.8");
+        assert!(c.derived);
+        assert_eq!(c.gpus_per_node, b.gpus_per_node);
+        assert_eq!(c.gpu.peak_flops, b.gpu.peak_flops * 0.8);
+        assert_eq!(c.gpu.hbm_bw, b.gpu.hbm_bw);
+        assert_eq!(c.gpu.ib_bw, b.gpu.ib_bw);
+        let pw = b.power_scale(0.8);
+        assert_eq!(c.gpu.p_base, b.gpu.p_base * pw);
+        assert_eq!(c.gpu.p_comp, b.gpu.p_comp * pw);
+        assert_eq!(c.gpu.p_comm, b.gpu.p_comm);
+        // Re-derivation interns; cap 1.0 is the base itself.
+        assert_eq!(Catalog::with_freq_cap(HwId::H100, 0.8).unwrap(),
+                   capped);
+        assert_eq!(Catalog::with_freq_cap(HwId::H100, 1.0).unwrap(),
+                   HwId::H100);
+        assert!(Catalog::with_freq_cap(HwId::H100, 0.0).is_err());
+        assert!(Catalog::with_freq_cap(HwId::H100, 1.5).is_err());
+        // Derived specs parse by name but stay out of primary_ids.
+        assert_eq!(Catalog::parse("h100@0.8").unwrap(), capped);
+        assert!(!Catalog::primary_ids().contains(&capped));
+        assert!(Catalog::ids().contains(&capped));
+        // Names use the cap's shortest round-trip form, so
+        // fine-grained sweeps never collide.
+        let a = Catalog::with_freq_cap(HwId::H100, 0.801).unwrap();
+        let b2 = Catalog::with_freq_cap(HwId::H100, 0.804).unwrap();
+        assert_ne!(a, b2);
+        assert_eq!(a.spec().name, "H100@0.801");
+        // Caps compose on the nominal clock only: deriving from an
+        // already-capped spec would mis-scale power, so it's rejected.
+        let err = Catalog::with_freq_cap(capped, 0.9).unwrap_err();
+        assert!(err.contains("already frequency-capped"), "{err}");
+        // Reloading a derived spec's own TOML interns to the same id
+        // (the `derived` flag is classification, not value identity).
+        assert_eq!(Catalog::load_str(&capped.spec().to_toml()).unwrap(),
+                   vec![capped]);
+        assert!(!Catalog::primary_ids().contains(&capped));
+    }
+
+    #[test]
+    fn duplicate_catalog_sections_rejected() {
+        let one = "\
+[unit-dup]
+gpus_per_node = 8
+peak_flops = 990e12
+hbm_bw = 3.35e12
+nvlink_bw = 900e9
+ib_bw = 400e9
+mem_bytes = 80e9
+kernel_base_mfu = 0.52
+launch_overhead_s = 5e-6
+p_base = 561.0
+p_comp = 89.0
+p_comm = 40.0
+tdp = 700.0
+";
+        let text = format!("{one}\n{}", one.replace("80e9", "96e9"));
+        let err = Catalog::load_str(&text).unwrap_err();
+        assert!(err.contains("duplicate hardware section [unit-dup]"),
+                "{err}");
+        // With a trailing comment on the header, too.
+        let text = format!(
+            "{one}\n{}",
+            one.replace("[unit-dup]", "[unit-dup]  # second copy"));
+        assert!(Catalog::load_str(&text).is_err());
+    }
+
+    #[test]
+    fn hand_built_empty_curve_does_not_panic() {
+        let spec = HwSpec {
+            name: "unit-empty-curve".into(),
+            gpus_per_node: 8,
+            gpu: GpuSpec { name: "unit-empty-curve",
+                           ..specs::H100.clone() },
+            freq_curve: Some(Vec::new()),
+            derived: false,
+        };
+        // Falls back to the default curve instead of indexing [0]...
+        assert_eq!(spec.power_scale(1.0), 1.0);
+        // ...and registration still rejects the empty curve.
+        assert!(Catalog::register(spec).is_err());
+        // '#' would be truncated as a comment by the TOML layer, so
+        // names containing it are rejected up front.
+        let hashed = HwSpec {
+            name: "unit#1".into(),
+            gpus_per_node: 8,
+            gpu: GpuSpec { name: "unit#1", ..specs::H100.clone() },
+            freq_curve: None,
+            derived: false,
+        };
+        assert!(Catalog::register(hashed).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let base = HwSpec {
+            name: "unit-valid".into(),
+            gpus_per_node: 8,
+            gpu: GpuSpec { name: "unit-valid", ..specs::H100.clone() },
+            freq_curve: None,
+            derived: false,
+        };
+        let bad_name = HwSpec { name: "two words".into(),
+                                ..base.clone() };
+        assert!(Catalog::register(bad_name).is_err());
+        let no_gpus = HwSpec { gpus_per_node: 0, ..base.clone() };
+        assert!(Catalog::register(no_gpus).is_err());
+        let neg = HwSpec {
+            gpu: GpuSpec { peak_flops: -1.0, ..base.gpu.clone() },
+            ..base.clone()
+        };
+        assert!(Catalog::register(neg).is_err());
+        let mfu = HwSpec {
+            gpu: GpuSpec { kernel_base_mfu: 1.5, ..base.gpu.clone() },
+            ..base.clone()
+        };
+        assert!(Catalog::register(mfu).is_err());
+    }
+}

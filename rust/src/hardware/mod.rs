@@ -1,8 +1,20 @@
-//! Hardware generation specifications — Table 1 of the paper, verbatim,
-//! plus the power/efficiency characteristics calibrated from the paper's
-//! measurements (§4.1: 658 W busy → 620 W communication-bound; §4.4:
-//! A100→H100 compute grows 3.2× while fabric grows 1.5–2×).
+//! Hardware layer: the pluggable, data-driven catalog of machine specs
+//! ([`Catalog`] / [`HwSpec`] / interned [`HwId`] handles) seeded with
+//! the paper's Table 1 generations, plus the power/efficiency
+//! characteristics calibrated from the paper's measurements (§4.1:
+//! 658 W busy → 620 W communication-bound; §4.4: A100→H100 compute
+//! grows 3.2× while fabric grows 1.5–2×). Load additional machines
+//! from TOML with `dtsim --catalog hw.toml` or [`Catalog::load_file`];
+//! derive frequency-capped variants with [`Catalog::with_freq_cap`].
+//! Schema and semantics: `docs/hardware.md`.
 
+pub mod catalog;
 pub mod specs;
 
-pub use specs::{Generation, GpuSpec, NodeSpec};
+pub use catalog::{Catalog, HwId, HwSpec};
+pub use specs::{GpuSpec, NodeSpec};
+
+/// Historical name for [`HwId`]: the hardware axis used to be a closed
+/// 4-variant enum. Kept as an alias so `Generation::H100`-style code
+/// keeps working; new code should say [`HwId`].
+pub type Generation = HwId;

@@ -1,69 +1,14 @@
-//! NVIDIA DGX node specifications by generation (paper Table 1) and the
-//! derived efficiency/power coefficients used by the simulator.
+//! Per-GPU datasheet numbers and derived efficiency/power coefficients
+//! (paper Table 1), plus the node-shape type. The four paper machines
+//! below seed the [`Catalog`](super::Catalog) as built-ins; arbitrary
+//! machines register through the catalog (`dtsim --catalog hw.toml`)
+//! and are addressed by the same interned [`HwId`](super::HwId)
+//! handles.
 
-use std::fmt;
-
-/// GPU hardware generation. `GB200` is the paper's §5 "future hardware"
-/// extrapolation (larger NVLink domains), included for the ablation
-/// benches; the paper's own experiments cover V100/A100/H100.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Generation {
-    V100,
-    A100,
-    H100,
-    GB200,
-}
-
-impl Generation {
-    pub const ALL: [Generation; 4] =
-        [Generation::V100, Generation::A100, Generation::H100,
-         Generation::GB200];
-
-    /// Generations evaluated in the paper.
-    pub const PAPER: [Generation; 3] =
-        [Generation::V100, Generation::A100, Generation::H100];
-
-    pub fn parse(s: &str) -> Option<Generation> {
-        match s.to_ascii_lowercase().as_str() {
-            "v100" => Some(Generation::V100),
-            "a100" => Some(Generation::A100),
-            "h100" => Some(Generation::H100),
-            "gb200" => Some(Generation::GB200),
-            _ => None,
-        }
-    }
-
-    pub fn spec(self) -> &'static GpuSpec {
-        match self {
-            Generation::V100 => &V100,
-            Generation::A100 => &A100,
-            Generation::H100 => &H100,
-            Generation::GB200 => &GB200,
-        }
-    }
-
-    pub fn node(self) -> NodeSpec {
-        NodeSpec {
-            gpus_per_node: if self == Generation::GB200 { 72 } else { 8 },
-            gpu: self,
-        }
-    }
-}
-
-impl fmt::Display for Generation {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
-            Generation::V100 => "V100",
-            Generation::A100 => "A100",
-            Generation::H100 => "H100",
-            Generation::GB200 => "GB200",
-        };
-        write!(f, "{s}")
-    }
-}
+use super::catalog::HwId;
 
 /// Per-GPU datasheet numbers + simulator coefficients.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
     pub name: &'static str,
     /// Dense tensor-core FLOPS in the training dtype (bf16; fp16 on V100).
@@ -101,16 +46,18 @@ impl GpuSpec {
     }
 }
 
-/// DGX node composition.
+/// Node composition: `gpus_per_node` GPUs in one NVLink domain. Always
+/// the canonical shape for its hardware (built from [`HwId::node`]) —
+/// the collective cost memo keys by `gpu` alone and asserts this.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeSpec {
     pub gpus_per_node: usize,
-    pub gpu: Generation,
+    pub gpu: HwId,
 }
 
 impl NodeSpec {
     pub fn spec(&self) -> &'static GpuSpec {
-        self.gpu.spec()
+        self.gpu.gpu()
     }
 }
 
@@ -202,6 +149,16 @@ mod tests {
     }
 
     #[test]
+    fn catalog_builtins_reference_these_statics() {
+        // The interned built-ins must be value-identical to Table 1 —
+        // the `repro all` byte-identity guarantee rests on this.
+        assert_eq!(*HwId::V100.gpu(), V100);
+        assert_eq!(*HwId::A100.gpu(), A100);
+        assert_eq!(*HwId::H100.gpu(), H100);
+        assert_eq!(*HwId::GB200.gpu(), GB200);
+    }
+
+    #[test]
     fn asymmetric_scaling_claim_holds() {
         // §4.4: compute grows >3x A100→H100 while NVLink grows 1.5x.
         let flops_ratio = H100.peak_flops / A100.peak_flops;
@@ -222,16 +179,17 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for g in Generation::ALL {
-            assert_eq!(Generation::parse(&g.to_string()), Some(g));
+        for g in HwId::ALL {
+            assert_eq!(HwId::parse(&g.to_string()), Ok(g));
         }
-        assert_eq!(Generation::parse("h100"), Some(Generation::H100));
-        assert_eq!(Generation::parse("nope"), None);
+        assert_eq!(HwId::parse("h100"), Ok(HwId::H100));
+        assert!(HwId::parse("nope").is_err());
     }
 
     #[test]
     fn node_shapes() {
-        assert_eq!(Generation::H100.node().gpus_per_node, 8);
-        assert_eq!(Generation::GB200.node().gpus_per_node, 72);
+        assert_eq!(HwId::H100.node().gpus_per_node, 8);
+        assert_eq!(HwId::GB200.node().gpus_per_node, 72);
+        assert_eq!(HwId::H100.node().spec().peak_flops, 990e12);
     }
 }

@@ -6,23 +6,32 @@
 //! * A **cluster/collective/training simulator** (`hardware`, `topology`,
 //!   `collectives`, `model`, `parallelism`, `memory`, `power`, `sim`,
 //!   `metrics`, `planner`) that models one optimizer step of FSDP +
-//!   tensor/pipeline/context-parallel training on DGX clusters and
-//!   derives the paper's metrics (throughput, MFU, exposed
-//!   communication, power). The pipeline **schedule** is a first-class
-//!   axis ([`sim::Schedule`]): plain 1F1B or interleaved-1F1B with `v`
-//!   virtual chunks per device, and the sharding axis
-//!   ([`sim::Sharding`]) spans FSDP, DDP, HSDP, and full ZeRO-3 with
-//!   forward resharding — the cost model behind each variant is
-//!   derived in `docs/scheduling.md`.
+//!   tensor/pipeline/context-parallel training and derives the paper's
+//!   metrics (throughput, MFU, exposed communication, power). The
+//!   **hardware is data, not an enum**: every machine is a
+//!   [`hardware::HwSpec`] in the pluggable [`hardware::Catalog`] —
+//!   the paper's V100/A100/H100/GB200 ship as built-ins, arbitrary
+//!   machines load from TOML (`dtsim --catalog hw.toml`), and
+//!   frequency-capped variants derive via
+//!   [`hardware::Catalog::with_freq_cap`] — all addressed by interned
+//!   `Copy + Hash` [`hardware::HwId`] handles so the cost caches keep
+//!   their key-by-value performance (`docs/hardware.md`). The pipeline
+//!   **schedule** is a first-class axis ([`sim::Schedule`]): plain
+//!   1F1B or interleaved-1F1B with `v` virtual chunks per device, and
+//!   the sharding axis ([`sim::Sharding`]) spans FSDP, DDP, HSDP, and
+//!   full ZeRO-3 with forward resharding — the cost model behind each
+//!   variant is derived in `docs/scheduling.md`.
 //! * The **Study experiment API** (`study`, `report`) — the crate's
 //!   primary experiment surface. A [`study::Study`] declares a sweep
-//!   grid (arch × generation × nodes × plan × sharding × batch shape ×
+//!   grid (arch × hardware × nodes × plan × sharding × batch shape ×
 //!   seq len) plus feasibility constraints; a [`study::StudyRunner`]
 //!   expands it, deduplicates repeated configurations by config hash,
 //!   and simulates the rest across scoped worker threads; registered
-//!   [`study::Scenario`]s (every paper figure, plus user-defined ones)
-//!   render results into tables emitted through CSV/JSON/console
-//!   [`study::Sink`]s. `dtsim repro` and `dtsim study` both run on it.
+//!   [`study::Scenario`]s (every paper figure, plus user-defined ones
+//!   like `madmax` design-space exploration and the `powersweep`
+//!   frequency study) render results into tables emitted through
+//!   CSV/JSON/console [`study::Sink`]s. `dtsim repro` and
+//!   `dtsim study` both run on it.
 //! * A **real three-layer training stack** (`runtime`, `coordinator`)
 //!   that loads AOT-compiled JAX/Pallas HLO artifacts through PJRT and
 //!   runs actual data-parallel training with a Rust ring all-reduce.
@@ -100,8 +109,8 @@
 //!   [`sim::simulate_in`] / [`metrics::evaluate_in`] to share it.
 //!   Results land in pre-sized lock-free slots, not per-point mutexes.
 //! * **Collective cost memo** — [`collectives::CostCache`] memoizes
-//!   `collective_time` keyed by (op, payload bits, GPU generation,
-//!   group placement), so neighboring grid points stop re-deriving
+//!   `collective_time` keyed by (op, payload bits, interned hardware
+//!   id, group placement), so neighboring grid points stop re-deriving
 //!   identical ring/tree costs. Cached entries are stored verbatim:
 //!   bit-identical to the uncached call.
 //!

@@ -18,7 +18,7 @@ use anyhow::{anyhow, bail, Result};
 use dtsim::collectives::{collective_time, Collective};
 use dtsim::config::{scenario, RunConfig};
 use dtsim::coordinator::{DistTrainer, TrainOptions};
-use dtsim::hardware::Generation;
+use dtsim::hardware::{Catalog, HwId};
 use dtsim::metrics;
 use dtsim::model;
 use dtsim::parallelism::ParallelPlan;
@@ -37,18 +37,24 @@ use dtsim::util::args::Args;
 const USAGE: &str = "\
 dtsim — Hardware Scaling Trends & Diminishing Returns reproduction
 
+Every subcommand accepts --catalog hw.toml to load extra hardware
+specs; loaded names work anywhere a --gen does (see docs/hardware.md).
+
 USAGE:
-  dtsim simulate   [--arch 7b] [--gen h100] [--nodes 32] [--tp 1]
-                   [--pp 1] [--cp 1] [--gbs 512] [--mbs 2] [--seq 4096]
+  dtsim simulate   [--arch 7b] [--gen h100|<catalog>] [--nodes 32 |
+                   --gpus 256] [--tp 1] [--pp 1] [--cp 1] [--gbs 512]
+                   [--mbs 2] [--seq 4096]
                    [--sharding fsdp|ddp|hsdp:G|zero3] [--ddp]
                    [--schedule 1f1b|interleaved:V] [--config run.toml]
   dtsim sweep      [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512]
                    [--seq 4096] [--cp] [--top 15]
                    [--sharding fsdp] [--schedule 1f1b]
   dtsim study      <name> [--out reports] [--threads N] [--json]
+                   [--catalog hw.toml]   # e.g. madmax, powersweep
   dtsim study      --list
-  dtsim study      --grid [--arch 7b,13b] [--gen h100,a100]
-                   [--nodes 4,32] [--plans sweep|sweep-cp|dp|tp2,tp4pp2]
+  dtsim study      --grid [--arch 7b,13b] [--gen h100,a100,<catalog>]
+                   [--nodes 4,32 | --gpus 32,256]
+                   [--plans sweep|sweep-cp|dp|tp2,tp4pp2]
                    [--gbs 512,1024 | --lbs 2] [--mbs divisors|1,2,4]
                    [--seq 4096] [--sharding fsdp,ddp,hsdp:8,zero3]
                    [--schedule 1f1b,interleaved:2]
@@ -67,6 +73,14 @@ USAGE:
 
 fn main() {
     let args = Args::from_env();
+    // Load extra hardware specs before any --gen / study parsing, so
+    // catalog names work everywhere built-ins do.
+    if let Some(path) = args.get("catalog") {
+        if let Err(e) = Catalog::load_file(path) {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let result = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
@@ -99,9 +113,16 @@ fn sim_config_from(args: &Args) -> Result<SimConfig> {
     }
     let arch = *model::by_name(&args.get_or("arch", "7b"))
         .ok_or_else(|| anyhow!("unknown --arch"))?;
-    let gen = Generation::parse(&args.get_or("gen", "h100"))
-        .ok_or_else(|| anyhow!("unknown --gen"))?;
-    let cluster = Cluster::new(gen, args.usize_or("nodes", 32));
+    let gen = parse_hw(&args.get_or("gen", "h100"))?;
+    let cluster = if args.has("gpus") {
+        if args.has("nodes") {
+            bail!("give --nodes or --gpus, not both");
+        }
+        Cluster::with_gpus(gen, args.usize_or("gpus", 0))
+            .map_err(|e| anyhow!("--gpus: {e}"))?
+    } else {
+        Cluster::new(gen, args.usize_or("nodes", 32))
+    };
     let tp = args.usize_or("tp", 1);
     let pp = args.usize_or("pp", 1);
     let cp = args.usize_or("cp", 1);
@@ -165,8 +186,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let arch = *model::by_name(&args.get_or("arch", "7b"))
         .ok_or_else(|| anyhow!("unknown --arch"))?;
-    let gen = Generation::parse(&args.get_or("gen", "h100"))
-        .ok_or_else(|| anyhow!("unknown --gen"))?;
+    let gen = parse_hw(&args.get_or("gen", "h100"))?;
     let cluster = Cluster::new(gen, args.usize_or("nodes", 32));
     let req = SweepRequest {
         arch,
@@ -287,8 +307,10 @@ fn study_from_args(args: &Args) -> Result<Study> {
     }
     let mut gens = Vec::new();
     for name in list("gen", "h100") {
-        gens.push(Generation::parse(&name)
-            .ok_or_else(|| anyhow!("unknown --gen '{name}'"))?);
+        gens.push(parse_hw(&name)?);
+    }
+    if gens.is_empty() {
+        return Err(anyhow!("--gen names no hardware"));
     }
     let mut shardings = Vec::new();
     for name in list("sharding", "fsdp") {
@@ -315,11 +337,39 @@ fn study_from_args(args: &Args) -> Result<Study> {
         ),
     };
 
+    // Cluster sizes: --nodes, or --gpus (each count must be a multiple
+    // of the hardware's NVLink-domain size; the error reports the
+    // offending axis value instead of aborting).
+    let nodes = if args.has("gpus") {
+        if args.has("nodes") {
+            return Err(anyhow!("give --nodes or --gpus, not both"));
+        }
+        let domains: std::collections::BTreeSet<usize> = gens
+            .iter()
+            .map(|hw| hw.spec().gpus_per_node)
+            .collect();
+        if domains.len() > 1 {
+            return Err(anyhow!(
+                "--gpus needs one NVLink-domain size, but --gen mixes \
+                 {:?}; use --nodes instead", domains));
+        }
+        let mut nodes = Vec::new();
+        for gpus in usizes("gpus", "256")? {
+            nodes.push(
+                Cluster::with_gpus(gens[0], gpus)
+                    .map_err(|e| anyhow!("--gpus: {e}"))?
+                    .nodes);
+        }
+        nodes
+    } else {
+        usizes("nodes", "32")?
+    };
+
     let mut b = Study::builder(&args.get_or("name", "grid"))
         .title("ad-hoc study grid")
         .archs(archs)
-        .generations(gens)
-        .nodes(usizes("nodes", "32")?)
+        .hardware(gens)
+        .nodes(nodes)
         .plans(plans)
         .seq_lens(usizes("seq", "4096")?)
         .shardings(shardings)
@@ -339,6 +389,12 @@ fn study_from_args(args: &Args) -> Result<Study> {
         b = b.memory_cap(cap);
     }
     b.try_build().map_err(anyhow::Error::msg)
+}
+
+/// Hardware-name parsing for `--gen`: built-ins plus anything loaded
+/// via `--catalog`; the error enumerates every accepted form.
+fn parse_hw(s: &str) -> Result<HwId> {
+    HwId::parse(s).map_err(|e| anyhow!("--gen: {e}"))
 }
 
 fn parse_sharding(s: &str) -> Result<Sharding> {
@@ -455,6 +511,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let (sched_evaluated, _) = sched_runner.stats();
     let sched_cps = sched_evaluated as f64 / sched_dt;
 
+    // Hardware-axis companion grid (every catalog built-in, incl. the
+    // 72-GPU GB200 domain) so the interned-HwId cost-cache keying is
+    // tracked in the same artifact — included in --quick too.
+    let hw_study = dtsim::study::bench_pinned_hw_study();
+    let hw_points = hw_study.expand();
+    let mut hw_runner = StudyRunner::new(threads);
+    let t0 = Instant::now();
+    hw_runner.run(&hw_study);
+    let hw_dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let (hw_evaluated, _) = hw_runner.stats();
+    let hw_cps = hw_evaluated as f64 / hw_dt;
+    let (hw_hits, hw_misses) = hw_runner.cost_cache_stats();
+    let hw_hit_rate = if hw_hits + hw_misses > 0 {
+        hw_hits as f64 / (hw_hits + hw_misses) as f64
+    } else {
+        0.0
+    };
+
     let queries = cost_hits + cost_misses;
     let hit_rate = if queries > 0 {
         cost_hits as f64 / queries as f64
@@ -468,9 +542,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"collective_cache_hit_rate\": {:.4},\n  \
          \"sched_grid_points\": {},\n  \"sched_simulated\": {},\n  \
          \"sched_configs_per_s\": {:.1},\n  \
+         \"hw_grid_points\": {},\n  \"hw_simulated\": {},\n  \
+         \"hw_configs_per_s\": {:.1},\n  \
+         \"hw_cache_hit_rate\": {:.4},\n  \
          \"peak_rss_bytes\": {},\n  \"threads\": {},\n  \"reps\": {}\n}}\n",
         study.name, points.len(), evaluated, best_cps, warm_ms, hit_rate,
         sched_points.len(), sched_evaluated, sched_cps,
+        hw_points.len(), hw_evaluated, hw_cps, hw_hit_rate,
         peak_rss_bytes(), threads, reps);
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
@@ -498,8 +576,7 @@ fn peak_rss_bytes() -> u64 {
 }
 
 fn cmd_collectives(args: &Args) -> Result<()> {
-    let gen = Generation::parse(&args.get_or("gen", "h100"))
-        .ok_or_else(|| anyhow!("unknown --gen"))?;
+    let gen = parse_hw(&args.get_or("gen", "h100"))?;
     let op = match args.get_or("op", "allgather").as_str() {
         "allreduce" => Collective::AllReduce,
         "allgather" => Collective::AllGather,
@@ -633,6 +710,49 @@ mod tests {
         let cfg = sim_config_from(
             &parse("simulate --nodes 2 --sharding ddp --ddp")).unwrap();
         assert_eq!(cfg.sharding, Sharding::Ddp);
+    }
+
+    #[test]
+    fn gen_errors_enumerate_hardware_names() {
+        let err = parse_hw("h900").unwrap_err().to_string();
+        assert!(err.contains("--gen"), "{err}");
+        assert!(err.contains("unknown hardware 'h900'"), "{err}");
+        for name in ["v100", "a100", "h100", "gb200"] {
+            assert!(err.contains(name), "{err} missing {name}");
+        }
+    }
+
+    #[test]
+    fn gpus_flag_sizes_the_cluster_or_reports_the_offender() {
+        let parse = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        let cfg = sim_config_from(
+            &parse("simulate --gpus 64 --gbs 128")).unwrap();
+        assert_eq!(cfg.cluster.nodes, 8);
+        // Partial node: error names the offending count, no panic.
+        let err = sim_config_from(&parse("simulate --gpus 100"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("100"), "{err}");
+        assert!(sim_config_from(
+            &parse("simulate --gpus 64 --nodes 8")).is_err());
+
+        // The study grid maps --gpus through the same boundary.
+        let study = study_from_args(&parse(
+            "study --grid --gpus 16,32 --plans dp --gbs 32 --mbs 1"))
+            .unwrap();
+        let nodes: Vec<usize> =
+            study.expand().iter().map(|p| p.cfg.cluster.nodes).collect();
+        assert_eq!(nodes, vec![2, 4]);
+        let err = study_from_args(&parse(
+            "study --grid --gpus 100 --plans dp"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("100"), "{err}");
+        assert!(study_from_args(&parse(
+            "study --grid --gen h100,gb200 --gpus 144 --plans dp"))
+            .is_err(), "mixed domain sizes cannot share --gpus");
     }
 
     #[test]

@@ -70,7 +70,7 @@ impl SweepRequest {
     fn study(&self, plans: PlanAxis) -> Study {
         Study::builder("planner-sweep")
             .arch(self.arch)
-            .generation(self.cluster.node.gpu)
+            .hardware([self.cluster.node.gpu])
             .nodes([self.cluster.nodes])
             .plans(plans)
             .global_batches([self.global_batch])

@@ -7,7 +7,7 @@
 //! comm-stream utilization with coefficients calibrated per generation
 //! (see `hardware::specs`), and derive the paper's efficiency metrics.
 
-use crate::hardware::GpuSpec;
+use crate::hardware::{GpuSpec, HwSpec};
 
 /// Utilization of one device over an iteration, as busy-time fractions.
 #[derive(Debug, Clone, Copy)]
@@ -36,6 +36,23 @@ pub fn gpu_power(spec: &GpuSpec, u: Utilization) -> f64 {
 /// Whole-cluster power in watts (homogeneous utilization).
 pub fn cluster_power(spec: &GpuSpec, u: Utilization, world: usize) -> f64 {
     gpu_power(spec, u) * world as f64
+}
+
+/// Power draw with the clock capped at fraction `f` of nominal, using
+/// the catalog spec's frequency-throttle curve: the clock-sensitive
+/// coefficients (`p_base`, `p_comp`) scale by the curve's
+/// [`power_scale`](HwSpec::power_scale); the comm coefficient
+/// (NIC/NVSwitch draw) does not follow the core clock.
+///
+/// [`Catalog::with_freq_cap`](crate::hardware::Catalog::with_freq_cap)
+/// bakes the identical scaling into a derived spec, so
+/// `gpu_power(capped.gpu(), u)` is bit-identical to
+/// `gpu_power_capped(base.spec(), u, f)` — tested below.
+pub fn gpu_power_capped(hw: &HwSpec, u: Utilization, f: f64) -> f64 {
+    let pw = hw.power_scale(f);
+    let u = u.clamped();
+    hw.gpu.p_base * pw + hw.gpu.p_comp * pw * u.compute
+        + hw.gpu.p_comm * u.comm
 }
 
 /// Paper Figure 1/3 metric: words-per-second per watt.
@@ -86,6 +103,47 @@ mod tests {
         let p1 = cluster_power(&H100, u, 128);
         let p2 = cluster_power(&H100, u, 2048);
         assert!((p2 / p1 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capped_power_matches_derived_catalog_spec_bitwise() {
+        use crate::hardware::{Catalog, HwId};
+        let u = Utilization { compute: 0.9, comm: 0.4 };
+        for cap in [0.5, 0.7, 0.85] {
+            let capped = Catalog::with_freq_cap(HwId::H100, cap).unwrap();
+            let direct = gpu_power(capped.gpu(), u);
+            let via_curve = gpu_power_capped(HwId::H100.spec(), u, cap);
+            assert_eq!(direct.to_bits(), via_curve.to_bits(),
+                       "cap {cap}: {direct} vs {via_curve}");
+        }
+        // Cap 1.0 is the base spec exactly.
+        let full = gpu_power_capped(
+            HwId::H100.spec(), u, 1.0);
+        assert_eq!(full.to_bits(), gpu_power(&H100, u).to_bits());
+    }
+
+    #[test]
+    fn capped_power_is_monotone_in_the_cap() {
+        use crate::hardware::HwId;
+        let u = Utilization { compute: 0.9, comm: 0.4 };
+        let mut prev = 0.0;
+        for cap in [0.4, 0.6, 0.8, 1.0] {
+            let p = gpu_power_capped(HwId::H100.spec(), u, cap);
+            assert!(p > prev, "{p} !> {prev} at cap {cap}");
+            prev = p;
+        }
+        // The comm coefficient does not follow the core clock.
+        let comm_only = |cap| gpu_power_capped(
+            HwId::H100.spec(),
+            Utilization { compute: 0.0, comm: 1.0 }, cap);
+        let comp_only = |cap| gpu_power_capped(
+            HwId::H100.spec(),
+            Utilization { compute: 1.0, comm: 0.0 }, cap);
+        let comm_drop = comm_only(1.0) - comm_only(0.5);
+        let comp_drop = comp_only(1.0) - comp_only(0.5);
+        assert!(comp_drop > comm_drop,
+                "compute draw must throttle harder: {comp_drop} vs \
+                 {comm_drop}");
     }
 
     #[test]

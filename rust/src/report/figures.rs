@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use crate::collectives::{busbw_gbps, collective_time, Collective};
-use crate::hardware::Generation;
+use crate::hardware::{Catalog, Generation, HwId};
 use crate::memory;
 use crate::model::{self, LLAMA_70B, LLAMA_7B};
 use crate::parallelism::ParallelPlan;
@@ -47,6 +47,8 @@ pub fn register_all(reg: &mut Registry) {
     reg.register(Box::new(Headline));
     reg.register(Box::new(Ablation));
     reg.register(Box::new(Sched));
+    reg.register(Box::new(MadMax));
+    reg.register(Box::new(PowerSweep));
 }
 
 /// Weak-scaling study: Llama-7B pure FSDP, local batch 2, seq 4096
@@ -100,7 +102,7 @@ impl Scenario for Table1 {
         let mut t = Table::new(
             "table1", self.title(), &["spec", "V100", "A100", "H100"]);
         let specs: Vec<_> = Generation::PAPER.iter()
-            .map(|g| g.spec()).collect();
+            .map(|g| g.gpu()).collect();
         let row = |name: &str,
                    f: &dyn Fn(&crate::hardware::GpuSpec) -> String|
             -> Vec<String>
@@ -745,6 +747,145 @@ impl Scenario for Sched {
                      Mfu, ExposedMs, MemGb])
             .with_chart(4);
         Ok(vec![t.with_chart(6), tb])
+    }
+}
+
+/// `madmax` — MAD-Max-style design-space exploration (Hsia et al.
+/// 2023): architecture × every primary catalog hardware entry ×
+/// parallelization plan at a fixed GPU budget, pruned-best plan per
+/// (arch, hardware). Loading a catalog (`--catalog hw.toml`) before
+/// running widens the hardware axis automatically.
+struct MadMax;
+
+impl MadMax {
+    /// 144 GPUs: the smallest budget both an 8-GPU DGX node and a
+    /// 72-GPU NVL72 rack tile exactly (lcm(8, 72) = 72; ×2 so DGX
+    /// machines span many nodes). Entries whose domain size does not
+    /// divide the budget are skipped, not errors.
+    const GPU_BUDGET: usize = 144;
+}
+
+impl Scenario for MadMax {
+    fn name(&self) -> &'static str { "madmax" }
+    fn title(&self) -> &'static str {
+        "Design-space exploration: best parallelization per \
+         (arch, hardware) at a 144-GPU budget (gbs 288)"
+    }
+    fn describe(&self) -> &'static str {
+        "sweep plans for every catalog hardware entry (incl. --catalog \
+         customs) x 1b/7b at 144 GPUs; pruned-best plan per combo"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "madmax", self.title(),
+            &["arch", "hardware", "nodes", "gpus", "best_plan", "mbs",
+              "global_wps", "mfu", "exposed_ms", "wps_per_watt",
+              "j_per_token", "mem_gb"]);
+        for hw in Catalog::primary_ids() {
+            let Ok(cluster) = Cluster::with_gpus(hw, Self::GPU_BUDGET)
+            else {
+                continue; // domain size does not tile the budget
+            };
+            for arch_name in ["1b", "7b"] {
+                let arch = *model::by_name(arch_name).unwrap();
+                let study = Study::builder("madmax")
+                    .title(self.title())
+                    .arch(arch)
+                    .hardware([hw])
+                    .nodes([cluster.nodes])
+                    .plans(PlanAxis::Sweep { with_cp: false })
+                    .global_batches([2 * Self::GPU_BUDGET])
+                    .micro_batch_divisors()
+                    .memory_cap(planner::MEM_CAP_FRAC)
+                    .build();
+                // Bound-and-prune: the design space is wide, the
+                // winner is what MAD-Max reports.
+                let Some(best) = runner.best_of(&study) else {
+                    continue; // nothing feasible (e.g. 7B on V100)
+                };
+                let m = &best.metrics;
+                t.row(vec![
+                    arch.name.to_string(),
+                    best.hw.to_string(),
+                    best.nodes.to_string(),
+                    m.world.to_string(),
+                    best.plan.to_string(),
+                    best.micro_batch.to_string(),
+                    f0(m.global_wps),
+                    f3(m.mfu),
+                    ms(m.exposed_comm),
+                    f2(m.wps_per_watt),
+                    f2(m.energy_per_token_j),
+                    f2(best.mem_per_gpu / 1e9),
+                ]);
+            }
+        }
+        Ok(vec![t.with_chart(6)])
+    }
+}
+
+/// `powersweep` — throughput-per-watt vs frequency cap (Go et al.
+/// 2025 style): the catalog derives frequency-capped variants of H100
+/// and A100 ([`Catalog::with_freq_cap`]), and the study's *hardware
+/// axis* sweeps them — clock-sensitive power scales by each spec's
+/// throttle curve while fabric rates stay put, so exposure,
+/// throughput, and watts all move together.
+struct PowerSweep;
+
+impl PowerSweep {
+    const CAPS: [f64; 6] = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5];
+}
+
+impl Scenario for PowerSweep {
+    fn name(&self) -> &'static str { "powersweep" }
+    fn title(&self) -> &'static str {
+        "Throughput per watt vs frequency cap \
+         (Llama-7B FSDP, 128 GPUs, local batch 2)"
+    }
+    fn describe(&self) -> &'static str {
+        "derive frequency-capped h100/a100 variants via the catalog \
+         power curve; throughput, watts, wps/W per cap"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "powersweep", self.title(),
+            &["hardware", "freq_cap", "global_wps", "power_w",
+              "total_power_kw", "wps_per_watt", "j_per_token", "mfu"]);
+        for base in [HwId::H100, HwId::A100] {
+            let mut capped = Vec::new();
+            for cap in Self::CAPS {
+                capped.push(Catalog::with_freq_cap(base, cap)
+                    .map_err(anyhow::Error::msg)?);
+            }
+            let study = Study::builder("powersweep")
+                .title(self.title())
+                .arch(LLAMA_7B)
+                .hardware(capped)
+                .nodes([16])
+                .plans(PlanAxis::DataParallel)
+                .batch_per_replica(2)
+                .micro_batches([2])
+                .build();
+            let res = runner.run(&study);
+            // Grid order follows the hardware axis, so cases zip with
+            // the cap list one-to-one.
+            for (cap, c) in Self::CAPS.iter().zip(&res.cases) {
+                let m = &c.metrics;
+                t.row(vec![
+                    base.to_string(),
+                    format!("{cap:.2}"),
+                    f0(m.global_wps),
+                    f0(m.power_w),
+                    f2(m.total_power_w / 1e3),
+                    f2(m.wps_per_watt),
+                    f2(m.energy_per_token_j),
+                    f3(m.mfu),
+                ]);
+            }
+        }
+        Ok(vec![t.with_chart(5)])
     }
 }
 

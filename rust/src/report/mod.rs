@@ -111,7 +111,8 @@ mod tests {
         let expected = [
             "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
             "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-            "fig14", "headline", "ablation", "sched",
+            "fig14", "headline", "ablation", "sched", "madmax",
+            "powersweep",
         ];
         assert_eq!(registry().names(), expected);
         assert_eq!(all_figures(), expected);

@@ -32,7 +32,7 @@
 //! schedule directly against per-stream time cursors, recycling every
 //! buffer through a per-worker [`SimArena`]. Collective costs are
 //! memoized in a [`CostCache`](crate::collectives::CostCache) keyed by
-//! (op, payload bits, generation, placement). Because the fused path
+//! (op, payload bits, hardware id, placement). Because the fused path
 //! performs the same f64 operations in the same per-device order as
 //! [`Engine::run`], its reports are **bit-identical** to the event
 //! engine's — enforced by `tests/fastpath_vs_engine.rs`. Use
@@ -1242,10 +1242,29 @@ mod tests {
         assert!(f4 < f1, "comm:compute must shrink with accumulation");
     }
 
+    /// A catalog entry registered at test time (odd 4-GPU NVLink
+    /// domain, fat IB) — the emitter and fast path must treat it
+    /// exactly like a built-in.
+    fn custom_hw() -> Generation {
+        use crate::hardware::{Catalog, GpuSpec, HwSpec};
+        Catalog::register(HwSpec {
+            name: "sim-quadnode".into(),
+            gpus_per_node: 4,
+            gpu: GpuSpec {
+                name: "sim-quadnode",
+                ib_bw: 800e9,
+                ..crate::hardware::specs::H100.clone()
+            },
+            freq_curve: None,
+            derived: false,
+        })
+        .unwrap()
+    }
+
     /// Representative configs spanning every emission arm: pure dp,
     /// tp+cp, deep pipeline, pipeline+tp, ddp, hsdp, zero3,
-    /// no-prefetch, and the interleaved schedule (with and without
-    /// ZeRO-3 / prefetch).
+    /// no-prefetch, the interleaved schedule (with and without
+    /// ZeRO-3 / prefetch), and a custom catalog hardware entry.
     fn cross_validation_cfgs() -> Vec<SimConfig> {
         let c4 = Cluster::new(Generation::H100, 4);
         let c8 = Cluster::new(Generation::H100, 8);
@@ -1275,6 +1294,11 @@ mod tests {
             ..SimConfig::fsdp(LLAMA_7B, c8,
                               ParallelPlan::new(8, 2, 2, 2), 32, 1, 4096)
         };
+        // 4-GPU NVLink domains: 8 nodes = 32 GPUs; tp2 spans half a
+        // node, pp stages cross nodes earlier than on DGX shapes.
+        let cq = Cluster::new(custom_hw(), 8);
+        let custom = SimConfig::fsdp(
+            LLAMA_7B, cq, ParallelPlan::new(8, 2, 2, 1), 32, 1, 4096);
         vec![
             weak_cfg(1),
             weak_cfg(16),
@@ -1293,6 +1317,7 @@ mod tests {
             SimConfig::fsdp(LLAMA_7B, c8, ParallelPlan::new(8, 2, 2, 2),
                             32, 1, 4096),
             il2_mixed,
+            custom,
         ]
     }
 

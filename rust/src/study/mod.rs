@@ -6,10 +6,12 @@
 //! module makes that search a first-class object:
 //!
 //! * [`Study`] / [`StudyBuilder`] — declare a grid over architecture ×
-//!   hardware generation × cluster size × parallel plan × sharding ×
-//!   pipeline schedule × batch shape × sequence length, with
-//!   feasibility constraints (divisibility, schedule validity,
-//!   device-memory cap) applied during expansion.
+//!   hardware (any catalog entry — built-in generation or loaded spec,
+//!   via [`.hardware(...)`](StudyBuilder::hardware)) × cluster size ×
+//!   parallel plan × sharding × pipeline schedule × batch shape ×
+//!   sequence length, with feasibility constraints (divisibility,
+//!   schedule validity, per-spec device-memory cap) applied during
+//!   expansion.
 //! * [`StudyRunner`] — expands the grid, deduplicates repeated
 //!   configurations via a config-key cache, and simulates the remainder
 //!   across `std::thread::scope` workers (the simulator is
@@ -29,7 +31,7 @@
 //! let study = Study::builder("fig6")
 //!     .title("Model parallelism increases FSDP throughput")
 //!     .arch(LLAMA_7B)
-//!     .generation(Generation::H100)
+//!     .hardware([HwId::H100])
 //!     .nodes([32])
 //!     .plans(PlanAxis::Sweep { with_cp: false })
 //!     .global_batches([512])
@@ -51,7 +53,7 @@ pub use scenario::{Registry, Scenario};
 pub use sink::{ConsoleSink, CsvSink, JsonSink, Sink};
 pub use table::{Column, Table};
 
-use crate::hardware::Generation;
+use crate::hardware::HwId;
 use crate::memory;
 use crate::model::TransformerArch;
 use crate::parallelism::{enumerate_plans, ParallelPlan};
@@ -148,7 +150,7 @@ pub fn bench_pinned_study() -> Study {
     Study::builder("bench-fig6")
         .title("pinned benchmark grid: fig6 parallelization sweep")
         .arch(crate::model::LLAMA_7B)
-        .generation(Generation::H100)
+        .generation(HwId::H100)
         .nodes([32])
         .plans(PlanAxis::Sweep { with_cp: false })
         .global_batches([512])
@@ -165,7 +167,7 @@ pub fn bench_pinned_sched_study() -> Study {
     Study::builder("bench-sched")
         .title("pinned benchmark grid: schedule variants (interleaved/zero3)")
         .arch(crate::model::LLAMA_7B)
-        .generation(Generation::H100)
+        .generation(HwId::H100)
         .nodes([16])
         .plans(PlanAxis::Shapes(vec![(1, 4, 1), (2, 4, 1), (1, 8, 1)]))
         .global_batches([256])
@@ -180,6 +182,23 @@ pub fn bench_pinned_sched_study() -> Study {
         .build()
 }
 
+/// Pinned companion grid covering the hardware axis (every catalog
+/// built-in, GB200's 72-GPU NVLink domain included), so `dtsim bench`
+/// and CI's `BENCH_study.json` catch cost-cache regressions from the
+/// interned `HwId` key migration. Pinned for cross-PR comparability.
+pub fn bench_pinned_hw_study() -> Study {
+    Study::builder("bench-hw")
+        .title("pinned benchmark grid: hardware axis (catalog built-ins)")
+        .arch(crate::model::LLAMA_7B)
+        .hardware(HwId::ALL)
+        .nodes([2])
+        .plan_shapes(&[(1, 1, 1), (2, 1, 1), (2, 2, 1)])
+        .batch_per_replica(2)
+        .micro_batches([1, 2])
+        .memory_cap(0.94)
+        .build()
+}
+
 /// One expanded, validated grid point plus its memory footprint.
 #[derive(Debug, Clone, Copy)]
 pub struct StudyPoint {
@@ -189,12 +208,13 @@ pub struct StudyPoint {
 
 /// Cache/dedup key: the complete value identity of a `SimConfig` —
 /// the full architecture (not just its name, so a customized arch
-/// never aliases a preset's cache entry), the cluster shape, and
-/// every workload axis.
+/// never aliases a preset's cache entry), the interned hardware id
+/// (catalog specs are immutable, so the id *is* the spec's value
+/// identity), the cluster shape, and every workload axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConfigKey {
     arch: TransformerArch,
-    gen: Generation,
+    hw: HwId,
     nodes: usize,
     gpus_per_node: usize,
     plan: ParallelPlan,
@@ -210,7 +230,7 @@ impl ConfigKey {
     pub fn of(cfg: &SimConfig) -> ConfigKey {
         ConfigKey {
             arch: cfg.arch,
-            gen: cfg.cluster.node.gpu,
+            hw: cfg.cluster.node.gpu,
             nodes: cfg.cluster.nodes,
             gpus_per_node: cfg.cluster.gpus_per_node(),
             plan: cfg.plan,
@@ -230,7 +250,7 @@ pub struct Study {
     pub name: String,
     pub title: String,
     archs: Vec<TransformerArch>,
-    gens: Vec<Generation>,
+    hws: Vec<HwId>,
     nodes: Vec<usize>,
     plans: PlanAxis,
     batches: BatchAxis,
@@ -248,7 +268,7 @@ impl Study {
             name: name.to_string(),
             title: String::new(),
             archs: Vec::new(),
-            gens: vec![Generation::H100],
+            hws: vec![HwId::H100],
             nodes: vec![1],
             plans: PlanAxis::DataParallel,
             batches: BatchAxis::PerReplica(2),
@@ -274,9 +294,9 @@ impl Study {
     pub fn expand(&self) -> Vec<StudyPoint> {
         let mut points = Vec::new();
         for arch in &self.archs {
-            for &gen in &self.gens {
+            for &hw in &self.hws {
                 for &nodes in &self.nodes {
-                    let cluster = Cluster::new(gen, nodes);
+                    let cluster = Cluster::new(hw, nodes);
                     for &seq in &self.seqs {
                         for &sharding in &self.shardings {
                             for &schedule in &self.schedules {
@@ -360,7 +380,7 @@ pub struct StudyBuilder {
     name: String,
     title: String,
     archs: Vec<TransformerArch>,
-    gens: Vec<Generation>,
+    hws: Vec<HwId>,
     nodes: Vec<usize>,
     plans: PlanAxis,
     batches: BatchAxis,
@@ -387,16 +407,27 @@ impl StudyBuilder {
         self
     }
 
-    pub fn generation(self, gen: Generation) -> Self {
-        self.generations([gen])
-    }
-
-    pub fn generations(mut self, gens: impl IntoIterator<Item = Generation>) -> Self {
-        self.gens = gens.into_iter().collect();
+    /// The hardware axis: any mix of built-in generations and loaded
+    /// catalog entries (each grid point's cluster takes its
+    /// NVLink-domain size, memory cap, and power model from the
+    /// entry's spec).
+    pub fn hardware(mut self, hws: impl IntoIterator<Item = HwId>) -> Self {
+        self.hws = hws.into_iter().collect();
         self
     }
 
-    /// Cluster sizes in nodes (8 GPUs per DGX node; 72 for GB200).
+    /// Single-entry [`Self::hardware`] (historical name).
+    pub fn generation(self, hw: HwId) -> Self {
+        self.hardware([hw])
+    }
+
+    /// Alias for [`Self::hardware`] (historical name).
+    pub fn generations(self, hws: impl IntoIterator<Item = HwId>) -> Self {
+        self.hardware(hws)
+    }
+
+    /// Cluster sizes in nodes (NVLink domains: 8 GPUs per DGX node,
+    /// 72 per GB200 NVL72 rack, whatever the catalog entry declares).
     pub fn nodes(mut self, nodes: impl IntoIterator<Item = usize>) -> Self {
         self.nodes = nodes.into_iter().collect();
         self
@@ -499,7 +530,7 @@ impl StudyBuilder {
         if self.archs.is_empty() {
             return Err(format!("study '{}' declares no architecture", self.name));
         }
-        if self.gens.is_empty() || self.nodes.is_empty()
+        if self.hws.is_empty() || self.nodes.is_empty()
             || self.seqs.is_empty() || self.shardings.is_empty()
             || self.schedules.is_empty() || self.prefetch.is_empty()
         {
@@ -526,7 +557,7 @@ impl StudyBuilder {
             name: self.name,
             title: self.title,
             archs: self.archs,
-            gens: self.gens,
+            hws: self.hws,
             nodes: self.nodes,
             plans: self.plans,
             batches: self.batches,
@@ -641,7 +672,7 @@ mod tests {
     #[test]
     fn config_key_distinguishes_custom_archs_sharing_a_name() {
         let custom = TransformerArch { d_ff: 8192, ..LLAMA_7B };
-        let cluster = Cluster::new(Generation::H100, 1);
+        let cluster = Cluster::new(HwId::H100, 1);
         let mk = |arch| SimConfig::fsdp(
             arch, cluster, ParallelPlan::data_parallel(8), 16, 2, 4096);
         assert_ne!(ConfigKey::of(&mk(LLAMA_7B)), ConfigKey::of(&mk(custom)),
@@ -705,6 +736,50 @@ mod tests {
             |p| matches!(p.cfg.schedule, Schedule::Interleaved { .. })));
         assert!(pts.iter().any(
             |p| p.cfg.sharding == Sharding::Zero3));
+    }
+
+    #[test]
+    fn pinned_hw_bench_grid_covers_every_builtin() {
+        let pts = bench_pinned_hw_study().expand();
+        assert!(!pts.is_empty());
+        for hw in HwId::ALL {
+            assert!(pts.iter().any(|p| p.cfg.cluster.node.gpu == hw),
+                    "pinned hw grid missing {hw}");
+        }
+        // GB200 points really use the 72-GPU NVLink domain.
+        assert!(pts.iter().any(|p| p.cfg.cluster.gpus_per_node() == 72));
+    }
+
+    #[test]
+    fn hardware_axis_spans_catalog_entries() {
+        use crate::hardware::{Catalog, GpuSpec, HwSpec};
+        // A fat-fabric H100 variant registered at test time behaves
+        // like a built-in on the axis: same grid shape, different
+        // numbers, per-spec memory cap.
+        let custom = Catalog::register(HwSpec {
+            name: "study-fat-ib".into(),
+            gpus_per_node: 8,
+            gpu: GpuSpec {
+                name: "study-fat-ib",
+                ib_bw: 1600e9,
+                ..crate::hardware::specs::H100.clone()
+            },
+            freq_curve: None,
+            derived: false,
+        }).unwrap();
+        let s = Study::builder("hw-axis")
+            .arch(LLAMA_7B)
+            .hardware([HwId::H100, custom])
+            .nodes([2])
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .build();
+        let pts = s.expand();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].cfg.cluster.node.gpu, HwId::H100);
+        assert_eq!(pts[1].cfg.cluster.node.gpu, custom);
+        // Same workload, distinct dedup keys.
+        assert_ne!(ConfigKey::of(&pts[0].cfg), ConfigKey::of(&pts[1].cfg));
     }
 
     #[test]

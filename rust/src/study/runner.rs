@@ -22,7 +22,7 @@ use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-use crate::hardware::Generation;
+use crate::hardware::HwId;
 use crate::memory;
 use crate::metrics::{self, Metrics};
 use crate::parallelism::ParallelPlan;
@@ -35,7 +35,8 @@ use super::{ConfigKey, Study, StudyPoint};
 #[derive(Debug, Clone)]
 pub struct CaseResult {
     pub arch: &'static str,
-    pub gen: Generation,
+    /// Catalog hardware entry the case ran on.
+    pub hw: HwId,
     pub nodes: usize,
     pub plan: ParallelPlan,
     pub global_batch: usize,
@@ -50,7 +51,7 @@ pub struct CaseResult {
 fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
     CaseResult {
         arch: p.cfg.arch.name,
-        gen: p.cfg.cluster.node.gpu,
+        hw: p.cfg.cluster.node.gpu,
         nodes: p.cfg.cluster.nodes,
         plan: p.cfg.plan,
         global_batch: p.cfg.global_batch,
@@ -530,7 +531,7 @@ mod tests {
     fn fake_case(nodes: usize, wps: f64) -> CaseResult {
         CaseResult {
             arch: "7b",
-            gen: Generation::H100,
+            hw: HwId::H100,
             nodes,
             plan: ParallelPlan::data_parallel(8),
             global_batch: 16,

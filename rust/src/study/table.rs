@@ -114,7 +114,12 @@ pub fn ms(x: f64) -> String { format!("{:.1}", x * 1e3) }
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Column {
     Arch,
+    /// Hardware name under the historical `gen` CSV header (the paper
+    /// figures' schema; byte-stable across the catalog migration).
     Gen,
+    /// Hardware name under a `hardware` header — for catalog-centric
+    /// scenarios where "generation" would be a misnomer.
+    Hardware,
     Nodes,
     Gpus,
     Plan,
@@ -141,6 +146,7 @@ impl Column {
         match self {
             Column::Arch => "arch",
             Column::Gen => "gen",
+            Column::Hardware => "hardware",
             Column::Nodes => "nodes",
             Column::Gpus => "gpus",
             Column::Plan => "plan",
@@ -167,7 +173,7 @@ impl Column {
         let m = &c.metrics;
         match self {
             Column::Arch => c.arch.to_string(),
-            Column::Gen => c.gen.to_string(),
+            Column::Gen | Column::Hardware => c.hw.to_string(),
             Column::Nodes => c.nodes.to_string(),
             Column::Gpus => m.world.to_string(),
             Column::Plan => c.plan.to_string(),
@@ -201,6 +207,10 @@ mod tests {
         assert_eq!(Column::GlobalWps.header(), "global_wps");
         assert_eq!(Column::PerGpuWps.header(), "wps_per_gpu");
         assert_eq!(Column::MemGb.header(), "mem_gb");
+        // The historical figure schema keeps "gen"; catalog-centric
+        // scenarios get "hardware" for the same cell.
+        assert_eq!(Column::Gen.header(), "gen");
+        assert_eq!(Column::Hardware.header(), "hardware");
     }
 
     #[test]

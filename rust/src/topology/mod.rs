@@ -7,9 +7,10 @@
 //! sets over this mapping (`RankGroup`), which is exactly how
 //! Megatron-style launchers assign tensor/pipeline/data groups.
 
-use crate::hardware::{Generation, NodeSpec};
+use crate::hardware::{HwId, NodeSpec};
 
-/// A homogeneous cluster of DGX nodes.
+/// A homogeneous cluster of nodes of one catalog hardware entry; the
+/// node shape (NVLink-domain size) comes from the entry's spec.
 #[derive(Debug, Clone, Copy)]
 pub struct Cluster {
     pub nodes: usize,
@@ -17,17 +18,23 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    pub fn new(gen: Generation, nodes: usize) -> Cluster {
+    pub fn new(hw: HwId, nodes: usize) -> Cluster {
         assert!(nodes >= 1, "cluster needs at least one node");
-        Cluster { nodes, node: gen.node() }
+        Cluster { nodes, node: hw.node() }
     }
 
-    /// Convenience: cluster sized to hold exactly `gpus` accelerators.
-    pub fn with_gpus(gen: Generation, gpus: usize) -> Cluster {
-        let g = gen.node().gpus_per_node;
-        assert!(gpus % g == 0 && gpus > 0,
-                "gpu count {gpus} must be a positive multiple of {g}");
-        Cluster::new(gen, gpus / g)
+    /// Cluster sized to hold exactly `gpus` accelerators. Errors (with
+    /// the offending count) when `gpus` is not a positive multiple of
+    /// the hardware's NVLink-domain size — the CLI/config boundary
+    /// reports this instead of aborting.
+    pub fn with_gpus(hw: HwId, gpus: usize) -> Result<Cluster, String> {
+        let g = hw.node().gpus_per_node;
+        if gpus == 0 || gpus % g != 0 {
+            return Err(format!(
+                "gpu count {gpus} is not a positive multiple of {g} \
+                 (one {hw} node)"));
+        }
+        Ok(Cluster::new(hw, gpus / g))
     }
 
     pub fn world_size(&self) -> usize {
@@ -122,7 +129,7 @@ mod tests {
     use super::*;
 
     fn h100(nodes: usize) -> Cluster {
-        Cluster::new(Generation::H100, nodes)
+        Cluster::new(HwId::H100, nodes)
     }
 
     #[test]
@@ -137,15 +144,21 @@ mod tests {
 
     #[test]
     fn with_gpus_roundtrip() {
-        let c = Cluster::with_gpus(Generation::H100, 2048);
+        let c = Cluster::with_gpus(HwId::H100, 2048).unwrap();
         assert_eq!(c.nodes, 256);
         assert_eq!(c.world_size(), 2048);
+        // Domain size is data: 144 GPUs is 2 NVL72 racks on GB200.
+        let gb = Cluster::with_gpus(HwId::GB200, 144).unwrap();
+        assert_eq!(gb.nodes, 2);
+        assert_eq!(gb.gpus_per_node(), 72);
     }
 
     #[test]
-    #[should_panic]
-    fn with_gpus_rejects_partial_nodes() {
-        let _ = Cluster::with_gpus(Generation::H100, 12);
+    fn with_gpus_rejects_partial_nodes_with_the_offender() {
+        let err = Cluster::with_gpus(HwId::H100, 12).unwrap_err();
+        assert!(err.contains("12") && err.contains("8"), "{err}");
+        assert!(Cluster::with_gpus(HwId::H100, 0).is_err());
+        assert!(Cluster::with_gpus(HwId::GB200, 64).is_err());
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Integration tests for the pluggable hardware catalog: the shipped
+//! example catalogs load, specs round-trip through TOML bit-for-bit,
+//! unknown keys are rejected like `RunConfig`'s parser, and a custom
+//! catalog entry drives the whole stack (cluster → collectives →
+//! simulate → study → planner) end to end.
+
+use dtsim::hardware::{Catalog, GpuSpec, HwId, HwSpec};
+use dtsim::model::LLAMA_7B;
+use dtsim::parallelism::ParallelPlan;
+use dtsim::sim::SimConfig;
+use dtsim::study::{PlanAxis, Study, StudyRunner};
+use dtsim::topology::Cluster;
+
+fn h100_variant(name: &str, ib_bw: f64) -> HwSpec {
+    HwSpec {
+        name: name.to_string(),
+        gpus_per_node: 8,
+        gpu: GpuSpec {
+            name: "h100-variant",
+            ib_bw,
+            ..dtsim::hardware::specs::H100.clone()
+        },
+        freq_curve: None,
+        derived: false,
+    }
+}
+
+#[test]
+fn shipped_example_catalogs_load_and_parse() {
+    // CI for examples/catalog/*.toml: every shipped file must load,
+    // and each section must be addressable by name afterwards.
+    let dir = std::path::Path::new("../examples/catalog");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(dir).expect("examples/catalog dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        seen += 1;
+        let ids = Catalog::load_file(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{path:?} failed to load: {e}"));
+        assert!(!ids.is_empty(), "{path:?} defines no hardware");
+        for id in &ids {
+            assert_eq!(HwId::parse(&id.spec().name).unwrap(), *id);
+        }
+    }
+    assert!(seen >= 1, "no example catalogs shipped");
+
+    // The example entries are usable, not just parseable: one
+    // simulated iteration on h200 with its 141 GB HBM visible.
+    let h200 = HwId::parse("h200").unwrap();
+    assert_eq!(h200.spec().gpu.mem_bytes, 141e9);
+    let cluster = Cluster::new(h200, 2);
+    let cfg = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::data_parallel(16), 32, 2, 4096);
+    let m = dtsim::metrics::evaluate(&cfg);
+    assert!(m.global_wps > 0.0 && m.power_w > 0.0);
+
+    // And the curve-bearing rack entry throttles as declared.
+    let gb300 = HwId::parse("gb300-nvl72").unwrap();
+    assert_eq!(gb300.spec().gpus_per_node, 72);
+    assert_eq!(gb300.spec().power_scale(0.8), 0.72);
+    assert_eq!(gb300.spec().power_scale(1.0), 1.0);
+}
+
+#[test]
+fn hwspec_roundtrips_through_toml_bitwise() {
+    // Awkward f64s on purpose: shortest-round-trip float formatting
+    // must reproduce every field bit-for-bit.
+    let spec = HwSpec {
+        name: "it-roundtrip".to_string(),
+        gpus_per_node: 12,
+        gpu: GpuSpec {
+            name: "it-roundtrip",
+            peak_flops: 1234.5e12 / 3.0,
+            hbm_bw: 2.0e12 * (1.0 / 7.0),
+            nvlink_bw: 600e9 + 0.1,
+            ib_bw: 123_456_789_012.345,
+            mem_bytes: 96e9,
+            kernel_base_mfu: 2.0 / 3.0,
+            launch_overhead_s: 5.5e-6,
+            p_base: 300.0 + 1.0 / 3.0,
+            p_comp: 85.5,
+            p_comm: 22.25,
+            tdp: 450.0,
+        },
+        freq_curve: Some(vec![(1.0 / 3.0, 0.4 + 1e-13), (1.0, 1.0)]),
+        derived: false,
+    };
+    let text = spec.to_toml();
+    let ids = Catalog::load_str(&text).unwrap();
+    assert_eq!(ids.len(), 1);
+    let back = ids[0].spec();
+    assert_eq!(back.name, spec.name);
+    assert_eq!(back.gpus_per_node, spec.gpus_per_node);
+    for (a, b) in [
+        (back.gpu.peak_flops, spec.gpu.peak_flops),
+        (back.gpu.hbm_bw, spec.gpu.hbm_bw),
+        (back.gpu.nvlink_bw, spec.gpu.nvlink_bw),
+        (back.gpu.ib_bw, spec.gpu.ib_bw),
+        (back.gpu.mem_bytes, spec.gpu.mem_bytes),
+        (back.gpu.kernel_base_mfu, spec.gpu.kernel_base_mfu),
+        (back.gpu.launch_overhead_s, spec.gpu.launch_overhead_s),
+        (back.gpu.p_base, spec.gpu.p_base),
+        (back.gpu.p_comp, spec.gpu.p_comp),
+        (back.gpu.p_comm, spec.gpu.p_comm),
+        (back.gpu.tdp, spec.gpu.tdp),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+    let back_curve = back.freq_curve.as_ref().unwrap();
+    let spec_curve = spec.freq_curve.as_ref().unwrap();
+    assert_eq!(back_curve.len(), spec_curve.len());
+    for ((fa, pa), (fb, pb)) in back_curve.iter().zip(spec_curve) {
+        assert_eq!(fa.to_bits(), fb.to_bits());
+        assert_eq!(pa.to_bits(), pb.to_bits());
+    }
+    // Serializing again is byte-stable.
+    assert_eq!(back.to_toml(), text);
+}
+
+#[test]
+fn unknown_keys_rejected_like_runconfig() {
+    let base = h100_variant("it-unknown-key", 400e9).to_toml();
+    let typo = base.replace("nvlink_bw", "nvlink_bandwidth");
+    let err = Catalog::load_str(&typo).unwrap_err();
+    assert!(err.contains("unknown key 'nvlink_bandwidth'"), "{err}");
+    assert!(err.contains("known:"), "{err}");
+}
+
+#[test]
+fn custom_entry_drives_the_whole_stack() {
+    // Two IB variants of the same machine: the fatter fabric must beat
+    // the thinner one through the full study pipeline, and the planner
+    // must run on both.
+    let thin = Catalog::register(h100_variant("it-thin-ib", 100e9))
+        .unwrap();
+    let fat = Catalog::register(h100_variant("it-fat-ib", 1600e9))
+        .unwrap();
+    let study = Study::builder("it-hw")
+        .arch(LLAMA_7B)
+        .hardware([thin, fat])
+        .nodes([4])
+        .plans(PlanAxis::DataParallel)
+        .batch_per_replica(2)
+        .micro_batches([2])
+        .build();
+    let mut runner = StudyRunner::sequential();
+    let res = runner.run(&study);
+    assert_eq!(res.cases.len(), 2);
+    assert_eq!(res.cases[0].hw, thin);
+    assert_eq!(res.cases[1].hw, fat);
+    assert!(res.cases[1].metrics.global_wps
+            > res.cases[0].metrics.global_wps,
+            "16x the fabric must help a comm-bound FSDP run");
+
+    // Planner bound-and-prune search over a custom entry.
+    let req = dtsim::planner::SweepRequest::fsdp(
+        LLAMA_7B, Cluster::new(fat, 4), 64, 4096);
+    let best = dtsim::planner::best_in(&req, &mut runner).unwrap();
+    assert_eq!(best.plan.world_size(), 32);
+
+    // TOML run configs accept the loaded name at the config boundary.
+    let rc = dtsim::config::RunConfig::from_toml_str(
+        "[model]\narch = \"llama-7b\"\n\
+         [cluster]\ngeneration = \"it-fat-ib\"\ngpus = 32\n\
+         [batch]\nglobal = 64\nmicro = 2\n")
+        .unwrap();
+    assert_eq!(rc.gen, fat);
+    assert_eq!(rc.nodes, 4);
+}
+
+#[test]
+fn derived_freq_capped_specs_run_end_to_end() {
+    let capped = Catalog::with_freq_cap(HwId::H100, 0.6).unwrap();
+    let cluster = Cluster::new(capped, 2);
+    let cfg = SimConfig::fsdp(
+        LLAMA_7B, cluster, ParallelPlan::data_parallel(16), 32, 2, 4096);
+    let slow = dtsim::metrics::evaluate(&cfg);
+    let full_cluster = Cluster::new(HwId::H100, 2);
+    let full = dtsim::metrics::evaluate(&SimConfig::fsdp(
+        LLAMA_7B, full_cluster, ParallelPlan::data_parallel(16), 32, 2,
+        4096));
+    assert!(slow.global_wps < full.global_wps,
+            "capped clock must lose throughput");
+    assert!(slow.power_w < full.power_w,
+            "capped clock must draw less power");
+}

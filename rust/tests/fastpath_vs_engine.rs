@@ -29,6 +29,46 @@ fn close(a: f64, b: f64) -> bool {
     (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
 }
 
+/// Fused fast path vs event-graph engine on one config; shared by the
+/// built-in-hardware and custom-catalog sampling arms.
+fn compare_paths(cfg: &SimConfig, arena: &mut SimArena)
+    -> Result<(), String>
+{
+    let fast = simulate_in(cfg, arena);
+    let slow = simulate_engine(cfg);
+    if !close(fast.iter_time, slow.iter_time) {
+        return Err(format!("iter_time {} vs {}",
+                           fast.iter_time, slow.iter_time));
+    }
+    if !close(fast.exposed_comm, slow.exposed_comm) {
+        return Err(format!("exposed_comm {} vs {}",
+                           fast.exposed_comm, slow.exposed_comm));
+    }
+    if !close(fast.comm_busy, slow.comm_busy)
+        || !close(fast.compute_busy, slow.compute_busy)
+        || !close(fast.comm_kernel_time, slow.comm_kernel_time)
+        || !close(fast.idle, slow.idle)
+    {
+        return Err("busy/idle accounting diverged".into());
+    }
+    if fast.stages.len() != slow.stages.len() {
+        return Err("stage count diverged".into());
+    }
+    for tag in Tag::ALL {
+        if !close(fast.comm_by_tag.get(tag), slow.comm_by_tag.get(tag)) {
+            return Err(format!(
+                "comm_by_tag[{tag:?}] {} vs {}",
+                fast.comm_by_tag.get(tag), slow.comm_by_tag.get(tag)));
+        }
+        for (fs, ss) in fast.stages.iter().zip(&slow.stages) {
+            if !close(fs.by_tag.get(tag), ss.by_tag.get(tag)) {
+                return Err(format!("stage by_tag[{tag:?}] diverged"));
+            }
+        }
+    }
+    Ok(())
+}
+
 #[test]
 fn prop_fused_fast_path_matches_event_engine() {
     let valid = Cell::new(0u32);
@@ -85,42 +125,98 @@ fn prop_fused_fast_path_matches_event_engine() {
     }, |cfg| {
         let Some(cfg) = cfg else { return Ok(()) };
         valid.set(valid.get() + 1);
-        let fast = simulate_in(cfg, &mut arena.borrow_mut());
-        let slow = simulate_engine(cfg);
-        if !close(fast.iter_time, slow.iter_time) {
-            return Err(format!("iter_time {} vs {}",
-                               fast.iter_time, slow.iter_time));
-        }
-        if !close(fast.exposed_comm, slow.exposed_comm) {
-            return Err(format!("exposed_comm {} vs {}",
-                               fast.exposed_comm, slow.exposed_comm));
-        }
-        if !close(fast.comm_busy, slow.comm_busy)
-            || !close(fast.compute_busy, slow.compute_busy)
-            || !close(fast.comm_kernel_time, slow.comm_kernel_time)
-            || !close(fast.idle, slow.idle)
-        {
-            return Err("busy/idle accounting diverged".into());
-        }
-        if fast.stages.len() != slow.stages.len() {
-            return Err("stage count diverged".into());
-        }
-        for tag in Tag::ALL {
-            if !close(fast.comm_by_tag.get(tag), slow.comm_by_tag.get(tag)) {
-                return Err(format!(
-                    "comm_by_tag[{tag:?}] {} vs {}",
-                    fast.comm_by_tag.get(tag), slow.comm_by_tag.get(tag)));
-            }
-            for (fs, ss) in fast.stages.iter().zip(&slow.stages) {
-                if !close(fs.by_tag.get(tag), ss.by_tag.get(tag)) {
-                    return Err(format!("stage by_tag[{tag:?}] diverged"));
-                }
-            }
-        }
-        Ok(())
+        compare_paths(cfg, &mut arena.borrow_mut())
     });
     assert!(valid.get() >= 200,
             "only {} valid configs sampled; need >= 200 for coverage",
+            valid.get());
+}
+
+#[test]
+fn prop_fused_fast_path_matches_engine_on_custom_catalog_specs() {
+    use dtsim::hardware::{Catalog, GpuSpec, HwSpec};
+
+    // Sampled *hardware* this time: random catalog specs (domain size,
+    // compute/fabric rates, overheads) registered through the catalog,
+    // then random plans on top — custom entries must be bit-exact
+    // through both execution paths, like the built-ins. Spec names
+    // embed the draw, so re-running in one process interns instead of
+    // colliding (the harness is seed-deterministic).
+    let valid = Cell::new(0u32);
+    let arena = std::cell::RefCell::new(SimArena::new());
+    check("fastpath-vs-engine-custom-hw", 150, |rng| {
+        let tag = rng.next_u64();
+        let gpus_per_node = [2usize, 4, 8, 16, 72]
+            [rng.next_below(5) as usize];
+        let spec = HwSpec {
+            name: format!("fuzzhw-{tag:016x}"),
+            gpus_per_node,
+            gpu: GpuSpec {
+                name: "fuzzhw",
+                peak_flops: (50 + rng.next_below(2000)) as f64 * 1e12,
+                hbm_bw: (500 + rng.next_below(8000)) as f64 * 1e9,
+                nvlink_bw: (100 + rng.next_below(1800)) as f64 * 1e9,
+                ib_bw: (25 + rng.next_below(2000)) as f64 * 1e9,
+                mem_bytes: (32 + rng.next_below(160)) as f64 * 1e9,
+                kernel_base_mfu:
+                    0.3 + rng.next_below(60) as f64 / 100.0,
+                launch_overhead_s:
+                    (1 + rng.next_below(9)) as f64 * 1e-6,
+                p_base: (150 + rng.next_below(900)) as f64,
+                p_comp: (40 + rng.next_below(150)) as f64,
+                p_comm: (10 + rng.next_below(80)) as f64,
+                tdp: 2000.0,
+            },
+            freq_curve: None,
+            derived: false,
+        };
+        let hw = Catalog::register(spec).expect("sampled spec valid");
+        let nodes = 1 + rng.next_below(4) as usize;
+        let cluster = dtsim::topology::Cluster::new(hw, nodes);
+        let world = cluster.world_size();
+        let tp = pow2(rng, 3);
+        let pp = pow2(rng, 2);
+        let mp = tp * pp;
+        if world % mp != 0 || 32 % pp != 0 {
+            return None;
+        }
+        let dp = world / mp;
+        let mbs = pow2(rng, 1);
+        let mut accum = 1 + rng.next_below(3) as usize;
+        let schedule = if pp > 1 && rng.next_below(2) == 0 {
+            accum *= pp;
+            Schedule::Interleaved { v: 2 }
+        } else {
+            Schedule::OneFOneB
+        };
+        let sharding = match rng.next_below(4) {
+            0 => Sharding::Fsdp,
+            1 => Sharding::Ddp,
+            2 => Sharding::Zero3,
+            _ => Sharding::Hsdp { group: 2.min(dp) },
+        };
+        let cfg = SimConfig {
+            arch: LLAMA_7B,
+            cluster,
+            plan: ParallelPlan::new(dp, tp, pp, 1),
+            global_batch: dp * mbs * accum,
+            micro_batch: mbs,
+            seq_len: 4096,
+            sharding,
+            schedule,
+            prefetch: rng.next_below(2) == 0,
+        };
+        if cfg.validate().is_err() {
+            return None;
+        }
+        Some(cfg)
+    }, |cfg| {
+        let Some(cfg) = cfg else { return Ok(()) };
+        valid.set(valid.get() + 1);
+        compare_paths(cfg, &mut arena.borrow_mut())
+    });
+    assert!(valid.get() >= 60,
+            "only {} valid custom-hw configs sampled; need >= 60",
             valid.get());
 }
 

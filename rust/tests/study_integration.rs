@@ -27,7 +27,7 @@ fn tmp_dir(name: &str) -> PathBuf {
 fn every_figure_is_a_registered_scenario() {
     let reg = report::registry();
     let names = report::all_figures();
-    assert_eq!(names.len(), 18);
+    assert_eq!(names.len(), 20);
     for name in names {
         let sc = reg.get(name)
             .unwrap_or_else(|| panic!("no scenario for {name}"));
@@ -121,6 +121,86 @@ fn sched_scenario_compares_schedules_end_to_end() {
     assert!(winners.rows.iter().any(|r| r[shard_col] == "zero3"));
     assert!(dir.join("sched.csv").exists());
     assert!(dir.join("sched_32n.csv").exists());
+}
+
+#[test]
+fn madmax_and_powersweep_are_listed_and_powersweep_runs() {
+    let reg = report::registry();
+    for name in ["madmax", "powersweep"] {
+        let sc = reg.get(name)
+            .unwrap_or_else(|| panic!("{name} not registered"));
+        assert!(!sc.describe().is_empty());
+    }
+
+    // powersweep end to end: H100 and A100 × 6 frequency caps, with
+    // capped rows drawing less power and losing throughput, and the
+    // cap-1.00 row identical to the plain built-in evaluation.
+    let dir = tmp_dir("powersweep");
+    let tables = report::run_in(
+        &reg, &mut StudyRunner::sequential(), "powersweep", &dir)
+        .unwrap();
+    assert_eq!(tables.len(), 1);
+    let t = &tables[0];
+    assert_eq!(t.header[0], "hardware");
+    assert_eq!(t.header[1], "freq_cap");
+    assert_eq!(t.rows.len(), 12, "2 bases x 6 caps");
+    assert!(dir.join("powersweep.csv").exists());
+    let full: Vec<&Vec<String>> =
+        t.rows.iter().filter(|r| r[1] == "1.00").collect();
+    assert_eq!(full.len(), 2);
+    for base in ["H100", "A100"] {
+        let rows: Vec<&Vec<String>> =
+            t.rows.iter().filter(|r| r[0] == base).collect();
+        assert_eq!(rows.len(), 6);
+        let wps: Vec<f64> =
+            rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        let watts: Vec<f64> =
+            rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        // Caps are listed 1.0 → 0.5: throughput and power both fall.
+        assert!(wps[0] > *wps.last().unwrap(),
+                "{base}: capping must cost throughput: {wps:?}");
+        assert!(watts[0] > *watts.last().unwrap(),
+                "{base}: capping must save power: {watts:?}");
+    }
+}
+
+#[test]
+fn madmax_covers_every_divisible_catalog_entry() {
+    use dtsim::hardware::{Catalog, GpuSpec, HwSpec};
+    // Register a custom entry BEFORE running: madmax must pick it up
+    // from the catalog with no scenario change.
+    let custom = Catalog::register(HwSpec {
+        name: "it-madmax-hw".into(),
+        gpus_per_node: 8,
+        gpu: GpuSpec {
+            name: "it-madmax-hw",
+            ib_bw: 1600e9,
+            ..dtsim::hardware::specs::H100.clone()
+        },
+        freq_curve: None,
+        derived: false,
+    })
+    .unwrap();
+    let dir = tmp_dir("madmax");
+    let reg = report::registry();
+    let tables = report::run_in(
+        &reg, &mut StudyRunner::auto(), "madmax", &dir).unwrap();
+    assert_eq!(tables.len(), 1);
+    let t = &tables[0];
+    assert_eq!(t.header[1], "hardware");
+    let hw_col: Vec<&str> =
+        t.rows.iter().map(|r| r[1].as_str()).collect();
+    // Built-ins whose domain divides 144 GPUs appear (8 and 72 both
+    // divide), and so does the custom entry.
+    for name in ["A100", "H100", "GB200", "it-madmax-hw"] {
+        assert!(hw_col.contains(&name), "{name} missing: {hw_col:?}");
+    }
+    let _ = custom;
+    // Every row sits at the fixed GPU budget.
+    for r in &t.rows {
+        assert_eq!(r[3], "144", "gpus column: {r:?}");
+    }
+    assert!(dir.join("madmax.csv").exists());
 }
 
 #[test]
@@ -325,8 +405,8 @@ fn study_grid_respects_constraints_end_to_end() {
     let mut runner = StudyRunner::new(4);
     let res = runner.run(&study);
     assert!(!res.cases.is_empty());
-    assert!(res.cases.iter().any(|c| c.gen == Generation::A100));
-    assert!(res.cases.iter().any(|c| c.gen == Generation::H100));
+    assert!(res.cases.iter().any(|c| c.hw == Generation::A100));
+    assert!(res.cases.iter().any(|c| c.hw == Generation::H100));
     for c in &res.cases {
         assert_eq!(c.global_batch % (c.plan.dp * c.micro_batch), 0);
         assert!(c.mem_per_gpu <= 80e9 * 0.94);
