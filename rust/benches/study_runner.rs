@@ -48,6 +48,13 @@ fn main() {
     });
     let (hits, misses) = warmed.cost_cache_stats();
     println!("collective cost memo: {hits} hits / {misses} misses");
+    let (steady, fallback) = warmed.steady_stats();
+    let (intervals, runs) = warmed.interval_stats();
+    println!(
+        "steady-state compression: {steady} wave / {fallback} queue \
+         evaluations; {intervals} intervals -> {runs} runs \
+         ({:.1}x)",
+        if runs > 0 { intervals as f64 / runs as f64 } else { 0.0 });
 
     group("simulate: fused fast path vs event-graph engine");
     let cluster = Cluster::new(Generation::H100, 32);
@@ -75,6 +82,14 @@ fn main() {
         let mut runner = StudyRunner::sequential();
         bb(runner.best_of(bb(&study)));
     });
+    // Parallel bound-sharing search: workers publish the incumbent
+    // throughput through a shared atomic, tightening everyone's prune.
+    for threads in [2usize, cores] {
+        bench_quick(&format!("best_of/fig6_grid_threads{threads}"), || {
+            let mut runner = StudyRunner::new(threads);
+            bb(runner.best_of(bb(&study)));
+        });
+    }
 
     group("study runner: schedule variants (interleaved/zero3)");
     let sched = bench_pinned_sched_study();

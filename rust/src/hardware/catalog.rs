@@ -22,10 +22,24 @@
 //! `powersweep` scenario (Go et al. 2025 style throughput-per-watt vs
 //! frequency studies). See `docs/hardware.md` for the TOML schema and
 //! the power-curve semantics.
+//!
+//! # Lock-free reads
+//!
+//! Resolution ([`HwId::spec`], [`Catalog::get`], `parse`, the id/name
+//! enumerations) never takes a lock: entries live in an append-only
+//! chunked slab of `OnceLock<&'static HwSpec>` slots published through
+//! an atomic length, so a read is a couple of `Acquire` loads — no
+//! shared cache line is ever written on the study hot path. Registration
+//! (`register`, `load_str`, `with_freq_cap`) serializes writers behind
+//! a `Mutex` that readers never touch; a slot is initialized *before*
+//! the length that publishes it, so any id a reader can observe
+//! resolves. Hot paths avoid even the atomic load by carrying the
+//! resolved `&'static HwSpec` inside
+//! [`NodeSpec`](super::specs::NodeSpec).
 
-use std::collections::HashMap;
 use std::fmt;
-use std::sync::{OnceLock, RwLock};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 use crate::config::toml;
 
@@ -65,12 +79,12 @@ impl HwId {
 
     /// Node shape: the NVLink-domain size comes from the spec (8 for
     /// DGX V100/A100/H100, 72 for GB200 NVL72 — data, not a special
-    /// case).
+    /// case). The returned [`NodeSpec`] carries the resolved
+    /// `&'static HwSpec`, so everything downstream of a
+    /// [`Cluster`](crate::topology::Cluster) reads hardware rates
+    /// without touching the catalog again.
     pub fn node(self) -> NodeSpec {
-        NodeSpec {
-            gpus_per_node: self.spec().gpus_per_node,
-            gpu: self,
-        }
+        NodeSpec::new(self)
     }
 
     /// Parse a hardware name — a built-in or any loaded catalog entry,
@@ -207,20 +221,72 @@ const KNOWN_KEYS: &[&str] = &[
     "p_comp", "p_comm", "tdp", "freq_curve",
 ];
 
-struct State {
-    /// Append-only; index == `HwId.0`.
-    specs: Vec<&'static HwSpec>,
-    /// Lowercased name → id.
-    by_name: HashMap<String, u16>,
+/// Catalog slots per lazily-allocated chunk; `CHUNKS × CHUNK` covers
+/// the whole `u16` id space while a typical process (built-ins plus a
+/// handful of loaded entries) only ever materializes the first chunk.
+const CHUNK: usize = 256;
+const CHUNKS: usize = (u16::MAX as usize + 1) / CHUNK;
+
+type Chunk = Box<[OnceLock<&'static HwSpec>]>;
+
+/// Append-only registry storage, chunked so capacity for the full id
+/// space costs a table of empty `OnceLock`s, not a megabyte of slots.
+/// Slot `i` lives in chunk `i / CHUNK` (allocated on first use, under
+/// the writer lock) and is set exactly once (the spec is leaked, so
+/// the reference is `'static`); `len` is then advanced to publish it.
+/// `len` is stored with `Release` *after* the chunk and slot writes
+/// and read with `Acquire`, so every index below an observed `len`
+/// resolves through initialized cells — reads stay lock-free (two
+/// `Acquire` loads).
+struct Slab {
+    len: AtomicUsize,
+    chunks: [OnceLock<Chunk>; CHUNKS],
 }
 
-static STATE: OnceLock<RwLock<State>> = OnceLock::new();
+impl Slab {
+    /// Published entry count (safe to resolve ids `0..len`).
+    fn len(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
 
-fn state() -> &'static RwLock<State> {
-    STATE.get_or_init(|| {
-        let mut st = State {
-            specs: Vec::new(),
-            by_name: HashMap::new(),
+    /// Entry `i < self.len()` (panics on an unpublished index).
+    fn get(&self, i: usize) -> &'static HwSpec {
+        self.chunks[i / CHUNK]
+            .get()
+            .and_then(|chunk| chunk[i % CHUNK].get().copied())
+            .expect("published catalog slot is initialized")
+    }
+
+    /// Published entries in registration order.
+    fn iter(&self) -> impl Iterator<Item = (usize, &'static HwSpec)> + '_ {
+        (0..self.len()).map(|i| (i, self.get(i)))
+    }
+
+    /// Append under the writer lock: allocate the chunk if this is its
+    /// first entry, initialize the slot, then publish the new length.
+    fn push(&self, spec: HwSpec) -> u16 {
+        let id = self.len.load(Ordering::Relaxed);
+        let chunk = self.chunks[id / CHUNK].get_or_init(|| {
+            (0..CHUNK).map(|_| OnceLock::new()).collect()
+        });
+        chunk[id % CHUNK]
+            .set(Box::leak(Box::new(spec)))
+            .expect("catalog slot appended twice");
+        self.len.store(id + 1, Ordering::Release);
+        id as u16
+    }
+}
+
+static SLAB: OnceLock<Slab> = OnceLock::new();
+
+/// Serializes registration only; never taken on any read path.
+static WRITER: Mutex<()> = Mutex::new(());
+
+fn slab() -> &'static Slab {
+    SLAB.get_or_init(|| {
+        let slab = Slab {
+            len: AtomicUsize::new(0),
+            chunks: std::array::from_fn(|_| OnceLock::new()),
         };
         // Built-ins in HwId const order: Table 1 + GB200.
         for (name, gpus_per_node, gpu) in [
@@ -229,18 +295,26 @@ fn state() -> &'static RwLock<State> {
             ("H100", 8, &specs::H100),
             ("GB200", 72, &specs::GB200),
         ] {
-            let id = st.specs.len() as u16;
-            st.by_name.insert(name.to_ascii_lowercase(), id);
-            st.specs.push(Box::leak(Box::new(HwSpec {
+            slab.push(HwSpec {
                 name: name.to_string(),
                 gpus_per_node,
                 gpu: gpu.clone(),
                 freq_curve: None,
                 derived: false,
-            })));
+            });
         }
-        RwLock::new(st)
+        slab
     })
+}
+
+/// Lock-free case-insensitive name lookup (the catalog stays small —
+/// dozens of entries — so a linear scan beats maintaining a locked
+/// index that readers would have to share).
+fn find_by_name(name: &str) -> Option<(u16, &'static HwSpec)> {
+    slab()
+        .iter()
+        .find(|(_, s)| s.name.eq_ignore_ascii_case(name))
+        .map(|(i, s)| (i as u16, s))
 }
 
 /// The process-wide interned hardware registry. All methods are
@@ -249,24 +323,26 @@ fn state() -> &'static RwLock<State> {
 pub struct Catalog;
 
 impl Catalog {
-    /// Resolve an id to its (immutable, leaked) spec.
+    /// Resolve an id to its (immutable, leaked) spec. Lock-free: two
+    /// `Acquire` loads (chunk, then slot).
     pub fn get(id: HwId) -> &'static HwSpec {
-        state().read().unwrap().specs[id.0 as usize]
+        slab().get(id.0 as usize)
     }
 
     /// Case-insensitive name lookup; the error enumerates every
     /// accepted name, built-ins first then loaded entries in
-    /// registration order.
+    /// registration order. Lock-free, so a `parse` racing a
+    /// `load_str`/`register` on another thread never blocks and always
+    /// sees at least every entry published before it started (tested
+    /// in `tests/catalog_integration.rs`).
     pub fn parse(name: &str) -> Result<HwId, String> {
-        let st = state().read().unwrap();
-        if let Some(&i) = st.by_name.get(&name.to_ascii_lowercase()) {
+        if let Some((i, _)) = find_by_name(name) {
             return Ok(HwId(i));
         }
-        let accepted: Vec<String> = st
-            .specs
+        let accepted: Vec<String> = slab()
             .iter()
-            .filter(|s| !s.derived)
-            .map(|s| s.name.to_ascii_lowercase())
+            .filter(|(_, s)| !s.derived)
+            .map(|(_, s)| s.name.to_ascii_lowercase())
             .collect();
         Err(format!(
             "unknown hardware '{name}' (expected one of: {})",
@@ -275,13 +351,14 @@ impl Catalog {
 
     /// Intern a spec. Identical re-registration (same name, same
     /// values) returns the existing id; a name collision with
-    /// different values is an error — ids are forever.
+    /// different values is an error — ids are forever. Writers
+    /// serialize behind a mutex readers never touch.
     pub fn register(spec: HwSpec) -> Result<HwId, String> {
         validate(&spec)?;
-        let mut st = state().write().unwrap();
-        let key = spec.name.to_ascii_lowercase();
-        if let Some(&i) = st.by_name.get(&key) {
-            if *st.specs[i as usize] == spec {
+        let slab = slab();
+        let _writer = WRITER.lock().unwrap();
+        if let Some((i, existing)) = find_by_name(&spec.name) {
+            if *existing == spec {
                 return Ok(HwId(i));
             }
             return Err(format!(
@@ -289,28 +366,22 @@ impl Catalog {
                  spec; catalog entries are immutable — pick another name",
                 spec.name));
         }
-        if st.specs.len() > u16::MAX as usize {
+        if slab.len() > u16::MAX as usize {
             return Err("hardware catalog is full".into());
         }
-        let id = st.specs.len() as u16;
-        st.by_name.insert(key, id);
-        st.specs.push(Box::leak(Box::new(spec)));
-        Ok(HwId(id))
+        Ok(HwId(slab.push(spec)))
     }
 
     /// Every registered id, in registration order (built-ins first).
     pub fn ids() -> Vec<HwId> {
-        let n = state().read().unwrap().specs.len();
-        (0..n as u16).map(HwId).collect()
+        (0..slab().len() as u16).map(HwId).collect()
     }
 
     /// Registered ids excluding derived (frequency-capped) variants —
     /// what design-space scenarios like `madmax` enumerate.
     pub fn primary_ids() -> Vec<HwId> {
-        let st = state().read().unwrap();
-        st.specs
+        slab()
             .iter()
-            .enumerate()
             .filter(|(_, s)| !s.derived)
             .map(|(i, _)| HwId(i as u16))
             .collect()
@@ -318,13 +389,12 @@ impl Catalog {
 
     /// Display names in registration order.
     pub fn names() -> Vec<String> {
-        let st = state().read().unwrap();
-        st.specs.iter().map(|s| s.name.clone()).collect()
+        slab().iter().map(|(_, s)| s.name.clone()).collect()
     }
 
     /// Number of registered entries (≥ 4: the built-ins).
     pub fn len() -> usize {
-        state().read().unwrap().specs.len()
+        slab().len()
     }
 
     /// Load a catalog TOML document: one `[section]` per hardware
@@ -492,15 +562,9 @@ fn spec_from_doc(doc: &toml::Document, section: &str)
 /// happens only for genuinely new names (whose spec is then leaked
 /// alongside it anyway).
 fn leaked_name(candidate: &str) -> &'static str {
-    {
-        let st = state().read().unwrap();
-        if let Some(&i) =
-            st.by_name.get(&candidate.to_ascii_lowercase())
-        {
-            let existing = st.specs[i as usize];
-            if existing.gpu.name == candidate {
-                return existing.gpu.name;
-            }
+    if let Some((_, existing)) = find_by_name(candidate) {
+        if existing.gpu.name == candidate {
+            return existing.gpu.name;
         }
     }
     Box::leak(candidate.to_string().into_boxed_str())

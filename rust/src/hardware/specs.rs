@@ -5,7 +5,7 @@
 //! and are addressed by the same interned [`HwId`](super::HwId)
 //! handles.
 
-use super::catalog::HwId;
+use super::catalog::{HwId, HwSpec};
 
 /// Per-GPU datasheet numbers + simulator coefficients.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,15 +49,37 @@ impl GpuSpec {
 /// Node composition: `gpus_per_node` GPUs in one NVLink domain. Always
 /// the canonical shape for its hardware (built from [`HwId::node`]) —
 /// the collective cost memo keys by `gpu` alone and asserts this.
+///
+/// The catalog spec is resolved once at construction and carried as a
+/// `&'static` reference, so the simulation hot path (collective cost
+/// model, workload kernels, memory caps, power) reads hardware rates
+/// through a plain pointer — no catalog lookup, not even an atomic
+/// load, per query. The private field keeps every `NodeSpec` canonical
+/// for its id (construct via [`HwId::node`]).
 #[derive(Debug, Clone, Copy)]
 pub struct NodeSpec {
     pub gpus_per_node: usize,
     pub gpu: HwId,
+    hw: &'static HwSpec,
 }
 
 impl NodeSpec {
+    /// Canonical node shape for a catalog entry (same as
+    /// [`HwId::node`]).
+    pub fn new(gpu: HwId) -> NodeSpec {
+        let hw = gpu.spec();
+        NodeSpec { gpus_per_node: hw.gpus_per_node, gpu, hw }
+    }
+
+    /// The per-GPU datasheet numbers + simulator coefficients, through
+    /// the carried `&'static` reference (no catalog access).
     pub fn spec(&self) -> &'static GpuSpec {
-        self.gpu.gpu()
+        &self.hw.gpu
+    }
+
+    /// The full catalog entry this node was built from.
+    pub fn hw_spec(&self) -> &'static HwSpec {
+        self.hw
     }
 }
 

@@ -113,14 +113,27 @@
 //!   id, group placement), so neighboring grid points stop re-deriving
 //!   identical ring/tree costs. Cached entries are stored verbatim:
 //!   bit-identical to the uncached call.
+//! * **Steady-state compression** — plain-1F1B configs with
+//!   `microbatches >= pp` emit through a static wave driver (the op
+//!   order is known in closed form, so the ready-queue and per-op
+//!   readiness checks vanish), and the fused executor coalesces busy
+//!   intervals into runs at push time, collapsing the steady state's
+//!   periodic cycles into O(runs) interval algebra. Fall-backs and
+//!   compression ratios are observable via
+//!   `SimArena::steady_stats`/`interval_stats`; the bit-identity
+//!   contract is unchanged (`docs/performance.md` has the proofs).
 //!
-//! [`planner::best`] additionally bound-and-prunes: candidates whose
+//! [`planner::best`] additionally bound-and-prunes — in parallel, with
+//! the incumbent throughput shared through an atomic so any worker's
+//! improvement tightens every worker's prune: candidates whose
 //! compute-only throughput bound ([`sim::iter_time_lower_bound`])
 //! cannot beat the incumbent are skipped before simulation, with the
 //! winner (including tie-breaks) provably identical to the exhaustive
-//! sweep's. `dtsim bench` runs the pinned fig6 grid and writes
-//! `BENCH_study.json` (configs/s, cache hit rate, peak RSS) so the
-//! perf trajectory is tracked across PRs; CI emits it on every push.
+//! sweep's. `dtsim bench` runs the pinned grids and writes
+//! `BENCH_study.json` (configs/s, cache hit rate, compression stats,
+//! peak RSS) so the perf trajectory is tracked across PRs; CI emits it
+//! on every push and gates `--compare` against the committed
+//! `BENCH_baseline.json` (methodology: `docs/performance.md`).
 //!
 //! Python is build-time only; the binary is self-contained once
 //! `make artifacts` has run.

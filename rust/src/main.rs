@@ -63,6 +63,7 @@ USAGE:
   dtsim repro      [fig1|fig2|...|fig14|table1|headline|all]
                    [--out reports]
   dtsim bench      [--out BENCH_study.json] [--threads N] [--quick]
+                   [--compare BENCH_baseline.json] [--threshold 0.5]
   dtsim collectives [--gen h100] [--op allgather] [--mb 1024]
   dtsim train      [--config tiny] [--workers 2] [--steps 30]
                    [--lr 1e-3] [--threaded] [--ckpt path] [--seed 0]
@@ -455,7 +456,12 @@ fn cmd_repro(args: &Args) -> Result<()> {
 /// (`study::bench_pinned_study`, the Fig. 6 sweep at 256 GPUs), written
 /// to a JSON file so CI tracks the perf trajectory across PRs:
 /// configs/s on a cold runner, warm-cache rerun latency, the
-/// collective cost-memo hit rate, and peak RSS.
+/// collective cost-memo hit rate, steady-state compression counters,
+/// and peak RSS. `--compare BASE.json` additionally prints per-field
+/// deltas against a previous run and exits nonzero when a gated
+/// throughput field regresses below `--threshold` (default 0.5) times
+/// its baseline — the CI regression gate against the committed
+/// `BENCH_baseline.json`.
 fn cmd_bench(args: &Args) -> Result<()> {
     use std::time::Instant;
 
@@ -476,6 +482,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut evaluated = 0usize;
     let mut cost_hits = 0u64;
     let mut cost_misses = 0u64;
+    let mut steady = 0u64;
+    let mut fallback = 0u64;
+    let mut intervals = 0u64;
+    let mut runs = 0u64;
     for _ in 0..reps {
         let mut runner = StudyRunner::new(threads);
         let t0 = Instant::now();
@@ -489,8 +499,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
             best_cps = cps;
             evaluated = ev;
             (cost_hits, cost_misses) = runner.cost_cache_stats();
+            (steady, fallback) = runner.steady_stats();
+            (intervals, runs) = runner.interval_stats();
         }
     }
+    // Steady-state compression diagnostics: what fraction of
+    // evaluations took the wave driver, and how far run-coalescing
+    // shrank the interval algebra.
+    let steady_frac = if steady + fallback > 0 {
+        steady as f64 / (steady + fallback) as f64
+    } else {
+        0.0
+    };
+    let interval_compression = if runs > 0 {
+        intervals as f64 / runs as f64
+    } else {
+        0.0
+    };
 
     // Warm rerun: every configuration served from the config cache.
     let mut warmed = StudyRunner::new(threads);
@@ -540,6 +565,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"simulated\": {},\n  \"configs_per_s\": {:.1},\n  \
          \"warm_rerun_ms\": {:.3},\n  \
          \"collective_cache_hit_rate\": {:.4},\n  \
+         \"steady_driver_frac\": {:.4},\n  \
+         \"interval_compression\": {:.2},\n  \
          \"sched_grid_points\": {},\n  \"sched_simulated\": {},\n  \
          \"sched_configs_per_s\": {:.1},\n  \
          \"hw_grid_points\": {},\n  \"hw_simulated\": {},\n  \
@@ -547,6 +574,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"hw_cache_hit_rate\": {:.4},\n  \
          \"peak_rss_bytes\": {},\n  \"threads\": {},\n  \"reps\": {}\n}}\n",
         study.name, points.len(), evaluated, best_cps, warm_ms, hit_rate,
+        steady_frac, interval_compression,
         sched_points.len(), sched_evaluated, sched_cps,
         hw_points.len(), hw_evaluated, hw_cps, hw_hit_rate,
         peak_rss_bytes(), threads, reps);
@@ -558,7 +586,101 @@ fn cmd_bench(args: &Args) -> Result<()> {
     std::fs::write(&out, &json)?;
     print!("{json}");
     println!("wrote {}", out.display());
+
+    if let Some(base_path) = args.get("compare") {
+        let threshold = args.f64_or("threshold", 0.5);
+        compare_bench(&json, base_path, threshold)?;
+    }
     Ok(())
+}
+
+/// Throughput-like fields gated by `dtsim bench --compare` (higher is
+/// better): a run regresses when `current < threshold × baseline`.
+const BENCH_GATED_FIELDS: &[&str] =
+    &["configs_per_s", "sched_configs_per_s", "hw_configs_per_s"];
+
+/// Compare a freshly-written bench JSON against a baseline file: print
+/// per-field deltas for every numeric field the two runs share (in key
+/// order), then fail (exit code 3) if any gated throughput field
+/// dropped below `threshold` times its baseline. Non-gated fields (hit
+/// rates, RSS, grid sizes) are informational only — they vary with the
+/// grid and the host. Both documents go through the crate's JSON
+/// parser (`util::json`), so free-text fields like the baseline's
+/// `note` can never be misread as values.
+fn compare_bench(current: &str, base_path: &str, threshold: f64)
+    -> Result<()>
+{
+    if !(threshold > 0.0 && threshold <= 1.0) {
+        bail!("--threshold {threshold} outside (0, 1]");
+    }
+    let base_text = std::fs::read_to_string(base_path)
+        .map_err(|e| anyhow!("read baseline {base_path}: {e}"))?;
+    let base = dtsim::util::json::Json::parse(&base_text)
+        .map_err(|e| anyhow!("baseline {base_path}: {e}"))?;
+    let current = dtsim::util::json::Json::parse(current)
+        .map_err(|e| anyhow!("bench output: {e}"))?;
+    println!("\ncomparing against {base_path} \
+              (regression threshold {threshold}):");
+    println!("{:<28} {:>14} {:>14} {:>9}",
+             "field", "baseline", "current", "delta");
+    for (key, bv) in base.as_object().into_iter().flatten() {
+        let (Some(b), Some(c)) =
+            (bv.as_f64(),
+             current.get(key).and_then(|v| v.as_f64()))
+        else {
+            continue;
+        };
+        let delta = if b != 0.0 {
+            format!("{:+.1}%", (c - b) / b * 100.0)
+        } else {
+            "n/a".to_string()
+        };
+        println!("{key:<28} {b:>14.3} {c:>14.3} {delta:>9}");
+    }
+    // A gated field the baseline cannot gate (absent, or a zeroed
+    // value from a failed run) must be loud, not silently ungated.
+    for key in BENCH_GATED_FIELDS {
+        match base.get(key).and_then(|v| v.as_f64()) {
+            Some(b) if b > 0.0 => {}
+            _ => eprintln!(
+                "warning: gate disabled for {key} — baseline value \
+                 missing or non-positive; regenerate the baseline"),
+        }
+    }
+    let regressions = bench_regressions(&current, &base, threshold);
+    if !regressions.is_empty() {
+        eprintln!("\nbench regression detected:");
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        std::process::exit(3);
+    }
+    println!("\nno gated regressions.");
+    Ok(())
+}
+
+/// Gated fields of `current` that fell below `threshold` times their
+/// `base` value — the pure core of the `--compare` gate. Fields
+/// missing from either document (older schemas) are skipped.
+fn bench_regressions(
+    current: &dtsim::util::json::Json,
+    base: &dtsim::util::json::Json,
+    threshold: f64,
+) -> Vec<String> {
+    let mut regressions = Vec::new();
+    for key in BENCH_GATED_FIELDS {
+        let (Some(b), Some(c)) =
+            (base.get(key).and_then(|v| v.as_f64()),
+             current.get(key).and_then(|v| v.as_f64()))
+        else {
+            continue;
+        };
+        if b > 0.0 && c < threshold * b {
+            regressions.push(format!(
+                "{key}: {c:.1} < {threshold} x baseline {b:.1}"));
+        }
+    }
+    regressions
 }
 
 /// Peak resident set (VmHWM) in bytes; 0 where /proc is unavailable.
@@ -656,6 +778,56 @@ fn cmd_trace(args: &Args) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const BENCH_JSON: &str = "{\n  \"bench\": \"study_runner/x\",\n  \
+        \"note\": \"mentions configs_per_s freely\",\n  \
+        \"grid_points\": 300,\n  \"configs_per_s\": 120.5,\n  \
+        \"warm_rerun_ms\": 4.250,\n  \"sched_configs_per_s\": 80.0,\n  \
+        \"hw_configs_per_s\": 44.0,\n  \"threads\": 2\n}\n";
+
+    fn bench_json(text: &str) -> dtsim::util::json::Json {
+        dtsim::util::json::Json::parse(text).expect("valid bench json")
+    }
+
+    #[test]
+    fn bench_regression_gate_fires_only_below_threshold() {
+        let base = bench_json(BENCH_JSON);
+        // Current at exactly the baseline: no regression. The
+        // free-text "note" field mentioning a gated key must not
+        // confuse the (real JSON) parser.
+        assert!(bench_regressions(&base, &base, 0.5).is_empty());
+        // Halving the headline throughput at threshold 0.5 passes
+        // (not strictly below); dropping further fails the gate.
+        let half = bench_json(&BENCH_JSON.replace("120.5", "60.25"));
+        assert!(bench_regressions(&half, &base, 0.5).is_empty());
+        let tenth = bench_json(&BENCH_JSON.replace("120.5", "12.0"));
+        let regs = bench_regressions(&tenth, &base, 0.5);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("configs_per_s"), "{regs:?}");
+        // Non-gated fields never fire, even when they collapse.
+        let slow_warm =
+            bench_json(&BENCH_JSON.replace("4.250", "4000.0"));
+        assert!(bench_regressions(&slow_warm, &base, 0.5).is_empty());
+        // A baseline missing a gated field (older schema) is skipped.
+        let old = bench_json(&BENCH_JSON.replace(
+            "\"hw_configs_per_s\": 44.0,\n  ", ""));
+        let cur = bench_json(&BENCH_JSON.replace("44.0", "1.0"));
+        assert!(bench_regressions(&cur, &old, 0.5).is_empty());
+        // The committed baseline parses and carries every gated field
+        // with a positive (actually gating) value — a zeroed field
+        // would silently disable its gate.
+        let committed = std::fs::read_to_string("BENCH_baseline.json")
+            .expect("committed baseline readable");
+        let committed = bench_json(&committed);
+        for key in BENCH_GATED_FIELDS {
+            let v = committed.get(key).and_then(|v| v.as_f64());
+            assert!(v.is_some_and(|v| v > 0.0),
+                    "baseline gated field {key} missing or \
+                     non-positive: {v:?}");
+        }
+        assert!(bench_regressions(&committed, &committed, 0.5)
+            .is_empty());
+    }
 
     #[test]
     fn plan_shapes_parse() {

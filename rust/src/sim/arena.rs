@@ -24,6 +24,11 @@ pub struct SimArena {
     /// Graph engine + timeline, used only when the engine is forced.
     pub(crate) engine: Engine,
     pub(crate) timeline: Timeline,
+    /// Fused evaluations served by the steady-state wave driver.
+    pub(crate) steady: u64,
+    /// Fused evaluations that fell back to the ready-queue driver
+    /// (interleaved schedules, `m < pp` residuals).
+    pub(crate) general: u64,
     force_engine: bool,
 }
 
@@ -42,6 +47,8 @@ impl SimArena {
             scratch: BuildScratch::default(),
             engine: Engine::default(),
             timeline: Timeline::default(),
+            steady: 0,
+            general: 0,
             force_engine: force,
         }
     }
@@ -61,6 +68,23 @@ impl SimArena {
     /// Collective-cost memo (hits, misses) accumulated by this arena.
     pub fn cost_stats(&self) -> (u64, u64) {
         self.costs.stats()
+    }
+
+    /// Fused evaluations by schedule driver: `(steady, fallback)` —
+    /// how many ran through the compressed steady-state wave driver vs
+    /// the general ready-queue driver (interleaved schedules and
+    /// `m < pp` residuals fall back). Forced-engine evaluations count
+    /// in neither.
+    pub fn steady_stats(&self) -> (u64, u64) {
+        (self.steady, self.general)
+    }
+
+    /// Interval-compression diagnostic from the fused executor:
+    /// `(intervals recorded, runs stored)` — in steady state,
+    /// back-to-back events coalesce into a handful of runs per device,
+    /// so `runs` stays far below `recorded`.
+    pub fn interval_stats(&self) -> (u64, u64) {
+        self.fused.interval_stats()
     }
 }
 

@@ -333,6 +333,60 @@ fn merge(mut v: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
     out
 }
 
+/// Append interval `(s, e)` to a coalesced, start-ordered run list —
+/// the incremental form of [`merge_into`]'s fold, valid because each
+/// stream's interval starts are non-decreasing (a stream cursor only
+/// advances). Produces exactly the merged list `merge_into` computes
+/// over the same sequence: the sort is the identity on sorted input,
+/// and the coalescing criterion is shared verbatim. Used by the fused
+/// fast path to compress steady-state cycles into O(runs) storage.
+pub(crate) fn coalesce_push(v: &mut Vec<(f64, f64)>, s: f64, e: f64) {
+    if let Some(last) = v.last_mut() {
+        debug_assert!(s >= last.0, "coalesce_push needs sorted starts");
+        if s <= last.1 + 1e-15 {
+            last.1 = last.1.max(e);
+            return;
+        }
+    }
+    v.push((s, e));
+}
+
+/// Union of two coalesced, start-ordered run lists into `out` — the
+/// two-pointer equivalent of concatenating the raw interval streams,
+/// sorting by start, and folding with [`merge_into`]. Equivalence:
+/// (a) pre-coalescing within one stream can never join a pair the
+/// combined fold would keep apart — any interval sorted between two
+/// coalescable same-stream intervals starts no later than the second,
+/// so it bridges into the same run — and (b) on equal starts the union
+/// is tie-order independent (the run keeps the shared start; the run
+/// end is an exact `max`). Tested against the sort-based fold below.
+pub(crate) fn union_into(
+    a: &[(f64, f64)],
+    b: &[(f64, f64)],
+    out: &mut Vec<(f64, f64)>,
+) {
+    out.clear();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let from_a =
+            j >= b.len() || (i < a.len() && a[i].0 <= b[j].0);
+        let (s, e) = if from_a {
+            i += 1;
+            a[i - 1]
+        } else {
+            j += 1;
+            b[j - 1]
+        };
+        if let Some(last) = out.last_mut() {
+            if s <= last.1 + 1e-15 {
+                last.1 = last.1.max(e);
+                continue;
+            }
+        }
+        out.push((s, e));
+    }
+}
+
 pub(crate) fn total(v: &[(f64, f64)]) -> f64 {
     v.iter().map(|(s, e)| e - s).sum()
 }
@@ -556,6 +610,104 @@ mod tests {
         assert_eq!(s.by_tag[&Tag::AllGatherParams], 2.0);
         assert_eq!(s.by_tag[&Tag::ReduceScatterGrads], 1.0);
         assert_eq!(s.by_tag[&Tag::FwdCompute], 1.5);
+    }
+
+    #[test]
+    fn coalesce_push_matches_sorted_merge() {
+        // Randomized monotone interval streams: push-time coalescing
+        // must equal merge_into over the same sequence, bit for bit.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0A1E5CE);
+        for _ in 0..200 {
+            let mut cursor = 0.0f64;
+            let mut raw: Vec<(f64, f64)> = Vec::new();
+            let mut runs: Vec<(f64, f64)> = Vec::new();
+            for _ in 0..40 {
+                // Mix exact-adjacent, overlapping-ish, and gapped
+                // intervals (gap 0 ⇒ coalesce; > 0 ⇒ new run).
+                let gap = match rng.next_below(3) {
+                    0 => 0.0,
+                    1 => 1e-16, // inside the merge epsilon
+                    _ => 0.25 + rng.next_below(100) as f64 / 64.0,
+                };
+                let s = cursor + gap;
+                let e = s + 0.1 + rng.next_below(50) as f64 / 128.0;
+                raw.push((s, e));
+                coalesce_push(&mut runs, s, e);
+                cursor = e;
+            }
+            let mut reference = Vec::new();
+            merge_into(&mut raw.clone(), &mut reference);
+            assert_eq!(runs.len(), reference.len());
+            for (a, b) in runs.iter().zip(&reference) {
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+                assert_eq!(a.1.to_bits(), b.1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn union_into_matches_sort_based_merge() {
+        // Two monotone coalesced streams vs sorting their raw
+        // concatenation: the merged runs must agree bit for bit — the
+        // equivalence the fused fast path's sort-free finish relies on.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x0501_0FF5);
+        for _ in 0..200 {
+            let mut raw_all: Vec<(f64, f64)> = Vec::new();
+            let mut streams: [Vec<(f64, f64)>; 2] =
+                [Vec::new(), Vec::new()];
+            for stream in &mut streams {
+                let mut cursor = rng.next_below(8) as f64 / 4.0;
+                for _ in 0..30 {
+                    let gap = match rng.next_below(3) {
+                        0 => 0.0,
+                        1 => 1e-16,
+                        _ => 0.125 + rng.next_below(64) as f64 / 32.0,
+                    };
+                    let s = cursor + gap;
+                    let e = s + 0.05 + rng.next_below(96) as f64 / 64.0;
+                    raw_all.push((s, e));
+                    coalesce_push(stream, s, e);
+                    cursor = e;
+                }
+            }
+            let mut merged = Vec::new();
+            union_into(&streams[0], &streams[1], &mut merged);
+            let mut reference = Vec::new();
+            merge_into(&mut raw_all, &mut reference);
+            assert_eq!(merged.len(), reference.len(),
+                       "{merged:?} vs {reference:?}");
+            for (a, b) in merged.iter().zip(&reference) {
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+                assert_eq!(a.1.to_bits(), b.1.to_bits());
+            }
+            // And the derived sums the report uses agree bitwise too.
+            assert_eq!(total(&merged).to_bits(),
+                       total(&reference).to_bits());
+        }
+    }
+
+    #[test]
+    fn union_into_handles_empty_and_nested_streams() {
+        let mut out = Vec::new();
+        union_into(&[], &[], &mut out);
+        assert!(out.is_empty());
+        union_into(&[(1.0, 2.0)], &[], &mut out);
+        assert_eq!(out, vec![(1.0, 2.0)]);
+        union_into(&[], &[(1.0, 2.0)], &mut out);
+        assert_eq!(out, vec![(1.0, 2.0)]);
+        // One stream nested inside the other's run.
+        union_into(&[(0.0, 5.0)], &[(1.0, 2.0), (3.0, 4.0)], &mut out);
+        assert_eq!(out, vec![(0.0, 5.0)]);
+        // Bridging: B joins two A runs.
+        union_into(&[(0.0, 1.0), (1.5, 2.0)], &[(0.9, 1.6)], &mut out);
+        assert_eq!(out, vec![(0.0, 2.0)]);
+        // Equal starts, either order.
+        union_into(&[(1.0, 3.0)], &[(1.0, 2.0)], &mut out);
+        assert_eq!(out, vec![(1.0, 3.0)]);
+        union_into(&[(1.0, 2.0)], &[(1.0, 3.0)], &mut out);
+        assert_eq!(out, vec![(1.0, 3.0)]);
     }
 
     #[test]

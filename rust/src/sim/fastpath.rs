@@ -1,28 +1,45 @@
 //! Fused emit+execute fast path: runs the 1F1B emission logic directly
 //! against per-stream time cursors instead of materializing an event
-//! graph, then derives device stats from arena-reused interval buffers.
+//! graph, then derives device stats from run-coalesced interval
+//! buffers.
 //!
-//! Exactness: the emitter (`sim::emit_iteration`) is shared with the
-//! graph engine, and [`FusedEngine::push_event`] performs the *same*
-//! f64 operations in the *same* per-device order as
+//! Exactness: the emitters (`sim::emit_iteration` and the steady-state
+//! wave driver) are shared with the graph engine through the event-sink
+//! trait, and [`FusedEngine::push_event`] performs the *same* f64
+//! operations in the *same* per-device order as
 //! [`Engine::run`](super::Engine::run) — `start = max(stream cursor,
 //! dep ends)`, `end = start + dur` — so iteration reports are
-//! bit-identical to the event engine, not approximations. The property
-//! test `tests/fastpath_vs_engine.rs` cross-validates the two paths
-//! over randomized configurations; set `DTSIM_FORCE_ENGINE=1` (or
-//! `SimArena::force_engine`) to route everything through the graph
+//! bit-identical to the event engine, not approximations.
+//!
+//! # Steady-state interval compression
+//!
+//! The executor never stores raw per-event intervals. Each interval
+//! source is monotone in start time (a stream's cursor only advances),
+//! so busy intervals coalesce into merged *runs* at push time with
+//! exactly the fold `Timeline::device_stats` applies after sorting
+//! ([`coalesce_push`]); the two comm streams' run lists are then
+//! union-merged sort-free at finish ([`union_into`]). In the schedule's
+//! steady state consecutive cycles butt against each other, so the run
+//! lists stop growing — the per-device interval algebra collapses from
+//! O(events) (with a sort) to O(runs) — while every derived quantity
+//! (busy totals, exposure, kernel-time sums) remains the *same chained
+//! f64 arithmetic over the same values* the engine path computes.
+//! The property test `tests/fastpath_vs_engine.rs` cross-validates the
+//! two paths over randomized configurations; set `DTSIM_FORCE_ENGINE=1`
+//! (or `SimArena::force_engine`) to route everything through the graph
 //! engine for debugging/tracing.
 
 use super::engine::{
-    merge_into, subtract_len, total, DeviceStats, EventId, EventSink,
-    Tag, TagTotals, N_STREAMS,
+    coalesce_push, subtract_len, total, union_into, DeviceStats,
+    EventId, EventSink, Tag, TagTotals, N_STREAMS, STREAM_COMM_MP,
 };
 
 /// Direct executor: computes each event's schedule at push time (all
 /// dependencies precede their dependents by construction) and keeps
 /// only what downstream consumers need — per-event end times for
-/// dependency resolution, and per-device busy intervals + tag totals
-/// for the iteration report. All buffers recycle across evaluations.
+/// dependency resolution, and per-device coalesced busy runs + tag
+/// totals for the iteration report. All buffers recycle across
+/// evaluations.
 #[derive(Debug, Default)]
 pub(crate) struct FusedEngine {
     n_devices: usize,
@@ -30,13 +47,25 @@ pub(crate) struct FusedEngine {
     end: Vec<f64>,
     cursor: Vec<[f64; N_STREAMS]>,
     makespan: f64,
-    /// Per-device compute-stream busy intervals, in emission order.
+    /// Per-device coalesced compute runs. The compute stream is a
+    /// single monotone interval source, so push-time coalescing yields
+    /// exactly the merged list the engine path's sort-and-fold does.
     comp: Vec<Vec<(f64, f64)>>,
-    /// Per-device comm-stream busy intervals (both communicators).
-    comm: Vec<Vec<(f64, f64)>>,
+    /// Per-device coalesced comm runs, one list per communicator
+    /// (`[DP, MP]` streams) — each monotone on its own, union-merged
+    /// at finish.
+    comm: Vec<[Vec<(f64, f64)>; 2]>,
+    /// Per-device NCCL kernel time, accumulated in push order — term
+    /// for term the chained sum `device_stats` computes over raw
+    /// intervals.
+    kernel: Vec<f64>,
     by_tag: Vec<TagTotals>,
-    merged_comp: Vec<(f64, f64)>,
     merged_comm: Vec<(f64, f64)>,
+    /// Nonzero-duration intervals recorded (cumulative across resets).
+    recorded: u64,
+    /// Coalesced runs those intervals collapsed into (tallied at
+    /// finish; cumulative across resets).
+    runs: u64,
 }
 
 impl FusedEngine {
@@ -49,43 +78,53 @@ impl FusedEngine {
         for v in &mut self.comp {
             v.clear();
         }
-        for v in &mut self.comm {
-            v.clear();
+        for lanes in &mut self.comm {
+            lanes[0].clear();
+            lanes[1].clear();
         }
         if self.comp.len() < n_devices {
             self.comp.resize_with(n_devices, Vec::new);
         }
         if self.comm.len() < n_devices {
-            self.comm.resize_with(n_devices, Vec::new);
+            self.comm.resize_with(n_devices, Default::default);
         }
+        self.kernel.clear();
+        self.kernel.resize(n_devices, 0.0);
         self.by_tag.clear();
         self.by_tag.resize(n_devices, TagTotals::new());
     }
 
+    /// `(intervals recorded, runs stored)` since construction — the
+    /// steady-state compression ratio diagnostic.
+    pub fn interval_stats(&self) -> (u64, u64) {
+        (self.recorded, self.runs)
+    }
+
     /// Device stats after emission — same interval-union/subtraction
-    /// algebra as [`Timeline::device_stats`](super::Timeline), over the
-    /// identical per-device interval sequences.
+    /// algebra as [`Timeline::device_stats`](super::Timeline), over
+    /// per-device run lists that are already the merged intervals that
+    /// algebra would produce.
     pub fn finish(&mut self) -> (f64, Vec<DeviceStats>) {
         let mut stages = Vec::with_capacity(self.n_devices);
-        for d in 0..self.n_devices {
-            let comm_kernel_time: f64 =
-                self.comm[d].iter().map(|(s, e)| e - s).sum();
-            merge_into(&mut self.comp[d], &mut self.merged_comp);
-            merge_into(&mut self.comm[d], &mut self.merged_comm);
-            let compute_busy = total(&self.merged_comp);
+        for dev in 0..self.n_devices {
+            let [dp, mp] = &self.comm[dev];
+            union_into(dp, mp, &mut self.merged_comm);
+            let compute_busy = total(&self.comp[dev]);
             let comm_busy = total(&self.merged_comm);
             let exposed =
-                subtract_len(&self.merged_comm, &self.merged_comp);
+                subtract_len(&self.merged_comm, &self.comp[dev]);
+            self.runs +=
+                (self.comp[dev].len() + dp.len() + mp.len()) as u64;
             // union = compute + (comm \ compute)
             let busy_union = compute_busy + exposed;
             stages.push(DeviceStats {
                 compute_busy,
                 comm_busy,
-                comm_kernel_time,
+                comm_kernel_time: self.kernel[dev],
                 exposed_comm: exposed,
                 idle: (self.makespan - busy_union).max(0.0),
                 span: self.makespan,
-                by_tag: self.by_tag[d],
+                by_tag: self.by_tag[dev],
             });
         }
         (self.makespan, stages)
@@ -113,10 +152,15 @@ impl EventSink for FusedEngine {
         // Zero-duration events still advance dependency chains above,
         // but are never recorded — matching `device_stats`' filter.
         if dur > 0.0 {
+            self.recorded += 1;
             if tag.is_comm() {
-                self.comm[device].push((t, e));
+                // Kernel time: the same terms, in the same per-device
+                // order, as the engine path's raw-interval sum.
+                self.kernel[device] += e - t;
+                let lane = usize::from(stream == STREAM_COMM_MP);
+                coalesce_push(&mut self.comm[device][lane], t, e);
             } else {
-                self.comp[device].push((t, e));
+                coalesce_push(&mut self.comp[device], t, e);
             }
             self.by_tag[device].add(tag, dur);
         }
@@ -182,5 +226,38 @@ mod tests {
         assert_eq!(m2, 0.5);
         assert_eq!(s2[0].compute_busy, 0.5);
         assert!(!s2[0].by_tag.contains_key(&Tag::FwdCompute));
+    }
+
+    #[test]
+    fn back_to_back_events_coalesce_into_one_run() {
+        // A steady-state-like chain: 100 contiguous compute events and
+        // 100 contiguous DP comm events collapse to one run each, while
+        // every aggregate matches the naive accounting.
+        let mut f = FusedEngine::default();
+        f.reset(1);
+        let mut dep: Option<EventId> = None;
+        for _ in 0..100 {
+            let deps: Vec<EventId> = dep.into_iter().collect();
+            dep = Some(f.push_event(0, STREAM_COMPUTE, 0.125, &deps,
+                                    Tag::FwdCompute));
+        }
+        for _ in 0..100 {
+            f.push_event(0, STREAM_COMM_DP, 0.25, &[],
+                         Tag::AllGatherParams);
+        }
+        assert_eq!(f.comp[0].len(), 1, "contiguous compute must coalesce");
+        assert_eq!(f.comm[0][0].len(), 1, "contiguous comm must coalesce");
+        let (recorded_before, _) = f.interval_stats();
+        assert_eq!(recorded_before, 200);
+        let (makespan, stats) = f.finish();
+        assert_eq!(makespan, 25.0);
+        assert_eq!(stats[0].compute_busy, 12.5);
+        assert_eq!(stats[0].comm_busy, 25.0);
+        assert_eq!(stats[0].comm_kernel_time, 25.0);
+        // comm [0,25) minus compute [0,12.5) exposes 12.5.
+        assert!((stats[0].exposed_comm - 12.5).abs() < 1e-12);
+        let (recorded, runs) = f.interval_stats();
+        assert_eq!(recorded, 200);
+        assert_eq!(runs, 2, "200 intervals stored as 2 runs");
     }
 }

@@ -32,9 +32,20 @@
 //! schedule directly against per-stream time cursors, recycling every
 //! buffer through a per-worker [`SimArena`]. Collective costs are
 //! memoized in a [`CostCache`](crate::collectives::CostCache) keyed by
-//! (op, payload bits, hardware id, placement). Because the fused path
-//! performs the same f64 operations in the same per-device order as
-//! [`Engine::run`], its reports are **bit-identical** to the event
+//! (op, payload bits, hardware id, placement).
+//!
+//! Two **steady-state compression** layers sit on top (PR 5, details
+//! in `docs/performance.md`): eligible schedules (plain 1F1B with
+//! `m >= pp`) emit through a *static wave driver* whose op order is
+//! known in closed form — no ready-queue, no readiness checks, no
+//! materialized op tables — and the fused executor coalesces busy
+//! intervals into *runs* at push time, so the steady state's periodic
+//! cycles collapse into O(runs) interval storage and a sort-free
+//! report. Ineligible configurations (interleaved schedules, `m < pp`
+//! residuals) fall back to the general ready-queue driver
+//! ([`SimArena::steady_stats`] observes the split). Because every
+//! layer performs the same f64 operations in the same per-device order
+//! as [`Engine::run`], reports stay **bit-identical** to the event
 //! engine's — enforced by `tests/fastpath_vs_engine.rs`. Use
 //! [`simulate_engine`] (or `DTSIM_FORCE_ENGINE=1`) to force the graph
 //! engine for debugging/tracing, and [`iter_time_lower_bound`] for the
@@ -475,16 +486,25 @@ fn schedule_ops(stage: usize, pp: usize, v: usize, m: usize) -> Vec<Op> {
     ops
 }
 
-/// Reusable emission scratch: flattened per-device op lists and event
-/// bookkeeping for [`emit_iteration`], sized over `V = p·v` virtual
-/// stages and `t = m·v` chunk-ops per direction. Owned by
+/// Reusable emission scratch: the ready-queue driver's per-device op
+/// tables plus the [`EmitState`] both drivers share. Owned by
 /// [`SimArena`]; all vectors keep their capacity across evaluations.
 #[derive(Debug, Default)]
 pub(crate) struct BuildScratch {
-    /// `p × 2t` op schedule, device-major.
+    /// `p × 2t` op schedule, device-major (ready-queue driver only —
+    /// the steady-state wave driver derives ops in closed form).
     ops: Vec<Op>,
-    /// Next unemitted op index per device.
+    /// Next unemitted op index per device (ready-queue driver only).
     next: Vec<usize>,
+    queue: VecDeque<usize>,
+    queued: Vec<bool>,
+    st: EmitState,
+}
+
+/// Event bookkeeping shared by the schedule drivers and the F/B op
+/// arms, sized over `V = p·v` virtual stages and `m` microbatches.
+#[derive(Debug, Default)]
+pub(crate) struct EmitState {
     /// `V × m`: last forward-chain event per (virtual stage, microbatch).
     last_fwd: Vec<Option<EventId>>,
     /// `V × m`: forward activation send per (virtual stage, microbatch).
@@ -496,17 +516,11 @@ pub(crate) struct BuildScratch {
     /// `p × lps`: gradient-final events feeding the optimizer.
     grad: Vec<EventId>,
     grad_len: Vec<usize>,
-    queue: VecDeque<usize>,
-    queued: Vec<bool>,
 }
 
-impl BuildScratch {
+impl EmitState {
     fn prepare(&mut self, p: usize, v: usize, m: usize, lps: usize) {
         let vs = p * v;
-        self.ops.clear();
-        self.ops.resize(p * 2 * m * v, Op::F(0, 0));
-        self.next.clear();
-        self.next.resize(p, 0);
         self.last_fwd.clear();
         self.last_fwd.resize(vs * m, None);
         self.p2p_fwd.clear();
@@ -519,9 +533,26 @@ impl BuildScratch {
         self.grad.resize(p * lps, 0);
         self.grad_len.clear();
         self.grad_len.resize(p, 0);
+    }
+}
+
+impl BuildScratch {
+    /// Scratch for the ready-queue driver (op tables + shared state).
+    fn prepare_queue(&mut self, p: usize, v: usize, m: usize, lps: usize) {
+        self.st.prepare(p, v, m, lps);
+        self.ops.clear();
+        self.ops.resize(p * 2 * m * v, Op::F(0, 0));
+        self.next.clear();
+        self.next.resize(p, 0);
         self.queue.clear();
         self.queued.clear();
         self.queued.resize(p, false);
+    }
+
+    /// Scratch for the steady-state wave driver: no op tables, no
+    /// queue — only the shared emission state.
+    fn prepare_steady(&mut self, p: usize, m: usize, lps: usize) {
+        self.st.prepare(p, 1, m, lps);
     }
 }
 
@@ -553,62 +584,308 @@ fn op_ready(
     }
 }
 
-/// Emit one training iteration's events into `eng` — the single
-/// schedule emitter (plain and interleaved 1F1B, every sharding mode)
-/// behind both the graph engine and the fused fast path.
+/// Per-iteration emission context: geometry, sharding/schedule flags,
+/// and the precomputed durations. The F/B op arms live here and are
+/// shared *verbatim* by the ready-queue driver and the steady-state
+/// wave driver, so both emit identical per-device event sequences by
+/// construction.
+struct EmitCtx<'a> {
+    d: &'a Durations,
+    p: usize,
+    v: usize,
+    vstages: usize,
+    m: usize,
+    t: usize,
+    lps: usize,
+    lpc: usize,
+    prefetch: bool,
+    fsdp: bool,
+    hsdp: bool,
+    ddp: bool,
+    zero3: bool,
+    tp: bool,
+    cp: bool,
+}
+
+impl<'a> EmitCtx<'a> {
+    fn new(cfg: &SimConfig, d: &'a Durations) -> EmitCtx<'a> {
+        let p = cfg.plan.pp;
+        let v = cfg.schedule.chunks();
+        let m = cfg.microbatches();
+        let lps = cfg.arch.n_layers / p;
+        EmitCtx {
+            d,
+            p,
+            v,
+            vstages: p * v,
+            m,
+            t: m * v,
+            lps,
+            lpc: lps / v,
+            prefetch: cfg.prefetch,
+            fsdp: matches!(cfg.sharding,
+                           Sharding::Fsdp | Sharding::Hsdp { .. })
+                && cfg.plan.dp > 1,
+            hsdp: matches!(cfg.sharding, Sharding::Hsdp { .. })
+                && cfg.plan.dp > 1,
+            ddp: cfg.sharding == Sharding::Ddp && cfg.plan.dp > 1,
+            zero3: cfg.sharding == Sharding::Zero3 && cfg.plan.dp > 1,
+            tp: cfg.plan.tp > 1,
+            cp: cfg.plan.cp > 1,
+        }
+    }
+
+    /// FSDP with explicit prefetch: all parameter AllGathers issued
+    /// eagerly at iteration start; the DP comm stream serializes them,
+    /// compute waits per layer. Without prefetch they are issued lazily
+    /// inside the first forward microbatch (see [`Self::emit_f`]).
+    fn emit_prefetch<S: EventSink>(&self, eng: &mut S,
+                                   st: &mut EmitState) {
+        if self.fsdp && self.prefetch {
+            for s in 0..self.p {
+                for l in 0..self.lps {
+                    st.ag[s * self.lps + l] = eng.push_event(
+                        s, STREAM_COMM_DP, self.d.ag_layer, &[],
+                        Tag::AllGatherParams);
+                }
+            }
+        }
+    }
+
+    /// Forward of (chunk `ch`, microbatch `i`) on device `s`.
+    fn emit_f<S: EventSink>(&self, eng: &mut S, st: &mut EmitState,
+                            s: usize, ch: usize, i: usize) {
+        let d = self.d;
+        let (m, lps) = (self.m, self.lps);
+        let vs = ch * self.p + s;
+        let mut prev: Option<EventId> = if vs > 0 {
+            st.p2p_fwd[(vs - 1) * m + i]
+        } else {
+            None
+        };
+        for l in 0..self.lpc {
+            let li = ch * self.lpc + l;
+            // No-prefetch ablation: AG(l) issues only after the
+            // previous chunk-layer's forward chain, on the chunk's
+            // first microbatch.
+            if self.fsdp && !self.prefetch && i == 0 {
+                st.ag[s * lps + li] = match prev {
+                    Some(pv) => eng.push_event(
+                        s, STREAM_COMM_DP, d.ag_layer, &[pv],
+                        Tag::AllGatherParams),
+                    None => eng.push_event(
+                        s, STREAM_COMM_DP, d.ag_layer, &[],
+                        Tag::AllGatherParams),
+                };
+            }
+            // ZeRO-3 forward resharding: params re-gathered for every
+            // microbatch's pass over the layer. With prefetch the
+            // gather streams ahead (serialized only by the DP comm
+            // stream); without, it chains behind the compute.
+            let gather = if self.zero3 {
+                Some(match (prev, self.prefetch) {
+                    (Some(pv), false) => eng.push_event(
+                        s, STREAM_COMM_DP, d.ag_layer, &[pv],
+                        Tag::AllGatherParams),
+                    _ => eng.push_event(
+                        s, STREAM_COMM_DP, d.ag_layer, &[],
+                        Tag::AllGatherParams),
+                })
+            } else if self.fsdp {
+                Some(st.ag[s * lps + li])
+            } else {
+                None
+            };
+            let mut deps: [EventId; 2] = [0; 2];
+            let mut nd = 0;
+            if let Some(pv) = prev {
+                deps[nd] = pv;
+                nd += 1;
+            }
+            if let Some(g) = gather {
+                deps[nd] = g;
+                nd += 1;
+            }
+            let c = eng.push_event(
+                s, STREAM_COMPUTE, d.fwd_layer, &deps[..nd],
+                Tag::FwdCompute);
+            prev = Some(c);
+            if self.tp {
+                prev = Some(eng.push_event(
+                    s, STREAM_COMM_MP, d.tp_ar_fwd, &[c],
+                    Tag::TpAllReduce));
+            }
+            if self.cp {
+                prev = Some(eng.push_event(
+                    s, STREAM_COMM_MP, d.cp_ring,
+                    &[prev.unwrap()], Tag::CpRingExchange));
+            }
+        }
+        if vs == self.vstages - 1 {
+            prev = Some(eng.push_event(
+                s, STREAM_COMPUTE, d.head_fwd,
+                &[prev.unwrap()], Tag::FwdCompute));
+        }
+        st.last_fwd[vs * m + i] = prev;
+        if vs < self.vstages - 1 {
+            st.p2p_fwd[vs * m + i] = Some(eng.push_event(
+                s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
+                Tag::P2pActivations));
+        }
+    }
+
+    /// Backward of (chunk `ch`, microbatch `i`) on device `s`.
+    fn emit_b<S: EventSink>(&self, eng: &mut S, st: &mut EmitState,
+                            s: usize, ch: usize, i: usize) {
+        let d = self.d;
+        let (m, lps) = (self.m, self.lps);
+        let vs = ch * self.p + s;
+        let fwd_dep = st.last_fwd[vs * m + i].expect("fwd before bwd");
+        let bwd_in: Option<EventId> = if vs < self.vstages - 1 {
+            st.p2p_bwd[(vs + 1) * m + i]
+        } else {
+            None
+        };
+        let mut prev: Option<EventId> = None;
+        if vs == self.vstages - 1 {
+            prev = Some(eng.push_event(
+                s, STREAM_COMPUTE, d.head_bwd, &[fwd_dep],
+                Tag::BwdCompute));
+        }
+        for _l in (0..self.lpc).rev() {
+            // ZeRO-3: params were resharded after forward — re-gather
+            // them for this layer's backward.
+            let gather = if self.zero3 {
+                Some(if self.prefetch {
+                    eng.push_event(
+                        s, STREAM_COMM_DP, d.ag_layer, &[],
+                        Tag::AllGatherParams)
+                } else {
+                    eng.push_event(
+                        s, STREAM_COMM_DP, d.ag_layer,
+                        &[prev.unwrap_or(fwd_dep)],
+                        Tag::AllGatherParams)
+                })
+            } else {
+                None
+            };
+            let mut deps: [EventId; 3] = [0; 3];
+            let mut nd = 0;
+            match (prev, bwd_in) {
+                (Some(pv), _) => {
+                    deps[nd] = pv;
+                    nd += 1;
+                }
+                (None, Some(bi)) => {
+                    deps[nd] = fwd_dep;
+                    nd += 1;
+                    deps[nd] = bi;
+                    nd += 1;
+                }
+                (None, None) => {
+                    deps[nd] = fwd_dep;
+                    nd += 1;
+                }
+            }
+            if let Some(g) = gather {
+                deps[nd] = g;
+                nd += 1;
+            }
+            let c = eng.push_event(
+                s, STREAM_COMPUTE, d.bwd_layer, &deps[..nd],
+                Tag::BwdCompute);
+            prev = Some(c);
+            if self.tp {
+                prev = Some(eng.push_event(
+                    s, STREAM_COMM_MP, d.tp_ar_bwd, &[c],
+                    Tag::TpAllReduce));
+            }
+            if self.cp {
+                prev = Some(eng.push_event(
+                    s, STREAM_COMM_MP, d.cp_ring,
+                    &[prev.unwrap()], Tag::CpRingExchange));
+            }
+            if self.zero3 {
+                // ZeRO-3 reduce-scatters gradient shards after *every*
+                // microbatch; the last one feeds the optimizer.
+                let g = eng.push_event(
+                    s, STREAM_COMM_DP, d.rs_layer, &[c],
+                    Tag::ReduceScatterGrads);
+                if i == m - 1 {
+                    st.grad[s * lps + st.grad_len[s]] = g;
+                    st.grad_len[s] += 1;
+                }
+            } else if i == m - 1 {
+                // Gradients final after the last microbatch: overlap
+                // ReduceScatter with remaining bwd.
+                let g = if self.fsdp {
+                    let mut last = eng.push_event(
+                        s, STREAM_COMM_DP, d.rs_layer, &[c],
+                        Tag::ReduceScatterGrads);
+                    if self.hsdp && d.hsdp_ar_layer > 0.0 {
+                        // Cross-replica gradient sync.
+                        last = eng.push_event(
+                            s, STREAM_COMM_DP, d.hsdp_ar_layer, &[last],
+                            Tag::GradAllReduce);
+                    }
+                    last
+                } else if self.ddp {
+                    eng.push_event(
+                        s, STREAM_COMM_DP, d.ddp_ar_layer, &[c],
+                        Tag::GradAllReduce)
+                } else {
+                    c
+                };
+                st.grad[s * lps + st.grad_len[s]] = g;
+                st.grad_len[s] += 1;
+            }
+        }
+        if vs > 0 {
+            st.p2p_bwd[vs * m + i] = Some(eng.push_event(
+                s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
+                Tag::P2pActivations));
+        }
+    }
+
+    /// Optimizer step per stage once its gradients are fully reduced.
+    fn emit_optimizer<S: EventSink>(&self, eng: &mut S,
+                                    st: &EmitState) {
+        for s in 0..self.p {
+            let deps =
+                &st.grad[s * self.lps..s * self.lps + st.grad_len[s]];
+            eng.push_event(s, STREAM_COMPUTE, self.d.optimizer, deps,
+                           Tag::Optimizer);
+        }
+    }
+}
+
+/// Emit one training iteration's events into `eng` — the general
+/// schedule driver (plain and interleaved 1F1B, every sharding mode)
+/// behind the graph engine and the fused fast path's fall-back.
 ///
 /// Scheduling is a ready-queue over devices: a device drains every
 /// consecutively-ready op when dequeued, and re-enters the queue
 /// exactly when the cross-stage P2P event its next op waits on is
 /// emitted. Per-device op order follows [`fill_schedule`], so
 /// per-device stream order — the only order that affects the timeline
-/// — is deterministic and shared by both execution paths.
+/// — is deterministic and shared by both execution paths (and by the
+/// steady-state wave driver, which shares the op arms outright).
 fn emit_iteration<S: EventSink>(
     cfg: &SimConfig,
     d: &Durations,
     eng: &mut S,
     scratch: &mut BuildScratch,
 ) {
-    let p = cfg.plan.pp;
-    let v = cfg.schedule.chunks();
-    let vstages = p * v;
-    let m = cfg.microbatches();
-    let t = m * v;
-    let lps = cfg.arch.n_layers / p;
-    let lpc = lps / v;
-    let fsdp = matches!(cfg.sharding,
-                        Sharding::Fsdp | Sharding::Hsdp { .. })
-        && cfg.plan.dp > 1;
-    let hsdp = matches!(cfg.sharding, Sharding::Hsdp { .. })
-        && cfg.plan.dp > 1;
-    let ddp = cfg.sharding == Sharding::Ddp && cfg.plan.dp > 1;
-    let zero3 = cfg.sharding == Sharding::Zero3 && cfg.plan.dp > 1;
-    let tp = cfg.plan.tp > 1;
-    let cp = cfg.plan.cp > 1;
-
-    scratch.prepare(p, v, m, lps);
-    let BuildScratch {
-        ops, next, last_fwd, p2p_fwd, p2p_bwd, ag, grad, grad_len,
-        queue, queued,
-    } = scratch;
+    let ctx = EmitCtx::new(cfg, d);
+    let (p, v, m, t) = (ctx.p, ctx.v, ctx.m, ctx.t);
+    scratch.prepare_queue(p, v, m, ctx.lps);
+    let BuildScratch { ops, next, queue, queued, st } = scratch;
 
     for s in 0..p {
         fill_schedule(&mut ops[s * 2 * t..(s + 1) * 2 * t], s, p, v, m);
     }
 
-    // FSDP with explicit prefetch: all parameter AllGathers issued
-    // eagerly at iteration start; the DP comm stream serializes them,
-    // compute waits per layer. Without prefetch they are issued lazily
-    // inside the first forward microbatch (see the F arm below).
-    if fsdp && cfg.prefetch {
-        for s in 0..p {
-            for l in 0..lps {
-                ag[s * lps + l] = eng.push_event(
-                    s, STREAM_COMM_DP, d.ag_layer, &[],
-                    Tag::AllGatherParams);
-            }
-        }
-    }
+    ctx.emit_prefetch(eng, st);
 
     // Seed every device; devices whose first op isn't ready drain zero
     // ops and re-enter when their producer emits (both schedules are
@@ -622,86 +899,14 @@ fn emit_iteration<S: EventSink>(
         queued[s] = false;
         while next[s] < 2 * t {
             let op = ops[s * 2 * t + next[s]];
-            if !op_ready(op, s, p, v, m, p2p_fwd, p2p_bwd) {
+            if !op_ready(op, s, p, v, m, &st.p2p_fwd, &st.p2p_bwd) {
                 break;
             }
             match op {
                 Op::F(ch, i) => {
+                    ctx.emit_f(eng, st, s, ch, i);
                     let vs = ch * p + s;
-                    let mut prev: Option<EventId> = if vs > 0 {
-                        p2p_fwd[(vs - 1) * m + i]
-                    } else {
-                        None
-                    };
-                    for l in 0..lpc {
-                        let li = ch * lpc + l;
-                        // No-prefetch ablation: AG(l) issues only
-                        // after the previous chunk-layer's forward
-                        // chain, on the chunk's first microbatch.
-                        if fsdp && !cfg.prefetch && i == 0 {
-                            ag[s * lps + li] = match prev {
-                                Some(pv) => eng.push_event(
-                                    s, STREAM_COMM_DP, d.ag_layer,
-                                    &[pv], Tag::AllGatherParams),
-                                None => eng.push_event(
-                                    s, STREAM_COMM_DP, d.ag_layer,
-                                    &[], Tag::AllGatherParams),
-                            };
-                        }
-                        // ZeRO-3 forward resharding: params re-gathered
-                        // for every microbatch's pass over the layer.
-                        // With prefetch the gather streams ahead
-                        // (serialized only by the DP comm stream);
-                        // without, it chains behind the compute.
-                        let gather = if zero3 {
-                            Some(match (prev, cfg.prefetch) {
-                                (Some(pv), false) => eng.push_event(
-                                    s, STREAM_COMM_DP, d.ag_layer,
-                                    &[pv], Tag::AllGatherParams),
-                                _ => eng.push_event(
-                                    s, STREAM_COMM_DP, d.ag_layer,
-                                    &[], Tag::AllGatherParams),
-                            })
-                        } else if fsdp {
-                            Some(ag[s * lps + li])
-                        } else {
-                            None
-                        };
-                        let mut deps: [EventId; 2] = [0; 2];
-                        let mut nd = 0;
-                        if let Some(pv) = prev {
-                            deps[nd] = pv;
-                            nd += 1;
-                        }
-                        if let Some(g) = gather {
-                            deps[nd] = g;
-                            nd += 1;
-                        }
-                        let c = eng.push_event(
-                            s, STREAM_COMPUTE, d.fwd_layer, &deps[..nd],
-                            Tag::FwdCompute);
-                        prev = Some(c);
-                        if tp {
-                            prev = Some(eng.push_event(
-                                s, STREAM_COMM_MP, d.tp_ar_fwd, &[c],
-                                Tag::TpAllReduce));
-                        }
-                        if cp {
-                            prev = Some(eng.push_event(
-                                s, STREAM_COMM_MP, d.cp_ring,
-                                &[prev.unwrap()], Tag::CpRingExchange));
-                        }
-                    }
-                    if vs == vstages - 1 {
-                        prev = Some(eng.push_event(
-                            s, STREAM_COMPUTE, d.head_fwd,
-                            &[prev.unwrap()], Tag::FwdCompute));
-                    }
-                    last_fwd[vs * m + i] = prev;
-                    if vs < vstages - 1 {
-                        p2p_fwd[vs * m + i] = Some(eng.push_event(
-                            s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
-                            Tag::P2pActivations));
+                    if vs < ctx.vstages - 1 {
                         // Wake the consuming device (downstream stage,
                         // or device 0's next chunk on the interleaved
                         // wrap-around) if this send made its next op
@@ -710,7 +915,8 @@ fn emit_iteration<S: EventSink>(
                         if !queued[td]
                             && next[td] < 2 * t
                             && op_ready(ops[td * 2 * t + next[td]], td,
-                                        p, v, m, p2p_fwd, p2p_bwd)
+                                        p, v, m, &st.p2p_fwd,
+                                        &st.p2p_bwd)
                         {
                             queue.push_back(td);
                             queued[td] = true;
@@ -718,114 +924,9 @@ fn emit_iteration<S: EventSink>(
                     }
                 }
                 Op::B(ch, i) => {
+                    ctx.emit_b(eng, st, s, ch, i);
                     let vs = ch * p + s;
-                    let fwd_dep =
-                        last_fwd[vs * m + i].expect("fwd before bwd");
-                    let bwd_in: Option<EventId> = if vs < vstages - 1 {
-                        p2p_bwd[(vs + 1) * m + i]
-                    } else {
-                        None
-                    };
-                    let mut prev: Option<EventId> = None;
-                    if vs == vstages - 1 {
-                        prev = Some(eng.push_event(
-                            s, STREAM_COMPUTE, d.head_bwd, &[fwd_dep],
-                            Tag::BwdCompute));
-                    }
-                    for _l in (0..lpc).rev() {
-                        // ZeRO-3: params were resharded after forward —
-                        // re-gather them for this layer's backward.
-                        let gather = if zero3 {
-                            Some(if cfg.prefetch {
-                                eng.push_event(
-                                    s, STREAM_COMM_DP, d.ag_layer, &[],
-                                    Tag::AllGatherParams)
-                            } else {
-                                eng.push_event(
-                                    s, STREAM_COMM_DP, d.ag_layer,
-                                    &[prev.unwrap_or(fwd_dep)],
-                                    Tag::AllGatherParams)
-                            })
-                        } else {
-                            None
-                        };
-                        let mut deps: [EventId; 3] = [0; 3];
-                        let mut nd = 0;
-                        match (prev, bwd_in) {
-                            (Some(pv), _) => {
-                                deps[nd] = pv;
-                                nd += 1;
-                            }
-                            (None, Some(bi)) => {
-                                deps[nd] = fwd_dep;
-                                nd += 1;
-                                deps[nd] = bi;
-                                nd += 1;
-                            }
-                            (None, None) => {
-                                deps[nd] = fwd_dep;
-                                nd += 1;
-                            }
-                        }
-                        if let Some(g) = gather {
-                            deps[nd] = g;
-                            nd += 1;
-                        }
-                        let c = eng.push_event(
-                            s, STREAM_COMPUTE, d.bwd_layer, &deps[..nd],
-                            Tag::BwdCompute);
-                        prev = Some(c);
-                        if tp {
-                            prev = Some(eng.push_event(
-                                s, STREAM_COMM_MP, d.tp_ar_bwd, &[c],
-                                Tag::TpAllReduce));
-                        }
-                        if cp {
-                            prev = Some(eng.push_event(
-                                s, STREAM_COMM_MP, d.cp_ring,
-                                &[prev.unwrap()], Tag::CpRingExchange));
-                        }
-                        if zero3 {
-                            // ZeRO-3 reduce-scatters gradient shards
-                            // after *every* microbatch; the last one
-                            // feeds the optimizer.
-                            let g = eng.push_event(
-                                s, STREAM_COMM_DP, d.rs_layer, &[c],
-                                Tag::ReduceScatterGrads);
-                            if i == m - 1 {
-                                grad[s * lps + grad_len[s]] = g;
-                                grad_len[s] += 1;
-                            }
-                        } else if i == m - 1 {
-                            // Gradients final after the last microbatch:
-                            // overlap ReduceScatter with remaining bwd.
-                            let g = if fsdp {
-                                let mut last = eng.push_event(
-                                    s, STREAM_COMM_DP, d.rs_layer, &[c],
-                                    Tag::ReduceScatterGrads);
-                                if hsdp && d.hsdp_ar_layer > 0.0 {
-                                    // Cross-replica gradient sync.
-                                    last = eng.push_event(
-                                        s, STREAM_COMM_DP,
-                                        d.hsdp_ar_layer, &[last],
-                                        Tag::GradAllReduce);
-                                }
-                                last
-                            } else if ddp {
-                                eng.push_event(
-                                    s, STREAM_COMM_DP, d.ddp_ar_layer,
-                                    &[c], Tag::GradAllReduce)
-                            } else {
-                                c
-                            };
-                            grad[s * lps + grad_len[s]] = g;
-                            grad_len[s] += 1;
-                        }
-                    }
                     if vs > 0 {
-                        p2p_bwd[vs * m + i] = Some(eng.push_event(
-                            s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
-                            Tag::P2pActivations));
                         // Wake the consuming device (upstream stage, or
                         // device pp-1's previous chunk on the
                         // wrap-around) if this send made its next op
@@ -834,7 +935,8 @@ fn emit_iteration<S: EventSink>(
                         if !queued[td]
                             && next[td] < 2 * t
                             && op_ready(ops[td * 2 * t + next[td]], td,
-                                        p, v, m, p2p_fwd, p2p_bwd)
+                                        p, v, m, &st.p2p_fwd,
+                                        &st.p2p_bwd)
                         {
                             queue.push_back(td);
                             queued[td] = true;
@@ -848,11 +950,104 @@ fn emit_iteration<S: EventSink>(
     }
     assert_eq!(emitted, p * 2 * t, "pipeline emission deadlocked");
 
-    // Optimizer step per stage once its gradients are fully reduced.
-    for s in 0..p {
-        let deps = &grad[s * lps..s * lps + grad_len[s]];
-        eng.push_event(s, STREAM_COMPUTE, d.optimizer, deps,
-                       Tag::Optimizer);
+    ctx.emit_optimizer(eng, st);
+}
+
+/// Is this configuration eligible for the steady-state wave driver?
+/// Plain 1F1B only (one chunk per device) with uncapped warmups
+/// (`m >= pp`), the precondition for [`steady_op`]'s closed form and
+/// for the wave schedule's producer-before-consumer proof.
+fn steady_eligible(cfg: &SimConfig) -> bool {
+    cfg.schedule.chunks() == 1 && cfg.microbatches() >= cfg.plan.pp
+}
+
+/// Closed-form op order for plain 1F1B with uncapped warmup: the
+/// `k`-th op of stage `s`, without materializing a schedule table.
+/// Mirrors [`fill_schedule`] at `v == 1` exactly (unit-tested against
+/// it): `w = pp - s - 1` warmup forwards, `m - w` steady (F, B) pairs,
+/// `w` cooldown backwards.
+fn steady_op(s: usize, k: usize, p: usize, m: usize) -> Op {
+    let w = p - s - 1; // uncapped warmup depth (requires m >= p)
+    if k < w {
+        Op::F(0, k)
+    } else if k < 2 * m - w {
+        let j = k - w;
+        if j % 2 == 0 {
+            Op::F(0, w + j / 2)
+        } else {
+            Op::B(0, j / 2)
+        }
+    } else {
+        Op::B(0, k - m)
+    }
+}
+
+/// Steady-state schedule compression: emit one iteration through a
+/// *static wave schedule* instead of the ready-queue. Once warmups are
+/// uncapped (`m >= pp`), plain 1F1B is periodic — every device's op
+/// list is warmup / steady (F, B) cycle / cooldown in closed form
+/// ([`steady_op`]) — and op `k` of device `s` depends only on op
+/// `k - 1` of a neighbor (steady phase), an equal-`k` warmup forward
+/// of an *upstream* device, or an equal-`k` cooldown backward of a
+/// *downstream* device. Wave `k` = {op `k` of every device}, devices
+/// ascending while `k < m` (covers the warmup-forward ties) and
+/// descending for `k >= m` (covers the cooldown-backward ties), is
+/// therefore a valid topological order — so the per-op readiness
+/// checks, the ready-queue, and the materialized `p × 2t` op tables
+/// all vanish from the hot path.
+///
+/// Exactness: event *times* depend only on per-device per-stream
+/// emission order and dependency values, never on the global
+/// interleaving, and this driver preserves per-device order (`k`
+/// ascending) while emitting through the same [`EmitCtx`] arms as the
+/// ready-queue driver — reports are bit-identical (cross-validated in
+/// `tests/fastpath_vs_engine.rs`; the wave/queue choice is additionally
+/// `debug_assert`ed against [`op_ready`] on every op). Ineligible
+/// configurations (interleaved schedules, `m < pp` residuals) fall
+/// back to the ready-queue driver — observable via
+/// [`SimArena::steady_stats`].
+fn emit_iteration_steady<S: EventSink>(
+    cfg: &SimConfig,
+    d: &Durations,
+    eng: &mut S,
+    scratch: &mut BuildScratch,
+) {
+    let ctx = EmitCtx::new(cfg, d);
+    debug_assert!(ctx.v == 1 && ctx.m >= ctx.p,
+                  "wave driver requires plain 1F1B with m >= pp");
+    scratch.prepare_steady(ctx.p, ctx.m, ctx.lps);
+    let st = &mut scratch.st;
+    ctx.emit_prefetch(eng, st);
+    let (p, m) = (ctx.p, ctx.m);
+    for k in 0..2 * m {
+        if k < m {
+            for s in 0..p {
+                emit_wave_op(&ctx, eng, st, s, k);
+            }
+        } else {
+            for s in (0..p).rev() {
+                emit_wave_op(&ctx, eng, st, s, k);
+            }
+        }
+    }
+    ctx.emit_optimizer(eng, st);
+}
+
+/// One wave-driver op: closed-form lookup + the shared arms.
+fn emit_wave_op<S: EventSink>(
+    ctx: &EmitCtx<'_>,
+    eng: &mut S,
+    st: &mut EmitState,
+    s: usize,
+    k: usize,
+) {
+    let op = steady_op(s, k, ctx.p, ctx.m);
+    debug_assert!(
+        op_ready(op, s, ctx.p, 1, ctx.m, &st.p2p_fwd, &st.p2p_bwd),
+        "wave schedule must stay topological (s={s} k={k})");
+    match op {
+        Op::F(ch, i) => ctx.emit_f(eng, st, s, ch, i),
+        Op::B(ch, i) => ctx.emit_b(eng, st, s, ch, i),
     }
 }
 
@@ -914,7 +1109,14 @@ pub fn simulate_in(cfg: &SimConfig, arena: &mut SimArena)
     }
     let d = durations(cfg, &mut arena.costs);
     arena.fused.reset(cfg.plan.pp);
-    emit_iteration(cfg, &d, &mut arena.fused, &mut arena.scratch);
+    if steady_eligible(cfg) {
+        arena.steady += 1;
+        emit_iteration_steady(cfg, &d, &mut arena.fused,
+                              &mut arena.scratch);
+    } else {
+        arena.general += 1;
+        emit_iteration(cfg, &d, &mut arena.fused, &mut arena.scratch);
+    }
     let (makespan, stages) = arena.fused.finish();
     report_from(makespan, stages)
 }
@@ -1319,6 +1521,110 @@ mod tests {
             il2_mixed,
             custom,
         ]
+    }
+
+    #[test]
+    fn steady_op_matches_fill_schedule() {
+        // The wave driver's closed form must reproduce the schedule
+        // table op for op wherever it is eligible (m >= p, v = 1).
+        for (p, m) in [(1usize, 1usize), (1, 7), (2, 2), (2, 5),
+                       (4, 4), (4, 9), (8, 8), (8, 21)] {
+            for s in 0..p {
+                let ops = schedule_ops(s, p, 1, m);
+                for (k, &op) in ops.iter().enumerate() {
+                    assert_eq!(steady_op(s, k, p, m), op,
+                               "s={s} p={p} m={m} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_eligibility_matches_the_documented_rule() {
+        let base = weak_cfg(4); // pp = 1
+        assert!(steady_eligible(&base));
+        let cluster = Cluster::new(Generation::H100, 4);
+        let pp4 = SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::new(8, 1, 4, 1),
+            32, 1, 4096); // m = 4 = pp
+        assert!(steady_eligible(&pp4));
+        let few = SimConfig { global_batch: 16, ..pp4 }; // m = 2 < pp
+        assert!(!steady_eligible(&few));
+        let il = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 }, ..pp4 };
+        assert!(!steady_eligible(&il));
+    }
+
+    #[test]
+    fn steady_wave_driver_is_bit_identical_to_queue_engine() {
+        // Deep-pipeline, many-microbatch configs route through the
+        // wave driver; the queue-driven graph engine is the reference.
+        // Every sharding arm, the no-prefetch ablation, and tp/cp all
+        // pass through the shared op arms.
+        let cluster = Cluster::new(Generation::H100, 4);
+        let mk = |sharding, prefetch| {
+            let mut c = SimConfig::fsdp(
+                LLAMA_7B, cluster, ParallelPlan::new(8, 1, 4, 1),
+                128, 1, 4096); // m = 16 >= pp = 4
+            c.sharding = sharding;
+            c.prefetch = prefetch;
+            c
+        };
+        let mut cfgs = vec![
+            mk(Sharding::Fsdp, true),
+            mk(Sharding::Fsdp, false),
+            mk(Sharding::Zero3, true),
+            mk(Sharding::Zero3, false),
+            mk(Sharding::Ddp, true),
+            mk(Sharding::Hsdp { group: 4 }, true),
+        ];
+        // Pipeline + tensor + context parallel through the waves too.
+        cfgs.push(SimConfig::fsdp(
+            LLAMA_7B, Cluster::new(Generation::H100, 8),
+            ParallelPlan::new(4, 2, 4, 2), 64, 1, 4096)); // m = 16
+        for cfg in cfgs {
+            assert!(steady_eligible(&cfg), "test premise: {}", cfg.plan);
+            let fast = simulate(&cfg);
+            let slow = simulate_engine(&cfg);
+            assert_eq!(fast.iter_time.to_bits(), slow.iter_time.to_bits(),
+                       "iter_time diverged for {} {}", cfg.plan,
+                       cfg.sharding);
+            assert_eq!(fast.compute_busy.to_bits(),
+                       slow.compute_busy.to_bits());
+            assert_eq!(fast.comm_busy.to_bits(),
+                       slow.comm_busy.to_bits());
+            assert_eq!(fast.comm_kernel_time.to_bits(),
+                       slow.comm_kernel_time.to_bits());
+            assert_eq!(fast.exposed_comm.to_bits(),
+                       slow.exposed_comm.to_bits());
+            assert_eq!(fast.idle.to_bits(), slow.idle.to_bits());
+            for tag in Tag::ALL {
+                assert_eq!(fast.comm_by_tag.get(tag).to_bits(),
+                           slow.comm_by_tag.get(tag).to_bits(),
+                           "{tag:?} diverged for {}", cfg.plan);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_driver_engagement_and_fallback_are_observable() {
+        let mut arena = SimArena::new();
+        let cluster = Cluster::new(Generation::H100, 4);
+        let pp4 = SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::new(8, 1, 4, 1),
+            32, 1, 4096); // m = 4 >= pp → wave driver
+        simulate_in(&pp4, &mut arena);
+        assert_eq!(arena.steady_stats(), (1, 0));
+        let il = SimConfig {
+            schedule: Schedule::Interleaved { v: 2 }, ..pp4 };
+        simulate_in(&il, &mut arena); // interleaved → fall-back
+        assert_eq!(arena.steady_stats(), (1, 1));
+        let few = SimConfig { global_batch: 16, ..pp4 };
+        simulate_in(&few, &mut arena); // m = 2 < pp → fall-back
+        assert_eq!(arena.steady_stats(), (1, 2));
+        let (recorded, runs) = arena.interval_stats();
+        assert!(recorded > 0 && runs > 0 && runs <= recorded,
+                "{recorded} intervals vs {runs} runs");
     }
 
     #[test]

@@ -9,17 +9,20 @@
 //! shared by Fig. 1, Fig. 3, and the headline table, and are simulated
 //! exactly once per `StudyRunner`.
 //!
-//! Hot path: each worker owns a [`SimArena`] (fused simulation fast
-//! path, memoized collective costs, recycled buffers) for its whole
-//! slice of the grid, and results land in pre-sized lock-free
-//! `OnceLock` slots — no per-point mutex. [`StudyRunner::best_of`]
-//! additionally runs a bound-and-prune search that skips grid points
-//! whose analytic throughput upper bound cannot beat the incumbent.
+//! Hot path: each worker owns a persistent [`SimArena`] (fused
+//! simulation fast path, memoized collective costs, recycled buffers),
+//! points are claimed through a chunked atomic-cursor work-stealing
+//! loop, and results land in pre-sized lock-free `OnceLock` slots — no
+//! per-point mutex. [`StudyRunner::best_of`] additionally runs a
+//! parallel bound-and-prune search whose best-known achieved
+//! throughput lives in a shared `AtomicU64`, so every worker's
+//! analytic prune tightens the moment any worker improves the
+//! incumbent — same winner as the exhaustive sweep, proven by tests.
 
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 use crate::hardware::HwId;
@@ -46,6 +49,43 @@ pub struct CaseResult {
     pub schedule: Schedule,
     pub metrics: Metrics,
     pub mem_per_gpu: f64,
+}
+
+/// One worker's share of the bound-and-prune search: claim candidates
+/// off the bound-sorted `todo` list through the atomic cursor, skip —
+/// and stop, since bounds only shrink down the list — as soon as the
+/// shared achieved-throughput bound dominates the claimed candidate,
+/// otherwise simulate and publish the achieved throughput back into
+/// the bound (`fetch_max` over f64 bits; sound because throughputs are
+/// non-negative, where the IEEE total order matches the unsigned bit
+/// order).
+fn bound_search_loop(
+    next: &AtomicUsize,
+    todo: &[(usize, f64)],
+    points: &[StudyPoint],
+    slots: &[OnceLock<CaseResult>],
+    bound: &AtomicU64,
+    arena: &mut SimArena,
+) {
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= todo.len() {
+            break;
+        }
+        let (idx, ub) = todo[i];
+        let bw = f64::from_bits(bound.load(Ordering::Relaxed));
+        if ub <= bw {
+            // Bounds are sorted descending: this candidate and every
+            // unclaimed one after it are dominated. Other workers
+            // observe the same (or a tighter) bound on their next
+            // claim and stop at most one step later.
+            break;
+        }
+        let case = evaluate_point(&points[idx], arena);
+        bound.fetch_max(case.metrics.global_wps.to_bits(),
+                        Ordering::Relaxed);
+        let _ = slots[i].set(case);
+    }
 }
 
 fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
@@ -203,15 +243,28 @@ impl StudyRunner {
     /// found by bound-and-prune instead of exhaustive simulation:
     /// candidates are evaluated in order of an optimistic analytic
     /// throughput bound ([`sim::iter_time_lower_bound`], ignoring all
-    /// communication), and once the incumbent's *achieved* throughput
-    /// exceeds a candidate's bound, that candidate — and every one
-    /// after it in bound order — is provably dominated and skipped.
+    /// communication), and once some *achieved* throughput exceeds a
+    /// candidate's bound, that candidate — and every one after it in
+    /// bound order — is provably dominated and skipped.
+    ///
+    /// The search is parallel and **bound-sharing**: workers pull
+    /// candidates off the sorted list through an atomic cursor, and
+    /// every evaluated case publishes its achieved throughput into a
+    /// shared `AtomicU64` (f64 bits; non-negative floats order like
+    /// their bit patterns, so `fetch_max` is a lock-free running max).
+    /// Each worker re-reads that bound before simulating, so one
+    /// worker's improvement immediately tightens everyone's prune.
+    /// Timing only affects *how many* dominated points get evaluated
+    /// before the bound propagates — never the winner.
     ///
     /// Winner identity is exact, including `best`'s first-in-grid-order
     /// tie-break: the bound is safety-inflated so f64 rounding cannot
     /// disqualify a true winner, pruning requires the *strict* failure
-    /// `bound <= incumbent`, and ties are resolved by original grid
-    /// index. Skipped points are reported via [`Self::pruned_points`].
+    /// `bound <= incumbent`, a pruned candidate therefore cannot even
+    /// tie the incumbent, and the final winner is folded from the
+    /// evaluated + cached cases with the deterministic
+    /// (max wps, lowest grid index) rule. Skipped points are reported
+    /// via [`Self::pruned_points`].
     pub fn best_of(&mut self, study: &Study) -> Option<CaseResult> {
         let points = study.expand();
         self.requested += points.len();
@@ -222,6 +275,8 @@ impl StudyRunner {
             points.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
 
         // Incumbent: (achieved wps, grid index), grid-order tie-break.
+        // `raise` is a deterministic max-fold: the outcome is the same
+        // whatever order candidates arrive in.
         let mut best: Option<(f64, usize)> = None;
         let raise = |wps: f64, idx: usize,
                      best: &mut Option<(f64, usize)>| {
@@ -234,9 +289,10 @@ impl StudyRunner {
             }
         };
 
-        // Cached points are free: fold them into the incumbent first.
-        // The remainder is deduplicated by key (first occurrence keeps
-        // its grid index, matching `best`'s tie-break).
+        // Cached points are free: fold them into the incumbent first
+        // and seed the shared bound with the best of them. The
+        // remainder is deduplicated by key (first occurrence keeps its
+        // grid index, matching `best`'s tie-break).
         let mut seen: HashSet<ConfigKey> = HashSet::new();
         let mut todo: Vec<(usize, f64)> = Vec::new(); // (grid idx, ub)
         for (idx, p) in points.iter().enumerate() {
@@ -256,34 +312,42 @@ impl StudyRunner {
             b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
         });
 
-        let wave = self.threads.max(1);
-        let mut i = 0;
-        while i < todo.len() {
-            if let Some((bw, _)) = best {
-                // Bounds are sorted: once the head is dominated, the
-                // whole tail is.
-                if todo[i].1 <= bw {
-                    self.pruned += todo.len() - i;
-                    break;
+        // Shared best-known achieved throughput, as f64 bits (0.0 when
+        // nothing is known yet — throughputs are strictly positive).
+        let bound = AtomicU64::new(
+            best.map_or(0.0f64, |(bw, _)| bw).to_bits());
+        let slots: Vec<OnceLock<CaseResult>> =
+            todo.iter().map(|_| OnceLock::new()).collect();
+        let workers = self.prepare_workers(todo.len());
+        let next = AtomicUsize::new(0);
+        if workers == 1 {
+            bound_search_loop(&next, &todo, &points, &slots, &bound,
+                              &mut self.arenas[0]);
+        } else {
+            std::thread::scope(|s| {
+                let (next, todo, points, slots, bound) =
+                    (&next, &todo[..], &points[..], &slots[..], &bound);
+                for arena in self.arenas.iter_mut().take(workers) {
+                    s.spawn(move || {
+                        bound_search_loop(next, todo, points, slots,
+                                          bound, arena);
+                    });
                 }
-            }
-            let end = (i + wave).min(todo.len());
-            let mut grid_idxs: Vec<usize> = Vec::with_capacity(end - i);
-            for &(idx, ub) in &todo[i..end] {
-                match best {
-                    Some((bw, _)) if ub <= bw => self.pruned += 1,
-                    _ => grid_idxs.push(idx),
+            });
+        }
+
+        // Deterministic post-fold: harvest evaluated cases in candidate
+        // order, cache them, and let the max-fold pick the winner.
+        for (i, slot) in slots.into_iter().enumerate() {
+            let idx = todo[i].0;
+            match slot.into_inner() {
+                Some(case) => {
+                    self.evaluated += 1;
+                    raise(case.metrics.global_wps, idx, &mut best);
+                    self.cache.insert(keys[idx], case);
                 }
+                None => self.pruned += 1,
             }
-            let wave_points: Vec<&StudyPoint> =
-                grid_idxs.iter().map(|&ix| &points[ix]).collect();
-            let fresh = self.evaluate_points(&wave_points);
-            self.evaluated += fresh.len();
-            for (&ix, case) in grid_idxs.iter().zip(fresh) {
-                raise(case.metrics.global_wps, ix, &mut best);
-                self.cache.insert(keys[ix], case);
-            }
-            i = end;
         }
 
         best.map(|(_, idx)| {
@@ -297,22 +361,19 @@ impl StudyRunner {
     /// Evaluate all points, in parallel when `threads > 1`. Output
     /// order matches input order; results land in pre-sized lock-free
     /// `OnceLock` slots, and each worker drives one of the runner's
-    /// *persistent* `SimArena`s — so the collective cost memo and
-    /// recycled buffers span waves, runs, and scenarios.
+    /// *persistent* `SimArena`s — grown once to the worker count and
+    /// reused (never reallocated) across waves, runs, and scenarios,
+    /// so the collective cost memo and recycled buffers persist.
+    ///
+    /// Scheduling is work-stealing over an atomic cursor with *chunked*
+    /// claims: each grab takes a contiguous run of points sized so
+    /// every worker makes ~8 claims total, amortizing the shared
+    /// cache-line bump while still load-balancing heterogeneous grid
+    /// points (a deep-pipeline point can cost 100× a pp = 1 point).
     fn evaluate_points(&mut self, points: &[&StudyPoint])
         -> Vec<CaseResult>
     {
-        let workers = if self.threads <= 1 || points.len() <= 1 {
-            1
-        } else {
-            self.threads.min(points.len())
-        };
-        while self.arenas.len() < workers {
-            self.arenas.push(SimArena::new());
-        }
-        for arena in &mut self.arenas {
-            arena.force_engine(self.force_engine);
-        }
+        let workers = self.prepare_workers(points.len());
         if workers == 1 {
             let arena = &mut self.arenas[0];
             return points
@@ -323,16 +384,21 @@ impl StudyRunner {
         let slots: Vec<OnceLock<CaseResult>> =
             points.iter().map(|_| OnceLock::new()).collect();
         let next = AtomicUsize::new(0);
+        let chunk = (points.len() / (workers * 8)).max(1);
         std::thread::scope(|s| {
             let slots = &slots;
             let next = &next;
             for arena in self.arenas.iter_mut().take(workers) {
                 s.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= points.len() {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= points.len() {
                         break;
                     }
-                    let _ = slots[i].set(evaluate_point(points[i], arena));
+                    let end = (start + chunk).min(points.len());
+                    for i in start..end {
+                        let _ = slots[i]
+                            .set(evaluate_point(points[i], arena));
+                    }
                 });
             }
         });
@@ -343,6 +409,53 @@ impl StudyRunner {
                     .expect("every slot filled by the work loop")
             })
             .collect()
+    }
+
+    /// Size the worker pool for `n` work items and make the persistent
+    /// arenas ready: grow `self.arenas` to the worker count (once — the
+    /// high-water mark is reused, never reallocated) and propagate the
+    /// engine-forcing flag. The single worker-lifecycle path shared by
+    /// [`Self::best_of`] and `evaluate_points`.
+    fn prepare_workers(&mut self, n: usize) -> usize {
+        let workers = if self.threads <= 1 || n <= 1 {
+            1
+        } else {
+            self.threads.min(n)
+        };
+        while self.arenas.len() < workers {
+            self.arenas.push(SimArena::new());
+        }
+        for arena in &mut self.arenas {
+            arena.force_engine(self.force_engine);
+        }
+        workers
+    }
+
+    /// Worker arenas currently held (grown to the high-water worker
+    /// count, then reused — regression guard for the per-call
+    /// reallocation bug).
+    pub fn worker_arenas(&self) -> usize {
+        self.arenas.len()
+    }
+
+    /// Fused-path schedule-driver split `(steady, fallback)` summed
+    /// over the runner's persistent worker arenas (see
+    /// [`SimArena::steady_stats`]).
+    pub fn steady_stats(&self) -> (u64, u64) {
+        self.arenas.iter().fold((0, 0), |(a, b), ar| {
+            let (s, g) = ar.steady_stats();
+            (a + s, b + g)
+        })
+    }
+
+    /// Interval-compression diagnostic `(intervals recorded, runs
+    /// stored)` summed over the runner's worker arenas (see
+    /// [`SimArena::interval_stats`]).
+    pub fn interval_stats(&self) -> (u64, u64) {
+        self.arenas.iter().fold((0, 0), |(a, b), ar| {
+            let (r, k) = ar.interval_stats();
+            (a + r, b + k)
+        })
     }
 }
 
@@ -642,6 +755,100 @@ mod tests {
                    expect.metrics.global_wps.to_bits());
         let (evaluated, requested) = runner.stats();
         assert_eq!(evaluated + runner.pruned_points(), requested);
+    }
+
+    #[test]
+    fn parallel_best_of_matches_full_sweep_winner() {
+        // The bound-sharing parallel search may *evaluate* a
+        // timing-dependent set of candidates, but the winner — incl.
+        // the first-in-grid-order tie-break — must be bit-identical to
+        // the exhaustive sweep's head on every thread count.
+        let study = Study::builder("par-prune")
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([64])
+            .micro_batch_divisors()
+            .memory_cap(0.94)
+            .build();
+        let full = StudyRunner::sequential().run(&study);
+        let expect = full.best().unwrap();
+        for threads in [2usize, 4, 8] {
+            let mut runner = StudyRunner::new(threads);
+            let got = runner.best_of(&study).unwrap();
+            assert_eq!(got.plan, expect.plan, "threads={threads}");
+            assert_eq!(got.micro_batch, expect.micro_batch);
+            assert_eq!(got.metrics.global_wps.to_bits(),
+                       expect.metrics.global_wps.to_bits());
+            let (evaluated, requested) = runner.stats();
+            assert_eq!(evaluated + runner.pruned_points(), requested,
+                       "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_best_of_matches_on_the_schedule_grid() {
+        // Same proof over interleaved/ZeRO-3 arms with 8 workers
+        // sharing the bound.
+        let study = Study::builder("par-sched-prune")
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plan_shapes(&[(1, 1, 1), (1, 2, 1), (1, 4, 1)])
+            .global_batches([32])
+            .micro_batch_divisors()
+            .schedules([
+                Schedule::OneFOneB,
+                Schedule::Interleaved { v: 2 },
+            ])
+            .shardings([Sharding::Fsdp, Sharding::Zero3])
+            .memory_cap(0.94)
+            .build();
+        let full = StudyRunner::sequential().run(&study);
+        let expect = full.best().unwrap();
+        let mut runner = StudyRunner::new(8);
+        let got = runner.best_of(&study).unwrap();
+        assert_eq!(got.plan, expect.plan);
+        assert_eq!(got.micro_batch, expect.micro_batch);
+        assert_eq!(got.schedule, expect.schedule);
+        assert_eq!(got.sharding, expect.sharding);
+        assert_eq!(got.metrics.global_wps.to_bits(),
+                   expect.metrics.global_wps.to_bits());
+    }
+
+    #[test]
+    fn worker_arenas_grow_once_and_are_reused() {
+        // Arenas are the runner's most expensive state (cost memo +
+        // recycled buffers): repeated runs must not grow or replace
+        // them — the cost-cache hit counter keeps climbing across runs
+        // only if the same arenas serve every call.
+        let study = small_sweep("arena-reuse");
+        let mut runner = StudyRunner::new(4);
+        runner.run(&study);
+        let arenas = runner.worker_arenas();
+        assert!(arenas >= 1 && arenas <= 4, "{arenas}");
+        let (hits_before, misses_before) = runner.cost_cache_stats();
+        runner.best_of(&study); // all cache hits: no new arenas either
+        for _ in 0..3 {
+            runner.run(&study);
+        }
+        assert_eq!(runner.worker_arenas(), arenas,
+                   "repeat runs must reuse the same worker arenas");
+        let (hits_after, misses_after) = runner.cost_cache_stats();
+        assert_eq!(misses_after, misses_before,
+                   "warm reruns must not re-derive collective costs");
+        assert_eq!(hits_after, hits_before,
+                   "warm reruns are config-cache hits, not re-sims");
+    }
+
+    #[test]
+    fn runner_surfaces_compression_stats() {
+        let mut runner = StudyRunner::sequential();
+        runner.run(&small_sweep("compression-stats"));
+        let (steady, fallback) = runner.steady_stats();
+        assert!(steady > 0, "fig-style sweep must hit the wave driver");
+        let (recorded, runs) = runner.interval_stats();
+        assert!(recorded > 0 && runs > 0 && runs <= recorded);
+        let _ = fallback; // may be 0 on an all-eligible grid
     }
 
     #[test]

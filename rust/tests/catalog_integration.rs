@@ -171,6 +171,75 @@ fn custom_entry_drives_the_whole_stack() {
 }
 
 #[test]
+fn concurrent_parse_and_load_never_block_and_keep_error_enumeration() {
+    // Regression test for the lock-free read path: `HwId::parse`
+    // racing `Catalog::load_str` and `Catalog::with_freq_cap` on other
+    // threads must never deadlock, and the parse error for an unknown
+    // name must keep enumerating the accepted forms (at minimum every
+    // built-in) at all times — the enumeration used to walk the
+    // catalog under the same `RwLock` registration held.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // Writers: register a stream of fresh entries + derived caps.
+        s.spawn(|| {
+            for i in 0..40 {
+                let toml =
+                    h100_variant(&format!("it-race-{i}"), 400e9).to_toml();
+                Catalog::load_str(&toml).unwrap();
+                let err =
+                    Catalog::with_freq_cap(HwId::H100, 0.0).unwrap_err();
+                assert!(err.contains("outside (0, 1]"), "{err}");
+                Catalog::with_freq_cap(HwId::H100, 0.9).unwrap();
+            }
+            done.store(true, Ordering::Release);
+        });
+        // Readers: unknown-name parses must error with the accepted
+        // list (never block, never observe a partially-registered
+        // entry), and known names must keep resolving.
+        for _ in 0..3 {
+            s.spawn(|| {
+                while !done.load(Ordering::Acquire) {
+                    let err = HwId::parse("it-no-such-hw").unwrap_err();
+                    for name in ["v100", "a100", "h100", "gb200"] {
+                        assert!(err.contains(name), "{err}");
+                    }
+                    assert_eq!(HwId::parse("h100").unwrap(), HwId::H100);
+                    assert_eq!(HwId::H100.spec().name, "H100");
+                    assert!(Catalog::len() >= 4);
+                }
+            });
+        }
+    });
+    // Every raced-in entry is now visible to a lock-free lookup, and
+    // derived entries still stay out of the primary enumeration.
+    for i in 0..40 {
+        let id = HwId::parse(&format!("it-race-{i}")).unwrap();
+        assert_eq!(id.spec().gpu.ib_bw, 400e9);
+    }
+    let capped = HwId::parse("h100@0.9").unwrap();
+    assert!(!Catalog::primary_ids().contains(&capped));
+    assert!(Catalog::ids().contains(&capped));
+}
+
+#[test]
+fn node_spec_carries_the_static_spec() {
+    // `NodeSpec` resolves its catalog entry once at construction; the
+    // carried reference must be the interned spec itself (pointer
+    // equality), for built-ins and loaded entries alike.
+    let node = HwId::H100.node();
+    assert!(std::ptr::eq(node.hw_spec(), HwId::H100.spec()));
+    assert!(std::ptr::eq(node.spec(), &HwId::H100.spec().gpu));
+    let custom =
+        Catalog::register(h100_variant("it-nodespec", 500e9)).unwrap();
+    let cluster = Cluster::new(custom, 2);
+    assert!(std::ptr::eq(cluster.node.hw_spec(), custom.spec()));
+    assert_eq!(cluster.node.spec().ib_bw, 500e9);
+    assert_eq!(cluster.gpus_per_node(), 8);
+}
+
+#[test]
 fn derived_freq_capped_specs_run_end_to_end() {
     let capped = Catalog::with_freq_cap(HwId::H100, 0.6).unwrap();
     let cluster = Cluster::new(capped, 2);

@@ -90,7 +90,10 @@ fn prop_fused_fast_path_matches_event_engine() {
         let dp = world / mp;
         let plan = ParallelPlan::new(dp, tp, pp, cp);
         let mbs = pow2(rng, 1);
-        let mut accum = 1 + rng.next_below(3) as usize;
+        // Up to 6 accumulation steps so deep pipelines reach the
+        // steady-state wave driver (m >= pp) as well as its m < pp
+        // ready-queue fall-back.
+        let mut accum = 1 + rng.next_below(6) as usize;
         let sharding = match rng.next_below(5) {
             0 => Sharding::Fsdp,
             1 => Sharding::Ddp,
@@ -130,6 +133,20 @@ fn prop_fused_fast_path_matches_event_engine() {
     assert!(valid.get() >= 200,
             "only {} valid configs sampled; need >= 200 for coverage",
             valid.get());
+    // The sample must exercise both schedule drivers: the steady-state
+    // wave driver (compressed emission) and the ready-queue fall-back
+    // (interleaved schedules, m < pp) — every case above asserted
+    // bit-identical reports, so this is the "compressed or exercised
+    // fall-back" coverage guarantee.
+    let (steady, fallback) = arena.borrow().steady_stats();
+    assert!(steady > 0,
+            "no sampled config reached the steady-state wave driver");
+    assert!(fallback > 0,
+            "no sampled config exercised the ready-queue fall-back");
+    let (recorded, runs) = arena.borrow().interval_stats();
+    assert!(runs <= recorded,
+            "run-coalescing stored more runs ({runs}) than intervals \
+             ({recorded})");
 }
 
 #[test]

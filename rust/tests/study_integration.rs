@@ -287,10 +287,16 @@ fn json_sink_round_trips_a_figure() {
 #[test]
 fn figures_unchanged_with_cache_and_arena_enabled() {
     // The perf machinery (collective cost memo, arena-recycled fused
-    // fast path, lock-free result slots) must not move a single CSV
-    // byte: a default runner and one forced through the uncached
-    // event-graph reference must emit identical files. `sched` pins
-    // the new interleaved/ZeRO-3 emitter arms to the same contract.
+    // fast path, steady-state wave driver + run-coalesced intervals,
+    // lock-free result slots) must not move a single CSV byte: a
+    // default runner and one forced through the uncached event-graph
+    // reference must emit identical files. `sched` pins the
+    // interleaved/ZeRO-3 emitter arms (the wave driver's fall-back) to
+    // the same contract. (The hardware axis is pinned by the
+    // fixed-grid test below, not by `madmax`: that scenario
+    // re-enumerates the live process-global catalog per run, so a
+    // concurrent test registering an entry between the two runs here
+    // would fail this comparison spuriously.)
     let reg = report::registry();
     for fig in ["fig1", "fig6", "fig9", "sched"] {
         let sc = reg.get(fig).unwrap();
@@ -315,6 +321,32 @@ fn figures_unchanged_with_cache_and_arena_enabled() {
             let b = std::fs::read(dir_b.join(&name)).unwrap();
             assert_eq!(a, b, "{name} bytes diverge with fast path");
         }
+    }
+}
+
+#[test]
+fn hardware_axis_tables_unchanged_with_fast_path() {
+    // Hardware-axis counterpart of the figure comparison above, on the
+    // *pinned* built-in grid (every catalog built-in incl. the 72-GPU
+    // GB200 domain) — a fixed point set, immune to other tests
+    // registering catalog entries concurrently.
+    let study = dtsim::study::bench_pinned_hw_study();
+    let fast = StudyRunner::sequential().run(&study);
+    let mut engine_runner = StudyRunner::new(4);
+    engine_runner.force_event_engine(true);
+    let reference = engine_runner.run(&study);
+    assert!(!fast.cases.is_empty());
+    assert_eq!(fast.cases.len(), reference.cases.len());
+    for (a, b) in fast.cases.iter().zip(&reference.cases) {
+        assert_eq!(a.hw, b.hw);
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.metrics.global_wps.to_bits(),
+                   b.metrics.global_wps.to_bits(),
+                   "{} on {} diverged with the fast path", a.plan, a.hw);
+        assert_eq!(a.metrics.exposed_comm.to_bits(),
+                   b.metrics.exposed_comm.to_bits());
+        assert_eq!(a.metrics.iter_time.to_bits(),
+                   b.metrics.iter_time.to_bits());
     }
 }
 
