@@ -135,6 +135,14 @@
 //! on every push and gates `--compare` against the committed
 //! `BENCH_baseline.json` (methodology: `docs/performance.md`).
 //!
+//! Serve mode ([`serve`]) turns the planner into a long-lived
+//! service: `dtsim serve` answers simulate/plan/study-grid/scenario
+//! requests over a line-delimited JSON protocol, deduplicating work
+//! across requests (and across restarts, with `--store PATH`) through
+//! the [`store`] module's `ResultStore` trait — an in-memory map or a
+//! crash-recoverable append-only log whose records round-trip `f64`s
+//! bitwise (`docs/serve.md`).
+//!
 //! Python is build-time only; the binary is self-contained once
 //! `make artifacts` has run.
 
@@ -150,7 +158,9 @@ pub mod planner;
 pub mod power;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
+pub mod store;
 pub mod study;
 pub mod topology;
 pub mod trace;

@@ -10,29 +10,36 @@
 //!   train      real data-parallel training over AOT artifacts
 //!   scenario   print metrics for a named config preset
 //!   trace      export a chrome://tracing timeline for a config
+//!   serve      long-running planner service (line-delimited JSON/TCP)
+//!   client     send one request to a running `dtsim serve`
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use dtsim::collectives::{collective_time, Collective};
-use dtsim::config::{scenario, RunConfig};
+use dtsim::config::scenario;
 use dtsim::coordinator::{DistTrainer, TrainOptions};
 use dtsim::hardware::{Catalog, HwId};
 use dtsim::metrics;
 use dtsim::model;
-use dtsim::parallelism::ParallelPlan;
 use dtsim::planner::{self, SweepRequest};
 use dtsim::report;
 use dtsim::runtime::artifacts_root;
+use dtsim::serve::{Client, Server};
 use dtsim::sim::{build_engine, Schedule, Sharding, SimConfig};
+use dtsim::store::{LogStore, MemStore, ResultStore};
+use dtsim::study::grid;
 use dtsim::study::{
-    Column, ConsoleSink, CsvSink, JsonSink, PlanAxis, Sink, Study,
-    StudyRunner,
+    Column, ConsoleSink, CsvSink, JsonSink, Sink, Study, StudyRunner,
 };
 use dtsim::topology::{Cluster, GroupPlacement};
 use dtsim::trace::write_chrome_trace;
 use dtsim::util::args::Args;
+use dtsim::util::json::Json;
 
 const USAGE: &str = "\
 dtsim — Hardware Scaling Trends & Diminishing Returns reproduction
@@ -70,6 +77,13 @@ USAGE:
   dtsim scenario   <weak-small|weak-large|strong-2n|strong-32n|
                     fig6-best|a100-32n|v100-32n>
   dtsim trace      --out trace.json [simulate flags]
+  dtsim serve      [--addr 127.0.0.1:7071] [--store results.dtstore]
+                   [--threads N]    # line-delimited JSON over TCP;
+                                    # --store persists results across
+                                    # restarts (docs/serve.md)
+  dtsim client     <ping|stats|simulate|plan|study-grid|scenario|
+                    shutdown> [request flags]
+                   [--addr 127.0.0.1:7071]
 ";
 
 fn main() {
@@ -93,6 +107,8 @@ fn main() {
         "train" => cmd_train(&args),
         "scenario" => cmd_scenario(&args),
         "trace" => cmd_trace(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -104,57 +120,10 @@ fn main() {
     }
 }
 
+/// `simulate`-style flags → `SimConfig` (shared with serve mode; see
+/// `study::grid`).
 fn sim_config_from(args: &Args) -> Result<SimConfig> {
-    if let Some(path) = args.get("config") {
-        if path.ends_with(".toml") {
-            return RunConfig::from_toml_file(path)
-                .map(|rc| rc.sim())
-                .map_err(|e| anyhow!(e));
-        }
-    }
-    let arch = *model::by_name(&args.get_or("arch", "7b"))
-        .ok_or_else(|| anyhow!("unknown --arch"))?;
-    let gen = parse_hw(&args.get_or("gen", "h100"))?;
-    let cluster = if args.has("gpus") {
-        if args.has("nodes") {
-            bail!("give --nodes or --gpus, not both");
-        }
-        Cluster::with_gpus(gen, args.usize_or("gpus", 0))
-            .map_err(|e| anyhow!("--gpus: {e}"))?
-    } else {
-        Cluster::new(gen, args.usize_or("nodes", 32))
-    };
-    let tp = args.usize_or("tp", 1);
-    let pp = args.usize_or("pp", 1);
-    let cp = args.usize_or("cp", 1);
-    let mp = tp * pp * cp;
-    if cluster.world_size() % mp != 0 {
-        bail!("tp*pp*cp={} must divide world={}", mp,
-              cluster.world_size());
-    }
-    let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp);
-    let mut cfg = SimConfig::fsdp(
-        arch,
-        cluster,
-        plan,
-        args.usize_or("gbs", 2 * plan.dp),
-        args.usize_or("mbs", 2),
-        args.usize_or("seq", 4096),
-    );
-    if let Some(s) = args.get("sharding") {
-        cfg.sharding = parse_sharding(s)?;
-        if args.has("ddp") && cfg.sharding != Sharding::Ddp {
-            bail!("--ddp conflicts with --sharding {}; drop one",
-                  cfg.sharding);
-        }
-    } else if args.has("ddp") {
-        cfg.sharding = Sharding::Ddp;
-    }
-    if let Some(s) = args.get("schedule") {
-        cfg.schedule = parse_schedule(s)?;
-    }
-    cfg.validate().map_err(|e| anyhow!(e))?;
-    Ok(cfg)
+    grid::sim_config_from_args(args).map_err(anyhow::Error::msg)
 }
 
 fn print_metrics(m: &metrics::Metrics) {
@@ -230,8 +199,8 @@ fn cmd_study(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let mut runner = match args.get("threads") {
-        Some(_) => StudyRunner::new(args.usize_or("threads", 1)),
+    let mut runner = match parse_threads(args)? {
+        Some(n) => StudyRunner::new(n),
         None => StudyRunner::auto(),
     };
     let out = PathBuf::from(args.get_or("out", "reports"));
@@ -284,156 +253,47 @@ fn cmd_study(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a Study from `--grid` axis flags.
+/// Build a Study from `--grid` axis flags (shared with serve mode; see
+/// `study::grid`).
 fn study_from_args(args: &Args) -> Result<Study> {
-    let list = |key: &str, default: &str| -> Vec<String> {
-        args.get_or(key, default)
-            .split(',')
-            .map(|s| s.trim().to_string())
-            .filter(|s| !s.is_empty())
-            .collect()
-    };
-    let usizes = |key: &str, default: &str| -> Result<Vec<usize>> {
-        list(key, default)
-            .iter()
-            .map(|s| s.parse::<usize>()
-                .map_err(|_| anyhow!("--{key}: '{s}' is not an integer")))
-            .collect()
-    };
-
-    let mut archs = Vec::new();
-    for name in list("arch", "7b") {
-        archs.push(*model::by_name(&name)
-            .ok_or_else(|| anyhow!("unknown --arch '{name}'"))?);
-    }
-    let mut gens = Vec::new();
-    for name in list("gen", "h100") {
-        gens.push(parse_hw(&name)?);
-    }
-    if gens.is_empty() {
-        return Err(anyhow!("--gen names no hardware"));
-    }
-    let mut shardings = Vec::new();
-    for name in list("sharding", "fsdp") {
-        shardings.push(parse_sharding(&name)?);
-    }
-    let mut schedules = Vec::new();
-    for name in list("schedule", "1f1b") {
-        schedules.push(parse_schedule(&name)?);
-    }
-
-    let plans = match args.get_or("plans", "sweep").as_str() {
-        "sweep" => PlanAxis::Sweep { with_cp: false },
-        "sweep-cp" => PlanAxis::Sweep { with_cp: true },
-        "dp" => PlanAxis::DataParallel,
-        spec => PlanAxis::Shapes(
-            spec.split(',')
-                .map(str::trim)
-                .filter(|s| !s.is_empty())
-                .map(|s| parse_plan_shape(s)
-                    .ok_or_else(|| anyhow!(
-                        "--plans: '{s}' is not sweep|sweep-cp|dp or a \
-                         tpXppYcpZ shape")))
-                .collect::<Result<Vec<_>>>()?,
-        ),
-    };
-
-    // Cluster sizes: --nodes, or --gpus (each count must be a multiple
-    // of the hardware's NVLink-domain size; the error reports the
-    // offending axis value instead of aborting).
-    let nodes = if args.has("gpus") {
-        if args.has("nodes") {
-            return Err(anyhow!("give --nodes or --gpus, not both"));
-        }
-        let domains: std::collections::BTreeSet<usize> = gens
-            .iter()
-            .map(|hw| hw.spec().gpus_per_node)
-            .collect();
-        if domains.len() > 1 {
-            return Err(anyhow!(
-                "--gpus needs one NVLink-domain size, but --gen mixes \
-                 {:?}; use --nodes instead", domains));
-        }
-        let mut nodes = Vec::new();
-        for gpus in usizes("gpus", "256")? {
-            nodes.push(
-                Cluster::with_gpus(gens[0], gpus)
-                    .map_err(|e| anyhow!("--gpus: {e}"))?
-                    .nodes);
-        }
-        nodes
-    } else {
-        usizes("nodes", "32")?
-    };
-
-    let mut b = Study::builder(&args.get_or("name", "grid"))
-        .title("ad-hoc study grid")
-        .archs(archs)
-        .hardware(gens)
-        .nodes(nodes)
-        .plans(plans)
-        .seq_lens(usizes("seq", "4096")?)
-        .shardings(shardings)
-        .schedules(schedules);
-
-    b = if args.has("lbs") {
-        b.batch_per_replica(args.usize_or("lbs", 2))
-    } else {
-        b.global_batches(usizes("gbs", "512")?)
-    };
-    b = match args.get_or("mbs", "divisors").as_str() {
-        "divisors" => b.micro_batch_divisors(),
-        _ => b.micro_batches(usizes("mbs", "2")?),
-    };
-    let cap = args.f64_or("cap", 0.94);
-    if cap > 0.0 {
-        b = b.memory_cap(cap);
-    }
-    b.try_build().map_err(anyhow::Error::msg)
+    grid::study_from_args(args).map_err(anyhow::Error::msg)
 }
 
 /// Hardware-name parsing for `--gen`: built-ins plus anything loaded
 /// via `--catalog`; the error enumerates every accepted form.
 fn parse_hw(s: &str) -> Result<HwId> {
-    HwId::parse(s).map_err(|e| anyhow!("--gen: {e}"))
+    grid::parse_hw(s).map_err(anyhow::Error::msg)
 }
 
 fn parse_sharding(s: &str) -> Result<Sharding> {
-    dtsim::config::parse_sharding(s)
-        .map_err(|e| anyhow!("--sharding: {e}"))
+    grid::parse_sharding(s).map_err(anyhow::Error::msg)
 }
 
 fn parse_schedule(s: &str) -> Result<Schedule> {
-    dtsim::config::parse_schedule(s)
-        .map_err(|e| anyhow!("--schedule: {e}"))
+    grid::parse_schedule(s).map_err(anyhow::Error::msg)
 }
 
-/// Parse a "tp2pp4cp1"-style plan shape (missing degrees default to 1).
-fn parse_plan_shape(s: &str) -> Option<(usize, usize, usize)> {
-    if s.is_empty() {
-        return None;
+/// `--threads` parsing shared by `study`, `bench`, and `serve`:
+/// `None` means one worker per core. Like `parse_hw`/`parse_sharding`,
+/// the error enumerates the accepted forms instead of panicking.
+fn parse_threads(args: &Args) -> Result<Option<usize>> {
+    let Some(v) = args.get("threads") else {
+        return Ok(None);
+    };
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(Some(n)),
+        _ => bail!(
+            "--threads: invalid worker count '{v}' (expected a \
+             positive integer, e.g. --threads 4, or omit the flag for \
+             one worker per core)"
+        ),
     }
-    let (mut tp, mut pp, mut cp) = (1usize, 1usize, 1usize);
-    let mut rest = s;
-    while !rest.is_empty() {
-        let (target, tail) = if let Some(t) = rest.strip_prefix("tp") {
-            (&mut tp, t)
-        } else if let Some(t) = rest.strip_prefix("pp") {
-            (&mut pp, t)
-        } else if let Some(t) = rest.strip_prefix("cp") {
-            (&mut cp, t)
-        } else {
-            return None;
-        };
-        let end = tail
-            .char_indices()
-            .find(|(_, c)| !c.is_ascii_digit())
-            .map(|(i, _)| i)
-            .unwrap_or(tail.len());
-        *target = tail[..end].parse().ok()?;
-        rest = &tail[end..];
-    }
-    Some((tp, pp, cp))
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {
@@ -466,12 +326,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use std::time::Instant;
 
     let out = PathBuf::from(args.get_or("out", "BENCH_study.json"));
-    let threads = match args.get("threads") {
-        Some(_) => args.usize_or("threads", 1),
-        None => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4),
-    };
+    let threads = parse_threads(args)?.unwrap_or_else(default_threads);
     let reps = if args.has("quick") { 2 } else { 5 };
     let study = dtsim::study::bench_pinned_study();
     let points = study.expand();
@@ -517,12 +372,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         0.0
     };
 
-    // Warm rerun: every configuration served from the config cache.
+    // Warm rerun: every configuration served from the result store.
+    // The store counters below come from this runner: the cold pass
+    // records one miss per distinct config, the warm pass one hit.
     let mut warmed = StudyRunner::new(threads);
     warmed.run(&study);
     let t0 = Instant::now();
     warmed.run(&study);
     let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let store_stats = warmed.store_stats();
 
     // Schedule-variant companion grid (interleaved-1F1B + ZeRO-3 on
     // pipeline-heavy plans) so the new emitter arms are tracked in the
@@ -572,11 +430,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"hw_grid_points\": {},\n  \"hw_simulated\": {},\n  \
          \"hw_configs_per_s\": {:.1},\n  \
          \"hw_cache_hit_rate\": {:.4},\n  \
+         \"store_hits\": {},\n  \"store_misses\": {},\n  \
+         \"store_bytes\": {},\n  \
          \"peak_rss_bytes\": {},\n  \"threads\": {},\n  \"reps\": {}\n}}\n",
         study.name, points.len(), evaluated, best_cps, warm_ms, hit_rate,
         steady_frac, interval_compression,
         sched_points.len(), sched_evaluated, sched_cps,
         hw_points.len(), hw_evaluated, hw_cps, hw_hit_rate,
+        store_stats.hits, store_stats.misses, store_stats.bytes,
         peak_rss_bytes(), threads, reps);
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
@@ -775,9 +636,91 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dtsim serve` — the long-running planner service (docs/serve.md).
+/// Without `--store` results live in memory for the process lifetime;
+/// with `--store PATH` they ride the crash-recoverable on-disk log and
+/// survive restarts bit-identically.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let threads = parse_threads(args)?.unwrap_or_else(default_threads);
+    let addr = args.get_or("addr", "127.0.0.1:7071");
+    let store: Arc<dyn ResultStore> = match args.get("store") {
+        Some(path) => {
+            let (store, recovery) =
+                LogStore::open(path).map_err(|e| anyhow!(
+                    "--store: {e} (expected a writable file path, \
+                     e.g. --store results.dtstore — created on first \
+                     use)"))?;
+            println!(
+                "store {path}: {} results recovered, {} stale \
+                 skipped, {} trailing bytes truncated",
+                recovery.recovered, recovery.skipped_stale,
+                recovery.truncated_bytes);
+            Arc::new(store)
+        }
+        None => Arc::new(MemStore::new()),
+    };
+    let persistent = args.has("store");
+    let server =
+        Server::bind(&addr, store, threads).map_err(|e| anyhow!(
+            "--addr: cannot listen on '{addr}': {e} (expected \
+             host:port, e.g. --addr 127.0.0.1:7071, or port 0 for an \
+             ephemeral port)"))?;
+    println!(
+        "dtsim serve listening on {} ({} threads per request, {} \
+         store); send {{\"cmd\":\"shutdown\"}} or use `dtsim client \
+         shutdown` to stop",
+        server.local_addr()?, threads,
+        if persistent { "persistent" } else { "in-memory" });
+    server.run()?;
+    println!("dtsim serve: shut down cleanly");
+    Ok(())
+}
+
+/// `dtsim client <cmd> [flags]` — one request against a running
+/// server. Every flag except `--addr`/`--catalog` is forwarded as a
+/// request field, response lines print verbatim (line-delimited JSON,
+/// pipe to `jq` at will), and an `error` event exits nonzero.
+fn cmd_client(args: &Args) -> Result<()> {
+    let cmd = args.positional.get(1).ok_or_else(|| anyhow!(
+        "client command required (one of: ping, stats, simulate, \
+         plan, study-grid, scenario, shutdown)"))?;
+    let addr = args.get_or("addr", "127.0.0.1:7071");
+    let mut req = BTreeMap::new();
+    req.insert("cmd".to_string(), Json::Str(cmd.clone()));
+    for (k, v) in args.flags() {
+        if k == "addr" || k == "catalog" {
+            continue;
+        }
+        req.insert(k.to_string(), Json::Str(v.to_string()));
+    }
+    let mut client =
+        Client::connect_retry(&addr, 10, Duration::from_millis(200))
+            .map_err(|e| anyhow!(
+                "connect {addr}: {e} (is `dtsim serve` running? \
+                 pass --addr to target a non-default address)"))?;
+    let lines = client.request_raw(&Json::Object(req).dump())?;
+    let mut failed = false;
+    for line in &lines {
+        println!("{line}");
+        let event = Json::parse(line)
+            .ok()
+            .and_then(|v| {
+                v.get("event").and_then(|e| e.as_str()).map(String::from)
+            });
+        if event.as_deref() == Some("error") {
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use dtsim::study::grid::parse_plan_shape;
 
     const BENCH_JSON: &str = "{\n  \"bench\": \"study_runner/x\",\n  \
         \"note\": \"mentions configs_per_s freely\",\n  \
@@ -882,6 +825,27 @@ mod tests {
         let cfg = sim_config_from(
             &parse("simulate --nodes 2 --sharding ddp --ddp")).unwrap();
         assert_eq!(cfg.sharding, Sharding::Ddp);
+    }
+
+    #[test]
+    fn threads_errors_enumerate_accepted_forms() {
+        let parse = |s: &str| {
+            Args::parse(s.split_whitespace().map(String::from))
+        };
+        assert_eq!(parse_threads(&parse("study")).unwrap(), None);
+        assert_eq!(parse_threads(&parse("study --threads 4")).unwrap(),
+                   Some(4));
+        let err = parse_threads(&parse("study --threads lots"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--threads"), "{err}");
+        assert!(err.contains("'lots'"), "{err}");
+        assert!(err.contains("positive integer"), "{err}");
+        assert!(err.contains("--threads 4"), "{err}");
+        // Zero workers and a bare valueless flag are both rejected
+        // through the same enumerated message, not a panic.
+        assert!(parse_threads(&parse("study --threads 0")).is_err());
+        assert!(parse_threads(&parse("study --threads")).is_err());
     }
 
     #[test]

@@ -1,0 +1,102 @@
+//! Minimal client for the serve protocol: one request line out, event
+//! lines in until a terminal event. `dtsim client` (scripting, the CI
+//! smoke test) and the integration tests are built on this.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::TERMINAL_EVENTS;
+
+/// One connection to a running `dtsim serve`. Requests are serial per
+/// connection (the protocol has no request IDs); open more connections
+/// for concurrency — the server is thread-per-connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Retry `connect` while the server is still binding (CI starts
+    /// `dtsim serve` in the background and races it).
+    pub fn connect_retry(
+        addr: &str,
+        attempts: u32,
+        delay: Duration,
+    ) -> std::io::Result<Client> {
+        let mut last = None;
+        for _ in 0..attempts.max(1) {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            std::thread::sleep(delay);
+        }
+        Err(last.unwrap_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::ConnectionRefused,
+                "no connection attempts made",
+            )
+        }))
+    }
+
+    /// Send one request line, collect raw response lines through the
+    /// terminal event (inclusive). Lines come back verbatim — byte
+    /// comparisons over them are meaningful.
+    pub fn request_raw(
+        &mut self,
+        line: &str,
+    ) -> std::io::Result<Vec<String>> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut lines = Vec::new();
+        loop {
+            let mut buf = String::new();
+            let n = self.reader.read_line(&mut buf)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed the connection mid-response",
+                ));
+            }
+            let trimmed = buf.trim_end_matches('\n').to_string();
+            let terminal = Json::parse(&trimmed)
+                .ok()
+                .and_then(|v| {
+                    v.get("event")
+                        .and_then(|e| e.as_str())
+                        .map(|e| TERMINAL_EVENTS.contains(&e))
+                })
+                .unwrap_or(true); // unparseable: don't hang forever
+            lines.push(trimmed);
+            if terminal {
+                return Ok(lines);
+            }
+        }
+    }
+
+    /// [`Self::request_raw`], parsed.
+    pub fn request(
+        &mut self,
+        line: &str,
+    ) -> std::io::Result<Vec<Json>> {
+        let mut events = Vec::new();
+        for l in self.request_raw(line)? {
+            events.push(Json::parse(&l).map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad response line: {e}"),
+                )
+            })?);
+        }
+        Ok(events)
+    }
+}

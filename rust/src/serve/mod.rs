@@ -1,0 +1,579 @@
+//! Planner-as-a-service: the `dtsim serve` request loop.
+//!
+//! A long-running process that answers `simulate`, `plan`,
+//! `study-grid`, and `scenario` requests over a **line-delimited JSON
+//! protocol** on a TCP socket (std-only — the same `util::json` that
+//! parses AOT manifests serializes the protocol). Every request is one
+//! line; every response is one or more event lines, ending with a
+//! *terminal* event (`result`, `table`+`done`, `ok`, or `error`). The
+//! full schema, with copy-pasteable examples, lives in `docs/serve.md`.
+//!
+//! Requests carry the CLI's flag namespace verbatim: a request object's
+//! non-`cmd` keys are converted to `--key value` pairs and fed through
+//! the same `study::grid` builders the CLI uses, so
+//! `{"cmd":"study-grid","nodes":"2","plans":"sweep"}` means exactly
+//! `dtsim study --grid --nodes 2 --plans sweep`.
+//!
+//! Work dedup is the point of serving: every request gets a fresh
+//! [`StudyRunner`] over the **shared, process-wide** [`ResultStore`],
+//! so overlapping grids simulate only novel points — and with `--store
+//! PATH` the store is a crash-recoverable on-disk log, so restarts keep
+//! prior results bit-identically (`store::log`). Big grids **stream**:
+//! each novel point is written back as a `case` event the moment it
+//! completes, the deterministic CSV table follows as one `table` event,
+//! and the closing `done` event carries the request/store counters. A
+//! client that disconnects mid-grid cancels the request at the next
+//! point claim (the failed `case` write flips the request's
+//! cancellation flag); everything already simulated is committed, so a
+//! retry resumes where the dead request stopped.
+
+pub mod client;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::model;
+use crate::planner::{self, SweepRequest};
+use crate::report;
+use crate::sim::{Schedule, Sharding};
+use crate::store::ResultStore;
+use crate::study::grid;
+use crate::study::{CaseResult, Column, StudyRunner, Table};
+use crate::topology::Cluster;
+use crate::util::args::Args;
+use crate::util::json::{obj, Json};
+
+pub use client::Client;
+
+/// Response events that end a request (the client stops reading after
+/// one of these). `case` events are intermediate.
+pub const TERMINAL_EVENTS: &[&str] = &["done", "result", "error", "ok"];
+
+/// The ad-hoc grid table layout — identical to `dtsim study --grid`'s
+/// console/CSV output, so a served grid and a CLI run of the same flags
+/// render byte-identical CSV.
+const GRID_COLUMNS: &[Column] = &[
+    Column::Arch,
+    Column::Gen,
+    Column::Nodes,
+    Column::Plan,
+    Column::ShardingKind,
+    Column::ScheduleKind,
+    Column::Mbs,
+    Column::Gbs,
+    Column::SeqLen,
+    Column::GlobalWps,
+    Column::PerGpuWps,
+    Column::Mfu,
+    Column::ExposedMs,
+    Column::WpsPerWatt,
+    Column::MemGb,
+];
+
+/// A bound `dtsim serve` instance: accepts connections and answers
+/// requests until a `shutdown` request arrives.
+pub struct Server {
+    listener: TcpListener,
+    store: Arc<dyn ResultStore>,
+    threads: usize,
+}
+
+impl Server {
+    /// Bind the listener. `addr` is `host:port`; port 0 picks a free
+    /// port (tests do this — read it back via [`Self::local_addr`]).
+    pub fn bind(
+        addr: &str,
+        store: Arc<dyn ResultStore>,
+        threads: usize,
+    ) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server { listener, store, threads })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept-and-serve until shutdown. One thread per connection;
+    /// a `shutdown` request stops the accept loop (a self-connection
+    /// unblocks it) and the server drains open connections before
+    /// returning.
+    pub fn run(self) -> std::io::Result<()> {
+        let addr = self.listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for stream in self.listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let store = Arc::clone(&self.store);
+            let stop = Arc::clone(&stop);
+            let threads = self.threads;
+            handles.push(std::thread::spawn(move || {
+                handle_conn(stream, store, threads, &stop, addr);
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Serve one connection: a request per line, events written back on
+/// the same socket. Returns when the client disconnects or after a
+/// `shutdown` request.
+fn handle_conn(
+    stream: TcpStream,
+    store: Arc<dyn ResultStore>,
+    threads: usize,
+    stop: &AtomicBool,
+    addr: SocketAddr,
+) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if serve_line(&line, &mut out, &store, threads) {
+            // Shutdown: stop the accept loop, then poke it awake.
+            stop.store(true, Ordering::Relaxed);
+            let _ = TcpStream::connect(addr);
+            break;
+        }
+    }
+}
+
+/// Parse and dispatch one request line; `true` means shutdown. All
+/// dispatch panics (e.g. a malformed numeric flag) are converted to
+/// `error` events — one bad request must not take the connection (or
+/// the server) down.
+fn serve_line(
+    line: &str,
+    out: &mut TcpStream,
+    store: &Arc<dyn ResultStore>,
+    threads: usize,
+) -> bool {
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = send_error(out, &format!("bad request: {e}"));
+            return false;
+        }
+    };
+    let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) else {
+        let _ = send_error(
+            out,
+            "request must be an object with a string \"cmd\" \
+             (one of: ping, stats, simulate, plan, study-grid, \
+             scenario, shutdown)",
+        );
+        return false;
+    };
+    if cmd == "shutdown" {
+        let _ = send(out, &obj([
+            ("event", Json::Str("ok".into())),
+            ("cmd", Json::Str("shutdown".into())),
+        ]));
+        return true;
+    }
+    let cmd = cmd.to_string();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        dispatch(&cmd, &req, out, store, threads)
+    }));
+    match outcome {
+        Ok(Ok(())) => {}
+        Ok(Err(msg)) => {
+            let _ = send_error(out, &msg);
+        }
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("internal error");
+            let _ = send_error(out, msg);
+        }
+    }
+    false
+}
+
+fn dispatch(
+    cmd: &str,
+    req: &Json,
+    out: &mut TcpStream,
+    store: &Arc<dyn ResultStore>,
+    threads: usize,
+) -> Result<(), String> {
+    let args = args_from_request(req);
+    match cmd {
+        "ping" => send_io(out, &obj([
+            ("event", Json::Str("ok".into())),
+            ("cmd", Json::Str("ping".into())),
+        ])),
+        "stats" => {
+            let s = store.stats();
+            send_io(out, &obj([
+                ("event", Json::Str("ok".into())),
+                ("cmd", Json::Str("stats".into())),
+                ("store_hits", unum(s.hits)),
+                ("store_misses", unum(s.misses)),
+                ("store_bytes", unum(s.bytes)),
+                ("store_entries", unum(s.entries as u64)),
+            ]))
+        }
+        "simulate" => {
+            let cfg = grid::sim_config_from_args(&args)?;
+            let mut runner =
+                StudyRunner::with_store(threads, Arc::clone(store));
+            let case = runner.eval(&cfg);
+            send_io(out, &case_event("result", &case))
+        }
+        "plan" => {
+            let req = sweep_request_from_args(&args)?;
+            let mut runner =
+                StudyRunner::with_store(threads, Arc::clone(store));
+            let best = planner::best_in(&req, &mut runner);
+            let s = runner.store_stats();
+            let (evaluated, requested) = runner.stats();
+            match best {
+                None => Err("no feasible configuration (every plan \
+                             overflows memory or fails feasibility)"
+                    .into()),
+                Some(o) => send_io(out, &obj([
+                    ("event", Json::Str("result".into())),
+                    ("plan", Json::Str(o.plan.to_string())),
+                    ("mbs", unum(o.micro_batch as u64)),
+                    ("global_wps", Json::Num(o.metrics.global_wps)),
+                    ("mfu", Json::Num(o.metrics.mfu)),
+                    ("iter_time", Json::Num(o.metrics.iter_time)),
+                    ("wps_per_watt",
+                     Json::Num(o.metrics.wps_per_watt)),
+                    ("mem_per_gpu", Json::Num(o.mem_per_gpu)),
+                    ("requested", unum(requested as u64)),
+                    ("evaluated", unum(evaluated as u64)),
+                    ("pruned", unum(runner.pruned_points() as u64)),
+                    ("store_hits", unum(s.hits)),
+                    ("store_misses", unum(s.misses)),
+                ])),
+            }
+        }
+        "study-grid" => {
+            let study = grid::study_from_args(&args)?;
+            let mut runner =
+                StudyRunner::with_store(threads, Arc::clone(store));
+            let cancel = AtomicBool::new(false);
+            let run = runner.run_streamed(&study, &cancel, |case| {
+                // A dead client fails this write; flipping the flag
+                // aborts the remaining grid at the next point claim.
+                if send(out, &case_event("case", case)).is_err() {
+                    cancel.store(true, Ordering::Relaxed);
+                }
+            });
+            let mut res = run.map_err(|c| c.to_string())?;
+            res.sort_by_wps();
+            let top = args.usize_or("top", 0);
+            if top > 0 {
+                res.truncate(top);
+            }
+            let table = res.table(GRID_COLUMNS);
+            send_table(out, &table)?;
+            send_done(out, &runner)
+        }
+        "scenario" => {
+            let name = args
+                .get("name")
+                .ok_or("scenario requests need a \"name\" (e.g. \
+                        {\"cmd\":\"scenario\",\"name\":\"madmax\"})")?
+                .to_string();
+            let reg = report::registry();
+            let scenario = reg.get(&name).ok_or_else(|| {
+                format!(
+                    "unknown scenario '{}' (expected one of: {})",
+                    name,
+                    reg.names().join(", ")
+                )
+            })?;
+            let mut runner =
+                StudyRunner::with_store(threads, Arc::clone(store));
+            let tables = scenario
+                .tables(&mut runner)
+                .map_err(|e| format!("{e:#}"))?;
+            for t in &tables {
+                send_table(out, t)?;
+            }
+            send_done(out, &runner)
+        }
+        other => Err(format!(
+            "unknown cmd '{other}' (expected one of: ping, stats, \
+             simulate, plan, study-grid, scenario, shutdown)"
+        )),
+    }
+}
+
+/// A request object's non-`cmd` keys become CLI flag pairs: strings
+/// verbatim, numbers through the deterministic shortest-round-trip
+/// formatting (`2`, not `2.0`), booleans as `"true"`/`"false"`. The
+/// resulting [`Args`] is exactly what `Args::parse` would have built
+/// from the equivalent command line.
+fn args_from_request(req: &Json) -> Args {
+    let pairs = req.as_object().into_iter().flatten().filter_map(
+        |(k, v)| {
+            if k == "cmd" {
+                return None;
+            }
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                Json::Bool(b) => b.to_string(),
+                Json::Num(_) => v.dump(),
+                _ => return None,
+            };
+            Some((k.clone(), val))
+        },
+    );
+    Args::from_pairs(Vec::new(), pairs)
+}
+
+/// `plan` flags → [`SweepRequest`], mirroring `dtsim sweep`'s
+/// defaults.
+fn sweep_request_from_args(args: &Args) -> Result<SweepRequest, String> {
+    let arch = *model::by_name(&args.get_or("arch", "7b"))
+        .ok_or("unknown --arch")?;
+    let gen = grid::parse_hw(&args.get_or("gen", "h100"))?;
+    let cluster = Cluster::new(gen, args.usize_or("nodes", 32));
+    Ok(SweepRequest {
+        arch,
+        cluster,
+        global_batch: args.usize_or("gbs", 512),
+        seq_len: args.usize_or("seq", 4096),
+        with_cp: args.bool_or("cp", false),
+        sharding: match args.get("sharding") {
+            Some(s) => grid::parse_sharding(s)?,
+            None => Sharding::Fsdp,
+        },
+        schedule: match args.get("schedule") {
+            Some(s) => grid::parse_schedule(s)?,
+            None => Schedule::OneFOneB,
+        },
+    })
+}
+
+fn case_event(event: &'static str, c: &CaseResult) -> Json {
+    obj([
+        ("event", Json::Str(event.into())),
+        ("arch", Json::Str(c.arch.into())),
+        ("gen", Json::Str(c.hw.to_string())),
+        ("nodes", unum(c.nodes as u64)),
+        ("plan", Json::Str(c.plan.to_string())),
+        ("sharding", Json::Str(c.sharding.to_string())),
+        ("schedule", Json::Str(c.schedule.to_string())),
+        ("gbs", unum(c.global_batch as u64)),
+        ("mbs", unum(c.micro_batch as u64)),
+        ("seq", unum(c.seq_len as u64)),
+        ("world", unum(c.metrics.world as u64)),
+        ("iter_time", Json::Num(c.metrics.iter_time)),
+        ("global_wps", Json::Num(c.metrics.global_wps)),
+        ("per_gpu_wps", Json::Num(c.metrics.per_gpu_wps)),
+        ("mfu", Json::Num(c.metrics.mfu)),
+        ("exposed_comm", Json::Num(c.metrics.exposed_comm)),
+        ("wps_per_watt", Json::Num(c.metrics.wps_per_watt)),
+        ("energy_per_token_j",
+         Json::Num(c.metrics.energy_per_token_j)),
+        ("mem_per_gpu", Json::Num(c.mem_per_gpu)),
+    ])
+}
+
+/// One `table` event: the rendered result as a deterministic CSV
+/// string ([`Table::csv_string`]) — the payload the cold-vs-warm
+/// byte-identity contract is stated over.
+fn send_table(out: &mut TcpStream, t: &Table) -> Result<(), String> {
+    send_io(out, &obj([
+        ("event", Json::Str("table".into())),
+        ("name", Json::Str(t.name.clone())),
+        ("title", Json::Str(t.title.clone())),
+        ("csv", Json::Str(t.csv_string())),
+    ]))
+}
+
+/// The closing `done` event: per-request work counters plus the
+/// store-lifetime hit/miss/size counters.
+fn send_done(
+    out: &mut TcpStream,
+    runner: &StudyRunner,
+) -> Result<(), String> {
+    let (evaluated, requested) = runner.stats();
+    let s = runner.store_stats();
+    send_io(out, &obj([
+        ("event", Json::Str("done".into())),
+        ("requested", unum(requested as u64)),
+        ("evaluated", unum(evaluated as u64)),
+        ("store_hits", unum(s.hits)),
+        ("store_misses", unum(s.misses)),
+        ("store_bytes", unum(s.bytes)),
+        ("store_entries", unum(s.entries as u64)),
+    ]))
+}
+
+fn send(out: &mut TcpStream, v: &Json) -> std::io::Result<()> {
+    let mut line = v.dump();
+    line.push('\n');
+    out.write_all(line.as_bytes())
+}
+
+fn send_io(out: &mut TcpStream, v: &Json) -> Result<(), String> {
+    send(out, v).map_err(|e| format!("client write failed: {e}"))
+}
+
+fn send_error(out: &mut TcpStream, msg: &str) -> std::io::Result<()> {
+    send(out, &obj([
+        ("event", Json::Str("error".into())),
+        ("error", Json::Str(msg.into())),
+    ]))
+}
+
+/// Counters are u64/usize; JSON numbers are f64. Exact up to 2^53 —
+/// far beyond any store this crate can produce.
+fn unum(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemStore;
+
+    fn start_server() -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let store: Arc<dyn ResultStore> = Arc::new(MemStore::new());
+        let server =
+            Server::bind("127.0.0.1:0", store, 1).expect("bind");
+        let addr = server.local_addr().expect("addr");
+        let handle = std::thread::spawn(move || {
+            server.run().expect("serve");
+        });
+        (addr, handle)
+    }
+
+    fn event_of(line: &str) -> String {
+        Json::parse(line)
+            .expect("response lines are valid json")
+            .get("event")
+            .and_then(|e| e.as_str())
+            .expect("every response line has an event")
+            .to_string()
+    }
+
+    #[test]
+    fn ping_errors_and_shutdown_roundtrip() {
+        let (addr, handle) = start_server();
+        let mut c =
+            Client::connect(&addr.to_string()).expect("connect");
+        let lines =
+            c.request_raw(r#"{"cmd":"ping"}"#).expect("ping");
+        assert_eq!(lines.len(), 1);
+        assert_eq!(event_of(&lines[0]), "ok");
+
+        // Unknown cmds and malformed requests come back as error
+        // events enumerating the accepted forms — not dropped
+        // connections.
+        let lines =
+            c.request_raw(r#"{"cmd":"frobnicate"}"#).expect("err");
+        assert_eq!(event_of(&lines[0]), "error");
+        assert!(lines[0].contains("study-grid"), "{}", lines[0]);
+        let lines = c.request_raw("not json").expect("bad json");
+        assert_eq!(event_of(&lines[0]), "error");
+        // A panicking flag parse (malformed numeric) is caught and
+        // reported on the same connection.
+        let lines = c
+            .request_raw(r#"{"cmd":"simulate","nodes":"two"}"#)
+            .expect("bad flag");
+        assert_eq!(event_of(&lines[0]), "error");
+        assert!(lines[0].contains("nodes"), "{}", lines[0]);
+
+        let lines =
+            c.request_raw(r#"{"cmd":"shutdown"}"#).expect("shutdown");
+        assert_eq!(event_of(&lines[0]), "ok");
+        handle.join().expect("server exits cleanly");
+    }
+
+    #[test]
+    fn simulate_then_warm_grid_reports_store_hits() {
+        let (addr, handle) = start_server();
+        let mut c =
+            Client::connect(&addr.to_string()).expect("connect");
+
+        let lines = c
+            .request_raw(
+                r#"{"cmd":"simulate","arch":"7b","nodes":2,"gbs":32}"#,
+            )
+            .expect("simulate");
+        assert_eq!(event_of(&lines[0]), "result");
+        let first = Json::parse(&lines[0]).unwrap();
+        assert!(first.get("global_wps").unwrap().as_f64().unwrap()
+            > 0.0);
+
+        // A grid over the same config space: the simulate result must
+        // be a hit, and the same grid again must evaluate nothing.
+        let grid = r#"{"cmd":"study-grid","arch":"7b","nodes":"2",
+            "plans":"dp","gbs":"32","mbs":"2"}"#
+            .replace('\n', " ");
+        let cold = c.request_raw(&grid).expect("cold grid");
+        let warm = c.request_raw(&grid).expect("warm grid");
+        let done = |lines: &[String]| {
+            Json::parse(lines.last().unwrap()).unwrap()
+        };
+        assert_eq!(event_of(cold.last().unwrap()), "done");
+        let warm_done = done(&warm);
+        assert_eq!(
+            warm_done.get("evaluated").unwrap().as_usize(),
+            Some(0),
+            "warm grid must be answered from the store"
+        );
+        assert!(
+            warm_done.get("store_hits").unwrap().as_f64().unwrap()
+                > 0.0
+        );
+        // Byte-identical table payloads, cold vs. warm.
+        let table_lines = |lines: &[String]| -> Vec<String> {
+            lines
+                .iter()
+                .filter(|l| event_of(l) == "table")
+                .cloned()
+                .collect()
+        };
+        assert_eq!(table_lines(&cold), table_lines(&warm));
+        assert!(!table_lines(&cold).is_empty());
+
+        let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+        handle.join().expect("server exits cleanly");
+    }
+
+    #[test]
+    fn request_args_match_cli_parsing() {
+        let req = Json::parse(
+            r#"{"cmd":"study-grid","nodes":2,"plans":"dp",
+                "json":true,"cap":0.9}"#,
+        )
+        .unwrap();
+        let args = args_from_request(&req);
+        assert_eq!(args.get("nodes"), Some("2"));
+        assert_eq!(args.get("plans"), Some("dp"));
+        assert!(args.bool_or("json", false));
+        assert_eq!(args.f64_or("cap", 0.0), 0.9);
+        assert!(args.get("cmd").is_none(), "cmd is not a flag");
+    }
+}

@@ -1,0 +1,534 @@
+//! Binary record codec for the persistent result store.
+//!
+//! One record is a self-contained `(ConfigKey, CaseResult)` pair. The
+//! encoding is explicit little-endian — `usize` widened to `u64`,
+//! `f64` as raw IEEE bits — so a reopened store returns *bitwise*
+//! identical results to the process that wrote it, which is what makes
+//! warm serve-mode answers byte-identical to cold ones.
+//!
+//! Identity is by value, not by process-local id:
+//!
+//! * The architecture is stored as its full field set. On decode, a
+//!   preset with the same name *and* fields yields that preset; any
+//!   mismatch falls back to an interned copy of the stored fields, so
+//!   a customized arch never aliases a preset's cache entry.
+//! * Hardware is stored as its catalog name plus an FNV-1a hash of the
+//!   spec's canonical TOML. A record whose hardware is unknown in this
+//!   process, or whose spec hash no longer matches, decodes to
+//!   [`DecodeError::StaleHardware`] — the store skips it rather than
+//!   serving results computed under different silicon.
+
+use std::sync::Mutex;
+
+use crate::hardware::HwId;
+use crate::metrics::Metrics;
+use crate::model::{self, TransformerArch};
+use crate::parallelism::ParallelPlan;
+use crate::sim::{Schedule, Sharding};
+use crate::study::{CaseResult, ConfigKey};
+
+/// Bump [`SCHEMA`] whenever the record layout changes; the store
+/// refuses files whose header hash differs instead of misreading them.
+pub const SCHEMA: &str = "dtsim-store-v1: ConfigKey{arch(name,6xu64),\
+    hw(name,spec_fnv1a64,gpus_per_node),nodes,plan(dp,tp,pp,cp),\
+    global_batch,micro_batch,seq_len,sharding(tag[,group]),\
+    schedule(tag[,v]),prefetch} CaseResult{metrics(13xf64,world),\
+    mem_per_gpu}";
+
+/// FNV-1a, 64-bit: the store's checksum and schema/spec hash. Tiny,
+/// dependency-free, and stable across platforms.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash of the record schema, written into the store header.
+pub fn schema_hash() -> u64 {
+    fnv1a64(SCHEMA.as_bytes())
+}
+
+/// Value hash of a hardware spec: FNV-1a of its canonical TOML (which
+/// round-trips bitwise, so this is the spec's value identity).
+pub fn spec_hash(hw: HwId) -> u64 {
+    fnv1a64(hw.spec().to_toml().as_bytes())
+}
+
+/// Why a record failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Structurally broken bytes (torn write, wrong layout). The log
+    /// treats everything from here on as untrustworthy.
+    Malformed(&'static str),
+    /// Structurally valid, but written under hardware this process
+    /// doesn't know or whose spec has changed. The record itself is
+    /// fine; it just must not be served.
+    StaleHardware(String),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Malformed(what) => {
+                write!(f, "malformed record: {what}")
+            }
+            DecodeError::StaleHardware(why) => {
+                write!(f, "stale hardware: {why}")
+            }
+        }
+    }
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::with_capacity(256) }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or(DecodeError::Malformed("record truncated"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize, DecodeError> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| DecodeError::Malformed("usize overflow"))
+    }
+
+    fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<&'a str, DecodeError> {
+        let len = u32::from_le_bytes(self.take(4)?.try_into().unwrap());
+        let bytes = self.take(len as usize)?;
+        std::str::from_utf8(bytes)
+            .map_err(|_| DecodeError::Malformed("non-utf8 string"))
+    }
+
+    fn finish(self) -> Result<(), DecodeError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(DecodeError::Malformed("trailing bytes"))
+        }
+    }
+}
+
+/// Arch names that survive decode but match no preset. Leaked once per
+/// distinct name so `&'static str` identity works across records.
+fn intern_arch_name(name: &str) -> &'static str {
+    static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+    let mut pool = INTERNED.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(existing) = pool.iter().find(|n| **n == name) {
+        return existing;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    pool.push(leaked);
+    leaked
+}
+
+/// Encode one `(key, case)` pair. `case` must be the result for `key`;
+/// the key's workload axes are stored once and shared on decode.
+pub fn encode_record(key: &ConfigKey, case: &CaseResult) -> Vec<u8> {
+    encode_with(key, case, key.hw.spec().name.as_str(), spec_hash(key.hw))
+}
+
+/// Test seam: encode under an arbitrary hardware name / spec hash, to
+/// fabricate records from a "different process" whose catalog moved on.
+#[cfg(test)]
+pub(crate) fn encode_with_hw(
+    key: &ConfigKey,
+    case: &CaseResult,
+    hw_name: &str,
+    hash: u64,
+) -> Vec<u8> {
+    encode_with(key, case, hw_name, hash)
+}
+
+fn encode_with(
+    key: &ConfigKey,
+    case: &CaseResult,
+    hw_name: &str,
+    hash: u64,
+) -> Vec<u8> {
+    let mut w = Writer::new();
+    let a = &key.arch;
+    w.str(a.name);
+    w.usize(a.n_layers);
+    w.usize(a.d_model);
+    w.usize(a.n_heads);
+    w.usize(a.n_kv_heads);
+    w.usize(a.d_ff);
+    w.usize(a.vocab);
+    w.str(hw_name);
+    w.u64(hash);
+    w.usize(key.gpus_per_node);
+    w.usize(key.nodes);
+    w.usize(key.plan.dp);
+    w.usize(key.plan.tp);
+    w.usize(key.plan.pp);
+    w.usize(key.plan.cp);
+    w.usize(key.global_batch);
+    w.usize(key.micro_batch);
+    w.usize(key.seq_len);
+    match key.sharding {
+        Sharding::Fsdp => w.u8(0),
+        Sharding::Ddp => w.u8(1),
+        Sharding::Hsdp { group } => {
+            w.u8(2);
+            w.usize(group);
+        }
+        Sharding::Zero3 => w.u8(3),
+    }
+    match key.schedule {
+        Schedule::OneFOneB => w.u8(0),
+        Schedule::Interleaved { v } => {
+            w.u8(1);
+            w.usize(v);
+        }
+    }
+    w.u8(key.prefetch as u8);
+    let m = &case.metrics;
+    w.f64(m.iter_time);
+    w.f64(m.global_wps);
+    w.f64(m.per_gpu_wps);
+    w.f64(m.tflops_per_gpu);
+    w.f64(m.mfu);
+    w.f64(m.compute_time);
+    w.f64(m.comm_time);
+    w.f64(m.exposed_comm);
+    w.f64(m.exposed_frac);
+    w.f64(m.power_w);
+    w.f64(m.total_power_w);
+    w.f64(m.wps_per_watt);
+    w.f64(m.energy_per_token_j);
+    w.usize(m.world);
+    w.f64(case.mem_per_gpu);
+    w.buf
+}
+
+/// Decode one record payload back into a `(key, case)` pair.
+pub fn decode_record(
+    bytes: &[u8],
+) -> Result<(ConfigKey, CaseResult), DecodeError> {
+    let mut r = Reader::new(bytes);
+    let arch_name = r.str()?.to_string();
+    let n_layers = r.usize()?;
+    let d_model = r.usize()?;
+    let n_heads = r.usize()?;
+    let n_kv_heads = r.usize()?;
+    let d_ff = r.usize()?;
+    let vocab = r.usize()?;
+    let arch = match model::by_name(&arch_name) {
+        Some(p)
+            if p.n_layers == n_layers
+                && p.d_model == d_model
+                && p.n_heads == n_heads
+                && p.n_kv_heads == n_kv_heads
+                && p.d_ff == d_ff
+                && p.vocab == vocab =>
+        {
+            *p
+        }
+        _ => TransformerArch {
+            name: intern_arch_name(&arch_name),
+            n_layers,
+            d_model,
+            n_heads,
+            n_kv_heads,
+            d_ff,
+            vocab,
+        },
+    };
+
+    let hw_name = r.str()?.to_string();
+    let stored_hash = r.u64()?;
+    let gpus_per_node = r.usize()?;
+    let hw = HwId::parse(&hw_name)
+        .map_err(DecodeError::StaleHardware)?;
+    if spec_hash(hw) != stored_hash {
+        return Err(DecodeError::StaleHardware(format!(
+            "spec for '{hw_name}' changed since the record was written"
+        )));
+    }
+    if hw.spec().gpus_per_node != gpus_per_node {
+        return Err(DecodeError::StaleHardware(format!(
+            "'{hw_name}' node size changed since the record was written"
+        )));
+    }
+
+    let nodes = r.usize()?;
+    let plan = ParallelPlan::new(r.usize()?, r.usize()?, r.usize()?, r.usize()?);
+    let global_batch = r.usize()?;
+    let micro_batch = r.usize()?;
+    let seq_len = r.usize()?;
+    let sharding = match r.u8()? {
+        0 => Sharding::Fsdp,
+        1 => Sharding::Ddp,
+        2 => Sharding::Hsdp { group: r.usize()? },
+        3 => Sharding::Zero3,
+        _ => return Err(DecodeError::Malformed("unknown sharding tag")),
+    };
+    let schedule = match r.u8()? {
+        0 => Schedule::OneFOneB,
+        1 => Schedule::Interleaved { v: r.usize()? },
+        _ => return Err(DecodeError::Malformed("unknown schedule tag")),
+    };
+    let prefetch = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(DecodeError::Malformed("bad prefetch flag")),
+    };
+    let metrics = Metrics {
+        iter_time: r.f64()?,
+        global_wps: r.f64()?,
+        per_gpu_wps: r.f64()?,
+        tflops_per_gpu: r.f64()?,
+        mfu: r.f64()?,
+        compute_time: r.f64()?,
+        comm_time: r.f64()?,
+        exposed_comm: r.f64()?,
+        exposed_frac: r.f64()?,
+        power_w: r.f64()?,
+        total_power_w: r.f64()?,
+        wps_per_watt: r.f64()?,
+        energy_per_token_j: r.f64()?,
+        world: r.usize()?,
+    };
+    let mem_per_gpu = r.f64()?;
+    r.finish()?;
+
+    let key = ConfigKey {
+        arch,
+        hw,
+        nodes,
+        gpus_per_node,
+        plan,
+        global_batch,
+        micro_batch,
+        seq_len,
+        sharding,
+        schedule,
+        prefetch,
+    };
+    let case = CaseResult {
+        arch: key.arch.name,
+        hw,
+        nodes,
+        plan,
+        global_batch,
+        micro_batch,
+        seq_len,
+        sharding,
+        schedule,
+        metrics,
+        mem_per_gpu,
+    };
+    Ok((key, case))
+}
+
+/// Test fixture shared with the log-store tests: one realistic
+/// `(key, case)` pair with awkward f64 values (non-terminating
+/// fractions, negative zero) that would expose any lossy round-trip.
+#[cfg(test)]
+pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
+    use crate::model::LLAMA_7B;
+    use crate::sim::SimConfig;
+    use crate::topology::Cluster;
+
+    let cfg = SimConfig::fsdp(
+        LLAMA_7B,
+        Cluster::new(HwId::H100, 2),
+        ParallelPlan::new(4, 2, 2, 1),
+        64,
+        2,
+        4096,
+    );
+    let key = ConfigKey::of(&cfg);
+    let case = CaseResult {
+        arch: cfg.arch.name,
+        hw: key.hw,
+        nodes: key.nodes,
+        plan: key.plan,
+        global_batch: key.global_batch,
+        micro_batch: key.micro_batch,
+        seq_len: key.seq_len,
+        sharding: key.sharding,
+        schedule: key.schedule,
+        metrics: Metrics {
+            iter_time: 1.0 / 3.0,
+            global_wps: 1.23456789e5,
+            per_gpu_wps: 7.7e3,
+            tflops_per_gpu: 312.515,
+            mfu: 0.412_345,
+            compute_time: 0.25,
+            comm_time: 0.125,
+            exposed_comm: 1.5e-3,
+            exposed_frac: 0.012,
+            power_w: 612.5,
+            total_power_w: 9800.0,
+            wps_per_watt: 12.6,
+            energy_per_token_j: -0.0,
+            world: 16,
+        },
+        mem_per_gpu: 6.25e10,
+    };
+    (key, case)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (ConfigKey, CaseResult) {
+        sample_pair()
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let (key, case) = sample();
+        let bytes = encode_record(&key, &case);
+        let (key2, case2) = decode_record(&bytes).unwrap();
+        assert_eq!(key, key2);
+        // Re-encoding the decoded pair must reproduce the exact bytes —
+        // a bitwise identity check covering every f64 field at once.
+        assert_eq!(bytes, encode_record(&key2, &case2));
+        assert_eq!(case.arch, case2.arch);
+        assert_eq!(
+            case.metrics.iter_time.to_bits(),
+            case2.metrics.iter_time.to_bits()
+        );
+        assert_eq!(
+            case.metrics.energy_per_token_j.to_bits(),
+            case2.metrics.energy_per_token_j.to_bits(),
+            "negative zero must survive"
+        );
+    }
+
+    #[test]
+    fn customized_arch_never_aliases_a_preset() {
+        let (key, case) = sample();
+        let mut custom = key;
+        custom.arch.d_ff += 1;
+        let bytes = encode_record(&custom, &case);
+        let (key2, _) = decode_record(&bytes).unwrap();
+        assert_eq!(key2, custom);
+        assert_ne!(key2, key);
+        assert_eq!(key2.arch.name, "llama-7b");
+        // And decoding twice interns one copy of the name.
+        let (key3, _) = decode_record(&bytes).unwrap();
+        assert!(std::ptr::eq(key2.arch.name, key3.arch.name));
+    }
+
+    #[test]
+    fn unknown_hardware_is_stale_not_malformed() {
+        let (key, case) = sample();
+        let bytes = encode_with_hw(&key, &case, "h900", spec_hash(key.hw));
+        match decode_record(&bytes) {
+            Err(DecodeError::StaleHardware(msg)) => {
+                assert!(msg.contains("h900"), "{msg}");
+            }
+            other => panic!("expected StaleHardware, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn changed_spec_hash_is_stale() {
+        let (key, case) = sample();
+        let bytes = encode_with_hw(
+            &key,
+            &case,
+            "h100",
+            spec_hash(key.hw) ^ 1,
+        );
+        match decode_record(&bytes) {
+            Err(DecodeError::StaleHardware(msg)) => {
+                assert!(msg.contains("changed"), "{msg}");
+            }
+            other => panic!("expected StaleHardware, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_malformed() {
+        let (key, case) = sample();
+        let bytes = encode_record(&key, &case);
+        for cut in [0, 1, 3, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(
+                    decode_record(&bytes[..cut]),
+                    Err(DecodeError::Malformed(_))
+                ),
+                "cut at {cut} must be malformed"
+            );
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(
+            decode_record(&long),
+            Err(DecodeError::Malformed("trailing bytes"))
+        ));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_e6b4_a2c9_f9d4);
+    }
+}

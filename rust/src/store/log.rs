@@ -1,0 +1,510 @@
+//! The persistent result store: an append-only record log with an
+//! in-memory index.
+//!
+//! File layout:
+//!
+//! ```text
+//! [magic "DTSS"][version u32 LE][schema fnv1a-64 u64 LE]   // 16 bytes
+//! [len u32 LE][checksum u64 LE][payload; len bytes]        // record 0
+//! [len u32 LE][checksum u64 LE][payload; len bytes]        // record 1
+//! ...
+//! ```
+//!
+//! Every `put` appends one length-prefixed, checksummed record
+//! (`codec::encode_record` payload, `fnv1a64(payload)` checksum).
+//! Appends are the only mutation, so a crash can corrupt at most the
+//! tail; `open` scans forward, keeps every record whose length and
+//! checksum hold, and truncates the file at the first structural
+//! break. Checksum-valid records written under hardware this process
+//! doesn't know (or whose spec changed) are *skipped but kept* — see
+//! [`codec::DecodeError::StaleHardware`]. A wrong magic, version, or
+//! schema hash refuses the whole file with a clear error instead of
+//! misreading it; later-duplicate keys win, matching overwrite
+//! semantics of the in-memory map.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use crate::study::{CaseResult, ConfigKey};
+
+use super::codec::{self, DecodeError};
+use super::{ResultStore, StoreStats};
+
+const MAGIC: &[u8; 4] = b"DTSS";
+const VERSION: u32 = 1;
+const HEADER_LEN: u64 = 16;
+/// Prefix of every record: `[len u32][checksum u64]`.
+const RECORD_PREFIX: usize = 12;
+
+/// What `LogStore::open` found on disk.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Records recovered into the index (after last-wins dedup these
+    /// may map to fewer distinct keys).
+    pub recovered: usize,
+    /// Bytes dropped from a structurally corrupt tail (0 on a clean
+    /// open).
+    pub truncated_bytes: u64,
+    /// Intact records skipped because their hardware is unknown here
+    /// or its spec changed. They stay in the file for processes that
+    /// do know it.
+    pub skipped_stale: usize,
+}
+
+/// On-disk `ConfigKey → CaseResult` store. Reads are served from the
+/// in-memory index (lock-free counters, `RwLock` map); writes append
+/// to the log under a file mutex. Safe to share across request
+/// threads behind an `Arc`.
+pub struct LogStore {
+    path: PathBuf,
+    index: RwLock<HashMap<ConfigKey, CaseResult>>,
+    file: Mutex<File>,
+    bytes: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl LogStore {
+    /// Open (or create) the store at `path`, recovering whatever the
+    /// log holds. Errors are unrecoverable refusals — wrong magic,
+    /// version, or schema hash, or an unreadable path — never a
+    /// merely-torn tail.
+    pub fn open<P: AsRef<Path>>(
+        path: P,
+    ) -> Result<(LogStore, RecoveryReport), String> {
+        let path = path.as_ref().to_path_buf();
+        let data = match std::fs::read(&path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+        };
+
+        let mut report = RecoveryReport::default();
+        let mut index = HashMap::new();
+        // A file shorter than the header is a torn creation: recover
+        // by starting over. A *complete* header that doesn't match is
+        // a different store (or schema) — refuse, don't overwrite.
+        let mut valid_end = 0u64;
+        if data.len() >= HEADER_LEN as usize {
+            if &data[0..4] != MAGIC {
+                return Err(format!(
+                    "{} is not a dtsim result store (bad magic)",
+                    path.display()
+                ));
+            }
+            let version =
+                u32::from_le_bytes(data[4..8].try_into().unwrap());
+            if version != VERSION {
+                return Err(format!(
+                    "{}: store version {version}, this build reads \
+                     version {VERSION}",
+                    path.display()
+                ));
+            }
+            let schema =
+                u64::from_le_bytes(data[8..16].try_into().unwrap());
+            if schema != codec::schema_hash() {
+                return Err(format!(
+                    "{}: record schema hash {schema:#018x} does not \
+                     match this build's {:#018x} — the ConfigKey layout \
+                     changed; use a fresh --store path",
+                    path.display(),
+                    codec::schema_hash()
+                ));
+            }
+            valid_end = HEADER_LEN;
+
+            let mut pos = HEADER_LEN as usize;
+            while pos + RECORD_PREFIX <= data.len() {
+                let len = u32::from_le_bytes(
+                    data[pos..pos + 4].try_into().unwrap(),
+                ) as usize;
+                let payload_start = pos + RECORD_PREFIX;
+                let Some(payload_end) = payload_start.checked_add(len)
+                else {
+                    break;
+                };
+                if payload_end > data.len() {
+                    break; // torn tail: record longer than the file
+                }
+                let checksum = u64::from_le_bytes(
+                    data[pos + 4..pos + 12].try_into().unwrap(),
+                );
+                let payload = &data[payload_start..payload_end];
+                if codec::fnv1a64(payload) != checksum {
+                    break; // corruption: nothing after it is trusted
+                }
+                match codec::decode_record(payload) {
+                    Ok((key, case)) => {
+                        index.insert(key, case);
+                        report.recovered += 1;
+                    }
+                    Err(DecodeError::StaleHardware(_)) => {
+                        report.skipped_stale += 1;
+                    }
+                    Err(DecodeError::Malformed(_)) => break,
+                }
+                valid_end = payload_end as u64;
+                pos = payload_end;
+            }
+        }
+        report.truncated_bytes = data.len() as u64 - valid_end;
+
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .open(&path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        if report.truncated_bytes > 0 {
+            file.set_len(valid_end)
+                .map_err(|e| format!("truncate {}: {e}", path.display()))?;
+        }
+        let mut bytes = valid_end;
+        if valid_end < HEADER_LEN {
+            let mut header = Vec::with_capacity(HEADER_LEN as usize);
+            header.extend_from_slice(MAGIC);
+            header.extend_from_slice(&VERSION.to_le_bytes());
+            header.extend_from_slice(&codec::schema_hash().to_le_bytes());
+            (&file)
+                .write_all(&header)
+                .map_err(|e| format!("init {}: {e}", path.display()))?;
+            bytes = HEADER_LEN;
+        }
+
+        Ok((
+            LogStore {
+                path,
+                index: RwLock::new(index),
+                file: Mutex::new(file),
+                bytes: AtomicU64::new(bytes),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+            },
+            report,
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl ResultStore for LogStore {
+    fn get(&self, key: &ConfigKey) -> Option<CaseResult> {
+        let found = self
+            .index
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(key)
+            .cloned();
+        match found {
+            Some(case) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(case)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn put(&self, key: ConfigKey, case: CaseResult) {
+        let payload = codec::encode_record(&key, &case);
+        let mut record =
+            Vec::with_capacity(RECORD_PREFIX + payload.len());
+        record.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        record
+            .extend_from_slice(&codec::fnv1a64(&payload).to_le_bytes());
+        record.extend_from_slice(&payload);
+        {
+            // Seek-to-end under the mutex, then one write per record,
+            // keeps records contiguous under concurrent puts. A
+            // poisoned lock is recovered rather than propagated: a
+            // panicked peer can only have completed or not-started a
+            // whole write_all, and the checksum covers torn tails.
+            let mut file =
+                self.file.lock().unwrap_or_else(|e| e.into_inner());
+            use std::io::Seek;
+            let appended = file
+                .seek(std::io::SeekFrom::End(0))
+                .and_then(|_| file.write_all(&record))
+                .and_then(|_| file.flush());
+            match appended {
+                Ok(()) => {
+                    self.bytes
+                        .fetch_add(record.len() as u64, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    // The in-memory index stays authoritative for this
+                    // process; the result is just not durable.
+                    eprintln!(
+                        "warning: store append to {} failed: {e}",
+                        self.path.display()
+                    );
+                }
+            }
+        }
+        self.index
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(key, case);
+    }
+
+    fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            entries: self
+                .index
+                .read()
+                .unwrap_or_else(|e| e.into_inner())
+                .len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::codec::{encode_with_hw, sample_pair, spec_hash};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("dtsim_log_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    #[test]
+    fn fresh_open_write_reopen_is_bitwise() {
+        let path = tmp("roundtrip.dtstore");
+        let (key, case) = sample_pair();
+        {
+            let (store, report) = LogStore::open(&path).unwrap();
+            assert_eq!(report, RecoveryReport::default());
+            assert!(store.get(&key).is_none());
+            store.put(key, case.clone());
+            assert_eq!(store.stats().entries, 1);
+        }
+        let (store, report) = LogStore::open(&path).unwrap();
+        assert_eq!(report.recovered, 1);
+        assert_eq!(report.truncated_bytes, 0);
+        let back = store.get(&key).expect("reopened store has the key");
+        assert_eq!(
+            back.metrics.iter_time.to_bits(),
+            case.metrics.iter_time.to_bits()
+        );
+        assert_eq!(
+            back.metrics.energy_per_token_j.to_bits(),
+            case.metrics.energy_per_token_j.to_bits()
+        );
+        assert_eq!(back.mem_per_gpu.to_bits(), case.mem_per_gpu.to_bits());
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 0, 1));
+        assert!(s.bytes > HEADER_LEN);
+    }
+
+    #[test]
+    fn torn_tail_recovers_to_last_valid_record() {
+        // Tear the second record at several depths: inside its
+        // length/checksum prefix and inside its payload.
+        for extra in [5u64, 20] {
+            let path = tmp(&format!("torn_{extra}.dtstore"));
+            let (key, case) = sample_pair();
+            let mut key2 = key;
+            key2.nodes += 1;
+            let first_end;
+            {
+                let (store, _) = LogStore::open(&path).unwrap();
+                store.put(key, case.clone());
+                first_end = store.stats().bytes;
+                store.put(key2, case.clone());
+            }
+            let cut = first_end + extra;
+            assert!(cut < std::fs::metadata(&path).unwrap().len());
+            OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .unwrap()
+                .set_len(cut)
+                .unwrap();
+
+            let (store, report) = LogStore::open(&path).unwrap();
+            assert_eq!(report.recovered, 1);
+            assert_eq!(report.truncated_bytes, extra);
+            assert!(store.get(&key).is_some());
+            assert!(store.get(&key2).is_none());
+            // The torn bytes are gone from disk: a re-open is clean.
+            let (_, report2) = LogStore::open(&path).unwrap();
+            assert_eq!(report2.recovered, 1);
+            assert_eq!(report2.truncated_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn checksum_corruption_truncates_from_the_broken_record() {
+        let path = tmp("bitflip.dtstore");
+        let (key, case) = sample_pair();
+        let mut key2 = key;
+        key2.nodes += 1;
+        {
+            let (store, _) = LogStore::open(&path).unwrap();
+            store.put(key, case.clone());
+            store.put(key2, case.clone());
+        }
+        // Flip one payload byte in the *first* record: both records
+        // become untrusted (append-only logs have no resync point).
+        let mut data = std::fs::read(&path).unwrap();
+        let target = (HEADER_LEN as usize) + RECORD_PREFIX + 5;
+        data[target] ^= 0xff;
+        std::fs::write(&path, &data).unwrap();
+
+        let (store, report) = LogStore::open(&path).unwrap();
+        assert_eq!(report.recovered, 0);
+        assert_eq!(
+            report.truncated_bytes,
+            data.len() as u64 - HEADER_LEN
+        );
+        assert_eq!(store.stats().entries, 0);
+    }
+
+    #[test]
+    fn schema_mismatch_refuses_the_file() {
+        let path = tmp("schema.dtstore");
+        {
+            let (store, _) = LogStore::open(&path).unwrap();
+            let (key, case) = sample_pair();
+            store.put(key, case);
+        }
+        let mut data = std::fs::read(&path).unwrap();
+        data[8] ^= 0xff; // schema hash lives at bytes 8..16
+        std::fs::write(&path, &data).unwrap();
+        let err = LogStore::open(&path).unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+        // The refused file is untouched.
+        assert_eq!(std::fs::read(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn foreign_magic_and_version_refuse() {
+        let path = tmp("magic.dtstore");
+        std::fs::write(&path, b"not a store, definitely").unwrap();
+        let err = LogStore::open(&path).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+
+        let path = tmp("version.dtstore");
+        let mut header = Vec::new();
+        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(&99u32.to_le_bytes());
+        header.extend_from_slice(&codec::schema_hash().to_le_bytes());
+        std::fs::write(&path, &header).unwrap();
+        let err = LogStore::open(&path).unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn torn_header_recovers_fresh() {
+        let path = tmp("torn_header.dtstore");
+        std::fs::write(&path, &MAGIC[..3]).unwrap();
+        let (store, report) = LogStore::open(&path).unwrap();
+        assert_eq!(report.recovered, 0);
+        assert_eq!(report.truncated_bytes, 3);
+        assert_eq!(store.stats().bytes, HEADER_LEN);
+    }
+
+    #[test]
+    fn stale_hardware_records_are_skipped_but_kept() {
+        let path = tmp("stale.dtstore");
+        let (key, case) = sample_pair();
+        {
+            let (store, _) = LogStore::open(&path).unwrap();
+            store.put(key, case.clone());
+        }
+        // Append a record "written by another catalog": unknown name,
+        // then a fresh record after it — the stale one must not stop
+        // the scan.
+        let stale = encode_with_hw(&key, &case, "h900", spec_hash(key.hw));
+        let mut key2 = key;
+        key2.seq_len *= 2;
+        {
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(&path)
+                .unwrap();
+            let mut rec = Vec::new();
+            rec.extend_from_slice(&(stale.len() as u32).to_le_bytes());
+            rec.extend_from_slice(
+                &codec::fnv1a64(&stale).to_le_bytes(),
+            );
+            rec.extend_from_slice(&stale);
+            f.write_all(&rec).unwrap();
+        }
+        {
+            let (store, report) = LogStore::open(&path).unwrap();
+            assert_eq!(report.recovered, 1);
+            assert_eq!(report.skipped_stale, 1);
+            assert_eq!(report.truncated_bytes, 0);
+            store.put(key2, case.clone());
+        }
+        let (store, report) = LogStore::open(&path).unwrap();
+        assert_eq!(report.recovered, 2);
+        assert_eq!(report.skipped_stale, 1);
+        assert!(store.get(&key).is_some());
+        assert!(store.get(&key2).is_some());
+    }
+
+    #[test]
+    fn later_duplicate_keys_win() {
+        let path = tmp("dup.dtstore");
+        let (key, case) = sample_pair();
+        let mut newer = case.clone();
+        newer.metrics.global_wps = 9.0e9;
+        {
+            let (store, _) = LogStore::open(&path).unwrap();
+            store.put(key, case);
+            store.put(key, newer.clone());
+        }
+        let (store, report) = LogStore::open(&path).unwrap();
+        assert_eq!(report.recovered, 2);
+        assert_eq!(store.stats().entries, 1);
+        assert_eq!(
+            store.get(&key).unwrap().metrics.global_wps.to_bits(),
+            newer.metrics.global_wps.to_bits()
+        );
+    }
+
+    #[test]
+    fn concurrent_puts_all_survive_reopen() {
+        let path = tmp("concurrent.dtstore");
+        let (key, case) = sample_pair();
+        {
+            let (store, _) = LogStore::open(&path).unwrap();
+            let store = std::sync::Arc::new(store);
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    let store = std::sync::Arc::clone(&store);
+                    let case = case.clone();
+                    s.spawn(move || {
+                        for i in 0..16 {
+                            let mut k = key;
+                            k.global_batch = 64 * (1 + t * 16 + i);
+                            store.put(k, case.clone());
+                        }
+                    });
+                }
+            });
+            assert_eq!(store.stats().entries, 64);
+        }
+        let (store, report) = LogStore::open(&path).unwrap();
+        assert_eq!(report.truncated_bytes, 0);
+        assert_eq!(report.recovered, 64);
+        assert_eq!(store.stats().entries, 64);
+    }
+}

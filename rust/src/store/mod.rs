@@ -1,0 +1,162 @@
+//! Result stores: `ConfigKey → CaseResult` maps that outlive a single
+//! study run.
+//!
+//! PR 5's `StudyRunner` deduplicated repeated configurations with a
+//! per-run `HashMap`; serve mode needs that cache to be (a) shared
+//! across concurrent requests and (b) optionally persistent across
+//! process restarts, so the map graduates to the [`ResultStore`]
+//! trait:
+//!
+//! * [`MemStore`] — the old behaviour behind the new interface: a
+//!   process-lifetime concurrent hash map. The default for one-shot
+//!   CLI runs and `dtsim serve` without `--store`.
+//! * [`LogStore`] — an append-only, checksummed, crash-recoverable
+//!   on-disk log (see [`log`]) for `dtsim serve --store PATH`.
+//!
+//! Both count hits and misses ([`StoreStats`]), which `dtsim bench`
+//! and serve-mode `done` events surface as `store_hits` /
+//! `store_misses` / `store_bytes`. Results round-trip *bitwise*
+//! (`f64` stored as raw bits), preserving the crate's fast-path ≡
+//! event-engine bit-identity contract across the persistence
+//! boundary.
+
+pub mod codec;
+pub mod log;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::study::{CaseResult, ConfigKey};
+
+pub use codec::DecodeError;
+pub use log::{LogStore, RecoveryReport};
+
+/// Counters every store keeps. `bytes` is the store's resident size:
+/// the log-file length for [`LogStore`], an entry-size estimate for
+/// [`MemStore`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub bytes: u64,
+    pub entries: usize,
+}
+
+impl StoreStats {
+    /// Fraction of lookups answered from the store (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total > 0 {
+            self.hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A concurrent, shareable result map. `get` counts a hit or a miss;
+/// callers that only want to *peek* should consult their own local
+/// map first (the runner does — one counted lookup per distinct key
+/// per request).
+pub trait ResultStore: Send + Sync {
+    fn get(&self, key: &ConfigKey) -> Option<CaseResult>;
+    fn put(&self, key: ConfigKey, case: CaseResult);
+    fn stats(&self) -> StoreStats;
+}
+
+/// In-memory store: the PR 5 dedup cache behind the trait. Cheap,
+/// process-local, and the default everywhere a `--store` path isn't
+/// given.
+#[derive(Default)]
+pub struct MemStore {
+    map: RwLock<HashMap<ConfigKey, CaseResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl ResultStore for MemStore {
+    fn get(&self, key: &ConfigKey) -> Option<CaseResult> {
+        let found = self
+            .map
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(key)
+            .cloned();
+        match found {
+            Some(case) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(case)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn put(&self, key: ConfigKey, case: CaseResult) {
+        self.map
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(key, case);
+    }
+
+    fn stats(&self) -> StoreStats {
+        let entries =
+            self.map.read().unwrap_or_else(|e| e.into_inner()).len();
+        let entry_size = std::mem::size_of::<ConfigKey>()
+            + std::mem::size_of::<CaseResult>();
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes: (entries * entry_size) as u64,
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use codec::sample_pair;
+
+    #[test]
+    fn mem_store_counts_hits_and_misses() {
+        let store = MemStore::new();
+        let (key, case) = sample_pair();
+        assert!(store.get(&key).is_none());
+        store.put(key, case.clone());
+        assert!(store.get(&key).is_some());
+        assert!(store.get(&key).is_some());
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
+        assert!(s.bytes > 0);
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(StoreStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stores_are_shareable_across_threads() {
+        // Compile-time really: Arc<dyn ResultStore> must be Send+Sync.
+        fn assert_send_sync<T: Send + Sync>(_: &T) {}
+        let mem: std::sync::Arc<dyn ResultStore> =
+            std::sync::Arc::new(MemStore::new());
+        assert_send_sync(&mem);
+        let (key, case) = sample_pair();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let mem = std::sync::Arc::clone(&mem);
+                let case = case.clone();
+                s.spawn(move || mem.put(key, case));
+            }
+        });
+        assert_eq!(mem.stats().entries, 1);
+    }
+}

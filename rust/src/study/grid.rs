@@ -1,0 +1,286 @@
+//! Flag-driven grid and config construction, shared by the CLI and
+//! serve mode.
+//!
+//! These builders used to live in `main.rs`; serve mode needs the same
+//! `--grid`-style axis vocabulary for `study-grid` and `simulate`
+//! requests (a request object's fields are just flags by another
+//! transport), so the parsing moved into the library. Errors are plain
+//! `String`s — the CLI wraps them in `anyhow`, the server ships them
+//! as `error` events — and every parser's message enumerates the
+//! accepted forms (the `parse_hw` / `parse_sharding` convention).
+
+use crate::config::RunConfig;
+use crate::hardware::HwId;
+use crate::model;
+use crate::parallelism::ParallelPlan;
+use crate::sim::{Schedule, Sharding, SimConfig};
+use crate::topology::Cluster;
+use crate::util::args::Args;
+
+use super::{PlanAxis, Study};
+
+/// Hardware-name parsing for `--gen`: built-ins plus anything loaded
+/// via `--catalog`; the error enumerates every accepted form.
+pub fn parse_hw(s: &str) -> Result<HwId, String> {
+    HwId::parse(s).map_err(|e| format!("--gen: {e}"))
+}
+
+pub fn parse_sharding(s: &str) -> Result<Sharding, String> {
+    crate::config::parse_sharding(s).map_err(|e| format!("--sharding: {e}"))
+}
+
+pub fn parse_schedule(s: &str) -> Result<Schedule, String> {
+    crate::config::parse_schedule(s).map_err(|e| format!("--schedule: {e}"))
+}
+
+/// Parse a "tp2pp4cp1"-style plan shape (missing degrees default to 1).
+pub fn parse_plan_shape(s: &str) -> Option<(usize, usize, usize)> {
+    if s.is_empty() {
+        return None;
+    }
+    let (mut tp, mut pp, mut cp) = (1usize, 1usize, 1usize);
+    let mut rest = s;
+    while !rest.is_empty() {
+        let (target, tail) = if let Some(t) = rest.strip_prefix("tp") {
+            (&mut tp, t)
+        } else if let Some(t) = rest.strip_prefix("pp") {
+            (&mut pp, t)
+        } else if let Some(t) = rest.strip_prefix("cp") {
+            (&mut cp, t)
+        } else {
+            return None;
+        };
+        let end = tail
+            .char_indices()
+            .find(|(_, c)| !c.is_ascii_digit())
+            .map(|(i, _)| i)
+            .unwrap_or(tail.len());
+        *target = tail[..end].parse().ok()?;
+        rest = &tail[end..];
+    }
+    Some((tp, pp, cp))
+}
+
+/// Build one `SimConfig` from `simulate`-style flags (`--arch`,
+/// `--gen`, `--nodes`/`--gpus`, plan degrees, batch shape, sharding,
+/// schedule), or load it whole from `--config run.toml`.
+pub fn sim_config_from_args(args: &Args) -> Result<SimConfig, String> {
+    if let Some(path) = args.get("config") {
+        if path.ends_with(".toml") {
+            return RunConfig::from_toml_file(path).map(|rc| rc.sim());
+        }
+    }
+    let arch = *model::by_name(&args.get_or("arch", "7b"))
+        .ok_or_else(|| "unknown --arch".to_string())?;
+    let gen = parse_hw(&args.get_or("gen", "h100"))?;
+    let cluster = if args.has("gpus") {
+        if args.has("nodes") {
+            return Err("give --nodes or --gpus, not both".into());
+        }
+        Cluster::with_gpus(gen, args.usize_or("gpus", 0))
+            .map_err(|e| format!("--gpus: {e}"))?
+    } else {
+        Cluster::new(gen, args.usize_or("nodes", 32))
+    };
+    let tp = args.usize_or("tp", 1);
+    let pp = args.usize_or("pp", 1);
+    let cp = args.usize_or("cp", 1);
+    let mp = tp * pp * cp;
+    if cluster.world_size() % mp != 0 {
+        return Err(format!(
+            "tp*pp*cp={} must divide world={}",
+            mp,
+            cluster.world_size()
+        ));
+    }
+    let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp);
+    let mut cfg = SimConfig::fsdp(
+        arch,
+        cluster,
+        plan,
+        args.usize_or("gbs", 2 * plan.dp),
+        args.usize_or("mbs", 2),
+        args.usize_or("seq", 4096),
+    );
+    if let Some(s) = args.get("sharding") {
+        cfg.sharding = parse_sharding(s)?;
+        if args.has("ddp") && cfg.sharding != Sharding::Ddp {
+            return Err(format!(
+                "--ddp conflicts with --sharding {}; drop one",
+                cfg.sharding
+            ));
+        }
+    } else if args.has("ddp") {
+        cfg.sharding = Sharding::Ddp;
+    }
+    if let Some(s) = args.get("schedule") {
+        cfg.schedule = parse_schedule(s)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Build a Study from `--grid` axis flags.
+pub fn study_from_args(args: &Args) -> Result<Study, String> {
+    let list = |key: &str, default: &str| -> Vec<String> {
+        args.get_or(key, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    let usizes = |key: &str, default: &str| -> Result<Vec<usize>, String> {
+        list(key, default)
+            .iter()
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| format!("--{key}: '{s}' is not an integer"))
+            })
+            .collect()
+    };
+
+    let mut archs = Vec::new();
+    for name in list("arch", "7b") {
+        archs.push(
+            *model::by_name(&name)
+                .ok_or_else(|| format!("unknown --arch '{name}'"))?,
+        );
+    }
+    let mut gens = Vec::new();
+    for name in list("gen", "h100") {
+        gens.push(parse_hw(&name)?);
+    }
+    if gens.is_empty() {
+        return Err("--gen names no hardware".into());
+    }
+    let mut shardings = Vec::new();
+    for name in list("sharding", "fsdp") {
+        shardings.push(parse_sharding(&name)?);
+    }
+    let mut schedules = Vec::new();
+    for name in list("schedule", "1f1b") {
+        schedules.push(parse_schedule(&name)?);
+    }
+
+    let plans = match args.get_or("plans", "sweep").as_str() {
+        "sweep" => PlanAxis::Sweep { with_cp: false },
+        "sweep-cp" => PlanAxis::Sweep { with_cp: true },
+        "dp" => PlanAxis::DataParallel,
+        spec => PlanAxis::Shapes(
+            spec.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    parse_plan_shape(s).ok_or_else(|| {
+                        format!(
+                            "--plans: '{s}' is not sweep|sweep-cp|dp or a \
+                             tpXppYcpZ shape"
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+        ),
+    };
+
+    // Cluster sizes: --nodes, or --gpus (each count must be a multiple
+    // of the hardware's NVLink-domain size; the error reports the
+    // offending axis value instead of aborting).
+    let nodes = if args.has("gpus") {
+        if args.has("nodes") {
+            return Err("give --nodes or --gpus, not both".into());
+        }
+        let domains: std::collections::BTreeSet<usize> =
+            gens.iter().map(|hw| hw.spec().gpus_per_node).collect();
+        if domains.len() > 1 {
+            return Err(format!(
+                "--gpus needs one NVLink-domain size, but --gen mixes \
+                 {domains:?}; use --nodes instead"
+            ));
+        }
+        let mut nodes = Vec::new();
+        for gpus in usizes("gpus", "256")? {
+            nodes.push(
+                Cluster::with_gpus(gens[0], gpus)
+                    .map_err(|e| format!("--gpus: {e}"))?
+                    .nodes,
+            );
+        }
+        nodes
+    } else {
+        usizes("nodes", "32")?
+    };
+
+    let mut b = Study::builder(&args.get_or("name", "grid"))
+        .title("ad-hoc study grid")
+        .archs(archs)
+        .hardware(gens)
+        .nodes(nodes)
+        .plans(plans)
+        .seq_lens(usizes("seq", "4096")?)
+        .shardings(shardings)
+        .schedules(schedules);
+
+    b = if args.has("lbs") {
+        b.batch_per_replica(args.usize_or("lbs", 2))
+    } else {
+        b.global_batches(usizes("gbs", "512")?)
+    };
+    b = match args.get_or("mbs", "divisors").as_str() {
+        "divisors" => b.micro_batch_divisors(),
+        _ => b.micro_batches(usizes("mbs", "2")?),
+    };
+    let cap = args.f64_or("cap", 0.94);
+    if cap > 0.0 {
+        b = b.memory_cap(cap);
+    }
+    b.try_build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn grid_errors_are_plain_strings_with_flag_prefixes() {
+        let err = parse_hw("h900").unwrap_err();
+        assert!(err.starts_with("--gen: "), "{err}");
+        let err = parse_sharding("zero2").unwrap_err();
+        assert!(err.starts_with("--sharding: "), "{err}");
+        assert!(err.contains("fsdp, ddp, hsdp:G, zero3"), "{err}");
+        let err = parse_schedule("gpipe").unwrap_err();
+        assert!(err.starts_with("--schedule: "), "{err}");
+    }
+
+    #[test]
+    fn sim_config_defaults_match_the_cli() {
+        let cfg = sim_config_from_args(&parse("simulate")).unwrap();
+        assert_eq!(cfg.arch.name, "llama-7b");
+        assert_eq!(cfg.cluster.nodes, 32);
+        assert_eq!(cfg.seq_len, 4096);
+    }
+
+    #[test]
+    fn study_from_request_style_pairs() {
+        // Serve-mode requests build Args from pairs, not a command line;
+        // the same grid must come out.
+        let from_cli = study_from_args(&parse(
+            "study --grid --nodes 2 --gbs 48 --plans sweep",
+        ))
+        .unwrap();
+        let from_pairs = study_from_args(&Args::from_pairs(
+            vec![],
+            [
+                ("grid".to_string(), "true".to_string()),
+                ("nodes".to_string(), "2".to_string()),
+                ("gbs".to_string(), "48".to_string()),
+                ("plans".to_string(), "sweep".to_string()),
+            ],
+        ))
+        .unwrap();
+        assert_eq!(from_cli.expand().len(), from_pairs.expand().len());
+    }
+}

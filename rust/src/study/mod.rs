@@ -43,12 +43,13 @@
 //! let table = result.table(&[Column::Plan, Column::Mbs, Column::GlobalWps]);
 //! ```
 
+pub mod grid;
 pub mod runner;
 pub mod scenario;
 pub mod sink;
 pub mod table;
 
-pub use runner::{CaseResult, StudyResult, StudyRunner};
+pub use runner::{Cancelled, CaseResult, StudyResult, StudyRunner};
 pub use scenario::{Registry, Scenario};
 pub use sink::{ConsoleSink, CsvSink, JsonSink, Sink};
 pub use table::{Column, Table};
@@ -213,17 +214,17 @@ pub struct StudyPoint {
 /// identity), the cluster shape, and every workload axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConfigKey {
-    arch: TransformerArch,
-    hw: HwId,
-    nodes: usize,
-    gpus_per_node: usize,
-    plan: ParallelPlan,
-    global_batch: usize,
-    micro_batch: usize,
-    seq_len: usize,
-    sharding: Sharding,
-    schedule: Schedule,
-    prefetch: bool,
+    pub(crate) arch: TransformerArch,
+    pub(crate) hw: HwId,
+    pub(crate) nodes: usize,
+    pub(crate) gpus_per_node: usize,
+    pub(crate) plan: ParallelPlan,
+    pub(crate) global_batch: usize,
+    pub(crate) micro_batch: usize,
+    pub(crate) seq_len: usize,
+    pub(crate) sharding: Sharding,
+    pub(crate) schedule: Schedule,
+    pub(crate) prefetch: bool,
 }
 
 impl ConfigKey {

@@ -1,13 +1,16 @@
 //! Study execution: expands a grid, skips configurations already
-//! simulated (keyed by [`ConfigKey`]), and evaluates the remainder
-//! across scoped worker threads.
+//! simulated (keyed by [`ConfigKey`], resolved through a pluggable
+//! [`ResultStore`]), and evaluates the remainder across scoped worker
+//! threads.
 //!
 //! Determinism: results are assembled in grid-expansion order and every
 //! sort downstream is stable, so a run with 1 thread and a run with N
-//! threads produce byte-identical tables. The cache makes figure
+//! threads produce byte-identical tables. The store makes figure
 //! regeneration cheap too — the weak-scaling configs, for example, are
 //! shared by Fig. 1, Fig. 3, and the headline table, and are simulated
-//! exactly once per `StudyRunner`.
+//! exactly once per store (which may be shared across runners, across
+//! serve-mode requests, and — with a persistent store — across process
+//! restarts).
 //!
 //! Hot path: each worker owns a persistent [`SimArena`] (fused
 //! simulation fast path, memoized collective costs, recycled buffers),
@@ -18,18 +21,25 @@
 //! throughput lives in a shared `AtomicU64`, so every worker's
 //! analytic prune tightens the moment any worker improves the
 //! incumbent — same winner as the exhaustive sweep, proven by tests.
+//!
+//! Serve mode drives the streamed/cancellable entry points
+//! ([`StudyRunner::run_streamed`], [`StudyRunner::best_of_cancellable`]):
+//! the same claim loops, with a per-request `AtomicBool` checked at
+//! each claim so a disconnected client aborts the remaining work, and
+//! an `emit` callback fired as each novel point completes.
 
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, OnceLock};
 
 use crate::hardware::HwId;
 use crate::memory;
 use crate::metrics::{self, Metrics};
 use crate::parallelism::ParallelPlan;
 use crate::sim::{self, Schedule, Sharding, SimArena, SimConfig};
+use crate::store::{MemStore, ResultStore, StoreStats};
 
 use super::table::{Column, Table};
 use super::{ConfigKey, Study, StudyPoint};
@@ -65,9 +75,13 @@ fn bound_search_loop(
     points: &[StudyPoint],
     slots: &[OnceLock<CaseResult>],
     bound: &AtomicU64,
+    cancel: &AtomicBool,
     arena: &mut SimArena,
 ) {
     loop {
+        if cancel.load(Ordering::Relaxed) {
+            break;
+        }
         let i = next.fetch_add(1, Ordering::Relaxed);
         if i >= todo.len() {
             break;
@@ -104,10 +118,28 @@ fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
     }
 }
 
-/// Executes studies with a shared simulation cache.
+/// A streamed/cancellable run was aborted by its cancellation flag.
+/// Work already completed was committed to the store before the abort
+/// (the store stays consistent); the assembled result is discarded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled;
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("request cancelled")
+    }
+}
+
+/// A never-set flag for the plain (uncancellable) entry points.
+static NO_CANCEL: AtomicBool = AtomicBool::new(false);
+
+/// Executes studies with a shared simulation result store.
 pub struct StudyRunner {
     threads: usize,
-    cache: HashMap<ConfigKey, CaseResult>,
+    /// Config-level dedup: `ConfigKey → CaseResult`, shared (and with
+    /// a [`crate::store::LogStore`], persistent) across everything
+    /// that holds the same `Arc`.
+    store: Arc<dyn ResultStore>,
     evaluated: usize,
     requested: usize,
     pruned: usize,
@@ -119,11 +151,23 @@ pub struct StudyRunner {
 }
 
 impl StudyRunner {
-    /// Runner with an explicit worker-thread count (min 1).
+    /// Runner with an explicit worker-thread count (min 1) and a
+    /// private in-memory result store.
     pub fn new(threads: usize) -> StudyRunner {
+        StudyRunner::with_store(threads, Arc::new(MemStore::new()))
+    }
+
+    /// Runner backed by an existing (possibly shared, possibly
+    /// persistent) result store: the serve-mode constructor — every
+    /// request gets a fresh runner over the process-wide store, so
+    /// overlapping grids simulate only novel points.
+    pub fn with_store(
+        threads: usize,
+        store: Arc<dyn ResultStore>,
+    ) -> StudyRunner {
         StudyRunner {
             threads: threads.max(1),
-            cache: HashMap::new(),
+            store,
             evaluated: 0,
             requested: 0,
             pruned: 0,
@@ -159,10 +203,18 @@ impl StudyRunner {
     }
 
     /// (simulations actually run, grid points requested) so far —
-    /// the difference is what the cache deduplicated and, for
+    /// the difference is what the store deduplicated and, for
     /// [`Self::best_of`], what the bound pruned.
     pub fn stats(&self) -> (usize, usize) {
         (self.evaluated, self.requested)
+    }
+
+    /// Hit/miss/size counters of the backing result store. With a
+    /// shared store these are store-lifetime numbers, not per-runner:
+    /// the runner performs exactly one counted lookup per distinct key
+    /// per request (repeats within a request are resolved locally).
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.stats()
     }
 
     /// Grid points skipped by [`Self::best_of`]'s analytic bound.
@@ -185,6 +237,28 @@ impl StudyRunner {
         self.run_points(&study.name, &study.title, &points)
     }
 
+    /// [`Self::run`] with serve-mode hooks: `emit` fires once per
+    /// *novel* point (one this request actually simulated), in
+    /// completion order, as soon as the point finishes; `cancel`
+    /// aborts the remaining work at the next claim — completed points
+    /// are already committed to the store, so a cancelled grid leaves
+    /// the store consistent and a retry resumes where it stopped.
+    pub fn run_streamed(
+        &mut self,
+        study: &Study,
+        cancel: &AtomicBool,
+        emit: impl FnMut(&CaseResult),
+    ) -> Result<StudyResult, Cancelled> {
+        let points = study.expand();
+        self.run_points_streamed(
+            &study.name,
+            &study.title,
+            &points,
+            cancel,
+            emit,
+        )
+    }
+
     /// Evaluate a single ad-hoc configuration through the cache. The
     /// memory footprint uses the planner's sharding/schedule-aware
     /// residency convention.
@@ -203,40 +277,74 @@ impl StudyRunner {
         title: &str,
         points: &[StudyPoint],
     ) -> StudyResult {
+        self.run_points_streamed(name, title, points, &NO_CANCEL, |_| {})
+            .expect("run without a cancel source cannot be cancelled")
+    }
+
+    fn run_points_streamed(
+        &mut self,
+        name: &str,
+        title: &str,
+        points: &[StudyPoint],
+        cancel: &AtomicBool,
+        mut emit: impl FnMut(&CaseResult),
+    ) -> Result<StudyResult, Cancelled> {
         self.requested += points.len();
 
-        // Unique cache misses, preserving first-occurrence order.
+        // Store misses, deduplicated while preserving first-occurrence
+        // order. Exactly one counted store lookup per distinct key:
+        // in-request repeats resolve from the local `found` map, and
+        // the final grid-order assembly below reads only `found` —
+        // never the store — so hit/miss counters measure cross-request
+        // sharing, not assembly traffic.
         let mut seen: HashSet<ConfigKey> = HashSet::new();
+        let mut found: HashMap<ConfigKey, CaseResult> = HashMap::new();
         let mut todo: Vec<&StudyPoint> = Vec::new();
         for p in points {
             let key = ConfigKey::of(&p.cfg);
-            if !self.cache.contains_key(&key) && seen.insert(key) {
-                todo.push(p);
+            if !seen.insert(key) {
+                continue;
+            }
+            match self.store.get(&key) {
+                Some(case) => {
+                    found.insert(key, case);
+                }
+                None => todo.push(p),
             }
         }
-        self.evaluated += todo.len();
 
         let keys: Vec<ConfigKey> =
             todo.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
-        let fresh = self.evaluate_points(&todo);
-        for (key, case) in keys.into_iter().zip(fresh) {
-            self.cache.insert(key, case);
+        let store = Arc::clone(&self.store);
+        let mut newly = 0usize;
+        let completed =
+            self.evaluate_points_streamed(&todo, cancel, |i, case| {
+                // Commit before emitting: whatever a client saw is
+                // durable even if the request dies right after.
+                store.put(keys[i], case.clone());
+                emit(&case);
+                found.insert(keys[i], case);
+                newly += 1;
+            });
+        self.evaluated += newly;
+        if !completed {
+            return Err(Cancelled);
         }
 
         let cases = points
             .iter()
             .map(|p| {
-                self.cache
+                found
                     .get(&ConfigKey::of(&p.cfg))
                     .expect("every requested point evaluated")
                     .clone()
             })
             .collect();
-        StudyResult {
+        Ok(StudyResult {
             name: name.to_string(),
             title: title.to_string(),
             cases,
-        }
+        })
     }
 
     /// The case `run(study)` + [`StudyResult::best`] would select,
@@ -266,10 +374,26 @@ impl StudyRunner {
     /// (max wps, lowest grid index) rule. Skipped points are reported
     /// via [`Self::pruned_points`].
     pub fn best_of(&mut self, study: &Study) -> Option<CaseResult> {
+        self.best_of_cancellable(study, &NO_CANCEL)
+            .expect("search without a cancel source cannot be cancelled")
+    }
+
+    /// [`Self::best_of`] with per-request cancellation: the shared
+    /// claim loop checks `cancel` before every claim, evaluated
+    /// candidates are committed to the store even on abort, and a
+    /// cancelled search returns `Err(Cancelled)` instead of a winner
+    /// (a partial search cannot prove optimality). The
+    /// `evaluated + pruned == requested` accounting identity holds
+    /// only for searches that run to completion.
+    pub fn best_of_cancellable(
+        &mut self,
+        study: &Study,
+        cancel: &AtomicBool,
+    ) -> Result<Option<CaseResult>, Cancelled> {
         let points = study.expand();
         self.requested += points.len();
         if points.is_empty() {
-            return None;
+            return Ok(None);
         }
         let keys: Vec<ConfigKey> =
             points.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
@@ -289,21 +413,32 @@ impl StudyRunner {
             }
         };
 
-        // Cached points are free: fold them into the incumbent first
-        // and seed the shared bound with the best of them. The
-        // remainder is deduplicated by key (first occurrence keeps its
-        // grid index, matching `best`'s tie-break).
+        // Store-known points are free: fold them into the incumbent
+        // first and seed the shared bound with the best of them. One
+        // counted store lookup per distinct key — in-request repeats
+        // resolve from the local `known` map, where a duplicate's
+        // `raise` is a provable no-op (equal wps, higher grid index).
+        // The remainder is deduplicated by key (first occurrence keeps
+        // its grid index, matching `best`'s tie-break).
+        let mut known: HashMap<ConfigKey, CaseResult> = HashMap::new();
         let mut seen: HashSet<ConfigKey> = HashSet::new();
         let mut todo: Vec<(usize, f64)> = Vec::new(); // (grid idx, ub)
         for (idx, p) in points.iter().enumerate() {
-            if let Some(case) = self.cache.get(&keys[idx]) {
+            if let Some(case) = known.get(&keys[idx]) {
                 raise(case.metrics.global_wps, idx, &mut best);
             } else if seen.insert(keys[idx]) {
-                // Deflating the time bound inflates the throughput
-                // bound, so rounding in the closed-form product can
-                // never undercut the engine's chained-addition result.
-                let lb = sim::iter_time_lower_bound(&p.cfg) * (1.0 - 1e-9);
-                todo.push((idx, p.cfg.global_tokens() / lb));
+                if let Some(case) = self.store.get(&keys[idx]) {
+                    raise(case.metrics.global_wps, idx, &mut best);
+                    known.insert(keys[idx], case);
+                } else {
+                    // Deflating the time bound inflates the throughput
+                    // bound, so rounding in the closed-form product
+                    // can never undercut the engine's chained-addition
+                    // result.
+                    let lb =
+                        sim::iter_time_lower_bound(&p.cfg) * (1.0 - 1e-9);
+                    todo.push((idx, p.cfg.global_tokens() / lb));
+                }
             }
         }
         // Most promising first; index-ascending on equal bounds keeps
@@ -322,7 +457,7 @@ impl StudyRunner {
         let next = AtomicUsize::new(0);
         if workers == 1 {
             bound_search_loop(&next, &todo, &points, &slots, &bound,
-                              &mut self.arenas[0]);
+                              cancel, &mut self.arenas[0]);
         } else {
             std::thread::scope(|s| {
                 let (next, todo, points, slots, bound) =
@@ -330,65 +465,90 @@ impl StudyRunner {
                 for arena in self.arenas.iter_mut().take(workers) {
                     s.spawn(move || {
                         bound_search_loop(next, todo, points, slots,
-                                          bound, arena);
+                                          bound, cancel, arena);
                     });
                 }
             });
         }
 
         // Deterministic post-fold: harvest evaluated cases in candidate
-        // order, cache them, and let the max-fold pick the winner.
+        // order, commit them to the store, and let the max-fold pick
+        // the winner. On a cancelled search the committed work is
+        // kept (the store stays consistent) but empty slots are *not*
+        // pruned points — they were simply never reached.
+        let cancelled = cancel.load(Ordering::Relaxed);
         for (i, slot) in slots.into_iter().enumerate() {
             let idx = todo[i].0;
             match slot.into_inner() {
                 Some(case) => {
                     self.evaluated += 1;
                     raise(case.metrics.global_wps, idx, &mut best);
-                    self.cache.insert(keys[idx], case);
+                    self.store.put(keys[idx], case.clone());
+                    known.insert(keys[idx], case);
                 }
-                None => self.pruned += 1,
+                None if !cancelled => self.pruned += 1,
+                None => {}
             }
         }
+        if cancelled {
+            return Err(Cancelled);
+        }
 
-        best.map(|(_, idx)| {
-            self.cache
+        Ok(best.map(|(_, idx)| {
+            known
                 .get(&keys[idx])
-                .expect("winning point is always cached")
+                .expect("winning point is always known")
                 .clone()
-        })
+        }))
     }
 
-    /// Evaluate all points, in parallel when `threads > 1`. Output
-    /// order matches input order; results land in pre-sized lock-free
-    /// `OnceLock` slots, and each worker drives one of the runner's
-    /// *persistent* `SimArena`s — grown once to the worker count and
-    /// reused (never reallocated) across waves, runs, and scenarios,
-    /// so the collective cost memo and recycled buffers persist.
+    /// Evaluate all points, in parallel when `threads > 1`, invoking
+    /// `on_case(input_index, case)` on the *calling* thread as each
+    /// point completes (completion order; callers wanting input order
+    /// index by `i`). Returns `true` when every point was evaluated,
+    /// `false` when `cancel` stopped the work early.
+    ///
+    /// Each worker drives one of the runner's *persistent*
+    /// `SimArena`s — grown once to the worker count and reused (never
+    /// reallocated) across waves, runs, and scenarios, so the
+    /// collective cost memo and recycled buffers persist.
     ///
     /// Scheduling is work-stealing over an atomic cursor with *chunked*
     /// claims: each grab takes a contiguous run of points sized so
     /// every worker makes ~8 claims total, amortizing the shared
     /// cache-line bump while still load-balancing heterogeneous grid
     /// points (a deep-pipeline point can cost 100× a pp = 1 point).
-    fn evaluate_points(&mut self, points: &[&StudyPoint])
-        -> Vec<CaseResult>
-    {
+    /// The cancellation flag is checked per *point* (not per chunk),
+    /// bounding post-cancel work to the points already in flight.
+    fn evaluate_points_streamed(
+        &mut self,
+        points: &[&StudyPoint],
+        cancel: &AtomicBool,
+        mut on_case: impl FnMut(usize, CaseResult),
+    ) -> bool {
         let workers = self.prepare_workers(points.len());
         if workers == 1 {
             let arena = &mut self.arenas[0];
-            return points
-                .iter()
-                .map(|p| evaluate_point(p, arena))
-                .collect();
+            for (i, p) in points.iter().enumerate() {
+                if cancel.load(Ordering::Relaxed) {
+                    return false;
+                }
+                on_case(i, evaluate_point(p, arena));
+            }
+            return true;
         }
-        let slots: Vec<OnceLock<CaseResult>> =
-            points.iter().map(|_| OnceLock::new()).collect();
+        // Workers stream completions over a channel; the calling
+        // thread drains it inside the scope, so `on_case` (which may
+        // write to a client socket) runs concurrently with evaluation
+        // and needs no Sync bound.
         let next = AtomicUsize::new(0);
         let chunk = (points.len() / (workers * 8)).max(1);
+        let (tx, rx) = mpsc::channel::<(usize, CaseResult)>();
+        let mut delivered = 0usize;
         std::thread::scope(|s| {
-            let slots = &slots;
             let next = &next;
             for arena in self.arenas.iter_mut().take(workers) {
+                let tx = tx.clone();
                 s.spawn(move || loop {
                     let start = next.fetch_add(chunk, Ordering::Relaxed);
                     if start >= points.len() {
@@ -396,26 +556,32 @@ impl StudyRunner {
                     }
                     let end = (start + chunk).min(points.len());
                     for i in start..end {
-                        let _ = slots[i]
-                            .set(evaluate_point(points[i], arena));
+                        if cancel.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let case = evaluate_point(points[i], arena);
+                        if tx.send((i, case)).is_err() {
+                            return;
+                        }
                     }
                 });
             }
+            // The workers hold the only remaining senders: recv fails
+            // exactly when all of them have finished or bailed.
+            drop(tx);
+            while let Ok((i, case)) = rx.recv() {
+                delivered += 1;
+                on_case(i, case);
+            }
         });
-        slots
-            .into_iter()
-            .map(|slot| {
-                slot.into_inner()
-                    .expect("every slot filled by the work loop")
-            })
-            .collect()
+        delivered == points.len()
     }
 
     /// Size the worker pool for `n` work items and make the persistent
     /// arenas ready: grow `self.arenas` to the worker count (once — the
     /// high-water mark is reused, never reallocated) and propagate the
     /// engine-forcing flag. The single worker-lifecycle path shared by
-    /// [`Self::best_of`] and `evaluate_points`.
+    /// [`Self::best_of`] and `evaluate_points_streamed`.
     fn prepare_workers(&mut self, n: usize) -> usize {
         let workers = if self.threads <= 1 || n <= 1 {
             1
@@ -889,5 +1055,149 @@ mod tests {
         let (hits, misses) = runner.cost_cache_stats();
         assert!(misses > 0, "sweep must query the collective memo");
         assert!(hits > 0, "neighboring grid points must share costs");
+    }
+
+    #[test]
+    fn shared_store_deduplicates_across_runners() {
+        // The serve-mode contract: two runners over one store (two
+        // requests against one process) simulate only novel points,
+        // and the warm answer is bitwise the cold one.
+        let study = small_sweep("shared-store");
+        let store: Arc<dyn ResultStore> = Arc::new(MemStore::new());
+        let mut cold =
+            StudyRunner::with_store(1, Arc::clone(&store));
+        let first = cold.run(&study);
+        let distinct = cold.stats().0;
+        assert!(distinct > 0);
+
+        let mut warm =
+            StudyRunner::with_store(1, Arc::clone(&store));
+        let second = warm.run(&study);
+        assert_eq!(warm.stats().0, 0,
+                   "second runner must answer entirely from the store");
+        assert_eq!(second.cases.len(), first.cases.len());
+        for (a, b) in first.cases.iter().zip(&second.cases) {
+            assert_eq!(a.metrics.global_wps.to_bits(),
+                       b.metrics.global_wps.to_bits());
+            assert_eq!(a.metrics.iter_time.to_bits(),
+                       b.metrics.iter_time.to_bits());
+            assert_eq!(a.mem_per_gpu.to_bits(), b.mem_per_gpu.to_bits());
+        }
+
+        let s = store.stats();
+        assert_eq!(s.entries, distinct);
+        assert_eq!(s.misses, distinct as u64,
+                   "cold run: one counted miss per distinct key");
+        assert_eq!(s.hits, distinct as u64,
+                   "warm run: one counted hit per distinct key");
+    }
+
+    #[test]
+    fn streamed_emit_fires_once_per_novel_point() {
+        let study = small_sweep("stream-emit");
+        let mut runner = StudyRunner::sequential();
+        let mut emitted = 0usize;
+        let res = runner
+            .run_streamed(&study, &AtomicBool::new(false), |_| {
+                emitted += 1;
+            })
+            .expect("uncancelled run completes");
+        assert_eq!(emitted, runner.stats().0,
+                   "one emit per simulated point");
+        assert_eq!(res.cases.len(), study.expand().len());
+
+        // A warm streamed rerun emits nothing: every point is a hit.
+        let mut emitted2 = 0usize;
+        runner
+            .run_streamed(&study, &AtomicBool::new(false), |_| {
+                emitted2 += 1;
+            })
+            .expect("warm run completes");
+        assert_eq!(emitted2, 0);
+    }
+
+    #[test]
+    fn cancelled_run_commits_partial_results_consistently() {
+        let study = small_sweep("cancel-consistency");
+        let total = StudyRunner::sequential().run(&study).cases.len();
+        assert!(total > 3, "sweep too small to cancel mid-way");
+
+        let store: Arc<dyn ResultStore> = Arc::new(MemStore::new());
+        let cancel = AtomicBool::new(false);
+        let stop_after = 3usize;
+        let mut done = 0usize;
+        let mut runner =
+            StudyRunner::with_store(1, Arc::clone(&store));
+        let res = runner.run_streamed(&study, &cancel, |_| {
+            done += 1;
+            if done == stop_after {
+                cancel.store(true, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(res.unwrap_err(), Cancelled);
+        assert_eq!(store.stats().entries, stop_after,
+                   "every emitted point is already committed");
+
+        // A retry over the same store resumes where the cancelled
+        // request stopped and the final answer is bitwise identical to
+        // a clean-store run.
+        let mut retry =
+            StudyRunner::with_store(1, Arc::clone(&store));
+        let resumed = retry.run(&study);
+        assert_eq!(retry.stats().0, total - stop_after,
+                   "retry must simulate only the missing points");
+        let clean = StudyRunner::sequential().run(&study);
+        assert_eq!(resumed.cases.len(), clean.cases.len());
+        for (a, b) in resumed.cases.iter().zip(&clean.cases) {
+            assert_eq!(a.metrics.global_wps.to_bits(),
+                       b.metrics.global_wps.to_bits());
+            assert_eq!(a.metrics.exposed_comm.to_bits(),
+                       b.metrics.exposed_comm.to_bits());
+        }
+    }
+
+    #[test]
+    fn best_of_rides_the_shared_store() {
+        // Plan requests skip already-known points: a best_of after a
+        // full sweep on a *different* runner sharing the store must
+        // evaluate nothing and still return the exhaustive winner.
+        let study = small_sweep("plan-shared-store");
+        let store: Arc<dyn ResultStore> = Arc::new(MemStore::new());
+        let mut sweeper =
+            StudyRunner::with_store(1, Arc::clone(&store));
+        let full = sweeper.run(&study);
+        let expect = full.best().unwrap();
+
+        let mut planner =
+            StudyRunner::with_store(1, Arc::clone(&store));
+        let got = planner.best_of(&study).unwrap();
+        assert_eq!(planner.stats().0, 0,
+                   "plan over a warm store must not simulate");
+        assert_eq!(got.plan, expect.plan);
+        assert_eq!(got.micro_batch, expect.micro_batch);
+        assert_eq!(got.metrics.global_wps.to_bits(),
+                   expect.metrics.global_wps.to_bits());
+    }
+
+    #[test]
+    fn parallel_streamed_run_matches_sequential() {
+        // The channel-streaming multi-worker path must deliver every
+        // point exactly once and assemble the same grid-order result.
+        let study = small_sweep("par-stream");
+        let seq = StudyRunner::sequential().run(&study);
+        let mut runner = StudyRunner::new(8);
+        let mut emitted = 0usize;
+        let par = runner
+            .run_streamed(&study, &AtomicBool::new(false), |_| {
+                emitted += 1;
+            })
+            .expect("uncancelled run completes");
+        assert_eq!(emitted, runner.stats().0);
+        assert_eq!(par.cases.len(), seq.cases.len());
+        for (a, b) in seq.cases.iter().zip(&par.cases) {
+            assert_eq!(a.plan, b.plan);
+            assert_eq!(a.metrics.global_wps.to_bits(),
+                       b.metrics.global_wps.to_bits());
+        }
     }
 }

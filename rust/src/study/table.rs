@@ -58,6 +58,23 @@ impl Table {
         Ok(())
     }
 
+    /// Render the table as a CSV string — byte-identical to the file
+    /// [`Table::write_csv`] produces. Serve mode ships this string in
+    /// its `table` events so cold and warm answers can be compared
+    /// byte-for-byte.
+    pub fn csv_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            let escaped: Vec<String> =
+                r.iter().map(|f| crate::util::csv::escape(f)).collect();
+            out.push_str(&escaped.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
     /// Print an aligned text table (+ optional bar chart).
     pub fn print(&self) {
         println!("\n── {} ─ {}", self.name, self.title);
@@ -227,6 +244,20 @@ mod tests {
         assert_eq!(Column::ScheduleKind.header(), "schedule");
         assert_eq!(Schedule::Interleaved { v: 2 }.to_string(),
                    "interleaved:2");
+    }
+
+    #[test]
+    fn csv_string_matches_write_csv_bytes() {
+        let mut t = Table::new("csv_parity", "parity", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        t.row(vec!["2".into(), "q\"z".into()]);
+        let dir = std::env::temp_dir().join("dtsim_table_csv_parity");
+        std::fs::create_dir_all(&dir).unwrap();
+        t.write_csv(&dir).unwrap();
+        let file_bytes =
+            std::fs::read_to_string(dir.join("csv_parity.csv")).unwrap();
+        assert_eq!(t.csv_string(), file_bytes);
+        assert_eq!(t.csv_string(), "a,b\n1,\"x,y\"\n2,\"q\"\"z\"\n");
     }
 
     #[test]

@@ -39,6 +39,25 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Build directly from key/value pairs — the serve protocol's
+    /// entry point, where request fields arrive as a JSON object
+    /// instead of a command line. Later duplicates win, like repeated
+    /// `--key` flags do in [`Args::parse`].
+    pub fn from_pairs<I>(positional: Vec<String>, pairs: I) -> Args
+    where
+        I: IntoIterator<Item = (String, String)>,
+    {
+        Args {
+            positional,
+            flags: pairs.into_iter().collect(),
+        }
+    }
+
+    /// Every flag as (key, value), in sorted key order.
+    pub fn flags(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -111,5 +130,21 @@ mod tests {
     fn negative_number_values() {
         let a = parse("--delta=-1.5");
         assert_eq!(a.f64_or("delta", 0.0), -1.5);
+    }
+
+    #[test]
+    fn from_pairs_matches_parsed_form() {
+        let a = Args::from_pairs(
+            vec!["study".into()],
+            [
+                ("nodes".to_string(), "32".to_string()),
+                ("gen".to_string(), "h100".to_string()),
+            ],
+        );
+        assert_eq!(a.positional, vec!["study"]);
+        assert_eq!(a.usize_or("nodes", 0), 32);
+        assert_eq!(a.get("gen"), Some("h100"));
+        let flags: Vec<(&str, &str)> = a.flags().collect();
+        assert_eq!(flags, vec![("gen", "h100"), ("nodes", "32")]);
     }
 }

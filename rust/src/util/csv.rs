@@ -29,21 +29,25 @@ impl CsvWriter {
             "csv row width mismatch (expected {})",
             self.cols
         );
-        let escaped: Vec<String> = fields
-            .iter()
-            .map(|f| {
-                if f.contains(',') || f.contains('"') || f.contains('\n') {
-                    format!("\"{}\"", f.replace('"', "\"\""))
-                } else {
-                    f.clone()
-                }
-            })
-            .collect();
+        let escaped: Vec<String> =
+            fields.iter().map(|f| escape(f)).collect();
         writeln!(self.w, "{}", escaped.join(","))
     }
 
     pub fn finish(mut self) -> std::io::Result<()> {
         self.w.flush()
+    }
+}
+
+/// Escape one CSV field: quoted iff it contains a comma, quote, or
+/// newline, with embedded quotes doubled. Shared by [`CsvWriter`] and
+/// the in-memory renderer (`Table::csv_string`) so file and serve-mode
+/// payload bytes cannot drift apart.
+pub fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
     }
 }
 
@@ -73,6 +77,15 @@ mod tests {
         w.finish().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,\"x,y\"\n2,\"q\"\"z\"\n");
+    }
+
+    #[test]
+    fn escape_quotes_only_when_needed() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("x,y"), "\"x,y\"");
+        assert_eq!(escape("q\"z"), "\"q\"\"z\"");
+        assert_eq!(escape("a\nb"), "\"a\nb\"");
+        assert_eq!(escape(""), "");
     }
 
     #[test]

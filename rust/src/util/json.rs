@@ -1,8 +1,13 @@
-//! Minimal recursive-descent JSON parser.
+//! Minimal recursive-descent JSON parser and deterministic serializer.
 //!
 //! Parses the AOT `manifest.json` files emitted by `python/compile/aot.py`
 //! (and nothing fancier: no comments, no trailing commas — i.e. RFC 8259).
 //! Written from scratch because no JSON crate is vendored on this image.
+//!
+//! Serialization ([`Json::dump`] / `Display`) is deterministic: object
+//! keys come out in `BTreeMap` (sorted) order and numbers use Rust's
+//! shortest-round-trip `f64` formatting, so the serve protocol can
+//! promise byte-identical payloads for value-identical responses.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -88,6 +93,76 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize deterministically: object keys in sorted (`BTreeMap`)
+    /// order, numbers in shortest-round-trip form (`512`, `0.25`),
+    /// non-finite numbers as `null` (RFC 8259 has no NaN/Inf). The
+    /// output always re-parses to an equal value.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) if n.is_finite() => {
+                out.push_str(&format!("{n}"));
+            }
+            Json::Num(_) => out.push_str("null"),
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Array(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Object(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.dump())
+    }
+}
+
+/// Build a `Json::Object` from pairs (keys end up sorted — objects are
+/// `BTreeMap`s). The serve protocol's response constructor.
+pub fn obj<I>(pairs: I) -> Json
+where
+    I: IntoIterator<Item = (&'static str, Json)>,
+{
+    Json::Object(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
 }
 
 struct Parser<'a> {
@@ -405,5 +480,39 @@ mod tests {
         let s = "a\"b\\c\nd";
         let parsed = Json::parse(&format!("\"{}\"", escape(s))).unwrap();
         assert_eq!(parsed, Json::Str(s.into()));
+    }
+
+    #[test]
+    fn dump_roundtrips_and_is_deterministic() {
+        let v = obj([
+            ("zeta", Json::Num(512.0)),
+            ("alpha", Json::Str("a\"b\n".into())),
+            ("mid", Json::Array(vec![
+                Json::Null,
+                Json::Bool(true),
+                Json::Num(0.25),
+            ])),
+        ]);
+        let text = v.dump();
+        // Keys serialize sorted, integers drop the trailing ".0".
+        assert_eq!(
+            text,
+            "{\"alpha\":\"a\\\"b\\n\",\"mid\":[null,true,0.25],\
+             \"zeta\":512}"
+        );
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        assert_eq!(v.to_string(), text);
+    }
+
+    #[test]
+    fn dump_preserves_f64_bits() {
+        // Shortest-round-trip floats: parse(dump(x)) is bit-identical,
+        // which the serve protocol's cold-vs-warm byte contract needs.
+        for x in [1.0f64 / 3.0, 1.23456789e-7, 9.87654321e12, -0.0] {
+            let text = Json::Num(x).dump();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{text}");
+        }
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
     }
 }

@@ -1,0 +1,183 @@
+//! Serve-mode end-to-end: a real `Server` on an ephemeral port backed
+//! by a real on-disk `LogStore`, driven through the protocol `Client`.
+//! Asserts the PR's headline contracts: overlapping grids simulate
+//! only novel points (store hit counters prove it), cold and warm
+//! answers are byte-identical, a dead client leaves the store
+//! consistent, and a server restart on the same `--store` path
+//! preserves every result.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use dtsim::serve::{Client, Server};
+use dtsim::store::{LogStore, ResultStore};
+use dtsim::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dtsim_serve_integration");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let path = dir.join(name);
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn start(path: &PathBuf) -> (SocketAddr, JoinHandle<()>) {
+    let (store, _) = LogStore::open(path).expect("open store");
+    let store: Arc<dyn ResultStore> = Arc::new(store);
+    let server = Server::bind("127.0.0.1:0", store, 2).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let handle = std::thread::spawn(move || {
+        server.run().expect("serve");
+    });
+    (addr, handle)
+}
+
+fn event_of(line: &str) -> String {
+    Json::parse(line)
+        .expect("response lines are valid json")
+        .get("event")
+        .and_then(|e| e.as_str())
+        .expect("every response line has an event")
+        .to_string()
+}
+
+fn table_lines(lines: &[String]) -> Vec<String> {
+    lines
+        .iter()
+        .filter(|l| event_of(l) == "table")
+        .cloned()
+        .collect()
+}
+
+fn done_field(lines: &[String], key: &str) -> f64 {
+    let last = lines.last().expect("nonempty response");
+    assert_eq!(event_of(last), "done", "{last}");
+    Json::parse(last)
+        .unwrap()
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("done event lacks {key}: {last}"))
+}
+
+const GRID: &str = r#"{"cmd":"study-grid","arch":"7b","nodes":"1","plans":"sweep","gbs":"32","mbs":"divisors"}"#;
+const SUB_GRID: &str = r#"{"cmd":"study-grid","arch":"7b","nodes":"1","plans":"dp","gbs":"32","mbs":"divisors"}"#;
+
+#[test]
+fn overlapping_grids_share_work_and_restart_preserves_results() {
+    let path = tmp("share.dtstore");
+    let (addr, handle) = start(&path);
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+
+    let lines = c.request_raw(r#"{"cmd":"ping"}"#).expect("ping");
+    assert_eq!(event_of(&lines[0]), "ok");
+
+    // Cold: the full sweep simulates everything it requests.
+    let cold = c.request_raw(GRID).expect("cold grid");
+    let cold_evaluated = done_field(&cold, "evaluated");
+    assert!(cold_evaluated > 3.0);
+    let cases = cold.iter().filter(|l| event_of(l) == "case").count();
+    assert_eq!(cases as f64, cold_evaluated,
+               "one streamed case event per simulated point");
+
+    // Overlapping subset: pure dp is one arm of the sweep, so the
+    // second request must simulate nothing and report store hits.
+    let sub = c.request_raw(SUB_GRID).expect("subset grid");
+    assert_eq!(done_field(&sub, "evaluated"), 0.0,
+               "overlapping grid must be answered from the store");
+    assert!(done_field(&sub, "store_hits") > 0.0);
+    assert!(done_field(&sub, "store_bytes") > 0.0);
+
+    // Warm repeat of the full grid: byte-identical table payload.
+    let warm = c.request_raw(GRID).expect("warm grid");
+    assert_eq!(done_field(&warm, "evaluated"), 0.0);
+    assert_eq!(table_lines(&cold), table_lines(&warm));
+    assert!(!table_lines(&cold).is_empty());
+
+    let lines =
+        c.request_raw(r#"{"cmd":"shutdown"}"#).expect("shutdown");
+    assert_eq!(event_of(&lines[0]), "ok");
+    handle.join().expect("server exits cleanly");
+
+    // Restart on the same --store path: prior results preserved
+    // bit-identically, nothing re-simulated.
+    let (addr, handle) = start(&path);
+    let mut c = Client::connect(&addr.to_string()).expect("reconnect");
+    let revived = c.request_raw(GRID).expect("grid after restart");
+    assert_eq!(done_field(&revived, "evaluated"), 0.0,
+               "restart must preserve the store");
+    assert_eq!(table_lines(&cold), table_lines(&revived),
+               "restarted answers must be byte-identical");
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits cleanly");
+}
+
+#[test]
+fn disconnecting_client_leaves_the_store_consistent() {
+    let path = tmp("disconnect.dtstore");
+    let (addr, handle) = start(&path);
+
+    // Fire a grid request and hang up without reading: the failed
+    // case write (or the closed socket) cancels the request. Whatever
+    // was simulated before the abort is committed — never a torn
+    // record, never a wrong one.
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(addr).expect("raw");
+        s.write_all(GRID.as_bytes()).expect("send");
+        s.write_all(b"\n").expect("send newline");
+        // Drop: closes the socket with the response unread.
+    }
+
+    // The next client completes the same grid; results must be
+    // identical to an uninterrupted run (bit-identity through the
+    // store is covered by tests/store_durability.rs — here we pin the
+    // protocol-level payload).
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+    let after = c.request_raw(GRID).expect("grid after disconnect");
+    let requested = done_field(&after, "requested");
+    let evaluated = done_field(&after, "evaluated");
+    assert!(evaluated <= requested);
+    assert_eq!(event_of(after.last().unwrap()), "done");
+
+    let clean_path = tmp("disconnect-clean.dtstore");
+    let (clean_addr, clean_handle) = start(&clean_path);
+    let mut cc =
+        Client::connect(&clean_addr.to_string()).expect("connect");
+    let clean = cc.request_raw(GRID).expect("clean grid");
+    assert_eq!(table_lines(&after), table_lines(&clean),
+               "post-disconnect answers must match a clean run");
+
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    let _ = cc.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits cleanly");
+    clean_handle.join().expect("clean server exits cleanly");
+}
+
+#[test]
+fn plan_requests_ride_the_shared_store() {
+    let path = tmp("plan.dtstore");
+    let (addr, handle) = start(&path);
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+
+    // A grid covering the sweep space first, then a plan request over
+    // the same space: bound-and-prune should answer from the store
+    // without simulating anything new.
+    let _ = c.request_raw(GRID).expect("warm the store");
+    let plan = c
+        .request_raw(
+            r#"{"cmd":"plan","arch":"7b","nodes":"1","gbs":"32"}"#,
+        )
+        .expect("plan");
+    let last = plan.last().unwrap();
+    assert_eq!(event_of(last), "result", "{last}");
+    let v = Json::parse(last).unwrap();
+    assert_eq!(v.get("evaluated").and_then(|x| x.as_f64()), Some(0.0),
+               "plan over a warm store must not simulate: {last}");
+    assert!(v.get("global_wps").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("plan").unwrap().as_str().is_some());
+
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits cleanly");
+}

@@ -1,0 +1,182 @@
+//! Durability contract of the on-disk result store, exercised through
+//! the public API with real simulation results: write → reopen is
+//! bitwise, torn/corrupted tails recover to the last valid record, and
+//! schema drift refuses the file instead of misreading it.
+//!
+//! Byte surgery below walks the documented record framing — a 16-byte
+//! header (magic, version, schema hash) followed by
+//! `[u32 len][u64 checksum][payload]` records (docs/serve.md).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dtsim::model::LLAMA_7B;
+use dtsim::store::{LogStore, ResultStore};
+use dtsim::study::{CaseResult, PlanAxis, Study, StudyRunner};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dtsim_store_durability");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let path = dir.join(name);
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn small_study() -> Study {
+    Study::builder("durability")
+        .arch(LLAMA_7B)
+        .nodes([1])
+        .plans(PlanAxis::Sweep { with_cp: false })
+        .global_batches([32])
+        .micro_batch_divisors()
+        .memory_cap(0.94)
+        .build()
+}
+
+fn open(path: &PathBuf) -> (Arc<dyn ResultStore>, dtsim::store::RecoveryReport) {
+    let (store, report) = LogStore::open(path).expect("open store");
+    (Arc::new(store), report)
+}
+
+fn run_with(store: &Arc<dyn ResultStore>) -> (Vec<CaseResult>, usize) {
+    let mut runner = StudyRunner::with_store(1, Arc::clone(store));
+    let res = runner.run(&small_study());
+    (res.cases, runner.stats().0)
+}
+
+fn assert_bitwise(a: &[CaseResult], b: &[CaseResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.plan, y.plan);
+        assert_eq!(x.micro_batch, y.micro_batch);
+        assert_eq!(x.metrics.global_wps.to_bits(),
+                   y.metrics.global_wps.to_bits());
+        assert_eq!(x.metrics.iter_time.to_bits(),
+                   y.metrics.iter_time.to_bits());
+        assert_eq!(x.metrics.exposed_comm.to_bits(),
+                   y.metrics.exposed_comm.to_bits());
+        assert_eq!(x.metrics.energy_per_token_j.to_bits(),
+                   y.metrics.energy_per_token_j.to_bits());
+        assert_eq!(x.mem_per_gpu.to_bits(), y.mem_per_gpu.to_bits());
+    }
+}
+
+/// `(start, total_len)` of each complete record after the header.
+fn record_spans(data: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut pos = 16usize;
+    while pos + 12 <= data.len() {
+        let len = u32::from_le_bytes(
+            data[pos..pos + 4].try_into().unwrap()) as usize;
+        if pos + 12 + len > data.len() {
+            break;
+        }
+        spans.push((pos, 12 + len));
+        pos += 12 + len;
+    }
+    spans
+}
+
+#[test]
+fn results_survive_reopen_bitwise() {
+    let path = tmp("reopen.dtstore");
+    let (store, report) = open(&path);
+    assert_eq!(report.recovered, 0, "fresh file starts empty");
+    let (cold_cases, cold_evaluated) = run_with(&store);
+    assert!(cold_evaluated > 3, "sweep too small to mean anything");
+    drop(store);
+
+    let (store, report) = open(&path);
+    assert_eq!(report.recovered, cold_evaluated);
+    assert_eq!(report.truncated_bytes, 0);
+    let (warm_cases, warm_evaluated) = run_with(&store);
+    assert_eq!(warm_evaluated, 0,
+               "reopened store must answer the whole grid");
+    assert_bitwise(&cold_cases, &warm_cases);
+}
+
+#[test]
+fn torn_tail_recovers_to_last_valid_record() {
+    let path = tmp("torn.dtstore");
+    let (store, _) = open(&path);
+    let (cold_cases, cold_evaluated) = run_with(&store);
+    drop(store);
+
+    // Tear mid-way through the last record's payload — a crash during
+    // the final append.
+    let data = std::fs::read(&path).expect("read store file");
+    let spans = record_spans(&data);
+    assert_eq!(spans.len(), cold_evaluated);
+    let (last_start, last_len) = *spans.last().unwrap();
+    let cut = last_start + last_len / 2;
+    std::fs::write(&path, &data[..cut]).expect("tear file");
+
+    let (store, report) = open(&path);
+    assert_eq!(report.recovered, cold_evaluated - 1);
+    assert_eq!(report.truncated_bytes as usize, cut - last_start);
+    let (resumed_cases, resumed_evaluated) = run_with(&store);
+    assert_eq!(resumed_evaluated, 1,
+               "only the torn-off point needs re-simulation");
+    assert_bitwise(&cold_cases, &resumed_cases);
+}
+
+#[test]
+fn corrupted_record_truncates_the_untrusted_tail() {
+    let path = tmp("corrupt.dtstore");
+    let (store, _) = open(&path);
+    let (cold_cases, cold_evaluated) = run_with(&store);
+    drop(store);
+
+    // Flip one payload byte in a middle record: its checksum fails,
+    // and everything after it is untrusted (no resync point in an
+    // append-only log), so recovery keeps only the prefix.
+    let mut data = std::fs::read(&path).expect("read store file");
+    let spans = record_spans(&data);
+    let mid = spans.len() / 2;
+    let (start, _) = spans[mid];
+    data[start + 12 + 3] ^= 0xff;
+    std::fs::write(&path, &data).expect("corrupt file");
+
+    let (store, report) = open(&path);
+    assert_eq!(report.recovered, mid);
+    assert!(report.truncated_bytes > 0);
+    let (resumed_cases, resumed_evaluated) = run_with(&store);
+    assert_eq!(resumed_evaluated, cold_evaluated - mid,
+               "everything after the corruption is re-simulated");
+    assert_bitwise(&cold_cases, &resumed_cases);
+}
+
+#[test]
+fn schema_hash_mismatch_refuses_the_file() {
+    let path = tmp("schema.dtstore");
+    let (store, _) = open(&path);
+    let _ = run_with(&store);
+    drop(store);
+
+    // Flip a schema-hash byte (header bytes 8..16): a store written
+    // by a build with a different ConfigKey layout must be refused
+    // with a clear error — never silently misread.
+    let mut data = std::fs::read(&path).expect("read store file");
+    let pristine = data.clone();
+    data[8] ^= 0xff;
+    std::fs::write(&path, &data).expect("rewrite header");
+    let err = LogStore::open(&path).expect_err("schema must refuse");
+    assert!(err.contains("schema"), "{err}");
+    assert!(err.contains("--store"), "error should point at the fix: {err}");
+    // Refusal is read-only: the file is left byte-identical.
+    assert_eq!(std::fs::read(&path).unwrap(), data);
+
+    // Restoring the header restores the data untouched.
+    std::fs::write(&path, &pristine).expect("restore header");
+    let (_, report) = open(&path);
+    assert!(report.recovered > 0);
+}
+
+#[test]
+fn foreign_files_are_refused_by_magic() {
+    let path = tmp("magic.dtstore");
+    std::fs::write(&path, b"JUNKJUNKJUNKJUNKJUNK")
+        .expect("write junk");
+    let err = LogStore::open(&path).expect_err("junk must refuse");
+    assert!(err.contains("not a dtsim result store"), "{err}");
+}
