@@ -1,0 +1,321 @@
+//! Deterministic fault injection: named chaos points compiled into the
+//! serve/store/runner hot paths.
+//!
+//! A **fault point** is a named call site — `fault::point("name")` —
+//! that returns `false` (inert) unless the process has *armed* a spec
+//! for that name. Armed points fire deterministically: either once
+//! after a fixed number of clean passes (`after=N`) or per pass with a
+//! seeded probability (`prob=P:seed=S`, driven by [`crate::util::rng`]
+//! so every chaos run is replayable bit-for-bit). What a firing point
+//! *does* is the call site's business — tear an append, drop a
+//! connection, panic a worker — which is why tests no longer need
+//! hand-built byte surgery to create those states.
+//!
+//! Compiled-in points ([`COMPILED_POINTS`]):
+//!
+//! | point                 | site                          | effect when fired |
+//! |-----------------------|-------------------------------|-------------------|
+//! | `store.append.torn`   | `LogStore::put` append        | writes half the record, skips the index — the on-disk state a mid-append crash leaves |
+//! | `serve.conn.drop`     | serve request loop            | connection vanishes without a reply |
+//! | `serve.case.drop`     | per streamed `case` event     | connection dies mid-response (partial grid committed) |
+//! | `serve.write.stall`   | outbound writer, per line     | sleeps before the TCP write (a slow reader) |
+//! | `runner.worker.panic` | runner point-claim loop       | worker panics at the claim |
+//!
+//! Arming: `DTSIM_FAULTS="store.append.torn:after=3,serve.conn.drop:prob=0.05:seed=7"`
+//! in the environment (read once at process start via
+//! [`arm_from_env`]), or programmatically via [`arm`] (tests, the
+//! `Server` chaos config). `after=N` fires exactly once, after `N`
+//! clean passes of that point; `prob=P` fires each pass independently
+//! with probability `P` from a deterministic stream (default
+//! `seed=0`). [`clear`] disarms everything.
+//!
+//! The unarmed path is a single relaxed atomic load — cheap enough to
+//! sit inside the store append and the point-claim loop without
+//! registering on `dtsim bench` (the CI regression gate enforces
+//! this). Fault state is **process-global**: tests that arm points
+//! serialize through [`exclusive`] so concurrently running tests never
+//! see each other's chaos.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::util::rng::Rng;
+
+/// Every fault point compiled into the crate. [`arm`] rejects names
+/// outside this list (typos must be loud, not silently inert) except
+/// the `test.` prefix, reserved for the fault module's own tests.
+pub const COMPILED_POINTS: &[&str] = &[
+    "store.append.torn",
+    "serve.conn.drop",
+    "serve.case.drop",
+    "serve.write.stall",
+    "runner.worker.panic",
+];
+
+#[derive(Debug, Clone)]
+enum Mode {
+    /// Fire exactly once, after `clean` further passes.
+    After { clean: u64, spent: bool },
+    /// Fire each pass with probability `p`, from a seeded
+    /// deterministic stream.
+    Prob { p: f64, rng: Rng },
+}
+
+#[derive(Debug, Clone)]
+struct FaultPoint {
+    mode: Mode,
+    fired: u64,
+}
+
+/// The inert-path gate: one relaxed load when nothing is armed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn table() -> &'static Mutex<HashMap<String, FaultPoint>> {
+    static TABLE: OnceLock<Mutex<HashMap<String, FaultPoint>>> =
+        OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Should the fault point `name` fire on this pass? Inert (always
+/// `false`, one atomic load) unless a spec for `name` is armed.
+pub fn point(name: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let mut map = table().lock().unwrap_or_else(|e| e.into_inner());
+    let Some(fp) = map.get_mut(name) else {
+        return false;
+    };
+    let fire = match &mut fp.mode {
+        Mode::After { clean, spent } => {
+            if *spent {
+                false
+            } else if *clean == 0 {
+                *spent = true;
+                true
+            } else {
+                *clean -= 1;
+                false
+            }
+        }
+        Mode::Prob { p, rng } => rng.next_f64() < *p,
+    };
+    if fire {
+        fp.fired += 1;
+    }
+    fire
+}
+
+/// How many times `name` has fired since it was armed (0 when unknown).
+pub fn fired(name: &str) -> u64 {
+    table()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(name)
+        .map(|fp| fp.fired)
+        .unwrap_or(0)
+}
+
+/// Arm one or more fault specs, comma-separated:
+/// `NAME:after=N` or `NAME:prob=P[:seed=S]`. The error enumerates the
+/// grammar; unknown point names (outside [`COMPILED_POINTS`] and the
+/// test-reserved `test.` prefix) are rejected.
+pub fn arm(spec: &str) -> Result<(), String> {
+    let mut parsed = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        parsed.push(parse_entry(entry)?);
+    }
+    if parsed.is_empty() {
+        return Ok(());
+    }
+    let mut map = table().lock().unwrap_or_else(|e| e.into_inner());
+    for (name, fp) in parsed {
+        map.insert(name, fp);
+    }
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+fn parse_entry(entry: &str) -> Result<(String, FaultPoint), String> {
+    let bad = |why: &str| {
+        format!(
+            "bad fault spec '{entry}': {why} (expected NAME:after=N \
+             or NAME:prob=P[:seed=S], e.g. store.append.torn:after=3 \
+             or serve.conn.drop:prob=0.05:seed=7; comma-separate \
+             multiple specs; points: {})",
+            COMPILED_POINTS.join(", ")
+        )
+    };
+    let mut parts = entry.split(':');
+    let name = parts.next().unwrap_or("");
+    if name.is_empty() || name.contains('=') {
+        return Err(bad("missing point name"));
+    }
+    if !COMPILED_POINTS.contains(&name) && !name.starts_with("test.") {
+        return Err(bad("unknown fault point"));
+    }
+    let mut after: Option<u64> = None;
+    let mut prob: Option<f64> = None;
+    let mut seed: Option<u64> = None;
+    for kv in parts {
+        let Some((k, v)) = kv.split_once('=') else {
+            return Err(bad("expected key=value after the point name"));
+        };
+        match k {
+            "after" => match v.parse::<u64>() {
+                Ok(n) => after = Some(n),
+                Err(_) => {
+                    return Err(bad("after= takes a non-negative integer"))
+                }
+            },
+            "prob" => match v.parse::<f64>() {
+                Ok(p) if (0.0..=1.0).contains(&p) => prob = Some(p),
+                _ => return Err(bad("prob= takes a number in [0, 1]")),
+            },
+            "seed" => match v.parse::<u64>() {
+                Ok(s) => seed = Some(s),
+                Err(_) => {
+                    return Err(bad("seed= takes a non-negative integer"))
+                }
+            },
+            _ => return Err(bad("unknown key (after, prob, seed)")),
+        }
+    }
+    let mode = match (after, prob) {
+        (Some(n), None) => {
+            if seed.is_some() {
+                return Err(bad("seed= only applies to prob= faults"));
+            }
+            Mode::After { clean: n, spent: false }
+        }
+        (None, Some(p)) => {
+            Mode::Prob { p, rng: Rng::new(seed.unwrap_or(0)) }
+        }
+        (Some(_), Some(_)) => {
+            return Err(bad("give either after= or prob=, not both"))
+        }
+        (None, None) => {
+            return Err(bad("missing after= or prob="))
+        }
+    };
+    Ok((name.to_string(), FaultPoint { mode, fired: 0 }))
+}
+
+/// Arm from `DTSIM_FAULTS`, if set. Called once at process start; a
+/// malformed spec is an error (a typo must never run chaos-free while
+/// the operator believes faults are armed).
+pub fn arm_from_env() -> Result<(), String> {
+    match std::env::var("DTSIM_FAULTS") {
+        Ok(spec) => arm(&spec).map_err(|e| format!("DTSIM_FAULTS: {e}")),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Disarm every fault point and restore the inert fast path.
+pub fn clear() {
+    let mut map = table().lock().unwrap_or_else(|e| e.into_inner());
+    map.clear();
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Serialize tests that arm faults: fault state is process-global, so
+/// any test touching [`arm`]/[`clear`] holds this guard for its whole
+/// body (arming through clearing) to keep concurrently running tests
+/// deterministic.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_points_are_inert() {
+        let _g = exclusive();
+        clear();
+        for _ in 0..100 {
+            assert!(!point("test.inert"));
+        }
+        assert_eq!(fired("test.inert"), 0);
+    }
+
+    #[test]
+    fn after_fires_exactly_once_after_n_clean_passes() {
+        let _g = exclusive();
+        clear();
+        arm("test.after:after=3").unwrap();
+        let fires: Vec<bool> = (0..8).map(|_| point("test.after")).collect();
+        assert_eq!(
+            fires,
+            [false, false, false, true, false, false, false, false]
+        );
+        assert_eq!(fired("test.after"), 1);
+        clear();
+        assert!(!point("test.after"));
+    }
+
+    #[test]
+    fn prob_streams_are_replayable_by_seed() {
+        let _g = exclusive();
+        clear();
+        arm("test.prob:prob=0.5:seed=42").unwrap();
+        let a: Vec<bool> = (0..64).map(|_| point("test.prob")).collect();
+        clear();
+        arm("test.prob:prob=0.5:seed=42").unwrap();
+        let b: Vec<bool> = (0..64).map(|_| point("test.prob")).collect();
+        assert_eq!(a, b, "same seed must replay the same fault stream");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f));
+        clear();
+        arm("test.prob:prob=1").unwrap();
+        assert!(point("test.prob"));
+        clear();
+        arm("test.prob:prob=0").unwrap();
+        assert!(!point("test.prob"));
+        clear();
+    }
+
+    #[test]
+    fn specs_parse_and_errors_enumerate_the_grammar() {
+        let _g = exclusive();
+        clear();
+        // Multiple comma-separated entries, whitespace-tolerant.
+        arm("test.a:after=0, test.b:prob=0.25:seed=7").unwrap();
+        assert!(point("test.a"));
+        clear();
+        for bad in [
+            "test.x",                     // no mode
+            "test.x:after=3:prob=0.5",    // both modes
+            "test.x:after=many",          // bad int
+            "test.x:prob=1.5",            // out of range
+            "test.x:after=1:seed=2",      // seed without prob
+            "test.x:frequency=2",         // unknown key
+            ":after=1",                   // missing name
+            "not.a.real.point:after=1",   // unknown point name
+        ] {
+            let err = arm(bad).unwrap_err();
+            assert!(err.contains("after=N"), "{err}");
+            assert!(err.contains("prob=P"), "{err}");
+            assert!(err.contains("store.append.torn"), "{err}");
+        }
+        // A rejected spec arms nothing.
+        assert!(!point("test.x"));
+        clear();
+    }
+
+    #[test]
+    fn compiled_point_names_are_accepted() {
+        let _g = exclusive();
+        clear();
+        for name in COMPILED_POINTS {
+            arm(&format!("{name}:after=9999999")).unwrap();
+        }
+        clear();
+    }
+}

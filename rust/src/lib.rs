@@ -141,7 +141,10 @@
 //! across requests (and across restarts, with `--store PATH`) through
 //! the [`store`] module's `ResultStore` trait — an in-memory map or a
 //! crash-recoverable append-only log whose records round-trip `f64`s
-//! bitwise (`docs/serve.md`).
+//! bitwise (`docs/serve.md`). The serve stack is chaos-tested: the
+//! [`fault`] module compiles named deterministic fault points (torn
+//! appends, dropped connections, panicking workers) into the hot
+//! paths, armed via `DTSIM_FAULTS` and completely inert otherwise.
 //!
 //! Python is build-time only; the binary is self-contained once
 //! `make artifacts` has run.
@@ -149,6 +152,7 @@
 pub mod collectives;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod hardware;
 pub mod memory;
 pub mod metrics;

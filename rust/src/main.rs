@@ -12,6 +12,7 @@
 //!   trace      export a chrome://tracing timeline for a config
 //!   serve      long-running planner service (line-delimited JSON/TCP)
 //!   client     send one request to a running `dtsim serve`
+//!   store      verify or compact a result store file
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -31,7 +32,7 @@ use dtsim::report;
 use dtsim::runtime::artifacts_root;
 use dtsim::serve::{Client, Server};
 use dtsim::sim::{build_engine, Schedule, Sharding, SimConfig};
-use dtsim::store::{LogStore, MemStore, ResultStore};
+use dtsim::store::{LogStore, MemStore, ResultStore, StoreLock};
 use dtsim::study::grid;
 use dtsim::study::{
     Column, ConsoleSink, CsvSink, JsonSink, Sink, Study, StudyRunner,
@@ -40,6 +41,7 @@ use dtsim::topology::{Cluster, GroupPlacement};
 use dtsim::trace::write_chrome_trace;
 use dtsim::util::args::Args;
 use dtsim::util::json::Json;
+use dtsim::util::rng::Rng;
 
 const USAGE: &str = "\
 dtsim — Hardware Scaling Trends & Diminishing Returns reproduction
@@ -78,12 +80,20 @@ USAGE:
                     fig6-best|a100-32n|v100-32n>
   dtsim trace      --out trace.json [simulate flags]
   dtsim serve      [--addr 127.0.0.1:7071] [--store results.dtstore]
-                   [--threads N]    # line-delimited JSON over TCP;
+                   [--threads N] [--deadline-ms 0] [--max-conns 256]
+                                    # line-delimited JSON over TCP;
                                     # --store persists results across
-                                    # restarts (docs/serve.md)
+                                    # restarts and takes PATH.lock
+                                    # (docs/serve.md)
   dtsim client     <ping|stats|simulate|plan|study-grid|scenario|
                     shutdown> [request flags]
-                   [--addr 127.0.0.1:7071]
+                   [--addr 127.0.0.1:7071] [--retries 4]
+                   [--backoff-ms 200]
+  dtsim store      <verify|compact> PATH
+                                    # verify: read-only scan, exit 4
+                                    # on corruption; compact: drop
+                                    # superseded/torn records,
+                                    # answers stay bitwise-identical
 ";
 
 fn main() {
@@ -95,6 +105,14 @@ fn main() {
             eprintln!("error: {e}");
             std::process::exit(1);
         }
+    }
+    // Arm deterministic fault points (DTSIM_FAULTS=spec, chaos
+    // testing) before any subcommand runs; a typo'd spec must fail
+    // loudly, never run clean while the operator believes faults are
+    // armed.
+    if let Err(e) = dtsim::fault::arm_from_env() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
     }
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let result = match cmd.as_str() {
@@ -109,6 +127,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "store" => cmd_store(&args),
         _ => {
             eprint!("{USAGE}");
             std::process::exit(2);
@@ -290,6 +309,33 @@ fn parse_threads(args: &Args) -> Result<Option<usize>> {
     }
 }
 
+/// Millisecond-valued flag (`--deadline-ms`, `--backoff-ms`) parsing
+/// in the `parse_threads` mold: absent means `default`, and the error
+/// enumerates the accepted form. Zero is legal — it means "disabled"
+/// where the flag documents that.
+fn parse_ms_flag(args: &Args, key: &str, default: u64) -> Result<u64> {
+    let Some(v) = args.get(key) else {
+        return Ok(default);
+    };
+    v.parse::<u64>().map_err(|_| anyhow!(
+        "--{key}: invalid duration '{v}' (expected whole \
+         milliseconds, e.g. --{key} 1000, or omit the flag for the \
+         default of {default})"
+    ))
+}
+
+/// Count-valued flag (`--max-conns`, `--retries`) parsing, same mold.
+fn parse_count_flag(args: &Args, key: &str, default: u64) -> Result<u64> {
+    let Some(v) = args.get(key) else {
+        return Ok(default);
+    };
+    v.parse::<u64>().map_err(|_| anyhow!(
+        "--{key}: invalid count '{v}' (expected a non-negative \
+         integer, e.g. --{key} 8, or omit the flag for the default \
+         of {default})"
+    ))
+}
+
 fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -382,6 +428,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
     let store_stats = warmed.store_stats();
 
+    // Store recovery time: how long a `serve --store` restart spends
+    // re-opening a log store holding this grid (informational — not a
+    // gated field; it tracks the recovery scan, not the simulator).
+    let recover_path = std::env::temp_dir().join(format!(
+        "dtsim_bench_recover_{}.dtstore",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&recover_path);
+    let store_recover_ms = {
+        {
+            let (log, _) = LogStore::open(&recover_path)
+                .map_err(|e| anyhow!("bench recovery store: {e}"))?;
+            let mut runner =
+                StudyRunner::with_store(threads, Arc::new(log));
+            runner.run(&study);
+        }
+        let t0 = Instant::now();
+        let _ = LogStore::open(&recover_path)
+            .map_err(|e| anyhow!("bench recovery store: {e}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let _ = std::fs::remove_file(&recover_path);
+        ms
+    };
+
     // Schedule-variant companion grid (interleaved-1F1B + ZeRO-3 on
     // pipeline-heavy plans) so the new emitter arms are tracked in the
     // same artifact — included in --quick too.
@@ -432,13 +502,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"hw_cache_hit_rate\": {:.4},\n  \
          \"store_hits\": {},\n  \"store_misses\": {},\n  \
          \"store_bytes\": {},\n  \
+         \"store_recover_ms\": {:.3},\n  \
          \"peak_rss_bytes\": {},\n  \"threads\": {},\n  \"reps\": {}\n}}\n",
         study.name, points.len(), evaluated, best_cps, warm_ms, hit_rate,
         steady_frac, interval_compression,
         sched_points.len(), sched_evaluated, sched_cps,
         hw_points.len(), hw_evaluated, hw_cps, hw_hit_rate,
         store_stats.hits, store_stats.misses, store_stats.bytes,
-        peak_rss_bytes(), threads, reps);
+        store_recover_ms, peak_rss_bytes(), threads, reps);
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -638,13 +709,23 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
 /// `dtsim serve` — the long-running planner service (docs/serve.md).
 /// Without `--store` results live in memory for the process lifetime;
-/// with `--store PATH` they ride the crash-recoverable on-disk log and
+/// with `--store PATH` they ride the crash-recoverable on-disk log
+/// (guarded by an advisory `PATH.lock` for the server's lifetime) and
 /// survive restarts bit-identically.
 fn cmd_serve(args: &Args) -> Result<()> {
     let threads = parse_threads(args)?.unwrap_or_else(default_threads);
     let addr = args.get_or("addr", "127.0.0.1:7071");
+    let deadline_ms = parse_ms_flag(args, "deadline-ms", 0)?;
+    let max_conns = parse_count_flag(args, "max-conns", 256)? as usize;
+    // The lock must outlive the server: held in a local that drops
+    // (removing PATH.lock) only after run() returns.
+    let mut _lock: Option<StoreLock> = None;
     let store: Arc<dyn ResultStore> = match args.get("store") {
         Some(path) => {
+            _lock = Some(
+                StoreLock::acquire(path)
+                    .map_err(|e| anyhow!("--store: {e}"))?,
+            );
             let (store, recovery) =
                 LogStore::open(path).map_err(|e| anyhow!(
                     "--store: {e} (expected a writable file path, \
@@ -660,11 +741,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => Arc::new(MemStore::new()),
     };
     let persistent = args.has("store");
-    let server =
-        Server::bind(&addr, store, threads).map_err(|e| anyhow!(
-            "--addr: cannot listen on '{addr}': {e} (expected \
-             host:port, e.g. --addr 127.0.0.1:7071, or port 0 for an \
-             ephemeral port)"))?;
+    let server = Server::bind(&addr, store, threads)
+        .map_err(|e| anyhow!("--addr: {e}"))?
+        .with_deadline_ms(deadline_ms)
+        .with_max_conns(max_conns);
     println!(
         "dtsim serve listening on {} ({} threads per request, {} \
          store); send {{\"cmd\":\"shutdown\"}} or use `dtsim client \
@@ -677,44 +757,176 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `dtsim client <cmd> [flags]` — one request against a running
-/// server. Every flag except `--addr`/`--catalog` is forwarded as a
-/// request field, response lines print verbatim (line-delimited JSON,
-/// pipe to `jq` at will), and an `error` event exits nonzero.
+/// server. Every flag except `--addr`/`--catalog`/`--retries`/
+/// `--backoff-ms` is forwarded as a request field, response lines
+/// print verbatim (line-delimited JSON, pipe to `jq` at will), and an
+/// `error` event exits nonzero.
+///
+/// Connect failures and mid-stream transport failures are retried up
+/// to `--retries` times with exponential backoff plus jitter
+/// (`--backoff-ms` base). Each retry re-issues the whole request on a
+/// fresh connection — safe because completed points are committed to
+/// the server's store before they are streamed, so a retried grid
+/// resumes from the store and re-simulates only what is missing.
+/// Server-side `error` events are final answers, never retried.
 fn cmd_client(args: &Args) -> Result<()> {
     let cmd = args.positional.get(1).ok_or_else(|| anyhow!(
         "client command required (one of: ping, stats, simulate, \
          plan, study-grid, scenario, shutdown)"))?;
     let addr = args.get_or("addr", "127.0.0.1:7071");
+    let retries = parse_count_flag(args, "retries", 4)? as u32;
+    let backoff_ms = parse_ms_flag(args, "backoff-ms", 200)?.max(1);
     let mut req = BTreeMap::new();
     req.insert("cmd".to_string(), Json::Str(cmd.clone()));
     for (k, v) in args.flags() {
-        if k == "addr" || k == "catalog" {
+        if matches!(k, "addr" | "catalog" | "retries" | "backoff-ms") {
             continue;
         }
         req.insert(k.to_string(), Json::Str(v.to_string()));
     }
-    let mut client =
-        Client::connect_retry(&addr, 10, Duration::from_millis(200))
-            .map_err(|e| anyhow!(
-                "connect {addr}: {e} (is `dtsim serve` running? \
-                 pass --addr to target a non-default address)"))?;
-    let lines = client.request_raw(&Json::Object(req).dump())?;
-    let mut failed = false;
-    for line in &lines {
-        println!("{line}");
-        let event = Json::parse(line)
-            .ok()
-            .and_then(|v| {
-                v.get("event").and_then(|e| e.as_str()).map(String::from)
-            });
-        if event.as_deref() == Some("error") {
-            failed = true;
+    let line = Json::Object(req).dump();
+
+    let retry_hint = format!(
+        "gave up after {} attempts — raise --retries N for more \
+         attempts or --backoff-ms MS for a longer wait between them",
+        retries + 1);
+    let mut rng = Rng::new(
+        u64::from(std::process::id())
+            ^ std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| u64::from(d.subsec_nanos()))
+                .unwrap_or(0),
+    );
+    let mut last: Option<(&'static str, std::io::Error)> = None;
+    for attempt in 0..=retries {
+        if attempt > 0 {
+            let (stage, e) =
+                last.as_ref().expect("a retry follows a failure");
+            // Exponential backoff with jitter, capped at 30 s so a
+            // long --retries budget doesn't stall for hours.
+            let base = backoff_ms
+                .saturating_mul(1u64 << u64::from((attempt - 1).min(16)));
+            let wait =
+                base.saturating_add(rng.next_below(backoff_ms))
+                    .min(30_000);
+            eprintln!(
+                "dtsim client: {stage} {addr} failed ({e}); retry \
+                 {attempt}/{retries} in {wait}ms");
+            std::thread::sleep(Duration::from_millis(wait));
+        }
+        let mut client = match Client::connect(&addr) {
+            Ok(c) => c,
+            Err(e) => {
+                last = Some(("connect", e));
+                continue;
+            }
+        };
+        let lines = match client.request_raw(&line) {
+            Ok(lines) => lines,
+            Err(e) => {
+                last = Some(("request to", e));
+                continue;
+            }
+        };
+        let mut failed = false;
+        for line in &lines {
+            println!("{line}");
+            let event = Json::parse(line)
+                .ok()
+                .and_then(|v| {
+                    v.get("event")
+                        .and_then(|e| e.as_str())
+                        .map(String::from)
+                });
+            if event.as_deref() == Some("error") {
+                failed = true;
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        return Ok(());
+    }
+    let (stage, e) = last.expect("exhausted retries imply a failure");
+    if stage == "connect" {
+        bail!(
+            "connect {addr}: {e} (is `dtsim serve` running? pass \
+             --addr to target a non-default address; {retry_hint})");
+    }
+    match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => bail!(
+            "request to {addr}: {e} (the server or network dropped \
+             the connection mid-response; points already streamed \
+             were committed to the server's store, so re-running \
+             this command resumes where it stopped; {retry_hint})"),
+        std::io::ErrorKind::InvalidData => bail!(
+            "request to {addr}: {e} (the response was corrupt — a \
+             partial line or a non-JSON payload; is the address \
+             really a `dtsim serve`? {retry_hint})"),
+        _ => bail!("request to {addr}: {e} ({retry_hint})"),
+    }
+}
+
+/// `dtsim store <verify|compact> PATH` — maintenance passes over a
+/// result store file (docs/serve.md). `verify` is a read-only scan
+/// that exits 4 on corruption; `compact` rewrites the file without
+/// superseded duplicates or truncated garbage, and every stored
+/// answer stays bitwise-identical.
+fn cmd_store(args: &Args) -> Result<()> {
+    const STORE_USAGE: &str =
+        "store usage: `dtsim store verify PATH` (read-only scan; \
+         exit 4 on corruption) or `dtsim store compact PATH` (drop \
+         superseded duplicates and truncated garbage; answers stay \
+         bitwise-identical)";
+    let verb = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("store: missing action\n{STORE_USAGE}"))?;
+    let path = args.positional.get(2).ok_or_else(|| {
+        anyhow!("store {verb}: missing PATH\n{STORE_USAGE}")
+    })?;
+    match verb.as_str() {
+        "verify" => {
+            let report = dtsim::store::verify(path)
+                .map_err(|e| anyhow!("store verify: {e}"))?;
+            println!(
+                "store {path}: {} results recovered, {} stale \
+                 skipped, {} trailing bytes would be truncated",
+                report.recovered, report.skipped_stale,
+                report.truncated_bytes);
+            if report.truncated_bytes > 0 {
+                eprintln!(
+                    "store verify: CORRUPT — {} trailing bytes fail \
+                     the structural scan (a crash mid-append, or \
+                     external damage); the committed records above \
+                     are intact, and the next `dtsim serve --store \
+                     {path}` or `dtsim store compact {path}` \
+                     truncates the damage",
+                    report.truncated_bytes);
+                std::process::exit(4);
+            }
+            println!("store {path}: clean");
+            Ok(())
+        }
+        "compact" => {
+            // Same advisory lock as a server: compacting under a live
+            // writer would silently drop its in-flight appends.
+            let _lock = StoreLock::acquire(path)
+                .map_err(|e| anyhow!("store compact: {e}"))?;
+            let r = dtsim::store::compact(path)
+                .map_err(|e| anyhow!("store compact: {e}"))?;
+            println!(
+                "store {path}: compacted {} -> {} bytes ({} live \
+                 kept, {} superseded dropped, {} stale kept, {} \
+                 bytes of truncated garbage dropped)",
+                r.bytes_before, r.bytes_after, r.live,
+                r.dropped_superseded, r.kept_stale, r.dropped_bytes);
+            Ok(())
+        }
+        other => {
+            bail!("store: unknown action '{other}'\n{STORE_USAGE}")
         }
     }
-    if failed {
-        std::process::exit(1);
-    }
-    Ok(())
 }
 
 #[cfg(test)]

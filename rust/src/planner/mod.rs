@@ -126,6 +126,24 @@ pub fn best_in(req: &SweepRequest, runner: &mut StudyRunner)
         .map(outcome_of)
 }
 
+/// [`best_in`] with per-request cancellation (serve-mode deadlines and
+/// client disconnects): the bound-and-prune search checks `cancel`
+/// between point claims, commits everything it already evaluated to
+/// the runner's store, and returns `Err(Cancelled)` — a partial search
+/// cannot prove optimality, so there is no partial winner.
+pub fn best_in_cancellable(
+    req: &SweepRequest,
+    runner: &mut StudyRunner,
+    cancel: &std::sync::atomic::AtomicBool,
+) -> Result<Option<PlanOutcome>, crate::study::Cancelled> {
+    runner
+        .best_of_cancellable(
+            &req.study(PlanAxis::Sweep { with_cp: req.with_cp }),
+            cancel,
+        )
+        .map(|best| best.map(outcome_of))
+}
+
 /// Best outcome restricted to a fixed plan shape (used by the figure
 /// harness to compare specific strategies). Only that plan's
 /// microbatch candidates are simulated — not the whole sweep.

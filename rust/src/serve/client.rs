@@ -67,15 +67,38 @@ impl Client {
                     "server closed the connection mid-response",
                 ));
             }
+            if !buf.ends_with('\n') {
+                // read_line only returns data without its newline at
+                // EOF: the connection died inside this line.
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!(
+                        "connection dropped mid-line (partial \
+                         response: '{}')",
+                        snippet(&buf)
+                    ),
+                ));
+            }
             let trimmed = buf.trim_end_matches('\n').to_string();
-            let terminal = Json::parse(&trimmed)
-                .ok()
-                .and_then(|v| {
-                    v.get("event")
-                        .and_then(|e| e.as_str())
-                        .map(|e| TERMINAL_EVENTS.contains(&e))
-                })
-                .unwrap_or(true); // unparseable: don't hang forever
+            let event = match Json::parse(&trimmed) {
+                Ok(v) => {
+                    v.get("event").and_then(|e| e.as_str()).map(str::to_string)
+                }
+                Err(e) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!(
+                            "bad response line ({e}): '{}'",
+                            snippet(&trimmed)
+                        ),
+                    ));
+                }
+            };
+            // A JSON line with no "event" is treated as terminal so a
+            // confused peer can't hang us forever.
+            let terminal = event
+                .map(|e| TERMINAL_EVENTS.contains(&e.as_str()))
+                .unwrap_or(true);
             lines.push(trimmed);
             if terminal {
                 return Ok(lines);
@@ -98,5 +121,21 @@ impl Client {
             })?);
         }
         Ok(events)
+    }
+}
+
+/// First ~120 chars of a bad wire line, newline-stripped — enough to
+/// recognize the payload without dumping a whole CSV table into an
+/// error message.
+fn snippet(line: &str) -> String {
+    let line = line.trim_end_matches('\n');
+    let mut end = line.len().min(120);
+    while !line.is_char_boundary(end) {
+        end -= 1;
+    }
+    if end < line.len() {
+        format!("{}…", &line[..end])
+    } else {
+        line.to_string()
     }
 }

@@ -21,19 +21,47 @@
 //! prior results bit-identically (`store::log`). Big grids **stream**:
 //! each novel point is written back as a `case` event the moment it
 //! completes, the deterministic CSV table follows as one `table` event,
-//! and the closing `done` event carries the request/store counters. A
-//! client that disconnects mid-grid cancels the request at the next
-//! point claim (the failed `case` write flips the request's
-//! cancellation flag); everything already simulated is committed, so a
-//! retry resumes where the dead request stopped.
+//! and the closing `done` event carries the request/store counters.
+//!
+//! # Failure model
+//!
+//! Serving millions of users means serving *misbehaving* users, so
+//! every failure path answers explicitly (`docs/serve.md` has the
+//! operator's view):
+//!
+//! * **Deadlines** — a server-wide default ([`Server::with_deadline_ms`])
+//!   or per-request `deadline_ms` field arms a watchdog that flips the
+//!   request's cancellation flag; workers observe it at their next
+//!   point claim, everything already simulated is committed, and the
+//!   client gets a structured `error` event naming the
+//!   `committed`/`requested` counts (a retry resumes from the store).
+//! * **Backpressure** — connections over [`Server::with_max_conns`]
+//!   are *rejected explicitly* with an `error` event carrying
+//!   `retry_after_ms`, never left hanging in an accept queue.
+//! * **Slow readers** — each connection writes through a bounded
+//!   outbound queue ([`Server::with_outbound_cap`]) drained by a
+//!   dedicated writer thread with a write timeout; a reader that
+//!   cannot keep up cancels *its own* request (same structured error),
+//!   not a shared worker.
+//! * **Disconnects** — a dead client's `case` write flips the same
+//!   cancellation flag; completed points stay committed, so a retried
+//!   request re-simulates only what is missing.
+//! * **Graceful shutdown** — the `shutdown` request stops the accept
+//!   loop; in-flight requests drain to the store before the process
+//!   exits.
+//!
+//! All of it is exercised deterministically through the [`crate::fault`]
+//! points compiled into this module (`serve.conn.drop`,
+//! `serve.case.drop`, `serve.write.stall`) — see `tests/chaos.rs`.
 
 pub mod client;
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::model;
 use crate::planner::{self, SweepRequest};
@@ -51,6 +79,16 @@ pub use client::Client;
 /// Response events that end a request (the client stops reading after
 /// one of these). `case` events are intermediate.
 pub const TERMINAL_EVENTS: &[&str] = &["done", "result", "error", "ok"];
+
+/// How long a blocked connection read waits before re-checking the
+/// shutdown flag (bounds shutdown latency for idle connections).
+const READ_POLL_MS: u64 = 100;
+
+/// Backoff hint sent with capacity rejections.
+const RETRY_AFTER_MS: u64 = 250;
+
+/// Injected per-line writer delay when `serve.write.stall` is armed.
+const WRITE_STALL_MS: u64 = 25;
 
 /// The ad-hoc grid table layout — identical to `dtsim study --grid`'s
 /// console/CSV output, so a served grid and a CLI run of the same flags
@@ -73,24 +111,97 @@ const GRID_COLUMNS: &[Column] = &[
     Column::MemGb,
 ];
 
+/// Per-connection configuration, frozen at accept time.
+#[derive(Clone, Copy)]
+struct ConnOpts {
+    threads: usize,
+    /// Default request deadline; 0 disables. A request's own
+    /// `deadline_ms` field overrides it.
+    deadline_ms: u64,
+    /// Outbound queue depth per connection (≥ 1).
+    outbound_cap: usize,
+    /// Socket write timeout — the hard bound on how long one stalled
+    /// reader can hold a writer thread.
+    write_timeout_ms: u64,
+}
+
 /// A bound `dtsim serve` instance: accepts connections and answers
 /// requests until a `shutdown` request arrives.
 pub struct Server {
     listener: TcpListener,
     store: Arc<dyn ResultStore>,
     threads: usize,
+    deadline_ms: u64,
+    max_conns: usize,
+    outbound_cap: usize,
+    write_timeout_ms: u64,
 }
 
 impl Server {
     /// Bind the listener. `addr` is `host:port`; port 0 picks a free
     /// port (tests do this — read it back via [`Self::local_addr`]).
+    /// An in-use address errors with a pointed hint instead of a bare
+    /// io error.
     pub fn bind(
         addr: &str,
         store: Arc<dyn ResultStore>,
         threads: usize,
-    ) -> std::io::Result<Server> {
-        let listener = TcpListener::bind(addr)?;
-        Ok(Server { listener, store, threads })
+    ) -> Result<Server, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::AddrInUse {
+                format!(
+                    "cannot listen on '{addr}': {e} — is another \
+                     `dtsim serve` already running on this address? \
+                     (its store lock, the PATH.lock file next to the \
+                     --store file, names the owning pid; stop that \
+                     server or pass a different --addr)"
+                )
+            } else {
+                format!(
+                    "cannot listen on '{addr}': {e} (expected \
+                     host:port, e.g. --addr 127.0.0.1:7071; port 0 \
+                     picks a free port)"
+                )
+            }
+        })?;
+        Ok(Server {
+            listener,
+            store,
+            threads,
+            deadline_ms: 0,
+            max_conns: 0,
+            outbound_cap: 1024,
+            write_timeout_ms: 30_000,
+        })
+    }
+
+    /// Default per-request deadline in milliseconds (0 = none). A
+    /// request's own `deadline_ms` field overrides this.
+    pub fn with_deadline_ms(mut self, ms: u64) -> Server {
+        self.deadline_ms = ms;
+        self
+    }
+
+    /// Maximum concurrent connections (0 = unlimited). Connections
+    /// over the cap are explicitly rejected with a `retry_after_ms`
+    /// error event, never silently queued.
+    pub fn with_max_conns(mut self, n: usize) -> Server {
+        self.max_conns = n;
+        self
+    }
+
+    /// Per-connection outbound queue depth (clamped to ≥ 1). When a
+    /// slow reader fills it, that request is cancelled — committed
+    /// work stays in the store.
+    pub fn with_outbound_cap(mut self, n: usize) -> Server {
+        self.outbound_cap = n;
+        self
+    }
+
+    /// Socket write timeout per connection.
+    pub fn with_write_timeout_ms(mut self, ms: u64) -> Server {
+        self.write_timeout_ms = ms;
+        self
     }
 
     pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
@@ -99,12 +210,19 @@ impl Server {
 
     /// Accept-and-serve until shutdown. One thread per connection;
     /// a `shutdown` request stops the accept loop (a self-connection
-    /// unblocks it) and the server drains open connections before
-    /// returning.
+    /// unblocks it) and the server drains open connections — in-flight
+    /// requests finish and commit to the store — before returning.
     pub fn run(self) -> std::io::Result<()> {
         let addr = self.listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-        let mut handles = Vec::new();
+        let active = Arc::new(AtomicUsize::new(0));
+        let opts = ConnOpts {
+            threads: self.threads,
+            deadline_ms: self.deadline_ms,
+            outbound_cap: self.outbound_cap.max(1),
+            write_timeout_ms: self.write_timeout_ms.max(1),
+        };
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for stream in self.listener.incoming() {
             if stop.load(Ordering::Relaxed) {
                 break;
@@ -113,11 +231,20 @@ impl Server {
                 Ok(s) => s,
                 Err(_) => continue,
             };
+            handles.retain(|h| !h.is_finished());
+            if self.max_conns > 0
+                && active.load(Ordering::Relaxed) >= self.max_conns
+            {
+                reject_over_capacity(stream, self.max_conns);
+                continue;
+            }
             let store = Arc::clone(&self.store);
             let stop = Arc::clone(&stop);
-            let threads = self.threads;
+            let active = Arc::clone(&active);
+            active.fetch_add(1, Ordering::Relaxed);
             handles.push(std::thread::spawn(move || {
-                handle_conn(stream, store, threads, &stop, addr);
+                handle_conn(stream, store, opts, &stop, addr);
+                active.fetch_sub(1, Ordering::Relaxed);
             }));
         }
         for h in handles {
@@ -127,36 +254,214 @@ impl Server {
     }
 }
 
-/// Serve one connection: a request per line, events written back on
-/// the same socket. Returns when the client disconnects or after a
-/// `shutdown` request.
+/// Tell an over-cap connection to back off — one `error` event with a
+/// `retry_after_ms` hint, then close. Never a silent hang.
+fn reject_over_capacity(mut stream: TcpStream, cap: usize) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(2000)));
+    let _ = write_json_line(
+        &mut stream,
+        &obj([
+            ("event", Json::Str("error".into())),
+            (
+                "error",
+                Json::Str(format!(
+                    "server at connection capacity ({cap} active): \
+                     retry after a backoff ({RETRY_AFTER_MS}ms \
+                     suggested, the retry_after_ms field), or raise \
+                     --max-conns"
+                )),
+            ),
+            ("retry_after_ms", unum(RETRY_AFTER_MS)),
+        ]),
+    );
+}
+
+fn write_json_line(
+    out: &mut TcpStream,
+    v: &Json,
+) -> std::io::Result<()> {
+    let mut line = v.dump();
+    line.push('\n');
+    out.write_all(line.as_bytes())
+}
+
+/// What happened to a non-blocking `case` enqueue.
+enum CaseSend {
+    Sent,
+    /// The bounded queue is full: the reader is not keeping up.
+    Full,
+    /// The connection is gone.
+    Dead,
+}
+
+/// The connection's outbound side: a bounded queue drained by a
+/// dedicated writer thread, so one stalled TCP peer blocks its writer
+/// thread (bounded further by the socket write timeout) instead of the
+/// worker pool.
+struct Outbound {
+    tx: mpsc::SyncSender<String>,
+    stream: TcpStream,
+    dead: Arc<AtomicBool>,
+}
+
+impl Outbound {
+    /// Queue one event line, blocking if the queue is momentarily
+    /// full (the writer drains it or dies trying — the socket write
+    /// timeout bounds the wait). Used for terminal events, which must
+    /// not be dropped while the connection lives.
+    fn send(&self, v: &Json) -> Result<(), ()> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(());
+        }
+        let mut line = v.dump();
+        line.push('\n');
+        self.tx.send(line).map_err(|_| ())
+    }
+
+    /// Queue one intermediate `case` event without blocking. `Full`
+    /// means the reader has fallen an entire queue behind.
+    fn send_case(&self, v: &Json) -> CaseSend {
+        if self.dead.load(Ordering::Relaxed) {
+            return CaseSend::Dead;
+        }
+        let mut line = v.dump();
+        line.push('\n');
+        match self.tx.try_send(line) {
+            Ok(()) => CaseSend::Sent,
+            Err(mpsc::TrySendError::Full(_)) => CaseSend::Full,
+            Err(mpsc::TrySendError::Disconnected(_)) => CaseSend::Dead,
+        }
+    }
+
+    /// Mark the connection dead and tear the socket down (both
+    /// directions, so a blocked peer read fails fast too).
+    fn kill(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// Drain the outbound queue onto the socket. On a write failure
+/// (closed or stalled-past-timeout peer) the connection is flagged
+/// dead and the queue keeps draining so senders never block on a
+/// corpse.
+fn writer_loop(
+    rx: mpsc::Receiver<String>,
+    mut out: TcpStream,
+    dead: Arc<AtomicBool>,
+) {
+    while let Ok(line) = rx.recv() {
+        if dead.load(Ordering::Relaxed) {
+            continue;
+        }
+        if crate::fault::point("serve.write.stall") {
+            std::thread::sleep(Duration::from_millis(WRITE_STALL_MS));
+        }
+        if out.write_all(line.as_bytes()).is_err() {
+            dead.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Serve one connection: a request per line, events written back
+/// through the bounded outbound queue. Returns when the client
+/// disconnects, the server is shutting down, or after a `shutdown`
+/// request.
 fn handle_conn(
     stream: TcpStream,
     store: Arc<dyn ResultStore>,
-    threads: usize,
+    opts: ConnOpts,
     stop: &AtomicBool,
     addr: SocketAddr,
 ) {
-    let reader = match stream.try_clone() {
-        Ok(s) => BufReader::new(s),
+    // Socket options are shared across the fd dups below, so set them
+    // before cloning: a short read timeout turns the blocking read
+    // loop into a poll against `stop`; the write timeout bounds a
+    // stalled reader's hold on the writer thread.
+    let _ = stream
+        .set_read_timeout(Some(Duration::from_millis(READ_POLL_MS)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(
+        opts.write_timeout_ms,
+    )));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
         Err(_) => return,
     };
-    let mut out = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        if serve_line(&line, &mut out, &store, threads) {
-            // Shutdown: stop the accept loop, then poke it awake.
-            stop.store(true, Ordering::Relaxed);
-            let _ = TcpStream::connect(addr);
+    let kill_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let dead = Arc::new(AtomicBool::new(false));
+    let (tx, rx) =
+        mpsc::sync_channel::<String>(opts.outbound_cap);
+    let writer = {
+        let dead = Arc::clone(&dead);
+        std::thread::spawn(move || writer_loop(rx, write_half, dead))
+    };
+    let out = Outbound { tx, stream: kill_half, dead };
+
+    let mut reader = BufReader::new(stream);
+    // The buffer persists across read timeouts: a request line that
+    // arrives in pieces is reassembled, not dropped.
+    let mut buf = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed)
+            || out.dead.load(Ordering::Relaxed)
+        {
             break;
         }
+        match reader.read_line(&mut buf) {
+            Ok(0) => {
+                // EOF. Leftover bytes mean the peer died mid-line
+                // (read timeouts keep partial lines in `buf`).
+                if !buf.trim().is_empty() {
+                    let _ = send_error(
+                        &out,
+                        "request line truncated (connection closed \
+                         before the newline)",
+                    );
+                }
+                break;
+            }
+            Ok(_) => {
+                let line = buf.trim().to_string();
+                buf.clear();
+                if line.is_empty() {
+                    continue;
+                }
+                if crate::fault::point("serve.conn.drop") {
+                    eprintln!(
+                        "fault serve.conn.drop: dropping connection"
+                    );
+                    out.kill();
+                    break;
+                }
+                if serve_line(&line, &out, &store, opts) {
+                    // Shutdown: stop the accept loop, then poke it
+                    // awake.
+                    stop.store(true, Ordering::Relaxed);
+                    let _ = TcpStream::connect(addr);
+                    break;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
     }
+    // Dropping `out` closes the queue; joining the writer flushes any
+    // queued terminal event (e.g. the shutdown `ok`) before the
+    // socket drops.
+    drop(out);
+    let _ = writer.join();
 }
 
 /// Parse and dispatch one request line; `true` means shutdown. All
@@ -165,9 +470,9 @@ fn handle_conn(
 /// the server) down.
 fn serve_line(
     line: &str,
-    out: &mut TcpStream,
+    out: &Outbound,
     store: &Arc<dyn ResultStore>,
-    threads: usize,
+    opts: ConnOpts,
 ) -> bool {
     let req = match Json::parse(line) {
         Ok(v) => v,
@@ -186,7 +491,7 @@ fn serve_line(
         return false;
     };
     if cmd == "shutdown" {
-        let _ = send(out, &obj([
+        let _ = out.send(&obj([
             ("event", Json::Str("ok".into())),
             ("cmd", Json::Str("shutdown".into())),
         ]));
@@ -194,7 +499,7 @@ fn serve_line(
     }
     let cmd = cmd.to_string();
     let outcome = catch_unwind(AssertUnwindSafe(|| {
-        dispatch(&cmd, &req, out, store, threads)
+        dispatch(&cmd, &req, out, store, opts)
     }));
     match outcome {
         Ok(Ok(())) => {}
@@ -216,9 +521,9 @@ fn serve_line(
 fn dispatch(
     cmd: &str,
     req: &Json,
-    out: &mut TcpStream,
+    out: &Outbound,
     store: &Arc<dyn ResultStore>,
-    threads: usize,
+    opts: ConnOpts,
 ) -> Result<(), String> {
     let args = args_from_request(req);
     match cmd {
@@ -239,23 +544,44 @@ fn dispatch(
         }
         "simulate" => {
             let cfg = grid::sim_config_from_args(&args)?;
-            let mut runner =
-                StudyRunner::with_store(threads, Arc::clone(store));
+            let mut runner = StudyRunner::with_store(
+                opts.threads,
+                Arc::clone(store),
+            );
             let case = runner.eval(&cfg);
             send_io(out, &case_event("result", &case))
         }
         "plan" => {
-            let req = sweep_request_from_args(&args)?;
-            let mut runner =
-                StudyRunner::with_store(threads, Arc::clone(store));
-            let best = planner::best_in(&req, &mut runner);
+            let sreq = sweep_request_from_args(&args)?;
+            let mut runner = StudyRunner::with_store(
+                opts.threads,
+                Arc::clone(store),
+            );
+            let cancel = Arc::new(AtomicBool::new(false));
+            let deadline_ms =
+                request_deadline_ms(&args, opts.deadline_ms);
+            let guard =
+                DeadlineGuard::arm(deadline_ms, Arc::clone(&cancel));
+            let best = planner::best_in_cancellable(
+                &sreq,
+                &mut runner,
+                &cancel,
+            );
             let s = runner.store_stats();
             let (evaluated, requested) = runner.stats();
             match best {
-                None => Err("no feasible configuration (every plan \
-                             overflows memory or fails feasibility)"
+                Err(_) => send_cancelled(
+                    out,
+                    &runner,
+                    guard.expired(),
+                    false,
+                    deadline_ms,
+                ),
+                Ok(None) => Err("no feasible configuration (every \
+                                 plan overflows memory or fails \
+                                 feasibility)"
                     .into()),
-                Some(o) => send_io(out, &obj([
+                Ok(Some(o)) => send_io(out, &obj([
                     ("event", Json::Str("result".into())),
                     ("plan", Json::Str(o.plan.to_string())),
                     ("mbs", unum(o.micro_batch as u64)),
@@ -275,25 +601,56 @@ fn dispatch(
         }
         "study-grid" => {
             let study = grid::study_from_args(&args)?;
-            let mut runner =
-                StudyRunner::with_store(threads, Arc::clone(store));
-            let cancel = AtomicBool::new(false);
+            let mut runner = StudyRunner::with_store(
+                opts.threads,
+                Arc::clone(store),
+            );
+            let cancel = Arc::new(AtomicBool::new(false));
+            let slow = AtomicBool::new(false);
+            let deadline_ms =
+                request_deadline_ms(&args, opts.deadline_ms);
+            let guard =
+                DeadlineGuard::arm(deadline_ms, Arc::clone(&cancel));
             let run = runner.run_streamed(&study, &cancel, |case| {
-                // A dead client fails this write; flipping the flag
-                // aborts the remaining grid at the next point claim.
-                if send(out, &case_event("case", case)).is_err() {
-                    cancel.store(true, Ordering::Relaxed);
+                if crate::fault::point("serve.case.drop") {
+                    eprintln!(
+                        "fault serve.case.drop: dropping connection \
+                         mid-stream"
+                    );
+                    out.kill();
+                }
+                // A dead or drowning client flips the flag; the
+                // remaining grid aborts at the next point claim.
+                match out.send_case(&case_event("case", case)) {
+                    CaseSend::Sent => {}
+                    CaseSend::Full => {
+                        slow.store(true, Ordering::Relaxed);
+                        cancel.store(true, Ordering::Relaxed);
+                    }
+                    CaseSend::Dead => {
+                        cancel.store(true, Ordering::Relaxed);
+                    }
                 }
             });
-            let mut res = run.map_err(|c| c.to_string())?;
-            res.sort_by_wps();
-            let top = args.usize_or("top", 0);
-            if top > 0 {
-                res.truncate(top);
+            match run {
+                Err(_) => send_cancelled(
+                    out,
+                    &runner,
+                    guard.expired(),
+                    slow.load(Ordering::Relaxed),
+                    deadline_ms,
+                ),
+                Ok(mut res) => {
+                    res.sort_by_wps();
+                    let top = args.usize_or("top", 0);
+                    if top > 0 {
+                        res.truncate(top);
+                    }
+                    let table = res.table(GRID_COLUMNS);
+                    send_table(out, &table)?;
+                    send_done(out, &runner)
+                }
             }
-            let table = res.table(GRID_COLUMNS);
-            send_table(out, &table)?;
-            send_done(out, &runner)
         }
         "scenario" => {
             let name = args
@@ -309,8 +666,10 @@ fn dispatch(
                     reg.names().join(", ")
                 )
             })?;
-            let mut runner =
-                StudyRunner::with_store(threads, Arc::clone(store));
+            let mut runner = StudyRunner::with_store(
+                opts.threads,
+                Arc::clone(store),
+            );
             let tables = scenario
                 .tables(&mut runner)
                 .map_err(|e| format!("{e:#}"))?;
@@ -324,6 +683,117 @@ fn dispatch(
              simulate, plan, study-grid, scenario, shutdown)"
         )),
     }
+}
+
+/// The effective deadline for one request: its own `deadline-ms` /
+/// `deadline_ms` field, else the server default. A malformed value
+/// panics with a pointed message (converted to an `error` event by
+/// the dispatch `catch_unwind`, like every other flag parse).
+fn request_deadline_ms(args: &Args, default_ms: u64) -> u64 {
+    let raw =
+        args.get("deadline-ms").or_else(|| args.get("deadline_ms"));
+    match raw {
+        None => default_ms,
+        Some(v) => v.parse::<u64>().unwrap_or_else(|_| {
+            panic!(
+                "--deadline-ms: invalid deadline '{v}' (expected \
+                 whole milliseconds, e.g. --deadline-ms 5000, or 0 \
+                 for no deadline)"
+            )
+        }),
+    }
+}
+
+/// A request deadline: a watchdog thread that flips `cancel` when the
+/// clock runs out, reliably reaped on drop (no sleeping threads
+/// outliving their request). `ms == 0` arms nothing.
+struct DeadlineGuard {
+    state: Arc<(Mutex<bool>, Condvar)>,
+    expired: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DeadlineGuard {
+    fn arm(ms: u64, cancel: Arc<AtomicBool>) -> DeadlineGuard {
+        let state = Arc::new((Mutex::new(false), Condvar::new()));
+        let expired = Arc::new(AtomicBool::new(false));
+        if ms == 0 {
+            return DeadlineGuard { state, expired, handle: None };
+        }
+        let handle = {
+            let state = Arc::clone(&state);
+            let expired = Arc::clone(&expired);
+            std::thread::spawn(move || {
+                let (done, cv) = &*state;
+                let deadline =
+                    Instant::now() + Duration::from_millis(ms);
+                let mut finished =
+                    done.lock().unwrap_or_else(|e| e.into_inner());
+                while !*finished {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        expired.store(true, Ordering::Relaxed);
+                        cancel.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                    let (guard, _) = cv
+                        .wait_timeout(finished, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner());
+                    finished = guard;
+                }
+            })
+        };
+        DeadlineGuard { state, expired, handle: Some(handle) }
+    }
+
+    fn expired(&self) -> bool {
+        self.expired.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for DeadlineGuard {
+    fn drop(&mut self) {
+        {
+            let (done, cv) = &*self.state;
+            *done.lock().unwrap_or_else(|e| e.into_inner()) = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The structured answer to a cancelled request: *why* it stopped and
+/// exactly how much of it is already durable, so a client knows a
+/// retry resumes rather than restarts.
+fn send_cancelled(
+    out: &Outbound,
+    runner: &StudyRunner,
+    expired: bool,
+    slow: bool,
+    deadline_ms: u64,
+) -> Result<(), String> {
+    let (evaluated, requested) = runner.stats();
+    let reason = if expired {
+        format!("deadline exceeded after {deadline_ms}ms")
+    } else if slow {
+        "outbound queue overflowed (reader not keeping up)".to_string()
+    } else {
+        "request cancelled (client disconnected)".to_string()
+    };
+    let msg = format!(
+        "{reason}: {evaluated} newly simulated points committed to \
+         the store ({requested} requested) — a retried request \
+         resumes from the store and re-simulates only what is missing"
+    );
+    send_io(out, &obj([
+        ("event", Json::Str("error".into())),
+        ("error", Json::Str(msg)),
+        ("committed", unum(evaluated as u64)),
+        ("requested", unum(requested as u64)),
+        ("deadline_ms", unum(deadline_ms)),
+    ]))
 }
 
 /// A request object's non-`cmd` keys become CLI flag pairs: strings
@@ -401,7 +871,7 @@ fn case_event(event: &'static str, c: &CaseResult) -> Json {
 /// One `table` event: the rendered result as a deterministic CSV
 /// string ([`Table::csv_string`]) — the payload the cold-vs-warm
 /// byte-identity contract is stated over.
-fn send_table(out: &mut TcpStream, t: &Table) -> Result<(), String> {
+fn send_table(out: &Outbound, t: &Table) -> Result<(), String> {
     send_io(out, &obj([
         ("event", Json::Str("table".into())),
         ("name", Json::Str(t.name.clone())),
@@ -413,7 +883,7 @@ fn send_table(out: &mut TcpStream, t: &Table) -> Result<(), String> {
 /// The closing `done` event: per-request work counters plus the
 /// store-lifetime hit/miss/size counters.
 fn send_done(
-    out: &mut TcpStream,
+    out: &Outbound,
     runner: &StudyRunner,
 ) -> Result<(), String> {
     let (evaluated, requested) = runner.stats();
@@ -429,18 +899,14 @@ fn send_done(
     ]))
 }
 
-fn send(out: &mut TcpStream, v: &Json) -> std::io::Result<()> {
-    let mut line = v.dump();
-    line.push('\n');
-    out.write_all(line.as_bytes())
+fn send_io(out: &Outbound, v: &Json) -> Result<(), String> {
+    out.send(v).map_err(|_| {
+        "client write failed (connection closed or stalled)".to_string()
+    })
 }
 
-fn send_io(out: &mut TcpStream, v: &Json) -> Result<(), String> {
-    send(out, v).map_err(|e| format!("client write failed: {e}"))
-}
-
-fn send_error(out: &mut TcpStream, msg: &str) -> std::io::Result<()> {
-    send(out, &obj([
+fn send_error(out: &Outbound, msg: &str) -> Result<(), ()> {
+    out.send(&obj([
         ("event", Json::Str("error".into())),
         ("error", Json::Str(msg.into())),
     ]))
@@ -503,6 +969,15 @@ mod tests {
             .expect("bad flag");
         assert_eq!(event_of(&lines[0]), "error");
         assert!(lines[0].contains("nodes"), "{}", lines[0]);
+        // So is a malformed per-request deadline — and the message
+        // names the flag.
+        let lines = c
+            .request_raw(
+                r#"{"cmd":"study-grid","deadline-ms":"soon"}"#,
+            )
+            .expect("bad deadline");
+        assert_eq!(event_of(&lines[0]), "error");
+        assert!(lines[0].contains("deadline-ms"), "{}", lines[0]);
 
         let lines =
             c.request_raw(r#"{"cmd":"shutdown"}"#).expect("shutdown");
@@ -563,6 +1038,64 @@ mod tests {
     }
 
     #[test]
+    fn over_capacity_connections_get_an_explicit_reject() {
+        let store: Arc<dyn ResultStore> = Arc::new(MemStore::new());
+        let server = Server::bind("127.0.0.1:0", store, 1)
+            .expect("bind")
+            .with_max_conns(1);
+        let addr = server.local_addr().expect("addr");
+        let handle = std::thread::spawn(move || {
+            server.run().expect("serve");
+        });
+
+        let mut c1 =
+            Client::connect(&addr.to_string()).expect("connect");
+        let lines = c1.request_raw(r#"{"cmd":"ping"}"#).expect("ping");
+        assert_eq!(event_of(&lines[0]), "ok");
+
+        // A second connection is told to back off — one error event
+        // with a retry_after_ms hint, then the socket closes. Never a
+        // silent hang.
+        let mut rejected =
+            BufReader::new(TcpStream::connect(addr).expect("tcp"));
+        let mut line = String::new();
+        rejected.read_line(&mut line).expect("reject line");
+        let v = Json::parse(&line).expect("reject line is json");
+        assert_eq!(
+            v.get("event").and_then(|e| e.as_str()),
+            Some("error")
+        );
+        assert!(
+            v.get("retry_after_ms")
+                .and_then(|r| r.as_f64())
+                .unwrap()
+                > 0.0,
+            "{line}"
+        );
+        assert!(line.contains("max-conns"), "{line}");
+
+        // Freeing the slot admits new connections again (poll: the
+        // server decrements its count asynchronously).
+        drop(c1);
+        let mut admitted = false;
+        for _ in 0..200 {
+            std::thread::sleep(Duration::from_millis(10));
+            if let Ok(mut c) = Client::connect(&addr.to_string()) {
+                if let Ok(lines) =
+                    c.request_raw(r#"{"cmd":"shutdown"}"#)
+                {
+                    if event_of(&lines[0]) == "ok" {
+                        admitted = true;
+                        break;
+                    }
+                }
+            }
+        }
+        assert!(admitted, "a freed slot must admit new connections");
+        handle.join().expect("server exits cleanly");
+    }
+
+    #[test]
     fn request_args_match_cli_parsing() {
         let req = Json::parse(
             r#"{"cmd":"study-grid","nodes":2,"plans":"dp",
@@ -575,5 +1108,20 @@ mod tests {
         assert!(args.bool_or("json", false));
         assert_eq!(args.f64_or("cap", 0.0), 0.9);
         assert!(args.get("cmd").is_none(), "cmd is not a flag");
+    }
+
+    #[test]
+    fn deadline_resolution_prefers_the_request_field() {
+        let req = Json::parse(
+            r#"{"cmd":"study-grid","deadline_ms":250}"#,
+        )
+        .unwrap();
+        let args = args_from_request(&req);
+        assert_eq!(request_deadline_ms(&args, 5000), 250);
+        let none = args_from_request(
+            &Json::parse(r#"{"cmd":"study-grid"}"#).unwrap(),
+        );
+        assert_eq!(request_deadline_ms(&none, 5000), 5000);
+        assert_eq!(request_deadline_ms(&none, 0), 0);
     }
 }

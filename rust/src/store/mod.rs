@@ -11,7 +11,9 @@
 //!   process-lifetime concurrent hash map. The default for one-shot
 //!   CLI runs and `dtsim serve` without `--store`.
 //! * [`LogStore`] — an append-only, checksummed, crash-recoverable
-//!   on-disk log (see [`log`]) for `dtsim serve --store PATH`.
+//!   on-disk log (see [`log`]) for `dtsim serve --store PATH`, with
+//!   [`verify`]/[`compact`] maintenance passes (`dtsim store ...`) and
+//!   an advisory single-writer [`StoreLock`] (`PATH.lock`).
 //!
 //! Both count hits and misses ([`StoreStats`]), which `dtsim bench`
 //! and serve-mode `done` events surface as `store_hits` /
@@ -30,7 +32,9 @@ use std::sync::RwLock;
 use crate::study::{CaseResult, ConfigKey};
 
 pub use codec::DecodeError;
-pub use log::{LogStore, RecoveryReport};
+pub use log::{
+    compact, verify, CompactReport, LogStore, RecoveryReport, StoreLock,
+};
 
 /// Counters every store keeps. `bytes` is the store's resident size:
 /// the log-file length for [`LogStore`], an entry-size estimate for

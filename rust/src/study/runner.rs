@@ -533,6 +533,12 @@ impl StudyRunner {
                 if cancel.load(Ordering::Relaxed) {
                     return false;
                 }
+                if crate::fault::point("runner.worker.panic") {
+                    panic!(
+                        "injected fault runner.worker.panic \
+                         (at point claim {i})"
+                    );
+                }
                 on_case(i, evaluate_point(p, arena));
             }
             return true;
@@ -558,6 +564,12 @@ impl StudyRunner {
                     for i in start..end {
                         if cancel.load(Ordering::Relaxed) {
                             return;
+                        }
+                        if crate::fault::point("runner.worker.panic") {
+                            panic!(
+                                "injected fault runner.worker.panic \
+                                 (at point claim {i})"
+                            );
                         }
                         let case = evaluate_point(points[i], arena);
                         if tx.send((i, case)).is_err() {

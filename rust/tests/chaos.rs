@@ -1,0 +1,331 @@
+//! Chaos suite: the deterministic fault points of [`dtsim::fault`]
+//! armed against real servers and stores. Every test pins the PR's
+//! headline robustness contract — with faults firing, every *completed*
+//! request's `table` payload is byte-identical to a fault-free run, and
+//! an interrupted-then-retried grid re-simulates only what is missing.
+//!
+//! Fault state is process-global, so every test serializes on
+//! [`dtsim::fault::exclusive`] and clears armed faults before and after
+//! its fault window (integration tests in one file share a process;
+//! other test *files* run as separate processes and cannot interfere).
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use dtsim::model::LLAMA_7B;
+use dtsim::serve::{Client, Server};
+use dtsim::store::{LogStore, ResultStore};
+use dtsim::study::{CaseResult, PlanAxis, Study, StudyRunner};
+use dtsim::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dtsim_chaos");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let path = dir.join(name);
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn start_with(
+    path: &PathBuf,
+    threads: usize,
+    outbound_cap: Option<usize>,
+) -> (SocketAddr, JoinHandle<()>) {
+    let (store, _) = LogStore::open(path).expect("open store");
+    let store: Arc<dyn ResultStore> = Arc::new(store);
+    let mut server =
+        Server::bind("127.0.0.1:0", store, threads).expect("bind");
+    if let Some(cap) = outbound_cap {
+        server = server.with_outbound_cap(cap);
+    }
+    let addr = server.local_addr().expect("addr");
+    let handle = std::thread::spawn(move || {
+        server.run().expect("serve");
+    });
+    (addr, handle)
+}
+
+fn start(path: &PathBuf) -> (SocketAddr, JoinHandle<()>) {
+    start_with(path, 2, None)
+}
+
+fn event_of(line: &str) -> String {
+    Json::parse(line)
+        .expect("response lines are valid json")
+        .get("event")
+        .and_then(|e| e.as_str())
+        .expect("every response line has an event")
+        .to_string()
+}
+
+fn table_lines(lines: &[String]) -> Vec<String> {
+    lines
+        .iter()
+        .filter(|l| event_of(l) == "table")
+        .cloned()
+        .collect()
+}
+
+fn done_field(lines: &[String], key: &str) -> f64 {
+    let last = lines.last().expect("nonempty response");
+    assert_eq!(event_of(last), "done", "{last}");
+    Json::parse(last)
+        .unwrap()
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("done event lacks {key}: {last}"))
+}
+
+fn field_of(line: &str, key: &str) -> Json {
+    Json::parse(line)
+        .unwrap()
+        .get(key)
+        .unwrap_or_else(|| panic!("line lacks {key}: {line}"))
+        .clone()
+}
+
+const GRID: &str = r#"{"cmd":"study-grid","arch":"7b","nodes":"1","plans":"sweep","gbs":"32","mbs":"divisors"}"#;
+
+fn small_study() -> Study {
+    Study::builder("chaos")
+        .arch(LLAMA_7B)
+        .nodes([1])
+        .plans(PlanAxis::Sweep { with_cp: false })
+        .global_batches([32])
+        .micro_batch_divisors()
+        .memory_cap(0.94)
+        .build()
+}
+
+fn run_with(store: &Arc<dyn ResultStore>) -> (Vec<CaseResult>, usize) {
+    let mut runner = StudyRunner::with_store(1, Arc::clone(store));
+    let res = runner.run(&small_study());
+    (res.cases, runner.stats().0)
+}
+
+fn assert_bitwise(a: &[CaseResult], b: &[CaseResult]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.plan, y.plan);
+        assert_eq!(x.micro_batch, y.micro_batch);
+        assert_eq!(x.metrics.global_wps.to_bits(),
+                   y.metrics.global_wps.to_bits());
+        assert_eq!(x.metrics.iter_time.to_bits(),
+                   y.metrics.iter_time.to_bits());
+        assert_eq!(x.mem_per_gpu.to_bits(), y.mem_per_gpu.to_bits());
+    }
+}
+
+/// Clean reference run on its own store/server: the fault-free table
+/// payload and its `done` stats. Must run with no faults armed.
+fn clean_reference(name: &str) -> (Vec<String>, f64) {
+    let path = tmp(name);
+    let (addr, handle) = start(&path);
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+    let lines = c.request_raw(GRID).expect("clean grid");
+    let evaluated = done_field(&lines, "evaluated");
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("clean server exits");
+    (lines, evaluated)
+}
+
+/// Satellite: the crash-during-append story, told through the
+/// `store.append.torn` fault point instead of byte surgery. The torn
+/// final record is dropped on recovery, every committed point survives
+/// bitwise, and re-opening heals the file.
+#[test]
+fn torn_append_fault_recovers_to_the_committed_prefix() {
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+
+    // Fault-free reference: the grid's cases and append count.
+    let clean = tmp("torn-clean.dtstore");
+    let (store, _) = {
+        let (s, r) = LogStore::open(&clean).expect("open");
+        (Arc::new(s) as Arc<dyn ResultStore>, r)
+    };
+    let (cold_cases, cold_evaluated) = run_with(&store);
+    assert!(cold_evaluated > 3, "grid too small to mean anything");
+    drop(store);
+
+    // Same grid against a fresh store, tearing the final append
+    // mid-record — a crash inside the last write.
+    let torn = tmp("torn-fault.dtstore");
+    dtsim::fault::arm(&format!(
+        "store.append.torn:after={}",
+        cold_evaluated - 1
+    ))
+    .expect("arm");
+    let (store, _) = {
+        let (s, r) = LogStore::open(&torn).expect("open");
+        (Arc::new(s) as Arc<dyn ResultStore>, r)
+    };
+    let (fault_cases, _) = run_with(&store);
+    assert_eq!(dtsim::fault::fired("store.append.torn"), 1);
+    // The in-memory answer is unaffected by the torn append.
+    assert_bitwise(&cold_cases, &fault_cases);
+    drop(store);
+    dtsim::fault::clear();
+
+    // Read-only verify sees the damage without touching the file.
+    let before = std::fs::read(&torn).expect("read torn file");
+    let report = dtsim::store::verify(&torn).expect("verify");
+    assert_eq!(report.recovered, cold_evaluated - 1,
+               "exactly the torn record is lost");
+    assert!(report.truncated_bytes > 0, "{report:?}");
+    assert_eq!(std::fs::read(&torn).unwrap(), before,
+               "verify must never write");
+
+    // Reopen truncates the torn tail; only the torn-off point is
+    // re-simulated and the answers stay bitwise.
+    let (store, report) = {
+        let (s, r) = LogStore::open(&torn).expect("reopen");
+        (Arc::new(s) as Arc<dyn ResultStore>, r)
+    };
+    assert_eq!(report.recovered, cold_evaluated - 1);
+    assert!(report.truncated_bytes > 0);
+    let (resumed_cases, resumed_evaluated) = run_with(&store);
+    assert_eq!(resumed_evaluated, 1,
+               "only the torn-off point needs re-simulation");
+    assert_bitwise(&cold_cases, &resumed_cases);
+    drop(store);
+
+    let healed = dtsim::store::verify(&torn).expect("verify healed");
+    assert_eq!(healed.truncated_bytes, 0, "{healed:?}");
+    assert_eq!(healed.recovered, cold_evaluated);
+}
+
+/// `serve.conn.drop`: the server hangs up on the request line. The
+/// client surfaces a pointed transport error (not a hang, not a blank
+/// exit), and a retried request on a fresh connection completes with a
+/// byte-identical table.
+#[test]
+fn dropped_connection_errors_and_a_retry_completes_identically() {
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+    let (clean, _) = clean_reference("conn-drop-clean.dtstore");
+
+    let path = tmp("conn-drop.dtstore");
+    let (addr, handle) = start(&path);
+    dtsim::fault::arm("serve.conn.drop:after=0").expect("arm");
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+    let err = c.request_raw(GRID).expect_err("connection was dropped");
+    assert!(
+        matches!(
+            err.kind(),
+            std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::BrokenPipe
+        ),
+        "{err}"
+    );
+    assert_eq!(dtsim::fault::fired("serve.conn.drop"), 1);
+    dtsim::fault::clear();
+
+    let mut c = Client::connect(&addr.to_string()).expect("reconnect");
+    let after = c.request_raw(GRID).expect("retried grid");
+    assert_eq!(table_lines(&after), table_lines(&clean),
+               "retry must match the fault-free run byte-for-byte");
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits");
+}
+
+/// `serve.case.drop`: the connection dies mid-stream after two case
+/// events. Everything simulated before the drop is committed, so the
+/// retried request re-simulates strictly less and reports store hits —
+/// and still answers byte-identically.
+#[test]
+fn interrupted_grid_resumes_from_the_store() {
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+    let (clean, cold_evaluated) =
+        clean_reference("case-drop-clean.dtstore");
+
+    let path = tmp("case-drop.dtstore");
+    let (addr, handle) = start(&path);
+    dtsim::fault::arm("serve.case.drop:after=2").expect("arm");
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+    let _ = c.request_raw(GRID).expect_err("stream was cut mid-grid");
+    dtsim::fault::clear();
+
+    let mut c = Client::connect(&addr.to_string()).expect("reconnect");
+    let after = c.request_raw(GRID).expect("retried grid");
+    let evaluated = done_field(&after, "evaluated");
+    assert!(evaluated < cold_evaluated,
+            "retry must reuse committed points: {evaluated} vs \
+             {cold_evaluated}");
+    assert!(done_field(&after, "store_hits") > 0.0);
+    assert_eq!(table_lines(&after), table_lines(&clean),
+               "resumed grid must match the fault-free run");
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits");
+}
+
+/// `runner.worker.panic`: a panic inside the simulation loop comes back
+/// as a structured `error` event naming the injected fault — the
+/// connection survives, and the retried request completes.
+#[test]
+fn worker_panic_answers_with_a_structured_error() {
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+    let (clean, _) = clean_reference("panic-clean.dtstore");
+
+    // threads=1 takes the single-threaded runner path, where the
+    // panic payload (the fault name) survives to the error event;
+    // scoped worker threads re-panic with a generic message.
+    let path = tmp("panic.dtstore");
+    let (addr, handle) = start_with(&path, 1, None);
+    dtsim::fault::arm("runner.worker.panic:after=1").expect("arm");
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+    let lines = c.request_raw(GRID).expect("error event, not a hang");
+    let last = lines.last().unwrap();
+    assert_eq!(event_of(last), "error", "{last}");
+    let msg = field_of(last, "error");
+    let msg = msg.as_str().expect("error is a string");
+    assert!(msg.contains("injected fault runner.worker.panic"),
+            "{msg}");
+    dtsim::fault::clear();
+
+    let after = c.request_raw(GRID).expect("retried grid");
+    assert!(done_field(&after, "store_hits") > 0.0,
+            "the point committed before the panic must be reused");
+    assert_eq!(table_lines(&after), table_lines(&clean),
+               "retry must match the fault-free run");
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits");
+}
+
+/// `serve.write.stall` + a one-slot outbound queue: a reader that can't
+/// keep up overflows its own bounded queue and gets a structured error
+/// naming the committed/requested counts — it never stalls the server,
+/// and the retry resumes from the store.
+#[test]
+fn slow_reader_overflows_its_queue_and_resumes_on_retry() {
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+    let (clean, _) = clean_reference("stall-clean.dtstore");
+
+    let path = tmp("stall.dtstore");
+    let (addr, handle) = start_with(&path, 2, Some(1));
+    dtsim::fault::arm("serve.write.stall:prob=1:seed=1").expect("arm");
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+    let lines = c.request_raw(GRID).expect("error event, not a hang");
+    let last = lines.last().unwrap();
+    assert_eq!(event_of(last), "error", "{last}");
+    let msg = field_of(last, "error");
+    let msg = msg.as_str().expect("error is a string");
+    assert!(msg.contains("outbound queue"), "{msg}");
+    let committed = field_of(last, "committed").as_f64().unwrap();
+    let requested = field_of(last, "requested").as_f64().unwrap();
+    assert!(committed < requested, "{last}");
+    dtsim::fault::clear();
+
+    let after = c.request_raw(GRID).expect("retried grid");
+    assert_eq!(event_of(after.last().unwrap()), "done");
+    assert_eq!(table_lines(&after), table_lines(&clean),
+               "resumed grid must match the fault-free run");
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits");
+}

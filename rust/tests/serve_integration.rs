@@ -155,6 +155,57 @@ fn disconnecting_client_leaves_the_store_consistent() {
     clean_handle.join().expect("clean server exits cleanly");
 }
 
+const DEADLINE_GRID: &str = r#"{"cmd":"study-grid","arch":"7b","nodes":"1,2,4","plans":"sweep","gbs":"64","mbs":"divisors","deadline-ms":"1"}"#;
+const FULL_GRID: &str = r#"{"cmd":"study-grid","arch":"7b","nodes":"1,2,4","plans":"sweep","gbs":"64","mbs":"divisors"}"#;
+
+#[test]
+fn deadline_cancels_cleanly_and_a_retry_resumes_from_the_store() {
+    let path = tmp("deadline.dtstore");
+    let (addr, handle) = start(&path);
+    let mut c = Client::connect(&addr.to_string()).expect("connect");
+
+    // A 1 ms deadline on a grid that takes much longer: the server
+    // answers with a structured error naming the committed count —
+    // never a hang, never a dropped connection.
+    let cut = c.request_raw(DEADLINE_GRID).expect("deadline response");
+    let last = cut.last().unwrap();
+    assert_eq!(event_of(last), "error", "{last}");
+    let v = Json::parse(last).unwrap();
+    let msg = v.get("error").and_then(|e| e.as_str()).unwrap();
+    assert!(msg.contains("deadline"), "{msg}");
+    let committed =
+        v.get("committed").and_then(|x| x.as_f64()).unwrap();
+    let requested =
+        v.get("requested").and_then(|x| x.as_f64()).unwrap();
+    assert!(committed < requested, "{last}");
+
+    // Retry without the deadline on the same connection: whatever the
+    // cut-off request committed is never re-simulated.
+    let after = c.request_raw(FULL_GRID).expect("retried grid");
+    let evaluated = done_field(&after, "evaluated");
+    assert!(evaluated + committed <= requested,
+            "committed points must come from the store: \
+             {evaluated} + {committed} > {requested}");
+    if committed > 0.0 {
+        assert!(done_field(&after, "store_hits") > 0.0);
+    }
+
+    // And the resumed answer is byte-identical to a run that was
+    // never interrupted.
+    let clean_path = tmp("deadline-clean.dtstore");
+    let (clean_addr, clean_handle) = start(&clean_path);
+    let mut cc =
+        Client::connect(&clean_addr.to_string()).expect("connect");
+    let clean = cc.request_raw(FULL_GRID).expect("clean grid");
+    assert_eq!(table_lines(&after), table_lines(&clean),
+               "post-deadline answers must match a clean run");
+
+    let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
+    let _ = cc.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits cleanly");
+    clean_handle.join().expect("clean server exits cleanly");
+}
+
 #[test]
 fn plan_requests_ride_the_shared_store() {
     let path = tmp("plan.dtstore");

@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use dtsim::model::LLAMA_7B;
-use dtsim::store::{LogStore, ResultStore};
+use dtsim::store::{LogStore, ResultStore, StoreLock};
 use dtsim::study::{CaseResult, PlanAxis, Study, StudyRunner};
 
 fn tmp(name: &str) -> PathBuf {
@@ -179,4 +179,83 @@ fn foreign_files_are_refused_by_magic() {
         .expect("write junk");
     let err = LogStore::open(&path).expect_err("junk must refuse");
     assert!(err.contains("not a dtsim result store"), "{err}");
+}
+
+#[test]
+fn compact_drops_superseded_duplicates_and_garbage_bitwise() {
+    let path = tmp("compact.dtstore");
+    let (store, _) = open(&path);
+    let (cold_cases, cold_evaluated) = run_with(&store);
+    drop(store);
+
+    // Duplicate a middle record at the tail (a re-put of the same key:
+    // last occurrence wins on open) and append a few bytes of torn
+    // garbage after it — the two things compaction exists to drop.
+    let mut data = std::fs::read(&path).expect("read store file");
+    let spans = record_spans(&data);
+    let (start, len) = spans[spans.len() / 2];
+    let dup = data[start..start + len].to_vec();
+    data.extend_from_slice(&dup);
+    data.extend_from_slice(b"JUNK");
+    std::fs::write(&path, &data).expect("extend file");
+
+    // verify is read-only and sees both problems.
+    let before = dtsim::store::verify(&path).expect("verify");
+    assert_eq!(before.recovered, cold_evaluated + 1);
+    assert_eq!(before.truncated_bytes, 4);
+    assert_eq!(std::fs::read(&path).unwrap(), data,
+               "verify must never write");
+
+    let report = dtsim::store::compact(&path).expect("compact");
+    assert_eq!(report.dropped_superseded, 1,
+               "the earlier copy of the duplicated key: {report:?}");
+    assert_eq!(report.live, cold_evaluated);
+    assert_eq!(report.kept_stale, 0);
+    assert!(report.bytes_after < report.bytes_before, "{report:?}");
+    assert_eq!(report.dropped_bytes,
+               report.bytes_before - report.bytes_after);
+
+    // Compacted store: structurally clean, nothing re-simulated, and
+    // every answer bitwise-identical to the original run.
+    let clean = dtsim::store::verify(&path).expect("verify compacted");
+    assert_eq!(clean.recovered, cold_evaluated);
+    assert_eq!(clean.truncated_bytes, 0);
+    let (store, recovery) = open(&path);
+    assert_eq!(recovery.recovered, cold_evaluated);
+    let (warm_cases, warm_evaluated) = run_with(&store);
+    assert_eq!(warm_evaluated, 0,
+               "a compacted store must answer the whole grid");
+    assert_bitwise(&cold_cases, &warm_cases);
+}
+
+#[test]
+fn store_lock_excludes_second_writers_and_reclaims_stale_locks() {
+    let path = tmp("lock.dtstore");
+    let lock = StoreLock::acquire(&path).expect("first acquire");
+    let lock_path = lock.path().to_path_buf();
+    assert!(lock_path.exists());
+
+    // A second writer fails fast with a pointed error naming the lock
+    // file and the likely holder — never interleaved appends.
+    let err = StoreLock::acquire(&path).expect_err("second writer");
+    assert!(err.contains(".lock"), "{err}");
+    assert!(err.contains("dtsim serve"),
+            "error should name the likely holder: {err}");
+
+    drop(lock);
+    assert!(!lock_path.exists(), "drop must release the lock");
+    let lock = StoreLock::acquire(&path).expect("reacquire after drop");
+    drop(lock);
+
+    // A lock whose holder pid is gone is stale: reclaimed with a note,
+    // not a spurious failure. Liveness probing needs /proc — skip the
+    // stale half where the platform can't answer.
+    if std::path::Path::new("/proc").is_dir() {
+        std::fs::write(&lock_path, b"4294000000\n")
+            .expect("plant stale lock");
+        let lock =
+            StoreLock::acquire(&path).expect("stale lock reclaimed");
+        drop(lock);
+        assert!(!lock_path.exists());
+    }
 }
