@@ -84,6 +84,18 @@ const TREE_BASE: f64 = 0.70;
 const TREE_SLOPE: f64 = 0.035;
 // ---------------------------------------------------------------------------
 
+/// Per-rank inter-node bandwidth for a group: the node's InfiniBand
+/// shared by the group members on each node (the contention factor from
+/// the placement), derated by the catalog fabric's oversubscription and
+/// co-scheduled background load
+/// ([`FabricSpec::inter_node_bw`](crate::hardware::FabricSpec)). On the
+/// default dedicated fabric every derate is exactly 1.0, so this is
+/// bit-identical to the plain `ib_bw / ranks_per_node` share.
+fn inter_node_bw(cluster: &Cluster, place: &GroupPlacement) -> f64 {
+    cluster.node.hw_spec().fabric
+        .inter_node_bw(cluster.node.spec().ib_bw, place.ranks_per_node)
+}
+
 /// Effective per-rank ring bandwidth for a group placed on the cluster.
 /// Intra-node rings ride NVLink; once the ring spans nodes, every member
 /// on a node shares that node's InfiniBand for the inter-node hops.
@@ -92,7 +104,7 @@ fn ring_bandwidth(cluster: &Cluster, place: &GroupPlacement) -> f64 {
     if !place.crosses_nodes {
         gpu.nvlink_bw * LINK_EFF
     } else {
-        let ib_share = gpu.ib_bw / place.ranks_per_node as f64;
+        let ib_share = inter_node_bw(cluster, place);
         ib_share.min(gpu.nvlink_bw) * LINK_EFF
     }
 }
@@ -150,7 +162,7 @@ fn tree_allreduce(bytes: f64, cluster: &Cluster, place: &GroupPlacement)
     let n = place.size as f64;
     let gpu = cluster.node.spec();
     let link = if place.crosses_nodes {
-        (gpu.ib_bw / place.ranks_per_node as f64).min(gpu.nvlink_bw)
+        inter_node_bw(cluster, place).min(gpu.nvlink_bw)
     } else {
         gpu.nvlink_bw
     } * LINK_EFF;
@@ -203,7 +215,7 @@ pub fn collective_time(
         Collective::PointToPoint => {
             let gpu = cluster.node.spec();
             let (a, bw) = if place.crosses_nodes {
-                (ALPHA_IB, gpu.ib_bw / place.ranks_per_node as f64)
+                (ALPHA_IB, inter_node_bw(cluster, place))
             } else {
                 (ALPHA_NVLINK, gpu.nvlink_bw)
             };
@@ -471,6 +483,68 @@ mod tests {
         let ca = Cluster::new(Generation::A100, 16);
         cache.get(Collective::AllGather, GB, &ca, &p);
         assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn fabric_derates_only_inter_node_bandwidth() {
+        use crate::hardware::{Catalog, FabricKind, FabricSpec};
+        let ft = |oversub, background_load| FabricSpec {
+            kind: FabricKind::FatTree, oversub, background_load,
+        };
+        let shared =
+            Catalog::with_fabric(Generation::H100, ft(2.0, 0.0)).unwrap();
+        let c_ded = h100(16);
+        let c_shared = Cluster::new(shared, 16);
+        let p = full_cluster_group(&c_ded);
+        // 2:1 oversubscription halves the bandwidth-bound portion of a
+        // large inter-node transfer, so time roughly doubles.
+        let bytes = 8.0 * GB;
+        let t_ded =
+            collective_time(Collective::AllGather, bytes, &c_ded, &p);
+        let t_shared = collective_time(
+            Collective::AllGather, bytes, &c_shared,
+            &full_cluster_group(&c_shared));
+        let ratio = t_shared.time_s / t_ded.time_s;
+        assert!(ratio > 1.8 && ratio < 2.1, "{ratio}");
+        // Intra-node groups ride NVLink and never see the fabric.
+        let c1_ded = Cluster::new(Generation::H100, 1);
+        let c1_shared = Cluster::new(shared, 1);
+        let p1 = GroupPlacement::strided(&c1_ded, 8, 1);
+        let a = collective_time(Collective::AllReduce, GB, &c1_ded, &p1);
+        let b = collective_time(Collective::AllReduce, GB, &c1_shared, &p1);
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        // Background load stacks multiplicatively on the oversub.
+        let busy =
+            Catalog::with_fabric(Generation::H100, ft(2.0, 0.5)).unwrap();
+        let c_busy = Cluster::new(busy, 16);
+        let t_busy = collective_time(
+            Collective::AllGather, bytes, &c_busy,
+            &full_cluster_group(&c_busy));
+        assert!(t_busy.time_s > t_shared.time_s * 1.5);
+        // P2P and tree AllReduce see the derate too.
+        let c2_ded = h100(2);
+        let c2_shared = Cluster::new(shared, 2);
+        let p2 = GroupPlacement::strided(&c2_ded, 2, 8);
+        let p2s = GroupPlacement::strided(&c2_shared, 2, 8);
+        let p2p_d =
+            collective_time(Collective::PointToPoint, GB, &c2_ded, &p2);
+        let p2p_s =
+            collective_time(Collective::PointToPoint, GB, &c2_shared, &p2s);
+        assert!(p2p_s.time_s > p2p_d.time_s * 1.5);
+    }
+
+    #[test]
+    fn dedicated_fabric_is_bit_identical_to_raw_share() {
+        // The DEDICATED derates are exact 1.0 multiplies: the fabric
+        // layer cannot move a single bit of the paper-pinned figures.
+        use crate::hardware::FabricSpec;
+        let c = h100(16);
+        let p = full_cluster_group(&c);
+        let raw = c.node.spec().ib_bw / p.ranks_per_node as f64;
+        let derated = FabricSpec::DEDICATED
+            .inter_node_bw(c.node.spec().ib_bw, p.ranks_per_node);
+        assert_eq!(raw.to_bits(), derated.to_bits());
+        assert_eq!(inter_node_bw(&c, &p).to_bits(), raw.to_bits());
     }
 
     #[test]

@@ -46,6 +46,7 @@ impl RunConfig {
             sharding: self.sharding,
             schedule: self.schedule,
             prefetch: true,
+            jitter: crate::sim::Jitter::OFF,
         }
     }
 
@@ -232,6 +233,35 @@ pub fn parse_schedule(s: &str) -> Result<Schedule, String> {
             Err(format!(
                 "unknown schedule '{other}' (expected one of: 1f1b, \
                  interleaved:V)"))
+        }
+    }
+}
+
+/// Parse a jitter distribution spec ("off", "lognormal:S" with sigma
+/// > 0, "pareto:A" with alpha > 1) — the single parser behind the CLI
+/// `--jitter` flag and serve grid requests; the inverse is
+/// `JitterDist`'s `Display` impl. Range checks live in
+/// `Jitter::validate`, which every consumer runs at build time.
+pub fn parse_jitter(s: &str) -> Result<crate::sim::JitterDist, String> {
+    use crate::sim::JitterDist;
+    match s {
+        "off" => Ok(JitterDist::Off),
+        other => {
+            if let Some(sigma) = other.strip_prefix("lognormal:") {
+                let sigma: f64 = sigma.parse().map_err(|_| format!(
+                    "bad lognormal sigma '{sigma}' (expected \
+                     lognormal:S with a number S > 0)"))?;
+                return Ok(JitterDist::Lognormal { sigma });
+            }
+            if let Some(alpha) = other.strip_prefix("pareto:") {
+                let alpha: f64 = alpha.parse().map_err(|_| format!(
+                    "bad pareto alpha '{alpha}' (expected pareto:A \
+                     with a number A > 1)"))?;
+                return Ok(JitterDist::Pareto { alpha });
+            }
+            Err(format!(
+                "unknown jitter '{other}' (expected one of: off, \
+                 lognormal:S, pareto:A)"))
         }
     }
 }
@@ -427,6 +457,24 @@ micro = 2
         let bad = EXAMPLE.replace(
             "tp = 2", "tp = 2\nschedule = \"interleaved:2\"");
         assert!(RunConfig::from_toml_str(&bad).is_err());
+    }
+
+    #[test]
+    fn jitter_specs_parse_and_roundtrip_display() {
+        use crate::sim::JitterDist;
+        assert_eq!(parse_jitter("off").unwrap(), JitterDist::Off);
+        assert_eq!(parse_jitter("lognormal:0.3").unwrap(),
+                   JitterDist::Lognormal { sigma: 0.3 });
+        assert_eq!(parse_jitter("pareto:1.5").unwrap(),
+                   JitterDist::Pareto { alpha: 1.5 });
+        // Display is the inverse parse (the CLI echo contract).
+        for spec in ["off", "lognormal:0.3", "pareto:1.5"] {
+            assert_eq!(parse_jitter(spec).unwrap().to_string(), spec);
+        }
+        let err = parse_jitter("gauss").unwrap_err();
+        assert!(err.contains("off, lognormal:S, pareto:A"), "{err}");
+        assert!(parse_jitter("lognormal:x").is_err());
+        assert!(parse_jitter("pareto:").is_err());
     }
 
     #[test]

@@ -43,7 +43,7 @@ use std::sync::{Mutex, OnceLock};
 
 use crate::config::toml;
 
-use super::specs::{self, GpuSpec, NodeSpec};
+use super::specs::{self, FabricSpec, GpuSpec, NodeSpec};
 
 /// Interned handle to a catalog [`HwSpec`]. `Copy + Hash + Eq`, so it
 /// keys caches by value exactly like the old `Generation` enum did;
@@ -133,6 +133,13 @@ pub struct HwSpec {
     /// nominal. `None` uses the default DVFS curve
     /// `pw(f) = 0.3 + 0.7·f³` (leakage floor + cubic dynamic power).
     pub freq_curve: Option<Vec<(f64, f64)>>,
+    /// Inter-node fabric model (topology class, oversubscription,
+    /// co-scheduled background load). [`FabricSpec::DEDICATED`] — the
+    /// default for every built-in — multiplies inter-node bandwidth by
+    /// exactly 1.0 and so is bit-identical to the pre-fabric cost
+    /// model. Derive shared-cluster variants with
+    /// [`Catalog::with_fabric`]. Semantics: `docs/network.md`.
+    pub fabric: FabricSpec,
     /// True for specs derived by [`Catalog::with_freq_cap`]; derived
     /// entries are excluded from [`Catalog::primary_ids`] so design
     /// -space scenarios don't re-enumerate their own byproducts.
@@ -149,6 +156,7 @@ impl PartialEq for HwSpec {
             && self.gpus_per_node == other.gpus_per_node
             && self.gpu == other.gpu
             && self.freq_curve == other.freq_curve
+            && self.fabric == other.fabric
     }
 }
 
@@ -209,6 +217,22 @@ impl HwSpec {
             s.push_str(&format!(
                 "freq_curve = \"{}\"\n", joined.join(",")));
         }
+        // Fabric keys only when non-default, so the built-ins' TOML
+        // (and hence spec hashes / golden round-trip bytes) are
+        // unchanged from the pre-fabric catalog.
+        if !self.fabric.is_dedicated() {
+            s.push_str(&format!(
+                "fabric = \"{}\"\n", self.fabric.kind));
+            if self.fabric.oversub != 1.0 {
+                s.push_str(&format!(
+                    "fabric_oversub = {:?}\n", self.fabric.oversub));
+            }
+            if self.fabric.background_load != 0.0 {
+                s.push_str(&format!(
+                    "fabric_background_load = {:?}\n",
+                    self.fabric.background_load));
+            }
+        }
         s
     }
 }
@@ -218,7 +242,8 @@ impl HwSpec {
 const KNOWN_KEYS: &[&str] = &[
     "gpus_per_node", "peak_flops", "hbm_bw", "nvlink_bw", "ib_bw",
     "mem_bytes", "kernel_base_mfu", "launch_overhead_s", "p_base",
-    "p_comp", "p_comm", "tdp", "freq_curve",
+    "p_comp", "p_comm", "tdp", "freq_curve", "fabric",
+    "fabric_oversub", "fabric_background_load",
 ];
 
 /// Catalog slots per lazily-allocated chunk; `CHUNKS × CHUNK` covers
@@ -300,6 +325,7 @@ fn slab() -> &'static Slab {
                 gpus_per_node,
                 gpu: gpu.clone(),
                 freq_curve: None,
+                fabric: FabricSpec::DEDICATED,
                 derived: false,
             });
         }
@@ -496,6 +522,34 @@ impl Catalog {
             gpus_per_node: b.gpus_per_node,
             gpu,
             freq_curve: b.freq_curve.clone(),
+            fabric: b.fabric,
+            derived: true,
+        })
+    }
+
+    /// Derive and intern a variant of `base` on a different inter-node
+    /// fabric, named `"<base>~<suffix>"` (`H100~ft2.0`,
+    /// `H100~ft4.0+bg0.2` — suffix from [`FabricSpec::suffix`], floats
+    /// in shortest round-trip form so distinct fabrics never collide).
+    /// Datasheet rates and power are untouched; only the fabric model
+    /// the collective layer consults changes. Deriving the base's own
+    /// fabric returns `base` itself; re-deriving interns to the same
+    /// id. The mechanism behind the `contention` scenario.
+    pub fn with_fabric(base: HwId, fabric: FabricSpec)
+        -> Result<HwId, String>
+    {
+        fabric.validate()?;
+        let b = base.spec();
+        if fabric == b.fabric {
+            return Ok(base);
+        }
+        let name = format!("{}~{}", b.name, fabric.suffix());
+        Self::register(HwSpec {
+            name: name.clone(),
+            gpus_per_node: b.gpus_per_node,
+            gpu: GpuSpec { name: leaked_name(&name), ..b.gpu.clone() },
+            freq_curve: b.freq_curve.clone(),
+            fabric,
             derived: true,
         })
     }
@@ -533,6 +587,37 @@ fn spec_from_doc(doc: &toml::Document, section: &str)
                 "[{section}] freq_curve must be a \"f:p,f:p,…\" string"));
         }
     };
+    let fabric = match doc.get(section, "fabric") {
+        None => {
+            // The modifier keys only make sense with an explicit kind.
+            for key in ["fabric_oversub", "fabric_background_load"] {
+                if doc.get(section, key).is_some() {
+                    return Err(format!(
+                        "[{section}] {key} requires a 'fabric' key \
+                         (rail-optimized or fat-tree)"));
+                }
+            }
+            FabricSpec::DEDICATED
+        }
+        Some(toml::Value::Str(s)) => {
+            let kind = specs::FabricKind::parse(s)
+                .map_err(|e| format!("[{section}] {e}"))?;
+            FabricSpec {
+                kind,
+                oversub: doc
+                    .get_float(section, "fabric_oversub")
+                    .unwrap_or(1.0),
+                background_load: doc
+                    .get_float(section, "fabric_background_load")
+                    .unwrap_or(0.0),
+            }
+        }
+        Some(_) => {
+            return Err(format!(
+                "[{section}] fabric must be a \"rail-optimized\" or \
+                 \"fat-tree\" string"));
+        }
+    };
     let gpu = GpuSpec {
         name: leaked_name(section),
         peak_flops: num("peak_flops")?,
@@ -552,6 +637,7 @@ fn spec_from_doc(doc: &toml::Document, section: &str)
         gpus_per_node: gpus_per_node as usize,
         gpu,
         freq_curve,
+        fabric,
         derived: false,
     })
 }
@@ -637,6 +723,9 @@ fn validate(spec: &HwSpec) -> Result<(), String> {
             "{name}: kernel_base_mfu must be in (0, 1], got {}",
             spec.gpu.kernel_base_mfu));
     }
+    spec.fabric
+        .validate()
+        .map_err(|e| format!("{name}: {e}"))?;
     if let Some(knots) = &spec.freq_curve {
         if knots.is_empty() {
             return Err(format!("{name}: freq_curve has no knots"));
@@ -703,6 +792,7 @@ mod tests {
             gpu: GpuSpec { name: "unit-intern", ib_bw: ib,
                            ..specs::H100.clone() },
             freq_curve: None,
+            fabric: FabricSpec::DEDICATED,
             derived: false,
         };
         let a = Catalog::register(mk(400e9)).unwrap();
@@ -777,6 +867,7 @@ tdp = 700.0
             gpus_per_node: 8,
             gpu: GpuSpec { name: "unit-curve", ..specs::H100.clone() },
             freq_curve: Some(knots),
+            fabric: FabricSpec::DEDICATED,
             derived: false,
         };
         assert_eq!(spec.power_scale(1.0), 1.0);
@@ -850,6 +941,89 @@ tdp = 700.0
     }
 
     #[test]
+    fn with_fabric_derives_shared_cluster_variants() {
+        use specs::FabricKind;
+        let ft = FabricSpec {
+            kind: FabricKind::FatTree,
+            oversub: 2.0,
+            background_load: 0.0,
+        };
+        let id = Catalog::with_fabric(HwId::H100, ft).unwrap();
+        assert_ne!(id, HwId::H100);
+        let s = id.spec();
+        assert_eq!(s.name, "H100~ft2.0");
+        assert!(s.derived);
+        assert_eq!(s.fabric, ft);
+        // Datasheet rates untouched: only the fabric model changes.
+        assert_eq!(s.gpu.ib_bw, HwId::H100.gpu().ib_bw);
+        assert_eq!(s.gpu.peak_flops, HwId::H100.gpu().peak_flops);
+        // Interning: same fabric → same id; base fabric → base itself.
+        assert_eq!(Catalog::with_fabric(HwId::H100, ft).unwrap(), id);
+        assert_eq!(
+            Catalog::with_fabric(HwId::H100, FabricSpec::DEDICATED)
+                .unwrap(),
+            HwId::H100);
+        // Background load composes into the name.
+        let busy = FabricSpec { background_load: 0.25, ..ft };
+        let busy_id = Catalog::with_fabric(HwId::H100, busy).unwrap();
+        assert_eq!(busy_id.spec().name, "H100~ft2.0+bg0.25");
+        assert_ne!(busy_id, id);
+        // Derived fabric variants stay out of primary_ids, and their
+        // TOML round-trips to the same interned id.
+        assert!(!Catalog::primary_ids().contains(&id));
+        assert_eq!(Catalog::load_str(&s.to_toml()).unwrap(), vec![id]);
+        // Validation: rail fabrics are non-blocking, bg < 1.
+        let bad = FabricSpec {
+            kind: FabricKind::RailOptimized,
+            oversub: 2.0,
+            background_load: 0.0,
+        };
+        assert!(Catalog::with_fabric(HwId::H100, bad).is_err());
+        let bad_bg = FabricSpec { background_load: 1.0, ..ft };
+        assert!(Catalog::with_fabric(HwId::H100, bad_bg).is_err());
+        let bad_sub = FabricSpec { oversub: 0.5, ..ft };
+        assert!(Catalog::with_fabric(HwId::H100, bad_sub).is_err());
+    }
+
+    #[test]
+    fn fabric_toml_keys_parse_and_reject_orphans() {
+        let body = "\
+gpus_per_node = 8
+peak_flops = 990e12
+hbm_bw = 3.35e12
+nvlink_bw = 900e9
+ib_bw = 400e9
+mem_bytes = 80e9
+kernel_base_mfu = 0.52
+launch_overhead_s = 5e-6
+p_base = 561.0
+p_comp = 89.0
+p_comm = 40.0
+tdp = 700.0
+";
+        let text = format!(
+            "[unit-shared]\n{body}fabric = \"fat-tree\"\n\
+             fabric_oversub = 4.0\nfabric_background_load = 0.2\n");
+        let ids = Catalog::load_str(&text).unwrap();
+        let f = ids[0].spec().fabric;
+        assert_eq!(f.kind, specs::FabricKind::FatTree);
+        assert_eq!(f.oversub, 4.0);
+        assert_eq!(f.background_load, 0.2);
+        // Round-trip reproduces the fabric bit-for-bit.
+        assert_eq!(
+            Catalog::load_str(&ids[0].spec().to_toml()).unwrap(), ids);
+        // Modifier keys without a 'fabric' kind are a typo.
+        let orphan =
+            format!("[unit-orphan]\n{body}fabric_oversub = 2.0\n");
+        let err = Catalog::load_str(&orphan).unwrap_err();
+        assert!(err.contains("requires a 'fabric' key"), "{err}");
+        // Unknown fabric kinds are rejected with the accepted forms.
+        let bad = format!("[unit-badfab]\n{body}fabric = \"torus\"\n");
+        let err = Catalog::load_str(&bad).unwrap_err();
+        assert!(err.contains("unknown fabric 'torus'"), "{err}");
+    }
+
+    #[test]
     fn duplicate_catalog_sections_rejected() {
         let one = "\
 [unit-dup]
@@ -885,6 +1059,7 @@ tdp = 700.0
             gpu: GpuSpec { name: "unit-empty-curve",
                            ..specs::H100.clone() },
             freq_curve: Some(Vec::new()),
+            fabric: FabricSpec::DEDICATED,
             derived: false,
         };
         // Falls back to the default curve instead of indexing [0]...
@@ -898,6 +1073,7 @@ tdp = 700.0
             gpus_per_node: 8,
             gpu: GpuSpec { name: "unit#1", ..specs::H100.clone() },
             freq_curve: None,
+            fabric: FabricSpec::DEDICATED,
             derived: false,
         };
         assert!(Catalog::register(hashed).is_err());
@@ -910,6 +1086,7 @@ tdp = 700.0
             gpus_per_node: 8,
             gpu: GpuSpec { name: "unit-valid", ..specs::H100.clone() },
             freq_curve: None,
+            fabric: FabricSpec::DEDICATED,
             derived: false,
         };
         let bad_name = HwSpec { name: "two words".into(),

@@ -7,6 +7,126 @@
 
 use super::catalog::{HwId, HwSpec};
 
+/// Inter-node fabric topology class (docs/network.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricKind {
+    /// Rail-optimized (the paper's dedicated clusters): each GPU's NIC
+    /// rides its own rail to a dedicated switch plane, so inter-node
+    /// flows from one node never converge on a shared uplink.
+    RailOptimized,
+    /// Folded-Clos / fat-tree: node flows share leaf→spine uplinks
+    /// provisioned at `1/oversub` of the access capacity.
+    FatTree,
+}
+
+impl std::fmt::Display for FabricKind {
+    /// Canonical spec string ("rail-optimized", "fat-tree") — the
+    /// inverse of [`FabricKind::parse`]; used by catalog TOML.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FabricKind::RailOptimized => write!(f, "rail-optimized"),
+            FabricKind::FatTree => write!(f, "fat-tree"),
+        }
+    }
+}
+
+impl FabricKind {
+    pub fn parse(s: &str) -> Result<FabricKind, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "rail" | "rail-optimized" => Ok(FabricKind::RailOptimized),
+            "fat-tree" | "fattree" => Ok(FabricKind::FatTree),
+            other => Err(format!(
+                "unknown fabric '{other}' (expected rail-optimized or \
+                 fat-tree)")),
+        }
+    }
+}
+
+/// Inter-node fabric model carried by every [`HwSpec`] — the network
+/// half of the stochastic realism layer (docs/network.md). The default
+/// ([`FabricSpec::DEDICATED`]) multiplies bandwidth by exactly 1.0, so
+/// it is bit-identical to the pre-fabric cost model by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricSpec {
+    pub kind: FabricKind,
+    /// Leaf→spine oversubscription ratio (fat-tree only; 1 =
+    /// non-blocking). Inter-node flows see `1/oversub` of their NIC
+    /// share once traffic leaves the leaf switch.
+    pub oversub: f64,
+    /// Fraction of inter-node bandwidth claimed by co-scheduled jobs
+    /// on a shared cluster, in `[0, 1)` — the Lincoln Lab multi-job
+    /// interference term, modeled as a steady background load.
+    pub background_load: f64,
+}
+
+impl FabricSpec {
+    /// Dedicated rail-optimized cluster (the paper's setting): no
+    /// oversubscription, no co-scheduled jobs. The catalog default.
+    pub const DEDICATED: FabricSpec = FabricSpec {
+        kind: FabricKind::RailOptimized,
+        oversub: 1.0,
+        background_load: 0.0,
+    };
+
+    pub fn is_dedicated(&self) -> bool {
+        *self == FabricSpec::DEDICATED
+    }
+
+    /// Effective per-rank inter-node bandwidth for a collective group
+    /// placing `ranks_per_node` members on each node, given the node's
+    /// aggregate NIC capacity `ib_bw` (bytes/s). The per-link share
+    /// (`ib_bw / ranks_per_node`, the contention factor derived from
+    /// the group's `GroupPlacement`) is derated by the fat-tree's
+    /// oversubscription and by whatever fraction co-scheduled jobs
+    /// hold. Every factor is exactly 1.0 for [`Self::DEDICATED`], so
+    /// the default path multiplies by 1.0 — bit-identical to the
+    /// dedicated-cluster model.
+    pub fn inter_node_bw(&self, ib_bw: f64, ranks_per_node: usize) -> f64 {
+        let share = ib_bw / ranks_per_node as f64;
+        let kind = match self.kind {
+            FabricKind::RailOptimized => 1.0,
+            FabricKind::FatTree => 1.0 / self.oversub,
+        };
+        share * kind * (1.0 - self.background_load)
+    }
+
+    /// Catalog-name suffix for derived entries
+    /// ([`Catalog::with_fabric`](super::Catalog::with_fabric)):
+    /// `"ft2.0"`, `"ft4.0+bg0.2"`, `"rail+bg0.1"`. Shortest round-trip
+    /// float formatting keeps distinct fabrics collision-free.
+    pub fn suffix(&self) -> String {
+        let mut s = match self.kind {
+            FabricKind::RailOptimized => "rail".to_string(),
+            FabricKind::FatTree => format!("ft{:?}", self.oversub),
+        };
+        if self.background_load > 0.0 {
+            s.push_str(&format!("+bg{:?}", self.background_load));
+        }
+        s
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.oversub.is_finite() && self.oversub >= 1.0) {
+            return Err(format!(
+                "fabric oversub must be finite and >= 1, got {}",
+                self.oversub));
+        }
+        if self.kind == FabricKind::RailOptimized && self.oversub != 1.0 {
+            return Err(format!(
+                "rail-optimized fabrics are non-blocking (oversub 1), \
+                 got oversub {}", self.oversub));
+        }
+        if !(self.background_load.is_finite()
+            && (0.0..1.0).contains(&self.background_load))
+        {
+            return Err(format!(
+                "fabric background_load must be in [0, 1), got {}",
+                self.background_load));
+        }
+        Ok(())
+    }
+}
+
 /// Per-GPU datasheet numbers + simulator coefficients.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {

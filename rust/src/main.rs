@@ -31,17 +31,19 @@ use dtsim::planner::{self, SweepRequest};
 use dtsim::report;
 use dtsim::runtime::artifacts_root;
 use dtsim::serve::{Client, Server};
-use dtsim::sim::{build_engine, Schedule, Sharding, SimConfig};
+use dtsim::sim::{build_engine, Jitter, Schedule, Sharding, SimConfig};
 use dtsim::store::{LogStore, MemStore, ResultStore, StoreLock};
 use dtsim::study::grid;
 use dtsim::study::{
-    Column, ConsoleSink, CsvSink, JsonSink, Sink, Study, StudyRunner,
+    grid_columns, ConsoleSink, CsvSink, JsonSink, ScenarioOpts, Sink,
+    Study, StudyRunner,
 };
 use dtsim::topology::{Cluster, GroupPlacement};
 use dtsim::trace::write_chrome_trace;
 use dtsim::util::args::Args;
 use dtsim::util::json::Json;
 use dtsim::util::rng::Rng;
+use dtsim::util::stats;
 
 const USAGE: &str = "\
 dtsim — Hardware Scaling Trends & Diminishing Returns reproduction
@@ -55,11 +57,17 @@ USAGE:
                    [--mbs 2] [--seq 4096]
                    [--sharding fsdp|ddp|hsdp:G|zero3] [--ddp]
                    [--schedule 1f1b|interleaved:V] [--config run.toml]
+                   [--jitter lognormal:S|pareto:A [--seed N]
+                    [--seeds K]]        # seeded per-op jitter
+                                        # (docs/network.md)
   dtsim sweep      [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512]
                    [--seq 4096] [--cp] [--top 15]
                    [--sharding fsdp] [--schedule 1f1b]
   dtsim study      <name> [--out reports] [--threads N] [--json]
-                   [--catalog hw.toml]   # e.g. madmax, powersweep
+                   [--catalog hw.toml] [--seed N]
+                                        # e.g. madmax, straggler;
+                                        # --seed reseeds stochastic
+                                        # scenarios (replays exactly)
   dtsim study      --list
   dtsim study      --grid [--arch 7b,13b] [--gen h100,a100,<catalog>]
                    [--nodes 4,32 | --gpus 32,256]
@@ -68,6 +76,7 @@ USAGE:
                    [--seq 4096] [--sharding fsdp,ddp,hsdp:8,zero3]
                    [--schedule 1f1b,interleaved:2]
                    [--cap 0.94] [--top N] [--name my-grid]
+                   [--jitter lognormal:0.15] [--seed 7] [--seeds 16]
                    [--out DIR] [--json] [--threads N]
   dtsim repro      [fig1|fig2|...|fig14|table1|headline|all]
                    [--out reports]
@@ -169,6 +178,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
              cfg.cluster.gpus_per_node(), cfg.cluster.node.gpu,
              cfg.plan, cfg.global_batch, cfg.micro_batch, cfg.seq_len);
     print_metrics(&metrics::evaluate(&cfg));
+    // --seeds K replicates: iteration-time distribution over the
+    // derived replicate seeds (replicate 0 is the base --seed, so the
+    // headline metrics above are the first replicate verbatim).
+    if cfg.jitter.replicates > 1 {
+        let n = cfg.jitter.replicates as usize;
+        let mut times = Vec::with_capacity(n);
+        for r in 0..n {
+            let mut c = cfg;
+            c.jitter.seed = Jitter::replicate_seed(cfg.jitter.seed, r);
+            c.jitter.replicates = 1;
+            times.push(metrics::evaluate(&c).iter_time);
+        }
+        println!("iteration time over {} seeded replicates \
+                  (jitter {}, seed {:#x}):",
+                 n, cfg.jitter.dist, cfg.jitter.seed);
+        for (label, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+            println!("  {label}             : {:.1} ms",
+                     stats::percentile(&times, p) * 1e3);
+        }
+    }
     Ok(())
 }
 
@@ -231,13 +260,11 @@ fn cmd_study(args: &Args) -> Result<()> {
         if let Some(top) = args.get("top") {
             res.truncate(top.parse().map_err(|_| anyhow!("bad --top"))?);
         }
-        let table = res.table(&[
-            Column::Arch, Column::Gen, Column::Nodes, Column::Plan,
-            Column::ShardingKind, Column::ScheduleKind, Column::Mbs,
-            Column::Gbs, Column::SeqLen, Column::GlobalWps,
-            Column::PerGpuWps, Column::Mfu, Column::ExposedMs,
-            Column::WpsPerWatt, Column::MemGb,
-        ]);
+        // Shared with serve mode's study-grid: unarmed grids keep the
+        // historical columns byte-for-byte, seeded grids append the
+        // iteration-time percentiles.
+        let table =
+            res.table(&grid_columns(!study.jitter().is_off()));
         ConsoleSink.emit(&table)?;
         CsvSink::new(&out).emit(&table)?;
         if args.has("json") {
@@ -257,7 +284,17 @@ fn cmd_study(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow!(
             "study name required (or --grid / --list)"))?;
-    let tables = report::run_in(&reg, &mut runner, name, &out)?;
+    // Seeded scenarios (straggler) honor --seed; deterministic ones
+    // ignore the options entirely.
+    let mut sopts = ScenarioOpts::default();
+    if let Some(s) = args.get("seed") {
+        sopts.seed = Some(
+            grid::parse_seed(s)
+                .map_err(|e| anyhow!("--seed: {e}"))?,
+        );
+    }
+    let tables = report::run_in_opts(&reg, &mut runner, name, &out,
+                                     sopts)?;
     if args.has("json") {
         let mut json = JsonSink::new(&out);
         for t in &tables {
@@ -482,6 +519,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         0.0
     };
 
+    // Stochastic companion grid (seeded lognormal jitter, 8 replicates
+    // per point) so the jittered emitter path and percentile
+    // aggregation are tracked in the same artifact. Informational —
+    // not a gated field; replicate loops scale cost by --seeds, which
+    // would gate a different quantity than the deterministic grids.
+    let stoch_study = dtsim::study::bench_pinned_stochastic_study();
+    let stoch_points = stoch_study.expand();
+    let mut stoch_runner = StudyRunner::new(threads);
+    let t0 = Instant::now();
+    stoch_runner.run(&stoch_study);
+    let stoch_dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let (stoch_evaluated, _) = stoch_runner.stats();
+    let stoch_cps = stoch_evaluated as f64 / stoch_dt;
+
     let queries = cost_hits + cost_misses;
     let hit_rate = if queries > 0 {
         cost_hits as f64 / queries as f64
@@ -500,6 +551,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"hw_grid_points\": {},\n  \"hw_simulated\": {},\n  \
          \"hw_configs_per_s\": {:.1},\n  \
          \"hw_cache_hit_rate\": {:.4},\n  \
+         \"stoch_grid_points\": {},\n  \"stoch_simulated\": {},\n  \
+         \"stoch_configs_per_s\": {:.1},\n  \
          \"store_hits\": {},\n  \"store_misses\": {},\n  \
          \"store_bytes\": {},\n  \
          \"store_recover_ms\": {:.3},\n  \
@@ -508,6 +561,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         steady_frac, interval_compression,
         sched_points.len(), sched_evaluated, sched_cps,
         hw_points.len(), hw_evaluated, hw_cps, hw_hit_rate,
+        stoch_points.len(), stoch_evaluated, stoch_cps,
         store_stats.hits, store_stats.misses, store_stats.bytes,
         store_recover_ms, peak_rss_bytes(), threads, reps);
     if let Some(parent) = out.parent() {

@@ -13,15 +13,16 @@
 use anyhow::Result;
 
 use crate::collectives::{busbw_gbps, collective_time, Collective};
-use crate::hardware::{Catalog, Generation, HwId};
+use crate::hardware::{Catalog, FabricKind, FabricSpec, Generation, HwId};
 use crate::memory;
 use crate::model::{self, LLAMA_70B, LLAMA_7B};
 use crate::parallelism::ParallelPlan;
 use crate::planner::{self, SweepRequest};
-use crate::sim::{Schedule, Sharding, SimConfig};
+use crate::sim::{JitterDist, Schedule, Sharding, SimConfig};
 use crate::study::table::{f0, f2, f3, ms};
 use crate::study::{
-    Column, PlanAxis, Registry, Scenario, Study, StudyRunner, Table,
+    Column, Objective, PlanAxis, Registry, Scenario, ScenarioOpts, Study,
+    StudyRunner, Table,
 };
 use crate::topology::{Cluster, GroupPlacement};
 
@@ -49,6 +50,8 @@ pub fn register_all(reg: &mut Registry) {
     reg.register(Box::new(Sched));
     reg.register(Box::new(MadMax));
     reg.register(Box::new(PowerSweep));
+    reg.register(Box::new(Contention));
+    reg.register(Box::new(Straggler));
 }
 
 /// Weak-scaling study: Llama-7B pure FSDP, local batch 2, seq 4096
@@ -1000,5 +1003,202 @@ impl Scenario for Headline {
             format!("{:.1}% → {:.1}%", 100.0 * s2.mfu, 100.0 * s32.mfu),
         ]);
         Ok(vec![t])
+    }
+}
+
+/// `contention` — shared-fabric throughput loss (the Lincoln Lab
+/// multi-tenant setting): the catalog derives H100 variants whose
+/// inter-node fabric is an oversubscribed fat-tree and/or carries
+/// co-scheduled background load ([`Catalog::with_fabric`]), and the
+/// study's hardware axis sweeps them. Deterministic — contention is a
+/// bandwidth derate, not a random process.
+struct Contention;
+
+impl Contention {
+    /// Fabric variants, dedicated first so the derates read as deltas
+    /// against the paper's rail-optimized baseline.
+    const VARIANTS: [(&'static str, FabricSpec); 5] = [
+        ("rail dedicated", FabricSpec::DEDICATED),
+        ("rail + 25% bg", FabricSpec {
+            kind: FabricKind::RailOptimized,
+            oversub: 1.0,
+            background_load: 0.25,
+        }),
+        ("fat-tree 2:1", FabricSpec {
+            kind: FabricKind::FatTree,
+            oversub: 2.0,
+            background_load: 0.0,
+        }),
+        ("fat-tree 4:1", FabricSpec {
+            kind: FabricKind::FatTree,
+            oversub: 4.0,
+            background_load: 0.0,
+        }),
+        ("fat-tree 4:1 + 25% bg", FabricSpec {
+            kind: FabricKind::FatTree,
+            oversub: 4.0,
+            background_load: 0.25,
+        }),
+    ];
+}
+
+impl Scenario for Contention {
+    fn name(&self) -> &'static str { "contention" }
+    fn title(&self) -> &'static str {
+        "Fabric contention: rail-optimized vs oversubscribed fat-tree \
+         with co-scheduled load (Llama-7B FSDP, 128 GPUs, local batch 2)"
+    }
+    fn describe(&self) -> &'static str {
+        "derive shared-fabric h100 variants (fat-tree 2:1/4:1, 25% \
+         background load) via the catalog; throughput & exposure per \
+         fabric"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut t = Table::new(
+            "contention", self.title(),
+            &["fabric", "hardware", "global_wps", "mfu", "exposed_ms",
+              "comm_ms", "wps_per_watt"]);
+        let mut fabrics = Vec::new();
+        for (_, spec) in Self::VARIANTS {
+            fabrics.push(Catalog::with_fabric(HwId::H100, spec)
+                .map_err(anyhow::Error::msg)?);
+        }
+        let study = Study::builder("contention")
+            .title(self.title())
+            .arch(LLAMA_7B)
+            .hardware(fabrics)
+            .nodes([16])
+            .plans(PlanAxis::DataParallel)
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .build();
+        let res = runner.run(&study);
+        // Grid order follows the hardware axis, so cases zip with the
+        // variant list one-to-one.
+        for ((label, _), c) in Self::VARIANTS.iter().zip(&res.cases) {
+            let m = &c.metrics;
+            t.row(vec![
+                label.to_string(),
+                c.hw.to_string(),
+                f0(m.global_wps),
+                f3(m.mfu),
+                ms(m.exposed_comm),
+                ms(m.comm_time),
+                f2(m.wps_per_watt),
+            ]);
+        }
+        Ok(vec![t.with_chart(2)])
+    }
+}
+
+/// `straggler` — seeded per-op jitter widens the iteration-time tail:
+/// every grid point runs [`Straggler::REPLICATES`] lognormal-jittered
+/// replicates, reported as p50/p95/p99 iteration time next to the
+/// mean-rate throughput. A second table contrasts the mean-throughput
+/// winner with the tail-aware (tokens / p95) winner per node count.
+/// Fully deterministic for a given seed: `--seed N` replays
+/// byte-identically across thread counts, engines, and restarts.
+struct Straggler;
+
+impl Straggler {
+    /// The documented default; `--seed` (CLI) or a `"seed"` request
+    /// field (serve) overrides it through [`ScenarioOpts`].
+    const DEFAULT_SEED: u64 = 7;
+    const SIGMA: f64 = 0.15;
+    const REPLICATES: u32 = 16;
+
+    fn study(title: &str, seed: u64) -> Study {
+        Study::builder("straggler")
+            .title(title)
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([4, 16, 32])
+            .plan_shapes(&[(1, 1, 1), (2, 1, 1), (4, 1, 1), (1, 4, 1)])
+            .global_batches([256])
+            .micro_batches([1, 2])
+            .memory_cap(planner::MEM_CAP_FRAC)
+            .jitter(JitterDist::Lognormal { sigma: Self::SIGMA })
+            .seed(seed)
+            .seeds(Self::REPLICATES)
+            .build()
+    }
+}
+
+impl Scenario for Straggler {
+    fn name(&self) -> &'static str { "straggler" }
+    fn title(&self) -> &'static str {
+        "Straggler distributions: seeded lognormal per-op jitter \
+         (sigma 0.15, 16 replicates) vs the deterministic model \
+         (Llama-7B, H100, gbs 256)"
+    }
+    fn describe(&self) -> &'static str {
+        "seeded lognormal jitter over 4/16/32 nodes x plan shapes; \
+         p50/p95/p99 iteration time + mean-vs-p95 winner per scale \
+         (--seed N replays byte-identically)"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        self.tables_with(runner, ScenarioOpts::default())
+    }
+
+    fn tables_with(
+        &self,
+        runner: &mut StudyRunner,
+        opts: ScenarioOpts,
+    ) -> Result<Vec<Table>> {
+        let seed = opts.seed.unwrap_or(Self::DEFAULT_SEED);
+        let res = runner.run(&Self::study(self.title(), seed));
+        // Full grid in expansion order (deterministic for a seed).
+        let grid = res
+            .table(&[Nodes, Plan, Mbs, GlobalWps, P95Wps, IterP50Ms,
+                     IterP95Ms, IterP99Ms, ExposedMs])
+            .with_chart(3);
+
+        // Per-scale winner under the mean-rate objective vs the
+        // tail-aware one — where the tail flips the decision.
+        let mut t = Table::new(
+            "straggler_winners",
+            "Best plan per node count: mean-throughput vs tail-aware \
+             (tokens / p95) objective",
+            &["nodes", "objective", "best_plan", "mbs", "global_wps",
+              "p95_wps", "p99_ms"]);
+        let mut nodes_seen: Vec<usize> = Vec::new();
+        for c in &res.cases {
+            if !nodes_seen.contains(&c.nodes) {
+                nodes_seen.push(c.nodes);
+            }
+        }
+        for &n in &nodes_seen {
+            for (label, obj) in [
+                ("mean_wps", Objective::MeanWps),
+                ("p95_wps", Objective::P95Wps),
+            ] {
+                // First-in-grid-order wins ties, matching best_by.
+                let best = res
+                    .cases
+                    .iter()
+                    .filter(|c| c.nodes == n)
+                    .fold(None, |acc: Option<(&_, f64)>, c| {
+                        let s = obj.score(c);
+                        match acc {
+                            Some((_, top)) if top >= s => acc,
+                            _ => Some((c, s)),
+                        }
+                    });
+                if let Some((c, _)) = best {
+                    t.row(vec![
+                        n.to_string(),
+                        label.to_string(),
+                        c.plan.to_string(),
+                        c.micro_batch.to_string(),
+                        f0(c.metrics.global_wps),
+                        f0(Objective::P95Wps.score(c)),
+                        ms(c.iter_p99),
+                    ]);
+                }
+            }
+        }
+        Ok(vec![grid, t])
     }
 }

@@ -20,7 +20,9 @@ use std::path::Path;
 use anyhow::Result;
 
 pub use crate::study::table::Table;
-use crate::study::{ConsoleSink, CsvSink, Registry, Sink, StudyRunner};
+use crate::study::{
+    ConsoleSink, CsvSink, Registry, ScenarioOpts, Sink, StudyRunner,
+};
 
 /// All experiment names, in paper order (registration order).
 pub fn all_figures() -> Vec<&'static str> {
@@ -42,12 +44,25 @@ pub fn run_in(
     name: &str,
     out_dir: &Path,
 ) -> Result<Vec<Table>> {
+    run_in_opts(reg, runner, name, out_dir, ScenarioOpts::default())
+}
+
+/// [`run_in`] with per-invocation [`ScenarioOpts`] (e.g. a `--seed`
+/// override for the seeded scenarios). Deterministic scenarios ignore
+/// the options entirely.
+pub fn run_in_opts(
+    reg: &Registry,
+    runner: &mut StudyRunner,
+    name: &str,
+    out_dir: &Path,
+    opts: ScenarioOpts,
+) -> Result<Vec<Table>> {
     let Some(scenario) = reg.get(name) else {
         anyhow::bail!(
             "unknown experiment '{name}' (try: {})",
             reg.names().join(", "));
     };
-    let tables = scenario.tables(runner)?;
+    let tables = scenario.tables_with(runner, opts)?;
     std::fs::create_dir_all(out_dir)?;
     let mut csv = CsvSink::new(out_dir);
     let mut console = ConsoleSink;
@@ -112,7 +127,7 @@ mod tests {
             "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
             "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
             "fig14", "headline", "ablation", "sched", "madmax",
-            "powersweep",
+            "powersweep", "contention", "straggler",
         ];
         assert_eq!(registry().names(), expected);
         assert_eq!(all_figures(), expected);

@@ -69,7 +69,7 @@ use crate::report;
 use crate::sim::{Schedule, Sharding};
 use crate::store::ResultStore;
 use crate::study::grid;
-use crate::study::{CaseResult, Column, StudyRunner, Table};
+use crate::study::{grid_columns, CaseResult, StudyRunner, Table};
 use crate::topology::Cluster;
 use crate::util::args::Args;
 use crate::util::json::{obj, Json};
@@ -90,26 +90,6 @@ const RETRY_AFTER_MS: u64 = 250;
 /// Injected per-line writer delay when `serve.write.stall` is armed.
 const WRITE_STALL_MS: u64 = 25;
 
-/// The ad-hoc grid table layout — identical to `dtsim study --grid`'s
-/// console/CSV output, so a served grid and a CLI run of the same flags
-/// render byte-identical CSV.
-const GRID_COLUMNS: &[Column] = &[
-    Column::Arch,
-    Column::Gen,
-    Column::Nodes,
-    Column::Plan,
-    Column::ShardingKind,
-    Column::ScheduleKind,
-    Column::Mbs,
-    Column::Gbs,
-    Column::SeqLen,
-    Column::GlobalWps,
-    Column::PerGpuWps,
-    Column::Mfu,
-    Column::ExposedMs,
-    Column::WpsPerWatt,
-    Column::MemGb,
-];
 
 /// Per-connection configuration, frozen at accept time.
 #[derive(Clone, Copy)]
@@ -646,7 +626,12 @@ fn dispatch(
                     if top > 0 {
                         res.truncate(top);
                     }
-                    let table = res.table(GRID_COLUMNS);
+                    // Same layout helper as `dtsim study --grid`, so a
+                    // served grid and a CLI run of the same flags
+                    // render byte-identical CSV — seeded grids append
+                    // the percentile columns on both paths.
+                    let table = res
+                        .table(&grid_columns(!study.jitter().is_off()));
                     send_table(out, &table)?;
                     send_done(out, &runner)
                 }
@@ -670,8 +655,17 @@ fn dispatch(
                 opts.threads,
                 Arc::clone(store),
             );
+            // Seeded scenarios honor a "seed" override; deterministic
+            // ones ignore it (ScenarioOpts is additive by design).
+            let mut sopts = crate::study::ScenarioOpts::default();
+            if let Some(s) = args.get("seed") {
+                sopts.seed = Some(
+                    crate::study::grid::parse_seed(s)
+                        .map_err(|e| format!("--seed: {e}"))?,
+                );
+            }
             let tables = scenario
-                .tables(&mut runner)
+                .tables_with(&mut runner, sopts)
                 .map_err(|e| format!("{e:#}"))?;
             for t in &tables {
                 send_table(out, t)?;
@@ -864,6 +858,9 @@ fn case_event(event: &'static str, c: &CaseResult) -> Json {
         ("wps_per_watt", Json::Num(c.metrics.wps_per_watt)),
         ("energy_per_token_j",
          Json::Num(c.metrics.energy_per_token_j)),
+        ("iter_p50", Json::Num(c.iter_p50)),
+        ("iter_p95", Json::Num(c.iter_p95)),
+        ("iter_p99", Json::Num(c.iter_p99)),
         ("mem_per_gpu", Json::Num(c.mem_per_gpu)),
     ])
 }

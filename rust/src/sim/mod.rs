@@ -68,6 +68,139 @@ use crate::collectives::{Collective, CostCache};
 use crate::model::TransformerArch;
 use crate::parallelism::ParallelPlan;
 use crate::topology::Cluster;
+use crate::util::rng::Rng;
+
+/// Per-op straggler distribution for the stochastic network layer
+/// (`docs/network.md`). Armed distributions multiply every *comm*
+/// event's duration by an independent seeded draw clamped to `>= 1` —
+/// the fabric can lose a race to a co-scheduled job but never beats
+/// its nominal rate — so jittered iteration times dominate the
+/// deterministic ones and [`iter_time_lower_bound`] stays sound for
+/// quantile objectives.
+#[derive(Debug, Clone, Copy)]
+pub enum JitterDist {
+    /// No jitter (the default): bit-identical to the deterministic
+    /// simulator by construction — no draw is taken, no multiply runs.
+    Off,
+    /// Slowdown factor `max(1, exp(sigma · z))`, `z ~ N(0, 1)`: the
+    /// body of a median-1 lognormal, clamped at the nominal rate.
+    Lognormal { sigma: f64 },
+    /// Slowdown factor `(1 - u)^(-1/alpha)` on `[1, ∞)`: heavy-tailed
+    /// stragglers; smaller `alpha` = fatter tail.
+    Pareto { alpha: f64 },
+}
+
+impl JitterDist {
+    pub fn is_off(&self) -> bool {
+        matches!(self, JitterDist::Off)
+    }
+
+    /// Canonical identity `(tag, param bits)` — shared by Eq/Hash and
+    /// the store codec so equal keys hash and serialize identically.
+    pub(crate) fn key(&self) -> (u8, u64) {
+        match *self {
+            JitterDist::Off => (0, 0),
+            JitterDist::Lognormal { sigma } => (1, sigma.to_bits()),
+            JitterDist::Pareto { alpha } => (2, alpha.to_bits()),
+        }
+    }
+}
+
+impl PartialEq for JitterDist {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for JitterDist {}
+
+impl std::hash::Hash for JitterDist {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.key().hash(state)
+    }
+}
+
+impl std::fmt::Display for JitterDist {
+    /// Canonical spec string ("off", "lognormal:S", "pareto:A") — the
+    /// inverse of `config::parse_jitter`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JitterDist::Off => write!(f, "off"),
+            JitterDist::Lognormal { sigma } => {
+                write!(f, "lognormal:{sigma}")
+            }
+            JitterDist::Pareto { alpha } => write!(f, "pareto:{alpha}"),
+        }
+    }
+}
+
+/// Stochastic-evaluation spec carried by [`SimConfig`] (and hashed
+/// into the study's `ConfigKey`, so the result store never conflates
+/// seeds). One simulation consumes `seed` directly; a study point
+/// evaluates `replicates` seeded runs (seeds
+/// [`Jitter::replicate_seed`]`(seed, 0..n)`) and reports p50/p95/p99
+/// iteration time over them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Jitter {
+    pub dist: JitterDist,
+    /// Base seed. Replicate 0 uses it verbatim, so a single-replicate
+    /// study point replays exactly like `dtsim simulate --seed N`.
+    pub seed: u64,
+    /// Seeded replicates per study point (`.seeds(n)` on the builder).
+    pub replicates: u32,
+}
+
+impl Jitter {
+    /// The canonical unarmed spec — the [`SimConfig`] default.
+    pub const OFF: Jitter =
+        Jitter { dist: JitterDist::Off, seed: 0, replicates: 1 };
+
+    pub fn is_off(&self) -> bool {
+        self.dist.is_off()
+    }
+
+    /// Seed for replicate `r` of a base seed: golden-ratio stride, so
+    /// replicate 0 is the base seed itself and `Rng::new`'s SplitMix64
+    /// scrambling decorrelates the rest (same derivation as the
+    /// proptest harness's per-case seeds).
+    pub fn replicate_seed(base: u64, r: usize) -> u64 {
+        base.wrapping_add((r as u64).wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match self.dist {
+            JitterDist::Off => {
+                if self.seed != 0 || self.replicates != 1 {
+                    return Err(
+                        "jitter=off requires seed 0 and one replicate \
+                         (arm --jitter to use --seed/--seeds)"
+                            .into(),
+                    );
+                }
+            }
+            JitterDist::Lognormal { sigma } => {
+                if !(sigma.is_finite() && sigma > 0.0) {
+                    return Err(format!(
+                        "lognormal sigma must be finite and > 0, \
+                         got {sigma}"
+                    ));
+                }
+            }
+            JitterDist::Pareto { alpha } => {
+                if !(alpha.is_finite() && alpha > 1.0) {
+                    return Err(format!(
+                        "pareto alpha must be finite and > 1 (finite \
+                         mean), got {alpha}"
+                    ));
+                }
+            }
+        }
+        if self.replicates == 0 {
+            return Err("at least one jitter replicate required".into());
+        }
+        Ok(())
+    }
+}
 
 /// Data-parallel gradient/parameter sharding strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -161,6 +294,10 @@ pub struct SimConfig {
     /// layer's AllGather is only issued once the previous layer's
     /// forward completes — the ablation for §3's "explicit prefetching".
     pub prefetch: bool,
+    /// Stochastic per-op network jitter ([`Jitter::OFF`] by default —
+    /// the unarmed path is bit-identical to the deterministic
+    /// simulator).
+    pub jitter: Jitter,
 }
 
 impl SimConfig {
@@ -175,7 +312,8 @@ impl SimConfig {
     ) -> SimConfig {
         SimConfig { arch, cluster, plan, global_batch, micro_batch,
                     seq_len, sharding: Sharding::Fsdp,
-                    schedule: Schedule::OneFOneB, prefetch: true }
+                    schedule: Schedule::OneFOneB, prefetch: true,
+                    jitter: Jitter::OFF }
     }
 
     pub fn microbatches(&self) -> usize {
@@ -184,6 +322,7 @@ impl SimConfig {
 
     pub fn validate(&self) -> Result<(), String> {
         self.plan.validate(&self.cluster, self.arch.n_layers)?;
+        self.jitter.validate()?;
         if let Sharding::Hsdp { group } = self.sharding {
             if group == 0 || self.plan.dp % group != 0 {
                 return Err(format!(
@@ -501,6 +640,36 @@ pub(crate) struct BuildScratch {
     st: EmitState,
 }
 
+/// Armed per-iteration jitter sampler. Lives in [`EmitState`] so the
+/// shared op arms consume exactly one draw per comm event *in emission
+/// order* — which both drivers and both execution engines share — and
+/// replay is therefore a function of the seed alone.
+#[derive(Debug)]
+struct JitterRng {
+    rng: Rng,
+    dist: JitterDist,
+}
+
+impl JitterRng {
+    fn arm(j: Jitter) -> Option<JitterRng> {
+        match j.dist {
+            JitterDist::Off => None,
+            dist => Some(JitterRng { rng: Rng::new(j.seed), dist }),
+        }
+    }
+
+    /// One slowdown draw, clamped to `>= 1` (see [`JitterDist`]).
+    fn factor(&mut self) -> f64 {
+        match self.dist {
+            JitterDist::Off => 1.0,
+            JitterDist::Lognormal { sigma } => {
+                self.rng.next_lognormal(sigma).max(1.0)
+            }
+            JitterDist::Pareto { alpha } => self.rng.next_pareto(alpha),
+        }
+    }
+}
+
 /// Event bookkeeping shared by the schedule drivers and the F/B op
 /// arms, sized over `V = p·v` virtual stages and `m` microbatches.
 #[derive(Debug, Default)]
@@ -516,10 +685,25 @@ pub(crate) struct EmitState {
     /// `p × lps`: gradient-final events feeding the optimizer.
     grad: Vec<EventId>,
     grad_len: Vec<usize>,
+    /// Armed straggler sampler (`None` when jitter is off — the op
+    /// arms then run today's exact f64 path, no multiply).
+    jitter: Option<JitterRng>,
 }
 
 impl EmitState {
+    /// Per-op comm-duration jitter: identity when unarmed, one seeded
+    /// slowdown draw per comm event when armed.
+    fn jit(&mut self, t: f64) -> f64 {
+        match &mut self.jitter {
+            None => t,
+            Some(j) => t * j.factor(),
+        }
+    }
+
     fn prepare(&mut self, p: usize, v: usize, m: usize, lps: usize) {
+        // Drop any previous config's sampler; the drivers re-arm from
+        // their own config so state can never leak across evaluations.
+        self.jitter = None;
         let vs = p * v;
         self.last_fwd.clear();
         self.last_fwd.resize(vs * m, None);
@@ -644,8 +828,9 @@ impl<'a> EmitCtx<'a> {
         if self.fsdp && self.prefetch {
             for s in 0..self.p {
                 for l in 0..self.lps {
+                    let dur = st.jit(self.d.ag_layer);
                     st.ag[s * self.lps + l] = eng.push_event(
-                        s, STREAM_COMM_DP, self.d.ag_layer, &[],
+                        s, STREAM_COMM_DP, dur, &[],
                         Tag::AllGatherParams);
                 }
             }
@@ -669,12 +854,13 @@ impl<'a> EmitCtx<'a> {
             // previous chunk-layer's forward chain, on the chunk's
             // first microbatch.
             if self.fsdp && !self.prefetch && i == 0 {
+                let dur = st.jit(d.ag_layer);
                 st.ag[s * lps + li] = match prev {
                     Some(pv) => eng.push_event(
-                        s, STREAM_COMM_DP, d.ag_layer, &[pv],
+                        s, STREAM_COMM_DP, dur, &[pv],
                         Tag::AllGatherParams),
                     None => eng.push_event(
-                        s, STREAM_COMM_DP, d.ag_layer, &[],
+                        s, STREAM_COMM_DP, dur, &[],
                         Tag::AllGatherParams),
                 };
             }
@@ -683,12 +869,13 @@ impl<'a> EmitCtx<'a> {
             // gather streams ahead (serialized only by the DP comm
             // stream); without, it chains behind the compute.
             let gather = if self.zero3 {
+                let dur = st.jit(d.ag_layer);
                 Some(match (prev, self.prefetch) {
                     (Some(pv), false) => eng.push_event(
-                        s, STREAM_COMM_DP, d.ag_layer, &[pv],
+                        s, STREAM_COMM_DP, dur, &[pv],
                         Tag::AllGatherParams),
                     _ => eng.push_event(
-                        s, STREAM_COMM_DP, d.ag_layer, &[],
+                        s, STREAM_COMM_DP, dur, &[],
                         Tag::AllGatherParams),
                 })
             } else if self.fsdp {
@@ -711,13 +898,15 @@ impl<'a> EmitCtx<'a> {
                 Tag::FwdCompute);
             prev = Some(c);
             if self.tp {
+                let dur = st.jit(d.tp_ar_fwd);
                 prev = Some(eng.push_event(
-                    s, STREAM_COMM_MP, d.tp_ar_fwd, &[c],
+                    s, STREAM_COMM_MP, dur, &[c],
                     Tag::TpAllReduce));
             }
             if self.cp {
+                let dur = st.jit(d.cp_ring);
                 prev = Some(eng.push_event(
-                    s, STREAM_COMM_MP, d.cp_ring,
+                    s, STREAM_COMM_MP, dur,
                     &[prev.unwrap()], Tag::CpRingExchange));
             }
         }
@@ -728,8 +917,9 @@ impl<'a> EmitCtx<'a> {
         }
         st.last_fwd[vs * m + i] = prev;
         if vs < self.vstages - 1 {
+            let dur = st.jit(d.p2p);
             st.p2p_fwd[vs * m + i] = Some(eng.push_event(
-                s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
+                s, STREAM_COMM_MP, dur, &[prev.unwrap()],
                 Tag::P2pActivations));
         }
     }
@@ -756,13 +946,14 @@ impl<'a> EmitCtx<'a> {
             // ZeRO-3: params were resharded after forward — re-gather
             // them for this layer's backward.
             let gather = if self.zero3 {
+                let dur = st.jit(d.ag_layer);
                 Some(if self.prefetch {
                     eng.push_event(
-                        s, STREAM_COMM_DP, d.ag_layer, &[],
+                        s, STREAM_COMM_DP, dur, &[],
                         Tag::AllGatherParams)
                 } else {
                     eng.push_event(
-                        s, STREAM_COMM_DP, d.ag_layer,
+                        s, STREAM_COMM_DP, dur,
                         &[prev.unwrap_or(fwd_dep)],
                         Tag::AllGatherParams)
                 })
@@ -796,20 +987,23 @@ impl<'a> EmitCtx<'a> {
                 Tag::BwdCompute);
             prev = Some(c);
             if self.tp {
+                let dur = st.jit(d.tp_ar_bwd);
                 prev = Some(eng.push_event(
-                    s, STREAM_COMM_MP, d.tp_ar_bwd, &[c],
+                    s, STREAM_COMM_MP, dur, &[c],
                     Tag::TpAllReduce));
             }
             if self.cp {
+                let dur = st.jit(d.cp_ring);
                 prev = Some(eng.push_event(
-                    s, STREAM_COMM_MP, d.cp_ring,
+                    s, STREAM_COMM_MP, dur,
                     &[prev.unwrap()], Tag::CpRingExchange));
             }
             if self.zero3 {
                 // ZeRO-3 reduce-scatters gradient shards after *every*
                 // microbatch; the last one feeds the optimizer.
+                let dur = st.jit(d.rs_layer);
                 let g = eng.push_event(
-                    s, STREAM_COMM_DP, d.rs_layer, &[c],
+                    s, STREAM_COMM_DP, dur, &[c],
                     Tag::ReduceScatterGrads);
                 if i == m - 1 {
                     st.grad[s * lps + st.grad_len[s]] = g;
@@ -819,19 +1013,22 @@ impl<'a> EmitCtx<'a> {
                 // Gradients final after the last microbatch: overlap
                 // ReduceScatter with remaining bwd.
                 let g = if self.fsdp {
+                    let dur = st.jit(d.rs_layer);
                     let mut last = eng.push_event(
-                        s, STREAM_COMM_DP, d.rs_layer, &[c],
+                        s, STREAM_COMM_DP, dur, &[c],
                         Tag::ReduceScatterGrads);
                     if self.hsdp && d.hsdp_ar_layer > 0.0 {
                         // Cross-replica gradient sync.
+                        let dur = st.jit(d.hsdp_ar_layer);
                         last = eng.push_event(
-                            s, STREAM_COMM_DP, d.hsdp_ar_layer, &[last],
+                            s, STREAM_COMM_DP, dur, &[last],
                             Tag::GradAllReduce);
                     }
                     last
                 } else if self.ddp {
+                    let dur = st.jit(d.ddp_ar_layer);
                     eng.push_event(
-                        s, STREAM_COMM_DP, d.ddp_ar_layer, &[c],
+                        s, STREAM_COMM_DP, dur, &[c],
                         Tag::GradAllReduce)
                 } else {
                     c
@@ -841,8 +1038,9 @@ impl<'a> EmitCtx<'a> {
             }
         }
         if vs > 0 {
+            let dur = st.jit(d.p2p);
             st.p2p_bwd[vs * m + i] = Some(eng.push_event(
-                s, STREAM_COMM_MP, d.p2p, &[prev.unwrap()],
+                s, STREAM_COMM_MP, dur, &[prev.unwrap()],
                 Tag::P2pActivations));
         }
     }
@@ -880,6 +1078,7 @@ fn emit_iteration<S: EventSink>(
     let (p, v, m, t) = (ctx.p, ctx.v, ctx.m, ctx.t);
     scratch.prepare_queue(p, v, m, ctx.lps);
     let BuildScratch { ops, next, queue, queued, st } = scratch;
+    st.jitter = JitterRng::arm(cfg.jitter);
 
     for s in 0..p {
         fill_schedule(&mut ops[s * 2 * t..(s + 1) * 2 * t], s, p, v, m);
@@ -956,9 +1155,16 @@ fn emit_iteration<S: EventSink>(
 /// Is this configuration eligible for the steady-state wave driver?
 /// Plain 1F1B only (one chunk per device) with uncapped warmups
 /// (`m >= pp`), the precondition for [`steady_op`]'s closed form and
-/// for the wave schedule's producer-before-consumer proof.
+/// for the wave schedule's producer-before-consumer proof. Armed
+/// jitter is excluded: per-op draws consume a single seeded stream in
+/// *global* emission order, and only the ready-queue driver's global
+/// order is shared with the event-graph engine (the wave driver
+/// reorders across devices, which is time-invariant for deterministic
+/// durations but would desynchronize the draw stream).
 fn steady_eligible(cfg: &SimConfig) -> bool {
-    cfg.schedule.chunks() == 1 && cfg.microbatches() >= cfg.plan.pp
+    cfg.jitter.is_off()
+        && cfg.schedule.chunks() == 1
+        && cfg.microbatches() >= cfg.plan.pp
 }
 
 /// Closed-form op order for plain 1F1B with uncapped warmup: the
@@ -1015,6 +1221,9 @@ fn emit_iteration_steady<S: EventSink>(
     let ctx = EmitCtx::new(cfg, d);
     debug_assert!(ctx.v == 1 && ctx.m >= ctx.p,
                   "wave driver requires plain 1F1B with m >= pp");
+    debug_assert!(cfg.jitter.is_off(),
+                  "armed jitter routes through the ready-queue driver \
+                   (per-op draws consume in global emission order)");
     scratch.prepare_steady(ctx.p, ctx.m, ctx.lps);
     let st = &mut scratch.st;
     ctx.emit_prefetch(eng, st);
@@ -1458,6 +1667,7 @@ mod tests {
                 ..crate::hardware::specs::H100.clone()
             },
             freq_curve: None,
+            fabric: crate::hardware::FabricSpec::DEDICATED,
             derived: false,
         })
         .unwrap()
@@ -1553,6 +1763,14 @@ mod tests {
         let il = SimConfig {
             schedule: Schedule::Interleaved { v: 2 }, ..pp4 };
         assert!(!steady_eligible(&il));
+        // Armed jitter must route through the ready-queue driver.
+        let mut jit = pp4;
+        jit.jitter = Jitter {
+            dist: JitterDist::Lognormal { sigma: 0.3 },
+            seed: 7,
+            replicates: 1,
+        };
+        assert!(!steady_eligible(&jit));
     }
 
     #[test]
@@ -1676,6 +1894,127 @@ mod tests {
             assert!(lb <= sim * (1.0 + 1e-12),
                     "bound {lb} above simulated {sim} for {}", cfg.plan);
             assert!(lb > 0.0);
+        }
+    }
+
+    fn armed(cfg: &SimConfig, dist: JitterDist, seed: u64) -> SimConfig {
+        let mut c = *cfg;
+        c.jitter = Jitter { dist, seed, replicates: 1 };
+        c
+    }
+
+    #[test]
+    fn jitter_validation_rules() {
+        let base = weak_cfg(2);
+        assert!(base.validate().is_ok());
+        // --seed/--seeds without an armed distribution is rejected (the
+        // off spec must stay canonical so store keys never alias).
+        let mut seeded_off = base;
+        seeded_off.jitter.seed = 7;
+        assert!(seeded_off.validate().is_err());
+        let mut multi_off = base;
+        multi_off.jitter.replicates = 4;
+        assert!(multi_off.validate().is_err());
+        // Degenerate distribution parameters.
+        let bad_sigma =
+            armed(&base, JitterDist::Lognormal { sigma: 0.0 }, 1);
+        assert!(bad_sigma.validate().is_err());
+        let bad_alpha = armed(&base, JitterDist::Pareto { alpha: 1.0 }, 1);
+        assert!(bad_alpha.validate().is_err());
+        let mut no_reps =
+            armed(&base, JitterDist::Lognormal { sigma: 0.3 }, 1);
+        no_reps.jitter.replicates = 0;
+        assert!(no_reps.validate().is_err());
+        assert!(armed(&base, JitterDist::Pareto { alpha: 2.5 }, 9)
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn armed_jitter_replays_bitwise_and_seeds_diverge() {
+        // Cover every emission arm under jitter: the cross-validation
+        // set spans dp/tp/pp/cp, all shardings, prefetch off, and the
+        // interleaved schedule.
+        for cfg in cross_validation_cfgs() {
+            let a = armed(&cfg, JitterDist::Lognormal { sigma: 0.4 }, 7);
+            let r1 = simulate(&a);
+            let r2 = simulate(&a);
+            assert_eq!(r1.iter_time.to_bits(), r2.iter_time.to_bits(),
+                       "same seed must replay bitwise for {}", cfg.plan);
+            assert_eq!(r1.exposed_comm.to_bits(),
+                       r2.exposed_comm.to_bits());
+            let other =
+                armed(&cfg, JitterDist::Lognormal { sigma: 0.4 }, 8);
+            let r3 = simulate(&other);
+            if r1.comm_busy > 0.0 {
+                // comm_busy sums every perturbed kernel, so two seeds
+                // agreeing bitwise means the draws were never applied
+                // (iter_time alone could tie when comm fully overlaps).
+                assert_ne!(r1.comm_busy.to_bits(),
+                           r3.comm_busy.to_bits(),
+                           "seeds 7 and 8 agree bitwise for {} — jitter \
+                            not applied?", cfg.plan);
+            }
+        }
+    }
+
+    #[test]
+    fn armed_jitter_is_bit_identical_across_execution_paths() {
+        // Same contract as the deterministic layer: fused fast path
+        // (ready-queue fallback when armed) vs materialized graph
+        // engine, bit for bit, including the draw stream.
+        for cfg in cross_validation_cfgs() {
+            for dist in [JitterDist::Lognormal { sigma: 0.5 },
+                         JitterDist::Pareto { alpha: 1.8 }] {
+                let a = armed(&cfg, dist, 42);
+                let fast = simulate(&a);
+                let slow = simulate_engine(&a);
+                assert_eq!(fast.iter_time.to_bits(),
+                           slow.iter_time.to_bits(),
+                           "armed {dist} diverged for {}", cfg.plan);
+                assert_eq!(fast.exposed_comm.to_bits(),
+                           slow.exposed_comm.to_bits());
+                assert_eq!(fast.comm_busy.to_bits(),
+                           slow.comm_busy.to_bits());
+                for tag in Tag::ALL {
+                    assert_eq!(fast.comm_by_tag.get(tag).to_bits(),
+                               slow.comm_by_tag.get(tag).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn armed_jitter_never_beats_the_deterministic_run() {
+        // Draws are clamped >= 1, so jitter can only slow comm down —
+        // the nominal run and the comm-free lower bound both stay
+        // sound as optimistic bounds under any seed.
+        for cfg in cross_validation_cfgs() {
+            let nominal = simulate(&cfg).iter_time;
+            for seed in [1u64, 7, 1234] {
+                let a = armed(
+                    &cfg, JitterDist::Pareto { alpha: 1.5 }, seed);
+                let jittered = simulate(&a).iter_time;
+                assert!(jittered >= nominal * (1.0 - 1e-12),
+                        "jittered {jittered} < nominal {nominal} for {}",
+                        cfg.plan);
+                let lb = iter_time_lower_bound(&a);
+                assert!(lb <= jittered * (1.0 + 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn unarmed_jitter_field_is_inert() {
+        // `Jitter::OFF` must not perturb a single bit of the default
+        // path (the golden-figure byte-identity story rests on this).
+        for cfg in cross_validation_cfgs() {
+            assert!(cfg.jitter.is_off(), "fixtures default to off");
+            let explicit = SimConfig { jitter: Jitter::OFF, ..cfg };
+            let a = simulate(&cfg);
+            let b = simulate(&explicit);
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+            assert_eq!(a.exposed_comm.to_bits(), b.exposed_comm.to_bits());
         }
     }
 }

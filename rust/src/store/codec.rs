@@ -24,15 +24,16 @@ use crate::hardware::HwId;
 use crate::metrics::Metrics;
 use crate::model::{self, TransformerArch};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Schedule, Sharding};
+use crate::sim::{Jitter, JitterDist, Schedule, Sharding};
 use crate::study::{CaseResult, ConfigKey};
 
 /// Bump [`SCHEMA`] whenever the record layout changes; the store
 /// refuses files whose header hash differs instead of misreading them.
-pub const SCHEMA: &str = "dtsim-store-v1: ConfigKey{arch(name,6xu64),\
+pub const SCHEMA: &str = "dtsim-store-v2: ConfigKey{arch(name,6xu64),\
     hw(name,spec_fnv1a64,gpus_per_node),nodes,plan(dp,tp,pp,cp),\
     global_batch,micro_batch,seq_len,sharding(tag[,group]),\
-    schedule(tag[,v]),prefetch} CaseResult{metrics(13xf64,world),\
+    schedule(tag[,v]),prefetch,jitter(tag,param_bits,seed,replicates)} \
+    CaseResult{metrics(13xf64,world),iter_p50,iter_p95,iter_p99,\
     mem_per_gpu}";
 
 /// FNV-1a, 64-bit: the store's checksum and schema/spec hash. Tiny,
@@ -242,6 +243,14 @@ fn encode_with(
         }
     }
     w.u8(key.prefetch as u8);
+    // Stochastic axis: the canonical (tag, param bits) identity shared
+    // with JitterDist's Eq/Hash, then seed and replicate count — so two
+    // seeds of the same grid point are two distinct records.
+    let (jtag, jparam) = key.jitter.dist.key();
+    w.u8(jtag);
+    w.u64(jparam);
+    w.u64(key.jitter.seed);
+    w.u64(key.jitter.replicates as u64);
     let m = &case.metrics;
     w.f64(m.iter_time);
     w.f64(m.global_wps);
@@ -257,6 +266,9 @@ fn encode_with(
     w.f64(m.wps_per_watt);
     w.f64(m.energy_per_token_j);
     w.usize(m.world);
+    w.f64(case.iter_p50);
+    w.f64(case.iter_p95);
+    w.f64(case.iter_p99);
     w.f64(case.mem_per_gpu);
     w.buf
 }
@@ -333,6 +345,22 @@ pub fn decode_record(
         1 => true,
         _ => return Err(DecodeError::Malformed("bad prefetch flag")),
     };
+    let jtag = r.u8()?;
+    let jparam = f64::from_bits(r.u64()?);
+    let jseed = r.u64()?;
+    let jreps = r.u64()?;
+    let dist = match jtag {
+        0 => JitterDist::Off,
+        1 => JitterDist::Lognormal { sigma: jparam },
+        2 => JitterDist::Pareto { alpha: jparam },
+        _ => return Err(DecodeError::Malformed("unknown jitter tag")),
+    };
+    let jitter = Jitter {
+        dist,
+        seed: jseed,
+        replicates: u32::try_from(jreps)
+            .map_err(|_| DecodeError::Malformed("replicate overflow"))?,
+    };
     let metrics = Metrics {
         iter_time: r.f64()?,
         global_wps: r.f64()?,
@@ -349,6 +377,9 @@ pub fn decode_record(
         energy_per_token_j: r.f64()?,
         world: r.usize()?,
     };
+    let iter_p50 = r.f64()?;
+    let iter_p95 = r.f64()?;
+    let iter_p99 = r.f64()?;
     let mem_per_gpu = r.f64()?;
     r.finish()?;
 
@@ -364,6 +395,7 @@ pub fn decode_record(
         sharding,
         schedule,
         prefetch,
+        jitter,
     };
     let case = CaseResult {
         arch: key.arch.name,
@@ -376,6 +408,9 @@ pub fn decode_record(
         sharding,
         schedule,
         metrics,
+        iter_p50,
+        iter_p95,
+        iter_p99,
         mem_per_gpu,
     };
     Ok((key, case))
@@ -390,7 +425,7 @@ pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
     use crate::sim::SimConfig;
     use crate::topology::Cluster;
 
-    let cfg = SimConfig::fsdp(
+    let mut cfg = SimConfig::fsdp(
         LLAMA_7B,
         Cluster::new(HwId::H100, 2),
         ParallelPlan::new(4, 2, 2, 1),
@@ -398,6 +433,13 @@ pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
         2,
         4096,
     );
+    // Armed stochastic axis with awkward values, so the round-trip
+    // covers the jitter tag/param/seed/replicate encoding too.
+    cfg.jitter = Jitter {
+        dist: JitterDist::Lognormal { sigma: 1.0 / 7.0 },
+        seed: 0xDEAD_BEEF_F00D_CAFE,
+        replicates: 12,
+    };
     let key = ConfigKey::of(&cfg);
     let case = CaseResult {
         arch: cfg.arch.name,
@@ -425,6 +467,9 @@ pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
             energy_per_token_j: -0.0,
             world: 16,
         },
+        iter_p50: 1.0 / 3.0,
+        iter_p95: 0.4375,
+        iter_p99: 5.0 / 11.0,
         mem_per_gpu: 6.25e10,
     };
     (key, case)
@@ -457,6 +502,27 @@ mod tests {
             case2.metrics.energy_per_token_j.to_bits(),
             "negative zero must survive"
         );
+    }
+
+    #[test]
+    fn jitter_axis_round_trips_and_separates_seeds() {
+        let (key, case) = sample();
+        let bytes = encode_record(&key, &case);
+        let (key2, case2) = decode_record(&bytes).unwrap();
+        assert_eq!(key2.jitter, key.jitter);
+        assert_eq!(case2.iter_p50.to_bits(), case.iter_p50.to_bits());
+        assert_eq!(case2.iter_p95.to_bits(), case.iter_p95.to_bits());
+        assert_eq!(case2.iter_p99.to_bits(), case.iter_p99.to_bits());
+
+        // A different seed (or replicate count) is a different record:
+        // the encoded keys must differ even though every workload axis
+        // is identical — the store-dedup seed-conflation regression.
+        let mut reseeded = key;
+        reseeded.jitter.seed ^= 1;
+        assert_ne!(encode_record(&reseeded, &case), bytes);
+        let mut more_reps = key;
+        more_reps.jitter.replicates += 1;
+        assert_ne!(encode_record(&more_reps, &case), bytes);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::config::RunConfig;
 use crate::hardware::HwId;
 use crate::model;
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Schedule, Sharding, SimConfig};
+use crate::sim::{Jitter, Schedule, Sharding, SimConfig};
 use crate::topology::Cluster;
 use crate::util::args::Args;
 
@@ -31,6 +31,42 @@ pub fn parse_sharding(s: &str) -> Result<Sharding, String> {
 
 pub fn parse_schedule(s: &str) -> Result<Schedule, String> {
     crate::config::parse_schedule(s).map_err(|e| format!("--schedule: {e}"))
+}
+
+/// Parse the shared stochastic flags — `--jitter lognormal:S|pareto:A`,
+/// `--seed N` (decimal or `0x` hex), `--seeds K` replicates — into a
+/// [`Jitter`] spec. Flags left unset keep the unarmed defaults;
+/// `Jitter::validate` (run by the callers' config/study validation)
+/// rejects `--seed`/`--seeds` without an armed `--jitter`.
+pub fn jitter_from_args(args: &Args) -> Result<Jitter, String> {
+    let mut j = Jitter::OFF;
+    if let Some(s) = args.get("jitter") {
+        j.dist = crate::config::parse_jitter(s)
+            .map_err(|e| format!("--jitter: {e}"))?;
+    }
+    if let Some(s) = args.get("seed") {
+        j.seed = parse_seed(s).map_err(|e| format!("--seed: {e}"))?;
+    }
+    if let Some(s) = args.get("seeds") {
+        j.replicates = s.parse::<u32>().map_err(|_| {
+            format!("--seeds: '{s}' is not a replicate count")
+        })?;
+    }
+    Ok(j)
+}
+
+/// Parse a `--seed` value: decimal or `0x`-prefixed hex u64. Shared by
+/// the grid flags above and the scenario seed override (CLI + serve).
+pub fn parse_seed(s: &str) -> Result<u64, String> {
+    let parsed = if let Some(hex) =
+        s.strip_prefix("0x").or_else(|| s.strip_prefix("0X"))
+    {
+        u64::from_str_radix(hex, 16)
+    } else {
+        s.parse::<u64>()
+    };
+    parsed
+        .map_err(|_| format!("'{s}' is not a u64 seed (decimal or 0x hex)"))
 }
 
 /// Parse a "tp2pp4cp1"-style plan shape (missing degrees default to 1).
@@ -116,6 +152,7 @@ pub fn sim_config_from_args(args: &Args) -> Result<SimConfig, String> {
     if let Some(s) = args.get("schedule") {
         cfg.schedule = parse_schedule(s)?;
     }
+    cfg.jitter = jitter_from_args(args)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -233,6 +270,8 @@ pub fn study_from_args(args: &Args) -> Result<Study, String> {
     if cap > 0.0 {
         b = b.memory_cap(cap);
     }
+    let jitter = jitter_from_args(args)?;
+    b = b.jitter(jitter.dist).seed(jitter.seed).seeds(jitter.replicates);
     b.try_build()
 }
 
@@ -261,6 +300,55 @@ mod tests {
         assert_eq!(cfg.arch.name, "llama-7b");
         assert_eq!(cfg.cluster.nodes, 32);
         assert_eq!(cfg.seq_len, 4096);
+    }
+
+    #[test]
+    fn jitter_flags_arm_configs_and_grids() {
+        // Simulate-style: --jitter + --seed lands on the SimConfig.
+        let cfg = sim_config_from_args(&parse(
+            "simulate --nodes 2 --jitter lognormal:0.2 --seed 0xBEEF",
+        ))
+        .unwrap();
+        assert_eq!(
+            cfg.jitter.dist,
+            crate::sim::JitterDist::Lognormal { sigma: 0.2 }
+        );
+        assert_eq!(cfg.jitter.seed, 0xBEEF);
+
+        // Study-style: --seeds fans every grid point into replicates.
+        let study = study_from_args(&parse(
+            "study --grid --nodes 2 --gbs 48 --jitter pareto:2.5 \
+             --seed 7 --seeds 8",
+        ))
+        .unwrap();
+        assert_eq!(study.jitter().seed, 7);
+        assert_eq!(study.jitter().replicates, 8);
+        assert!(study
+            .expand()
+            .iter()
+            .all(|p| p.cfg.jitter == study.jitter()));
+
+        // --seed without --jitter is the documented arming error, on
+        // both paths.
+        let err = sim_config_from_args(&parse("simulate --seed 7"))
+            .unwrap_err();
+        assert!(err.contains("jitter=off"), "{err}");
+        let err =
+            study_from_args(&parse("study --grid --nodes 2 --seeds 4"))
+                .unwrap_err();
+        assert!(err.contains("jitter=off"), "{err}");
+
+        // Malformed values name the flag.
+        let err = sim_config_from_args(&parse(
+            "simulate --jitter gauss:1",
+        ))
+        .unwrap_err();
+        assert!(err.starts_with("--jitter: "), "{err}");
+        let err = sim_config_from_args(&parse(
+            "simulate --jitter lognormal:0.2 --seed banana",
+        ))
+        .unwrap_err();
+        assert!(err.starts_with("--seed: "), "{err}");
     }
 
     #[test]

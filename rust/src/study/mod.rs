@@ -49,16 +49,18 @@ pub mod scenario;
 pub mod sink;
 pub mod table;
 
-pub use runner::{Cancelled, CaseResult, StudyResult, StudyRunner};
-pub use scenario::{Registry, Scenario};
+pub use runner::{
+    Cancelled, CaseResult, Objective, StudyResult, StudyRunner,
+};
+pub use scenario::{Registry, Scenario, ScenarioOpts};
 pub use sink::{ConsoleSink, CsvSink, JsonSink, Sink};
-pub use table::{Column, Table};
+pub use table::{grid_columns, Column, Table};
 
 use crate::hardware::HwId;
 use crate::memory;
 use crate::model::TransformerArch;
 use crate::parallelism::{enumerate_plans, ParallelPlan};
-use crate::sim::{Schedule, Sharding, SimConfig};
+use crate::sim::{Jitter, JitterDist, Schedule, Sharding, SimConfig};
 use crate::topology::Cluster;
 
 /// How the parallel-plan axis expands for each (generation, nodes)
@@ -200,6 +202,28 @@ pub fn bench_pinned_hw_study() -> Study {
         .build()
 }
 
+/// Pinned stochastic companion grid: the Fig. 6 core plans under a
+/// seeded lognormal straggler distribution with 8 replicates per
+/// config, so `dtsim bench` and CI's `BENCH_study.json` track the
+/// replicated-evaluation hot path (seeded-grid fields are
+/// informational — no baseline gate). Pinned for cross-PR
+/// comparability.
+pub fn bench_pinned_stochastic_study() -> Study {
+    Study::builder("bench-stochastic")
+        .title("pinned benchmark grid: seeded straggler replicates")
+        .arch(crate::model::LLAMA_7B)
+        .generation(HwId::H100)
+        .nodes([16])
+        .plan_shapes(&[(1, 1, 1), (2, 1, 1), (4, 1, 1), (1, 4, 1)])
+        .global_batches([256])
+        .micro_batches([1, 2])
+        .memory_cap(0.94)
+        .jitter(JitterDist::Lognormal { sigma: 0.15 })
+        .seed(7)
+        .seeds(8)
+        .build()
+}
+
 /// One expanded, validated grid point plus its memory footprint.
 #[derive(Debug, Clone, Copy)]
 pub struct StudyPoint {
@@ -225,6 +249,11 @@ pub struct ConfigKey {
     pub(crate) sharding: Sharding,
     pub(crate) schedule: Schedule,
     pub(crate) prefetch: bool,
+    /// The stochastic axis (distribution, base seed, replicate count).
+    /// Part of the key so the `ResultStore` dedup cache never conflates
+    /// differently-seeded evaluations of the same workload: a seed-7
+    /// table answered from a seed-8 run would be silently wrong.
+    pub(crate) jitter: Jitter,
 }
 
 impl ConfigKey {
@@ -241,6 +270,7 @@ impl ConfigKey {
             sharding: cfg.sharding,
             schedule: cfg.schedule,
             prefetch: cfg.prefetch,
+            jitter: cfg.jitter,
         }
     }
 }
@@ -261,6 +291,7 @@ pub struct Study {
     schedules: Vec<Schedule>,
     prefetch: Vec<bool>,
     mem_cap_frac: Option<f64>,
+    jitter: Jitter,
 }
 
 impl Study {
@@ -279,7 +310,14 @@ impl Study {
             schedules: vec![Schedule::OneFOneB],
             prefetch: vec![true],
             mem_cap_frac: None,
+            jitter: Jitter::OFF,
         }
+    }
+
+    /// The study's stochastic axis ([`Jitter::OFF`] unless armed via
+    /// [`StudyBuilder::jitter`]).
+    pub fn jitter(&self) -> Jitter {
+        self.jitter
     }
 
     /// Expand the grid into validated, memory-feasible simulation
@@ -355,6 +393,7 @@ impl Study {
                         sharding,
                         schedule,
                         prefetch,
+                        jitter: self.jitter,
                     };
                     if cfg.validate().is_err() {
                         continue;
@@ -391,6 +430,7 @@ pub struct StudyBuilder {
     schedules: Vec<Schedule>,
     prefetch: Vec<bool>,
     mem_cap_frac: Option<f64>,
+    jitter: Jitter,
 }
 
 impl StudyBuilder {
@@ -517,6 +557,34 @@ impl StudyBuilder {
         self
     }
 
+    /// Arm the stochastic network-jitter axis: every grid point is
+    /// simulated with per-op slowdown factors drawn from `dist`
+    /// (docs/network.md). Combine with [`Self::seed`] /
+    /// [`Self::seeds`]; leaving it unarmed keeps the study on the
+    /// bit-exact deterministic path.
+    pub fn jitter(mut self, dist: JitterDist) -> Self {
+        self.jitter.dist = dist;
+        self
+    }
+
+    /// Base seed for the armed jitter distribution. Deliberately
+    /// shared across every config in the grid (common random numbers):
+    /// config A vs config B under seed 7 differ only by the configs,
+    /// not by draw luck.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.jitter.seed = seed;
+        self
+    }
+
+    /// Evaluate each config as a distribution over `n` replicates
+    /// (seeds derived from the base seed via
+    /// [`crate::sim::replicate_seed`]); `CaseResult` then reports
+    /// p50/p95/p99 iteration time over the replicates.
+    pub fn seeds(mut self, n: u32) -> Self {
+        self.jitter.replicates = n;
+        self
+    }
+
     /// Build, panicking on a malformed axis declaration (programmer
     /// error — figure definitions are static). Use [`Self::try_build`]
     /// for user-supplied grids.
@@ -554,6 +622,9 @@ impl StudyBuilder {
                 return Err(format!("memory cap {frac} outside (0, 1]"));
             }
         }
+        self.jitter
+            .validate()
+            .map_err(|e| format!("study '{}': {e}", self.name))?;
         Ok(Study {
             name: self.name,
             title: self.title,
@@ -568,6 +639,7 @@ impl StudyBuilder {
             schedules: self.schedules,
             prefetch: self.prefetch,
             mem_cap_frac: self.mem_cap_frac,
+            jitter: self.jitter,
         })
     }
 }
@@ -766,6 +838,7 @@ mod tests {
                 ..crate::hardware::specs::H100.clone()
             },
             freq_curve: None,
+            fabric: crate::hardware::FabricSpec::DEDICATED,
             derived: false,
         }).unwrap();
         let s = Study::builder("hw-axis")
@@ -795,6 +868,75 @@ mod tests {
         let keys: std::collections::HashSet<ConfigKey> =
             pts.iter().map(|p| ConfigKey::of(&p.cfg)).collect();
         assert_eq!(keys.len(), pts.len());
+    }
+
+    #[test]
+    fn seed_axis_hashes_into_config_key() {
+        // The ResultStore dedup regression (ISSUE 8 satellite): the
+        // same workload under different seeds, replicate counts, or
+        // distributions must never share a cache key, while the same
+        // armed spec keys identically.
+        let grid = |seed: u64, n: u32| {
+            Study::builder("seeded")
+                .arch(LLAMA_7B)
+                .nodes([1])
+                .batch_per_replica(2)
+                .micro_batches([2])
+                .jitter(JitterDist::Lognormal { sigma: 0.2 })
+                .seed(seed)
+                .seeds(n)
+                .build()
+                .expand()
+        };
+        let k = |pts: &[StudyPoint]| ConfigKey::of(&pts[0].cfg);
+        let a = k(&grid(7, 4));
+        assert_eq!(a, k(&grid(7, 4)));
+        assert_ne!(a, k(&grid(8, 4)), "seeds must not alias");
+        assert_ne!(a, k(&grid(7, 8)), "replicate counts must not alias");
+        let off = Study::builder("off")
+            .arch(LLAMA_7B)
+            .nodes([1])
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .build()
+            .expand();
+        assert_ne!(a, k(&off), "armed and off must not alias");
+        // Expansion stamps the armed jitter onto every point.
+        assert_eq!(grid(7, 4)[0].cfg.jitter.seed, 7);
+        assert_eq!(grid(7, 4)[0].cfg.jitter.replicates, 4);
+        assert!(off[0].cfg.jitter.is_off());
+    }
+
+    #[test]
+    fn builder_rejects_seed_without_armed_jitter() {
+        // Jitter::validate keeps the off spec canonical so store keys
+        // never alias; the builder surfaces that at build time.
+        let err = Study::builder("seed-off")
+            .arch(LLAMA_7B)
+            .seed(7)
+            .try_build()
+            .unwrap_err();
+        assert!(err.contains("jitter=off"), "{err}");
+        assert!(Study::builder("reps-off")
+            .arch(LLAMA_7B)
+            .seeds(4)
+            .try_build()
+            .is_err());
+        assert!(Study::builder("bad-sigma")
+            .arch(LLAMA_7B)
+            .jitter(JitterDist::Lognormal { sigma: -1.0 })
+            .try_build()
+            .is_err());
+    }
+
+    #[test]
+    fn pinned_stochastic_bench_grid_is_armed() {
+        let s = bench_pinned_stochastic_study();
+        assert_eq!(s.jitter().replicates, 8);
+        assert_eq!(s.jitter().seed, 7);
+        let pts = s.expand();
+        assert!(!pts.is_empty());
+        assert!(pts.iter().all(|p| !p.cfg.jitter.is_off()));
     }
 
     #[test]

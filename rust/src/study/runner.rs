@@ -40,6 +40,7 @@ use crate::metrics::{self, Metrics};
 use crate::parallelism::ParallelPlan;
 use crate::sim::{self, Schedule, Sharding, SimArena, SimConfig};
 use crate::store::{MemStore, ResultStore, StoreStats};
+use crate::util::stats;
 
 use super::table::{Column, Table};
 use super::{ConfigKey, Study, StudyPoint};
@@ -58,7 +59,51 @@ pub struct CaseResult {
     pub sharding: Sharding,
     pub schedule: Schedule,
     pub metrics: Metrics,
+    /// Median iteration time over the point's seeded replicates. When
+    /// jitter is off (or the point has a single replicate) every
+    /// percentile equals `metrics.iter_time` bitwise — the distribution
+    /// is a point mass at the deterministic run.
+    pub iter_p50: f64,
+    /// 95th-percentile iteration time over the seeded replicates.
+    pub iter_p95: f64,
+    /// 99th-percentile iteration time over the seeded replicates.
+    pub iter_p99: f64,
     pub mem_per_gpu: f64,
+}
+
+impl CaseResult {
+    /// Tokens processed per iteration (global batch × sequence length)
+    /// — the numerator of every throughput objective.
+    pub fn tokens_per_iter(&self) -> f64 {
+        self.global_batch as f64 * self.seq_len as f64
+    }
+}
+
+/// Optimization target for [`StudyRunner::best_of_by`] and
+/// [`StudyResult::best_by`]. Both objectives are of the form
+/// `tokens / time` with `time ≥` the comm-free analytic lower bound
+/// (jitter factors are clamped at 1, so a seeded replicate is never
+/// faster than the deterministic run), which keeps the bound-and-prune
+/// throughput bound `tokens / lower_bound` sound for every variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// Mean throughput: tokens / mean iteration time (the classic
+    /// deterministic objective; [`StudyRunner::best_of`] uses this).
+    MeanWps,
+    /// Tail-aware throughput: tokens / p95 iteration time. With jitter
+    /// off every percentile equals the deterministic iteration time,
+    /// so this scores bitwise-identically to [`Objective::MeanWps`].
+    P95Wps,
+}
+
+impl Objective {
+    /// The score `best_of_by`/`best_by` maximize for `case`.
+    pub fn score(&self, case: &CaseResult) -> f64 {
+        match self {
+            Objective::MeanWps => case.metrics.global_wps,
+            Objective::P95Wps => case.tokens_per_iter() / case.iter_p95,
+        }
+    }
 }
 
 /// One worker's share of the bound-and-prune search: claim candidates
@@ -76,6 +121,7 @@ fn bound_search_loop(
     slots: &[OnceLock<CaseResult>],
     bound: &AtomicU64,
     cancel: &AtomicBool,
+    objective: Objective,
     arena: &mut SimArena,
 ) {
     loop {
@@ -96,13 +142,14 @@ fn bound_search_loop(
             break;
         }
         let case = evaluate_point(&points[idx], arena);
-        bound.fetch_max(case.metrics.global_wps.to_bits(),
+        bound.fetch_max(objective.score(&case).to_bits(),
                         Ordering::Relaxed);
         let _ = slots[i].set(case);
     }
 }
 
 fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
+    let (metrics, p50, p95, p99) = evaluate_replicated(&p.cfg, arena);
     CaseResult {
         arch: p.cfg.arch.name,
         hw: p.cfg.cluster.node.gpu,
@@ -113,9 +160,73 @@ fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
         seq_len: p.cfg.seq_len,
         sharding: p.cfg.sharding,
         schedule: p.cfg.schedule,
-        metrics: metrics::evaluate_in(&p.cfg, arena),
+        metrics,
+        iter_p50: p50,
+        iter_p95: p95,
+        iter_p99: p99,
         mem_per_gpu: p.mem_per_gpu,
     }
+}
+
+/// Evaluate a config's seeded replicate distribution. Replicate `r`
+/// re-runs the simulation with seed [`sim::Jitter::replicate_seed`]
+/// `(base, r)`; the percentiles summarize the iteration-time sample
+/// and the headline metrics derive from the replicate-mean report
+/// (per-stage detail and tag totals are distribution-level noise and
+/// stay empty in the aggregate — the metric derivation never reads
+/// them). The single-replicate path — which includes every unarmed
+/// config — takes the exact historical route, so jitter=off results
+/// are bit-identical to the pre-stochastic runner.
+fn evaluate_replicated(
+    cfg: &SimConfig,
+    arena: &mut SimArena,
+) -> (Metrics, f64, f64, f64) {
+    let n = cfg.jitter.replicates as usize;
+    if n == 1 {
+        let m = metrics::evaluate_in(cfg, arena);
+        let t = m.iter_time;
+        return (m, t, t, t);
+    }
+    let mut times = Vec::with_capacity(n);
+    let mut agg = sim::IterationReport {
+        iter_time: 0.0,
+        stages: Vec::new(),
+        compute_busy: 0.0,
+        comm_busy: 0.0,
+        comm_kernel_time: 0.0,
+        exposed_comm: 0.0,
+        idle: 0.0,
+        comm_by_tag: sim::TagTotals::new(),
+    };
+    for r in 0..n {
+        let mut c = *cfg;
+        c.jitter.seed = sim::Jitter::replicate_seed(cfg.jitter.seed, r);
+        c.jitter.replicates = 1;
+        let rep = sim::simulate_in(&c, arena);
+        times.push(rep.iter_time);
+        agg.iter_time += rep.iter_time;
+        agg.compute_busy += rep.compute_busy;
+        agg.comm_busy += rep.comm_busy;
+        agg.comm_kernel_time += rep.comm_kernel_time;
+        agg.exposed_comm += rep.exposed_comm;
+        agg.idle += rep.idle;
+    }
+    // Fixed-order mean (replicate order): deterministic across thread
+    // counts because one worker owns the whole replicate loop.
+    let inv = 1.0 / n as f64;
+    agg.iter_time *= inv;
+    agg.compute_busy *= inv;
+    agg.comm_busy *= inv;
+    agg.comm_kernel_time *= inv;
+    agg.exposed_comm *= inv;
+    agg.idle *= inv;
+    let metrics = metrics::from_report(cfg, &agg);
+    (
+        metrics,
+        stats::percentile(&times, 50.0),
+        stats::percentile(&times, 95.0),
+        stats::percentile(&times, 99.0),
+    )
 }
 
 /// A streamed/cancellable run was aborted by its cancellation flag.
@@ -374,7 +485,21 @@ impl StudyRunner {
     /// (max wps, lowest grid index) rule. Skipped points are reported
     /// via [`Self::pruned_points`].
     pub fn best_of(&mut self, study: &Study) -> Option<CaseResult> {
-        self.best_of_cancellable(study, &NO_CANCEL)
+        self.best_of_by(study, Objective::MeanWps)
+    }
+
+    /// [`Self::best_of`] under an explicit [`Objective`] — e.g.
+    /// `Objective::P95Wps` finds the configuration with the best
+    /// tail-latency throughput over a seeded study. Same bound-and-prune
+    /// machinery and the same exactness proof: the analytic bound
+    /// `tokens / comm_free_lower_bound` dominates every objective's
+    /// score because jitter can only slow an iteration down.
+    pub fn best_of_by(
+        &mut self,
+        study: &Study,
+        objective: Objective,
+    ) -> Option<CaseResult> {
+        self.best_of_by_cancellable(study, objective, &NO_CANCEL)
             .expect("search without a cancel source cannot be cancelled")
     }
 
@@ -388,6 +513,17 @@ impl StudyRunner {
     pub fn best_of_cancellable(
         &mut self,
         study: &Study,
+        cancel: &AtomicBool,
+    ) -> Result<Option<CaseResult>, Cancelled> {
+        self.best_of_by_cancellable(study, Objective::MeanWps, cancel)
+    }
+
+    /// [`Self::best_of_by`] with per-request cancellation — the full
+    /// entry point the other three `best_of*` variants delegate to.
+    pub fn best_of_by_cancellable(
+        &mut self,
+        study: &Study,
+        objective: Objective,
         cancel: &AtomicBool,
     ) -> Result<Option<CaseResult>, Cancelled> {
         let points = study.expand();
@@ -425,10 +561,10 @@ impl StudyRunner {
         let mut todo: Vec<(usize, f64)> = Vec::new(); // (grid idx, ub)
         for (idx, p) in points.iter().enumerate() {
             if let Some(case) = known.get(&keys[idx]) {
-                raise(case.metrics.global_wps, idx, &mut best);
+                raise(objective.score(case), idx, &mut best);
             } else if seen.insert(keys[idx]) {
                 if let Some(case) = self.store.get(&keys[idx]) {
-                    raise(case.metrics.global_wps, idx, &mut best);
+                    raise(objective.score(&case), idx, &mut best);
                     known.insert(keys[idx], case);
                 } else {
                     // Deflating the time bound inflates the throughput
@@ -457,7 +593,7 @@ impl StudyRunner {
         let next = AtomicUsize::new(0);
         if workers == 1 {
             bound_search_loop(&next, &todo, &points, &slots, &bound,
-                              cancel, &mut self.arenas[0]);
+                              cancel, objective, &mut self.arenas[0]);
         } else {
             std::thread::scope(|s| {
                 let (next, todo, points, slots, bound) =
@@ -465,7 +601,8 @@ impl StudyRunner {
                 for arena in self.arenas.iter_mut().take(workers) {
                     s.spawn(move || {
                         bound_search_loop(next, todo, points, slots,
-                                          bound, cancel, arena);
+                                          bound, cancel, objective,
+                                          arena);
                     });
                 }
             });
@@ -482,7 +619,7 @@ impl StudyRunner {
             match slot.into_inner() {
                 Some(case) => {
                     self.evaluated += 1;
-                    raise(case.metrics.global_wps, idx, &mut best);
+                    raise(objective.score(&case), idx, &mut best);
                     self.store.put(keys[idx], case.clone());
                     known.insert(keys[idx], case);
                 }
@@ -659,17 +796,25 @@ impl StudyResult {
 
     /// Highest-throughput case (first on ties, matching a stable sort).
     pub fn best(&self) -> Option<&CaseResult> {
-        let mut best: Option<&CaseResult> = None;
+        self.best_by(Objective::MeanWps)
+    }
+
+    /// Highest-scoring case under an explicit [`Objective`] (first on
+    /// ties, matching `best`'s grid-order tie-break) — the exhaustive
+    /// reference [`StudyRunner::best_of_by`] must agree with.
+    pub fn best_by(&self, objective: Objective) -> Option<&CaseResult> {
+        let mut best: Option<(&CaseResult, f64)> = None;
         for c in &self.cases {
+            let score = objective.score(c);
             let better = match best {
                 None => true,
-                Some(b) => c.metrics.global_wps > b.metrics.global_wps,
+                Some((_, bs)) => score > bs,
             };
             if better {
-                best = Some(c);
+                best = Some((c, score));
             }
         }
-        best
+        best.map(|(c, _)| c)
     }
 
     /// Best case per key, keys in first-occurrence order (e.g. the
@@ -846,6 +991,9 @@ mod tests {
                 energy_per_token_j: 1.0,
                 world: 8,
             },
+            iter_p50: 1.0,
+            iter_p95: 1.0,
+            iter_p99: 1.0,
             mem_per_gpu: 1e9,
         }
     }
@@ -1189,6 +1337,131 @@ mod tests {
         assert_eq!(got.micro_batch, expect.micro_batch);
         assert_eq!(got.metrics.global_wps.to_bits(),
                    expect.metrics.global_wps.to_bits());
+    }
+
+    /// `small_sweep` with the straggler axis armed: same grid, every
+    /// point evaluated as `reps` seeded lognormal replicates.
+    fn seeded_sweep(name: &str, seed: u64, reps: u32) -> Study {
+        Study::builder(name)
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([64])
+            .micro_batch_divisors()
+            .memory_cap(0.94)
+            .jitter(crate::sim::JitterDist::Lognormal { sigma: 0.2 })
+            .seed(seed)
+            .seeds(reps)
+            .build()
+    }
+
+    #[test]
+    fn unarmed_percentiles_are_the_deterministic_point_mass() {
+        // jitter=off: the distribution is a point mass at the
+        // deterministic run, so every percentile equals iter_time
+        // bitwise and the p95 objective scores exactly like the mean
+        // objective — the exactness contract the store/codec and the
+        // golden figures rely on.
+        let res =
+            StudyRunner::sequential().run(&small_sweep("point-mass"));
+        assert!(!res.cases.is_empty());
+        for c in &res.cases {
+            let t = c.metrics.iter_time.to_bits();
+            assert_eq!(c.iter_p50.to_bits(), t);
+            assert_eq!(c.iter_p95.to_bits(), t);
+            assert_eq!(c.iter_p99.to_bits(), t);
+            assert_eq!(Objective::P95Wps.score(c).to_bits(),
+                       Objective::MeanWps.score(c).to_bits());
+        }
+    }
+
+    #[test]
+    fn seeded_replicates_report_ordered_percentiles() {
+        let det = StudyRunner::sequential().run(&small_sweep("det-ref"));
+        let res =
+            StudyRunner::sequential().run(&seeded_sweep("dist", 7, 16));
+        assert_eq!(det.cases.len(), res.cases.len());
+        let mut spread = false;
+        for (d, c) in det.cases.iter().zip(&res.cases) {
+            assert!(c.iter_p50 <= c.iter_p95 && c.iter_p95 <= c.iter_p99,
+                    "percentiles must be ordered");
+            // Slowdown factors are clamped at 1: no replicate — hence
+            // no percentile — beats the deterministic run.
+            assert!(c.iter_p50 >= d.metrics.iter_time,
+                    "{} < {}", c.iter_p50, d.metrics.iter_time);
+            if c.iter_p99 > c.iter_p50 {
+                spread = true;
+            }
+        }
+        assert!(spread, "a seeded grid must show nonzero spread");
+    }
+
+    #[test]
+    fn seeded_grid_replays_identically_across_thread_counts() {
+        let study = seeded_sweep("replay", 7, 8);
+        let a = StudyRunner::sequential().run(&study);
+        let b = StudyRunner::new(8).run(&study);
+        assert_eq!(a.cases.len(), b.cases.len());
+        for (x, y) in a.cases.iter().zip(&b.cases) {
+            assert_eq!(x.iter_p50.to_bits(), y.iter_p50.to_bits());
+            assert_eq!(x.iter_p95.to_bits(), y.iter_p95.to_bits());
+            assert_eq!(x.iter_p99.to_bits(), y.iter_p99.to_bits());
+            assert_eq!(x.metrics.global_wps.to_bits(),
+                       y.metrics.global_wps.to_bits());
+        }
+        // A different base seed is a different distribution.
+        let c =
+            StudyRunner::sequential().run(&seeded_sweep("replay-b", 8, 8));
+        assert!(a.cases.iter().zip(&c.cases).any(
+            |(x, y)| x.iter_p95.to_bits() != y.iter_p95.to_bits()),
+            "seed 7 and seed 8 grids must diverge somewhere");
+    }
+
+    #[test]
+    fn store_never_conflates_distinct_seed_points() {
+        // Regression for the ConfigKey seed axis: same grid at two
+        // seeds must simulate twice; the same seed again is pure hits
+        // and replays bitwise.
+        let store: Arc<dyn ResultStore> = Arc::new(MemStore::new());
+        let mut runner = StudyRunner::with_store(1, Arc::clone(&store));
+        let a = runner.run(&seeded_sweep("seed-a", 7, 4));
+        let evaluated = runner.stats().0;
+        assert!(evaluated > 0);
+        runner.run(&seeded_sweep("seed-b", 8, 4));
+        assert_eq!(runner.stats().0, 2 * evaluated,
+                   "a different seed must simulate fresh points");
+        let a2 = runner.run(&seeded_sweep("seed-a-again", 7, 4));
+        assert_eq!(runner.stats().0, 2 * evaluated,
+                   "the same seed must answer from the store");
+        for (x, y) in a.cases.iter().zip(&a2.cases) {
+            assert_eq!(x.iter_p95.to_bits(), y.iter_p95.to_bits());
+            assert_eq!(x.metrics.global_wps.to_bits(),
+                       y.metrics.global_wps.to_bits());
+        }
+    }
+
+    #[test]
+    fn p95_best_of_matches_exhaustive_on_a_seeded_grid() {
+        // Winner identity for the quantile objective: bound-and-prune
+        // under P95Wps must reproduce the exhaustive sweep's best_by
+        // winner — plan, schedule, and score bits — at every thread
+        // count, with the accounting identity intact.
+        let study = seeded_sweep("p95-prune", 11, 8);
+        let full = StudyRunner::sequential().run(&study);
+        let expect = full.best_by(Objective::P95Wps).unwrap();
+        for threads in [1usize, 4] {
+            let mut runner = StudyRunner::new(threads);
+            let got =
+                runner.best_of_by(&study, Objective::P95Wps).unwrap();
+            assert_eq!(got.plan, expect.plan, "threads={threads}");
+            assert_eq!(got.micro_batch, expect.micro_batch);
+            assert_eq!(got.iter_p95.to_bits(), expect.iter_p95.to_bits());
+            assert_eq!(got.metrics.global_wps.to_bits(),
+                       expect.metrics.global_wps.to_bits());
+            let (evaluated, requested) = runner.stats();
+            assert_eq!(evaluated + runner.pruned_points(), requested,
+                       "threads={threads}");
+        }
     }
 
     #[test]

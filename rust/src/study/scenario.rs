@@ -12,6 +12,18 @@ use anyhow::Result;
 use super::runner::StudyRunner;
 use super::table::Table;
 
+/// Per-invocation options a scenario may honor. Every field is
+/// optional; the plain [`Scenario::tables`] entry point passes the
+/// defaults.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScenarioOpts {
+    /// Base-seed override for seeded (stochastic) scenarios — `--seed`
+    /// on the CLI, a `"seed"` field in serve requests. Deterministic
+    /// scenarios ignore it; seeded scenarios replay byte-identically
+    /// for the same value.
+    pub seed: Option<u64>,
+}
+
 /// A named, registrable experiment.
 pub trait Scenario: Send + Sync {
     /// Registry key (`dtsim study <name>`).
@@ -31,6 +43,19 @@ pub trait Scenario: Send + Sync {
     /// Execute and render. The runner is shared so repeated
     /// configurations across scenarios simulate once.
     fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>>;
+
+    /// [`Scenario::tables`] with per-invocation [`ScenarioOpts`]. The
+    /// default ignores the options, so deterministic scenarios
+    /// implement only `tables`; seeded scenarios override this and
+    /// route `tables` through it with the defaults.
+    fn tables_with(
+        &self,
+        runner: &mut StudyRunner,
+        opts: ScenarioOpts,
+    ) -> Result<Vec<Table>> {
+        let _ = opts;
+        self.tables(runner)
+    }
 }
 
 /// An ordered collection of scenarios, looked up by name.

@@ -156,6 +156,14 @@ pub enum Column {
     WpsPerWatt,
     EnergyPerTokenJ,
     MemGb,
+    /// Median iteration time over a point's seeded replicates, ms.
+    IterP50Ms,
+    /// 95th-percentile iteration time over the seeded replicates, ms.
+    IterP95Ms,
+    /// 99th-percentile iteration time over the seeded replicates, ms.
+    IterP99Ms,
+    /// Tail-aware throughput: tokens / p95 iteration time.
+    P95Wps,
 }
 
 impl Column {
@@ -183,6 +191,10 @@ impl Column {
             Column::WpsPerWatt => "wps_per_watt",
             Column::EnergyPerTokenJ => "j_per_token",
             Column::MemGb => "mem_gb",
+            Column::IterP50Ms => "p50_ms",
+            Column::IterP95Ms => "p95_ms",
+            Column::IterP99Ms => "p99_ms",
+            Column::P95Wps => "p95_wps",
         }
     }
 
@@ -210,8 +222,47 @@ impl Column {
             Column::WpsPerWatt => f2(m.wps_per_watt),
             Column::EnergyPerTokenJ => f2(m.energy_per_token_j),
             Column::MemGb => f2(c.mem_per_gpu / 1e9),
+            Column::IterP50Ms => ms(c.iter_p50),
+            Column::IterP95Ms => ms(c.iter_p95),
+            Column::IterP99Ms => ms(c.iter_p99),
+            Column::P95Wps => {
+                f0(super::runner::Objective::P95Wps.score(c))
+            }
         }
     }
+}
+
+/// The ad-hoc `--grid` table layout, shared by `dtsim study --grid`
+/// and serve mode's `study-grid` so both render byte-identical CSV for
+/// the same flags. An unarmed grid keeps the historical column set
+/// untouched (golden-figure byte stability); a seeded grid appends the
+/// iteration-time percentile columns.
+pub fn grid_columns(jittered: bool) -> Vec<Column> {
+    let mut cols = vec![
+        Column::Arch,
+        Column::Gen,
+        Column::Nodes,
+        Column::Plan,
+        Column::ShardingKind,
+        Column::ScheduleKind,
+        Column::Mbs,
+        Column::Gbs,
+        Column::SeqLen,
+        Column::GlobalWps,
+        Column::PerGpuWps,
+        Column::Mfu,
+        Column::ExposedMs,
+        Column::WpsPerWatt,
+        Column::MemGb,
+    ];
+    if jittered {
+        cols.extend([
+            Column::IterP50Ms,
+            Column::IterP95Ms,
+            Column::IterP99Ms,
+        ]);
+    }
+    cols
 }
 
 #[cfg(test)]
@@ -228,6 +279,19 @@ mod tests {
         // scenarios get "hardware" for the same cell.
         assert_eq!(Column::Gen.header(), "gen");
         assert_eq!(Column::Hardware.header(), "hardware");
+    }
+
+    #[test]
+    fn grid_columns_append_percentiles_only_when_armed() {
+        let off = grid_columns(false);
+        let on = grid_columns(true);
+        assert_eq!(&on[..off.len()], &off[..],
+                   "armed grids must extend, never reorder, the layout");
+        assert_eq!(&on[off.len()..],
+                   &[Column::IterP50Ms, Column::IterP95Ms,
+                     Column::IterP99Ms]);
+        assert_eq!(Column::IterP95Ms.header(), "p95_ms");
+        assert_eq!(Column::P95Wps.header(), "p95_wps");
     }
 
     #[test]

@@ -1,10 +1,35 @@
 //! Property-testing harness (proptest is not vendored on this image).
 //!
 //! `check` runs a property over `cases` seeded random inputs; on failure
-//! it reports the failing seed so the case can be replayed exactly. Used
-//! by `rust/tests/proptest_invariants.rs` and module-level invariants.
+//! it reports the failing seed and a one-line repro command. Setting
+//! `DTSIM_PROPTEST_SEED=<seed>` (decimal or `0x` hex) replays exactly
+//! that case seed, skipping the rest of the run. `check_shrinking`
+//! additionally minimizes the failing input through a caller-provided
+//! shrink function before reporting. Used by
+//! `rust/tests/proptest_invariants.rs`,
+//! `rust/tests/fastpath_vs_engine.rs`, and module-level invariants.
 
 use super::rng::Rng;
+
+/// Replay seed from the environment: `DTSIM_PROPTEST_SEED=123` or
+/// `DTSIM_PROPTEST_SEED=0xd15c0`.
+fn env_replay_seed() -> Option<u64> {
+    let raw = std::env::var("DTSIM_PROPTEST_SEED").ok()?;
+    let raw = raw.trim();
+    let parsed = match raw.strip_prefix("0x").or_else(|| raw.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => raw.parse(),
+    };
+    match parsed {
+        Ok(seed) => Some(seed),
+        Err(_) => panic!("DTSIM_PROPTEST_SEED={raw:?} is not a u64"),
+    }
+}
+
+/// One-line repro command for a failing case seed.
+fn repro_line(case_seed: u64) -> String {
+    format!("replay: DTSIM_PROPTEST_SEED={case_seed:#x} cargo test -q")
+}
 
 /// Run `prop` over `cases` random inputs drawn by `gen`. Panics with the
 /// failing seed and debug representation on first counterexample.
@@ -26,17 +51,110 @@ pub fn check_seeded<T: std::fmt::Debug, G, P>(
     G: Fn(&mut Rng) -> T,
     P: Fn(&T) -> Result<(), String>,
 {
+    // No shrinker: report the raw counterexample.
+    check_impl(name, seed, cases, gen, |_| Vec::new(), prop)
+}
+
+/// Like [`check`], but on failure greedily minimizes the input via
+/// `shrink` (candidates that still fail replace the counterexample;
+/// candidates that pass are discarded) before panicking. `shrink` must
+/// return *smaller* inputs or the loop's step bound does the cutoff.
+pub fn check_shrinking<T: std::fmt::Debug, G, S, P>(
+    name: &str,
+    cases: u64,
+    gen: G,
+    shrink: S,
+    prop: P,
+) where
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check_impl(name, 0xD15C0, cases, gen, shrink, prop)
+}
+
+fn check_impl<T: std::fmt::Debug, G, S, P>(
+    name: &str,
+    seed: u64,
+    cases: u64,
+    gen: G,
+    shrink: S,
+    prop: P,
+) where
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    if let Some(case_seed) = env_replay_seed() {
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            fail(name, 0, case_seed, input, msg, &shrink, &prop);
+        }
+        return;
+    }
     for case in 0..cases {
         let case_seed = seed.wrapping_add(case.wrapping_mul(0x9E3779B9));
         let mut rng = Rng::new(case_seed);
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
-            panic!(
-                "property '{name}' failed on case {case} \
-                 (replay seed {case_seed:#x}):\n  input: {input:?}\n  {msg}"
-            );
+            fail(name, case, case_seed, input, msg, &shrink, &prop);
         }
     }
+}
+
+fn fail<T: std::fmt::Debug, S, P>(
+    name: &str,
+    case: u64,
+    case_seed: u64,
+    input: T,
+    msg: String,
+    shrink: &S,
+    prop: &P,
+) -> !
+where
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let (input, msg, steps) = minimize(input, msg, shrink, prop);
+    let shrunk = if steps > 0 {
+        format!(" (shrunk {steps} steps)")
+    } else {
+        String::new()
+    };
+    panic!(
+        "property '{name}' failed on case {case} \
+         (replay seed {case_seed:#x}){shrunk}:\n  input: {input:?}\n  \
+         {msg}\n  {}",
+        repro_line(case_seed)
+    );
+}
+
+/// Greedy first-failing-candidate descent, bounded so a cyclic shrinker
+/// cannot hang the harness.
+fn minimize<T: std::fmt::Debug, S, P>(
+    mut input: T,
+    mut msg: String,
+    shrink: &S,
+    prop: &P,
+) -> (T, String, usize)
+where
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut steps = 0;
+    'outer: while steps < 1000 {
+        for candidate in shrink(&input) {
+            if let Err(m) = prop(&candidate) {
+                input = candidate;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg, steps)
 }
 
 #[cfg(test)]
@@ -56,5 +174,42 @@ mod tests {
     #[should_panic(expected = "property 'always-false'")]
     fn failing_property_reports_seed() {
         check("always-false", 10, |r| r.next_u64(), |_| Err("bad".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "DTSIM_PROPTEST_SEED=")]
+    fn failure_prints_one_line_repro() {
+        check("repro-line", 10, |r| r.next_u64(), |_| Err("bad".into()));
+    }
+
+    #[test]
+    fn shrinking_minimizes_to_the_boundary() {
+        // Property "x < 100" fails for x >= 100; halving shrinker must
+        // land exactly on 100 (the minimal failing input).
+        let caught = std::panic::catch_unwind(|| {
+            check_shrinking(
+                "shrinks-to-100",
+                50,
+                |r| 100 + r.next_below(1_000_000),
+                |&x| {
+                    let mut out = Vec::new();
+                    if x > 0 {
+                        out.push(x / 2);
+                        out.push(x - 1);
+                    }
+                    out
+                },
+                |&x| {
+                    if x < 100 { Ok(()) } else { Err(format!("{x} >= 100")) }
+                },
+            )
+        });
+        let err = caught.expect_err("property must fail");
+        let text = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(text.contains("input: 100"), "not minimal: {text}");
+        assert!(text.contains("DTSIM_PROPTEST_SEED="), "{text}");
     }
 }

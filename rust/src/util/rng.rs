@@ -61,6 +61,24 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Lognormal with median 1: `exp(sigma · z)`, `z ~ N(0, 1)`. The
+    /// straggler layer's base distribution — quantile q is exactly
+    /// `exp(sigma · Φ⁻¹(q))` in closed form, which the statistical
+    /// property tests check sampled estimates against.
+    pub fn next_lognormal(&mut self, sigma: f64) -> f64 {
+        (sigma * self.next_gaussian()).exp()
+    }
+
+    /// Pareto with scale 1 and shape `alpha`: `(1 - u)^(-1/alpha)`,
+    /// support `[1, ∞)` — every draw is a slowdown, never a speedup,
+    /// which is what keeps the planner's comm-free lower bound sound
+    /// under jitter. Heavier tail for smaller `alpha`; the mean is
+    /// finite only for `alpha > 1`.
+    pub fn next_pareto(&mut self, alpha: f64) -> f64 {
+        let u = self.next_f64(); // in [0, 1) → 1 - u in (0, 1]
+        (1.0 - u).powf(-1.0 / alpha)
+    }
+
     /// Zipf-distributed rank in [0, n) with exponent `s` (rejection-free
     /// inverse-CDF over a precomputed table is the caller's job for bulk
     /// sampling; this is the simple harmonic-sum variant for small n).

@@ -21,6 +21,7 @@ fn h100_variant(name: &str, ib_bw: f64) -> HwSpec {
             ..dtsim::hardware::specs::H100.clone()
         },
         freq_curve: None,
+        fabric: dtsim::hardware::FabricSpec::DEDICATED,
         derived: false,
     }
 }
@@ -85,6 +86,7 @@ fn hwspec_roundtrips_through_toml_bitwise() {
             tdp: 450.0,
         },
         freq_curve: Some(vec![(1.0 / 3.0, 0.4 + 1e-13), (1.0, 1.0)]),
+        fabric: dtsim::hardware::FabricSpec::DEDICATED,
         derived: false,
     };
     let text = spec.to_toml();

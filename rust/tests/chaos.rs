@@ -297,6 +297,52 @@ fn worker_panic_answers_with_a_structured_error() {
     handle.join().expect("server exits");
 }
 
+/// Same study-grid flags, with the stochastic layer armed (lognormal
+/// jitter, seed 7, 5 replicates per point) — the seeded counterpart of
+/// `GRID` for the cross-client determinism regression below.
+const SEEDED_GRID: &str = r#"{"cmd":"study-grid","arch":"7b","nodes":"1","plans":"sweep","gbs":"32","mbs":"divisors","jitter":"lognormal:0.2","seed":"7","seeds":"5"}"#;
+
+/// Two clients of one persistent server, overlapping *seeded* grids:
+/// the second client's answer must come from the store (zero
+/// re-simulation, store hits reported) and render byte-identical
+/// tables — stochastic results are cacheable precisely because the
+/// seed is part of the key. A reseeded request is a different key
+/// space: it re-simulates and renders different bytes.
+#[test]
+fn two_clients_share_seeded_results_byte_identically() {
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+
+    let path = tmp("seeded-two-clients.dtstore");
+    let (addr, handle) = start(&path);
+    let mut a = Client::connect(&addr.to_string()).expect("connect a");
+    let cold = a.request_raw(SEEDED_GRID).expect("cold seeded grid");
+    assert!(done_field(&cold, "evaluated") > 0.0);
+    let cold_tables = table_lines(&cold);
+    assert!(cold_tables[0].contains("p95_ms"),
+            "seeded grids must carry the percentile columns: {}",
+            cold_tables[0]);
+
+    let mut b = Client::connect(&addr.to_string()).expect("connect b");
+    let warm = b.request_raw(SEEDED_GRID).expect("warm seeded grid");
+    assert_eq!(done_field(&warm, "evaluated"), 0.0,
+               "second client re-simulated seeded points");
+    assert!(done_field(&warm, "store_hits") > 0.0);
+    assert_eq!(table_lines(&warm), cold_tables,
+               "seed 7 must replay byte-identically across clients");
+
+    let reseeded =
+        SEEDED_GRID.replace("\"seed\":\"7\"", "\"seed\":\"8\"");
+    let other = b.request_raw(&reseeded).expect("reseeded grid");
+    assert!(done_field(&other, "evaluated") > 0.0,
+            "seed 8 must not be served from seed 7's records");
+    assert_ne!(table_lines(&other), cold_tables,
+               "seed 8 rendered seed 7's bytes");
+
+    let _ = a.request_raw(r#"{"cmd":"shutdown"}"#);
+    handle.join().expect("server exits");
+}
+
 /// `serve.write.stall` + a one-slot outbound queue: a reader that can't
 /// keep up overflows its own bounded queue and gets a structured error
 /// naming the committed/requested counts — it never stalls the server,

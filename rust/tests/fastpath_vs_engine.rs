@@ -14,8 +14,8 @@ use dtsim::hardware::Generation;
 use dtsim::model::LLAMA_7B;
 use dtsim::parallelism::ParallelPlan;
 use dtsim::sim::{
-    simulate_engine, simulate_in, Schedule, Sharding, SimArena,
-    SimConfig, Tag,
+    simulate_engine, simulate_in, Jitter, JitterDist, Schedule,
+    Sharding, SimArena, SimConfig, Tag,
 };
 use dtsim::util::proptest::check;
 use dtsim::util::rng::Rng;
@@ -110,6 +110,22 @@ fn prop_fused_fast_path_matches_event_engine() {
         } else {
             Schedule::OneFOneB
         };
+        // A third of the sample arms seeded per-op jitter: the
+        // straggler layer rides the shared emitter, so it must stay
+        // within tolerance across both execution paths too.
+        let jitter = match rng.next_below(3) {
+            0 => Jitter {
+                dist: JitterDist::Lognormal { sigma: 0.25 },
+                seed: rng.next_u64(),
+                replicates: 1,
+            },
+            1 => Jitter {
+                dist: JitterDist::Pareto { alpha: 2.5 },
+                seed: rng.next_u64(),
+                replicates: 1,
+            },
+            _ => Jitter::OFF,
+        };
         let cfg = SimConfig {
             arch: LLAMA_7B,
             cluster,
@@ -120,6 +136,7 @@ fn prop_fused_fast_path_matches_event_engine() {
             sharding,
             schedule,
             prefetch: rng.next_below(2) == 0,
+            jitter,
         };
         if cfg.validate().is_err() {
             return None;
@@ -185,6 +202,7 @@ fn prop_fused_fast_path_matches_engine_on_custom_catalog_specs() {
                 tdp: 2000.0,
             },
             freq_curve: None,
+            fabric: dtsim::hardware::FabricSpec::DEDICATED,
             derived: false,
         };
         let hw = Catalog::register(spec).expect("sampled spec valid");
@@ -222,6 +240,7 @@ fn prop_fused_fast_path_matches_engine_on_custom_catalog_specs() {
             sharding,
             schedule,
             prefetch: rng.next_below(2) == 0,
+            jitter: Jitter::OFF,
         };
         if cfg.validate().is_err() {
             return None;

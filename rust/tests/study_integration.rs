@@ -178,6 +178,7 @@ fn madmax_covers_every_divisible_catalog_entry() {
             ..dtsim::hardware::specs::H100.clone()
         },
         freq_curve: None,
+        fabric: dtsim::hardware::FabricSpec::DEDICATED,
         derived: false,
     })
     .unwrap();
