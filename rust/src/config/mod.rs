@@ -11,7 +11,7 @@ pub mod toml;
 use crate::hardware::HwId;
 use crate::model::{self, TransformerArch};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Schedule, Sharding, SimConfig};
+use crate::sim::{Schedule, Sharding, SimConfig, SyncMode};
 use crate::topology::Cluster;
 
 /// A fully-specified simulated training run.
@@ -28,6 +28,9 @@ pub struct RunConfig {
     pub seq_len: usize,
     pub sharding: Sharding,
     pub schedule: Schedule,
+    /// Gradient-synchronization discipline (sync unless the config
+    /// arms `parallelism.sync = "async:S"`).
+    pub sync: SyncMode,
 }
 
 impl RunConfig {
@@ -47,6 +50,7 @@ impl RunConfig {
             schedule: self.schedule,
             prefetch: true,
             jitter: crate::sim::Jitter::OFF,
+            sync: self.sync,
         }
     }
 
@@ -75,8 +79,7 @@ impl RunConfig {
         validate_keys(&doc)?;
         let arch_name = doc.get_str("model", "arch")
             .ok_or("missing model.arch")?;
-        let arch = *model::by_name(&arch_name)
-            .ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
+        let arch = parse_arch(&arch_name)?;
         let gen_name = doc.get_str("cluster", "generation")
             .unwrap_or_else(|| "h100".into());
         // Accepts built-ins and loaded catalog entries; the error
@@ -101,13 +104,15 @@ impl RunConfig {
         let tp = doc.get_int("parallelism", "tp").unwrap_or(1) as usize;
         let pp = doc.get_int("parallelism", "pp").unwrap_or(1) as usize;
         let cp = doc.get_int("parallelism", "cp").unwrap_or(1) as usize;
+        let ep = doc.get_int("parallelism", "ep").unwrap_or(1) as usize;
         let mp = tp * pp * cp;
         if cluster.world_size() % mp != 0 {
             return Err(format!(
                 "tp*pp*cp = {mp} does not divide world {}",
                 cluster.world_size()));
         }
-        let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp);
+        let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp)
+            .with_ep(ep);
         let global_batch =
             doc.get_int("batch", "global").unwrap_or(64) as usize;
         let micro_batch =
@@ -120,8 +125,12 @@ impl RunConfig {
         let schedule = parse_schedule(
             &doc.get_str("parallelism", "schedule")
                 .unwrap_or_else(|| "1f1b".into()))?;
+        let sync = parse_sync(
+            &doc.get_str("parallelism", "sync")
+                .unwrap_or_else(|| "sync".into()))?;
         let rc = RunConfig { arch, gen, nodes, plan, global_batch,
-                             micro_batch, seq_len, sharding, schedule };
+                             micro_batch, seq_len, sharding, schedule,
+                             sync };
         rc.sim().validate()?;
         Ok(rc)
     }
@@ -138,8 +147,8 @@ impl RunConfig {
         format!(
             "[model]\narch = \"{}\"\nseq_len = {}\n\n\
              [cluster]\ngeneration = \"{}\"\nnodes = {}\n\n\
-             [parallelism]\ntp = {}\npp = {}\ncp = {}\n\
-             sharding = \"{}\"\nschedule = \"{}\"\n\n\
+             [parallelism]\ntp = {}\npp = {}\ncp = {}\nep = {}\n\
+             sharding = \"{}\"\nschedule = \"{}\"\nsync = \"{}\"\n\n\
              [batch]\nglobal = {}\nmicro = {}\n",
             self.arch.name,
             self.seq_len,
@@ -148,8 +157,10 @@ impl RunConfig {
             self.plan.tp,
             self.plan.pp,
             self.plan.cp,
+            self.plan.ep,
             self.sharding,
             self.schedule,
+            self.sync,
             self.global_batch,
             self.micro_batch,
         )
@@ -161,7 +172,8 @@ impl RunConfig {
 const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ("model", &["arch", "seq_len"]),
     ("cluster", &["generation", "nodes", "gpus"]),
-    ("parallelism", &["tp", "pp", "cp", "sharding", "schedule"]),
+    ("parallelism", &["tp", "pp", "cp", "ep", "sharding", "schedule",
+                      "sync"]),
     ("batch", &["global", "micro"]),
 ];
 
@@ -186,6 +198,45 @@ fn validate_keys(doc: &toml::Document) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// Parse an architecture preset name ("llama-7b"/"7b", ...,
+/// "7b-moe8x", "13b-moe16x" and their aliases) — the single parser
+/// behind TOML configs and the CLI; the error enumerates every
+/// canonical preset name, MoE variants included.
+pub fn parse_arch(s: &str) -> Result<TransformerArch, String> {
+    model::by_name(s).copied().ok_or_else(|| {
+        let names: Vec<&str> =
+            model::ALL.iter().map(|a| a.name).collect();
+        format!("unknown arch '{s}' (expected one of: {})",
+                names.join(", "))
+    })
+}
+
+/// Parse a gradient-synchronization spec ("sync", "async:S" with an
+/// integer staleness bound S >= 1) — the single parser behind TOML
+/// configs, the CLI `--sync` flag, and serve grid requests; the
+/// inverse is `SyncMode`'s `Display` impl. `SyncMode::validate` keeps
+/// the canonical spelling (`async:0` is rejected as synchronous).
+pub fn parse_sync(s: &str) -> Result<SyncMode, String> {
+    let mode = match s {
+        "sync" => SyncMode::Sync,
+        other => {
+            if let Some(bound) = other.strip_prefix("async:") {
+                let max_staleness: u32 =
+                    bound.parse().map_err(|_| format!(
+                        "bad staleness bound '{bound}' (expected \
+                         async:S with an integer S >= 1)"))?;
+                SyncMode::Async { max_staleness }
+            } else {
+                return Err(format!(
+                    "unknown sync mode '{other}' (expected one of: \
+                     sync, async:S)"));
+            }
+        }
+    };
+    mode.validate()?;
+    Ok(mode)
 }
 
 /// Parse a sharding spec ("fsdp", "ddp", "hsdp:G", "zero3") — the
@@ -282,6 +333,7 @@ pub fn scenario(name: &str) -> Option<RunConfig> {
             seq_len: 4096,
             sharding: Sharding::Fsdp,
             schedule: Schedule::OneFOneB,
+            sync: SyncMode::Sync,
         }
     };
     let arch7 = &model::LLAMA_7B;
@@ -487,6 +539,53 @@ micro = 2
         assert!(parse_schedule("interleaved:x").is_err());
         assert_eq!(parse_schedule("interleaved:4").unwrap(),
                    Schedule::Interleaved { v: 4 });
+    }
+
+    #[test]
+    fn arch_errors_enumerate_presets_including_moe() {
+        let err = parse_arch("gpt-9000").unwrap_err();
+        assert!(err.contains("llama-7b"), "{err}");
+        assert!(err.contains("7b-moe8x"), "{err}");
+        assert!(err.contains("13b-moe16x"), "{err}");
+        assert_eq!(parse_arch("moe8x").unwrap().name, "7b-moe8x");
+        // The TOML path surfaces the same enumeration.
+        let bad = EXAMPLE.replace("llama-7b", "gpt-9000");
+        let err = RunConfig::from_toml_str(&bad).unwrap_err();
+        assert!(err.contains("7b-moe8x"), "{err}");
+    }
+
+    #[test]
+    fn sync_specs_parse_and_roundtrip_display() {
+        assert_eq!(parse_sync("sync").unwrap(), SyncMode::Sync);
+        assert_eq!(parse_sync("async:4").unwrap(),
+                   SyncMode::Async { max_staleness: 4 });
+        // Display is the inverse parse (the CLI echo contract).
+        for spec in ["sync", "async:1", "async:8"] {
+            assert_eq!(parse_sync(spec).unwrap().to_string(), spec);
+        }
+        let err = parse_sync("bsp").unwrap_err();
+        assert!(err.contains("sync, async:S"), "{err}");
+        // async:0 is canonicalized away so store keys never alias.
+        let err = parse_sync("async:0").unwrap_err();
+        assert!(err.contains("async:0 is synchronous"), "{err}");
+        assert!(parse_sync("async:x").is_err());
+    }
+
+    #[test]
+    fn ep_and_sync_toml_keys_roundtrip() {
+        let text = EXAMPLE
+            .replace("llama-7b", "7b-moe8x")
+            .replace("cp = 1", "cp = 1\nep = 8\nsync = \"async:4\"");
+        let rc = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(rc.plan.ep, 8);
+        assert_eq!(rc.sync, SyncMode::Async { max_staleness: 4 });
+        let back = RunConfig::from_toml_str(&rc.to_toml()).unwrap();
+        assert_eq!(format!("{:?}", back.sim()),
+                   format!("{:?}", rc.sim()));
+        // ep on a dense arch fails sim validation with a pointed hint.
+        let dense = EXAMPLE.replace("cp = 1", "cp = 1\nep = 8");
+        let err = RunConfig::from_toml_str(&dense).unwrap_err();
+        assert!(err.contains("mixture-of-experts"), "{err}");
     }
 
     #[test]

@@ -26,7 +26,6 @@ use dtsim::config::scenario;
 use dtsim::coordinator::{DistTrainer, TrainOptions};
 use dtsim::hardware::{Catalog, HwId};
 use dtsim::metrics;
-use dtsim::model;
 use dtsim::planner::{self, SweepRequest};
 use dtsim::report;
 use dtsim::runtime::artifacts_root;
@@ -52,26 +51,31 @@ Every subcommand accepts --catalog hw.toml to load extra hardware
 specs; loaded names work anywhere a --gen does (see docs/hardware.md).
 
 USAGE:
-  dtsim simulate   [--arch 7b] [--gen h100|<catalog>] [--nodes 32 |
-                   --gpus 256] [--tp 1] [--pp 1] [--cp 1] [--gbs 512]
-                   [--mbs 2] [--seq 4096]
+  dtsim simulate   [--arch 7b|7b-moe8x|13b-moe16x] [--gen h100|<catalog>]
+                   [--nodes 32 | --gpus 256] [--tp 1] [--pp 1] [--cp 1]
+                   [--ep 1] [--gbs 512] [--mbs 2] [--seq 4096]
                    [--sharding fsdp|ddp|hsdp:G|zero3] [--ddp]
-                   [--schedule 1f1b|interleaved:V] [--config run.toml]
+                   [--schedule 1f1b|interleaved:V]
+                   [--sync sync|async:S]  # bounded-staleness DP
+                   [--config run.toml]    # (docs/moe.md)
                    [--jitter lognormal:S|pareto:A [--seed N]
                     [--seeds K]]        # seeded per-op jitter
                                         # (docs/network.md)
   dtsim sweep      [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512]
-                   [--seq 4096] [--cp] [--top 15]
+                   [--seq 4096] [--cp] [--top 15] [--max-ep 8]
                    [--sharding fsdp] [--schedule 1f1b]
   dtsim study      <name> [--out reports] [--threads N] [--json]
                    [--catalog hw.toml] [--seed N]
-                                        # e.g. madmax, straggler;
+                                        # e.g. madmax, straggler,
+                                        # moe_crossover, async_straggler;
                                         # --seed reseeds stochastic
                                         # scenarios (replays exactly)
   dtsim study      --list
-  dtsim study      --grid [--arch 7b,13b] [--gen h100,a100,<catalog>]
+  dtsim study      --grid [--arch 7b,7b-moe8x] [--gen h100,<catalog>]
                    [--nodes 4,32 | --gpus 32,256]
                    [--plans sweep|sweep-cp|dp|tp2,tp4pp2]
+                   [--ep 1,2,8]         # expert-parallel axis (MoE)
+                   [--sync sync,async:4]
                    [--gbs 512,1024 | --lbs 2] [--mbs divisors|1,2,4]
                    [--seq 4096] [--sharding fsdp,ddp,hsdp:8,zero3]
                    [--schedule 1f1b,interleaved:2]
@@ -202,8 +206,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let arch = *model::by_name(&args.get_or("arch", "7b"))
-        .ok_or_else(|| anyhow!("unknown --arch"))?;
+    let arch = grid::parse_arch(&args.get_or("arch", "7b"))
+        .map_err(anyhow::Error::msg)?;
     let gen = parse_hw(&args.get_or("gen", "h100"))?;
     let cluster = Cluster::new(gen, args.usize_or("nodes", 32));
     let req = SweepRequest {
@@ -220,6 +224,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             Some(s) => parse_schedule(s)?,
             None => Schedule::OneFOneB,
         },
+        max_ep: args.usize_or("max-ep", 1),
     };
     let top = args.usize_or("top", 15);
     println!("{:<18} {:>4} {:>12} {:>7} {:>11} {:>10} {:>8}",
@@ -264,7 +269,8 @@ fn cmd_study(args: &Args) -> Result<()> {
         // historical columns byte-for-byte, seeded grids append the
         // iteration-time percentiles.
         let table =
-            res.table(&grid_columns(!study.jitter().is_off()));
+            res.table(&grid_columns(!study.jitter().is_off(),
+                                    study.has_async()));
         ConsoleSink.emit(&table)?;
         CsvSink::new(&out).emit(&table)?;
         if args.has("json") {
@@ -533,6 +539,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let (stoch_evaluated, _) = stoch_runner.stats();
     let stoch_cps = stoch_evaluated as f64 / stoch_dt;
 
+    // MoE / async companion grid (expert-parallel dispatch chain +
+    // bounded-staleness sync axis) so the PR 9 emitter arms are
+    // tracked in the same artifact. Informational — not a gated
+    // field, same rationale as the stochastic grid: the axes change
+    // per-point cost, so gating would compare different quantities.
+    let moe_study = dtsim::study::bench_pinned_moe_study();
+    let moe_points = moe_study.expand();
+    let mut moe_runner = StudyRunner::new(threads);
+    let t0 = Instant::now();
+    moe_runner.run(&moe_study);
+    let moe_dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let (moe_evaluated, _) = moe_runner.stats();
+    let moe_cps = moe_evaluated as f64 / moe_dt;
+
     let queries = cost_hits + cost_misses;
     let hit_rate = if queries > 0 {
         cost_hits as f64 / queries as f64
@@ -553,6 +573,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
          \"hw_cache_hit_rate\": {:.4},\n  \
          \"stoch_grid_points\": {},\n  \"stoch_simulated\": {},\n  \
          \"stoch_configs_per_s\": {:.1},\n  \
+         \"moe_grid_points\": {},\n  \"moe_simulated\": {},\n  \
+         \"moe_configs_per_s\": {:.1},\n  \
          \"store_hits\": {},\n  \"store_misses\": {},\n  \
          \"store_bytes\": {},\n  \
          \"store_recover_ms\": {:.3},\n  \
@@ -562,6 +584,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         sched_points.len(), sched_evaluated, sched_cps,
         hw_points.len(), hw_evaluated, hw_cps, hw_hit_rate,
         stoch_points.len(), stoch_evaluated, stoch_cps,
+        moe_points.len(), moe_evaluated, moe_cps,
         store_stats.hits, store_stats.misses, store_stats.bytes,
         store_recover_ms, peak_rss_bytes(), threads, reps);
     if let Some(parent) = out.parent() {

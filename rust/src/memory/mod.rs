@@ -141,14 +141,21 @@ fn breakdown(
     in_flight_chunks: f64,
 ) -> MemoryBreakdown {
     let mp = (plan.tp * plan.pp) as f64;
-    let params_partition = arch.params() / mp; // this rank's tp/pp slice
+    // This rank's tp/pp slice of the parameters it is responsible for:
+    // with expert parallelism only `1/ep` of the experts are resident
+    // (attention and router replicated); `params_ep` routes to the
+    // historical `params()` expression verbatim for dense models.
+    let params_partition = arch.params_ep(plan.ep) / mp;
     let shard = params_partition / shard_deg;
 
     let layers_per_stage = (arch.n_layers as f64 / plan.pp as f64).ceil();
     // Gathered working set: two layers' worth of full (tp-sliced) params
     // (explicit prefetch keeps the next layer's AllGather in flight).
+    // FSDP gathers only this rank's expert shard — remote experts are
+    // reached by dispatching tokens (AllToAll), never by gathering
+    // their weights.
     let unsharded = if gathers {
-        2.0 * arch.layer_param_bytes() / plan.tp as f64
+        2.0 * arch.layer_param_bytes_ep(plan.ep) / plan.tp as f64
     } else {
         0.0
     };
@@ -322,6 +329,40 @@ mod tests {
         assert!(hsdp.optimizer_shard < ddp.optimizer_shard);
         assert_eq!(ddp.unsharded_working, 0.0);
         assert_eq!(zero3.total().to_bits(), fsdp.total().to_bits());
+    }
+
+    #[test]
+    fn ep_sharded_memory_residency_pin() {
+        use crate::model::LLAMA_7B_MOE8X;
+        // 7b-moe8x, dp=8, ep=8, tp=pp=1, FSDP:
+        //   params_ep(8) = 262,144,000
+        //     + 32·(67,117,056 + 32,768 + 1,082,130,432/8) + 4,096
+        //     = 262,144,000 + 32·202,416,128 + 4,096 = 6,739,464,192
+        //   shard = /8 = 842,433,024 → params_shard = 1,684,866,048
+        //   unsharded = 2·layer_param_bytes_ep(8) = 809,664,512
+        let plan = ParallelPlan::data_parallel(8).with_ep(8);
+        let m = per_gpu_memory_for(&LLAMA_7B_MOE8X, &plan, 2, 4096,
+                                   Sharding::Fsdp, Schedule::OneFOneB, 1);
+        assert_eq!(m.params_shard, 1_684_866_048.0);
+        assert_eq!(m.unsharded_working, 809_664_512.0);
+        // EP monotonically reduces residency; ep=1 replicates all
+        // experts on every rank.
+        let rep = per_gpu_memory_for(&LLAMA_7B_MOE8X, &plan.with_ep(1),
+                                     2, 4096, Sharding::Fsdp,
+                                     Schedule::OneFOneB, 1);
+        assert!(m.total() < rep.total());
+    }
+
+    #[test]
+    fn ep_is_inert_for_dense_models() {
+        let plan = ParallelPlan::data_parallel(8);
+        let base = per_gpu_memory_for(&LLAMA_7B, &plan, 2, 4096,
+                                      Sharding::Fsdp, Schedule::OneFOneB,
+                                      1);
+        let ep = per_gpu_memory_for(&LLAMA_7B, &plan.with_ep(4), 2, 4096,
+                                    Sharding::Fsdp, Schedule::OneFOneB,
+                                    1);
+        assert_eq!(base.total().to_bits(), ep.total().to_bits());
     }
 
     #[test]

@@ -7,9 +7,18 @@
 
 pub mod presets;
 
-pub use presets::{by_name, LLAMA_13B, LLAMA_1B, LLAMA_70B, LLAMA_7B};
+pub use presets::{
+    by_name, ALL, LLAMA_13B, LLAMA_13B_MOE16X, LLAMA_1B, LLAMA_70B,
+    LLAMA_7B, LLAMA_7B_MOE8X,
+};
 
 /// Decoder-only transformer architecture.
+///
+/// Mixture-of-experts variants replicate the FFN `n_experts` times and
+/// route each token to `moe_top_k` experts; `n_experts == 1` is dense
+/// and every dense method runs its historical expression verbatim.
+/// `capacity_pct` is the expert capacity factor ×100 (125 = 1.25×) so
+/// the struct stays `Eq + Hash` for `ConfigKey` membership.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TransformerArch {
     pub name: &'static str,
@@ -20,6 +29,13 @@ pub struct TransformerArch {
     pub n_kv_heads: usize,
     pub d_ff: usize,
     pub vocab: usize,
+    /// FFN experts per layer; 1 = dense.
+    pub n_experts: usize,
+    /// Experts each token is routed to (top-k); 1 for dense.
+    pub moe_top_k: usize,
+    /// Expert capacity factor ×100 (dispatch buffers are padded to
+    /// `capacity_pct/100 · top_k · tokens / n_experts` per expert).
+    pub capacity_pct: usize,
 }
 
 impl TransformerArch {
@@ -27,13 +43,70 @@ impl TransformerArch {
         self.d_model / self.n_heads
     }
 
-    /// Parameters in one transformer layer.
+    /// True when the FFN is a routed mixture of experts.
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 1
+    }
+
+    /// Expert capacity factor (dispatch-buffer padding multiplier).
+    pub fn capacity_factor(&self) -> f64 {
+        self.capacity_pct as f64 / 100.0
+    }
+
+    /// Parameters in one FFN expert (SwiGLU, 3 matrices).
+    pub fn expert_params(&self) -> f64 {
+        3.0 * self.d_model as f64 * self.d_ff as f64
+    }
+
+    /// Attention-block parameters (q/k/v/o + 2 norms) — replicated
+    /// across experts, never sharded by `ep`.
+    pub fn attn_params_per_layer(&self) -> f64 {
+        let d = self.d_model as f64;
+        let kv_frac = self.n_kv_heads as f64 / self.n_heads as f64;
+        d * d * (2.0 + 2.0 * kv_frac) + 2.0 * d
+    }
+
+    /// Router (gating) parameters per layer: d_model × n_experts.
+    pub fn router_params_per_layer(&self) -> f64 {
+        if self.is_moe() {
+            self.d_model as f64 * self.n_experts as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Parameters in one transformer layer (total: every expert).
     pub fn params_per_layer(&self) -> f64 {
         let d = self.d_model as f64;
         let f = self.d_ff as f64;
         let kv_frac = self.n_kv_heads as f64 / self.n_heads as f64;
-        // q, o projections + GQA-sized k, v + SwiGLU (3 mats) + 2 norms
-        d * d * (2.0 + 2.0 * kv_frac) + 3.0 * d * f + 2.0 * d
+        if self.is_moe() {
+            d * d * (2.0 + 2.0 * kv_frac)
+                + self.n_experts as f64 * 3.0 * d * f
+                + 2.0 * d
+                + self.router_params_per_layer()
+        } else {
+            // q, o projections + GQA-sized k, v + SwiGLU (3 mats)
+            // + 2 norms
+            d * d * (2.0 + 2.0 * kv_frac) + 3.0 * d * f + 2.0 * d
+        }
+    }
+
+    /// Parameters a token actually touches in one layer: attention +
+    /// router + the `top_k` experts it is routed to. Equals
+    /// `params_per_layer` for dense models.
+    pub fn active_params_per_layer(&self) -> f64 {
+        if self.is_moe() {
+            let d = self.d_model as f64;
+            let f = self.d_ff as f64;
+            let kv_frac = self.n_kv_heads as f64 / self.n_heads as f64;
+            d * d * (2.0 + 2.0 * kv_frac)
+                + self.moe_top_k as f64 * 3.0 * d * f
+                + 2.0 * d
+                + self.router_params_per_layer()
+        } else {
+            self.params_per_layer()
+        }
     }
 
     /// Total parameters (untied embedding + output head, as Llama-2).
@@ -43,16 +116,45 @@ impl TransformerArch {
         2.0 * v * d + self.n_layers as f64 * self.params_per_layer() + d
     }
 
+    /// Parameters touched per token (== `params` for dense models).
+    /// This is the quantity held fixed in the `moe_crossover`
+    /// sparse-vs-dense comparison.
+    pub fn active_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let v = self.vocab as f64;
+        2.0 * v * d
+            + self.n_layers as f64 * self.active_params_per_layer()
+            + d
+    }
+
     /// Forward FLOPs for one layer over `tokens` tokens of context `seq`.
     /// 2·N·T for the matmuls plus the attention score/value terms
     /// (4·T·s·d accounting for causal halving is NOT applied — matches
     /// the dense-FLOPs convention used for MFU in the paper/PaLM).
     pub fn fwd_flops_per_layer(&self, tokens: f64, seq: f64) -> f64 {
         let d = self.d_model as f64;
-        let matmuls = 2.0 * tokens
-            * (self.params_per_layer() - 2.0 * self.d_model as f64);
-        let attention = 4.0 * tokens * seq * d;
-        matmuls + attention
+        if self.is_moe() {
+            // Attention matmuls run on every token; expert matmuls on
+            // the capacity-padded dispatch (cf · top_k · tokens) — the
+            // padding slots burn real FLOPs, as in Fedus et al.
+            let kv_frac = self.n_kv_heads as f64 / self.n_heads as f64;
+            let attn_matmuls =
+                2.0 * tokens * (d * d * (2.0 + 2.0 * kv_frac));
+            let router =
+                2.0 * tokens * self.router_params_per_layer();
+            let experts = 2.0
+                * (self.capacity_factor()
+                    * self.moe_top_k as f64
+                    * tokens)
+                * self.expert_params();
+            let attention = 4.0 * tokens * seq * d;
+            attn_matmuls + router + experts + attention
+        } else {
+            let matmuls = 2.0 * tokens
+                * (self.params_per_layer() - 2.0 * self.d_model as f64);
+            let attention = 4.0 * tokens * seq * d;
+            matmuls + attention
+        }
     }
 
     /// Forward FLOPs for embedding + LM head over `tokens`.
@@ -77,19 +179,64 @@ impl TransformerArch {
     /// with flash attention (the s·s probability matrix is never stored).
     pub fn activation_bytes_per_layer(&self, batch: f64, seq: f64) -> f64 {
         let d = self.d_model as f64;
-        // ≈34 bytes/token/hidden-dim in bf16 (inputs to every matmul,
-        // norms, activations); flash attention drops the 5·h·s² term.
-        34.0 * batch * seq * d
+        if self.is_moe() {
+            // The FFN share of the 34 bytes/token (taken as 17) is
+            // stored once per dispatched copy of the token: the
+            // capacity-padded buffers hold cf · top_k copies.
+            let extra = self.capacity_factor() * self.moe_top_k as f64
+                - 1.0;
+            34.0 * batch * seq * d + 17.0 * extra * batch * seq * d
+        } else {
+            // ≈34 bytes/token/hidden-dim in bf16 (inputs to every
+            // matmul, norms, activations); flash attention drops the
+            // 5·h·s² term.
+            34.0 * batch * seq * d
+        }
     }
 
-    /// Bytes of parameters in one layer (bf16 working copy).
+    /// Bytes of parameters in one layer (bf16 working copy; total —
+    /// every expert counted).
     pub fn layer_param_bytes(&self) -> f64 {
         2.0 * self.params_per_layer()
+    }
+
+    /// Per-layer bf16 parameter bytes resident on one GPU when the
+    /// experts are sharded `ep` ways (attention + router replicated).
+    /// `ep = 1` reproduces `layer_param_bytes` exactly for dense
+    /// models by construction (the dense branch is shared).
+    pub fn layer_param_bytes_ep(&self, ep: usize) -> f64 {
+        if self.is_moe() {
+            2.0 * (self.attn_params_per_layer()
+                + self.router_params_per_layer()
+                + self.n_experts as f64 * self.expert_params()
+                    / ep as f64)
+        } else {
+            self.layer_param_bytes()
+        }
     }
 
     /// Bytes of the full parameter set (bf16).
     pub fn param_bytes(&self) -> f64 {
         2.0 * self.params()
+    }
+
+    /// Whole-model parameters resident on one EP shard: embedding,
+    /// head, attention, and router replicated; experts divided over
+    /// `ep`. Routes to `params()` verbatim for dense models.
+    pub fn params_ep(&self, ep: usize) -> f64 {
+        if self.is_moe() {
+            let d = self.d_model as f64;
+            let v = self.vocab as f64;
+            2.0 * v * d
+                + self.n_layers as f64
+                    * (self.attn_params_per_layer()
+                        + self.router_params_per_layer()
+                        + self.n_experts as f64 * self.expert_params()
+                            / ep as f64)
+                + d
+        } else {
+            self.params()
+        }
     }
 }
 
@@ -148,5 +295,85 @@ mod tests {
         // b=2, s=4096 on 7B: ≈ 34·2·4096·4096 ≈ 1.1 GB per layer.
         let b = LLAMA_7B.activation_bytes_per_layer(2.0, 4096.0);
         assert!(b > 1.0e9 && b < 1.3e9, "{b}");
+    }
+
+    // ---- MoE closed-form pins (hand-derived, exact) -------------------
+
+    #[test]
+    fn moe_total_params_pin() {
+        // 7b-moe8x, d=4096, f=11008, kv_frac=1, E=8:
+        //   ppl = 4096²·4 + 8·3·4096·11008 + 2·4096 + 4096·8
+        //       = 67,108,864 + 1,082,130,432 + 8,192 + 32,768
+        //       = 1,149,280,256
+        //   params = 2·32000·4096 + 32·ppl + 4096 = 37,039,116,288
+        let a = &LLAMA_7B_MOE8X;
+        assert_eq!(a.params_per_layer(), 1_149_280_256.0);
+        assert_eq!(a.params(), 37_039_116_288.0);
+    }
+
+    #[test]
+    fn moe_active_params_pin() {
+        // top-k = 2 of 8 experts:
+        //   active ppl = 67,108,864 + 2·135,266,304 + 8,192 + 32,768
+        //              = 337,682,432
+        //   active = 262,144,000 + 32·337,682,432 + 4,096
+        //          = 11,067,985,920
+        let a = &LLAMA_7B_MOE8X;
+        assert_eq!(a.active_params_per_layer(), 337_682_432.0);
+        assert_eq!(a.active_params(), 11_067_985_920.0);
+        // Dense models: active == total, bit for bit.
+        assert_eq!(LLAMA_7B.active_params().to_bits(),
+                   LLAMA_7B.params().to_bits());
+        assert_eq!(LLAMA_7B.active_params_per_layer().to_bits(),
+                   LLAMA_7B.params_per_layer().to_bits());
+    }
+
+    #[test]
+    fn moe_topk_flops_pin() {
+        // T=1024, s=1024 on 7b-moe8x (cf=1.25, k=2):
+        //   attn matmuls: 2·1024·67,108,864   = 137,438,953,472
+        //   router:       2·1024·4096·8       =      67,108,864
+        //   experts:      2·(1.25·2·1024)·135,266,304
+        //               = 2·2560·135,266,304  = 692,563,476,480
+        //   attention:    4·1024·1024·4096    =  17,179,869,184
+        //   total                             = 847,249,408,000
+        let f = LLAMA_7B_MOE8X.fwd_flops_per_layer(1024.0, 1024.0);
+        assert_eq!(f, 847_249_408_000.0);
+    }
+
+    #[test]
+    fn moe_dense_fields_are_inert() {
+        // A dense arch with the MoE fields at their defaults computes
+        // every quantity through the historical expressions verbatim.
+        let a = &LLAMA_7B;
+        assert!(!a.is_moe());
+        assert_eq!(a.layer_param_bytes_ep(4).to_bits(),
+                   a.layer_param_bytes().to_bits());
+        assert_eq!(a.params_ep(8).to_bits(), a.params().to_bits());
+    }
+
+    #[test]
+    fn moe_ep_sharding_divides_expert_params_only() {
+        // ep=8 on 7b-moe8x: per-GPU layer bytes =
+        //   2·(67,108,864 + 8,192 + 32,768 + 1,082,130,432/8)
+        // = 2·(67,149,824 + 135,266,304) = 404,832,256
+        let a = &LLAMA_7B_MOE8X;
+        assert_eq!(a.layer_param_bytes_ep(8), 404_832_256.0);
+        // Monotone: more EP shards, fewer resident bytes.
+        assert!(a.layer_param_bytes_ep(8) < a.layer_param_bytes_ep(2));
+        assert!(a.params_ep(8) < a.params_ep(1));
+        // Attention/router floor: never below the replicated part.
+        let floor = 2.0
+            * (a.attn_params_per_layer() + a.router_params_per_layer());
+        assert!(a.layer_param_bytes_ep(8) > floor);
+    }
+
+    #[test]
+    fn moe_activation_bytes_scale_with_dispatch() {
+        // cf·k = 2.5 ⇒ FFN share (17 B/token/d) stored 2.5×:
+        //   34·b·s·d + 17·1.5·b·s·d = 59.5·b·s·d
+        let b = LLAMA_7B_MOE8X.activation_bytes_per_layer(2.0, 4096.0);
+        assert_eq!(b, 59.5 * 2.0 * 4096.0 * 4096.0);
+        assert!(b > LLAMA_7B.activation_bytes_per_layer(2.0, 4096.0));
     }
 }

@@ -1,5 +1,7 @@
 //! Llama-family architecture presets used throughout the paper's
-//! experiments (§3, §4.5): 1B, 7B, 13B, 70B.
+//! experiments (§3, §4.5): 1B, 7B, 13B, 70B — plus sparse (MoE)
+//! variants that keep the dense backbone shapes and replicate the FFN
+//! into routed experts (PR 9).
 
 use super::TransformerArch;
 
@@ -12,6 +14,9 @@ pub static LLAMA_1B: TransformerArch = TransformerArch {
     n_kv_heads: 4,
     d_ff: 5632,
     vocab: 32000,
+    n_experts: 1,
+    moe_top_k: 1,
+    capacity_pct: 100,
 };
 
 /// Llama-2 7B.
@@ -23,6 +28,9 @@ pub static LLAMA_7B: TransformerArch = TransformerArch {
     n_kv_heads: 32,
     d_ff: 11008,
     vocab: 32000,
+    n_experts: 1,
+    moe_top_k: 1,
+    capacity_pct: 100,
 };
 
 /// Llama-2 13B.
@@ -34,6 +42,9 @@ pub static LLAMA_13B: TransformerArch = TransformerArch {
     n_kv_heads: 40,
     d_ff: 13824,
     vocab: 32000,
+    n_experts: 1,
+    moe_top_k: 1,
+    capacity_pct: 100,
 };
 
 /// Llama-2 70B (GQA with 8 KV heads).
@@ -45,6 +56,39 @@ pub static LLAMA_70B: TransformerArch = TransformerArch {
     n_kv_heads: 8,
     d_ff: 28672,
     vocab: 32000,
+    n_experts: 1,
+    moe_top_k: 1,
+    capacity_pct: 100,
+};
+
+/// 7B backbone, 8 experts, top-2 routing, 1.25× capacity (Mixtral-style
+/// shape): ≈37B total / ≈11B active parameters.
+pub static LLAMA_7B_MOE8X: TransformerArch = TransformerArch {
+    name: "7b-moe8x",
+    n_layers: 32,
+    d_model: 4096,
+    n_heads: 32,
+    n_kv_heads: 32,
+    d_ff: 11008,
+    vocab: 32000,
+    n_experts: 8,
+    moe_top_k: 2,
+    capacity_pct: 125,
+};
+
+/// 13B backbone, 16 experts, top-2 routing, 1.25× capacity:
+/// ≈140B total / ≈21.5B active parameters.
+pub static LLAMA_13B_MOE16X: TransformerArch = TransformerArch {
+    name: "13b-moe16x",
+    n_layers: 40,
+    d_model: 5120,
+    n_heads: 40,
+    n_kv_heads: 40,
+    d_ff: 13824,
+    vocab: 32000,
+    n_experts: 16,
+    moe_top_k: 2,
+    capacity_pct: 125,
 };
 
 pub fn by_name(name: &str) -> Option<&'static TransformerArch> {
@@ -53,12 +97,22 @@ pub fn by_name(name: &str) -> Option<&'static TransformerArch> {
         "llama-7b" | "7b" => Some(&LLAMA_7B),
         "llama-13b" | "13b" => Some(&LLAMA_13B),
         "llama-70b" | "70b" => Some(&LLAMA_70B),
+        "7b-moe8x" | "llama-7b-moe8x" | "moe8x" => Some(&LLAMA_7B_MOE8X),
+        "13b-moe16x" | "llama-13b-moe16x" | "moe16x" => {
+            Some(&LLAMA_13B_MOE16X)
+        }
         _ => None,
     }
 }
 
-pub static ALL: [&TransformerArch; 4] =
-    [&LLAMA_1B, &LLAMA_7B, &LLAMA_13B, &LLAMA_70B];
+pub static ALL: [&TransformerArch; 6] = [
+    &LLAMA_1B,
+    &LLAMA_7B,
+    &LLAMA_13B,
+    &LLAMA_70B,
+    &LLAMA_7B_MOE8X,
+    &LLAMA_13B_MOE16X,
+];
 
 #[cfg(test)]
 mod tests {
@@ -69,6 +123,8 @@ mod tests {
         assert_eq!(by_name("7b").unwrap().name, "llama-7b");
         assert_eq!(by_name("LLAMA-70B").unwrap().name, "llama-70b");
         assert!(by_name("8b").is_none());
+        assert_eq!(by_name("7b-moe8x").unwrap().name, "7b-moe8x");
+        assert_eq!(by_name("MOE16X").unwrap().name, "13b-moe16x");
     }
 
     #[test]
@@ -76,5 +132,19 @@ mod tests {
         assert!(LLAMA_1B.params() < LLAMA_7B.params());
         assert!(LLAMA_7B.params() < LLAMA_13B.params());
         assert!(LLAMA_13B.params() < LLAMA_70B.params());
+    }
+
+    #[test]
+    fn moe_presets_are_sparse() {
+        for a in [&LLAMA_7B_MOE8X, &LLAMA_13B_MOE16X] {
+            assert!(a.is_moe());
+            assert!(a.active_params() < a.params());
+            assert!(a.moe_top_k < a.n_experts);
+        }
+        // Sparse totals dwarf the dense backbone; actives stay close
+        // to it (that is the whole point of the crossover scenario).
+        assert!(LLAMA_7B_MOE8X.params() > 4.0 * LLAMA_7B.params());
+        assert!(LLAMA_7B_MOE8X.active_params()
+                < 2.0 * LLAMA_7B.params());
     }
 }

@@ -24,15 +24,25 @@ pub struct ParallelPlan {
     pub pp: usize,
     /// Context (sequence) parallel degree.
     pub cp: usize,
+    /// Expert parallel degree (MoE). EP reuses data-parallel ranks —
+    /// each DP group of size `dp` is tiled into `dp/ep` expert shards
+    /// — so `ep` must divide `dp` and does not change the world size.
+    /// `ep = 1` (dense / fully replicated experts) is the default.
+    pub ep: usize,
 }
 
 impl ParallelPlan {
     pub fn data_parallel(dp: usize) -> ParallelPlan {
-        ParallelPlan { dp, tp: 1, pp: 1, cp: 1 }
+        ParallelPlan { dp, tp: 1, pp: 1, cp: 1, ep: 1 }
     }
 
     pub fn new(dp: usize, tp: usize, pp: usize, cp: usize) -> ParallelPlan {
-        ParallelPlan { dp, tp, pp, cp }
+        ParallelPlan { dp, tp, pp, cp, ep: 1 }
+    }
+
+    /// The plan with expert parallelism `ep` (builder-style).
+    pub fn with_ep(self, ep: usize) -> ParallelPlan {
+        ParallelPlan { ep, ..self }
     }
 
     pub fn world_size(&self) -> usize {
@@ -50,6 +60,14 @@ impl ParallelPlan {
     {
         if self.dp == 0 || self.tp == 0 || self.pp == 0 || self.cp == 0 {
             return Err("all degrees must be >= 1".into());
+        }
+        if self.ep == 0 {
+            return Err("ep must be >= 1".into());
+        }
+        if self.dp % self.ep != 0 {
+            return Err(format!(
+                "ep={} must divide dp={} (expert shards tile the \
+                 data-parallel group)", self.ep, self.dp));
         }
         if self.world_size() != cluster.world_size() {
             return Err(format!(
@@ -84,6 +102,13 @@ impl ParallelPlan {
         GroupPlacement::strided(cluster, self.dp, self.model_parallel())
     }
 
+    /// Placement of the expert-parallel group: `ep` consecutive ranks
+    /// of the DP group (stride tp·cp·pp, the same as DP). Expert
+    /// dispatch/combine AllToAll runs over this group.
+    pub fn ep_placement(&self, cluster: &Cluster) -> GroupPlacement {
+        GroupPlacement::strided(cluster, self.ep, self.model_parallel())
+    }
+
     /// Do adjacent pipeline stages sit on different nodes?
     pub fn pp_crosses_nodes(&self, cluster: &Cluster) -> bool {
         self.pp > 1
@@ -93,7 +118,13 @@ impl ParallelPlan {
 
 impl std::fmt::Display for ParallelPlan {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "dp{}tp{}pp{}cp{}", self.dp, self.tp, self.pp, self.cp)
+        // ep = 1 keeps the historical spelling so every pre-MoE CSV,
+        // store key, and golden figure stays byte-identical.
+        write!(f, "dp{}tp{}pp{}cp{}", self.dp, self.tp, self.pp, self.cp)?;
+        if self.ep > 1 {
+            write!(f, "ep{}", self.ep)?;
+        }
+        Ok(())
     }
 }
 
@@ -198,6 +229,39 @@ mod tests {
             assert!(p.validate(&c, 32).is_ok());
             assert!(seen.insert(*p));
         }
+    }
+
+    #[test]
+    fn ep_divides_dp_and_keeps_world_size() {
+        let c = h100(4); // 32 GPUs
+        let p = ParallelPlan::new(8, 4, 1, 1).with_ep(4);
+        assert!(p.validate(&c, 32).is_ok());
+        assert_eq!(p.world_size(), 32); // ep is not a world factor
+        // ep ∤ dp is rejected with a pointed message.
+        let bad = ParallelPlan::new(8, 4, 1, 1).with_ep(3);
+        let err = bad.validate(&c, 32).unwrap_err();
+        assert!(err.contains("ep=3") && err.contains("dp=8"), "{err}");
+        assert!(ParallelPlan::new(8, 4, 1, 1).with_ep(0)
+            .validate(&c, 32).is_err());
+    }
+
+    #[test]
+    fn ep_placement_strides_like_dp() {
+        let c = h100(4); // 32 GPUs
+        let p = ParallelPlan::new(8, 2, 2, 1).with_ep(4);
+        let ep = p.ep_placement(&c);
+        let dp = p.dp_placement(&c);
+        assert_eq!(ep.size, 4);
+        assert_eq!(dp.size, 8);
+        // Same stride (tp·cp·pp), smaller group.
+        assert_eq!(p.model_parallel(), 4);
+    }
+
+    #[test]
+    fn display_hides_ep1_appends_ep_otherwise() {
+        let p = ParallelPlan::new(8, 2, 2, 1);
+        assert_eq!(p.to_string(), "dp8tp2pp2cp1");
+        assert_eq!(p.with_ep(4).to_string(), "dp8tp2pp2cp1ep4");
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub struct SweepRequest {
     /// satisfy it (pp = 1, or microbatch counts not divisible by pp
     /// for interleaving) are skipped at grid expansion.
     pub schedule: Schedule,
+    /// Largest expert-parallel degree to consider: candidates are the
+    /// powers of two up to this bound, crossed with every plan shape
+    /// (infeasible combinations — dense models, ep not dividing dp or
+    /// the expert count — are skipped at grid expansion). The default
+    /// 1 reproduces the historical dense sweep exactly.
+    pub max_ep: usize,
 }
 
 impl SweepRequest {
@@ -63,7 +69,16 @@ impl SweepRequest {
     ) -> SweepRequest {
         SweepRequest { arch, cluster, global_batch, seq_len,
                        with_cp: false, sharding: Sharding::Fsdp,
-                       schedule: Schedule::OneFOneB }
+                       schedule: Schedule::OneFOneB, max_ep: 1 }
+    }
+
+    /// Expert-parallel candidates: powers of two in `[1, max_ep]`.
+    fn ep_candidates(&self) -> Vec<usize> {
+        let mut eps = vec![1usize];
+        while *eps.last().unwrap() * 2 <= self.max_ep.max(1) {
+            eps.push(eps.last().unwrap() * 2);
+        }
+        eps
     }
 
     /// The sweep grid as a Study, restricted to `plans`.
@@ -73,6 +88,7 @@ impl SweepRequest {
             .hardware([self.cluster.node.gpu])
             .nodes([self.cluster.nodes])
             .plans(plans)
+            .eps(self.ep_candidates())
             .global_batches([self.global_batch])
             .micro_batch_divisors()
             .seq_len(self.seq_len)
@@ -169,7 +185,7 @@ pub fn best_for_plan_in(
 mod tests {
     use super::*;
     use crate::hardware::Generation;
-    use crate::model::{LLAMA_70B, LLAMA_7B};
+    use crate::model::{LLAMA_70B, LLAMA_7B, LLAMA_7B_MOE8X};
 
     #[test]
     fn sweep_finds_feasible_plans_and_sorts() {
@@ -261,6 +277,26 @@ mod tests {
             assert_eq!(pruned.metrics.global_wps.to_bits(),
                        head.metrics.global_wps.to_bits());
         }
+    }
+
+    #[test]
+    fn ep_grid_pruned_best_equals_exhaustive_sweep_head() {
+        // The expert-parallel axis (`max_ep`) joins the bound-and-prune
+        // search; the pruned winner over the EP grid must still be the
+        // exhaustive sweep's head exactly, tie-breaks included.
+        let mut req = SweepRequest::fsdp(
+            LLAMA_7B_MOE8X, Cluster::new(Generation::H100, 1), 16, 4096);
+        req.max_ep = 8;
+        let full = sweep(&req);
+        assert!(!full.is_empty(), "MoE sweep must find feasible plans");
+        assert!(full.iter().any(|o| o.plan.ep > 1),
+                "EP grid must contain sharded-expert plans");
+        let head = full.first().unwrap();
+        let pruned = best(&req).unwrap();
+        assert_eq!(pruned.plan, head.plan);
+        assert_eq!(pruned.micro_batch, head.micro_batch);
+        assert_eq!(pruned.metrics.global_wps.to_bits(),
+                   head.metrics.global_wps.to_bits());
     }
 
     #[test]

@@ -15,14 +15,14 @@ use anyhow::Result;
 use crate::collectives::{busbw_gbps, collective_time, Collective};
 use crate::hardware::{Catalog, FabricKind, FabricSpec, Generation, HwId};
 use crate::memory;
-use crate::model::{self, LLAMA_70B, LLAMA_7B};
+use crate::model::{self, LLAMA_70B, LLAMA_7B, LLAMA_7B_MOE8X};
 use crate::parallelism::ParallelPlan;
 use crate::planner::{self, SweepRequest};
-use crate::sim::{JitterDist, Schedule, Sharding, SimConfig};
+use crate::sim::{JitterDist, Schedule, Sharding, SimConfig, SyncMode};
 use crate::study::table::{f0, f2, f3, ms};
 use crate::study::{
-    Column, Objective, PlanAxis, Registry, Scenario, ScenarioOpts, Study,
-    StudyRunner, Table,
+    CaseResult, Column, Objective, PlanAxis, Registry, Scenario,
+    ScenarioOpts, Study, StudyRunner, Table,
 };
 use crate::topology::{Cluster, GroupPlacement};
 
@@ -52,6 +52,8 @@ pub fn register_all(reg: &mut Registry) {
     reg.register(Box::new(PowerSweep));
     reg.register(Box::new(Contention));
     reg.register(Box::new(Straggler));
+    reg.register(Box::new(MoeCrossover));
+    reg.register(Box::new(AsyncStraggler));
 }
 
 /// Weak-scaling study: Llama-7B pure FSDP, local batch 2, seq 4096
@@ -1197,6 +1199,247 @@ impl Scenario for Straggler {
                         ms(c.iter_p99),
                     ]);
                 }
+            }
+        }
+        Ok(vec![grid, t])
+    }
+}
+
+/// `moe_crossover` — dense Llama-7B vs the 8-expert top-2 MoE preset
+/// on the same token budget, across scales and expert-parallel
+/// degrees: the MoE activates ~2.2x fewer FLOPs per token but carries
+/// ~5x the parameters, so its FSDP/EP communication grows until the
+/// dispatch cost crosses the dense model's compute saving. Fully
+/// deterministic (jitter off): the grid replays byte-identically
+/// across thread counts, engines, and store round trips.
+struct MoeCrossover;
+
+impl MoeCrossover {
+    fn study(title: &str) -> Study {
+        Study::builder("moe_crossover")
+            .title(title)
+            .archs([LLAMA_7B, LLAMA_7B_MOE8X])
+            .generation(Generation::H100)
+            .nodes([1, 4, 16])
+            .plan_shapes(&[(1, 1, 1), (2, 1, 1)])
+            .eps([1, 2, 8])
+            .global_batches([256])
+            // mbs 2 matches the dense weak-scaling setup; the MoE's
+            // capacity-padded activations (59.5 B/token/d vs 34) need
+            // mbs 1 to fit small clusters, so both are offered and
+            // the memory cap keeps whichever fits per point.
+            .micro_batches([1, 2])
+            .memory_cap(planner::MEM_CAP_FRAC)
+            .build()
+    }
+}
+
+impl Scenario for MoeCrossover {
+    fn name(&self) -> &'static str { "moe_crossover" }
+    fn title(&self) -> &'static str {
+        "MoE crossover: dense Llama-7B vs 7b-moe8x (top-2, capacity \
+         1.25) across scales and expert-parallel degrees (H100, \
+         gbs 256)"
+    }
+    fn describe(&self) -> &'static str {
+        "dense 7B vs 8-expert top-2 MoE over 1/4/16 nodes and \
+         ep 1/2/8; per-scale winner table shows where expert \
+         dispatch overtakes the active-FLOP saving (deterministic)"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let res = runner.run(&Self::study(self.title()));
+        // Full grid in expansion order; the infeasible combinations
+        // (ep > 1 on the dense arch, ep not dividing dp) are skipped
+        // by expansion, so every row simulated.
+        let grid = res
+            .table(&[Arch, Nodes, Plan, Mbs, GlobalWps, Mfu, ExposedMs,
+                     MemGb])
+            .with_chart(4);
+
+        // Per-scale crossover: the best dense plan vs the best MoE
+        // plan under mean throughput, with the MoE row carrying its
+        // words/s ratio against the dense winner at that scale.
+        let mut t = Table::new(
+            "moe_crossover_winners",
+            "Best plan per node count: dense vs MoE, with the MoE \
+             throughput ratio over the dense winner",
+            &["nodes", "arch", "best_plan", "mbs", "global_wps",
+              "mem_gb", "vs_dense"]);
+        let mut nodes_seen: Vec<usize> = Vec::new();
+        for c in &res.cases {
+            if !nodes_seen.contains(&c.nodes) {
+                nodes_seen.push(c.nodes);
+            }
+        }
+        for &n in &nodes_seen {
+            let best = |arch: &'static str| {
+                // First-in-grid-order wins ties, matching best_by.
+                res.cases
+                    .iter()
+                    .filter(|c| c.nodes == n && c.arch == arch)
+                    .fold(None, |acc: Option<&CaseResult>, c| {
+                        match acc {
+                            Some(top)
+                                if top.metrics.global_wps
+                                    >= c.metrics.global_wps => acc,
+                            _ => Some(c),
+                        }
+                    })
+            };
+            let dense = best(LLAMA_7B.name);
+            let moe = best(LLAMA_7B_MOE8X.name);
+            for c in [dense, moe].into_iter().flatten() {
+                let vs = match dense {
+                    Some(d) if d.metrics.global_wps > 0.0 => {
+                        f2(c.metrics.global_wps / d.metrics.global_wps)
+                    }
+                    _ => "-".into(),
+                };
+                t.row(vec![
+                    n.to_string(),
+                    c.arch.to_string(),
+                    c.plan.to_string(),
+                    c.micro_batch.to_string(),
+                    f0(c.metrics.global_wps),
+                    f2(c.mem_per_gpu / 1e9),
+                    vs,
+                ]);
+            }
+        }
+        Ok(vec![grid, t])
+    }
+}
+
+/// `async_straggler` — bounded-staleness data parallelism under the
+/// seeded straggler layer: amortizing the gradient sync over `K =
+/// staleness + 1` steps shields the iteration tail from slow ranks,
+/// but stale gradients discount the *effective* (convergence-adjusted)
+/// throughput, so the raw and effective winners diverge. Seeded like
+/// `straggler`: `--seed N` replays byte-identically across thread
+/// counts, engines, and restarts.
+struct AsyncStraggler;
+
+impl AsyncStraggler {
+    /// The documented default; `--seed` (CLI) or a `"seed"` request
+    /// field (serve) overrides it through [`ScenarioOpts`].
+    const DEFAULT_SEED: u64 = 7;
+    const SIGMA: f64 = 0.15;
+    const REPLICATES: u32 = 16;
+
+    fn study(title: &str, seed: u64) -> Study {
+        Study::builder("async_straggler")
+            .title(title)
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([4, 16])
+            .plan_shapes(&[(1, 1, 1), (2, 1, 1)])
+            .global_batches([256])
+            .micro_batches([2])
+            .memory_cap(planner::MEM_CAP_FRAC)
+            .jitter(JitterDist::Lognormal { sigma: Self::SIGMA })
+            .seed(seed)
+            .seeds(Self::REPLICATES)
+            .sync_modes([
+                SyncMode::Sync,
+                SyncMode::Async { max_staleness: 1 },
+                SyncMode::Async { max_staleness: 4 },
+            ])
+            .build()
+    }
+}
+
+impl Scenario for AsyncStraggler {
+    fn name(&self) -> &'static str { "async_straggler" }
+    fn title(&self) -> &'static str {
+        "Staleness-tolerant data parallelism under seeded stragglers: \
+         sync vs async:1 vs async:4 (Llama-7B, H100, lognormal sigma \
+         0.15, 16 replicates)"
+    }
+    fn describe(&self) -> &'static str {
+        "sync vs async:1/async:4 DP under seeded lognormal jitter \
+         over 4/16 nodes; raw vs staleness-discounted effective \
+         throughput per mode (--seed N replays byte-identically)"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        self.tables_with(runner, ScenarioOpts::default())
+    }
+
+    fn tables_with(
+        &self,
+        runner: &mut StudyRunner,
+        opts: ScenarioOpts,
+    ) -> Result<Vec<Table>> {
+        let seed = opts.seed.unwrap_or(Self::DEFAULT_SEED);
+        let res = runner.run(&Self::study(self.title(), seed));
+        // Full grid in expansion order (deterministic for a seed).
+        let grid = res
+            .table(&[Nodes, Plan, Mbs, SyncModeKind, GlobalWps,
+                     EffectiveWps, P95Wps, IterP50Ms, IterP95Ms,
+                     IterP99Ms])
+            .with_chart(4);
+
+        // Per scale and sync mode: the best raw-throughput case, its
+        // tail, and both throughput views against the synchronous
+        // winner — the async rows win raw/tail and lose effective as
+        // staleness grows.
+        let mut t = Table::new(
+            "async_straggler_modes",
+            "Best case per node count and sync mode: raw vs \
+             staleness-discounted effective throughput (speedups \
+             relative to the synchronous winner)",
+            &["nodes", "sync", "best_plan", "global_wps",
+              "effective_wps", "p95_ms", "raw_vs_sync",
+              "effective_vs_sync"]);
+        let mut nodes_seen: Vec<usize> = Vec::new();
+        for c in &res.cases {
+            if !nodes_seen.contains(&c.nodes) {
+                nodes_seen.push(c.nodes);
+            }
+        }
+        let modes = [
+            SyncMode::Sync,
+            SyncMode::Async { max_staleness: 1 },
+            SyncMode::Async { max_staleness: 4 },
+        ];
+        for &n in &nodes_seen {
+            let best = |mode: SyncMode| {
+                // First-in-grid-order wins ties, matching best_by.
+                res.cases
+                    .iter()
+                    .filter(|c| c.nodes == n && c.sync == mode)
+                    .fold(None, |acc: Option<&CaseResult>, c| {
+                        match acc {
+                            Some(top)
+                                if top.metrics.global_wps
+                                    >= c.metrics.global_wps => acc,
+                            _ => Some(c),
+                        }
+                    })
+            };
+            let sync_best = best(SyncMode::Sync);
+            for mode in modes {
+                let Some(c) = best(mode) else { continue };
+                let eff =
+                    c.metrics.global_wps / c.sync.staleness_discount();
+                let (raw_vs, eff_vs) = match sync_best {
+                    Some(s) if s.metrics.global_wps > 0.0 => (
+                        f2(c.metrics.global_wps / s.metrics.global_wps),
+                        f2(eff / s.metrics.global_wps),
+                    ),
+                    _ => ("-".into(), "-".into()),
+                };
+                t.row(vec![
+                    n.to_string(),
+                    c.sync.to_string(),
+                    c.plan.to_string(),
+                    f0(c.metrics.global_wps),
+                    f0(eff),
+                    ms(c.iter_p95),
+                    raw_vs,
+                    eff_vs,
+                ]);
             }
         }
         Ok(vec![grid, t])

@@ -63,7 +63,6 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::model;
 use crate::planner::{self, SweepRequest};
 use crate::report;
 use crate::sim::{Schedule, Sharding};
@@ -631,7 +630,8 @@ fn dispatch(
                     // render byte-identical CSV — seeded grids append
                     // the percentile columns on both paths.
                     let table = res
-                        .table(&grid_columns(!study.jitter().is_off()));
+                        .table(&grid_columns(!study.jitter().is_off(),
+                                             study.has_async()));
                     send_table(out, &table)?;
                     send_done(out, &runner)
                 }
@@ -816,8 +816,7 @@ fn args_from_request(req: &Json) -> Args {
 /// `plan` flags → [`SweepRequest`], mirroring `dtsim sweep`'s
 /// defaults.
 fn sweep_request_from_args(args: &Args) -> Result<SweepRequest, String> {
-    let arch = *model::by_name(&args.get_or("arch", "7b"))
-        .ok_or("unknown --arch")?;
+    let arch = grid::parse_arch(&args.get_or("arch", "7b"))?;
     let gen = grid::parse_hw(&args.get_or("gen", "h100"))?;
     let cluster = Cluster::new(gen, args.usize_or("nodes", 32));
     Ok(SweepRequest {
@@ -834,6 +833,7 @@ fn sweep_request_from_args(args: &Args) -> Result<SweepRequest, String> {
             Some(s) => grid::parse_schedule(s)?,
             None => Schedule::OneFOneB,
         },
+        max_ep: args.usize_or("max-ep", 1),
     })
 }
 

@@ -32,11 +32,13 @@ pub enum Tag {
     TpAllReduce,
     CpRingExchange,
     P2pActivations,
+    /// MoE expert dispatch/combine over the EP group (PR 9).
+    ExpertAllToAll,
 }
 
 /// Number of distinct [`Tag`] variants (the fixed width of
 /// [`TagTotals`]).
-pub const N_TAGS: usize = 9;
+pub const N_TAGS: usize = 10;
 
 impl Tag {
     /// Every tag, in declaration order (== [`Tag::index`] order).
@@ -50,6 +52,7 @@ impl Tag {
         Tag::TpAllReduce,
         Tag::CpRingExchange,
         Tag::P2pActivations,
+        Tag::ExpertAllToAll,
     ];
 
     /// Dense index into [`TagTotals`]. Exhaustive on purpose: adding a
@@ -67,6 +70,7 @@ impl Tag {
             Tag::TpAllReduce => 6,
             Tag::CpRingExchange => 7,
             Tag::P2pActivations => 8,
+            Tag::ExpertAllToAll => 9,
         }
     }
 
@@ -85,6 +89,7 @@ impl Tag {
             Tag::TpAllReduce => "tp_allreduce",
             Tag::CpRingExchange => "cp_ring",
             Tag::P2pActivations => "pp_p2p",
+            Tag::ExpertAllToAll => "ep_alltoall",
         }
     }
 }

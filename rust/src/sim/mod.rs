@@ -202,6 +202,99 @@ impl Jitter {
     }
 }
 
+/// Data-parallel gradient synchronization discipline (PR 9).
+///
+/// [`SyncMode::Async`] models bounded-staleness data parallelism as
+/// K-step gradient synchronization (local SGD): replicas apply local
+/// updates and reconcile gradients every `K = max_staleness + 1`
+/// iterations, so any replica's contribution is at most
+/// `max_staleness` steps old. In the steady-state per-iteration view
+/// this amortizes every DP *gradient-reduction* collective
+/// (ReduceScatter, DDP/HSDP AllReduce) by `1/K` — under armed jitter
+/// the fast replicas simply pay their (scaled, still-seeded) share and
+/// proceed instead of fencing on the slowest rank every step. FSDP
+/// parameter AllGathers are *not* amortized: sharded parameters must
+/// be materialized every iteration regardless of staleness.
+///
+/// Only priced durations change — never the event structure or the
+/// jitter draw order — so both execution engines stay bit-identical
+/// over the new axis by construction, and [`SyncMode::Sync`] runs the
+/// exact historical code route (`docs/moe.md` §Staleness).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SyncMode {
+    /// Fully synchronous data parallelism (the default; historical
+    /// behavior, bit for bit).
+    Sync,
+    /// Bounded-staleness gradient sync: reconcile every
+    /// `max_staleness + 1` steps (staleness `<= max_staleness`).
+    Async { max_staleness: u32 },
+}
+
+impl SyncMode {
+    pub fn is_sync(&self) -> bool {
+        matches!(self, SyncMode::Sync)
+    }
+
+    /// Gradient-sync interval `K = max_staleness + 1` (1 when sync).
+    pub fn sync_interval(&self) -> f64 {
+        match *self {
+            SyncMode::Sync => 1.0,
+            SyncMode::Async { max_staleness } => max_staleness as f64 + 1.0,
+        }
+    }
+
+    /// Convergence-impact divisor for the staleness-discounted
+    /// effective throughput: stale gradients slow optimization, so
+    /// `effective_wps = raw_wps / (1 + E[staleness])` with
+    /// `E[staleness] = max_staleness / 2` under K-step sync (a
+    /// replica's gradient age is uniform over `0..K`). Exactly 1.0 for
+    /// [`SyncMode::Sync`], so the sync column equals the raw one bit
+    /// for bit (`docs/moe.md` §Staleness).
+    pub fn staleness_discount(&self) -> f64 {
+        match *self {
+            SyncMode::Sync => 1.0,
+            SyncMode::Async { max_staleness } => {
+                1.0 + max_staleness as f64 / 2.0
+            }
+        }
+    }
+
+    /// Canonical identity `(tag, staleness)` for the store codec.
+    pub(crate) fn key(&self) -> (u8, u32) {
+        match *self {
+            SyncMode::Sync => (0, 0),
+            SyncMode::Async { max_staleness } => (1, max_staleness),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let SyncMode::Async { max_staleness } = self {
+            if *max_staleness == 0 {
+                return Err(
+                    "async max_staleness must be >= 1 (async:0 is \
+                     synchronous — spell it \"sync\" so store keys \
+                     never alias)"
+                        .into(),
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for SyncMode {
+    /// Canonical spec string ("sync", "async:S") — the inverse of
+    /// `config::parse_sync`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SyncMode::Sync => write!(f, "sync"),
+            SyncMode::Async { max_staleness } => {
+                write!(f, "async:{max_staleness}")
+            }
+        }
+    }
+}
+
 /// Data-parallel gradient/parameter sharding strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Sharding {
@@ -298,6 +391,9 @@ pub struct SimConfig {
     /// the unarmed path is bit-identical to the deterministic
     /// simulator).
     pub jitter: Jitter,
+    /// Gradient synchronization discipline ([`SyncMode::Sync`] by
+    /// default — the historical fully-synchronous route, bit for bit).
+    pub sync: SyncMode,
 }
 
 impl SimConfig {
@@ -313,7 +409,7 @@ impl SimConfig {
         SimConfig { arch, cluster, plan, global_batch, micro_batch,
                     seq_len, sharding: Sharding::Fsdp,
                     schedule: Schedule::OneFOneB, prefetch: true,
-                    jitter: Jitter::OFF }
+                    jitter: Jitter::OFF, sync: SyncMode::Sync }
     }
 
     pub fn microbatches(&self) -> usize {
@@ -323,6 +419,31 @@ impl SimConfig {
     pub fn validate(&self) -> Result<(), String> {
         self.plan.validate(&self.cluster, self.arch.n_layers)?;
         self.jitter.validate()?;
+        self.sync.validate()?;
+        if self.plan.ep > 1 && !self.arch.is_moe() {
+            return Err(format!(
+                "ep={} requires a mixture-of-experts architecture \
+                 ({} is dense; try --arch 7b-moe8x)",
+                self.plan.ep, self.arch.name));
+        }
+        if self.arch.is_moe() {
+            if self.arch.moe_top_k == 0
+                || self.arch.moe_top_k > self.arch.n_experts
+            {
+                return Err(format!(
+                    "moe top_k {} must be in 1..={} (n_experts)",
+                    self.arch.moe_top_k, self.arch.n_experts));
+            }
+            if self.arch.capacity_pct == 0 {
+                return Err("moe capacity_pct must be > 0".into());
+            }
+            if self.arch.n_experts % self.plan.ep != 0 {
+                return Err(format!(
+                    "ep={} must divide n_experts={} (each shard holds \
+                     an equal expert slice)",
+                    self.plan.ep, self.arch.n_experts));
+            }
+        }
         if let Sharding::Hsdp { group } = self.sharding {
             if group == 0 || self.plan.dp % group != 0 {
                 return Err(format!(
@@ -431,7 +552,31 @@ struct Durations {
     tp_ar_bwd: f64,
     cp_ring: f64,
     p2p: f64,
+    /// MoE expert dispatch + combine (2 AllToAll passes over the EP
+    /// group) per layer, forward direction; 0 when `ep == 1`.
+    a2a_fwd: f64,
+    /// Gradient flow back through the same dispatch/combine pair.
+    a2a_bwd: f64,
     optimizer: f64,
+}
+
+/// Per-rank payload of one MoE expert-dispatch AllToAll: the
+/// capacity-padded dispatched activations, in bf16 —
+/// `2 · cf · top_k · mbs · seq · d_model / (tp · cp)` bytes (token
+/// slice follows the P2P convention: sequence split over cp,
+/// activations scatter-gathered over tp). Zero for dense models or
+/// `ep == 1` (experts local, nothing to dispatch).
+pub fn ep_alltoall_bytes(cfg: &SimConfig) -> f64 {
+    let arch = &cfg.arch;
+    if !arch.is_moe() || cfg.plan.ep <= 1 {
+        return 0.0;
+    }
+    2.0 * arch.capacity_factor()
+        * arch.moe_top_k as f64
+        * cfg.micro_batch as f64
+        * cfg.seq_len as f64
+        * arch.d_model as f64
+        / (cfg.plan.tp as f64 * cfg.plan.cp as f64)
 }
 
 fn durations(cfg: &SimConfig, costs: &mut CostCache) -> Durations {
@@ -481,6 +626,20 @@ fn durations(cfg: &SimConfig, costs: &mut CostCache) -> Durations {
                   &dp_place).time_s
     } else { 0.0 };
 
+    // Bounded-staleness DP (K-step gradient sync) amortizes every
+    // gradient-reduction collective by 1/K; the event structure and
+    // jitter draw order are untouched so both engines stay
+    // bit-identical and `SyncMode::Sync` divides by exactly 1.0 only
+    // inside this `else` — the sync branch runs the historical values
+    // unmodified (see `SyncMode`).
+    let (rs_layer, ddp_ar_layer, hsdp_ar_layer) = match cfg.sync {
+        SyncMode::Sync => (rs_layer, ddp_ar_layer, hsdp_ar_layer),
+        SyncMode::Async { .. } => {
+            let k = cfg.sync.sync_interval();
+            (rs_layer / k, ddp_ar_layer / k, hsdp_ar_layer / k)
+        }
+    };
+
     // Megatron TP: 2 AllReduces of the activation tensor per layer in
     // fwd, 2 in bwd (bf16 activations, tokens split over cp).
     let act_bytes = 2.0 * cfg.micro_batch as f64 * cfg.seq_len as f64
@@ -509,6 +668,16 @@ fn durations(cfg: &SimConfig, costs: &mut CostCache) -> Durations {
                   &pp_place).time_s
     } else { 0.0 };
 
+    // MoE expert parallelism: dispatch + combine = 2 AllToAll passes
+    // over the EP group per layer, each direction (the backward pass
+    // routes gradients through the same pair).
+    let a2a_bytes = ep_alltoall_bytes(cfg);
+    let a2a = if a2a_bytes > 0.0 {
+        let ep_place = plan.ep_placement(cluster);
+        2.0 * costs.get(Collective::AllToAll, a2a_bytes, cluster,
+                        &ep_place).time_s
+    } else { 0.0 };
+
     Durations {
         fwd_layer: workload::fwd_layer_time(
             arch, spec, plan, cfg.micro_batch, cfg.seq_len),
@@ -526,6 +695,8 @@ fn durations(cfg: &SimConfig, costs: &mut CostCache) -> Durations {
         tp_ar_bwd: tp_ar,
         cp_ring,
         p2p,
+        a2a_fwd: a2a,
+        a2a_bwd: a2a,
         optimizer: workload::optimizer_time(arch, spec, plan),
     }
 }
@@ -545,6 +716,11 @@ fn durations(cfg: &SimConfig, costs: &mut CostCache) -> Durations {
 /// than a simulation — the planner's bound-and-prune search uses the
 /// implied throughput *upper* bound to skip provably-dominated grid
 /// points, with the winner still exactly the exhaustive sweep's.
+/// Expert parallelism and bounded staleness only *add* or *shrink*
+/// communication (AllToAll dispatch, amortized gradient sync) — the
+/// compute terms here are untouched by either, so the certificate
+/// stays sound over the `ep` and `sync` axes with no extra cases
+/// (`docs/moe.md`).
 pub fn iter_time_lower_bound(cfg: &SimConfig) -> f64 {
     let spec = cfg.cluster.node.spec();
     let plan = &cfg.plan;
@@ -789,6 +965,10 @@ struct EmitCtx<'a> {
     zero3: bool,
     tp: bool,
     cp: bool,
+    /// Emit per-layer expert dispatch/combine AllToAll (MoE with
+    /// `ep > 1`; `ep == 1` keeps experts local — no new events, so the
+    /// historical stream is preserved byte for byte).
+    moe: bool,
 }
 
 impl<'a> EmitCtx<'a> {
@@ -816,6 +996,7 @@ impl<'a> EmitCtx<'a> {
             zero3: cfg.sharding == Sharding::Zero3 && cfg.plan.dp > 1,
             tp: cfg.plan.tp > 1,
             cp: cfg.plan.cp > 1,
+            moe: cfg.arch.is_moe() && cfg.plan.ep > 1,
         }
     }
 
@@ -897,10 +1078,18 @@ impl<'a> EmitCtx<'a> {
                 s, STREAM_COMPUTE, d.fwd_layer, &deps[..nd],
                 Tag::FwdCompute);
             prev = Some(c);
+            if self.moe {
+                // Expert dispatch + combine wrap the layer's FFN;
+                // priced as one chained event (2 AllToAll passes).
+                let dur = st.jit(d.a2a_fwd);
+                prev = Some(eng.push_event(
+                    s, STREAM_COMM_MP, dur, &[c],
+                    Tag::ExpertAllToAll));
+            }
             if self.tp {
                 let dur = st.jit(d.tp_ar_fwd);
                 prev = Some(eng.push_event(
-                    s, STREAM_COMM_MP, dur, &[c],
+                    s, STREAM_COMM_MP, dur, &[prev.unwrap()],
                     Tag::TpAllReduce));
             }
             if self.cp {
@@ -986,10 +1175,17 @@ impl<'a> EmitCtx<'a> {
                 s, STREAM_COMPUTE, d.bwd_layer, &deps[..nd],
                 Tag::BwdCompute);
             prev = Some(c);
+            if self.moe {
+                // Gradients re-trace the dispatch/combine pair.
+                let dur = st.jit(d.a2a_bwd);
+                prev = Some(eng.push_event(
+                    s, STREAM_COMM_MP, dur, &[c],
+                    Tag::ExpertAllToAll));
+            }
             if self.tp {
                 let dur = st.jit(d.tp_ar_bwd);
                 prev = Some(eng.push_event(
-                    s, STREAM_COMM_MP, dur, &[c],
+                    s, STREAM_COMM_MP, dur, &[prev.unwrap()],
                     Tag::TpAllReduce));
             }
             if self.cp {
@@ -1711,6 +1907,26 @@ mod tests {
         let cq = Cluster::new(custom_hw(), 8);
         let custom = SimConfig::fsdp(
             LLAMA_7B, cq, ParallelPlan::new(8, 2, 2, 1), 32, 1, 4096);
+        // MoE / expert-parallel arms (PR 9): the ExpertAllToAll chain
+        // in both emitters, alone and composed with tp and pipeline.
+        use crate::model::LLAMA_7B_MOE8X;
+        let moe_ep8 = SimConfig::fsdp(
+            LLAMA_7B_MOE8X, Cluster::new(Generation::H100, 1),
+            ParallelPlan::data_parallel(8).with_ep(8), 16, 2, 4096);
+        let moe_tp2_ep4 = SimConfig::fsdp(
+            LLAMA_7B_MOE8X, c8,
+            ParallelPlan::new(32, 2, 1, 1).with_ep(4), 64, 2, 4096);
+        let moe_pp4_ep2 = SimConfig::fsdp(
+            LLAMA_7B_MOE8X, c4,
+            ParallelPlan::new(8, 1, 4, 1).with_ep(2), 32, 1, 4096);
+        // Async arms: amortized DP reductions over the fsdp, ddp, and
+        // MoE routes (durations change, the event structure does not).
+        let mut async_fsdp = weak_cfg(8);
+        async_fsdp.sync = SyncMode::Async { max_staleness: 4 };
+        let mut async_ddp = ddp;
+        async_ddp.sync = SyncMode::Async { max_staleness: 1 };
+        let mut async_moe = moe_ep8;
+        async_moe.sync = SyncMode::Async { max_staleness: 8 };
         vec![
             weak_cfg(1),
             weak_cfg(16),
@@ -1730,6 +1946,12 @@ mod tests {
                             32, 1, 4096),
             il2_mixed,
             custom,
+            moe_ep8,
+            moe_tp2_ep4,
+            moe_pp4_ep2,
+            async_fsdp,
+            async_ddp,
+            async_moe,
         ]
     }
 
@@ -2016,5 +2238,137 @@ mod tests {
             assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
             assert_eq!(a.exposed_comm.to_bits(), b.exposed_comm.to_bits());
         }
+    }
+
+    #[test]
+    fn sync_mode_spec_display_interval_discount() {
+        assert_eq!(SyncMode::Sync.to_string(), "sync");
+        assert_eq!(SyncMode::Async { max_staleness: 4 }.to_string(),
+                   "async:4");
+        assert!(SyncMode::Sync.is_sync());
+        assert!(!SyncMode::Async { max_staleness: 1 }.is_sync());
+        // K = S + 1; Sync is exactly the identity (discount 1.0, not
+        // merely close) so sync effective throughput == raw.
+        assert_eq!(SyncMode::Sync.sync_interval(), 1.0);
+        assert_eq!(SyncMode::Sync.staleness_discount().to_bits(),
+                   1.0f64.to_bits());
+        assert_eq!(SyncMode::Async { max_staleness: 4 }.sync_interval(),
+                   5.0);
+        assert_eq!(
+            SyncMode::Async { max_staleness: 4 }.staleness_discount(),
+            3.0);
+        assert!(SyncMode::Sync.validate().is_ok());
+        assert!(SyncMode::Async { max_staleness: 1 }.validate().is_ok());
+        let err = SyncMode::Async { max_staleness: 0 }
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("async:0 is synchronous"), "{err}");
+    }
+
+    #[test]
+    fn moe_ep_sync_validation_rules() {
+        use crate::model::{LLAMA_7B_MOE8X, LLAMA_7B};
+        let cluster = Cluster::new(Generation::H100, 1);
+        let moe = SimConfig::fsdp(
+            LLAMA_7B_MOE8X, cluster,
+            ParallelPlan::data_parallel(8).with_ep(8), 16, 2, 4096);
+        assert!(moe.validate().is_ok());
+        // ep on a dense model is meaningless, with a pointed hint.
+        let dense_ep = SimConfig::fsdp(
+            LLAMA_7B, cluster,
+            ParallelPlan::data_parallel(8).with_ep(8), 16, 2, 4096);
+        let err = dense_ep.validate().unwrap_err();
+        assert!(err.contains("mixture-of-experts"), "{err}");
+        assert!(err.contains("--arch 7b-moe8x"), "{err}");
+        // ep must divide n_experts so each shard holds an equal slice.
+        let mut uneven = moe;
+        uneven.arch.n_experts = 6;
+        let err = uneven.validate().unwrap_err();
+        assert!(err.contains("must divide n_experts"), "{err}");
+        // top_k bounded by the expert count; capacity must be positive.
+        let mut topk = moe;
+        topk.arch.moe_top_k = 9;
+        assert!(topk.validate().is_err());
+        let mut cap = moe;
+        cap.arch.capacity_pct = 0;
+        assert!(cap.validate().is_err());
+        // Async{0} is rejected through SimConfig::validate too.
+        let mut zero = moe;
+        zero.sync = SyncMode::Async { max_staleness: 0 };
+        assert!(zero.validate().is_err());
+        // A dense config with the default ep=1 is untouched.
+        assert!(weak_cfg(2).validate().is_ok());
+    }
+
+    #[test]
+    fn ep_alltoall_payload_is_pinned() {
+        use crate::model::{LLAMA_7B_MOE8X, LLAMA_7B};
+        let cluster = Cluster::new(Generation::H100, 1);
+        let moe = SimConfig::fsdp(
+            LLAMA_7B_MOE8X, cluster,
+            ParallelPlan::data_parallel(8).with_ep(8), 16, 2, 4096);
+        // 2 bytes · cf 1.25 · k 2 · mbs 2 · seq 4096 · d 4096 / (tp·cp)
+        assert_eq!(ep_alltoall_bytes(&moe), 167_772_160.0);
+        // Dense models and local experts (ep=1) dispatch nothing.
+        let dense = weak_cfg(1);
+        assert_eq!(ep_alltoall_bytes(&dense), 0.0);
+        let mut local = moe;
+        local.plan = ParallelPlan::data_parallel(8);
+        assert_eq!(ep_alltoall_bytes(&local), 0.0);
+        // tp and cp slice the dispatched token activations.
+        let c4 = Cluster::new(Generation::H100, 4);
+        let sliced = SimConfig::fsdp(
+            LLAMA_7B_MOE8X, c4,
+            ParallelPlan::new(8, 2, 1, 2).with_ep(8), 16, 2, 4096);
+        assert_eq!(ep_alltoall_bytes(&sliced), 167_772_160.0 / 4.0);
+    }
+
+    #[test]
+    fn expert_alltoall_shows_up_only_for_sharded_experts() {
+        use crate::model::LLAMA_7B_MOE8X;
+        let cluster = Cluster::new(Generation::H100, 1);
+        let moe = SimConfig::fsdp(
+            LLAMA_7B_MOE8X, cluster,
+            ParallelPlan::data_parallel(8).with_ep(8), 16, 2, 4096);
+        let r = simulate(&moe);
+        assert!(r.comm_by_tag.get(Tag::ExpertAllToAll) > 0.0,
+                "ep=8 must dispatch tokens over the EP group");
+        let mut local = moe;
+        local.plan = ParallelPlan::data_parallel(8);
+        let r = simulate(&local);
+        assert_eq!(r.comm_by_tag.get(Tag::ExpertAllToAll), 0.0,
+                   "ep=1 keeps experts local — no AllToAll");
+        assert_eq!(simulate(&weak_cfg(1))
+                       .comm_by_tag
+                       .get(Tag::ExpertAllToAll),
+                   0.0);
+    }
+
+    #[test]
+    fn async_amortizes_gradient_sync_and_never_slows_down() {
+        // Amortized gradient reductions can only shrink comm time, so
+        // async iteration time is bounded by the synchronous run; with
+        // a blocking DDP AllReduce the win is strict.
+        for cfg in cross_validation_cfgs() {
+            if !cfg.sync.is_sync() {
+                continue;
+            }
+            let sync_t = simulate(&cfg).iter_time;
+            let mut stale = cfg;
+            stale.sync = SyncMode::Async { max_staleness: 4 };
+            let async_t = simulate(&stale).iter_time;
+            assert!(async_t <= sync_t * (1.0 + 1e-12),
+                    "async {async_t} > sync {sync_t} for {}", cfg.plan);
+        }
+        let cluster = Cluster::new(Generation::H100, 2);
+        let mut ddp = SimConfig::fsdp(
+            LLAMA_7B, cluster, ParallelPlan::data_parallel(16), 32, 2,
+            4096);
+        ddp.sharding = Sharding::Ddp;
+        let sync_t = simulate(&ddp).iter_time;
+        let mut stale = ddp;
+        stale.sync = SyncMode::Async { max_staleness: 4 };
+        assert!(simulate(&stale).iter_time < sync_t,
+                "a blocking AllReduce amortized 1/5 must beat sync");
     }
 }

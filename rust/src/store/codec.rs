@@ -24,17 +24,36 @@ use crate::hardware::HwId;
 use crate::metrics::Metrics;
 use crate::model::{self, TransformerArch};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Jitter, JitterDist, Schedule, Sharding};
+use crate::sim::{Jitter, JitterDist, Schedule, Sharding, SyncMode};
 use crate::study::{CaseResult, ConfigKey};
 
 /// Bump [`SCHEMA`] whenever the record layout changes; the store
 /// refuses files whose header hash differs instead of misreading them.
-pub const SCHEMA: &str = "dtsim-store-v2: ConfigKey{arch(name,6xu64),\
+/// v3 (PR 9) widens the arch to its MoE fields
+/// (n_experts/top_k/capacity), the plan to its expert-parallel degree,
+/// and adds the gradient-sync discipline.
+pub const SCHEMA: &str = "dtsim-store-v3: ConfigKey{arch(name,9xu64),\
+    hw(name,spec_fnv1a64,gpus_per_node),nodes,plan(dp,tp,pp,cp,ep),\
+    global_batch,micro_batch,seq_len,sharding(tag[,group]),\
+    schedule(tag[,v]),prefetch,jitter(tag,param_bits,seed,replicates),\
+    sync(tag,staleness)} \
+    CaseResult{metrics(13xf64,world),iter_p50,iter_p95,iter_p99,\
+    mem_per_gpu}";
+
+/// The previous record schema, kept verbatim so [`v2_schema_hash`] can
+/// recognize old store files and refuse them with a migration hint
+/// instead of the generic "layout changed" error.
+const SCHEMA_V2: &str = "dtsim-store-v2: ConfigKey{arch(name,6xu64),\
     hw(name,spec_fnv1a64,gpus_per_node),nodes,plan(dp,tp,pp,cp),\
     global_batch,micro_batch,seq_len,sharding(tag[,group]),\
     schedule(tag[,v]),prefetch,jitter(tag,param_bits,seed,replicates)} \
     CaseResult{metrics(13xf64,world),iter_p50,iter_p95,iter_p99,\
     mem_per_gpu}";
+
+/// Header hash a `dtsim-store-v2` file carries.
+pub fn v2_schema_hash() -> u64 {
+    fnv1a64(SCHEMA_V2.as_bytes())
+}
 
 /// FNV-1a, 64-bit: the store's checksum and schema/spec hash. Tiny,
 /// dependency-free, and stable across platforms.
@@ -215,6 +234,9 @@ fn encode_with(
     w.usize(a.n_kv_heads);
     w.usize(a.d_ff);
     w.usize(a.vocab);
+    w.usize(a.n_experts);
+    w.usize(a.moe_top_k);
+    w.usize(a.capacity_pct);
     w.str(hw_name);
     w.u64(hash);
     w.usize(key.gpus_per_node);
@@ -223,6 +245,7 @@ fn encode_with(
     w.usize(key.plan.tp);
     w.usize(key.plan.pp);
     w.usize(key.plan.cp);
+    w.usize(key.plan.ep);
     w.usize(key.global_batch);
     w.usize(key.micro_batch);
     w.usize(key.seq_len);
@@ -251,6 +274,12 @@ fn encode_with(
     w.u64(jparam);
     w.u64(key.jitter.seed);
     w.u64(key.jitter.replicates as u64);
+    // Sync discipline: the canonical (tag, staleness) identity shared
+    // with SyncMode's Eq/Hash — an async:4 record never aliases a sync
+    // one.
+    let (stag, staleness) = key.sync.key();
+    w.u8(stag);
+    w.u64(staleness as u64);
     let m = &case.metrics;
     w.f64(m.iter_time);
     w.f64(m.global_wps);
@@ -285,6 +314,9 @@ pub fn decode_record(
     let n_kv_heads = r.usize()?;
     let d_ff = r.usize()?;
     let vocab = r.usize()?;
+    let n_experts = r.usize()?;
+    let moe_top_k = r.usize()?;
+    let capacity_pct = r.usize()?;
     let arch = match model::by_name(&arch_name) {
         Some(p)
             if p.n_layers == n_layers
@@ -292,7 +324,10 @@ pub fn decode_record(
                 && p.n_heads == n_heads
                 && p.n_kv_heads == n_kv_heads
                 && p.d_ff == d_ff
-                && p.vocab == vocab =>
+                && p.vocab == vocab
+                && p.n_experts == n_experts
+                && p.moe_top_k == moe_top_k
+                && p.capacity_pct == capacity_pct =>
         {
             *p
         }
@@ -304,6 +339,9 @@ pub fn decode_record(
             n_kv_heads,
             d_ff,
             vocab,
+            n_experts,
+            moe_top_k,
+            capacity_pct,
         },
     };
 
@@ -325,6 +363,7 @@ pub fn decode_record(
 
     let nodes = r.usize()?;
     let plan = ParallelPlan::new(r.usize()?, r.usize()?, r.usize()?, r.usize()?);
+    let plan = plan.with_ep(r.usize()?);
     let global_batch = r.usize()?;
     let micro_batch = r.usize()?;
     let seq_len = r.usize()?;
@@ -361,6 +400,14 @@ pub fn decode_record(
         replicates: u32::try_from(jreps)
             .map_err(|_| DecodeError::Malformed("replicate overflow"))?,
     };
+    let stag = r.u8()?;
+    let staleness = u32::try_from(r.u64()?)
+        .map_err(|_| DecodeError::Malformed("staleness overflow"))?;
+    let sync = match (stag, staleness) {
+        (0, 0) => SyncMode::Sync,
+        (1, s) if s >= 1 => SyncMode::Async { max_staleness: s },
+        _ => return Err(DecodeError::Malformed("non-canonical sync mode")),
+    };
     let metrics = Metrics {
         iter_time: r.f64()?,
         global_wps: r.f64()?,
@@ -396,6 +443,7 @@ pub fn decode_record(
         schedule,
         prefetch,
         jitter,
+        sync,
     };
     let case = CaseResult {
         arch: key.arch.name,
@@ -407,6 +455,7 @@ pub fn decode_record(
         seq_len,
         sharding,
         schedule,
+        sync,
         metrics,
         iter_p50,
         iter_p95,
@@ -440,6 +489,9 @@ pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
         seed: 0xDEAD_BEEF_F00D_CAFE,
         replicates: 12,
     };
+    // Armed sync axis so the round-trip covers the (tag, staleness)
+    // encoding too.
+    cfg.sync = crate::sim::SyncMode::Async { max_staleness: 3 };
     let key = ConfigKey::of(&cfg);
     let case = CaseResult {
         arch: cfg.arch.name,
@@ -451,6 +503,7 @@ pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
         seq_len: key.seq_len,
         sharding: key.sharding,
         schedule: key.schedule,
+        sync: key.sync,
         metrics: Metrics {
             iter_time: 1.0 / 3.0,
             global_wps: 1.23456789e5,
@@ -538,6 +591,67 @@ mod tests {
         // And decoding twice interns one copy of the name.
         let (key3, _) = decode_record(&bytes).unwrap();
         assert!(std::ptr::eq(key2.arch.name, key3.arch.name));
+    }
+
+    #[test]
+    fn sync_and_ep_axes_round_trip_and_never_alias() {
+        use crate::model::LLAMA_7B_MOE8X;
+        use crate::parallelism::ParallelPlan;
+        use crate::sim::{SimConfig, SyncMode};
+        use crate::topology::Cluster;
+
+        // The armed sample pair itself carries async:3.
+        let (key, case) = sample();
+        assert_eq!(key.sync, SyncMode::Async { max_staleness: 3 });
+        let bytes = encode_record(&key, &case);
+        let (key2, case2) = decode_record(&bytes).unwrap();
+        assert_eq!(key2.sync, key.sync);
+        assert_eq!(case2.sync, case.sync);
+        // A different discipline — or staleness bound — is a different
+        // record.
+        let mut synced = key;
+        synced.sync = SyncMode::Sync;
+        assert_ne!(encode_record(&synced, &case), bytes);
+        let mut staler = key;
+        staler.sync = SyncMode::Async { max_staleness: 4 };
+        assert_ne!(encode_record(&staler, &case), bytes);
+
+        // MoE arch + expert-parallel plan: full value round-trip back
+        // to the preset, ep included.
+        let cfg = SimConfig::fsdp(
+            LLAMA_7B_MOE8X,
+            Cluster::new(HwId::H100, 1),
+            ParallelPlan::data_parallel(8).with_ep(8),
+            16,
+            2,
+            4096,
+        );
+        let moe_key = ConfigKey::of(&cfg);
+        let mut moe_case = case.clone();
+        moe_case.arch = cfg.arch.name;
+        moe_case.plan = cfg.plan;
+        moe_case.sync = cfg.sync;
+        let bytes = encode_record(&moe_key, &moe_case);
+        let (back, _) = decode_record(&bytes).unwrap();
+        assert_eq!(back, moe_key);
+        assert_eq!(back.arch, LLAMA_7B_MOE8X);
+        assert_eq!(back.plan.ep, 8);
+        // A tweaked capacity factor must not alias the preset entry.
+        let mut custom = moe_key;
+        custom.arch.capacity_pct += 25;
+        let (back, _) =
+            decode_record(&encode_record(&custom, &moe_case)).unwrap();
+        assert_eq!(back, custom);
+        assert_ne!(back, moe_key);
+    }
+
+    #[test]
+    fn v2_hash_is_stable_and_differs_from_v3() {
+        // The migration refusal keys off this constant; if it drifts,
+        // old files would get the generic schema error instead of the
+        // pointed one.
+        assert_ne!(v2_schema_hash(), schema_hash());
+        assert!(SCHEMA.starts_with("dtsim-store-v3"));
     }
 
     #[test]

@@ -119,6 +119,21 @@ fn scan(path: &Path, data: &[u8]) -> Result<Scan, String> {
             ));
         }
         let schema = u64::from_le_bytes(data[8..16].try_into().unwrap());
+        if schema == codec::v2_schema_hash() {
+            // An old store is refused with a migration path, never
+            // misread or overwritten: results are deterministic, so
+            // re-running the grids into a fresh store reproduces every
+            // record bit for bit.
+            return Err(format!(
+                "{}: this is a dtsim-store-v2 file; this build reads \
+                 dtsim-store-v3 (the key grew MoE/expert-parallel and \
+                 sync-mode axes). The file was left untouched — point \
+                 --store at a fresh path and re-run the grids (results \
+                 are deterministic and will reproduce bitwise), or \
+                 read it with a pre-v3 dtsim",
+                path.display()
+            ));
+        }
         if schema != codec::schema_hash() {
             return Err(format!(
                 "{}: record schema hash {schema:#018x} does not \
@@ -626,6 +641,25 @@ mod tests {
         assert!(err.contains("schema"), "{err}");
         // The refused file is untouched.
         assert_eq!(std::fs::read(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn v2_store_refused_with_migration_hint() {
+        let path = tmp("v2.dtstore");
+        let mut header = Vec::new();
+        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(&VERSION.to_le_bytes());
+        header.extend_from_slice(
+            &codec::v2_schema_hash().to_le_bytes(),
+        );
+        std::fs::write(&path, &header).unwrap();
+        let before = std::fs::read(&path).unwrap();
+        let err = LogStore::open(&path).unwrap_err();
+        assert!(err.contains("dtsim-store-v2"), "{err}");
+        assert!(err.contains("dtsim-store-v3"), "{err}");
+        assert!(err.contains("fresh"), "{err}");
+        // Refusal is read-only: the old file survives byte-for-byte.
+        assert_eq!(std::fs::read(&path).unwrap(), before);
     }
 
     #[test]

@@ -11,9 +11,9 @@
 
 use crate::config::RunConfig;
 use crate::hardware::HwId;
-use crate::model;
+use crate::model::TransformerArch;
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Jitter, Schedule, Sharding, SimConfig};
+use crate::sim::{Jitter, Schedule, Sharding, SimConfig, SyncMode};
 use crate::topology::Cluster;
 use crate::util::args::Args;
 
@@ -31,6 +31,17 @@ pub fn parse_sharding(s: &str) -> Result<Sharding, String> {
 
 pub fn parse_schedule(s: &str) -> Result<Schedule, String> {
     crate::config::parse_schedule(s).map_err(|e| format!("--schedule: {e}"))
+}
+
+/// Architecture parsing for `--arch`: the error enumerates every
+/// preset (MoE variants included).
+pub fn parse_arch(s: &str) -> Result<TransformerArch, String> {
+    crate::config::parse_arch(s).map_err(|e| format!("--arch: {e}"))
+}
+
+/// Sync-discipline parsing for `--sync sync|async:S`.
+pub fn parse_sync(s: &str) -> Result<SyncMode, String> {
+    crate::config::parse_sync(s).map_err(|e| format!("--sync: {e}"))
 }
 
 /// Parse the shared stochastic flags — `--jitter lognormal:S|pareto:A`,
@@ -106,8 +117,7 @@ pub fn sim_config_from_args(args: &Args) -> Result<SimConfig, String> {
             return RunConfig::from_toml_file(path).map(|rc| rc.sim());
         }
     }
-    let arch = *model::by_name(&args.get_or("arch", "7b"))
-        .ok_or_else(|| "unknown --arch".to_string())?;
+    let arch = parse_arch(&args.get_or("arch", "7b"))?;
     let gen = parse_hw(&args.get_or("gen", "h100"))?;
     let cluster = if args.has("gpus") {
         if args.has("nodes") {
@@ -129,7 +139,8 @@ pub fn sim_config_from_args(args: &Args) -> Result<SimConfig, String> {
             cluster.world_size()
         ));
     }
-    let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp);
+    let plan = ParallelPlan::new(cluster.world_size() / mp, tp, pp, cp)
+        .with_ep(args.usize_or("ep", 1));
     let mut cfg = SimConfig::fsdp(
         arch,
         cluster,
@@ -151,6 +162,9 @@ pub fn sim_config_from_args(args: &Args) -> Result<SimConfig, String> {
     }
     if let Some(s) = args.get("schedule") {
         cfg.schedule = parse_schedule(s)?;
+    }
+    if let Some(s) = args.get("sync") {
+        cfg.sync = parse_sync(s)?;
     }
     cfg.jitter = jitter_from_args(args)?;
     cfg.validate()?;
@@ -178,10 +192,7 @@ pub fn study_from_args(args: &Args) -> Result<Study, String> {
 
     let mut archs = Vec::new();
     for name in list("arch", "7b") {
-        archs.push(
-            *model::by_name(&name)
-                .ok_or_else(|| format!("unknown --arch '{name}'"))?,
-        );
+        archs.push(parse_arch(&name)?);
     }
     let mut gens = Vec::new();
     for name in list("gen", "h100") {
@@ -198,6 +209,10 @@ pub fn study_from_args(args: &Args) -> Result<Study, String> {
     for name in list("schedule", "1f1b") {
         schedules.push(parse_schedule(&name)?);
     }
+    let mut syncs = Vec::new();
+    for name in list("sync", "sync") {
+        syncs.push(parse_sync(&name)?);
+    }
 
     let plans = match args.get_or("plans", "sweep").as_str() {
         "sweep" => PlanAxis::Sweep { with_cp: false },
@@ -211,7 +226,8 @@ pub fn study_from_args(args: &Args) -> Result<Study, String> {
                     parse_plan_shape(s).ok_or_else(|| {
                         format!(
                             "--plans: '{s}' is not sweep|sweep-cp|dp or a \
-                             tpXppYcpZ shape"
+                             tpXppYcpZ shape (expert parallelism is the \
+                             --ep axis, e.g. --ep 1,2,8)"
                         )
                     })
                 })
@@ -255,7 +271,9 @@ pub fn study_from_args(args: &Args) -> Result<Study, String> {
         .plans(plans)
         .seq_lens(usizes("seq", "4096")?)
         .shardings(shardings)
-        .schedules(schedules);
+        .schedules(schedules)
+        .eps(usizes("ep", "1")?)
+        .sync_modes(syncs);
 
     b = if args.has("lbs") {
         b.batch_per_replica(args.usize_or("lbs", 2))
@@ -349,6 +367,51 @@ mod tests {
         ))
         .unwrap_err();
         assert!(err.starts_with("--seed: "), "{err}");
+    }
+
+    #[test]
+    fn moe_and_sync_flags_reach_configs_and_grids() {
+        // Simulate-style: --arch MoE preset + --ep + --sync.
+        let cfg = sim_config_from_args(&parse(
+            "simulate --arch 7b-moe8x --nodes 1 --ep 8 --sync async:4 \
+             --gbs 16 --mbs 2",
+        ))
+        .unwrap();
+        assert!(cfg.arch.is_moe());
+        assert_eq!(cfg.plan.ep, 8);
+        assert_eq!(cfg.sync, SyncMode::Async { max_staleness: 4 });
+
+        // Study-style: the same flags become axes.
+        let study = study_from_args(&parse(
+            "study --grid --arch 7b-moe8x --nodes 1 --gbs 16 \
+             --plans dp --mbs 2 --ep 1,8 --sync sync,async:4",
+        ))
+        .unwrap();
+        assert!(study.has_async());
+        let pts = study.expand();
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().any(
+            |p| p.cfg.plan.ep == 8 && !p.cfg.sync.is_sync()));
+
+        // Errors name the flag and enumerate accepted forms.
+        let err = sim_config_from_args(&parse(
+            "simulate --arch gpt-9000",
+        ))
+        .unwrap_err();
+        assert!(err.starts_with("--arch: "), "{err}");
+        assert!(err.contains("7b-moe8x"), "{err}");
+        let err = sim_config_from_args(&parse(
+            "simulate --sync bsp",
+        ))
+        .unwrap_err();
+        assert!(err.starts_with("--sync: "), "{err}");
+        assert!(err.contains("sync, async:S"), "{err}");
+        // ep on a dense arch is a validation error, not a silent noop.
+        let err = sim_config_from_args(&parse(
+            "simulate --nodes 1 --ep 8 --gbs 16 --mbs 2",
+        ))
+        .unwrap_err();
+        assert!(err.contains("mixture-of-experts"), "{err}");
     }
 
     #[test]

@@ -60,7 +60,7 @@ use crate::hardware::HwId;
 use crate::memory;
 use crate::model::TransformerArch;
 use crate::parallelism::{enumerate_plans, ParallelPlan};
-use crate::sim::{Jitter, JitterDist, Schedule, Sharding, SimConfig};
+use crate::sim::{Jitter, JitterDist, Schedule, Sharding, SimConfig, SyncMode};
 use crate::topology::Cluster;
 
 /// How the parallel-plan axis expands for each (generation, nodes)
@@ -224,6 +224,26 @@ pub fn bench_pinned_stochastic_study() -> Study {
         .build()
 }
 
+/// Pinned sparse/async companion grid: the 7b-moe8x preset swept over
+/// expert-parallel degrees and both synchronization disciplines, so
+/// `dtsim bench` and CI's `BENCH_study.json` track the MoE AllToAll +
+/// staleness-amortization hot path (moe_* fields are informational —
+/// no baseline gate). Pinned for cross-PR comparability.
+pub fn bench_pinned_moe_study() -> Study {
+    Study::builder("bench-moe")
+        .title("pinned benchmark grid: MoE expert parallelism + async DP")
+        .arch(crate::model::LLAMA_7B_MOE8X)
+        .generation(HwId::H100)
+        .nodes([4])
+        .plan_shapes(&[(1, 1, 1), (2, 1, 1), (1, 4, 1)])
+        .eps([1, 2, 4, 8])
+        .sync_modes([SyncMode::Sync, SyncMode::Async { max_staleness: 4 }])
+        .global_batches([64])
+        .micro_batches([1, 2])
+        .memory_cap(0.94)
+        .build()
+}
+
 /// One expanded, validated grid point plus its memory footprint.
 #[derive(Debug, Clone, Copy)]
 pub struct StudyPoint {
@@ -254,6 +274,11 @@ pub struct ConfigKey {
     /// differently-seeded evaluations of the same workload: a seed-7
     /// table answered from a seed-8 run would be silently wrong.
     pub(crate) jitter: Jitter,
+    /// The gradient-synchronization discipline. Part of the key so the
+    /// store never conflates sync disciplines: an `async:4` table
+    /// answered from a synchronous run (or vice versa) would be
+    /// silently wrong. Note `plan.ep` rides along inside `plan`.
+    pub(crate) sync: SyncMode,
 }
 
 impl ConfigKey {
@@ -271,6 +296,7 @@ impl ConfigKey {
             schedule: cfg.schedule,
             prefetch: cfg.prefetch,
             jitter: cfg.jitter,
+            sync: cfg.sync,
         }
     }
 }
@@ -292,6 +318,8 @@ pub struct Study {
     prefetch: Vec<bool>,
     mem_cap_frac: Option<f64>,
     jitter: Jitter,
+    eps: Vec<usize>,
+    syncs: Vec<SyncMode>,
 }
 
 impl Study {
@@ -311,6 +339,8 @@ impl Study {
             prefetch: vec![true],
             mem_cap_frac: None,
             jitter: Jitter::OFF,
+            eps: vec![1],
+            syncs: vec![SyncMode::Sync],
         }
     }
 
@@ -320,16 +350,25 @@ impl Study {
         self.jitter
     }
 
+    /// True when any point on the sync axis is staleness-tolerant —
+    /// drives the `sync` / `effective_wps` grid columns, mirroring how
+    /// the armed jitter axis drives the percentile columns.
+    pub fn has_async(&self) -> bool {
+        self.syncs.iter().any(|s| !s.is_sync())
+    }
+
     /// Expand the grid into validated, memory-feasible simulation
     /// configurations. Expansion order is deterministic: axes nest
     /// arch → generation → nodes → seq → sharding → schedule →
-    /// prefetch → plan → gbs → mbs, with plans in `enumerate_plans`
-    /// order and microbatch candidates ascending — the same candidate
-    /// order the planner's sweep has always used, so stable sorts
-    /// preserve its tie-breaks. Schedule/plan combinations an axis
-    /// cannot satisfy (e.g. interleaved on a pp=1 plan, or a microbatch
-    /// count not divisible by pp) fail validation and are skipped, not
-    /// errors.
+    /// prefetch → plan → ep → gbs → mbs → sync, with plans in
+    /// `enumerate_plans` order and microbatch candidates ascending —
+    /// the same candidate order the planner's sweep has always used,
+    /// so stable sorts preserve its tie-breaks (ep and sync default to
+    /// singleton `[1]` / `[sync]`, leaving historical grids
+    /// untouched). Schedule/plan combinations an axis cannot satisfy
+    /// (e.g. interleaved on a pp=1 plan, a microbatch count not
+    /// divisible by pp, or an ep that doesn't divide dp/n_experts)
+    /// fail validation and are skipped, not errors.
     pub fn expand(&self) -> Vec<StudyPoint> {
         let mut points = Vec::new();
         for arch in &self.archs {
@@ -365,49 +404,63 @@ impl Study {
         points: &mut Vec<StudyPoint>,
     ) {
         let mem_bytes = cluster.node.spec().mem_bytes;
-        for plan in self.plans.expand(&cluster, arch.n_layers) {
-            let gbs_list: Vec<usize> = match &self.batches {
-                BatchAxis::Fixed(v) => v.clone(),
-                BatchAxis::PerReplica(factor) => vec![factor * plan.dp],
+        for base_plan in self.plans.expand(&cluster, arch.n_layers) {
+            // A fixed plan that already names an expert-parallel
+            // degree keeps it (once); the eps axis crosses the rest.
+            let fixed_ep = [base_plan.ep];
+            let ep_axis: &[usize] = if base_plan.ep > 1 {
+                &fixed_ep
+            } else {
+                &self.eps
             };
-            for gbs in gbs_list {
-                if plan.dp == 0 || gbs % plan.dp != 0 {
-                    continue;
-                }
-                let local = gbs / plan.dp;
-                let mbs_list: Vec<usize> = match &self.micro {
-                    MicroBatchAxis::Fixed(v) => v.clone(),
-                    MicroBatchAxis::Divisors => divisors(local),
+            for &ep in ep_axis {
+                let plan = base_plan.with_ep(ep);
+                let gbs_list: Vec<usize> = match &self.batches {
+                    BatchAxis::Fixed(v) => v.clone(),
+                    BatchAxis::PerReplica(factor) => vec![factor * plan.dp],
                 };
-                for mbs in mbs_list {
-                    if mbs == 0 || mbs > local || local % mbs != 0 {
+                for gbs in gbs_list {
+                    if plan.dp == 0 || gbs % plan.dp != 0 {
                         continue;
                     }
-                    let cfg = SimConfig {
-                        arch: *arch,
-                        cluster,
-                        plan,
-                        global_batch: gbs,
-                        micro_batch: mbs,
-                        seq_len,
-                        sharding,
-                        schedule,
-                        prefetch,
-                        jitter: self.jitter,
+                    let local = gbs / plan.dp;
+                    let mbs_list: Vec<usize> = match &self.micro {
+                        MicroBatchAxis::Fixed(v) => v.clone(),
+                        MicroBatchAxis::Divisors => divisors(local),
                     };
-                    if cfg.validate().is_err() {
-                        continue;
-                    }
-                    let mem = memory::per_gpu_memory_cfg(&cfg);
-                    if let Some(frac) = self.mem_cap_frac {
-                        if mem.total() > mem_bytes * frac {
+                    for mbs in mbs_list {
+                        if mbs == 0 || mbs > local || local % mbs != 0 {
                             continue;
                         }
+                        for &sync in &self.syncs {
+                            let cfg = SimConfig {
+                                arch: *arch,
+                                cluster,
+                                plan,
+                                global_batch: gbs,
+                                micro_batch: mbs,
+                                seq_len,
+                                sharding,
+                                schedule,
+                                prefetch,
+                                jitter: self.jitter,
+                                sync,
+                            };
+                            if cfg.validate().is_err() {
+                                continue;
+                            }
+                            let mem = memory::per_gpu_memory_cfg(&cfg);
+                            if let Some(frac) = self.mem_cap_frac {
+                                if mem.total() > mem_bytes * frac {
+                                    continue;
+                                }
+                            }
+                            points.push(StudyPoint {
+                                cfg,
+                                mem_per_gpu: mem.total(),
+                            });
+                        }
                     }
-                    points.push(StudyPoint {
-                        cfg,
-                        mem_per_gpu: mem.total(),
-                    });
                 }
             }
         }
@@ -431,6 +484,8 @@ pub struct StudyBuilder {
     prefetch: Vec<bool>,
     mem_cap_frac: Option<f64>,
     jitter: Jitter,
+    eps: Vec<usize>,
+    syncs: Vec<SyncMode>,
 }
 
 impl StudyBuilder {
@@ -557,6 +612,33 @@ impl StudyBuilder {
         self
     }
 
+    /// Pin the expert-parallel degree to one value (applied to every
+    /// plan on the plan axis via [`ParallelPlan::with_ep`]; points
+    /// where it doesn't divide dp or `n_experts`, or where the arch is
+    /// dense and ep > 1, are skipped at expansion).
+    pub fn ep(self, ep: usize) -> Self {
+        self.eps([ep])
+    }
+
+    /// Sweep expert-parallel degrees.
+    pub fn eps(mut self, eps: impl IntoIterator<Item = usize>) -> Self {
+        self.eps = eps.into_iter().collect();
+        self
+    }
+
+    /// Pin the gradient-synchronization axis to one discipline
+    /// (docs/moe.md; the default is [`SyncMode::Sync`], the exact
+    /// historical code path).
+    pub fn sync_mode(self, sync: SyncMode) -> Self {
+        self.sync_modes([sync])
+    }
+
+    /// Sweep synchronization disciplines (e.g. sync vs `async:4`).
+    pub fn sync_modes(mut self, syncs: impl IntoIterator<Item = SyncMode>) -> Self {
+        self.syncs = syncs.into_iter().collect();
+        self
+    }
+
     /// Arm the stochastic network-jitter axis: every grid point is
     /// simulated with per-op slowdown factors drawn from `dist`
     /// (docs/network.md). Combine with [`Self::seed`] /
@@ -625,6 +707,17 @@ impl StudyBuilder {
         self.jitter
             .validate()
             .map_err(|e| format!("study '{}': {e}", self.name))?;
+        if self.eps.is_empty() || self.syncs.is_empty() {
+            return Err(format!("study '{}' has an empty axis", self.name));
+        }
+        if self.eps.iter().any(|&ep| ep == 0) {
+            return Err(format!(
+                "study '{}': expert-parallel degree must be >= 1", self.name));
+        }
+        for sync in &self.syncs {
+            sync.validate()
+                .map_err(|e| format!("study '{}': {e}", self.name))?;
+        }
         Ok(Study {
             name: self.name,
             title: self.title,
@@ -640,6 +733,8 @@ impl StudyBuilder {
             prefetch: self.prefetch,
             mem_cap_frac: self.mem_cap_frac,
             jitter: self.jitter,
+            eps: self.eps,
+            syncs: self.syncs,
         })
     }
 }
@@ -937,6 +1032,98 @@ mod tests {
         let pts = s.expand();
         assert!(!pts.is_empty());
         assert!(pts.iter().all(|p| !p.cfg.jitter.is_off()));
+    }
+
+    #[test]
+    fn ep_axis_expands_only_feasible_shards() {
+        use crate::model::LLAMA_7B_MOE8X;
+        // 1 node = 8 GPUs. dp=8 admits ep {1,2,4,8}; ep=16 fails
+        // validation (doesn't divide dp) and is skipped, not an error.
+        let pts = Study::builder("ep")
+            .arch(LLAMA_7B_MOE8X)
+            .nodes([1])
+            .global_batches([16])
+            .micro_batches([2])
+            .eps([1, 2, 4, 8, 16])
+            .build()
+            .expand();
+        let eps: Vec<usize> = pts.iter().map(|p| p.cfg.plan.ep).collect();
+        assert_eq!(eps, vec![1, 2, 4, 8]);
+        // World size never changes: EP re-uses the DP ranks.
+        assert!(pts.iter().all(|p| p.cfg.plan.world_size() == 8));
+        // Sharding experts over more ranks strictly shrinks residency.
+        for w in pts.windows(2) {
+            assert!(w[1].mem_per_gpu < w[0].mem_per_gpu,
+                    "ep={} should hold less than ep={}",
+                    w[1].cfg.plan.ep, w[0].cfg.plan.ep);
+        }
+    }
+
+    #[test]
+    fn ep_axis_skips_dense_archs() {
+        // ep > 1 on a dense model fails cfg.validate() and drops out of
+        // the grid; ep = 1 survives untouched.
+        let pts = Study::builder("dense-ep")
+            .arch(LLAMA_7B)
+            .nodes([1])
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .eps([1, 2])
+            .build()
+            .expand();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].cfg.plan.ep, 1);
+    }
+
+    #[test]
+    fn sync_axis_expands_and_keys_distinctly() {
+        let pts = Study::builder("sync")
+            .arch(LLAMA_7B)
+            .nodes([1])
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .sync_modes([SyncMode::Sync,
+                         SyncMode::Async { max_staleness: 4 }])
+            .build()
+            .expand();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].cfg.sync, SyncMode::Sync);
+        assert_eq!(pts[1].cfg.sync, SyncMode::Async { max_staleness: 4 });
+        // The store must never answer an async table from a sync run.
+        assert_ne!(ConfigKey::of(&pts[0].cfg), ConfigKey::of(&pts[1].cfg));
+        // Different staleness bounds must not alias either.
+        let mut c = pts[1].cfg;
+        c.sync = SyncMode::Async { max_staleness: 8 };
+        assert_ne!(ConfigKey::of(&pts[1].cfg), ConfigKey::of(&c));
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_sync_and_ep_axes() {
+        assert!(Study::builder("async0")
+            .arch(LLAMA_7B)
+            .sync_modes([SyncMode::Async { max_staleness: 0 }])
+            .try_build()
+            .is_err());
+        assert!(Study::builder("ep0")
+            .arch(LLAMA_7B)
+            .eps([0])
+            .try_build()
+            .is_err());
+        assert!(Study::builder("empty-sync")
+            .arch(LLAMA_7B)
+            .sync_modes(Vec::<SyncMode>::new())
+            .try_build()
+            .is_err());
+    }
+
+    #[test]
+    fn pinned_moe_bench_grid_covers_the_new_axes() {
+        let pts = bench_pinned_moe_study().expand();
+        assert!(!pts.is_empty());
+        assert!(pts.iter().all(|p| p.cfg.arch.is_moe()));
+        assert!(pts.iter().any(|p| p.cfg.plan.ep == 8));
+        assert!(pts.iter().any(|p| !p.cfg.sync.is_sync()));
+        assert!(pts.iter().any(|p| p.cfg.sync.is_sync()));
     }
 
     #[test]

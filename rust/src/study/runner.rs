@@ -38,7 +38,8 @@ use crate::hardware::HwId;
 use crate::memory;
 use crate::metrics::{self, Metrics};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{self, Schedule, Sharding, SimArena, SimConfig};
+use crate::sim::{self, Schedule, Sharding, SimArena, SimConfig,
+                 SyncMode};
 use crate::store::{MemStore, ResultStore, StoreStats};
 use crate::util::stats;
 
@@ -58,6 +59,9 @@ pub struct CaseResult {
     pub seq_len: usize,
     pub sharding: Sharding,
     pub schedule: Schedule,
+    /// Gradient-sync discipline the case ran under (feeds the
+    /// staleness-discounted effective-throughput column).
+    pub sync: SyncMode,
     pub metrics: Metrics,
     /// Median iteration time over the point's seeded replicates. When
     /// jitter is off (or the point has a single replicate) every
@@ -160,6 +164,7 @@ fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
         seq_len: p.cfg.seq_len,
         sharding: p.cfg.sharding,
         schedule: p.cfg.schedule,
+        sync: p.cfg.sync,
         metrics,
         iter_p50: p50,
         iter_p95: p95,
@@ -975,6 +980,7 @@ mod tests {
             seq_len: 4096,
             sharding: Sharding::Fsdp,
             schedule: Schedule::OneFOneB,
+            sync: SyncMode::Sync,
             metrics: Metrics {
                 iter_time: 1.0,
                 global_wps: wps,

@@ -164,6 +164,13 @@ pub enum Column {
     IterP99Ms,
     /// Tail-aware throughput: tokens / p95 iteration time.
     P95Wps,
+    /// Gradient-sync discipline spec string ("sync", "async:S").
+    SyncModeKind,
+    /// Staleness-discounted effective throughput:
+    /// `global_wps / sync.staleness_discount()` — equals `global_wps`
+    /// bit for bit under [`crate::sim::SyncMode::Sync`]
+    /// (`docs/moe.md` §Staleness).
+    EffectiveWps,
 }
 
 impl Column {
@@ -195,6 +202,8 @@ impl Column {
             Column::IterP95Ms => "p95_ms",
             Column::IterP99Ms => "p99_ms",
             Column::P95Wps => "p95_wps",
+            Column::SyncModeKind => "sync",
+            Column::EffectiveWps => "effective_wps",
         }
     }
 
@@ -228,16 +237,23 @@ impl Column {
             Column::P95Wps => {
                 f0(super::runner::Objective::P95Wps.score(c))
             }
+            Column::SyncModeKind => c.sync.to_string(),
+            Column::EffectiveWps => {
+                f0(m.global_wps / c.sync.staleness_discount())
+            }
         }
     }
 }
 
 /// The ad-hoc `--grid` table layout, shared by `dtsim study --grid`
 /// and serve mode's `study-grid` so both render byte-identical CSV for
-/// the same flags. An unarmed grid keeps the historical column set
-/// untouched (golden-figure byte stability); a seeded grid appends the
-/// iteration-time percentile columns.
-pub fn grid_columns(jittered: bool) -> Vec<Column> {
+/// the same flags. An unarmed, fully-synchronous grid keeps the
+/// historical column set untouched (golden-figure byte stability); a
+/// seeded grid appends the iteration-time percentile columns, and a
+/// grid with any async point appends the sync-mode and
+/// staleness-discounted effective-throughput columns after those —
+/// always extending, never reordering.
+pub fn grid_columns(jittered: bool, asynced: bool) -> Vec<Column> {
     let mut cols = vec![
         Column::Arch,
         Column::Gen,
@@ -262,6 +278,9 @@ pub fn grid_columns(jittered: bool) -> Vec<Column> {
             Column::IterP99Ms,
         ]);
     }
+    if asynced {
+        cols.extend([Column::SyncModeKind, Column::EffectiveWps]);
+    }
     cols
 }
 
@@ -283,8 +302,8 @@ mod tests {
 
     #[test]
     fn grid_columns_append_percentiles_only_when_armed() {
-        let off = grid_columns(false);
-        let on = grid_columns(true);
+        let off = grid_columns(false, false);
+        let on = grid_columns(true, false);
         assert_eq!(&on[..off.len()], &off[..],
                    "armed grids must extend, never reorder, the layout");
         assert_eq!(&on[off.len()..],
@@ -292,6 +311,22 @@ mod tests {
                      Column::IterP99Ms]);
         assert_eq!(Column::IterP95Ms.header(), "p95_ms");
         assert_eq!(Column::P95Wps.header(), "p95_wps");
+    }
+
+    #[test]
+    fn grid_columns_append_sync_columns_only_when_asynced() {
+        let off = grid_columns(false, false);
+        let sync_only = grid_columns(true, true);
+        assert_eq!(&sync_only[..off.len()], &off[..],
+                   "async grids must extend, never reorder, the layout");
+        assert_eq!(&sync_only[sync_only.len() - 2..],
+                   &[Column::SyncModeKind, Column::EffectiveWps]);
+        let async_unjittered = grid_columns(false, true);
+        assert_eq!(&async_unjittered[..off.len()], &off[..]);
+        assert_eq!(&async_unjittered[off.len()..],
+                   &[Column::SyncModeKind, Column::EffectiveWps]);
+        assert_eq!(Column::SyncModeKind.header(), "sync");
+        assert_eq!(Column::EffectiveWps.header(), "effective_wps");
     }
 
     #[test]

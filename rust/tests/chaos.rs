@@ -375,3 +375,101 @@ fn slow_reader_overflows_its_queue_and_resumes_on_retry() {
     let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
     handle.join().expect("server exits");
 }
+
+/// Seeded MoE/async study spanning every PR 9 key axis: expert
+/// parallelism, both sync disciplines, and armed jitter — the
+/// `moe_crossover`-family counterpart of `small_study` for the
+/// interrupted-grid regression below.
+fn seeded_moe_study() -> Study {
+    use dtsim::model::LLAMA_7B_MOE8X;
+    use dtsim::sim::{JitterDist, SyncMode};
+    Study::builder("chaos-moe")
+        .arch(LLAMA_7B_MOE8X)
+        .nodes([1])
+        .plan_shapes(&[(1, 1, 1)])
+        .eps([1, 2, 8])
+        .sync_modes([SyncMode::Sync,
+                     SyncMode::Async { max_staleness: 4 }])
+        .global_batches([16])
+        .micro_batches([1])
+        .jitter(JitterDist::Lognormal { sigma: 0.2 })
+        .seed(7)
+        .seeds(4)
+        .build()
+}
+
+/// A retried seeded MoE grid resumes from the store byte-identically:
+/// the run is interrupted by a torn final append (crash-in-write), the
+/// reopened store drops exactly the torn record, and the retry
+/// re-simulates only that point — every answer bitwise equal to the
+/// uninterrupted run, across the ep/sync/jitter key axes.
+#[test]
+fn interrupted_seeded_moe_grid_resumes_byte_identically() {
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+
+    let run_moe = |store: &Arc<dyn ResultStore>| {
+        let mut runner = StudyRunner::with_store(1, Arc::clone(store));
+        let res = runner.run(&seeded_moe_study());
+        (res.cases, runner.stats().0)
+    };
+
+    // Fault-free reference on its own store.
+    let clean = tmp("moe-torn-clean.dtstore");
+    let (store, _) = {
+        let (s, r) = LogStore::open(&clean).expect("open");
+        (Arc::new(s) as Arc<dyn ResultStore>, r)
+    };
+    let (cold_cases, cold_evaluated) = run_with_moe_sanity(
+        run_moe(&store));
+    assert!(cold_evaluated >= 6,
+            "ep x sync axes must expand: got {cold_evaluated}");
+    drop(store);
+
+    // Same grid, tearing the final append mid-record.
+    let torn = tmp("moe-torn.dtstore");
+    dtsim::fault::arm(&format!(
+        "store.append.torn:after={}",
+        cold_evaluated - 1
+    ))
+    .expect("arm");
+    let (store, _) = {
+        let (s, r) = LogStore::open(&torn).expect("open");
+        (Arc::new(s) as Arc<dyn ResultStore>, r)
+    };
+    let (fault_cases, _) = run_moe(&store);
+    assert_eq!(dtsim::fault::fired("store.append.torn"), 1);
+    assert_bitwise(&cold_cases, &fault_cases);
+    drop(store);
+    dtsim::fault::clear();
+
+    // Retry against the reopened store: only the torn-off point is
+    // re-simulated; the sync axis must round-trip through the codec
+    // (an aliased key would serve an async row from a sync record).
+    let (store, _) = {
+        let (s, r) = LogStore::open(&torn).expect("reopen");
+        (Arc::new(s) as Arc<dyn ResultStore>, r)
+    };
+    let (resumed_cases, resumed_evaluated) = run_moe(&store);
+    assert_eq!(resumed_evaluated, 1,
+               "only the torn-off point needs re-simulation");
+    assert_bitwise(&cold_cases, &resumed_cases);
+    for (x, y) in cold_cases.iter().zip(&resumed_cases) {
+        assert_eq!(x.sync, y.sync, "sync axis lost in the store");
+        assert_eq!(x.iter_p95.to_bits(), y.iter_p95.to_bits(),
+                   "seeded percentiles diverged after resume");
+    }
+    drop(store);
+}
+
+/// The MoE chaos grid must actually exercise the new key axes.
+fn run_with_moe_sanity(r: (Vec<CaseResult>, usize))
+    -> (Vec<CaseResult>, usize)
+{
+    let (cases, evaluated) = r;
+    assert!(cases.iter().any(|c| c.plan.ep > 1),
+            "no expert-parallel case in the chaos grid");
+    assert!(cases.iter().any(|c| !c.sync.is_sync()),
+            "no async case in the chaos grid");
+    (cases, evaluated)
+}

@@ -2,20 +2,21 @@
 //! against the materialized event-graph engine: across sampled valid
 //! configurations covering every sharding (FSDP/DDP/HSDP/ZeRO-3),
 //! both pipeline schedules (plain and interleaved 1F1B), tp/cp/pp on
-//! and off, and the prefetch ablation, `iter_time`, `exposed_comm`,
-//! and per-tag totals must agree to 1e-9 (they are in fact
-//! bit-identical — the two paths share the emitter and perform the
-//! same f64 operations — but the contract tested here is the
-//! documented 1e-9 tolerance).
+//! and off, MoE expert parallelism (the ExpertAllToAll dispatch
+//! chain), bounded-staleness async DP, and the prefetch ablation,
+//! `iter_time`, `exposed_comm`, and per-tag totals must agree to 1e-9
+//! (they are in fact bit-identical — the two paths share the emitter
+//! and perform the same f64 operations — but the contract tested here
+//! is the documented 1e-9 tolerance).
 
 use std::cell::Cell;
 
 use dtsim::hardware::Generation;
-use dtsim::model::LLAMA_7B;
+use dtsim::model::{LLAMA_7B, LLAMA_7B_MOE8X};
 use dtsim::parallelism::ParallelPlan;
 use dtsim::sim::{
     simulate_engine, simulate_in, Jitter, JitterDist, Schedule,
-    Sharding, SimArena, SimConfig, Tag,
+    Sharding, SimArena, SimConfig, SyncMode, Tag,
 };
 use dtsim::util::proptest::check;
 use dtsim::util::rng::Rng;
@@ -72,6 +73,8 @@ fn compare_paths(cfg: &SimConfig, arena: &mut SimArena)
 #[test]
 fn prop_fused_fast_path_matches_event_engine() {
     let valid = Cell::new(0u32);
+    let moe_seen = Cell::new(0u32);
+    let async_seen = Cell::new(0u32);
     // One arena reused across every sampled config — doubles as a
     // buffer-recycling soak test.
     let arena = std::cell::RefCell::new(SimArena::new());
@@ -88,7 +91,22 @@ fn prop_fused_fast_path_matches_event_engine() {
             return None;
         }
         let dp = world / mp;
-        let plan = ParallelPlan::new(dp, tp, pp, cp);
+        // A third of the samples swap in the MoE preset and shard its
+        // experts: ep is a power of two dividing both dp and the
+        // expert count, so the dispatch/combine AllToAll chain rides
+        // every plan shape the dense arm covers.
+        let moe = rng.next_below(3) == 0;
+        let arch = if moe { LLAMA_7B_MOE8X } else { LLAMA_7B };
+        let ep = if moe {
+            let mut ep = pow2(rng, 3); // 1..8 divides n_experts = 8
+            while dp % ep != 0 {
+                ep /= 2;
+            }
+            ep
+        } else {
+            1
+        };
+        let plan = ParallelPlan::new(dp, tp, pp, cp).with_ep(ep);
         let mbs = pow2(rng, 1);
         // Up to 6 accumulation steps so deep pipelines reach the
         // steady-state wave driver (m >= pp) as well as its m < pp
@@ -126,8 +144,16 @@ fn prop_fused_fast_path_matches_event_engine() {
             },
             _ => Jitter::OFF,
         };
+        // A third runs bounded-staleness async DP: the 1/K-amortized
+        // gradient reductions change priced durations only, so both
+        // paths must still agree (including composed with jitter).
+        let sync = if rng.next_below(3) == 0 {
+            SyncMode::Async { max_staleness: 1 + rng.next_below(8) as u32 }
+        } else {
+            SyncMode::Sync
+        };
         let cfg = SimConfig {
-            arch: LLAMA_7B,
+            arch,
             cluster,
             plan,
             global_batch: dp * mbs * accum,
@@ -137,6 +163,7 @@ fn prop_fused_fast_path_matches_event_engine() {
             schedule,
             prefetch: rng.next_below(2) == 0,
             jitter,
+            sync,
         };
         if cfg.validate().is_err() {
             return None;
@@ -145,11 +172,22 @@ fn prop_fused_fast_path_matches_event_engine() {
     }, |cfg| {
         let Some(cfg) = cfg else { return Ok(()) };
         valid.set(valid.get() + 1);
+        if cfg.arch.is_moe() && cfg.plan.ep > 1 {
+            moe_seen.set(moe_seen.get() + 1);
+        }
+        if !cfg.sync.is_sync() {
+            async_seen.set(async_seen.get() + 1);
+        }
         compare_paths(cfg, &mut arena.borrow_mut())
     });
     assert!(valid.get() >= 200,
             "only {} valid configs sampled; need >= 200 for coverage",
             valid.get());
+    assert!(moe_seen.get() >= 10,
+            "only {} expert-parallel MoE configs sampled",
+            moe_seen.get());
+    assert!(async_seen.get() >= 10,
+            "only {} async-DP configs sampled", async_seen.get());
     // The sample must exercise both schedule drivers: the steady-state
     // wave driver (compressed emission) and the ready-queue fall-back
     // (interleaved schedules, m < pp) — every case above asserted
@@ -241,6 +279,7 @@ fn prop_fused_fast_path_matches_engine_on_custom_catalog_specs() {
             schedule,
             prefetch: rng.next_below(2) == 0,
             jitter: Jitter::OFF,
+            sync: SyncMode::Sync,
         };
         if cfg.validate().is_err() {
             return None;

@@ -35,7 +35,7 @@ fn seeded_study(seed: u64) -> Study {
 /// Render the full seeded grid as CSV bytes through a given runner.
 fn grid_csv(runner: &mut StudyRunner, seed: u64) -> String {
     let res = runner.run(&seeded_study(seed));
-    res.table(&grid_columns(true)).csv_string()
+    res.table(&grid_columns(true, false)).csv_string()
 }
 
 #[test]
@@ -125,6 +125,50 @@ fn straggler_scenario_replays_and_reseeds() {
 }
 
 #[test]
+fn async_straggler_scenario_replays_and_discounts() {
+    let reg = report::registry();
+    let sc = reg.get("async_straggler").expect("registered");
+    let csv = |threads: usize, seed: u64| -> Vec<String> {
+        let mut runner = StudyRunner::new(threads);
+        sc.tables_with(&mut runner, ScenarioOpts { seed: Some(seed) })
+            .expect("async_straggler runs")
+            .iter()
+            .map(|t| t.csv_string())
+            .collect()
+    };
+    let a = csv(2, 7);
+    assert_eq!(a, csv(2, 7), "same seed, same threads diverged");
+    assert_eq!(a, csv(8, 7), "same seed diverged across thread counts");
+    assert_ne!(a, csv(2, 9), "--seed 9 replayed seed 7's tables");
+    // The grid carries both sync disciplines and the discounted
+    // effective-throughput column.
+    let header = a[0].lines().next().unwrap().to_string();
+    assert!(header.contains("sync"), "{header}");
+    assert!(header.contains("effective_wps"), "{header}");
+    assert!(a[0].contains("async:4"), "async:4 rows missing");
+}
+
+#[test]
+fn moe_crossover_scenario_is_deterministic() {
+    // Jitter-off scenario: byte-identical across thread counts with
+    // no seed knob, covering dense and MoE arms plus ep sharding.
+    let reg = report::registry();
+    let sc = reg.get("moe_crossover").expect("registered");
+    let csv = |threads: usize| -> Vec<String> {
+        let mut runner = StudyRunner::new(threads);
+        sc.tables(&mut runner)
+            .expect("moe_crossover runs")
+            .iter()
+            .map(|t| t.csv_string())
+            .collect()
+    };
+    let a = csv(2);
+    assert_eq!(a, csv(8), "deterministic grid diverged across threads");
+    assert!(a[0].contains("7b-moe8x"), "MoE rows missing");
+    assert!(a[0].contains("ep8"), "expert-parallel rows missing");
+}
+
+#[test]
 fn unarmed_grids_keep_the_historical_schema() {
     // The default (jitter off) renders the exact pre-stochastic column
     // set — no percentile columns — and stays deterministic across
@@ -139,7 +183,8 @@ fn unarmed_grids_keep_the_historical_schema() {
         .micro_batches([2])
         .build();
     assert!(study.jitter().is_off(), "builder default must be unarmed");
-    let cols = grid_columns(!study.jitter().is_off());
+    assert!(!study.has_async(), "builder default must be synchronous");
+    let cols = grid_columns(!study.jitter().is_off(), study.has_async());
     assert_eq!(cols.len(), 15, "unarmed layout grew a column");
     let render = |runner: &mut StudyRunner| {
         runner.run(&study).table(&cols).csv_string()

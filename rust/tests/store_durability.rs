@@ -173,6 +173,32 @@ fn schema_hash_mismatch_refuses_the_file() {
 }
 
 #[test]
+fn v2_store_is_refused_with_migration_hint_and_left_untouched() {
+    // A store written by a pre-MoE build (dtsim-store-v2 layout: no
+    // expert/sync axes in the key) must be refused with a migration
+    // hint naming both versions — not decoded as garbage, not
+    // truncated, not "recovered".
+    let path = tmp("v2-refusal.dtstore");
+    let mut header = Vec::new();
+    header.extend_from_slice(b"DTSS");
+    header.extend_from_slice(&1u32.to_le_bytes());
+    header.extend_from_slice(
+        &dtsim::store::codec::v2_schema_hash().to_le_bytes());
+    // A few trailing bytes stand in for v2 records; the refusal must
+    // fire on the header alone, before any record is parsed.
+    header.extend_from_slice(&[0xAB; 32]);
+    std::fs::write(&path, &header).expect("write v2 header");
+
+    let err = LogStore::open(&path).expect_err("v2 must refuse");
+    assert!(err.contains("dtsim-store-v2"), "{err}");
+    assert!(err.contains("dtsim-store-v3"), "{err}");
+    assert!(err.contains("fresh"), "should point at the fix: {err}");
+    // Refusal is read-only: every byte is still in place.
+    assert_eq!(std::fs::read(&path).unwrap(), header,
+               "refusing a v2 store must not modify it");
+}
+
+#[test]
 fn foreign_files_are_refused_by_magic() {
     let path = tmp("magic.dtstore");
     std::fs::write(&path, b"JUNKJUNKJUNKJUNKJUNK")
