@@ -51,6 +51,7 @@ impl RunConfig {
             prefetch: true,
             jitter: crate::sim::Jitter::OFF,
             sync: self.sync,
+            relia: crate::sim::Reliability::OFF,
         }
     }
 
@@ -313,6 +314,30 @@ pub fn parse_jitter(s: &str) -> Result<crate::sim::JitterDist, String> {
             Err(format!(
                 "unknown jitter '{other}' (expected one of: off, \
                  lognormal:S, pareto:A)"))
+        }
+    }
+}
+
+/// Parse a checkpoint-cadence spec ("off", "auto" for the Young–Daly
+/// optimal interval, "every:S" seconds) — the single parser behind the
+/// CLI `--ckpt` flag and serve grid requests; the inverse is
+/// `CkptInterval`'s `Display` impl. Range checks live in
+/// `Reliability::validate`, which every consumer runs at build time.
+pub fn parse_ckpt(s: &str) -> Result<crate::sim::CkptInterval, String> {
+    use crate::sim::CkptInterval;
+    match s {
+        "off" => Ok(CkptInterval::Off),
+        "auto" => Ok(CkptInterval::Auto),
+        other => {
+            if let Some(v) = other.strip_prefix("every:") {
+                let seconds: f64 = v.parse().map_err(|_| format!(
+                    "bad checkpoint interval '{v}' (expected every:S \
+                     with seconds S > 0)"))?;
+                return Ok(CkptInterval::Every { seconds });
+            }
+            Err(format!(
+                "unknown checkpoint cadence '{other}' (expected one \
+                 of: off, auto, every:S)"))
         }
     }
 }

@@ -20,6 +20,7 @@
 //! | `serve.case.drop`     | per streamed `case` event     | connection dies mid-response (partial grid committed) |
 //! | `serve.write.stall`   | outbound writer, per line     | sleeps before the TCP write (a slow reader) |
 //! | `runner.worker.panic` | runner point-claim loop       | worker panics at the claim |
+//! | `store.compact.stall` | `compact` temp→rename window  | sleeps after the temp file is written, before the atomic rename — a kill -9 here must leave the original recoverable |
 //!
 //! Arming: `DTSIM_FAULTS="store.append.torn:after=3,serve.conn.drop:prob=0.05:seed=7"`
 //! in the environment (read once at process start via
@@ -51,6 +52,7 @@ pub const COMPILED_POINTS: &[&str] = &[
     "serve.case.drop",
     "serve.write.stall",
     "runner.worker.panic",
+    "store.compact.stall",
 ];
 
 #[derive(Debug, Clone)]
@@ -115,6 +117,22 @@ pub fn fired(name: &str) -> u64 {
         .get(name)
         .map(|fp| fp.fired)
         .unwrap_or(0)
+}
+
+/// Fire counts for every compiled point that has fired at least once,
+/// in [`COMPILED_POINTS`] order. Empty when chaos is disarmed or
+/// silent — callers can surface it only when there is something to
+/// say (the serve `done`/`stats` events do exactly that).
+pub fn fired_counts() -> Vec<(&'static str, u64)> {
+    let map = table().lock().unwrap_or_else(|e| e.into_inner());
+    COMPILED_POINTS
+        .iter()
+        .filter_map(|&name| {
+            map.get(name)
+                .map(|fp| (name, fp.fired))
+                .filter(|&(_, n)| n > 0)
+        })
+        .collect()
 }
 
 /// Arm one or more fault specs, comma-separated:
@@ -307,6 +325,20 @@ mod tests {
         // A rejected spec arms nothing.
         assert!(!point("test.x"));
         clear();
+    }
+
+    #[test]
+    fn fired_counts_report_only_fired_compiled_points() {
+        let _g = exclusive();
+        clear();
+        assert!(fired_counts().is_empty());
+        arm("store.append.torn:after=0,serve.conn.drop:after=5")
+            .unwrap();
+        assert!(point("store.append.torn"));
+        assert!(!point("serve.conn.drop"));
+        assert_eq!(fired_counts(), vec![("store.append.torn", 1)]);
+        clear();
+        assert!(fired_counts().is_empty());
     }
 
     #[test]

@@ -43,7 +43,7 @@ use std::sync::{Mutex, OnceLock};
 
 use crate::config::toml;
 
-use super::specs::{self, FabricSpec, GpuSpec, NodeSpec};
+use super::specs::{self, FabricSpec, GpuSpec, NodeSpec, ReliabilitySpec};
 
 /// Interned handle to a catalog [`HwSpec`]. `Copy + Hash + Eq`, so it
 /// keys caches by value exactly like the old `Generation` enum did;
@@ -140,6 +140,12 @@ pub struct HwSpec {
     /// model. Derive shared-cluster variants with
     /// [`Catalog::with_fabric`]. Semantics: `docs/network.md`.
     pub fabric: FabricSpec,
+    /// Failure/checkpoint figures (per-GPU MTBF, restart/rendezvous
+    /// time, checkpoint bandwidth). [`ReliabilitySpec::DEFAULT`] — the
+    /// default for every built-in — only matters once a study arms the
+    /// reliability axis, so unarmed runs are bit-identical to the
+    /// pre-reliability model. Semantics: `docs/reliability.md`.
+    pub reliability: ReliabilitySpec,
     /// True for specs derived by [`Catalog::with_freq_cap`]; derived
     /// entries are excluded from [`Catalog::primary_ids`] so design
     /// -space scenarios don't re-enumerate their own byproducts.
@@ -157,6 +163,7 @@ impl PartialEq for HwSpec {
             && self.gpu == other.gpu
             && self.freq_curve == other.freq_curve
             && self.fabric == other.fabric
+            && self.reliability == other.reliability
     }
 }
 
@@ -233,6 +240,21 @@ impl HwSpec {
                     self.fabric.background_load));
             }
         }
+        // Reliability keys only when they differ from the defaults,
+        // same reasoning as the fabric keys: built-in TOML bytes (and
+        // spec hashes) are unchanged from the pre-reliability catalog.
+        let d = ReliabilitySpec::DEFAULT;
+        for (k, v, dflt) in [
+            ("mtbf_hours", self.reliability.mtbf_hours, d.mtbf_hours),
+            ("restart_s", self.reliability.restart_s, d.restart_s),
+            ("rendezvous_s", self.reliability.rendezvous_s,
+             d.rendezvous_s),
+            ("ckpt_bw", self.reliability.ckpt_bw, d.ckpt_bw),
+        ] {
+            if v != dflt {
+                s.push_str(&format!("{k} = {v:?}\n"));
+            }
+        }
         s
     }
 }
@@ -243,7 +265,8 @@ const KNOWN_KEYS: &[&str] = &[
     "gpus_per_node", "peak_flops", "hbm_bw", "nvlink_bw", "ib_bw",
     "mem_bytes", "kernel_base_mfu", "launch_overhead_s", "p_base",
     "p_comp", "p_comm", "tdp", "freq_curve", "fabric",
-    "fabric_oversub", "fabric_background_load",
+    "fabric_oversub", "fabric_background_load", "mtbf_hours",
+    "restart_s", "rendezvous_s", "ckpt_bw",
 ];
 
 /// Catalog slots per lazily-allocated chunk; `CHUNKS × CHUNK` covers
@@ -326,6 +349,7 @@ fn slab() -> &'static Slab {
                 gpu: gpu.clone(),
                 freq_curve: None,
                 fabric: FabricSpec::DEDICATED,
+                reliability: ReliabilitySpec::DEFAULT,
                 derived: false,
             });
         }
@@ -523,6 +547,7 @@ impl Catalog {
             gpu,
             freq_curve: b.freq_curve.clone(),
             fabric: b.fabric,
+            reliability: b.reliability,
             derived: true,
         })
     }
@@ -550,6 +575,7 @@ impl Catalog {
             gpu: GpuSpec { name: leaked_name(&name), ..b.gpu.clone() },
             freq_curve: b.freq_curve.clone(),
             fabric,
+            reliability: b.reliability,
             derived: true,
         })
     }
@@ -618,6 +644,21 @@ fn spec_from_doc(doc: &toml::Document, section: &str)
                  \"fat-tree\" string"));
         }
     };
+    // Reliability keys are optional; absent keys take the fleet-scale
+    // defaults so pre-reliability catalog files load unchanged.
+    let d = ReliabilitySpec::DEFAULT;
+    let reliability = ReliabilitySpec {
+        mtbf_hours: doc
+            .get_float(section, "mtbf_hours")
+            .unwrap_or(d.mtbf_hours),
+        restart_s: doc
+            .get_float(section, "restart_s")
+            .unwrap_or(d.restart_s),
+        rendezvous_s: doc
+            .get_float(section, "rendezvous_s")
+            .unwrap_or(d.rendezvous_s),
+        ckpt_bw: doc.get_float(section, "ckpt_bw").unwrap_or(d.ckpt_bw),
+    };
     let gpu = GpuSpec {
         name: leaked_name(section),
         peak_flops: num("peak_flops")?,
@@ -638,6 +679,7 @@ fn spec_from_doc(doc: &toml::Document, section: &str)
         gpu,
         freq_curve,
         fabric,
+        reliability,
         derived: false,
     })
 }
@@ -726,6 +768,9 @@ fn validate(spec: &HwSpec) -> Result<(), String> {
     spec.fabric
         .validate()
         .map_err(|e| format!("{name}: {e}"))?;
+    spec.reliability
+        .validate()
+        .map_err(|e| format!("{name}: {e}"))?;
     if let Some(knots) = &spec.freq_curve {
         if knots.is_empty() {
             return Err(format!("{name}: freq_curve has no knots"));
@@ -793,6 +838,7 @@ mod tests {
                            ..specs::H100.clone() },
             freq_curve: None,
             fabric: FabricSpec::DEDICATED,
+            reliability: ReliabilitySpec::DEFAULT,
             derived: false,
         };
         let a = Catalog::register(mk(400e9)).unwrap();
@@ -868,6 +914,7 @@ tdp = 700.0
             gpu: GpuSpec { name: "unit-curve", ..specs::H100.clone() },
             freq_curve: Some(knots),
             fabric: FabricSpec::DEDICATED,
+            reliability: ReliabilitySpec::DEFAULT,
             derived: false,
         };
         assert_eq!(spec.power_scale(1.0), 1.0);
@@ -1024,6 +1071,48 @@ tdp = 700.0
     }
 
     #[test]
+    fn reliability_toml_keys_parse_and_roundtrip() {
+        let body = "\
+gpus_per_node = 8
+peak_flops = 990e12
+hbm_bw = 3.35e12
+nvlink_bw = 900e9
+ib_bw = 400e9
+mem_bytes = 80e9
+kernel_base_mfu = 0.52
+launch_overhead_s = 5e-6
+p_base = 561.0
+p_comp = 89.0
+p_comm = 40.0
+tdp = 700.0
+";
+        let text = format!(
+            "[unit-flaky]\n{body}mtbf_hours = 20000.0\n\
+             restart_s = 120.0\nrendezvous_s = 30.0\nckpt_bw = 4e9\n");
+        let ids = Catalog::load_str(&text).unwrap();
+        let r = ids[0].spec().reliability;
+        assert_eq!(r.mtbf_hours, 20_000.0);
+        assert_eq!(r.restart_s, 120.0);
+        assert_eq!(r.rendezvous_s, 30.0);
+        assert_eq!(r.ckpt_bw, 4e9);
+        // Round-trip reproduces the reliability block bit-for-bit.
+        assert_eq!(
+            Catalog::load_str(&ids[0].spec().to_toml()).unwrap(), ids);
+        // Omitted keys take the defaults (pre-reliability catalogs
+        // load unchanged)...
+        let plain = format!("[unit-solid]\n{body}");
+        let ids = Catalog::load_str(&plain).unwrap();
+        assert!(ids[0].spec().reliability.is_default());
+        // ...and default-reliability specs emit no reliability keys,
+        // so their TOML bytes match the pre-reliability catalog.
+        assert!(!ids[0].spec().to_toml().contains("mtbf_hours"));
+        // Nonsense values are rejected with the field name.
+        let bad = format!("[unit-badrel]\n{body}mtbf_hours = -3.0\n");
+        let err = Catalog::load_str(&bad).unwrap_err();
+        assert!(err.contains("mtbf_hours"), "{err}");
+    }
+
+    #[test]
     fn duplicate_catalog_sections_rejected() {
         let one = "\
 [unit-dup]
@@ -1060,6 +1149,7 @@ tdp = 700.0
                            ..specs::H100.clone() },
             freq_curve: Some(Vec::new()),
             fabric: FabricSpec::DEDICATED,
+            reliability: ReliabilitySpec::DEFAULT,
             derived: false,
         };
         // Falls back to the default curve instead of indexing [0]...
@@ -1074,6 +1164,7 @@ tdp = 700.0
             gpu: GpuSpec { name: "unit#1", ..specs::H100.clone() },
             freq_curve: None,
             fabric: FabricSpec::DEDICATED,
+            reliability: ReliabilitySpec::DEFAULT,
             derived: false,
         };
         assert!(Catalog::register(hashed).is_err());
@@ -1087,6 +1178,7 @@ tdp = 700.0
             gpu: GpuSpec { name: "unit-valid", ..specs::H100.clone() },
             freq_curve: None,
             fabric: FabricSpec::DEDICATED,
+            reliability: ReliabilitySpec::DEFAULT,
             derived: false,
         };
         let bad_name = HwSpec { name: "two words".into(),

@@ -12,7 +12,8 @@ pub mod catalog;
 pub mod specs;
 
 pub use catalog::{Catalog, HwId, HwSpec};
-pub use specs::{FabricKind, FabricSpec, GpuSpec, NodeSpec};
+pub use specs::{FabricKind, FabricSpec, GpuSpec, NodeSpec,
+                ReliabilitySpec};
 
 /// Historical name for [`HwId`]: the hardware axis used to be a closed
 /// 4-variant enum. Kept as an alias so `Generation::H100`-style code

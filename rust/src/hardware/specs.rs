@@ -127,6 +127,63 @@ impl FabricSpec {
     }
 }
 
+/// Per-GPU reliability and checkpoint-path figures carried by every
+/// [`HwSpec`] (docs/reliability.md). Like [`FabricSpec`], the default
+/// ([`ReliabilitySpec::DEFAULT`]) never enters the cost model unless a
+/// study arms the reliability axis, so catalogs that omit these keys
+/// stay bit-identical to the pre-reliability simulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReliabilitySpec {
+    /// Mean time between failures of a single GPU (plus its share of
+    /// node-level components), hours. Cluster MTBF is `mtbf_hours /
+    /// n_gpus` — the series-system law that steepens every scaling
+    /// curve.
+    pub mtbf_hours: f64,
+    /// Time from failure detection to the job running again on the
+    /// last checkpoint, seconds (scheduler requeue + container boot +
+    /// checkpoint load).
+    pub restart_s: f64,
+    /// Collective rendezvous after a membership change, seconds (NCCL
+    /// communicator re-init; paid on top of `restart_s`).
+    pub rendezvous_s: f64,
+    /// Sustained per-GPU checkpoint write bandwidth to durable
+    /// storage, bytes/s.
+    pub ckpt_bw: f64,
+}
+
+impl ReliabilitySpec {
+    /// Fleet-scale defaults: ~50k device-hours MTBF (Llama-3-scale
+    /// failure logs put H100 fleets in the 40–70k range), 5-minute
+    /// restart, 1-minute rendezvous, 2 GB/s per GPU to the
+    /// checkpoint store.
+    pub const DEFAULT: ReliabilitySpec = ReliabilitySpec {
+        mtbf_hours: 50_000.0,
+        restart_s: 300.0,
+        rendezvous_s: 60.0,
+        ckpt_bw: 2e9,
+    };
+
+    pub fn is_default(&self) -> bool {
+        *self == ReliabilitySpec::DEFAULT
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("mtbf_hours", self.mtbf_hours),
+            ("restart_s", self.restart_s),
+            ("rendezvous_s", self.rendezvous_s),
+            ("ckpt_bw", self.ckpt_bw),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!(
+                    "reliability {name} must be finite and positive, \
+                     got {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Per-GPU datasheet numbers + simulator coefficients.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
@@ -326,6 +383,22 @@ mod tests {
         }
         assert_eq!(HwId::parse("h100"), Ok(HwId::H100));
         assert!(HwId::parse("nope").is_err());
+    }
+
+    #[test]
+    fn reliability_default_is_valid_and_detectable() {
+        let d = ReliabilitySpec::DEFAULT;
+        assert!(d.validate().is_ok());
+        assert!(d.is_default());
+        let mut bad = d;
+        bad.mtbf_hours = 0.0;
+        assert!(bad.validate().is_err());
+        bad.mtbf_hours = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut other = d;
+        other.ckpt_bw = 1e9;
+        assert!(!other.is_default());
+        assert!(other.validate().is_ok());
     }
 
     #[test]

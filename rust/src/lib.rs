@@ -160,6 +160,7 @@ pub mod model;
 pub mod parallelism;
 pub mod planner;
 pub mod power;
+pub mod reliability;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -29,7 +29,7 @@ use dtsim::metrics;
 use dtsim::planner::{self, SweepRequest};
 use dtsim::report;
 use dtsim::runtime::artifacts_root;
-use dtsim::serve::{Client, Server};
+use dtsim::serve::{client::backoff_schedule, Client, Server};
 use dtsim::sim::{build_engine, Jitter, Schedule, Sharding, SimConfig};
 use dtsim::store::{LogStore, MemStore, ResultStore, StoreLock};
 use dtsim::study::grid;
@@ -41,7 +41,6 @@ use dtsim::topology::{Cluster, GroupPlacement};
 use dtsim::trace::write_chrome_trace;
 use dtsim::util::args::Args;
 use dtsim::util::json::Json;
-use dtsim::util::rng::Rng;
 use dtsim::util::stats;
 
 const USAGE: &str = "\
@@ -61,6 +60,9 @@ USAGE:
                    [--jitter lognormal:S|pareto:A [--seed N]
                     [--seeds K]]        # seeded per-op jitter
                                         # (docs/network.md)
+                   [--ckpt off|auto|every:S] [--mtbf HOURS] [--elastic]
+                                        # failure-aware goodput
+                                        # (docs/reliability.md)
   dtsim sweep      [--arch 7b] [--gen h100] [--nodes 32] [--gbs 512]
                    [--seq 4096] [--cp] [--top 15] [--max-ep 8]
                    [--sharding fsdp] [--schedule 1f1b]
@@ -81,6 +83,7 @@ USAGE:
                    [--schedule 1f1b,interleaved:2]
                    [--cap 0.94] [--top N] [--name my-grid]
                    [--jitter lognormal:0.15] [--seed 7] [--seeds 16]
+                   [--ckpt off|auto|every:S] [--mtbf HOURS] [--elastic]
                    [--out DIR] [--json] [--threads N]
   dtsim repro      [fig1|fig2|...|fig14|table1|headline|all]
                    [--out reports]
@@ -101,12 +104,17 @@ USAGE:
   dtsim client     <ping|stats|simulate|plan|study-grid|scenario|
                     shutdown> [request flags]
                    [--addr 127.0.0.1:7071] [--retries 4]
-                   [--backoff-ms 200]
+                   [--backoff-ms 200] [--retry-seed N]
+                                    # --retry-seed pins backoff jitter
+                                    # (replays a chaos run exactly)
   dtsim store      <verify|compact> PATH
+  dtsim store      migrate OLD NEW
                                     # verify: read-only scan, exit 4
                                     # on corruption; compact: drop
                                     # superseded/torn records,
-                                    # answers stay bitwise-identical
+                                    # answers stay bitwise-identical;
+                                    # migrate: upgrade an old-schema
+                                    # store (results kept bit-exact)
 ";
 
 fn main() {
@@ -270,7 +278,8 @@ fn cmd_study(args: &Args) -> Result<()> {
         // iteration-time percentiles.
         let table =
             res.table(&grid_columns(!study.jitter().is_off(),
-                                    study.has_async()));
+                                    study.has_async(),
+                                    study.has_reliability()));
         ConsoleSink.emit(&table)?;
         CsvSink::new(&out).emit(&table)?;
         if args.has("json") {
@@ -853,10 +862,25 @@ fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7071");
     let retries = parse_count_flag(args, "retries", 4)? as u32;
     let backoff_ms = parse_ms_flag(args, "backoff-ms", 200)?.max(1);
+    // Jitter is seeded per-invocation by default; `--retry-seed N`
+    // pins it so a chaos run's whole retry timeline replays exactly.
+    let retry_seed = match args.get("retry-seed") {
+        Some(s) => s.parse::<u64>().map_err(|_| anyhow!(
+            "--retry-seed: '{s}' is not a non-negative integer seed"))?,
+        None => u64::from(std::process::id())
+            ^ std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| u64::from(d.subsec_nanos()))
+                .unwrap_or(0),
+    };
+    let schedule = backoff_schedule(retries, backoff_ms, retry_seed);
     let mut req = BTreeMap::new();
     req.insert("cmd".to_string(), Json::Str(cmd.clone()));
     for (k, v) in args.flags() {
-        if matches!(k, "addr" | "catalog" | "retries" | "backoff-ms") {
+        if matches!(
+            k,
+            "addr" | "catalog" | "retries" | "backoff-ms" | "retry-seed"
+        ) {
             continue;
         }
         req.insert(k.to_string(), Json::Str(v.to_string()));
@@ -865,27 +889,15 @@ fn cmd_client(args: &Args) -> Result<()> {
 
     let retry_hint = format!(
         "gave up after {} attempts — raise --retries N for more \
-         attempts or --backoff-ms MS for a longer wait between them",
+         attempts or --backoff-ms MS for a longer wait between them \
+         (--retry-seed N replays this exact backoff timeline)",
         retries + 1);
-    let mut rng = Rng::new(
-        u64::from(std::process::id())
-            ^ std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .map(|d| u64::from(d.subsec_nanos()))
-                .unwrap_or(0),
-    );
     let mut last: Option<(&'static str, std::io::Error)> = None;
     for attempt in 0..=retries {
         if attempt > 0 {
             let (stage, e) =
                 last.as_ref().expect("a retry follows a failure");
-            // Exponential backoff with jitter, capped at 30 s so a
-            // long --retries budget doesn't stall for hours.
-            let base = backoff_ms
-                .saturating_mul(1u64 << u64::from((attempt - 1).min(16)));
-            let wait =
-                base.saturating_add(rng.next_below(backoff_ms))
-                    .min(30_000);
+            let wait = schedule[(attempt - 1) as usize];
             eprintln!(
                 "dtsim client: {stage} {addr} failed ({e}); retry \
                  {attempt}/{retries} in {wait}ms");
@@ -948,13 +960,17 @@ fn cmd_client(args: &Args) -> Result<()> {
 /// result store file (docs/serve.md). `verify` is a read-only scan
 /// that exits 4 on corruption; `compact` rewrites the file without
 /// superseded duplicates or truncated garbage, and every stored
-/// answer stays bitwise-identical.
+/// answer stays bitwise-identical; `migrate OLD NEW` upgrades an
+/// old-schema store into a fresh current-schema file, result
+/// payloads byte-verbatim.
 fn cmd_store(args: &Args) -> Result<()> {
     const STORE_USAGE: &str =
         "store usage: `dtsim store verify PATH` (read-only scan; \
-         exit 4 on corruption) or `dtsim store compact PATH` (drop \
+         exit 4 on corruption), `dtsim store compact PATH` (drop \
          superseded duplicates and truncated garbage; answers stay \
-         bitwise-identical)";
+         bitwise-identical), or `dtsim store migrate OLD NEW` \
+         (upgrade an old-schema store into a fresh file; results \
+         kept bit-exact)";
     let verb = args
         .positional
         .get(1)
@@ -998,6 +1014,26 @@ fn cmd_store(args: &Args) -> Result<()> {
                  bytes of truncated garbage dropped)",
                 r.bytes_before, r.bytes_after, r.live,
                 r.dropped_superseded, r.kept_stale, r.dropped_bytes);
+            Ok(())
+        }
+        "migrate" => {
+            let new = args.positional.get(3).ok_or_else(|| anyhow!(
+                "store migrate: missing NEW output path\n{STORE_USAGE}"
+            ))?;
+            // Lock the *old* store: migrating out from under a live
+            // writer would silently miss its in-flight appends.
+            let _lock = StoreLock::acquire(path)
+                .map_err(|e| anyhow!("store migrate: {e}"))?;
+            let r = dtsim::store::migrate(path, new)
+                .map_err(|e| anyhow!("store migrate: {e}"))?;
+            println!(
+                "store {path}: migrated {} ({} results re-encoded as \
+                 {}, {} stale-hardware records dropped, {} bytes of \
+                 truncated garbage left behind) -> {new}; the old \
+                 file is untouched",
+                r.from.name(), r.migrated,
+                dtsim::store::codec::SchemaVersion::V4.name(),
+                r.dropped_stale, r.truncated_bytes);
             Ok(())
         }
         other => {

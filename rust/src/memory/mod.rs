@@ -185,6 +185,29 @@ fn breakdown(
     }
 }
 
+/// Per-GPU bytes a checkpoint must persist: this rank's shard of the
+/// bf16 parameters plus the fp32 optimizer/master state, under the
+/// sharding mode's actual shard group (every rank writes its own shard
+/// — the standard distributed-checkpoint layout). Gradients,
+/// activations, and the gathered working set are not checkpointed.
+/// Pure function of (arch, plan, sharding), so the reliability layer
+/// recomputes it identically from a store key and from a live config
+/// (docs/reliability.md).
+pub fn ckpt_bytes_per_gpu(
+    arch: &TransformerArch,
+    plan: &ParallelPlan,
+    sharding: Sharding,
+) -> f64 {
+    let shard_deg = match sharding {
+        Sharding::Fsdp | Sharding::Zero3 => plan.dp,
+        Sharding::Hsdp { group } => group.clamp(1, plan.dp),
+        Sharding::Ddp => 1,
+    } as f64;
+    let shard =
+        arch.params_ep(plan.ep) / (plan.tp * plan.pp) as f64 / shard_deg;
+    (PARAM_BYTES + OPT_BYTES_PER_PARAM) * shard
+}
+
 /// Does the plan fit in device memory (with a safety margin)?
 pub fn fits(
     arch: &TransformerArch,
@@ -363,6 +386,25 @@ mod tests {
                                     Sharding::Fsdp, Schedule::OneFOneB,
                                     1);
         assert_eq!(base.total().to_bits(), ep.total().to_bits());
+    }
+
+    #[test]
+    fn ckpt_bytes_follow_the_persistent_shard() {
+        let plan = ParallelPlan::data_parallel(64);
+        let m = per_gpu_memory_for(&LLAMA_7B, &plan, 2, 4096,
+                                   Sharding::Fsdp, Schedule::OneFOneB, 1);
+        let ckpt = ckpt_bytes_per_gpu(&LLAMA_7B, &plan, Sharding::Fsdp);
+        // Exactly the persistent params + optimizer shards — grads,
+        // activations, and the gathered working set are excluded.
+        assert_eq!(ckpt.to_bits(),
+                   (m.params_shard + m.optimizer_shard).to_bits());
+        // DDP persists the full replica; FSDP 1/dp of it.
+        let ddp = ckpt_bytes_per_gpu(&LLAMA_7B, &plan, Sharding::Ddp);
+        assert!((ddp / ckpt - 64.0).abs() < 1e-9);
+        // HSDP shards within the group only.
+        let hsdp = ckpt_bytes_per_gpu(
+            &LLAMA_7B, &plan, Sharding::Hsdp { group: 8 });
+        assert!((hsdp / ckpt - 8.0).abs() < 1e-9);
     }
 
     #[test]

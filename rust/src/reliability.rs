@@ -1,0 +1,242 @@
+//! Failure-aware goodput: the availability model behind the
+//! `goodput_wps` column and `Objective::GoodputWps`
+//! (docs/reliability.md has the full derivation).
+//!
+//! A cluster of `n` GPUs with per-GPU MTBF `m` hours fails as a series
+//! system: `MTBF_cluster = m·3600/n` seconds. Between failures the job
+//! checkpoints every `I` seconds, stalling `δ = ckpt_bytes/ckpt_bw`
+//! per checkpoint; each failure rolls back `I/2` of work on average
+//! and pays `R` seconds of restart + rendezvous. The steady-state
+//! wasted-time fraction is additive:
+//!
+//! ```text
+//! waste(I) = δ/I + e·(I/2 + R)/MTBF_cluster
+//! ```
+//!
+//! where `e` is the elastic-churn factor: 1 for a gang-scheduled job
+//! (the whole cluster rolls back and waits), `1/dp` when `--elastic`
+//! rides on bounded-staleness DP (only the failed replica's slice of
+//! the cluster reloads and rejoins; the surviving `dp−1` replicas keep
+//! stepping). `d waste/dI = −δ/I² + e/(2·MTBF)` vanishes at the
+//! Young–Daly optimum `I* = sqrt(2·MTBF_cluster·δ/e)` — the exact
+//! minimizer of the modeled waste, which the `auto` cadence uses and a
+//! closed-form test pins. `availability = max(0, 1 − waste)` and
+//! `goodput_wps = global_wps · availability`.
+//!
+//! Everything here is a render-time discount — the simulated iteration
+//! is untouched (the PR 9 `effective_wps` precedent), so the unarmed
+//! path stays bit-identical on both engines and the armed path needs
+//! no new engine cases.
+
+use crate::hardware::ReliabilitySpec;
+use crate::sim::{CkptInterval, Reliability};
+
+/// Cluster MTBF in seconds: per-GPU MTBF (hours) over `world` GPUs in
+/// series.
+pub fn cluster_mtbf_s(mtbf_gpu_hours: f64, world: usize) -> f64 {
+    mtbf_gpu_hours * 3600.0 / world as f64
+}
+
+/// Young–Daly optimal checkpoint interval, seconds: the exact
+/// minimizer of `waste(I) = δ/I + e·(I/2 + R)/M` — `sqrt(2·M·δ/e)`,
+/// the textbook `sqrt(2·MTBF·δ)` when `elastic_frac == 1`.
+pub fn young_daly_interval(
+    mtbf_s: f64, t_ckpt_s: f64, elastic_frac: f64,
+) -> f64 {
+    (2.0 * mtbf_s * t_ckpt_s / elastic_frac).sqrt()
+}
+
+/// Fraction of wall-clock time spent on useful work under checkpoint
+/// interval `interval_s`, clamped to `[0, 1]` (a cluster can be so
+/// failure-dominated that no interval yields forward progress).
+pub fn availability(
+    interval_s: f64,
+    t_ckpt_s: f64,
+    t_repair_s: f64,
+    mtbf_s: f64,
+    elastic_frac: f64,
+) -> f64 {
+    let waste = t_ckpt_s / interval_s
+        + elastic_frac * (interval_s / 2.0 + t_repair_s) / mtbf_s;
+    (1.0 - waste).clamp(0.0, 1.0)
+}
+
+/// The elastic-churn cost factor: `1/dp` when a failed rank shrinks
+/// the DP group until rejoin, 1 when the whole job gang-restarts.
+pub fn elastic_frac(relia: &Reliability, dp: usize) -> f64 {
+    if relia.elastic { 1.0 / dp.max(1) as f64 } else { 1.0 }
+}
+
+/// The checkpoint cadence a case actually runs, seconds: the explicit
+/// interval, or the Young–Daly optimum for [`CkptInterval::Auto`].
+/// `None` when the reliability axis is off.
+pub fn resolved_interval_s(
+    relia: &Reliability,
+    spec: &ReliabilitySpec,
+    world: usize,
+    dp: usize,
+    ckpt_bytes: f64,
+) -> Option<f64> {
+    match relia.ckpt {
+        CkptInterval::Off => None,
+        CkptInterval::Every { seconds } => Some(seconds),
+        CkptInterval::Auto => {
+            let mtbf_s = cluster_mtbf_s(
+                relia.mtbf_hours.unwrap_or(spec.mtbf_hours), world);
+            let t_ckpt = ckpt_bytes / spec.ckpt_bw;
+            Some(young_daly_interval(
+                mtbf_s, t_ckpt, elastic_frac(relia, dp)))
+        }
+    }
+}
+
+/// The multiplicative goodput discount for one case: exactly 1.0 when
+/// the reliability axis is off (so the unarmed `goodput_wps` column
+/// equals the raw one bit for bit), otherwise the availability under
+/// the case's cadence, hardware reliability figures, and world size.
+pub fn goodput_factor(
+    relia: &Reliability,
+    spec: &ReliabilitySpec,
+    world: usize,
+    dp: usize,
+    ckpt_bytes: f64,
+) -> f64 {
+    let Some(interval) =
+        resolved_interval_s(relia, spec, world, dp, ckpt_bytes)
+    else {
+        return 1.0;
+    };
+    let mtbf_s = cluster_mtbf_s(
+        relia.mtbf_hours.unwrap_or(spec.mtbf_hours), world);
+    let t_ckpt = ckpt_bytes / spec.ckpt_bw;
+    availability(
+        interval,
+        t_ckpt,
+        spec.restart_s + spec.rendezvous_s,
+        mtbf_s,
+        elastic_frac(relia, dp),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: ReliabilitySpec = ReliabilitySpec::DEFAULT;
+
+    fn armed(mtbf_hours: f64) -> Reliability {
+        Reliability {
+            ckpt: CkptInterval::Auto,
+            mtbf_hours: Some(mtbf_hours),
+            elastic: false,
+        }
+    }
+
+    #[test]
+    fn young_daly_auto_matches_the_closed_form() {
+        // The acceptance-criteria pin: `auto` is exactly
+        // sqrt(2 · MTBF_cluster · t_ckpt), bit for bit.
+        let world = 1024;
+        let dp = 128;
+        let ckpt_bytes = 2.0e10;
+        let relia = armed(30_000.0);
+        let interval = resolved_interval_s(
+            &relia, &SPEC, world, dp, ckpt_bytes).unwrap();
+        let mtbf_s = 30_000.0 * 3600.0 / world as f64;
+        let t_ckpt = ckpt_bytes / SPEC.ckpt_bw;
+        assert_eq!(interval.to_bits(),
+                   (2.0 * mtbf_s * t_ckpt).sqrt().to_bits());
+    }
+
+    #[test]
+    fn auto_interval_minimizes_the_modeled_waste() {
+        let world = 4096;
+        let dp = 512;
+        let ckpt_bytes = 5.0e10;
+        let relia = armed(20_000.0);
+        let mtbf_s = cluster_mtbf_s(20_000.0, world);
+        let t_ckpt = ckpt_bytes / SPEC.ckpt_bw;
+        let best = resolved_interval_s(
+            &relia, &SPEC, world, dp, ckpt_bytes).unwrap();
+        let repair = SPEC.restart_s + SPEC.rendezvous_s;
+        let at = |i: f64| availability(i, t_ckpt, repair, mtbf_s, 1.0);
+        for frac in [0.25, 0.5, 0.8, 1.25, 2.0, 4.0] {
+            assert!(at(best) >= at(best * frac),
+                    "I*={best} beaten at {}x", frac);
+        }
+    }
+
+    #[test]
+    fn availability_declines_with_world_size() {
+        // The goodput cliff: at fixed per-GPU MTBF, cluster MTBF
+        // shrinks as 1/n, so availability strictly declines even at
+        // each world's own optimal interval.
+        let relia = armed(50_000.0);
+        let mut prev = f64::INFINITY;
+        for world in [256usize, 1024, 4096, 16384, 65536] {
+            let a = goodput_factor(&relia, &SPEC, world, world / 8,
+                                   1.0e10);
+            assert!(a < prev, "world {world}: {a} !< {prev}");
+            assert!(a > 0.0 && a <= 1.0);
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn elastic_churn_discounts_the_failure_term() {
+        let world = 8192;
+        let dp = 1024;
+        let ckpt_bytes = 2.0e10;
+        let gang = Reliability {
+            ckpt: CkptInterval::Every { seconds: 1800.0 },
+            mtbf_hours: Some(10_000.0),
+            elastic: false,
+        };
+        let elastic = Reliability { elastic: true, ..gang };
+        let a_gang = goodput_factor(&gang, &SPEC, world, dp, ckpt_bytes);
+        let a_el =
+            goodput_factor(&elastic, &SPEC, world, dp, ckpt_bytes);
+        assert!(a_el > a_gang, "{a_el} !> {a_gang}");
+        // At a fixed interval, only the failure term shrinks (by 1/dp);
+        // the checkpoint-stall term is shared.
+        let mtbf_s = cluster_mtbf_s(10_000.0, world);
+        let t_ckpt = ckpt_bytes / SPEC.ckpt_bw;
+        let repair = SPEC.restart_s + SPEC.rendezvous_s;
+        let expect = (a_gang
+            + (1.0 - 1.0 / dp as f64) * (1800.0 / 2.0 + repair) / mtbf_s)
+            .min(1.0);
+        assert!((a_el - expect).abs() < 1e-12, "{a_el} vs {expect}");
+        // ...and the elastic optimum stretches by sqrt(dp).
+        let auto_gang = Reliability {
+            ckpt: CkptInterval::Auto, ..gang };
+        let auto_el = Reliability {
+            ckpt: CkptInterval::Auto, elastic: true, ..gang };
+        let i_gang = resolved_interval_s(
+            &auto_gang, &SPEC, world, dp, ckpt_bytes).unwrap();
+        let i_el = resolved_interval_s(
+            &auto_el, &SPEC, world, dp, ckpt_bytes).unwrap();
+        assert!((i_el / i_gang - (dp as f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn off_axis_is_exactly_one() {
+        let f = goodput_factor(
+            &Reliability::OFF, &SPEC, 8192, 1024, 1.0e12);
+        assert_eq!(f.to_bits(), 1.0f64.to_bits());
+        assert_eq!(resolved_interval_s(
+            &Reliability::OFF, &SPEC, 8192, 1024, 1.0e12), None);
+    }
+
+    #[test]
+    fn failure_dominated_clusters_clamp_to_zero() {
+        // An absurdly unreliable fleet: availability floors at 0
+        // instead of going negative (goodput_wps stays a throughput).
+        let relia = Reliability {
+            ckpt: CkptInterval::Every { seconds: 10.0 },
+            mtbf_hours: Some(0.001),
+            elastic: false,
+        };
+        let a = goodput_factor(&relia, &SPEC, 65536, 8192, 1.0e11);
+        assert_eq!(a, 0.0);
+    }
+}

@@ -18,7 +18,10 @@ use crate::memory;
 use crate::model::{self, LLAMA_70B, LLAMA_7B, LLAMA_7B_MOE8X};
 use crate::parallelism::ParallelPlan;
 use crate::planner::{self, SweepRequest};
-use crate::sim::{JitterDist, Schedule, Sharding, SimConfig, SyncMode};
+use crate::reliability;
+use crate::sim::{
+    CkptInterval, JitterDist, Schedule, Sharding, SimConfig, SyncMode,
+};
 use crate::study::table::{f0, f2, f3, ms};
 use crate::study::{
     CaseResult, Column, Objective, PlanAxis, Registry, Scenario,
@@ -54,6 +57,8 @@ pub fn register_all(reg: &mut Registry) {
     reg.register(Box::new(Straggler));
     reg.register(Box::new(MoeCrossover));
     reg.register(Box::new(AsyncStraggler));
+    reg.register(Box::new(GoodputCliff));
+    reg.register(Box::new(CkptSweep));
 }
 
 /// Weak-scaling study: Llama-7B pure FSDP, local batch 2, seq 4096
@@ -1443,5 +1448,157 @@ impl Scenario for AsyncStraggler {
             }
         }
         Ok(vec![grid, t])
+    }
+}
+
+/// `goodput_cliff` — failure-aware goodput over the weak-scaling
+/// ladder. At fixed per-GPU MTBF the cluster fails as a series system
+/// (`MTBF_cluster = MTBF_gpu / n`), so even at each scale's own
+/// Young–Daly checkpoint interval the availability factor — and with
+/// it goodput per GPU — strictly declines with world size: a second
+/// diminishing-returns cliff stacked on top of the communication one.
+/// Deterministic (no jitter); the armed axis changes keys and adds
+/// render-time columns but never touches the simulated iteration.
+struct GoodputCliff;
+
+impl GoodputCliff {
+    fn study(title: &str) -> Study {
+        Study::builder("goodput_cliff")
+            .title(title)
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([1, 4, 16, 64, 256])
+            .plans(PlanAxis::DataParallel)
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .seq_len(4096)
+            .checkpoint(CkptInterval::Auto)
+            .build()
+    }
+}
+
+impl Scenario for GoodputCliff {
+    fn name(&self) -> &'static str { "goodput_cliff" }
+    fn title(&self) -> &'static str {
+        "Failure-aware goodput over the weak-scaling ladder: \
+         availability and goodput/GPU strictly decline with scale \
+         (Llama-7B FSDP, H100, ckpt auto)"
+    }
+    fn describe(&self) -> &'static str {
+        "weak-scaling ladder with the reliability axis armed (--ckpt \
+         auto): cluster MTBF shrinks as 1/n, so goodput per GPU falls \
+         faster than raw throughput per GPU"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let res = runner.run(&Self::study(self.title()));
+        let grid = res
+            .table(&[Nodes, Gpus, Plan, Mbs, GlobalWps, PerGpuWps,
+                     CkptKind, GoodputWps])
+            .with_chart(7);
+
+        // Per scale: the resolved Young–Daly interval, the
+        // availability factor, and both per-GPU throughput views.
+        let mut t = Table::new(
+            "goodput_cliff_per_gpu",
+            "Raw vs failure-aware per-GPU throughput (ckpt auto: each \
+             scale runs its own Young–Daly optimal interval)",
+            &["gpus", "interval_s", "availability", "wps_per_gpu",
+              "goodput_per_gpu"]);
+        for c in &res.cases {
+            let spec = &c.hw.spec().reliability;
+            let interval = reliability::resolved_interval_s(
+                &c.relia, spec, c.metrics.world, c.plan.dp,
+                c.ckpt_bytes)
+                .expect("goodput_cliff arms the checkpoint axis");
+            let avail = reliability::goodput_factor(
+                &c.relia, spec, c.metrics.world, c.plan.dp,
+                c.ckpt_bytes);
+            t.row(vec![
+                c.metrics.world.to_string(),
+                f0(interval),
+                f3(avail),
+                f0(c.metrics.per_gpu_wps),
+                f0(c.goodput_wps() / c.metrics.world as f64),
+            ]);
+        }
+        Ok(vec![grid, t])
+    }
+}
+
+/// `ckpt_interval` — the checkpoint-cadence tradeoff at one scale:
+/// checkpoint too often and the stall term `δ/I` dominates, too
+/// rarely and the rollback term `(I/2 + R)/MTBF` does. The `auto`
+/// cadence is the exact Young–Daly minimizer of the modeled waste, so
+/// its goodput must weakly dominate every swept fixed interval — the
+/// closed-form pin the reliability tests state, rendered as a table.
+struct CkptSweep;
+
+impl CkptSweep {
+    const NODES: usize = 64;
+    const INTERVALS: [f64; 6] =
+        [300.0, 900.0, 1800.0, 3600.0, 7200.0, 14400.0];
+
+    fn study(title: &str, ckpt: CkptInterval) -> Study {
+        Study::builder("ckpt_interval")
+            .title(title)
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([Self::NODES])
+            .plans(PlanAxis::DataParallel)
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .seq_len(4096)
+            .checkpoint(ckpt)
+            .build()
+    }
+}
+
+impl Scenario for CkptSweep {
+    fn name(&self) -> &'static str { "ckpt_interval" }
+    fn title(&self) -> &'static str {
+        "Checkpoint cadence vs goodput at 512 GPUs: fixed intervals \
+         bracket the Young–Daly `auto` optimum (Llama-7B FSDP, H100)"
+    }
+    fn describe(&self) -> &'static str {
+        "availability and goodput across fixed checkpoint intervals \
+         vs --ckpt auto (the Young–Daly waste minimizer) at one \
+         512-GPU scale; auto weakly dominates every swept interval"
+    }
+
+    fn tables(&self, runner: &mut StudyRunner) -> Result<Vec<Table>> {
+        let mut cadences = vec![CkptInterval::Auto];
+        cadences.extend(
+            Self::INTERVALS
+                .iter()
+                .map(|&seconds| CkptInterval::Every { seconds }),
+        );
+        let mut t = Table::new(
+            "ckpt_interval",
+            "Availability and goodput per checkpoint cadence (the \
+             simulated iteration is identical across rows; only the \
+             render-time availability factor moves)",
+            &["ckpt", "interval_s", "availability", "global_wps",
+              "goodput_wps"]);
+        for ckpt in cadences {
+            let res = runner.run(&Self::study(self.title(), ckpt));
+            let c = &res.cases[0];
+            let spec = &c.hw.spec().reliability;
+            let interval = reliability::resolved_interval_s(
+                &c.relia, spec, c.metrics.world, c.plan.dp,
+                c.ckpt_bytes)
+                .expect("every ckpt_interval row arms the axis");
+            let avail = reliability::goodput_factor(
+                &c.relia, spec, c.metrics.world, c.plan.dp,
+                c.ckpt_bytes);
+            t.row(vec![
+                c.relia.to_string(),
+                f0(interval),
+                f3(avail),
+                f0(c.metrics.global_wps),
+                f0(c.goodput_wps()),
+            ]);
+        }
+        Ok(vec![t.with_chart(4)])
     }
 }

@@ -127,7 +127,8 @@ mod tests {
             "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
             "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
             "fig14", "headline", "ablation", "sched", "madmax",
-            "powersweep", "contention", "straggler",
+            "powersweep", "contention", "straggler", "moe_crossover",
+            "async_straggler", "goodput_cliff", "ckpt_interval",
         ];
         assert_eq!(registry().names(), expected);
         assert_eq!(all_figures(), expected);

@@ -7,8 +7,36 @@ use std::net::TcpStream;
 use std::time::Duration;
 
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 use super::TERMINAL_EVENTS;
+
+/// Each retry wait is capped here so a generous `--retries` budget
+/// can't stall a script for hours.
+pub const BACKOFF_CAP_MS: u64 = 30_000;
+
+/// The full wait schedule for a retry budget: exponential backoff
+/// from `backoff_ms` (doubling per attempt) plus seeded jitter, each
+/// wait capped at [`BACKOFF_CAP_MS`]. Pure — the same
+/// `(retries, backoff_ms, seed)` always yields the same schedule,
+/// which is what makes chaos runs replayable (`dtsim client
+/// --retry-seed`). Entry `i` is the wait before retry `i + 1`.
+pub fn backoff_schedule(
+    retries: u32,
+    backoff_ms: u64,
+    seed: u64,
+) -> Vec<u64> {
+    let backoff_ms = backoff_ms.max(1);
+    let mut rng = Rng::new(seed);
+    (1..=retries)
+        .map(|attempt| {
+            let base = backoff_ms
+                .saturating_mul(1u64 << u64::from((attempt - 1).min(16)));
+            base.saturating_add(rng.next_below(backoff_ms))
+                .min(BACKOFF_CAP_MS)
+        })
+        .collect()
+}
 
 /// One connection to a running `dtsim serve`. Requests are serial per
 /// connection (the protocol has no request IDs); open more connections

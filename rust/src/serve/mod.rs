@@ -512,14 +512,18 @@ fn dispatch(
         ])),
         "stats" => {
             let s = store.stats();
-            send_io(out, &obj([
+            let mut fields = vec![
                 ("event", Json::Str("ok".into())),
                 ("cmd", Json::Str("stats".into())),
                 ("store_hits", unum(s.hits)),
                 ("store_misses", unum(s.misses)),
                 ("store_bytes", unum(s.bytes)),
                 ("store_entries", unum(s.entries as u64)),
-            ]))
+            ];
+            if let Some(f) = faults_json() {
+                fields.push(("faults", f));
+            }
+            send_io(out, &obj(fields))
         }
         "simulate" => {
             let cfg = grid::sim_config_from_args(&args)?;
@@ -631,7 +635,8 @@ fn dispatch(
                     // the percentile columns on both paths.
                     let table = res
                         .table(&grid_columns(!study.jitter().is_off(),
-                                             study.has_async()));
+                                             study.has_async(),
+                                             study.has_reliability()));
                     send_table(out, &table)?;
                     send_done(out, &runner)
                 }
@@ -878,14 +883,17 @@ fn send_table(out: &Outbound, t: &Table) -> Result<(), String> {
 }
 
 /// The closing `done` event: per-request work counters plus the
-/// store-lifetime hit/miss/size counters.
+/// store-lifetime hit/miss/size counters. Under chaos, a `faults`
+/// object reports process-lifetime fire counts per point (omitted
+/// entirely when nothing has fired, which is the fault-free common
+/// case — clients must not key on its presence).
 fn send_done(
     out: &Outbound,
     runner: &StudyRunner,
 ) -> Result<(), String> {
     let (evaluated, requested) = runner.stats();
     let s = runner.store_stats();
-    send_io(out, &obj([
+    let mut fields = vec![
         ("event", Json::Str("done".into())),
         ("requested", unum(requested as u64)),
         ("evaluated", unum(evaluated as u64)),
@@ -893,7 +901,22 @@ fn send_done(
         ("store_misses", unum(s.misses)),
         ("store_bytes", unum(s.bytes)),
         ("store_entries", unum(s.entries as u64)),
-    ]))
+    ];
+    if let Some(f) = faults_json() {
+        fields.push(("faults", f));
+    }
+    send_io(out, &obj(fields))
+}
+
+/// Fired-fault counters as a JSON object keyed by point name, or
+/// `None` when no compiled fault point has fired — the field is
+/// omitted rather than emitting noisy zeros on every fault-free run.
+fn faults_json() -> Option<Json> {
+    let fired = crate::fault::fired_counts();
+    if fired.is_empty() {
+        return None;
+    }
+    Some(obj(fired.into_iter().map(|(name, n)| (name, unum(n)))))
 }
 
 fn send_io(out: &Outbound, v: &Json) -> Result<(), String> {

@@ -295,6 +295,144 @@ impl std::fmt::Display for SyncMode {
     }
 }
 
+/// Checkpoint cadence for the reliability axis (PR 10).
+#[derive(Debug, Clone, Copy)]
+pub enum CkptInterval {
+    /// No checkpointing modeled (the default): the reliability layer
+    /// is disarmed and every throughput column is the raw one, bit for
+    /// bit.
+    Off,
+    /// Young–Daly optimal interval `sqrt(2 · MTBF_cluster · t_ckpt)`,
+    /// recomputed per configuration (docs/reliability.md).
+    Auto,
+    /// Fixed wall-clock interval between checkpoints, seconds.
+    Every { seconds: f64 },
+}
+
+impl CkptInterval {
+    pub fn is_off(&self) -> bool {
+        matches!(self, CkptInterval::Off)
+    }
+
+    /// Canonical identity `(tag, param bits)` — shared by Eq/Hash and
+    /// the store codec so equal keys hash and serialize identically.
+    pub(crate) fn key(&self) -> (u8, u64) {
+        match *self {
+            CkptInterval::Off => (0, 0),
+            CkptInterval::Auto => (1, 0),
+            CkptInterval::Every { seconds } => (2, seconds.to_bits()),
+        }
+    }
+}
+
+impl PartialEq for CkptInterval {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for CkptInterval {}
+
+impl std::hash::Hash for CkptInterval {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.key().hash(state)
+    }
+}
+
+impl std::fmt::Display for CkptInterval {
+    /// Canonical spec string ("off", "auto", "every:S") — the inverse
+    /// of `config::parse_ckpt`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptInterval::Off => write!(f, "off"),
+            CkptInterval::Auto => write!(f, "auto"),
+            CkptInterval::Every { seconds } => write!(f, "every:{seconds}"),
+        }
+    }
+}
+
+/// Failure-aware goodput spec carried by [`SimConfig`] (and hashed
+/// into the study's `ConfigKey`, so the result store never conflates
+/// reliability assumptions). Arming it never changes the simulated
+/// iteration — goodput is an availability discount applied at render
+/// time, exactly like the PR 9 staleness discount — so both engines
+/// stay bit-identical over the new axis by construction
+/// (docs/reliability.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Reliability {
+    pub ckpt: CkptInterval,
+    /// Per-GPU MTBF override in hours; `None` uses the hardware
+    /// spec's `mtbf_hours`. Stored as canonical bits (see `key`).
+    pub mtbf_hours: Option<f64>,
+    /// Elastic-DP membership churn on top of [`SyncMode::Async`]: a
+    /// failed rank shrinks the DP group until rejoin instead of
+    /// stalling the job, so only `1/dp` of the cluster's work is lost
+    /// per failure (docs/reliability.md §Elastic).
+    pub elastic: bool,
+}
+
+impl Reliability {
+    /// The canonical unarmed spec — the [`SimConfig`] default.
+    pub const OFF: Reliability = Reliability {
+        ckpt: CkptInterval::Off,
+        mtbf_hours: None,
+        elastic: false,
+    };
+
+    pub fn is_off(&self) -> bool {
+        self.ckpt.is_off()
+    }
+
+    /// Canonical identity `(ckpt tag, ckpt bits, mtbf bits, elastic)`
+    /// for the store codec; `mtbf_hours: None` encodes as 0 bits,
+    /// which `validate` keeps unambiguous (an override must be > 0,
+    /// and 0.0f64 has bit pattern 0).
+    pub(crate) fn key(&self) -> (u8, u64, u64, u8) {
+        let (tag, bits) = self.ckpt.key();
+        (tag, bits,
+         self.mtbf_hours.map_or(0, f64::to_bits),
+         self.elastic as u8)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ckpt.is_off() && (self.mtbf_hours.is_some() || self.elastic)
+        {
+            return Err(
+                "ckpt=off requires no mtbf override and no elastic \
+                 mode (arm --ckpt to use --mtbf/--elastic)"
+                    .into(),
+            );
+        }
+        if let CkptInterval::Every { seconds } = self.ckpt {
+            if !(seconds.is_finite() && seconds > 0.0) {
+                return Err(format!(
+                    "checkpoint interval must be finite and > 0 \
+                     seconds, got {seconds}"));
+            }
+        }
+        if let Some(h) = self.mtbf_hours {
+            if !(h.is_finite() && h > 0.0) {
+                return Err(format!(
+                    "mtbf override must be finite and > 0 hours, \
+                     got {h}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Reliability {
+    /// Canonical spec string: the checkpoint cadence, `+elastic` when
+    /// churn is armed ("off", "auto", "every:600+elastic").
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.ckpt)?;
+        if self.elastic {
+            write!(f, "+elastic")?;
+        }
+        Ok(())
+    }
+}
+
 /// Data-parallel gradient/parameter sharding strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Sharding {
@@ -394,6 +532,11 @@ pub struct SimConfig {
     /// Gradient synchronization discipline ([`SyncMode::Sync`] by
     /// default — the historical fully-synchronous route, bit for bit).
     pub sync: SyncMode,
+    /// Failure-aware goodput spec ([`Reliability::OFF`] by default —
+    /// a render-time availability discount that never touches the
+    /// simulated iteration, so the unarmed path is bit-identical to
+    /// the pre-reliability simulator).
+    pub relia: Reliability,
 }
 
 impl SimConfig {
@@ -409,7 +552,8 @@ impl SimConfig {
         SimConfig { arch, cluster, plan, global_batch, micro_batch,
                     seq_len, sharding: Sharding::Fsdp,
                     schedule: Schedule::OneFOneB, prefetch: true,
-                    jitter: Jitter::OFF, sync: SyncMode::Sync }
+                    jitter: Jitter::OFF, sync: SyncMode::Sync,
+                    relia: Reliability::OFF }
     }
 
     pub fn microbatches(&self) -> usize {
@@ -420,6 +564,15 @@ impl SimConfig {
         self.plan.validate(&self.cluster, self.arch.n_layers)?;
         self.jitter.validate()?;
         self.sync.validate()?;
+        self.relia.validate()?;
+        if self.relia.elastic && self.sync.is_sync() {
+            return Err(
+                "--elastic requires bounded-staleness data parallelism \
+                 (--sync async:K): a synchronous job cannot keep \
+                 stepping while a rank rejoins"
+                    .into(),
+            );
+        }
         if self.plan.ep > 1 && !self.arch.is_moe() {
             return Err(format!(
                 "ep={} requires a mixture-of-experts architecture \
@@ -1864,6 +2017,7 @@ mod tests {
             },
             freq_curve: None,
             fabric: crate::hardware::FabricSpec::DEDICATED,
+            reliability: crate::hardware::ReliabilitySpec::DEFAULT,
             derived: false,
         })
         .unwrap()
@@ -2263,6 +2417,86 @@ mod tests {
             .validate()
             .unwrap_err();
         assert!(err.contains("async:0 is synchronous"), "{err}");
+    }
+
+    #[test]
+    fn reliability_spec_display_key_and_validation() {
+        assert_eq!(Reliability::OFF.to_string(), "off");
+        assert!(Reliability::OFF.is_off());
+        assert!(Reliability::OFF.validate().is_ok());
+        assert_eq!(CkptInterval::Auto.to_string(), "auto");
+        assert_eq!(CkptInterval::Every { seconds: 600.0 }.to_string(),
+                   "every:600");
+        let armed = Reliability {
+            ckpt: CkptInterval::Every { seconds: 600.0 },
+            mtbf_hours: Some(20_000.0),
+            elastic: true,
+        };
+        assert_eq!(armed.to_string(), "every:600+elastic");
+        assert!(armed.validate().is_ok());
+        // Canonical-off: an mtbf override or elastic flag without an
+        // armed checkpoint cadence would alias store keys.
+        let sneaky = Reliability {
+            ckpt: CkptInterval::Off,
+            mtbf_hours: Some(20_000.0),
+            elastic: false,
+        };
+        let err = sneaky.validate().unwrap_err();
+        assert!(err.contains("arm --ckpt"), "{err}");
+        let churn = Reliability {
+            ckpt: CkptInterval::Off, mtbf_hours: None, elastic: true };
+        assert!(churn.validate().is_err());
+        // Degenerate parameters are rejected with the field name.
+        let zero = Reliability {
+            ckpt: CkptInterval::Every { seconds: 0.0 },
+            mtbf_hours: None,
+            elastic: false,
+        };
+        assert!(zero.validate().is_err());
+        let bad_mtbf = Reliability {
+            ckpt: CkptInterval::Auto,
+            mtbf_hours: Some(-1.0),
+            elastic: false,
+        };
+        assert!(bad_mtbf.validate().is_err());
+        // Key identity: equal specs share bits, distinct ones differ.
+        assert_eq!(Reliability::OFF.key(), (0, 0, 0, 0));
+        assert_ne!(armed.key(),
+                   Reliability { elastic: false, ..armed }.key());
+        assert_eq!(armed, Reliability { ..armed });
+    }
+
+    #[test]
+    fn elastic_requires_async_sync_mode() {
+        let mut c = weak_cfg(2);
+        c.relia = Reliability {
+            ckpt: CkptInterval::Auto, mtbf_hours: None, elastic: true };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("--sync async"), "{err}");
+        c.sync = SyncMode::Async { max_staleness: 2 };
+        assert!(c.validate().is_ok());
+        // Non-elastic reliability composes with synchronous DP.
+        let mut s = weak_cfg(2);
+        s.relia = Reliability {
+            ckpt: CkptInterval::Auto, mtbf_hours: None, elastic: false };
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn armed_reliability_never_touches_the_simulated_iteration() {
+        // Goodput is a render-time discount: the iteration report must
+        // be bit-identical with and without the armed axis.
+        let base = weak_cfg(2);
+        let mut armed = base;
+        armed.relia = Reliability {
+            ckpt: CkptInterval::Auto,
+            mtbf_hours: Some(10_000.0),
+            elastic: false,
+        };
+        let a = simulate(&base);
+        let b = simulate(&armed);
+        assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+        assert_eq!(a.exposed_comm.to_bits(), b.exposed_comm.to_bits());
     }
 
     #[test]

@@ -21,18 +21,34 @@
 use std::sync::Mutex;
 
 use crate::hardware::HwId;
+use crate::memory;
 use crate::metrics::Metrics;
 use crate::model::{self, TransformerArch};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Jitter, JitterDist, Schedule, Sharding, SyncMode};
+use crate::sim::{CkptInterval, Jitter, JitterDist, Reliability,
+                 Schedule, Sharding, SyncMode};
 use crate::study::{CaseResult, ConfigKey};
 
 /// Bump [`SCHEMA`] whenever the record layout changes; the store
-/// refuses files whose header hash differs instead of misreading them.
-/// v3 (PR 9) widens the arch to its MoE fields
-/// (n_experts/top_k/capacity), the plan to its expert-parallel degree,
-/// and adds the gradient-sync discipline.
-pub const SCHEMA: &str = "dtsim-store-v3: ConfigKey{arch(name,9xu64),\
+/// refuses files whose header hash differs instead of misreading them
+/// (and `dtsim store migrate` upgrades recognized old generations —
+/// see [`SchemaVersion`]). v4 (PR 10) adds the reliability axis
+/// (checkpoint cadence, MTBF override, elastic membership) to the key;
+/// the result payload is unchanged from v2, which is what makes
+/// migration byte-verbatim on the result side.
+pub const SCHEMA: &str = "dtsim-store-v4: ConfigKey{arch(name,9xu64),\
+    hw(name,spec_fnv1a64,gpus_per_node),nodes,plan(dp,tp,pp,cp,ep),\
+    global_batch,micro_batch,seq_len,sharding(tag[,group]),\
+    schedule(tag[,v]),prefetch,jitter(tag,param_bits,seed,replicates),\
+    sync(tag,staleness),relia(tag,param_bits,mtbf_bits,elastic)} \
+    CaseResult{metrics(13xf64,world),iter_p50,iter_p95,iter_p99,\
+    mem_per_gpu}";
+
+/// The v3 record schema (PR 9: MoE arch fields, expert-parallel
+/// degree, gradient-sync discipline), kept verbatim so
+/// [`v3_schema_hash`] can recognize old store files for
+/// `dtsim store migrate`.
+const SCHEMA_V3: &str = "dtsim-store-v3: ConfigKey{arch(name,9xu64),\
     hw(name,spec_fnv1a64,gpus_per_node),nodes,plan(dp,tp,pp,cp,ep),\
     global_batch,micro_batch,seq_len,sharding(tag[,group]),\
     schedule(tag[,v]),prefetch,jitter(tag,param_bits,seed,replicates),\
@@ -40,9 +56,8 @@ pub const SCHEMA: &str = "dtsim-store-v3: ConfigKey{arch(name,9xu64),\
     CaseResult{metrics(13xf64,world),iter_p50,iter_p95,iter_p99,\
     mem_per_gpu}";
 
-/// The previous record schema, kept verbatim so [`v2_schema_hash`] can
-/// recognize old store files and refuse them with a migration hint
-/// instead of the generic "layout changed" error.
+/// The v2 record schema, kept verbatim so [`v2_schema_hash`] can
+/// recognize old store files for `dtsim store migrate`.
 const SCHEMA_V2: &str = "dtsim-store-v2: ConfigKey{arch(name,6xu64),\
     hw(name,spec_fnv1a64,gpus_per_node),nodes,plan(dp,tp,pp,cp),\
     global_batch,micro_batch,seq_len,sharding(tag[,group]),\
@@ -53,6 +68,49 @@ const SCHEMA_V2: &str = "dtsim-store-v2: ConfigKey{arch(name,6xu64),\
 /// Header hash a `dtsim-store-v2` file carries.
 pub fn v2_schema_hash() -> u64 {
     fnv1a64(SCHEMA_V2.as_bytes())
+}
+
+/// Header hash a `dtsim-store-v3` file carries.
+pub fn v3_schema_hash() -> u64 {
+    fnv1a64(SCHEMA_V3.as_bytes())
+}
+
+/// On-disk record generations the decoder understands. Old versions
+/// exist only to be read back by `dtsim store migrate`; every write
+/// path emits the current layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchemaVersion {
+    /// Pre-MoE layout: 6-field arch, ep-less plan, no sync axis.
+    V2,
+    /// PR 9 layout: MoE arch fields, expert-parallel degree,
+    /// gradient-sync discipline.
+    V3,
+    /// Current layout: v3 plus the reliability axis.
+    V4,
+}
+
+impl SchemaVersion {
+    /// The generation's on-disk name, as spelled in its schema string.
+    pub fn name(self) -> &'static str {
+        match self {
+            SchemaVersion::V2 => "dtsim-store-v2",
+            SchemaVersion::V3 => "dtsim-store-v3",
+            SchemaVersion::V4 => "dtsim-store-v4",
+        }
+    }
+
+    /// Map a store-header schema hash to the generation it names.
+    pub fn from_hash(hash: u64) -> Option<SchemaVersion> {
+        if hash == schema_hash() {
+            Some(SchemaVersion::V4)
+        } else if hash == v3_schema_hash() {
+            Some(SchemaVersion::V3)
+        } else if hash == v2_schema_hash() {
+            Some(SchemaVersion::V2)
+        } else {
+            None
+        }
+    }
 }
 
 /// FNV-1a, 64-bit: the store's checksum and schema/spec hash. Tiny,
@@ -204,7 +262,8 @@ fn intern_arch_name(name: &str) -> &'static str {
 /// Encode one `(key, case)` pair. `case` must be the result for `key`;
 /// the key's workload axes are stored once and shared on decode.
 pub fn encode_record(key: &ConfigKey, case: &CaseResult) -> Vec<u8> {
-    encode_with(key, case, key.hw.spec().name.as_str(), spec_hash(key.hw))
+    encode_with(key, case, key.hw.spec().name.as_str(), spec_hash(key.hw),
+                SchemaVersion::V4)
 }
 
 /// Test seam: encode under an arbitrary hardware name / spec hash, to
@@ -216,7 +275,21 @@ pub(crate) fn encode_with_hw(
     hw_name: &str,
     hash: u64,
 ) -> Vec<u8> {
-    encode_with(key, case, hw_name, hash)
+    encode_with(key, case, hw_name, hash, SchemaVersion::V4)
+}
+
+/// Test seam: encode in an old layout, to fabricate the store files
+/// `dtsim store migrate` upgrades. Axes the generation predates
+/// (MoE fields, ep, sync, reliability) are simply not written — the
+/// caller's key should carry their canonical defaults.
+#[cfg(test)]
+pub(crate) fn encode_record_versioned(
+    key: &ConfigKey,
+    case: &CaseResult,
+    version: SchemaVersion,
+) -> Vec<u8> {
+    encode_with(key, case, key.hw.spec().name.as_str(), spec_hash(key.hw),
+                version)
 }
 
 fn encode_with(
@@ -224,6 +297,7 @@ fn encode_with(
     case: &CaseResult,
     hw_name: &str,
     hash: u64,
+    version: SchemaVersion,
 ) -> Vec<u8> {
     let mut w = Writer::new();
     let a = &key.arch;
@@ -234,9 +308,11 @@ fn encode_with(
     w.usize(a.n_kv_heads);
     w.usize(a.d_ff);
     w.usize(a.vocab);
-    w.usize(a.n_experts);
-    w.usize(a.moe_top_k);
-    w.usize(a.capacity_pct);
+    if version != SchemaVersion::V2 {
+        w.usize(a.n_experts);
+        w.usize(a.moe_top_k);
+        w.usize(a.capacity_pct);
+    }
     w.str(hw_name);
     w.u64(hash);
     w.usize(key.gpus_per_node);
@@ -245,7 +321,9 @@ fn encode_with(
     w.usize(key.plan.tp);
     w.usize(key.plan.pp);
     w.usize(key.plan.cp);
-    w.usize(key.plan.ep);
+    if version != SchemaVersion::V2 {
+        w.usize(key.plan.ep);
+    }
     w.usize(key.global_batch);
     w.usize(key.micro_batch);
     w.usize(key.seq_len);
@@ -277,9 +355,22 @@ fn encode_with(
     // Sync discipline: the canonical (tag, staleness) identity shared
     // with SyncMode's Eq/Hash — an async:4 record never aliases a sync
     // one.
-    let (stag, staleness) = key.sync.key();
-    w.u8(stag);
-    w.u64(staleness as u64);
+    if version != SchemaVersion::V2 {
+        let (stag, staleness) = key.sync.key();
+        w.u8(stag);
+        w.u64(staleness as u64);
+    }
+    // Reliability axis: the canonical (ckpt tag, ckpt bits, mtbf bits,
+    // elastic) identity shared with Reliability's Eq/Hash — a goodput
+    // table under one cadence/MTBF/membership mode never answers for
+    // another.
+    if version == SchemaVersion::V4 {
+        let (rtag, rparam, rmtbf, relastic) = key.relia.key();
+        w.u8(rtag);
+        w.u64(rparam);
+        w.u64(rmtbf);
+        w.u8(relastic);
+    }
     let m = &case.metrics;
     w.f64(m.iter_time);
     w.f64(m.global_wps);
@@ -302,9 +393,24 @@ fn encode_with(
     w.buf
 }
 
-/// Decode one record payload back into a `(key, case)` pair.
+/// Decode one current-layout record payload back into a `(key, case)`
+/// pair.
 pub fn decode_record(
     bytes: &[u8],
+) -> Result<(ConfigKey, CaseResult), DecodeError> {
+    decode_record_versioned(bytes, SchemaVersion::V4)
+}
+
+/// Decode a record written under any recognized schema generation.
+/// Axes a generation predates decode to their canonical defaults —
+/// dense arch fields, `ep = 1`, `SyncMode::Sync`,
+/// [`Reliability::OFF`] — exactly the semantics the old write path
+/// implied, so `dtsim store migrate` can re-encode with
+/// [`encode_record`] and produce a current-layout record whose result
+/// payload is byte-verbatim the old one.
+pub fn decode_record_versioned(
+    bytes: &[u8],
+    version: SchemaVersion,
 ) -> Result<(ConfigKey, CaseResult), DecodeError> {
     let mut r = Reader::new(bytes);
     let arch_name = r.str()?.to_string();
@@ -314,9 +420,12 @@ pub fn decode_record(
     let n_kv_heads = r.usize()?;
     let d_ff = r.usize()?;
     let vocab = r.usize()?;
-    let n_experts = r.usize()?;
-    let moe_top_k = r.usize()?;
-    let capacity_pct = r.usize()?;
+    let (n_experts, moe_top_k, capacity_pct) =
+        if version == SchemaVersion::V2 {
+            (1, 1, 100)
+        } else {
+            (r.usize()?, r.usize()?, r.usize()?)
+        };
     let arch = match model::by_name(&arch_name) {
         Some(p)
             if p.n_layers == n_layers
@@ -363,7 +472,11 @@ pub fn decode_record(
 
     let nodes = r.usize()?;
     let plan = ParallelPlan::new(r.usize()?, r.usize()?, r.usize()?, r.usize()?);
-    let plan = plan.with_ep(r.usize()?);
+    let plan = if version == SchemaVersion::V2 {
+        plan // pre-MoE records have no expert-parallel degree (ep = 1)
+    } else {
+        plan.with_ep(r.usize()?)
+    };
     let global_batch = r.usize()?;
     let micro_batch = r.usize()?;
     let seq_len = r.usize()?;
@@ -400,13 +513,62 @@ pub fn decode_record(
         replicates: u32::try_from(jreps)
             .map_err(|_| DecodeError::Malformed("replicate overflow"))?,
     };
-    let stag = r.u8()?;
-    let staleness = u32::try_from(r.u64()?)
-        .map_err(|_| DecodeError::Malformed("staleness overflow"))?;
-    let sync = match (stag, staleness) {
-        (0, 0) => SyncMode::Sync,
-        (1, s) if s >= 1 => SyncMode::Async { max_staleness: s },
-        _ => return Err(DecodeError::Malformed("non-canonical sync mode")),
+    let sync = if version == SchemaVersion::V2 {
+        SyncMode::Sync // pre-async records ran the synchronous path
+    } else {
+        let stag = r.u8()?;
+        let staleness = u32::try_from(r.u64()?)
+            .map_err(|_| DecodeError::Malformed("staleness overflow"))?;
+        match (stag, staleness) {
+            (0, 0) => SyncMode::Sync,
+            (1, s) if s >= 1 => SyncMode::Async { max_staleness: s },
+            _ => {
+                return Err(DecodeError::Malformed(
+                    "non-canonical sync mode"))
+            }
+        }
+    };
+    let relia = if version == SchemaVersion::V4 {
+        let rtag = r.u8()?;
+        let rparam = r.u64()?;
+        let rmtbf = r.u64()?;
+        let relastic = r.u8()?;
+        let ckpt = match (rtag, rparam) {
+            (0, 0) => CkptInterval::Off,
+            (1, 0) => CkptInterval::Auto,
+            (2, bits) => {
+                CkptInterval::Every { seconds: f64::from_bits(bits) }
+            }
+            _ => {
+                return Err(DecodeError::Malformed(
+                    "non-canonical ckpt cadence"))
+            }
+        };
+        let relia = Reliability {
+            ckpt,
+            mtbf_hours: if rmtbf == 0 {
+                None
+            } else {
+                Some(f64::from_bits(rmtbf))
+            },
+            elastic: match relastic {
+                0 => false,
+                1 => true,
+                _ => {
+                    return Err(DecodeError::Malformed(
+                        "bad elastic flag"))
+                }
+            },
+        };
+        // Canonical-off enforcement (and range checks): the key axis
+        // admits exactly the specs Reliability::validate admits, so
+        // a record can never alias the unarmed default.
+        relia.validate().map_err(|_| {
+            DecodeError::Malformed("non-canonical reliability spec")
+        })?;
+        relia
+    } else {
+        Reliability::OFF // pre-reliability records ran failure-free
     };
     let metrics = Metrics {
         iter_time: r.f64()?,
@@ -444,6 +606,7 @@ pub fn decode_record(
         prefetch,
         jitter,
         sync,
+        relia,
     };
     let case = CaseResult {
         arch: key.arch.name,
@@ -456,6 +619,12 @@ pub fn decode_record(
         sharding,
         schedule,
         sync,
+        relia,
+        // Derived, never serialized: a pure function of key-side data,
+        // so the recomputed value is identical to the one the writing
+        // process computed.
+        ckpt_bytes: memory::ckpt_bytes_per_gpu(
+            &key.arch, &key.plan, key.sharding),
         metrics,
         iter_p50,
         iter_p95,
@@ -492,6 +661,14 @@ pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
     // Armed sync axis so the round-trip covers the (tag, staleness)
     // encoding too.
     cfg.sync = crate::sim::SyncMode::Async { max_staleness: 3 };
+    // Armed reliability axis with awkward values (non-terminating
+    // interval, MTBF override, elastic churn) so the round-trip covers
+    // the (tag, param, mtbf, elastic) encoding too.
+    cfg.relia = Reliability {
+        ckpt: CkptInterval::Every { seconds: 1800.0 + 1.0 / 7.0 },
+        mtbf_hours: Some(30_000.5),
+        elastic: true,
+    };
     let key = ConfigKey::of(&cfg);
     let case = CaseResult {
         arch: cfg.arch.name,
@@ -504,6 +681,9 @@ pub(crate) fn sample_pair() -> (ConfigKey, CaseResult) {
         sharding: key.sharding,
         schedule: key.schedule,
         sync: key.sync,
+        relia: key.relia,
+        ckpt_bytes: memory::ckpt_bytes_per_gpu(
+            &key.arch, &key.plan, key.sharding),
         metrics: Metrics {
             iter_time: 1.0 / 3.0,
             global_wps: 1.23456789e5,
@@ -646,12 +826,99 @@ mod tests {
     }
 
     #[test]
-    fn v2_hash_is_stable_and_differs_from_v3() {
-        // The migration refusal keys off this constant; if it drifts,
-        // old files would get the generic schema error instead of the
-        // pointed one.
+    fn schema_generations_hash_distinctly_and_resolve() {
+        // `store migrate` keys off these constants; if one drifts, old
+        // files would get the generic schema error instead of the
+        // upgrade path.
         assert_ne!(v2_schema_hash(), schema_hash());
-        assert!(SCHEMA.starts_with("dtsim-store-v3"));
+        assert_ne!(v3_schema_hash(), schema_hash());
+        assert_ne!(v2_schema_hash(), v3_schema_hash());
+        assert!(SCHEMA.starts_with("dtsim-store-v4"));
+        assert_eq!(SchemaVersion::from_hash(schema_hash()),
+                   Some(SchemaVersion::V4));
+        assert_eq!(SchemaVersion::from_hash(v3_schema_hash()),
+                   Some(SchemaVersion::V3));
+        assert_eq!(SchemaVersion::from_hash(v2_schema_hash()),
+                   Some(SchemaVersion::V2));
+        assert_eq!(SchemaVersion::from_hash(0xDEAD), None);
+    }
+
+    #[test]
+    fn reliability_axis_round_trips_and_never_aliases() {
+        // The armed sample pair carries every:~1800 + mtbf + elastic.
+        let (key, case) = sample();
+        assert!(key.relia.elastic);
+        let bytes = encode_record(&key, &case);
+        let (key2, case2) = decode_record(&bytes).unwrap();
+        assert_eq!(key2.relia, key.relia);
+        assert_eq!(case2.relia, case.relia);
+        assert_eq!(case2.ckpt_bytes.to_bits(), case.ckpt_bytes.to_bits(),
+                   "derived checkpoint bytes must recompute identically");
+        // A different cadence, MTBF override, or membership mode is a
+        // different record.
+        let mut auto = key;
+        auto.relia.ckpt = CkptInterval::Auto;
+        assert_ne!(encode_record(&auto, &case), bytes);
+        let mut fleet = key;
+        fleet.relia.mtbf_hours = Some(10_000.0);
+        assert_ne!(encode_record(&fleet, &case), bytes);
+        let mut gang = key;
+        gang.relia.elastic = false;
+        assert_ne!(encode_record(&gang, &case), bytes);
+        // Non-canonical off specs are malformed, not silently aliased:
+        // a record claiming ckpt=off with a dangling mtbf override.
+        let mut w_bad = encode_record(&gang, &case);
+        // relia sits 18 bytes before the 144-byte result tail.
+        let r0 = w_bad.len() - 144 - 18;
+        w_bad[r0] = 0; // ckpt tag -> Off
+        for b in &mut w_bad[r0 + 1..r0 + 9] {
+            *b = 0; // ckpt param bits -> 0
+        }
+        assert!(matches!(decode_record(&w_bad),
+                         Err(DecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn old_generations_decode_with_canonical_defaults() {
+        // Fabricate v3/v2-layout payloads for a key whose extra axes
+        // are at their defaults (old files can only carry defaults),
+        // then check the versioned decoder upgrades them losslessly.
+        let (key4, case4) = sample();
+        let mut key = key4;
+        key.relia = Reliability::OFF;
+        let mut case = case4.clone();
+        case.relia = Reliability::OFF;
+        let v3 = encode_record_versioned(
+            &key, &case, SchemaVersion::V3);
+        let (k3, c3) =
+            decode_record_versioned(&v3, SchemaVersion::V3).unwrap();
+        assert_eq!(k3, key);
+        assert!(k3.relia.is_off());
+        assert_eq!(c3.metrics.global_wps.to_bits(),
+                   case.metrics.global_wps.to_bits());
+        // Re-encoding the upgraded pair appends exactly the canonical
+        // relia bytes; the result tail is byte-verbatim.
+        let v4 = encode_record(&k3, &c3);
+        assert_eq!(&v4[..v4.len() - 144 - 18], &v3[..v3.len() - 144]);
+        assert_eq!(&v4[v4.len() - 144..], &v3[v3.len() - 144..]);
+
+        // v2: additionally no MoE fields, no ep, no sync.
+        key.sync = SyncMode::Sync;
+        case.sync = SyncMode::Sync;
+        let v2 = encode_record_versioned(
+            &key, &case, SchemaVersion::V2);
+        assert!(v2.len() < v3.len());
+        let (k2, c2) =
+            decode_record_versioned(&v2, SchemaVersion::V2).unwrap();
+        assert_eq!(k2, key);
+        assert_eq!(k2.plan.ep, 1);
+        assert_eq!(k2.sync, SyncMode::Sync);
+        assert!(k2.relia.is_off());
+        assert_eq!(c2.iter_p95.to_bits(), case.iter_p95.to_bits());
+        // The v2 result tail survives byte-verbatim in the re-encode.
+        let v4_from_v2 = encode_record(&k2, &c2);
+        assert_eq!(&v4_from_v2[v4_from_v2.len() - 144..],
+                   &v2[v2.len() - 144..]);
     }
 
     #[test]

@@ -26,8 +26,10 @@
 //! Operational companions on the same format: [`verify`] (read-only
 //! scan + recovery report, for `dtsim store verify`), [`compact`]
 //! (rewrite dropping superseded duplicates and truncated garbage,
-//! answers bitwise-unchanged), and [`StoreLock`] (advisory
-//! single-writer `PATH.lock` so two servers can't interleave appends).
+//! answers bitwise-unchanged), [`migrate`] (decode an old-generation
+//! file and re-encode it under the current schema, result payloads
+//! byte-verbatim), and [`StoreLock`] (advisory single-writer
+//! `PATH.lock` so two servers can't interleave appends).
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -119,22 +121,23 @@ fn scan(path: &Path, data: &[u8]) -> Result<Scan, String> {
             ));
         }
         let schema = u64::from_le_bytes(data[8..16].try_into().unwrap());
-        if schema == codec::v2_schema_hash() {
-            // An old store is refused with a migration path, never
-            // misread or overwritten: results are deterministic, so
-            // re-running the grids into a fresh store reproduces every
-            // record bit for bit.
-            return Err(format!(
-                "{}: this is a dtsim-store-v2 file; this build reads \
-                 dtsim-store-v3 (the key grew MoE/expert-parallel and \
-                 sync-mode axes). The file was left untouched — point \
-                 --store at a fresh path and re-run the grids (results \
-                 are deterministic and will reproduce bitwise), or \
-                 read it with a pre-v3 dtsim",
-                path.display()
-            ));
-        }
         if schema != codec::schema_hash() {
+            // A recognized old generation is refused with an upgrade
+            // path, never misread or overwritten: `store migrate`
+            // decodes the old layout and re-encodes under the current
+            // one, carrying every result payload bit for bit.
+            if let Some(found) = codec::SchemaVersion::from_hash(schema) {
+                return Err(format!(
+                    "{p}: this is a {old} file; this build reads \
+                     {cur}. The file was left untouched — run `dtsim \
+                     store migrate {p} NEW.dtstore` to upgrade it \
+                     (result payloads survive bit for bit), then point \
+                     --store at the new path",
+                    p = path.display(),
+                    old = found.name(),
+                    cur = codec::SchemaVersion::V4.name()
+                ));
+            }
             return Err(format!(
                 "{}: record schema hash {schema:#018x} does not \
                  match this build's {:#018x} — the ConfigKey layout \
@@ -249,9 +252,164 @@ pub fn compact<P: AsRef<Path>>(path: P) -> Result<CompactReport, String> {
     let tmp = PathBuf::from(tmp_os);
     std::fs::write(&tmp, &out)
         .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    if crate::fault::point("store.compact.stall") {
+        // Chaos: hold the window between the fully written temp file
+        // and the atomic rename open, so an external kill -9 lands
+        // exactly there. The original store is still in place — a
+        // reopen must recover it bitwise and ignore the orphan temp.
+        eprintln!(
+            "fault store.compact.stall: stalling before rename of {}",
+            tmp.display()
+        );
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
     std::fs::rename(&tmp, path).map_err(|e| {
         format!("rename {} -> {}: {e}", tmp.display(), path.display())
     })?;
+    Ok(report)
+}
+
+/// What [`migrate`] did to produce a current-generation store file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrateReport {
+    /// Generation of the input file.
+    pub from: codec::SchemaVersion,
+    /// Records decoded from the old generation and re-encoded under
+    /// the current schema. Order and duplicates are preserved 1:1, so
+    /// last-wins semantics carry over unchanged.
+    pub migrated: usize,
+    /// Intact old records dropped because this build doesn't know
+    /// their hardware: an old layout can't be copied verbatim into
+    /// the new one, and re-encoding needs the spec.
+    pub dropped_stale: usize,
+    /// Structurally corrupt tail bytes in the old file that were not
+    /// carried over (the old file itself is never modified).
+    pub truncated_bytes: u64,
+}
+
+/// Upgrade an old-generation store at `old` into a fresh
+/// current-generation file at `new`. Each record is decoded with its
+/// generation's layout and re-encoded under the current one: axes the
+/// old key couldn't express take the same canonical defaults the
+/// decoder gives them (dense arch, `ep = 1`, synchronous DP,
+/// reliability off), and the all-f64 result payload survives **bit
+/// for bit**. The old file is read-only throughout; `new` must not
+/// already exist.
+pub fn migrate<P: AsRef<Path>, Q: AsRef<Path>>(
+    old: P,
+    new: Q,
+) -> Result<MigrateReport, String> {
+    let old = old.as_ref();
+    let new = new.as_ref();
+    let data = std::fs::read(old)
+        .map_err(|e| format!("read {}: {e}", old.display()))?;
+    if data.len() < HEADER_LEN as usize {
+        return Err(format!(
+            "{}: too short to be a dtsim result store",
+            old.display()
+        ));
+    }
+    if &data[0..4] != MAGIC {
+        return Err(format!(
+            "{} is not a dtsim result store (bad magic)",
+            old.display()
+        ));
+    }
+    let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(format!(
+            "{}: store version {version}, this build reads version \
+             {VERSION}",
+            old.display()
+        ));
+    }
+    let schema = u64::from_le_bytes(data[8..16].try_into().unwrap());
+    let from = match codec::SchemaVersion::from_hash(schema) {
+        None => {
+            return Err(format!(
+                "{}: schema hash {schema:#018x} matches no store \
+                 generation this build knows; nothing to migrate",
+                old.display()
+            ));
+        }
+        Some(codec::SchemaVersion::V4) => {
+            return Err(format!(
+                "{}: already a {} file — this build reads it \
+                 directly; nothing to migrate",
+                old.display(),
+                codec::SchemaVersion::V4.name()
+            ));
+        }
+        Some(v) => v,
+    };
+
+    let mut report = MigrateReport {
+        from,
+        migrated: 0,
+        dropped_stale: 0,
+        truncated_bytes: 0,
+    };
+    let mut out = Vec::with_capacity(data.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&codec::schema_hash().to_le_bytes());
+
+    // Same framing walk as `scan`, but decoded under the *old*
+    // generation's layout and re-framed record by record (new layouts
+    // are longer, so lengths and checksums are recomputed).
+    let mut pos = HEADER_LEN as usize;
+    let mut valid_end = pos;
+    while pos + RECORD_PREFIX <= data.len() {
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap())
+            as usize;
+        let payload_start = pos + RECORD_PREFIX;
+        let Some(payload_end) = payload_start.checked_add(len) else {
+            break;
+        };
+        if payload_end > data.len() {
+            break;
+        }
+        let checksum =
+            u64::from_le_bytes(data[pos + 4..pos + 12].try_into().unwrap());
+        let payload = &data[payload_start..payload_end];
+        if codec::fnv1a64(payload) != checksum {
+            break;
+        }
+        match codec::decode_record_versioned(payload, from) {
+            Ok((key, case)) => {
+                let upgraded = codec::encode_record(&key, &case);
+                out.extend_from_slice(
+                    &(upgraded.len() as u32).to_le_bytes(),
+                );
+                out.extend_from_slice(
+                    &codec::fnv1a64(&upgraded).to_le_bytes(),
+                );
+                out.extend_from_slice(&upgraded);
+                report.migrated += 1;
+            }
+            Err(DecodeError::StaleHardware(_)) => {
+                report.dropped_stale += 1;
+            }
+            Err(DecodeError::Malformed(_)) => break,
+        }
+        valid_end = payload_end;
+        pos = payload_end;
+    }
+    report.truncated_bytes = data.len() as u64 - valid_end as u64;
+
+    let mut f = OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(new)
+        .map_err(|e| {
+            format!(
+                "create {}: {e} (migrate never overwrites — pick a \
+                 fresh output path)",
+                new.display()
+            )
+        })?;
+    f.write_all(&out)
+        .map_err(|e| format!("write {}: {e}", new.display()))?;
     Ok(report)
 }
 
@@ -644,22 +802,105 @@ mod tests {
     }
 
     #[test]
-    fn v2_store_refused_with_migration_hint() {
-        let path = tmp("v2.dtstore");
-        let mut header = Vec::new();
-        header.extend_from_slice(MAGIC);
-        header.extend_from_slice(&VERSION.to_le_bytes());
-        header.extend_from_slice(
-            &codec::v2_schema_hash().to_le_bytes(),
-        );
-        std::fs::write(&path, &header).unwrap();
-        let before = std::fs::read(&path).unwrap();
-        let err = LogStore::open(&path).unwrap_err();
-        assert!(err.contains("dtsim-store-v2"), "{err}");
-        assert!(err.contains("dtsim-store-v3"), "{err}");
-        assert!(err.contains("fresh"), "{err}");
-        // Refusal is read-only: the old file survives byte-for-byte.
-        assert_eq!(std::fs::read(&path).unwrap(), before);
+    fn old_generation_stores_refused_with_migrate_hint() {
+        for (hash, name) in [
+            (codec::v2_schema_hash(), "dtsim-store-v2"),
+            (codec::v3_schema_hash(), "dtsim-store-v3"),
+        ] {
+            let path = tmp(&format!("refuse_{name}.dtstore"));
+            let mut header = Vec::new();
+            header.extend_from_slice(MAGIC);
+            header.extend_from_slice(&VERSION.to_le_bytes());
+            header.extend_from_slice(&hash.to_le_bytes());
+            std::fs::write(&path, &header).unwrap();
+            let before = std::fs::read(&path).unwrap();
+            let err = LogStore::open(&path).unwrap_err();
+            assert!(err.contains(name), "{err}");
+            assert!(err.contains("dtsim-store-v4"), "{err}");
+            assert!(err.contains("store migrate"), "{err}");
+            // Refusal is read-only: the old file survives
+            // byte-for-byte.
+            assert_eq!(std::fs::read(&path).unwrap(), before);
+        }
+    }
+
+    #[test]
+    fn migrate_upgrades_old_generations_with_verbatim_results() {
+        use crate::store::codec::{
+            encode_record_versioned, SchemaVersion,
+        };
+        for (version, hash) in [
+            (SchemaVersion::V2, codec::v2_schema_hash()),
+            (SchemaVersion::V3, codec::v3_schema_hash()),
+        ] {
+            let name = version.name();
+            let old_path = tmp(&format!("migrate_{name}.dtstore"));
+            let new_path = tmp(&format!("migrate_{name}_new.dtstore"));
+
+            // Two records (the second a same-key overwrite) plus a
+            // torn tail, written in the old generation's layout.
+            let (key, case) = sample_pair();
+            let mut newer = case.clone();
+            newer.metrics.global_wps = 9.0e9;
+            let mut old_bytes = Vec::new();
+            old_bytes.extend_from_slice(MAGIC);
+            old_bytes.extend_from_slice(&VERSION.to_le_bytes());
+            old_bytes.extend_from_slice(&hash.to_le_bytes());
+            for c in [&case, &newer] {
+                let payload = encode_record_versioned(&key, c, version);
+                old_bytes.extend_from_slice(
+                    &(payload.len() as u32).to_le_bytes(),
+                );
+                old_bytes.extend_from_slice(
+                    &codec::fnv1a64(&payload).to_le_bytes(),
+                );
+                old_bytes.extend_from_slice(&payload);
+            }
+            old_bytes.extend_from_slice(&[0xab; 7]); // torn tail
+            std::fs::write(&old_path, &old_bytes).unwrap();
+
+            // What the old layout actually stored (axes it predates
+            // collapse to canonical defaults on decode).
+            let first = encode_record_versioned(&key, &case, version);
+            let (ekey, ecase) =
+                codec::decode_record_versioned(&first, version)
+                    .unwrap();
+
+            let report = migrate(&old_path, &new_path).unwrap();
+            assert_eq!(report.from, version);
+            assert_eq!(report.migrated, 2);
+            assert_eq!(report.dropped_stale, 0);
+            assert_eq!(report.truncated_bytes, 7);
+            // The input is read-only.
+            assert_eq!(std::fs::read(&old_path).unwrap(), old_bytes);
+
+            let (store, rep) = LogStore::open(&new_path).unwrap();
+            assert_eq!(rep.recovered, 2);
+            assert_eq!(rep.truncated_bytes, 0);
+            assert_eq!(store.stats().entries, 1);
+            let back = store.get(&ekey).expect("migrated key resolves");
+            // Last-wins survives migration; every result f64 is
+            // bit-identical to what the old file held.
+            assert_eq!(
+                back.metrics.global_wps.to_bits(),
+                newer.metrics.global_wps.to_bits()
+            );
+            assert_eq!(
+                back.metrics.iter_time.to_bits(),
+                ecase.metrics.iter_time.to_bits()
+            );
+            assert_eq!(
+                back.mem_per_gpu.to_bits(),
+                ecase.mem_per_gpu.to_bits()
+            );
+
+            // Guard rails: never overwrite, never "migrate" current.
+            let err = migrate(&old_path, &new_path).unwrap_err();
+            assert!(err.contains("never overwrites"), "{err}");
+            let err = migrate(&new_path, tmp("migrate_cur.dtstore"))
+                .unwrap_err();
+            assert!(err.contains("nothing to migrate"), "{err}");
+        }
     }
 
     #[test]

@@ -33,7 +33,8 @@ use crate::study::{CaseResult, ConfigKey};
 
 pub use codec::DecodeError;
 pub use log::{
-    compact, verify, CompactReport, LogStore, RecoveryReport, StoreLock,
+    compact, migrate, verify, CompactReport, LogStore, MigrateReport,
+    RecoveryReport, StoreLock,
 };
 
 /// Counters every store keeps. `bytes` is the store's resident size:

@@ -13,7 +13,8 @@ use crate::config::RunConfig;
 use crate::hardware::HwId;
 use crate::model::TransformerArch;
 use crate::parallelism::ParallelPlan;
-use crate::sim::{Jitter, Schedule, Sharding, SimConfig, SyncMode};
+use crate::sim::{CkptInterval, Jitter, Reliability, Schedule, Sharding,
+                 SimConfig, SyncMode};
 use crate::topology::Cluster;
 use crate::util::args::Args;
 
@@ -42,6 +43,34 @@ pub fn parse_arch(s: &str) -> Result<TransformerArch, String> {
 /// Sync-discipline parsing for `--sync sync|async:S`.
 pub fn parse_sync(s: &str) -> Result<SyncMode, String> {
     crate::config::parse_sync(s).map_err(|e| format!("--sync: {e}"))
+}
+
+/// Checkpoint-cadence parsing for `--ckpt off|auto|every:S`.
+pub fn parse_ckpt(s: &str) -> Result<CkptInterval, String> {
+    crate::config::parse_ckpt(s).map_err(|e| format!("--ckpt: {e}"))
+}
+
+/// Parse the shared reliability flags — `--ckpt off|auto|every:S`,
+/// `--mtbf HOURS` (per-GPU override of the hardware spec's figure),
+/// `--elastic` — into a [`Reliability`] spec. Flags left unset keep
+/// the unarmed default; `Reliability::validate` (run by the callers'
+/// config/study validation) rejects `--mtbf`/`--elastic` without an
+/// armed `--ckpt`.
+pub fn reliability_from_args(args: &Args) -> Result<Reliability, String> {
+    let mut r = Reliability::OFF;
+    if let Some(s) = args.get("ckpt") {
+        r.ckpt = parse_ckpt(s)?;
+    }
+    if let Some(s) = args.get("mtbf") {
+        let hours = s.parse::<f64>().map_err(|_| {
+            format!("--mtbf: '{s}' is not an MTBF in hours")
+        })?;
+        r.mtbf_hours = Some(hours);
+    }
+    if args.has("elastic") {
+        r.elastic = true;
+    }
+    Ok(r)
 }
 
 /// Parse the shared stochastic flags — `--jitter lognormal:S|pareto:A`,
@@ -167,6 +196,7 @@ pub fn sim_config_from_args(args: &Args) -> Result<SimConfig, String> {
         cfg.sync = parse_sync(s)?;
     }
     cfg.jitter = jitter_from_args(args)?;
+    cfg.relia = reliability_from_args(args)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -290,6 +320,11 @@ pub fn study_from_args(args: &Args) -> Result<Study, String> {
     }
     let jitter = jitter_from_args(args)?;
     b = b.jitter(jitter.dist).seed(jitter.seed).seeds(jitter.replicates);
+    let relia = reliability_from_args(args)?;
+    b = b.checkpoint(relia.ckpt).elastic(relia.elastic);
+    if let Some(hours) = relia.mtbf_hours {
+        b = b.mtbf_override(hours);
+    }
     b.try_build()
 }
 
@@ -412,6 +447,61 @@ mod tests {
         ))
         .unwrap_err();
         assert!(err.contains("mixture-of-experts"), "{err}");
+    }
+
+    #[test]
+    fn reliability_flags_arm_configs_and_grids() {
+        // Simulate-style: --ckpt + --mtbf land on the SimConfig.
+        let cfg = sim_config_from_args(&parse(
+            "simulate --nodes 2 --ckpt every:1800 --mtbf 30000",
+        ))
+        .unwrap();
+        assert_eq!(cfg.relia.ckpt,
+                   CkptInterval::Every { seconds: 1800.0 });
+        assert_eq!(cfg.relia.mtbf_hours, Some(30000.0));
+
+        // Study-style: the same flags arm every grid point; --elastic
+        // rides on an all-async sync axis.
+        let study = study_from_args(&parse(
+            "study --grid --nodes 2 --gbs 48 --ckpt auto --elastic \
+             --sync async:4",
+        ))
+        .unwrap();
+        assert!(study.has_reliability());
+        assert!(study
+            .expand()
+            .iter()
+            .all(|p| p.cfg.relia == study.reliability()));
+
+        // --mtbf/--elastic without --ckpt is the documented arming
+        // error, on both paths.
+        let err = sim_config_from_args(&parse("simulate --mtbf 100"))
+            .unwrap_err();
+        assert!(err.contains("arm --ckpt"), "{err}");
+        let err = study_from_args(&parse(
+            "study --grid --nodes 2 --elastic --sync async:4",
+        ))
+        .unwrap_err();
+        assert!(err.contains("arm --ckpt"), "{err}");
+        // Elastic without async is rejected too.
+        let err = sim_config_from_args(&parse(
+            "simulate --nodes 2 --ckpt auto --elastic",
+        ))
+        .unwrap_err();
+        assert!(err.contains("--sync async"), "{err}");
+
+        // Malformed values name the flag and enumerate accepted forms.
+        let err = sim_config_from_args(&parse(
+            "simulate --ckpt hourly",
+        ))
+        .unwrap_err();
+        assert!(err.starts_with("--ckpt: "), "{err}");
+        assert!(err.contains("off, auto, every:S"), "{err}");
+        let err = sim_config_from_args(&parse(
+            "simulate --ckpt auto --mtbf often",
+        ))
+        .unwrap_err();
+        assert!(err.starts_with("--mtbf: "), "{err}");
     }
 
     #[test]

@@ -60,7 +60,8 @@ use crate::hardware::HwId;
 use crate::memory;
 use crate::model::TransformerArch;
 use crate::parallelism::{enumerate_plans, ParallelPlan};
-use crate::sim::{Jitter, JitterDist, Schedule, Sharding, SimConfig, SyncMode};
+use crate::sim::{CkptInterval, Jitter, JitterDist, Reliability, Schedule,
+                 Sharding, SimConfig, SyncMode};
 use crate::topology::Cluster;
 
 /// How the parallel-plan axis expands for each (generation, nodes)
@@ -279,6 +280,11 @@ pub struct ConfigKey {
     /// answered from a synchronous run (or vice versa) would be
     /// silently wrong. Note `plan.ep` rides along inside `plan`.
     pub(crate) sync: SyncMode,
+    /// The failure/checkpoint axis. Part of the key so the store never
+    /// conflates reliability assumptions: a goodput table under one
+    /// checkpoint cadence or MTBF answered from another would be
+    /// silently wrong.
+    pub(crate) relia: Reliability,
 }
 
 impl ConfigKey {
@@ -297,6 +303,7 @@ impl ConfigKey {
             prefetch: cfg.prefetch,
             jitter: cfg.jitter,
             sync: cfg.sync,
+            relia: cfg.relia,
         }
     }
 }
@@ -320,6 +327,7 @@ pub struct Study {
     jitter: Jitter,
     eps: Vec<usize>,
     syncs: Vec<SyncMode>,
+    relia: Reliability,
 }
 
 impl Study {
@@ -341,6 +349,7 @@ impl Study {
             jitter: Jitter::OFF,
             eps: vec![1],
             syncs: vec![SyncMode::Sync],
+            relia: Reliability::OFF,
         }
     }
 
@@ -355,6 +364,19 @@ impl Study {
     /// the armed jitter axis drives the percentile columns.
     pub fn has_async(&self) -> bool {
         self.syncs.iter().any(|s| !s.is_sync())
+    }
+
+    /// The study's failure/checkpoint axis ([`Reliability::OFF`]
+    /// unless armed via [`StudyBuilder::checkpoint`]).
+    pub fn reliability(&self) -> Reliability {
+        self.relia
+    }
+
+    /// True when the reliability axis is armed — drives the `ckpt` /
+    /// `goodput_wps` grid columns, mirroring how armed jitter drives
+    /// the percentile columns and async drives the sync columns.
+    pub fn has_reliability(&self) -> bool {
+        !self.relia.is_off()
     }
 
     /// Expand the grid into validated, memory-feasible simulation
@@ -445,6 +467,7 @@ impl Study {
                                 prefetch,
                                 jitter: self.jitter,
                                 sync,
+                                relia: self.relia,
                             };
                             if cfg.validate().is_err() {
                                 continue;
@@ -486,6 +509,7 @@ pub struct StudyBuilder {
     jitter: Jitter,
     eps: Vec<usize>,
     syncs: Vec<SyncMode>,
+    relia: Reliability,
 }
 
 impl StudyBuilder {
@@ -639,6 +663,35 @@ impl StudyBuilder {
         self
     }
 
+    /// Arm the failure/checkpoint axis: every grid point's
+    /// `goodput_wps` discounts raw throughput by the availability
+    /// under this checkpoint cadence ([`CkptInterval::Auto`] is the
+    /// Young–Daly optimum; docs/reliability.md). The simulated
+    /// iteration itself is untouched — like the async staleness
+    /// discount, this is a render-time factor.
+    pub fn checkpoint(mut self, ckpt: CkptInterval) -> Self {
+        self.relia.ckpt = ckpt;
+        self
+    }
+
+    /// Override the per-GPU MTBF (hours) from the hardware spec's
+    /// `mtbf_hours` for every point in the grid. Requires an armed
+    /// [`Self::checkpoint`] axis.
+    pub fn mtbf_override(mut self, hours: f64) -> Self {
+        self.relia.mtbf_hours = Some(hours);
+        self
+    }
+
+    /// Elastic-membership mode: a failed rank shrinks the DP group
+    /// until rejoin instead of gang-restarting the job, so only
+    /// `1/dp` of the cluster pays each failure's rollback + repair.
+    /// Requires an armed [`Self::checkpoint`] axis and a
+    /// bounded-staleness sync axis (`SyncMode::Async`).
+    pub fn elastic(mut self, on: bool) -> Self {
+        self.relia.elastic = on;
+        self
+    }
+
     /// Arm the stochastic network-jitter axis: every grid point is
     /// simulated with per-op slowdown factors drawn from `dist`
     /// (docs/network.md). Combine with [`Self::seed`] /
@@ -718,6 +771,17 @@ impl StudyBuilder {
             sync.validate()
                 .map_err(|e| format!("study '{}': {e}", self.name))?;
         }
+        self.relia
+            .validate()
+            .map_err(|e| format!("study '{}': {e}", self.name))?;
+        if self.relia.elastic && self.syncs.iter().any(|s| s.is_sync()) {
+            // Per-point validation would silently drop the Sync points
+            // (expand skips invalid configs); an elastic study mixing
+            // in Sync modes is a declaration error, not a sparse grid.
+            return Err(format!(
+                "study '{}': --elastic requires every sync-axis entry \
+                 to be bounded-staleness (--sync async:K)", self.name));
+        }
         Ok(Study {
             name: self.name,
             title: self.title,
@@ -735,6 +799,7 @@ impl StudyBuilder {
             jitter: self.jitter,
             eps: self.eps,
             syncs: self.syncs,
+            relia: self.relia,
         })
     }
 }
@@ -934,6 +999,7 @@ mod tests {
             },
             freq_curve: None,
             fabric: crate::hardware::FabricSpec::DEDICATED,
+            reliability: crate::hardware::ReliabilitySpec::DEFAULT,
             derived: false,
         }).unwrap();
         let s = Study::builder("hw-axis")
@@ -1139,5 +1205,108 @@ mod tests {
             .nodes([0])
             .try_build()
             .is_err());
+    }
+
+    #[test]
+    fn reliability_axis_hashes_into_config_key() {
+        // Same store-aliasing discipline as the seed axis: a goodput
+        // table under one checkpoint cadence / MTBF / membership mode
+        // must never answer for another.
+        let grid = |relia: Reliability| {
+            let mut b = Study::builder("relia")
+                .arch(LLAMA_7B)
+                .nodes([1])
+                .batch_per_replica(2)
+                .micro_batches([2])
+                .checkpoint(relia.ckpt)
+                .elastic(relia.elastic);
+            if relia.elastic {
+                b = b.sync_modes([SyncMode::Async { max_staleness: 4 }]);
+            }
+            if let Some(h) = relia.mtbf_hours {
+                b = b.mtbf_override(h);
+            }
+            b.build().expand()
+        };
+        let k = |pts: &[StudyPoint]| ConfigKey::of(&pts[0].cfg);
+        let auto = Reliability {
+            ckpt: CkptInterval::Auto, mtbf_hours: None, elastic: false };
+        let a = k(&grid(auto));
+        assert_eq!(a, k(&grid(auto)));
+        assert_ne!(a, k(&grid(Reliability {
+            ckpt: CkptInterval::Every { seconds: 1800.0 }, ..auto })),
+            "cadences must not alias");
+        assert_ne!(
+            k(&grid(Reliability {
+                ckpt: CkptInterval::Every { seconds: 1800.0 }, ..auto })),
+            k(&grid(Reliability {
+                ckpt: CkptInterval::Every { seconds: 3600.0 }, ..auto })),
+            "intervals must not alias");
+        assert_ne!(a, k(&grid(Reliability {
+            mtbf_hours: Some(10_000.0), ..auto })),
+            "MTBF overrides must not alias");
+        assert_ne!(a, k(&grid(Reliability { elastic: true, ..auto })),
+            "membership modes must not alias");
+        let off = Study::builder("relia-off")
+            .arch(LLAMA_7B)
+            .nodes([1])
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .build()
+            .expand();
+        assert_ne!(a, k(&off), "armed and off must not alias");
+        assert!(off[0].cfg.relia.is_off());
+        assert_eq!(grid(auto)[0].cfg.relia.ckpt, CkptInterval::Auto);
+    }
+
+    #[test]
+    fn builder_rejects_mtbf_or_elastic_without_armed_ckpt() {
+        // Reliability::validate keeps the off spec canonical so store
+        // keys never alias; the builder surfaces that at build time.
+        let err = Study::builder("mtbf-off")
+            .arch(LLAMA_7B)
+            .mtbf_override(30_000.0)
+            .try_build()
+            .unwrap_err();
+        assert!(err.contains("arm --ckpt"), "{err}");
+        assert!(Study::builder("elastic-off")
+            .arch(LLAMA_7B)
+            .sync_modes([SyncMode::Async { max_staleness: 4 }])
+            .elastic(true)
+            .try_build()
+            .is_err());
+        assert!(Study::builder("bad-interval")
+            .arch(LLAMA_7B)
+            .checkpoint(CkptInterval::Every { seconds: 0.0 })
+            .try_build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_elastic_with_sync_axis_entries() {
+        // A per-point skip would silently shrink the grid; the builder
+        // rejects the declaration instead.
+        let err = Study::builder("elastic-sync")
+            .arch(LLAMA_7B)
+            .checkpoint(CkptInterval::Auto)
+            .elastic(true)
+            .sync_modes([SyncMode::Sync,
+                         SyncMode::Async { max_staleness: 4 }])
+            .try_build()
+            .unwrap_err();
+        assert!(err.contains("async"), "{err}");
+        // All-async elastic builds fine and stamps every point.
+        let pts = Study::builder("elastic-ok")
+            .arch(LLAMA_7B)
+            .nodes([1])
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .checkpoint(CkptInterval::Auto)
+            .elastic(true)
+            .sync_modes([SyncMode::Async { max_staleness: 4 }])
+            .build()
+            .expand();
+        assert!(!pts.is_empty());
+        assert!(pts.iter().all(|p| p.cfg.relia.elastic));
     }
 }

@@ -38,8 +38,9 @@ use crate::hardware::HwId;
 use crate::memory;
 use crate::metrics::{self, Metrics};
 use crate::parallelism::ParallelPlan;
-use crate::sim::{self, Schedule, Sharding, SimArena, SimConfig,
-                 SyncMode};
+use crate::reliability;
+use crate::sim::{self, Reliability, Schedule, Sharding, SimArena,
+                 SimConfig, SyncMode};
 use crate::store::{MemStore, ResultStore, StoreStats};
 use crate::util::stats;
 
@@ -62,6 +63,15 @@ pub struct CaseResult {
     /// Gradient-sync discipline the case ran under (feeds the
     /// staleness-discounted effective-throughput column).
     pub sync: SyncMode,
+    /// Failure/checkpoint axis the case was declared under (feeds the
+    /// availability-discounted `goodput_wps` column; copied from the
+    /// config key, never serialized in the result payload).
+    pub relia: Reliability,
+    /// Persistent per-GPU checkpoint footprint (param + optimizer
+    /// shard bytes). A pure function of key-side data
+    /// ([`memory::ckpt_bytes_per_gpu`]), so it is recomputed — not
+    /// stored — wherever a `CaseResult` is rebuilt from its key.
+    pub ckpt_bytes: f64,
     pub metrics: Metrics,
     /// Median iteration time over the point's seeded replicates. When
     /// jitter is off (or the point has a single replicate) every
@@ -81,14 +91,30 @@ impl CaseResult {
     pub fn tokens_per_iter(&self) -> f64 {
         self.global_batch as f64 * self.seq_len as f64
     }
+
+    /// Failure-aware goodput: raw throughput × the availability under
+    /// the case's checkpoint cadence, hardware reliability figures,
+    /// and world size (docs/reliability.md). Exactly `global_wps` when
+    /// the reliability axis is off — the factor is 1.0 bit for bit.
+    pub fn goodput_wps(&self) -> f64 {
+        self.metrics.global_wps
+            * reliability::goodput_factor(
+                &self.relia,
+                &self.hw.spec().reliability,
+                self.metrics.world,
+                self.plan.dp,
+                self.ckpt_bytes,
+            )
+    }
 }
 
 /// Optimization target for [`StudyRunner::best_of_by`] and
-/// [`StudyResult::best_by`]. Both objectives are of the form
-/// `tokens / time` with `time ≥` the comm-free analytic lower bound
-/// (jitter factors are clamped at 1, so a seeded replicate is never
-/// faster than the deterministic run), which keeps the bound-and-prune
-/// throughput bound `tokens / lower_bound` sound for every variant.
+/// [`StudyResult::best_by`]. Every objective is of the form
+/// `factor × tokens / time` with `time ≥` the comm-free analytic lower
+/// bound (jitter factors are clamped at 1, so a seeded replicate is
+/// never faster than the deterministic run) and `factor ≤ 1` (the
+/// availability discount), which keeps the bound-and-prune throughput
+/// bound `tokens / lower_bound` sound for every variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Objective {
     /// Mean throughput: tokens / mean iteration time (the classic
@@ -98,6 +124,14 @@ pub enum Objective {
     /// off every percentile equals the deterministic iteration time,
     /// so this scores bitwise-identically to [`Objective::MeanWps`].
     P95Wps,
+    /// Failure-aware goodput: `global_wps × availability` under the
+    /// study's reliability axis ([`CaseResult::goodput_wps`]). The
+    /// availability factor is in `[0, 1]`, so the raw-throughput prune
+    /// bound stays an upper bound — a discounted candidate can only
+    /// score lower, never higher, than its bound. With the axis off
+    /// the factor is exactly 1.0 and this scores bitwise-identically
+    /// to [`Objective::MeanWps`].
+    GoodputWps,
 }
 
 impl Objective {
@@ -106,6 +140,7 @@ impl Objective {
         match self {
             Objective::MeanWps => case.metrics.global_wps,
             Objective::P95Wps => case.tokens_per_iter() / case.iter_p95,
+            Objective::GoodputWps => case.goodput_wps(),
         }
     }
 }
@@ -165,6 +200,9 @@ fn evaluate_point(p: &StudyPoint, arena: &mut SimArena) -> CaseResult {
         sharding: p.cfg.sharding,
         schedule: p.cfg.schedule,
         sync: p.cfg.sync,
+        relia: p.cfg.relia,
+        ckpt_bytes: memory::ckpt_bytes_per_gpu(
+            &p.cfg.arch, &p.cfg.plan, p.cfg.sharding),
         metrics,
         iter_p50: p50,
         iter_p95: p95,
@@ -981,6 +1019,8 @@ mod tests {
             sharding: Sharding::Fsdp,
             schedule: Schedule::OneFOneB,
             sync: SyncMode::Sync,
+            relia: Reliability::OFF,
+            ckpt_bytes: 1e9,
             metrics: Metrics {
                 iter_time: 1.0,
                 global_wps: wps,
@@ -1467,6 +1507,59 @@ mod tests {
             let (evaluated, requested) = runner.stats();
             assert_eq!(evaluated + runner.pruned_points(), requested,
                        "threads={threads}");
+        }
+    }
+
+    fn goodput_sweep(name: &str) -> Study {
+        use crate::sim::CkptInterval;
+        Study::builder(name)
+            .arch(LLAMA_7B)
+            .nodes([2])
+            .plans(PlanAxis::Sweep { with_cp: false })
+            .global_batches([64])
+            .micro_batch_divisors()
+            .memory_cap(0.94)
+            .checkpoint(CkptInterval::Auto)
+            .mtbf_override(200.0) // harsh fleet: discounts visibly vary
+            .build()
+    }
+
+    #[test]
+    fn goodput_best_of_matches_exhaustive_on_an_armed_grid() {
+        // Winner identity for the availability-discounted objective:
+        // bound-and-prune under GoodputWps must reproduce the
+        // exhaustive sweep's best_by winner — plan, schedule, and
+        // score bits — at every thread count (sound because the
+        // discount only lowers scores below the raw-throughput bound).
+        let study = goodput_sweep("goodput-prune");
+        let full = StudyRunner::sequential().run(&study);
+        let expect = full.best_by(Objective::GoodputWps).unwrap();
+        // The discount is real on this grid: the armed score is
+        // strictly below the raw throughput somewhere.
+        assert!(full.cases.iter().any(
+            |c| c.goodput_wps() < c.metrics.global_wps));
+        for threads in [1usize, 4] {
+            let mut runner = StudyRunner::new(threads);
+            let got =
+                runner.best_of_by(&study, Objective::GoodputWps).unwrap();
+            assert_eq!(got.plan, expect.plan, "threads={threads}");
+            assert_eq!(got.micro_batch, expect.micro_batch);
+            assert_eq!(got.goodput_wps().to_bits(),
+                       expect.goodput_wps().to_bits());
+            let (evaluated, requested) = runner.stats();
+            assert_eq!(evaluated + runner.pruned_points(), requested,
+                       "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn goodput_objective_is_mean_wps_when_axis_off() {
+        // Unarmed grids score bitwise-identically under GoodputWps and
+        // MeanWps — the discount factor is exactly 1.0.
+        let full = StudyRunner::sequential().run(&small_sweep("g-off"));
+        for c in &full.cases {
+            assert_eq!(Objective::GoodputWps.score(c).to_bits(),
+                       Objective::MeanWps.score(c).to_bits());
         }
     }
 

@@ -171,6 +171,14 @@ pub enum Column {
     /// bit for bit under [`crate::sim::SyncMode::Sync`]
     /// (`docs/moe.md` §Staleness).
     EffectiveWps,
+    /// Reliability-axis spec string ("auto", "every:1800",
+    /// "auto+elastic", ...) under a `ckpt` header.
+    CkptKind,
+    /// Failure-aware goodput: `global_wps × availability` under the
+    /// case's checkpoint cadence and hardware reliability figures —
+    /// equals `global_wps` bit for bit when the axis is off
+    /// (`docs/reliability.md`).
+    GoodputWps,
 }
 
 impl Column {
@@ -204,6 +212,8 @@ impl Column {
             Column::P95Wps => "p95_wps",
             Column::SyncModeKind => "sync",
             Column::EffectiveWps => "effective_wps",
+            Column::CkptKind => "ckpt",
+            Column::GoodputWps => "goodput_wps",
         }
     }
 
@@ -241,6 +251,8 @@ impl Column {
             Column::EffectiveWps => {
                 f0(m.global_wps / c.sync.staleness_discount())
             }
+            Column::CkptKind => c.relia.to_string(),
+            Column::GoodputWps => f0(c.goodput_wps()),
         }
     }
 }
@@ -249,11 +261,14 @@ impl Column {
 /// and serve mode's `study-grid` so both render byte-identical CSV for
 /// the same flags. An unarmed, fully-synchronous grid keeps the
 /// historical column set untouched (golden-figure byte stability); a
-/// seeded grid appends the iteration-time percentile columns, and a
-/// grid with any async point appends the sync-mode and
-/// staleness-discounted effective-throughput columns after those —
-/// always extending, never reordering.
-pub fn grid_columns(jittered: bool, asynced: bool) -> Vec<Column> {
+/// seeded grid appends the iteration-time percentile columns, a grid
+/// with any async point appends the sync-mode and
+/// staleness-discounted effective-throughput columns after those, and
+/// a grid with an armed reliability axis appends the checkpoint-spec
+/// and goodput columns last — always extending, never reordering.
+pub fn grid_columns(
+    jittered: bool, asynced: bool, reliable: bool,
+) -> Vec<Column> {
     let mut cols = vec![
         Column::Arch,
         Column::Gen,
@@ -281,6 +296,9 @@ pub fn grid_columns(jittered: bool, asynced: bool) -> Vec<Column> {
     if asynced {
         cols.extend([Column::SyncModeKind, Column::EffectiveWps]);
     }
+    if reliable {
+        cols.extend([Column::CkptKind, Column::GoodputWps]);
+    }
     cols
 }
 
@@ -302,8 +320,8 @@ mod tests {
 
     #[test]
     fn grid_columns_append_percentiles_only_when_armed() {
-        let off = grid_columns(false, false);
-        let on = grid_columns(true, false);
+        let off = grid_columns(false, false, false);
+        let on = grid_columns(true, false, false);
         assert_eq!(&on[..off.len()], &off[..],
                    "armed grids must extend, never reorder, the layout");
         assert_eq!(&on[off.len()..],
@@ -315,18 +333,35 @@ mod tests {
 
     #[test]
     fn grid_columns_append_sync_columns_only_when_asynced() {
-        let off = grid_columns(false, false);
-        let sync_only = grid_columns(true, true);
+        let off = grid_columns(false, false, false);
+        let sync_only = grid_columns(true, true, false);
         assert_eq!(&sync_only[..off.len()], &off[..],
                    "async grids must extend, never reorder, the layout");
         assert_eq!(&sync_only[sync_only.len() - 2..],
                    &[Column::SyncModeKind, Column::EffectiveWps]);
-        let async_unjittered = grid_columns(false, true);
+        let async_unjittered = grid_columns(false, true, false);
         assert_eq!(&async_unjittered[..off.len()], &off[..]);
         assert_eq!(&async_unjittered[off.len()..],
                    &[Column::SyncModeKind, Column::EffectiveWps]);
         assert_eq!(Column::SyncModeKind.header(), "sync");
         assert_eq!(Column::EffectiveWps.header(), "effective_wps");
+    }
+
+    #[test]
+    fn grid_columns_append_reliability_columns_last() {
+        // The reliability pair rides after every other optional group,
+        // whatever combination is armed — extending, never reordering.
+        for (jittered, asynced) in
+            [(false, false), (true, false), (false, true), (true, true)]
+        {
+            let base = grid_columns(jittered, asynced, false);
+            let on = grid_columns(jittered, asynced, true);
+            assert_eq!(&on[..base.len()], &base[..]);
+            assert_eq!(&on[base.len()..],
+                       &[Column::CkptKind, Column::GoodputWps]);
+        }
+        assert_eq!(Column::CkptKind.header(), "ckpt");
+        assert_eq!(Column::GoodputWps.header(), "goodput_wps");
     }
 
     #[test]

@@ -22,6 +22,7 @@ fn h100_variant(name: &str, ib_bw: f64) -> HwSpec {
         },
         freq_curve: None,
         fabric: dtsim::hardware::FabricSpec::DEDICATED,
+        reliability: dtsim::hardware::ReliabilitySpec::DEFAULT,
         derived: false,
     }
 }
@@ -87,6 +88,12 @@ fn hwspec_roundtrips_through_toml_bitwise() {
         },
         freq_curve: Some(vec![(1.0 / 3.0, 0.4 + 1e-13), (1.0, 1.0)]),
         fabric: dtsim::hardware::FabricSpec::DEDICATED,
+        reliability: dtsim::hardware::ReliabilitySpec {
+            mtbf_hours: 40_000.0 + 1.0 / 3.0,
+            restart_s: 299.0 + 1.0 / 7.0,
+            rendezvous_s: 61.25,
+            ckpt_bw: 2.5e9 + 0.125,
+        },
         derived: false,
     };
     let text = spec.to_toml();
@@ -107,6 +114,10 @@ fn hwspec_roundtrips_through_toml_bitwise() {
         (back.gpu.p_comp, spec.gpu.p_comp),
         (back.gpu.p_comm, spec.gpu.p_comm),
         (back.gpu.tdp, spec.gpu.tdp),
+        (back.reliability.mtbf_hours, spec.reliability.mtbf_hours),
+        (back.reliability.restart_s, spec.reliability.restart_s),
+        (back.reliability.rendezvous_s, spec.reliability.rendezvous_s),
+        (back.reliability.ckpt_bw, spec.reliability.ckpt_bw),
     ] {
         assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
     }

@@ -248,9 +248,18 @@ fn interrupted_grid_resumes_from_the_store() {
     dtsim::fault::arm("serve.case.drop:after=2").expect("arm");
     let mut c = Client::connect(&addr.to_string()).expect("connect");
     let _ = c.request_raw(GRID).expect_err("stream was cut mid-grid");
-    dtsim::fault::clear();
 
+    // The `after=N` point is spent: the retried grid completes while
+    // the fired counter is still live, so `stats` and the `done` event
+    // must both carry the `faults` object naming it.
     let mut c = Client::connect(&addr.to_string()).expect("reconnect");
+    let stats = c.request_raw(r#"{"cmd":"stats"}"#).expect("stats");
+    let fired = field_of(&stats[0], "faults");
+    assert_eq!(
+        fired.get("serve.case.drop").and_then(|v| v.as_f64()),
+        Some(1.0),
+        "stats must report the fired chaos point: {}", stats[0]);
+
     let after = c.request_raw(GRID).expect("retried grid");
     let evaluated = done_field(&after, "evaluated");
     assert!(evaluated < cold_evaluated,
@@ -259,6 +268,19 @@ fn interrupted_grid_resumes_from_the_store() {
     assert!(done_field(&after, "store_hits") > 0.0);
     assert_eq!(table_lines(&after), table_lines(&clean),
                "resumed grid must match the fault-free run");
+    let fired = field_of(after.last().unwrap(), "faults");
+    assert_eq!(
+        fired.get("serve.case.drop").and_then(|v| v.as_f64()),
+        Some(1.0),
+        "done must report the fired chaos point");
+    dtsim::fault::clear();
+
+    // With counters cleared, the object disappears — absence is the
+    // fault-free signal (clients must not key on its presence).
+    let calm = c.request_raw(GRID).expect("calm grid");
+    let last = Json::parse(calm.last().unwrap()).unwrap();
+    assert!(last.get("faults").is_none(),
+            "fault-free done events must omit the faults object");
     let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
     handle.join().expect("server exits");
 }
@@ -472,4 +494,94 @@ fn run_with_moe_sanity(r: (Vec<CaseResult>, usize))
     assert!(cases.iter().any(|c| !c.sync.is_sync()),
             "no async case in the chaos grid");
     (cases, evaluated)
+}
+
+/// `store.compact.stall` + SIGKILL: a real `dtsim store compact`
+/// process is killed -9 in the window between the fully written
+/// `.compact.tmp` and the atomic rename. The original store must be
+/// byte-untouched, reopen must recover every record (zero
+/// re-simulation), the killed process's stale lock must be reclaimed,
+/// and a clean compact must consume the orphan temp file.
+#[test]
+fn kill9_during_compact_leaves_the_store_bitwise_intact() {
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    let _x = dtsim::fault::exclusive();
+    dtsim::fault::clear();
+
+    // Populate a store with a full grid's worth of committed records.
+    let path = tmp("compact-kill9.dtstore");
+    let (cold_cases, cold_evaluated) = {
+        let (s, _) = LogStore::open(&path).expect("open");
+        let store: Arc<dyn ResultStore> = Arc::new(s);
+        let (cases, evaluated) = run_with(&store);
+        assert!(evaluated > 3, "grid too small to mean anything");
+        (cases, evaluated)
+    };
+    let before = std::fs::read(&path).expect("read populated store");
+
+    // The compact binary, stalling between temp write and rename —
+    // the fault point arms through DTSIM_FAULTS exactly as a chaos
+    // harness would arm a production process.
+    let mut child = Command::new(env!("CARGO_BIN_EXE_dtsim"))
+        .args(["store", "compact", path.to_str().unwrap()])
+        .env("DTSIM_FAULTS", "store.compact.stall:after=0")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn dtsim store compact");
+
+    // The temp file appearing means the stall window is open: the
+    // compacted bytes are fully written, the rename has not happened.
+    let mut tmp_os = path.as_os_str().to_os_string();
+    tmp_os.push(".compact.tmp");
+    let orphan = PathBuf::from(tmp_os);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !orphan.exists() {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            panic!("compact exited before the stall window: {status}");
+        }
+        assert!(Instant::now() < deadline,
+                "compact never reached the stall window");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    child.kill().expect("SIGKILL the stalled compact");
+    let status = child.wait().expect("reap");
+    assert!(!status.success(), "the kill must be what ended it");
+
+    // The rename never ran: the store is byte-identical, the orphan
+    // temp survives the crash.
+    assert_eq!(std::fs::read(&path).expect("reread store"), before,
+               "a killed compact modified the original store");
+    assert!(orphan.exists(), "stall window never left a temp file");
+
+    // Reopen recovers everything — the orphan is invisible to open()
+    // — and serves the whole grid with zero re-simulation, bitwise.
+    let (s, report) = LogStore::open(&path).expect("reopen");
+    assert_eq!(report.recovered, cold_evaluated, "{report:?}");
+    assert_eq!(report.truncated_bytes, 0, "{report:?}");
+    let store: Arc<dyn ResultStore> = Arc::new(s);
+    let (warm_cases, warm_evaluated) = run_with(&store);
+    assert_eq!(warm_evaluated, 0,
+               "reopen after killed compact lost committed records");
+    assert_bitwise(&cold_cases, &warm_cases);
+    drop(store);
+
+    // The killed process died holding `PATH.lock`; a fresh acquire
+    // must detect the dead holder and reclaim it.
+    let lock = dtsim::store::StoreLock::acquire(&path)
+        .expect("stale lock of the killed compact must be reclaimed");
+    // A clean compact consumes the orphan temp (truncate + rename) and
+    // the compacted store still answers the full grid bitwise.
+    let rep = dtsim::store::compact(&path).expect("clean compact");
+    assert_eq!(rep.live, cold_evaluated, "{rep:?}");
+    assert!(!orphan.exists(), "compact must consume the orphan temp");
+    drop(lock);
+    let (s, report) = LogStore::open(&path).expect("open compacted");
+    assert_eq!(report.recovered, cold_evaluated);
+    let store: Arc<dyn ResultStore> = Arc::new(s);
+    let (final_cases, final_evaluated) = run_with(&store);
+    assert_eq!(final_evaluated, 0);
+    assert_bitwise(&cold_cases, &final_cases);
 }

@@ -15,8 +15,8 @@ use dtsim::hardware::Generation;
 use dtsim::model::{LLAMA_7B, LLAMA_7B_MOE8X};
 use dtsim::parallelism::ParallelPlan;
 use dtsim::sim::{
-    simulate_engine, simulate_in, Jitter, JitterDist, Schedule,
-    Sharding, SimArena, SimConfig, SyncMode, Tag,
+    simulate_engine, simulate_in, Jitter, JitterDist, Reliability,
+    Schedule, Sharding, SimArena, SimConfig, SyncMode, Tag,
 };
 use dtsim::util::proptest::check;
 use dtsim::util::rng::Rng;
@@ -164,6 +164,7 @@ fn prop_fused_fast_path_matches_event_engine() {
             prefetch: rng.next_below(2) == 0,
             jitter,
             sync,
+            relia: Reliability::OFF,
         };
         if cfg.validate().is_err() {
             return None;
@@ -241,6 +242,7 @@ fn prop_fused_fast_path_matches_engine_on_custom_catalog_specs() {
             },
             freq_curve: None,
             fabric: dtsim::hardware::FabricSpec::DEDICATED,
+            reliability: dtsim::hardware::ReliabilitySpec::DEFAULT,
             derived: false,
         };
         let hw = Catalog::register(spec).expect("sampled spec valid");
@@ -280,6 +282,7 @@ fn prop_fused_fast_path_matches_engine_on_custom_catalog_specs() {
             prefetch: rng.next_below(2) == 0,
             jitter: Jitter::OFF,
             sync: SyncMode::Sync,
+            relia: Reliability::OFF,
         };
         if cfg.validate().is_err() {
             return None;

@@ -1,0 +1,166 @@
+//! End-to-end contract of the failure-aware goodput layer
+//! (docs/reliability.md): arming the reliability axis never moves a
+//! simulated metric (render-time discount only), the `goodput_cliff`
+//! scenario's per-GPU goodput strictly declines with scale, the
+//! `ckpt_interval` sweep is weakly dominated by the Young–Daly `auto`
+//! cadence (whose interval matches the closed form bit for bit), and
+//! both scenarios render byte-identically across runner thread counts
+//! and the forced event-graph engine — the CI determinism contract.
+
+use dtsim::hardware::Generation;
+use dtsim::model::LLAMA_7B;
+use dtsim::reliability;
+use dtsim::report;
+use dtsim::sim::{CkptInterval, Reliability};
+use dtsim::study::{PlanAxis, Study, StudyRunner};
+
+/// The weak-scaling ladder of the `goodput_cliff` scenario, with the
+/// checkpoint axis chosen per test.
+fn ladder(name: &'static str, ckpt: Option<CkptInterval>) -> Study {
+    let mut b = Study::builder(name)
+        .arch(LLAMA_7B)
+        .generation(Generation::H100)
+        .nodes([1, 4, 16, 64, 256])
+        .plans(PlanAxis::DataParallel)
+        .batch_per_replica(2)
+        .micro_batches([2])
+        .seq_len(4096);
+    if let Some(ckpt) = ckpt {
+        b = b.checkpoint(ckpt);
+    }
+    b.build()
+}
+
+#[test]
+fn goodput_per_gpu_strictly_declines_with_scale() {
+    let mut runner = StudyRunner::new(4);
+    let res = runner.run(&ladder("relia-cliff", Some(CkptInterval::Auto)));
+    let mut cases: Vec<_> = res.cases.iter().collect();
+    cases.sort_by_key(|c| c.metrics.world);
+    assert_eq!(cases.len(), 5, "one case per ladder rung");
+
+    let mut prev_avail = f64::INFINITY;
+    let mut prev_goodput = f64::INFINITY;
+    for c in cases {
+        let spec = &c.hw.spec().reliability;
+        let avail = reliability::goodput_factor(
+            &c.relia, spec, c.metrics.world, c.plan.dp, c.ckpt_bytes);
+        assert!(avail > 0.0 && avail < 1.0,
+                "world {}: availability {avail} outside (0, 1)",
+                c.metrics.world);
+        assert!(avail < prev_avail,
+                "world {}: availability {avail} !< {prev_avail}",
+                c.metrics.world);
+        let goodput_per_gpu = c.goodput_wps() / c.metrics.world as f64;
+        assert!(goodput_per_gpu < prev_goodput,
+                "world {}: goodput/GPU {goodput_per_gpu} !< \
+                 {prev_goodput} — the cliff is not strictly declining",
+                c.metrics.world);
+        // The discount is real: goodput sits strictly below raw
+        // throughput on every armed case.
+        assert!(c.goodput_wps() < c.metrics.global_wps);
+        prev_avail = avail;
+        prev_goodput = goodput_per_gpu;
+    }
+}
+
+#[test]
+fn arming_the_axis_never_moves_a_simulated_metric() {
+    // The exactness discipline: the armed ladder keys distinctly (no
+    // cache conflation) but every simulated metric is bitwise equal to
+    // the unarmed twin's, and the unarmed goodput equals raw bit for
+    // bit.
+    let mut runner = StudyRunner::new(4);
+    let off = runner.run(&ladder("relia-off", None));
+    let on = runner.run(&ladder("relia-on", Some(CkptInterval::Auto)));
+    assert_eq!(off.cases.len(), on.cases.len());
+    for (a, b) in off.cases.iter().zip(on.cases.iter()) {
+        assert_eq!(a.metrics.world, b.metrics.world);
+        assert_eq!(a.metrics.global_wps.to_bits(),
+                   b.metrics.global_wps.to_bits(),
+                   "world {}: arming --ckpt changed the simulation",
+                   a.metrics.world);
+        assert_eq!(a.metrics.iter_time.to_bits(),
+                   b.metrics.iter_time.to_bits());
+        assert!(a.relia.is_off());
+        assert_eq!(a.goodput_wps().to_bits(),
+                   a.metrics.global_wps.to_bits(),
+                   "unarmed goodput must equal raw throughput bitwise");
+        assert!(b.goodput_wps() < b.metrics.global_wps);
+    }
+}
+
+#[test]
+fn auto_cadence_weakly_dominates_every_fixed_interval() {
+    // The `ckpt_interval` scenario's claim, checked on the raw cases:
+    // `auto` is the exact Young–Daly minimizer of the modeled waste,
+    // so no swept fixed interval can beat it — and its resolved
+    // interval matches the closed form bit for bit.
+    let mut runner = StudyRunner::new(2);
+    let at = |ckpt: CkptInterval, runner: &mut StudyRunner| {
+        let study = Study::builder("relia-sweep")
+            .arch(LLAMA_7B)
+            .generation(Generation::H100)
+            .nodes([64])
+            .plans(PlanAxis::DataParallel)
+            .batch_per_replica(2)
+            .micro_batches([2])
+            .seq_len(4096)
+            .checkpoint(ckpt)
+            .build();
+        let res = runner.run(&study);
+        assert_eq!(res.cases.len(), 1);
+        let c = &res.cases[0];
+        let spec = &c.hw.spec().reliability;
+        let interval = reliability::resolved_interval_s(
+            &c.relia, spec, c.metrics.world, c.plan.dp, c.ckpt_bytes)
+            .expect("axis armed");
+        (interval, c.goodput_wps(), c.clone())
+    };
+
+    let (auto_i, auto_goodput, c) = at(CkptInterval::Auto, &mut runner);
+    let spec = c.hw.spec().reliability;
+    let mtbf_s =
+        reliability::cluster_mtbf_s(spec.mtbf_hours, c.metrics.world);
+    let closed_form = reliability::young_daly_interval(
+        mtbf_s, c.ckpt_bytes / spec.ckpt_bw, 1.0);
+    assert_eq!(auto_i.to_bits(), closed_form.to_bits(),
+               "auto interval {auto_i} is not the closed form \
+                {closed_form} bit for bit");
+
+    for seconds in [300.0, 900.0, 1800.0, 3600.0, 7200.0, 14400.0] {
+        let (_, goodput, _) =
+            at(CkptInterval::Every { seconds }, &mut runner);
+        assert!(auto_goodput >= goodput,
+                "every:{seconds} goodput {goodput} beats auto \
+                 {auto_goodput}");
+    }
+}
+
+#[test]
+fn reliability_scenarios_replay_across_threads_and_engines() {
+    // What CI's determinism matrix pins per figure: same bytes at two
+    // thread counts and under DTSIM_FORCE_ENGINE=1 (the setter is the
+    // same switch without the env-var race).
+    let reg = report::registry();
+    for name in ["goodput_cliff", "ckpt_interval"] {
+        let sc = reg.get(name).expect("registered");
+        let csv = |runner: &mut StudyRunner| -> Vec<String> {
+            sc.tables(runner)
+                .expect("scenario runs")
+                .iter()
+                .map(|t| t.csv_string())
+                .collect()
+        };
+        let a = csv(&mut StudyRunner::new(2));
+        assert_eq!(a, csv(&mut StudyRunner::new(8)),
+                   "{name} diverged across thread counts");
+        let mut engine = StudyRunner::new(4);
+        engine.force_event_engine(true);
+        assert_eq!(a, csv(&mut engine),
+                   "{name} diverged under the forced event engine");
+        // Every table carries the armed columns.
+        let joined = a.join("\n");
+        assert!(joined.contains("goodput_wps"), "{name}: {joined}");
+    }
+}

@@ -232,3 +232,69 @@ fn plan_requests_ride_the_shared_store() {
     let _ = c.request_raw(r#"{"cmd":"shutdown"}"#);
     handle.join().expect("server exits cleanly");
 }
+
+/// The retry backoff is a pure seeded schedule: same seed replays bit
+/// for bit, a reseed moves the jitter, the exponential base caps at
+/// [`BACKOFF_CAP_MS`], and zero retries means an empty timeline.
+#[test]
+fn backoff_schedule_replays_caps_and_reseeds() {
+    use dtsim::serve::client::{backoff_schedule, BACKOFF_CAP_MS};
+
+    let a = backoff_schedule(12, 100, 7);
+    assert_eq!(a, backoff_schedule(12, 100, 7),
+               "same seed must replay the exact timeline");
+    assert_eq!(a.len(), 12, "one wait per retry");
+    for (i, &wait) in a.iter().enumerate() {
+        // Exponential base, jitter strictly below one base unit, all
+        // capped: wait_i ∈ [base_i, base_i + backoff_ms) ∧ ≤ cap.
+        let base = 100u64 << i.min(16);
+        assert!(wait >= base.min(BACKOFF_CAP_MS),
+                "retry {i}: {wait} below base {base}");
+        assert!(wait <= (base + 99).min(BACKOFF_CAP_MS),
+                "retry {i}: {wait} above base {base} + jitter");
+    }
+    // The deep tail saturates at the cap exactly (100·2^9 > cap).
+    assert_eq!(a[11], BACKOFF_CAP_MS);
+    assert_ne!(backoff_schedule(12, 100, 8), a,
+               "a different seed must move the jitter");
+    assert!(backoff_schedule(0, 100, 7).is_empty());
+}
+
+/// Exhausting `dtsim client` retries against a dead address: the
+/// process fails with an error that enumerates every retry knob, and
+/// `--retry-seed` makes the whole stderr timeline (the per-retry
+/// `in Nms` lines included) replay byte-identically.
+#[test]
+fn client_retry_exhaustion_names_the_flags_and_replays_seeded() {
+    use std::process::Command;
+
+    // A bound-but-never-accepting listener: connects either refuse or
+    // hang up, never a live dtsim server.
+    let blackhole =
+        std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = blackhole.local_addr().expect("addr").to_string();
+    drop(blackhole); // the port is now closed: connection refused
+
+    let run = |seed: &str| {
+        let out = Command::new(env!("CARGO_BIN_EXE_dtsim"))
+            .args(["client", "ping", "--addr", &addr,
+                   "--retries", "2", "--backoff-ms", "5",
+                   "--retry-seed", seed])
+            .output()
+            .expect("run dtsim client");
+        assert!(!out.status.success(),
+                "a dead address must fail the client");
+        String::from_utf8(out.stderr).expect("utf8 stderr")
+    };
+
+    let a = run("7");
+    assert_eq!(a, run("7"),
+               "--retry-seed 7 must replay the exact retry timeline");
+    for flag in ["--retries", "--backoff-ms", "--retry-seed"] {
+        assert!(a.contains(flag),
+                "exhaustion error must name {flag}: {a}");
+    }
+    assert!(a.contains("gave up after 3 attempts"), "{a}");
+    assert!(a.contains("retry 1/2 in ") && a.contains("retry 2/2 in "),
+            "each wait must be announced: {a}");
+}

@@ -35,7 +35,7 @@ fn seeded_study(seed: u64) -> Study {
 /// Render the full seeded grid as CSV bytes through a given runner.
 fn grid_csv(runner: &mut StudyRunner, seed: u64) -> String {
     let res = runner.run(&seeded_study(seed));
-    res.table(&grid_columns(true, false)).csv_string()
+    res.table(&grid_columns(true, false, false)).csv_string()
 }
 
 #[test]
@@ -184,7 +184,10 @@ fn unarmed_grids_keep_the_historical_schema() {
         .build();
     assert!(study.jitter().is_off(), "builder default must be unarmed");
     assert!(!study.has_async(), "builder default must be synchronous");
-    let cols = grid_columns(!study.jitter().is_off(), study.has_async());
+    assert!(!study.has_reliability(),
+            "builder default must be failure-free");
+    let cols = grid_columns(!study.jitter().is_off(), study.has_async(),
+                            study.has_reliability());
     assert_eq!(cols.len(), 15, "unarmed layout grew a column");
     let render = |runner: &mut StudyRunner| {
         runner.run(&study).table(&cols).csv_string()

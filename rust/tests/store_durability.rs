@@ -175,9 +175,9 @@ fn schema_hash_mismatch_refuses_the_file() {
 #[test]
 fn v2_store_is_refused_with_migration_hint_and_left_untouched() {
     // A store written by a pre-MoE build (dtsim-store-v2 layout: no
-    // expert/sync axes in the key) must be refused with a migration
-    // hint naming both versions — not decoded as garbage, not
-    // truncated, not "recovered".
+    // expert/sync/reliability axes in the key) must be refused with a
+    // hint naming both generations and the `store migrate` upgrade
+    // path — not decoded as garbage, not truncated, not "recovered".
     let path = tmp("v2-refusal.dtstore");
     let mut header = Vec::new();
     header.extend_from_slice(b"DTSS");
@@ -191,11 +191,88 @@ fn v2_store_is_refused_with_migration_hint_and_left_untouched() {
 
     let err = LogStore::open(&path).expect_err("v2 must refuse");
     assert!(err.contains("dtsim-store-v2"), "{err}");
-    assert!(err.contains("dtsim-store-v3"), "{err}");
-    assert!(err.contains("fresh"), "should point at the fix: {err}");
+    assert!(err.contains("dtsim-store-v4"), "{err}");
+    assert!(err.contains("store migrate"),
+            "should point at the upgrade path: {err}");
     // Refusal is read-only: every byte is still in place.
     assert_eq!(std::fs::read(&path).unwrap(), header,
                "refusing a v2 store must not modify it");
+}
+
+/// The migration satellite, end to end on real records: a
+/// `dtsim-store-v3` file (built by byte surgery from a store this
+/// build wrote, stripping the 18-byte reliability section each record
+/// carries just before its 144-byte result tail) is refused by open,
+/// upgraded by [`dtsim::store::migrate`] without touching the input,
+/// and — because these records ran failure-free and the failure-off
+/// default is canonical in the v4 key — the migrated file is
+/// byte-identical to the store this build would have written itself.
+#[test]
+fn v3_store_migrates_to_v4_with_bitwise_results() {
+    let path = tmp("v3-migrate.dtstore");
+    let (store, _) = open(&path);
+    let (cold_cases, cold_evaluated) = run_with(&store);
+    assert!(cold_evaluated > 3, "sweep too small to mean anything");
+    drop(store);
+    let v4_bytes = std::fs::read(&path).expect("read v4 store");
+
+    // Downgrade to the v3 layout: v3 schema hash in the header; per
+    // record, drop payload bytes [len-162, len-144) and recompute the
+    // length prefix and FNV checksum.
+    let mut v3 = Vec::with_capacity(v4_bytes.len());
+    v3.extend_from_slice(&v4_bytes[..8]);
+    v3.extend_from_slice(
+        &dtsim::store::codec::v3_schema_hash().to_le_bytes());
+    for (start, total) in record_spans(&v4_bytes) {
+        let payload = &v4_bytes[start + 12..start + total];
+        assert!(payload.len() > 162, "record too short for surgery");
+        let mut stripped = payload[..payload.len() - 162].to_vec();
+        stripped.extend_from_slice(&payload[payload.len() - 144..]);
+        v3.extend_from_slice(&(stripped.len() as u32).to_le_bytes());
+        v3.extend_from_slice(
+            &dtsim::store::codec::fnv1a64(&stripped).to_le_bytes());
+        v3.extend_from_slice(&stripped);
+    }
+    let old = tmp("v3-migrate-old.dtstore");
+    std::fs::write(&old, &v3).expect("write v3 fixture");
+
+    // This build refuses the old generation and points at migrate.
+    let err = LogStore::open(&old).expect_err("v3 must refuse");
+    assert!(err.contains("dtsim-store-v3"), "{err}");
+    assert!(err.contains("store migrate"), "{err}");
+    assert_eq!(std::fs::read(&old).unwrap(), v3, "refusal is read-only");
+
+    let new = tmp("v3-migrate-new.dtstore");
+    let report = dtsim::store::migrate(&old, &new).expect("migrate");
+    assert_eq!(report.from, dtsim::store::codec::SchemaVersion::V3);
+    assert_eq!(report.migrated, cold_evaluated, "{report:?}");
+    assert_eq!(report.dropped_stale, 0, "{report:?}");
+    assert_eq!(report.truncated_bytes, 0, "{report:?}");
+    assert_eq!(std::fs::read(&old).unwrap(), v3,
+               "migrate must never modify the input file");
+    assert_eq!(std::fs::read(&new).unwrap(), v4_bytes,
+               "failure-free v3 records must re-encode to the exact \
+                bytes this build writes");
+
+    // Guard rails: migrate never overwrites, and a current-generation
+    // file has nothing to migrate.
+    let err = dtsim::store::migrate(&old, &new)
+        .expect_err("existing output must refuse");
+    assert!(err.contains("never overwrites"), "{err}");
+    let scratch = tmp("v3-migrate-scratch.dtstore");
+    let err = dtsim::store::migrate(&new, &scratch)
+        .expect_err("current-generation input must refuse");
+    assert!(err.contains("nothing to migrate"), "{err}");
+
+    // The migrated store answers the whole grid with zero
+    // re-simulation, every answer bitwise.
+    let (store, recovery) = open(&new);
+    assert_eq!(recovery.recovered, cold_evaluated);
+    assert_eq!(recovery.truncated_bytes, 0);
+    let (warm_cases, warm_evaluated) = run_with(&store);
+    assert_eq!(warm_evaluated, 0,
+               "a migrated store must answer the whole grid");
+    assert_bitwise(&cold_cases, &warm_cases);
 }
 
 #[test]

@@ -179,6 +179,7 @@ fn madmax_covers_every_divisible_catalog_entry() {
         },
         freq_curve: None,
         fabric: dtsim::hardware::FabricSpec::DEDICATED,
+        reliability: dtsim::hardware::ReliabilitySpec::DEFAULT,
         derived: false,
     })
     .unwrap();
